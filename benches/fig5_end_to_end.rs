@@ -1,0 +1,52 @@
+//! Figure 5 regeneration: end-to-end throughput of every strategy on all
+//! zoo settings, 8 devices, at 8 GiB and 16 GiB limits, plus the paper's
+//! headline speedup statistics and shape assertions.
+//!
+//! Run: `cargo bench --bench fig5_end_to_end`
+
+use osdp::bench::Bencher;
+use osdp::figures::{self, Quality};
+use osdp::metrics::{speedup, speedup_vs_best};
+
+fn main() {
+    let mut bencher = Bencher::new(0, 1, 1);
+    for mem in [8.0, 16.0] {
+        let fig = {
+            let mut out = None;
+            bencher.bench(&format!("fig5/{mem:.0}G"), || {
+                out = Some(figures::fig5(mem, Quality::Full));
+            });
+            out.unwrap()
+        };
+        print!("{}", fig.render());
+
+        let pct = |x: f64| (x - 1.0) * 100.0;
+        if let Some(s) = speedup(&fig, "OSDP", "FSDP") {
+            println!("OSDP vs FSDP          max {:>5.0}%  avg {:>5.0}%  \
+                      (paper N&D: max 23%, avg 22%)", pct(s.max), pct(s.avg));
+            assert!(s.avg >= 1.0, "OSDP must dominate FSDP on average");
+        }
+        if let Some(s) =
+            speedup_vs_best(&fig, "OSDP", &["OSDP-base", "3D", "3D+OSDP"])
+        {
+            println!("OSDP vs best baseline max {:>5.0}%  avg {:>5.0}%  \
+                      (paper: up to 174%/92%/168% per family)",
+                     pct(s.max), pct(s.avg));
+        }
+        if let Some(s) = speedup(&fig, "3D+OSDP", "3D") {
+            println!("3D+OSDP vs 3D         max {:>5.0}%  avg {:>5.0}%  \
+                      (paper: max 73%, avg 31%)", pct(s.max), pct(s.avg));
+            assert!(s.avg >= 0.99, "3D+OSDP must not lose to 3D on average");
+        }
+        if let Some(s) = speedup_vs_best(&fig, "3D+OSDP", &[]) {
+            println!("3D+OSDP vs all        max {:>5.0}%  avg {:>5.0}%  \
+                      (paper: max 184%, avg 38%, headline 2.84x)\n",
+                     pct(s.max), pct(s.avg));
+        }
+        std::fs::create_dir_all("bench_results").ok();
+        std::fs::write(format!("bench_results/fig5_{mem:.0}g.csv"),
+                       fig.to_csv()).ok();
+    }
+    print!("{}", bencher.report());
+    println!("wrote bench_results/fig5_*.csv");
+}

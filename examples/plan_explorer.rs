@@ -1,0 +1,85 @@
+//! Plan explorer: how the optimal execution plan morphs as the memory
+//! limit tightens — from all-DP (fastest) through mixed plans to all-ZDP
+//! with splitting, and finally OOM. Makes the paper's core trade-off
+//! visible in one sweep, and cross-checks the exact DFS against the greedy
+//! heuristic at every point.
+//!
+//! Run: `cargo run --release --example plan_explorer`
+
+use osdp::config::{Cluster, GIB, SearchConfig};
+use osdp::cost::Profiler;
+use osdp::model::{GptDims, build_gpt};
+use osdp::planner::{dfs_search, greedy_search};
+use osdp::util::table::Table;
+
+fn main() {
+    let model = build_gpt(&GptDims::uniform(
+        "sweep-gpt", 32000, 512, 16, 1024, 16,
+    ));
+    let cluster = Cluster::rtx_titan(8, 8.0);
+    let search = SearchConfig {
+        max_batch: 8,
+        granularities: vec![0, 4, 8],
+        checkpointing: false,
+        paper_granularity: true,
+    };
+    let profiler = Profiler::new(&model, &cluster, &search);
+    let b = 4;
+
+    // bracket the sweep between the all-ZDP floor and the all-DP ceiling
+    let dp_mem =
+        profiler.evaluate(&profiler.index_of(|d| d.is_pure_dp()), b).peak_mem;
+    let zdp_mem = profiler
+        .evaluate(
+            &profiler.index_of(|d| d.is_pure_zdp() && d.granularity == 0),
+            b,
+        )
+        .peak_mem;
+    println!(
+        "model {:.0}M params | all-DP needs {:.2} GiB, all-ZDP {:.2} GiB (b={b})",
+        model.param_count() / 1e6,
+        dp_mem / GIB,
+        zdp_mem / GIB
+    );
+
+    let mut t = Table::new(vec![
+        "limit (GiB)", "feasible", "DP ops", "ZDP ops", "mixed", "split%",
+        "iter (ms)", "vs greedy", "nodes",
+    ]);
+    for i in 0..14 {
+        let frac = 0.55 + 0.05 * i as f64;
+        let limit = zdp_mem * frac + 0.02 * dp_mem * i as f64;
+        let dfs = dfs_search(&profiler, limit, b);
+        let greedy = greedy_search(&profiler, limit, b);
+        match dfs {
+            None => {
+                t.row(vec![format!("{:.2}", limit / GIB), "no".into(),
+                           "-".into(), "-".into(), "-".into(), "-".into(),
+                           "-".into(), "-".into(), "-".into()]);
+            }
+            Some((choice, cost, stats)) => {
+                let plan = osdp::planner::ExecutionPlan::from_choice(
+                    &profiler, choice, b);
+                let (dp, zdp, mixed) = plan.mode_counts();
+                let vs = greedy
+                    .map(|(_, g)| format!("{:+.2}%",
+                                          (g.time / cost.time - 1.0) * 100.0))
+                    .unwrap_or_else(|| "n/a".into());
+                t.row(vec![
+                    format!("{:.2}", limit / GIB),
+                    "yes".into(),
+                    dp.to_string(),
+                    zdp.to_string(),
+                    mixed.to_string(),
+                    format!("{:.0}", plan.split_fraction() * 100.0),
+                    format!("{:.1}", cost.time * 1e3),
+                    vs,
+                    stats.nodes.to_string(),
+                ]);
+            }
+        }
+    }
+    print!("{}", t.render());
+    println!("\n'vs greedy' = how much slower the greedy heuristic's plan \
+              is than the exact search at the same limit.");
+}

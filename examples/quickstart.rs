@@ -1,0 +1,90 @@
+//! Quickstart: the full OSDP flow on one model in ~a second.
+//!
+//! 1. Describe a model (operator graph with memory/size factors).
+//! 2. Describe the cluster (the paper's Figure 2 "Device Information").
+//! 3. Run the search engine + scheduler for the optimal execution plan.
+//! 4. Compare against DP / FSDP, and visualize the plan's timeline.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use osdp::config::{Cluster, SearchConfig};
+use osdp::cost::Profiler;
+use osdp::model::{GptDims, build_gpt};
+use osdp::parallel::{Ddp, Fsdp, Strategy};
+use osdp::planner::Scheduler;
+use osdp::sim;
+
+fn main() {
+    // -- 1. model description: a 24-layer GPT (~340M params)
+    let model = build_gpt(&GptDims::uniform(
+        "demo-gpt", /*vocab*/ 32000, /*seq*/ 512, /*layers*/ 24,
+        /*hidden*/ 1024, /*heads*/ 16,
+    ));
+    println!(
+        "model: {} — {:.0}M params, {} operators",
+        model.name,
+        model.param_count() / 1e6,
+        model.n_ops()
+    );
+
+    // -- 2. device information: 8 GPUs, 8 GiB usable each
+    let cluster = Cluster::rtx_titan(8, 8.0);
+    let search = SearchConfig {
+        max_batch: 32,
+        granularities: vec![0, 4],
+        checkpointing: false,
+        paper_granularity: false, // plan at fine granularity
+    };
+
+    // -- 3. OSDP: profile, search, schedule
+    let profiler = Profiler::new(&model, &cluster, &search);
+    println!(
+        "search space: 10^{:.0} candidate plans",
+        profiler.log10_plan_space()
+    );
+    let result = Scheduler::new(&profiler, cluster.mem_limit, search.max_batch)
+        .run()
+        .expect("the model should fit with sharding");
+    let best = result.best_plan();
+    println!("optimal plan: {}", best.describe(&profiler));
+    println!(
+        "  -> {:.1} samples/s on {} devices (searched {} batch sizes, {} nodes)",
+        result.best_throughput(),
+        cluster.n_devices,
+        result.candidates.len(),
+        result.total_nodes
+    );
+
+    // -- 4. against the fixed-mode baselines
+    for strat in [&Ddp as &dyn Strategy, &Fsdp] {
+        let e = strat.estimate(&model, &cluster, &search);
+        match e.feasible {
+            true => println!(
+                "  {:>5}: {:>7.1} samples/s ({})",
+                e.strategy, e.throughput, e.detail
+            ),
+            false => println!(
+                "  {:>5}: {}",
+                e.strategy,
+                e.reason.unwrap_or_default()
+            ),
+        }
+    }
+
+    // -- timeline of the chosen plan (Figure-1 style, first ops only)
+    let tl = sim::simulate(&model, &best.decisions, &cluster, best.batch,
+                           false, true);
+    println!(
+        "\nsimulated iteration: {:.1} ms (compute utilization {:.0}%)",
+        tl.iter_time * 1e3,
+        tl.compute_utilization() * 100.0
+    );
+    let head: Vec<_> = tl.events.iter().take(12).cloned().collect();
+    let head_tl = sim::Timeline {
+        iter_time: head.iter().map(|e| e.end).fold(0.0, f64::max),
+        comm_busy: 0.0,
+        compute_busy: 0.0,
+        events: head,
+    };
+    print!("{}", sim::render_gantt(&head_tl, 56));
+}

@@ -1,0 +1,188 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO *text* artifacts for rust (L3).
+
+Run once via ``make artifacts``; rust loads the results through
+``HloModuleProto::from_text_file`` and never touches python again.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax >=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+published ``xla`` 0.1.6 crate links) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts per model config ``c`` with packed length ``P`` (padded to ``PAD``):
+
+  {c}_fwd_loss.hlo.txt    (params[P], tokens[b,s+1])       -> (loss,)
+  {c}_grad_step.hlo.txt   (params[P], tokens[b,s+1])       -> (loss, grads[P])
+  {c}_adam_p{n}.hlo.txt   (p,g,m,v [P/n], step[])          -> (p',m',v')
+  {c}_init.hlo.txt        (seed[])                         -> (params[P],)
+
+plus shared calibration / integration artifacts:
+
+  calib_matmul.hlo.txt    (x[512,512], w[512,512])         -> (y,)
+  split_demo_g{g}.hlo.txt (x[256,1024], w[1024,1024])      -> (y,)   g in 1,2,4,8
+
+``manifest.json`` records every artifact's shapes plus the packed-parameter
+layout table so the rust side is fully self-describing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import split_matmul
+
+# Parallelism degrees the rust runtime may use; PAD = lcm so shards are even.
+SHARD_DEGREES = [1, 2, 4, 8]
+PAD = 8
+
+# Per-worker microbatch each config's artifacts are lowered for.
+BATCH_PER_WORKER = {"tiny": 4, "e2e": 4, "gpt100m": 2}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True: rust
+    unwraps with to_tuple{1,N})."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(out_dir: str, name: str, text: str, manifest_files: Dict[str, Any],
+           **meta) -> None:
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    manifest_files[name] = {"bytes": len(text), **meta}
+    print(f"  wrote {name}  ({len(text) / 1e6:.2f} MB)")
+
+
+def lower_config(cfg: M.GPTConfig, out_dir: str,
+                 manifest: Dict[str, Any]) -> None:
+    b = BATCH_PER_WORKER[cfg.name]
+    p_len = M.packed_len(cfg, pad_to=PAD)
+    tok_spec = jax.ShapeDtypeStruct((b, cfg.seq + 1), jnp.int32)
+    par_spec = jax.ShapeDtypeStruct((p_len,), jnp.float32)
+    files = manifest["files"]
+    print(f"config {cfg.name}: P={p_len} ({cfg.param_count()} raw params), "
+          f"batch/worker={b}")
+
+    # -- fwd_loss -----------------------------------------------------------
+    def fwd_loss(params, tokens):
+        return (M.loss_fn(params, tokens, cfg),)
+
+    _write(out_dir, f"{cfg.name}_fwd_loss.hlo.txt",
+           to_hlo_text(jax.jit(fwd_loss).lower(par_spec, tok_spec)),
+           files, config=cfg.name, role="fwd_loss",
+           inputs=[["params", [p_len], "f32"],
+                   ["tokens", [b, cfg.seq + 1], "i32"]],
+           outputs=[["loss", [], "f32"]])
+
+    # -- grad_step ----------------------------------------------------------
+    def gstep(params, tokens):
+        return M.grad_step(params, tokens, cfg)
+
+    _write(out_dir, f"{cfg.name}_grad_step.hlo.txt",
+           to_hlo_text(jax.jit(gstep).lower(par_spec, tok_spec)),
+           files, config=cfg.name, role="grad_step",
+           inputs=[["params", [p_len], "f32"],
+                   ["tokens", [b, cfg.seq + 1], "i32"]],
+           outputs=[["loss", [], "f32"], ["grads", [p_len], "f32"]])
+
+    # -- adam on full vector + every shard size -----------------------------
+    for n in SHARD_DEGREES:
+        size = p_len // n
+        sl = jax.ShapeDtypeStruct((size,), jnp.float32)
+        st = jax.ShapeDtypeStruct((), jnp.int32)
+        lowered = jax.jit(M.adam_update).lower(sl, sl, sl, sl, st)
+        _write(out_dir, f"{cfg.name}_adam_p{n}.hlo.txt",
+               to_hlo_text(lowered), files, config=cfg.name, role="adam",
+               shard_degree=n,
+               inputs=[["p", [size], "f32"], ["g", [size], "f32"],
+                       ["m", [size], "f32"], ["v", [size], "f32"],
+                       ["step", [], "i32"]],
+               outputs=[["p", [size], "f32"], ["m", [size], "f32"],
+                        ["v", [size], "f32"]])
+
+    # -- init: seeded parameter vector so all workers agree without comms ---
+    def init(seed):
+        params = M.init_params(jax.random.PRNGKey(seed), cfg)
+        return (M.pack(params, cfg, pad_to=PAD),)
+
+    _write(out_dir, f"{cfg.name}_init.hlo.txt",
+           to_hlo_text(jax.jit(init).lower(
+               jax.ShapeDtypeStruct((), jnp.int32))),
+           files, config=cfg.name, role="init",
+           inputs=[["seed", [], "i32"]],
+           outputs=[["params", [p_len], "f32"]])
+
+    manifest["configs"][cfg.name] = {
+        "vocab": cfg.vocab, "seq": cfg.seq, "layers": cfg.layers,
+        "hidden": cfg.hidden, "heads": cfg.heads,
+        "slice_granularity": cfg.slice_granularity,
+        "param_count": cfg.param_count(),
+        "packed_len": p_len, "pad": PAD,
+        "batch_per_worker": b,
+        "shard_degrees": SHARD_DEGREES,
+        "adam": {"lr": 3e-4, "b1": 0.9, "b2": 0.999, "eps": 1e-8},
+        "layout": M.layout(cfg),
+    }
+
+
+def lower_shared(out_dir: str, manifest: Dict[str, Any]) -> None:
+    files = manifest["files"]
+
+    # Calibration matmul: rust times this to estimate device FLOP/s (gamma).
+    def calib(x, w):
+        return (jnp.dot(x, w, preferred_element_type=jnp.float32),)
+
+    s = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    _write(out_dir, "calib_matmul.hlo.txt",
+           to_hlo_text(jax.jit(calib).lower(s, s)), files, role="calib",
+           inputs=[["x", [512, 512], "f32"], ["w", [512, 512], "f32"]],
+           outputs=[["y", [512, 512], "f32"]], flops=2 * 512 ** 3)
+
+    # Operator-splitting demo kernels: same matmul at granularities 1..8,
+    # proving the Pallas schedule survives the full AOT->rust path.
+    xs = jax.ShapeDtypeStruct((256, 1024), jnp.float32)
+    ws = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    for g in [1, 2, 4, 8]:
+        fn = functools.partial(lambda x, w, g: (split_matmul(x, w, g),), g=g)
+        _write(out_dir, f"split_demo_g{g}.hlo.txt",
+               to_hlo_text(jax.jit(fn).lower(xs, ws)), files,
+               role="split_demo", granularity=g,
+               inputs=[["x", [256, 1024], "f32"], ["w", [1024, 1024], "f32"]],
+               outputs=[["y", [256, 1024], "f32"]])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--configs", default="tiny,e2e",
+                    help="comma-separated model configs to lower "
+                         f"(available: {','.join(M.CONFIGS)})")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest: Dict[str, Any] = {"version": 1, "configs": {}, "files": {}}
+    lower_shared(args.out, manifest)
+    for name in args.configs.split(","):
+        lower_config(M.CONFIGS[name.strip()], args.out, manifest)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['files'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+# L1: Pallas kernels for OSDP's compute hot-spots.
+#
+# The paper's operator-splitting insight (Figure 4: slice a huge MatMul,
+# process slices sequentially, sum results) is expressed here as K-sliced
+# Pallas matmul kernels: only one slice of the weight lives in on-chip
+# memory (VMEM) at a time while the accumulator stays resident.
+#
+# All kernels run with interpret=True — the CPU PJRT plugin cannot execute
+# Mosaic custom-calls (see DESIGN.md §Hardware-Adaptation).
+from .split_matmul import split_matmul, matmul_tiled
+from .attention import attention
+from .layernorm import layernorm
+
+__all__ = ["split_matmul", "matmul_tiled", "attention", "layernorm"]

@@ -1,0 +1,80 @@
+"""Tiled causal self-attention as a Pallas kernel.
+
+The attention score matrix ``(S, S)`` is the other "gigantic tensor" the
+paper's §3.3 worries about (MatMul outputs): for long sequences it dominates
+activation memory.  The streaming schedule below keeps only one
+``(block_q, S)`` stripe of scores resident — the same peak-memory idea as
+operator splitting, applied to the attention operator.
+
+The kernel computes a full row-block of scores against all keys (one softmax
+per row — numerically exact, no online rescaling needed because S fits the
+lane dim at our scales), applies the causal mask, and multiplies by V.
+Grid walks query blocks; heads/batch are vmapped outside.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, block_q: int,
+                 causal: bool):
+    qi = pl.program_id(0)
+    q = q_ref[...]  # (block_q, d)
+    k = k_ref[...]  # (S, d)
+    v = v_ref[...]  # (S, d)
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        s = k.shape[0]
+        row = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        scores = jnp.where(row >= col, scores, NEG_INF)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    probs = jnp.exp(scores)
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(probs.astype(v.dtype), v,
+                         preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q"))
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, block_q: int = 64) -> jax.Array:
+    """Single-head scaled-dot-product attention, query-block streamed.
+
+    Args:
+      q, k, v: ``(S, d)`` arrays (batch/heads vmapped by the caller).
+      causal: apply the autoregressive mask.
+      block_q: query rows resident per grid step (peak score stripe is
+        ``block_q * S`` instead of ``S * S``).
+    """
+    s, d = q.shape
+    block_q = min(block_q, s)
+    assert s % block_q == 0, f"block_q {block_q} must divide S={s}"
+    scale = 1.0 / (d ** 0.5)
+    kern = functools.partial(_attn_kernel, scale=scale, block_q=block_q,
+                             causal=causal)
+    return pl.pallas_call(
+        kern,
+        grid=(s // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((s, d), lambda i: (0, 0)),
+            pl.BlockSpec((s, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, d), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def attention_mha(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, block_q: int = 64) -> jax.Array:
+    """Multi-head wrapper: ``(H, S, d)`` → ``(H, S, d)`` via vmap."""
+    fn = functools.partial(attention, causal=causal, block_q=block_q)
+    return jax.vmap(fn)(q, k, v)

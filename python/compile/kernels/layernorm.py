@@ -1,0 +1,44 @@
+"""Row-blocked LayerNorm as a Pallas kernel.
+
+LayerNorm is memory-bound; the win is the HBM→VMEM streaming schedule
+(one row-block resident at a time), not FLOPs.  Included because the GPT
+operator graph in rust sizes LN operators separately (they are the cheap
+ops OSDP happily leaves in DP mode).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * g_ref[...] + b_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "eps"))
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array, *,
+              eps: float = 1e-5, block_rows: int = 128) -> jax.Array:
+    """LayerNorm over the last dim of ``(R, H)`` with row-block streaming."""
+    r, h = x.shape
+    block_rows = min(block_rows, r)
+    assert r % block_rows == 0, f"block_rows {block_rows} must divide R={r}"
+    return pl.pallas_call(
+        functools.partial(_ln_kernel, eps=eps),
+        grid=(r // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, h), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, h), x.dtype),
+        interpret=True,
+    )(x, gamma, beta)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness bar).
+
+Every kernel in this package must match its oracle to fp32 tolerance under
+the hypothesis sweeps in python/tests/test_kernels.py before artifacts are
+considered valid.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain ``x @ w`` with fp32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def split_matmul_ref(x: jax.Array, w: jax.Array, granularity: int) -> jax.Array:
+    """Literal Figure-4 semantics: slice, sequential products, sum.
+
+    Kept separate from ``matmul_ref`` so tests can show the paper's
+    slice-and-sum definition is itself equivalent to the plain matmul.
+    """
+    g = max(granularity, 1)
+    k = x.shape[-1]
+    assert k % g == 0
+    ks = k // g
+    out = jnp.zeros((x.shape[0], w.shape[1]), dtype=jnp.float32)
+    for i in range(g):
+        xs = x[:, i * ks:(i + 1) * ks]
+        ws = w[i * ks:(i + 1) * ks, :]
+        out = out + jnp.dot(xs, ws, preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True) -> jax.Array:
+    """Dense single-head SDPA oracle, ``(S, d)`` inputs."""
+    s, d = q.shape
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) / (d ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.dot(probs.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def layernorm_ref(x: jax.Array, gamma: jax.Array, beta: jax.Array, *,
+                  eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * gamma + beta).astype(x.dtype)

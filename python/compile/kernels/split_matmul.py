@@ -1,0 +1,124 @@
+"""Operator-splitting matmul as a Pallas kernel (OSDP Figure 4 on TPU terms).
+
+The paper splits a huge ``x @ w`` by partitioning the last dim of ``x`` and
+the first dim of ``w`` into ``g`` slices, computing slice products
+sequentially, and summing — so the peak memory of the gathered weight drops
+from ``size(w)`` to ``size(w)/g``.
+
+On TPU/Pallas the same schedule is a K-sliced matmul: ``grid=(g,)`` walks the
+contraction dimension, the BlockSpec index map streams one ``(K/g, N)`` slice
+of ``w`` (and one ``(M, K/g)`` slice of ``x``) HBM→VMEM per step, and the
+output ref doubles as the resident accumulator.  Peak on-chip footprint is
+``M*K/g + K/g*N + M*N`` elements instead of ``M*K + K*N + M*N``.
+
+``matmul_tiled`` generalizes to a 3-D grid (M, N, K tiles) — the shape a real
+MXU-targeted kernel would use; the K axis remains the sequential
+accumulation axis (``dimension_semantics`` would mark m,n "parallel" and k
+"arbitrary" on real hardware).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _split_kernel(x_ref, w_ref, o_ref):
+    """One slice step: accumulate x_slice @ w_slice into the output ref."""
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("granularity",))
+def split_matmul(x: jax.Array, w: jax.Array, granularity: int = 4) -> jax.Array:
+    """``x @ w`` with the contraction dim processed in ``granularity`` slices.
+
+    Args:
+      x: ``(M, K)`` activation.
+      w: ``(K, N)`` weight (the operator being split).
+      granularity: number of sequential slices (paper's slice granularity,
+        default 4 as in §4.1). Must divide ``K``.
+
+    Returns:
+      ``(M, N)`` product, numerically equal to ``x @ w`` (fp32 accumulation).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    if granularity <= 1:
+        granularity = 1
+    assert k % granularity == 0, (
+        f"slice granularity {granularity} must divide K={k}"
+    )
+    ks = k // granularity
+    return pl.pallas_call(
+        _split_kernel,
+        grid=(granularity,),
+        in_specs=[
+            pl.BlockSpec((m, ks), lambda i: (0, i)),
+            pl.BlockSpec((ks, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+def _tiled_kernel(x_ref, w_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_tiled(
+    x: jax.Array, w: jax.Array, bm: int = 128, bn: int = 128, bk: int = 128
+) -> jax.Array:
+    """MXU-style 3-D tiled matmul; K axis is the sequential accumulator axis.
+
+    Block sizes are clamped to the problem size; each must divide its dim.
+    VMEM footprint per step is ``(bm*bk + bk*bn + bm*bn) * itemsize`` bytes —
+    the quantity DESIGN.md §Perf budgets against the 16 MiB VMEM bound.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"block ({bm},{bn},{bk}) must divide problem ({m},{n},{k})"
+    )
+    return pl.pallas_call(
+        _tiled_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+def vmem_footprint_bytes(m: int, n: int, k: int, granularity: int,
+                         itemsize: int = 4) -> int:
+    """Analytical peak on-chip footprint of ``split_matmul`` (DESIGN §Perf)."""
+    g = max(granularity, 1)
+    ks = k // g
+    return (m * ks + ks * n + m * n) * itemsize

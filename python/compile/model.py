@@ -1,0 +1,339 @@
+"""L2: GPT forward/backward/optimizer in JAX, built on the L1 Pallas kernels.
+
+This module is the *compile-path* model definition: ``aot.py`` lowers the
+functions here to HLO text once, and the rust coordinator executes them on
+the PJRT CPU client forever after.  Python never runs on the training path.
+
+Design choices that matter to the rust side:
+
+* **Packed parameters.**  All parameters (and Adam moments) travel as a
+  single 1-D fp32 vector, zero-padded to a multiple of the parallelism
+  degree ``N``.  This makes the rust collectives trivial (ring all-gather /
+  reduce-scatter over one contiguous buffer, exactly the paper's Figure 1)
+  and makes ZDP sharding a plain ``P/N`` slice.  ``pack``/``unpack`` and the
+  layout table in the manifest define the mapping.
+
+* **Three artifacts per model config** (see aot.py):
+    - ``fwd_loss``:    (params, tokens)           -> loss
+    - ``grad_step``:   (params, tokens)           -> (loss, grads)
+    - ``adam_full`` / ``adam_shard``: elementwise Adam on the full vector or
+      on one ``P/N`` shard (ZDP workers update only their shard after the
+      reduce-scatter, exactly as in FSDP).
+
+* **Kernels in the hot path.**  QKV/proj/MLP matmuls go through the Pallas
+  ``split_matmul`` kernel (operator splitting, Figure 4); attention through
+  the tiled Pallas SDPA; layernorm through the row-blocked Pallas LN.  Each
+  gets a ``custom_vjp`` whose backward also runs Pallas matmuls, so the
+  lowered HLO keeps the kernel schedules in fwd *and* bwd.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import split_matmul
+from .kernels.attention import attention_mha
+from .kernels.layernorm import layernorm as pallas_layernorm
+
+
+# --------------------------------------------------------------------------
+# Model configuration
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GPTConfig:
+    """Static GPT shape description (mirrors rust/src/model/)."""
+
+    name: str = "tiny"
+    vocab: int = 512
+    seq: int = 64
+    layers: int = 2
+    hidden: int = 64
+    heads: int = 2
+    # Paper §4.1: default slice granularity for operator splitting.
+    slice_granularity: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+    def param_count(self) -> int:
+        h, v, l, s = self.hidden, self.vocab, self.layers, self.seq
+        per_layer = (
+            2 * h + 2 * h          # ln1, ln2 (gamma+beta)
+            + h * 3 * h + 3 * h    # qkv
+            + h * h + h            # proj
+            + h * 4 * h + 4 * h    # mlp up
+            + 4 * h * h + h        # mlp down
+        )
+        return v * h + s * h + l * per_layer + 2 * h  # + final LN (head tied)
+
+
+# Standard configs exposed to the rust side through the manifest.
+CONFIGS: Dict[str, GPTConfig] = {
+    "tiny": GPTConfig(name="tiny", vocab=512, seq=64, layers=2, hidden=64,
+                      heads=2),
+    "e2e": GPTConfig(name="e2e", vocab=8192, seq=128, layers=6, hidden=384,
+                     heads=6),
+    "gpt100m": GPTConfig(name="gpt100m", vocab=32768, seq=256, layers=12,
+                         hidden=768, heads=12),
+}
+
+
+# --------------------------------------------------------------------------
+# Pallas ops with custom VJPs (kernel fwd + kernel bwd)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def kmatmul(x: jax.Array, w: jax.Array, granularity: int) -> jax.Array:
+    """``x @ w`` through the Pallas split-matmul kernel."""
+    return split_matmul(x, w, granularity=granularity)
+
+
+def _kmatmul_fwd(x, w, granularity):
+    return split_matmul(x, w, granularity=granularity), (x, w)
+
+
+def _kmatmul_bwd(granularity, res, g):
+    x, w = res
+    # dx = g @ w.T : contraction over the output dim; dw = x.T @ g.
+    # granularity=1 keeps the Pallas schedule while staying divisibility-safe
+    # for the transposed shapes.
+    dx = split_matmul(g, w.T, granularity=1)
+    dw = split_matmul(x.T, g, granularity=1)
+    return dx, dw
+
+
+kmatmul.defvjp(_kmatmul_fwd, _kmatmul_bwd)
+
+
+@jax.custom_vjp
+def kattention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Causal MHA ``(H,S,d)`` through the tiled Pallas kernel."""
+    return attention_mha(q, k, v, causal=True)
+
+
+def _kattention_fwd(q, k, v):
+    return attention_mha(q, k, v, causal=True), (q, k, v)
+
+
+def _kattention_bwd(res, do):
+    q, k, v = res
+    h, s, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("hqd,hkd->hqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    dv = jnp.einsum("hqk,hqd->hkd", p, do)
+    dp = jnp.einsum("hqd,hkd->hqk", do, v)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = jnp.einsum("hqk,hkd->hqd", ds, k) * scale
+    dk = jnp.einsum("hqk,hqd->hkd", ds, q) * scale
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+kattention.defvjp(_kattention_fwd, _kattention_bwd)
+
+
+@jax.custom_vjp
+def klayernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array) -> jax.Array:
+    """LayerNorm ``(R,H)`` through the row-blocked Pallas kernel."""
+    return pallas_layernorm(x, gamma, beta)
+
+
+def _kln_fwd(x, gamma, beta):
+    return pallas_layernorm(x, gamma, beta), (x, gamma)
+
+
+def _kln_bwd(res, dy):
+    x, gamma = res
+    eps = 1e-5
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    xhat = (xf - mu) * rstd
+    dyf = dy.astype(jnp.float32)
+    dgamma = jnp.sum(dyf * xhat, axis=0)
+    dbeta = jnp.sum(dyf, axis=0)
+    dg = dyf * gamma
+    dx = rstd * (dg - jnp.mean(dg, axis=-1, keepdims=True)
+                 - xhat * jnp.mean(dg * xhat, axis=-1, keepdims=True))
+    return dx.astype(x.dtype), dgamma.astype(x.dtype), dbeta.astype(x.dtype)
+
+
+klayernorm.defvjp(_kln_fwd, _kln_bwd)
+
+
+# --------------------------------------------------------------------------
+# Parameter pytree, packing, layout
+# --------------------------------------------------------------------------
+
+def init_params(rng: jax.Array, cfg: GPTConfig) -> Dict[str, Any]:
+    """GPT-2-style init.  Per-layer tensors are stacked on a leading L axis
+    so the forward can ``lax.scan`` over layers (keeps the HLO compact)."""
+    h, v, l, s = cfg.hidden, cfg.vocab, cfg.layers, cfg.seq
+    ks = jax.random.split(rng, 8)
+    std = 0.02
+    proj_std = std / (2 * l) ** 0.5  # GPT-2 residual-scaled init
+
+    def nrm(key, shape, sd=std):
+        return (jax.random.normal(key, shape, dtype=jnp.float32) * sd)
+
+    return {
+        "wte": nrm(ks[0], (v, h)),
+        "wpe": nrm(ks[1], (s, h)),
+        "ln1_g": jnp.ones((l, h)), "ln1_b": jnp.zeros((l, h)),
+        "qkv_w": nrm(ks[2], (l, h, 3 * h)), "qkv_b": jnp.zeros((l, 3 * h)),
+        "proj_w": nrm(ks[3], (l, h, h), proj_std), "proj_b": jnp.zeros((l, h)),
+        "ln2_g": jnp.ones((l, h)), "ln2_b": jnp.zeros((l, h)),
+        "up_w": nrm(ks[4], (l, h, 4 * h)), "up_b": jnp.zeros((l, 4 * h)),
+        "down_w": nrm(ks[5], (l, 4 * h, h), proj_std),
+        "down_b": jnp.zeros((l, h)),
+        "lnf_g": jnp.ones((h,)), "lnf_b": jnp.zeros((h,)),
+    }
+
+
+# Deterministic leaf order shared with the rust side via the manifest.
+LEAF_ORDER: List[str] = [
+    "wte", "wpe", "ln1_g", "ln1_b", "qkv_w", "qkv_b", "proj_w", "proj_b",
+    "ln2_g", "ln2_b", "up_w", "up_b", "down_w", "down_b", "lnf_g", "lnf_b",
+]
+
+
+def layout(cfg: GPTConfig) -> List[Dict[str, Any]]:
+    """(name, offset, shape) table for the packed vector — goes in the
+    manifest so rust (and humans) can index into the packed buffer."""
+    params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    table, off = [], 0
+    for name in LEAF_ORDER:
+        shape = tuple(int(d) for d in params[name].shape)
+        size = 1
+        for d in shape:
+            size *= d
+        table.append({"name": name, "offset": off, "shape": list(shape),
+                      "size": size})
+        off += size
+    return table
+
+
+def packed_len(cfg: GPTConfig, pad_to: int = 1) -> int:
+    raw = sum(e["size"] for e in layout(cfg))
+    return ((raw + pad_to - 1) // pad_to) * pad_to
+
+
+def pack(params: Dict[str, Any], cfg: GPTConfig, pad_to: int = 1) -> jax.Array:
+    flat = jnp.concatenate([params[n].reshape(-1) for n in LEAF_ORDER])
+    total = packed_len(cfg, pad_to)
+    return jnp.pad(flat, (0, total - flat.shape[0]))
+
+
+def unpack(packed: jax.Array, cfg: GPTConfig) -> Dict[str, Any]:
+    out = {}
+    for e in layout(cfg):
+        out[e["name"]] = jax.lax.dynamic_slice(
+            packed, (e["offset"],), (e["size"],)
+        ).reshape(e["shape"])
+    return out
+
+
+# --------------------------------------------------------------------------
+# Forward + loss
+# --------------------------------------------------------------------------
+
+def _block(cfg: GPTConfig, x: jax.Array, lp: Dict[str, jax.Array]) -> jax.Array:
+    """One transformer block over ``(B*S, H)`` rows (layer params ``lp``)."""
+    g = cfg.slice_granularity if cfg.hidden % cfg.slice_granularity == 0 else 1
+    bs_rows, h = x.shape
+    hd, nh = cfg.head_dim, cfg.heads
+    b = bs_rows // cfg.seq
+
+    a = klayernorm(x, lp["ln1_g"], lp["ln1_b"])
+    qkv = kmatmul(a, lp["qkv_w"], g) + lp["qkv_b"]
+    qkv = qkv.reshape(b, cfg.seq, 3, nh, hd)
+    q = qkv[:, :, 0].transpose(0, 2, 1, 3).reshape(b * nh, cfg.seq, hd)
+    k = qkv[:, :, 1].transpose(0, 2, 1, 3).reshape(b * nh, cfg.seq, hd)
+    v = qkv[:, :, 2].transpose(0, 2, 1, 3).reshape(b * nh, cfg.seq, hd)
+    o = kattention(q, k, v)
+    o = (o.reshape(b, nh, cfg.seq, hd).transpose(0, 2, 1, 3)
+          .reshape(bs_rows, h))
+    x = x + kmatmul(o, lp["proj_w"], g) + lp["proj_b"]
+
+    m = klayernorm(x, lp["ln2_g"], lp["ln2_b"])
+    u = jax.nn.gelu(kmatmul(m, lp["up_w"], g) + lp["up_b"])
+    x = x + kmatmul(u, lp["down_w"], g) + lp["down_b"]
+    return x
+
+
+def forward(params: Dict[str, Any], tokens: jax.Array,
+            cfg: GPTConfig) -> jax.Array:
+    """Logits ``(B, S, V)`` for input tokens ``(B, S)``."""
+    b, s = tokens.shape
+    x = params["wte"][tokens] + params["wpe"][None, :s, :]
+    x = x.reshape(b * s, cfg.hidden)
+
+    def body(x, lp):
+        return _block(cfg, x, lp), None
+
+    layer_params = {k: params[k] for k in (
+        "ln1_g", "ln1_b", "qkv_w", "qkv_b", "proj_w", "proj_b",
+        "ln2_g", "ln2_b", "up_w", "up_b", "down_w", "down_b")}
+    x, _ = jax.lax.scan(body, x, layer_params)
+    x = klayernorm(x, params["lnf_g"], params["lnf_b"])
+    logits = jnp.dot(x, params["wte"].T,
+                     preferred_element_type=jnp.float32)  # tied head
+    return logits.reshape(b, s, cfg.vocab)
+
+
+def loss_fn(packed: jax.Array, tokens: jax.Array, cfg: GPTConfig) -> jax.Array:
+    """Mean next-token cross-entropy.  ``tokens`` is ``(B, S+1)``."""
+    params = unpack(packed, cfg)
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(params, inp, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def grad_step(packed: jax.Array, tokens: jax.Array,
+              cfg: GPTConfig) -> Tuple[jax.Array, jax.Array]:
+    """(loss, packed grads) — the per-worker compute of one iteration."""
+    loss, grads = jax.value_and_grad(loss_fn)(packed, tokens, cfg)
+    return loss, grads
+
+
+# --------------------------------------------------------------------------
+# Adam (elementwise over the packed vector or any shard of it)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+
+
+def adam_update(p: jax.Array, g: jax.Array, m: jax.Array, v: jax.Array,
+                step: jax.Array, opt: AdamConfig = AdamConfig()
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One Adam step on a 1-D slice.  ``step`` is 1-based (int32 scalar).
+
+    Elementwise, so ZDP workers apply it to their ``P/N`` shard only —
+    this is exactly ZeRO's partitioned optimizer update.
+    """
+    t = step.astype(jnp.float32)
+    m2 = opt.b1 * m + (1 - opt.b1) * g
+    v2 = opt.b2 * v + (1 - opt.b2) * jnp.square(g)
+    mhat = m2 / (1 - opt.b1 ** t)
+    vhat = v2 / (1 - opt.b2 ** t)
+    p2 = p - opt.lr * mhat / (jnp.sqrt(vhat) + opt.eps)
+    return p2, m2, v2

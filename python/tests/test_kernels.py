@@ -1,0 +1,175 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes / granularities / dtypes; assert_allclose against
+ref.py.  This is the gate `make artifacts` quality rests on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import split_matmul, matmul_tiled, attention, layernorm
+from compile.kernels.attention import attention_mha
+from compile.kernels.split_matmul import vmem_footprint_bytes
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# split_matmul
+# ---------------------------------------------------------------------------
+
+class TestSplitMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.sampled_from([1, 3, 8, 32, 57]),
+        n=st.sampled_from([1, 4, 16, 64, 96]),
+        ks=st.sampled_from([8, 16, 24]),
+        g=st.sampled_from([1, 2, 4, 8]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_plain_matmul(self, m, n, ks, g, seed):
+        k = ks * g
+        x = rand(seed, (m, k))
+        w = rand(seed + 1, (k, n))
+        got = split_matmul(x, w, granularity=g)
+        want = ref.matmul_ref(x, w)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(g=st.sampled_from([1, 2, 4, 8, 16]), seed=st.integers(0, 2**16))
+    def test_matches_figure4_slice_and_sum(self, g, seed):
+        """Kernel == the paper's literal slice/sequential/sum definition."""
+        x = rand(seed, (16, 64))
+        w = rand(seed + 1, (64, 32))
+        got = split_matmul(x, w, granularity=g)
+        want = ref.split_matmul_ref(x, w, g)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_granularity_must_divide(self):
+        x, w = rand(0, (4, 10)), rand(1, (10, 4))
+        with pytest.raises(AssertionError):
+            split_matmul(x, w, granularity=3)
+
+    def test_granularity_zero_means_no_split(self):
+        # Paper's figures use granularity 0 for "no splitting".
+        x, w = rand(0, (4, 8)), rand(1, (8, 4))
+        got = split_matmul(x, w, granularity=0)
+        np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-5)
+
+    def test_vmem_footprint_monotone_in_granularity(self):
+        """More slices -> strictly less on-chip footprint (Fig 7 memory)."""
+        fps = [vmem_footprint_bytes(256, 1024, 4096, g) for g in [1, 2, 4, 8, 16]]
+        assert all(a > b for a, b in zip(fps, fps[1:]))
+
+    def test_bf16_supported(self):
+        """bf16 in/out works; tolerance reflects bf16 accumulation."""
+        x = rand(7, (32, 64)).astype(jnp.bfloat16)
+        w = rand(8, (64, 32)).astype(jnp.bfloat16)
+        got = split_matmul(x, w, granularity=4).astype(np.float32)
+        want = np.asarray(
+            jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)))
+        scale = np.max(np.abs(want))
+        np.testing.assert_allclose(got, want, atol=0.02 * scale)
+
+
+class TestMatmulTiled:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        mt=st.sampled_from([1, 2, 4]),
+        nt=st.sampled_from([1, 2, 3]),
+        kt=st.sampled_from([1, 2, 4]),
+        bm=st.sampled_from([8, 16]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, mt, nt, kt, bm, seed):
+        m, n, k = mt * bm, nt * 16, kt * 16
+        x, w = rand(seed, (m, k)), rand(seed + 1, (k, n))
+        got = matmul_tiled(x, w, bm=bm, bn=16, bk=16)
+        np.testing.assert_allclose(got, ref.matmul_ref(x, w),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_block_clamped_to_problem(self):
+        x, w = rand(0, (8, 8)), rand(1, (8, 8))
+        got = matmul_tiled(x, w)  # default blocks 128 > 8 -> clamped
+        np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+class TestAttention:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        s=st.sampled_from([16, 32, 64, 128]),
+        d=st.sampled_from([8, 16, 32]),
+        bq=st.sampled_from([8, 16, 64]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, s, d, bq, causal, seed):
+        if s % min(bq, s) != 0:
+            return
+        q = rand(seed, (s, d))
+        k = rand(seed + 1, (s, d))
+        v = rand(seed + 2, (s, d))
+        got = attention(q, k, v, causal=causal, block_q=bq)
+        want = ref.attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_causal_first_row_is_v0(self):
+        """Row 0 attends only to position 0 under the causal mask."""
+        q, k, v = rand(0, (16, 8)), rand(1, (16, 8)), rand(2, (16, 8))
+        out = attention(q, k, v, causal=True, block_q=8)
+        np.testing.assert_allclose(out[0], v[0], rtol=1e-5, atol=1e-6)
+
+    def test_block_size_invariance(self):
+        q, k, v = rand(3, (64, 16)), rand(4, (64, 16)), rand(5, (64, 16))
+        outs = [attention(q, k, v, block_q=bq) for bq in (8, 16, 32, 64)]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-6)
+
+    def test_mha_vmap(self):
+        h, s, d = 4, 32, 8
+        q, k, v = rand(6, (h, s, d)), rand(7, (h, s, d)), rand(8, (h, s, d))
+        got = attention_mha(q, k, v)
+        want = jnp.stack([ref.attention_ref(q[i], k[i], v[i])
+                          for i in range(h)])
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+class TestLayerNorm:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        r=st.sampled_from([8, 32, 128, 256]),
+        h=st.sampled_from([16, 64, 257]),
+        br=st.sampled_from([8, 32, 128]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, r, h, br, seed):
+        if r % min(br, r) != 0:
+            return
+        x = rand(seed, (r, h))
+        g = rand(seed + 1, (h,)) * 0.1 + 1.0
+        b = rand(seed + 2, (h,)) * 0.1
+        got = layernorm(x, g, b, block_rows=br)
+        want = ref.layernorm_ref(x, g, b)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_output_normalized(self):
+        x = rand(9, (64, 128)) * 10 + 3
+        out = layernorm(x, jnp.ones(128), jnp.zeros(128))
+        np.testing.assert_allclose(np.mean(out, -1), 0, atol=1e-4)
+        np.testing.assert_allclose(np.std(out, -1), 1, atol=1e-3)

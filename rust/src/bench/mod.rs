@@ -1,0 +1,131 @@
+//! Minimal benchmarking harness (criterion substitute — the offline build
+//! has no external crates). Warmup + timed iterations + outlier-robust
+//! summary, plus a text reporter the `benches/*.rs` binaries share.
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// One benchmark's measured samples (seconds per iteration).
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub summary: Summary,
+    pub iters_per_sample: usize,
+}
+
+impl Measurement {
+    pub fn per_iter(&self) -> f64 {
+        self.summary.mean / self.iters_per_sample as f64
+    }
+}
+
+/// Bench runner with fixed warmup/sample counts (deterministic wall-clock
+/// budget, unlike criterion's adaptive sampling).
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub samples: usize,
+    pub iters_per_sample: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_iters: 3,
+            samples: 10,
+            iters_per_sample: 1,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup_iters: usize, samples: usize,
+               iters_per_sample: usize) -> Bencher {
+        Bencher {
+            warmup_iters,
+            samples,
+            iters_per_sample,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`; the closure's return value is black-boxed to keep the
+    /// optimizer honest.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T)
+                    -> &Measurement {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..self.iters_per_sample {
+                black_box(f());
+            }
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        self.results.push(Measurement {
+            name: name.to_string(),
+            summary: Summary::of(&samples),
+            iters_per_sample: self.iters_per_sample,
+        });
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// criterion-style report lines.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for m in &self.results {
+            out.push_str(&format!(
+                "{:<44} {:>12}/iter  (p50 {:>12}, rsd {:>5.1}%)\n",
+                m.name,
+                crate::util::fmt_time(m.per_iter()),
+                crate::util::fmt_time(
+                    m.summary.p50 / m.iters_per_sample as f64
+                ),
+                m.summary.rsd() * 100.0,
+            ));
+        }
+        out
+    }
+}
+
+/// Prevent the optimizer from eliding a value (std::hint::black_box
+/// wrapper, kept here so benches don't depend on unstable features).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let mut b = Bencher::new(1, 5, 10);
+        let m = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(m.per_iter() > 0.0);
+        assert_eq!(m.iters_per_sample, 10);
+    }
+
+    #[test]
+    fn report_contains_names() {
+        let mut b = Bencher::default();
+        b.bench("alpha", || 1 + 1);
+        b.bench("beta", || 2 + 2);
+        let r = b.report();
+        assert!(r.contains("alpha") && r.contains("beta"));
+        assert_eq!(r.lines().count(), 2);
+    }
+}

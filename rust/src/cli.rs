@@ -1,0 +1,118 @@
+//! Hand-rolled CLI argument parsing (offline build: no clap). Flags are
+//! `--key value` or `--flag`; positional args are collected in order.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, positionals, flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(cmd) = it.peek() {
+            if !cmd.starts_with('-') {
+                out.command = it.next().unwrap();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let value = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                out.flags.insert(key.to_string(), value);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| {
+                panic!("--{key} expects an integer, got '{v}'")
+            }))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| {
+                panic!("--{key} expects a number, got '{v}'")
+            }))
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated usize list.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse().unwrap_or_else(|_| {
+                    panic!("--{key}: bad integer '{s}'")
+                }))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_command_flags_positionals() {
+        let a = parse("plan nd48 --devices 8 --mem 8.5 --ckpt --g 0,4,8");
+        assert_eq!(a.command, "plan");
+        assert_eq!(a.positional, vec!["nd48"]);
+        assert_eq!(a.usize_or("devices", 1), 8);
+        assert_eq!(a.f64_or("mem", 0.0), 8.5);
+        assert!(a.flag("ckpt"));
+        assert!(!a.flag("missing"));
+        assert_eq!(a.usize_list_or("g", &[0]), vec![0, 4, 8]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("zoo");
+        assert_eq!(a.usize_or("devices", 8), 8);
+        assert_eq!(a.get_or("model", "tiny"), "tiny");
+    }
+
+    #[test]
+    fn bare_flags_before_values() {
+        let a = parse("train --verbose --steps 10");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize_or("steps", 0), 10);
+    }
+}

@@ -1,0 +1,89 @@
+//! Ring collectives over the device fabric (paper §3.1: "we follow the
+//! ring-based all-gather and reduce-scatter operations as supported by
+//! NCCL"). Real f32 payloads move; the fabric's logical clocks charge the
+//! (α, β) cost, so both numerics and timing are testable.
+//!
+//! All collectives are SPMD: every rank calls the same function in the
+//! same order with equally-sized inputs.
+
+pub mod hierarchical;
+pub mod ring;
+
+pub use hierarchical::{hier_all_gather, hier_all_reduce};
+pub use ring::{all_gather, all_reduce, broadcast, reduce_scatter};
+
+use crate::fabric::Endpoint;
+
+/// Split `len` into `n` contiguous chunks (first `len % n` chunks get one
+/// extra element) and return the (offset, size) of chunk `i`.
+pub fn chunk_range(len: usize, n: usize, i: usize) -> (usize, usize) {
+    debug_assert!(i < n);
+    let base = len / n;
+    let rem = len % n;
+    let size = base + usize::from(i < rem);
+    let offset = i * base + i.min(rem);
+    (offset, size)
+}
+
+/// Analytic seconds for one ring collective of `k` rounds over `bytes`
+/// payload on `n` devices — the quantity the paper's Eq. charges and the
+/// fabric should approximately realize.
+pub fn ring_model_seconds(k: f64, bytes: f64, n: usize, alpha: f64,
+                          beta: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    k * (nf - 1.0) * (alpha + bytes * beta / nf)
+}
+
+/// Helper trait so collectives can be written once over an [`Endpoint`].
+pub trait Collective {
+    fn ep(&mut self) -> &mut Endpoint;
+}
+
+impl Collective for Endpoint {
+    fn ep(&mut self) -> &mut Endpoint {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for len in [0usize, 1, 7, 16, 33] {
+            for n in [1usize, 2, 3, 8] {
+                let mut total = 0;
+                let mut next = 0;
+                for i in 0..n {
+                    let (off, size) = chunk_range(len, n, i);
+                    assert_eq!(off, next);
+                    next = off + size;
+                    total += size;
+                }
+                assert_eq!(total, len, "len={len} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_sizes_balanced() {
+        // sizes differ by at most 1
+        let sizes: Vec<usize> =
+            (0..5).map(|i| chunk_range(17, 5, i).1).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 17);
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn ring_model_matches_paper_formula() {
+        // 2(N-1)(α + S·β/N) for DP grad sync
+        let s = ring_model_seconds(2.0, 1e9, 8, 1e-5, 1e-10);
+        let expect = 2.0 * 7.0 * (1e-5 + 1e9 * 1e-10 / 8.0);
+        assert!((s - expect).abs() < 1e-12);
+        assert_eq!(ring_model_seconds(3.0, 1e9, 1, 1e-5, 1e-10), 0.0);
+    }
+}

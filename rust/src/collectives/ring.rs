@@ -1,0 +1,249 @@
+//! Flat ring collectives: reduce-scatter, all-gather, all-reduce, broadcast.
+//!
+//! The ring algorithms are the textbook NCCL ones: `N−1` steps, each rank
+//! sending one `len/N` chunk to its ring successor per step. All-reduce is
+//! explicitly composed as reduce-scatter + all-gather, mirroring Figure 1's
+//! dissection of the DP gradient synchronization.
+
+use super::chunk_range;
+use crate::fabric::Endpoint;
+
+/// Ring reduce-scatter: every rank contributes `data` (equal length across
+/// ranks); rank `i` returns the element-wise sum of chunk `i`.
+pub fn reduce_scatter(ep: &mut Endpoint, data: &[f32]) -> Vec<f32> {
+    let n = ep.n;
+    if n == 1 {
+        return data.to_vec();
+    }
+    let tag0 = ep.next_op_tag();
+    let rank = ep.rank;
+    let next = ep.ring_next();
+    let prev = ep.ring_prev();
+    let mut work = data.to_vec();
+
+    // Chunk c travels rank c+1 → c+2 → … → c, accumulating at each hop:
+    // step s has rank r send chunk (r−1−s) and fold in chunk (r−2−s).
+    // After N−1 steps, chunk `rank` holds the full sum.
+    for s in 0..n - 1 {
+        let send_idx = (rank + 2 * n - 1 - s) % n;
+        let recv_idx = (rank + 2 * n - 2 - s) % n;
+        let (so, sl) = chunk_range(work.len(), n, send_idx);
+        ep.send(next, tag0 + s as u64, work[so..so + sl].to_vec());
+        let incoming = ep.recv(prev, tag0 + s as u64);
+        let (ro, rl) = chunk_range(work.len(), n, recv_idx);
+        debug_assert_eq!(incoming.len(), rl);
+        for (w, x) in work[ro..ro + rl].iter_mut().zip(&incoming) {
+            *w += x;
+        }
+    }
+    let (o, l) = chunk_range(work.len(), n, rank);
+    work[o..o + l].to_vec()
+}
+
+/// Ring all-gather: rank `i` contributes `shard` (chunk `i` of the result,
+/// sized per [`chunk_range`] of `total_len`); every rank returns the full
+/// concatenation.
+pub fn all_gather(ep: &mut Endpoint, shard: &[f32], total_len: usize)
+                  -> Vec<f32> {
+    let n = ep.n;
+    if n == 1 {
+        return shard.to_vec();
+    }
+    let tag0 = ep.next_op_tag();
+    let rank = ep.rank;
+    let next = ep.ring_next();
+    let prev = ep.ring_prev();
+    let (own_off, own_len) = chunk_range(total_len, n, rank);
+    debug_assert_eq!(shard.len(), own_len, "shard size mismatch");
+
+    let mut out = vec![0.0f32; total_len];
+    out[own_off..own_off + own_len].copy_from_slice(shard);
+
+    // Step s: send chunk (rank - s), receive chunk (rank - s - 1).
+    for s in 0..n - 1 {
+        let send_idx = (rank + n - s) % n;
+        let recv_idx = (rank + n - s - 1) % n;
+        let (so, sl) = chunk_range(total_len, n, send_idx);
+        ep.send(next, tag0 + s as u64, out[so..so + sl].to_vec());
+        let incoming = ep.recv(prev, tag0 + s as u64);
+        let (ro, rl) = chunk_range(total_len, n, recv_idx);
+        debug_assert_eq!(incoming.len(), rl);
+        out[ro..ro + rl].copy_from_slice(&incoming);
+    }
+    out
+}
+
+/// Ring all-reduce = reduce-scatter + all-gather (Figure 1).
+pub fn all_reduce(ep: &mut Endpoint, data: &[f32]) -> Vec<f32> {
+    let shard = reduce_scatter(ep, data);
+    all_gather(ep, &shard, data.len())
+}
+
+/// Linear-pipeline broadcast from `root` around the ring.
+pub fn broadcast(ep: &mut Endpoint, root: usize, data: Vec<f32>) -> Vec<f32> {
+    let n = ep.n;
+    if n == 1 {
+        return data;
+    }
+    let tag = ep.next_op_tag();
+    // distance from root along the ring
+    let dist = (ep.rank + n - root) % n;
+    let out = if dist == 0 {
+        data
+    } else {
+        ep.recv(ep.ring_prev(), tag)
+    };
+    if dist + 1 < n {
+        ep.send(ep.ring_next(), tag, out.clone());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::ring_model_seconds;
+    use crate::fabric::{self, Topology};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    const ALPHA: f64 = 2e-6;
+    const BETA: f64 = 1e-9;
+
+    fn flat(n: usize) -> Topology {
+        Topology::flat(n, ALPHA, BETA)
+    }
+
+    /// rank-dependent deterministic test vector
+    fn input(rank: usize, len: usize) -> Vec<f32> {
+        (0..len).map(|i| (rank * len + i) as f32 * 0.25).collect()
+    }
+
+    fn expected_sum(n: usize, len: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; len];
+        for r in 0..n {
+            for (o, x) in out.iter_mut().zip(input(r, len)) {
+                *o += x;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn reduce_scatter_sums_chunks() {
+        for n in [2usize, 3, 4, 8] {
+            let len = 23;
+            let out = fabric::run(n, flat(n), move |ep| {
+                reduce_scatter(ep, &input(ep.rank, len))
+            });
+            let full = expected_sum(n, len);
+            for (r, shard) in out.iter().enumerate() {
+                let (o, l) = chunk_range(len, n, r);
+                assert_eq!(shard.as_slice(), &full[o..o + l], "n={n} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_reassembles() {
+        for n in [2usize, 4, 7] {
+            let len = 31;
+            let out = fabric::run(n, flat(n), move |ep| {
+                let (o, l) = chunk_range(len, n, ep.rank);
+                let full: Vec<f32> = (0..len).map(|i| i as f32).collect();
+                all_gather(ep, &full[o..o + l], len)
+            });
+            for shard in out {
+                assert_eq!(shard, (0..len).map(|i| i as f32).collect::<Vec<_>>());
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_equals_direct_sum() {
+        for n in [2usize, 4, 8] {
+            let len = 50;
+            let out = fabric::run(n, flat(n), move |ep| {
+                all_reduce(ep, &input(ep.rank, len))
+            });
+            let full = expected_sum(n, len);
+            for got in out {
+                for (g, e) in got.iter().zip(&full) {
+                    assert!((g - e).abs() < 1e-3, "{g} vs {e}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_from_any_root() {
+        for root in 0..4 {
+            let out = fabric::run(4, flat(4), move |ep| {
+                let data = if ep.rank == root {
+                    vec![3.0, 1.0, 4.0]
+                } else {
+                    Vec::new()
+                };
+                broadcast(ep, root, data)
+            });
+            for got in out {
+                assert_eq!(got, vec![3.0, 1.0, 4.0]);
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_time_matches_alpha_beta_model() {
+        // The fabric's logical clocks should realize ≈ 2(N-1)(α + Sβ/N):
+        // ring steps serialize on the critical path.
+        let n = 8;
+        let len = 1 << 18; // 1 MiB payload
+        let times = fabric::run_timed(n, flat(n), move |ep| {
+            all_reduce(ep, &vec![1.0f32; len]);
+        });
+        let bytes = (len * 4) as f64;
+        let model = ring_model_seconds(2.0, bytes, n, ALPHA, BETA);
+        for (_, t) in times {
+            let ratio = t / model;
+            // ring pipelining and chunk rounding put us within ~25%
+            assert!((0.75..1.35).contains(&ratio),
+                    "fabric {t} vs model {model} (ratio {ratio})");
+        }
+    }
+
+    #[test]
+    fn property_all_reduce_random_shapes() {
+        prop::check(
+            0xC011,
+            12,
+            |rng: &mut Rng, size| {
+                let n = rng.range(2, 6);
+                let len = rng.range(1, size * 8);
+                let seed = rng.next_u64();
+                (n, len, seed)
+            },
+            |&(n, len, seed)| {
+                let out = fabric::run(n, flat(n), move |ep| {
+                    let mut r = Rng::new(seed + ep.rank as u64);
+                    let data: Vec<f32> =
+                        (0..len).map(|_| r.normal() as f32).collect();
+                    (data.clone(), all_reduce(ep, &data))
+                });
+                let mut want = vec![0.0f64; len];
+                for (data, _) in &out {
+                    for (w, x) in want.iter_mut().zip(data) {
+                        *w += *x as f64;
+                    }
+                }
+                for (_, got) in &out {
+                    for (g, e) in got.iter().zip(&want) {
+                        if (*g as f64 - e).abs() > 1e-3 {
+                            return Err(format!("{g} != {e}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

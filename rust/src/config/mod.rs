@@ -1,0 +1,290 @@
+//! Configuration: cluster/device information ("Device Information" input in
+//! Figure 2) and run settings, loadable from TOML-subset files.
+
+mod parse;
+
+pub use parse::{ParseError, TomlDoc, Value};
+
+/// Gibibytes → bytes.
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// Cluster description: parallelism degree, topology, link model, compute.
+///
+/// The paper's (α, β, γ) model (§3.1): `alpha_*` is per-ring-step latency,
+/// `beta_*` transfer seconds per byte; `γ_i` is derived per operator from
+/// `flops` (see `cost::profiler`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cluster {
+    /// Parallelism degree N (number of devices).
+    pub n_devices: usize,
+    /// Devices per node: collectives spanning nodes pay the inter-node link.
+    pub devices_per_node: usize,
+    /// Device memory limit `M_limit` in bytes (the experiments use 8/16 GiB).
+    pub mem_limit: f64,
+    /// Ring-step latency within a node (seconds).
+    pub alpha_intra: f64,
+    /// Transfer time per byte within a node (seconds/byte).
+    pub beta_intra: f64,
+    /// Ring-step latency across nodes (seconds).
+    pub alpha_inter: f64,
+    /// Transfer time per byte across nodes (seconds/byte).
+    pub beta_inter: f64,
+    /// Per-device sustained fp32 FLOP/s (calibrated or preset).
+    pub flops: f64,
+    /// Overlap communication with computation where legal (§3.3: OSDP's
+    /// deployment "supports the overlapping between computation and
+    /// communication"; the *search* cost model keeps them additive, as the
+    /// paper's formulation does).
+    pub overlap: bool,
+}
+
+impl Cluster {
+    /// The paper's laboratorial server: 8× NVIDIA RTX TITAN 24 GB on
+    /// PCIe 3.0. Ring bandwidth ≈ 12 GB/s effective, fp32 ≈ 14 TFLOP/s.
+    pub fn rtx_titan(n_devices: usize, mem_limit_gib: f64) -> Cluster {
+        Cluster {
+            n_devices,
+            devices_per_node: n_devices,
+            mem_limit: mem_limit_gib * GIB,
+            alpha_intra: 10e-6,
+            beta_intra: 1.0 / 12e9,
+            alpha_inter: 10e-6,
+            beta_inter: 1.0 / 12e9,
+            flops: 14e12,
+            overlap: true,
+        }
+    }
+
+    /// The paper's two cloud servers with A100 GPUs, 100 Gb/s between the
+    /// servers (Figure 6): NVLink intra-node, 12.5 GB/s inter-node.
+    pub fn two_server_a100(mem_limit_gib: f64) -> Cluster {
+        Cluster {
+            n_devices: 16,
+            devices_per_node: 8,
+            mem_limit: mem_limit_gib * GIB,
+            alpha_intra: 5e-6,
+            beta_intra: 1.0 / 200e9,
+            alpha_inter: 30e-6,
+            beta_inter: 1.0 / 12.5e9,
+            flops: 19.5e12,
+            overlap: true,
+        }
+    }
+
+    /// Number of nodes (ceil division).
+    pub fn n_nodes(&self) -> usize {
+        self.n_devices.div_ceil(self.devices_per_node)
+    }
+
+    /// Whether a collective over all N devices crosses a node boundary.
+    pub fn crosses_nodes(&self) -> bool {
+        self.n_devices > self.devices_per_node
+    }
+
+    /// Effective per-ring-step (α, β) for a collective spanning all devices:
+    /// a ring across nodes is bottlenecked by its slowest link.
+    pub fn ring_link(&self) -> (f64, f64) {
+        if self.crosses_nodes() {
+            (self.alpha_inter, self.beta_inter)
+        } else {
+            (self.alpha_intra, self.beta_intra)
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_devices == 0 {
+            return Err("n_devices must be > 0".into());
+        }
+        if self.devices_per_node == 0 {
+            return Err("devices_per_node must be > 0".into());
+        }
+        if self.mem_limit <= 0.0 {
+            return Err("mem_limit must be > 0".into());
+        }
+        if self.flops <= 0.0 {
+            return Err("flops must be > 0".into());
+        }
+        for (name, v) in [
+            ("alpha_intra", self.alpha_intra),
+            ("beta_intra", self.beta_intra),
+            ("alpha_inter", self.alpha_inter),
+            ("beta_inter", self.beta_inter),
+        ] {
+            if v < 0.0 || !v.is_finite() {
+                return Err(format!("{name} must be finite and >= 0"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Search-engine settings (Algorithm 1 knobs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchConfig {
+    /// Maximum batch size the Scheduler will try (safety bound; the paper
+    /// stops when nothing fits).
+    pub max_batch: usize,
+    /// Candidate slice granularities for operator splitting (0 = off).
+    pub granularities: Vec<usize>,
+    /// Enable checkpointing in the cost model (Figure 9).
+    pub checkpointing: bool,
+    /// Plan on the paper's coarse 2-ops/layer granularity instead of the
+    /// fine-grained graph.
+    pub paper_granularity: bool,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            max_batch: 1024,
+            granularities: vec![0, 2, 4, 8, 16],
+            checkpointing: false,
+            paper_granularity: false,
+        }
+    }
+}
+
+/// A full run configuration, parsed from a TOML-subset file:
+///
+/// ```toml
+/// [cluster]
+/// preset = "rtx_titan"       # or "two_server_a100" / "custom"
+/// n_devices = 8
+/// mem_limit_gib = 8.0
+///
+/// [search]
+/// max_batch = 256
+/// granularities = [0, 2, 4, 8]
+/// checkpointing = false
+/// ```
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub cluster: Cluster,
+    pub search: SearchConfig,
+}
+
+impl RunConfig {
+    pub fn from_str(text: &str) -> Result<RunConfig, String> {
+        let doc = TomlDoc::parse(text).map_err(|e| e.to_string())?;
+
+        let n = doc.get("cluster", "n_devices")
+            .and_then(Value::as_usize).unwrap_or(8);
+        let mem = doc.get("cluster", "mem_limit_gib")
+            .and_then(Value::as_f64).unwrap_or(8.0);
+        let preset = doc.get("cluster", "preset")
+            .and_then(Value::as_str).unwrap_or("rtx_titan");
+        let mut cluster = match preset {
+            "rtx_titan" => Cluster::rtx_titan(n, mem),
+            "two_server_a100" => Cluster::two_server_a100(mem),
+            "custom" => Cluster::rtx_titan(n, mem), // base, overridden below
+            other => return Err(format!("unknown cluster preset '{other}'")),
+        };
+        // optional field-level overrides
+        #[allow(unused_mut)]
+        let mut override_f64 = |key: &str, field: &mut f64| {
+            if let Some(v) = doc.get("cluster", key).and_then(Value::as_f64) {
+                *field = v;
+            }
+        };
+        override_f64("alpha_intra", &mut cluster.alpha_intra);
+        override_f64("beta_intra", &mut cluster.beta_intra);
+        override_f64("alpha_inter", &mut cluster.alpha_inter);
+        override_f64("beta_inter", &mut cluster.beta_inter);
+        override_f64("flops", &mut cluster.flops);
+        if let Some(dpn) = doc.get("cluster", "devices_per_node")
+            .and_then(Value::as_usize)
+        {
+            cluster.devices_per_node = dpn;
+        }
+        cluster.validate()?;
+
+        let mut search = SearchConfig::default();
+        if let Some(mb) = doc.get("search", "max_batch").and_then(Value::as_usize) {
+            search.max_batch = mb;
+        }
+        if let Some(g) = doc.get("search", "granularities").and_then(Value::as_arr) {
+            search.granularities =
+                g.iter().filter_map(Value::as_usize).collect();
+        }
+        if let Some(c) = doc.get("search", "checkpointing").and_then(Value::as_bool) {
+            search.checkpointing = c;
+        }
+        if let Some(p) = doc.get("search", "paper_granularity")
+            .and_then(Value::as_bool)
+        {
+            search.paper_granularity = p;
+        }
+        Ok(RunConfig { cluster, search })
+    }
+
+    pub fn from_file(path: &str) -> Result<RunConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {path}: {e}"))?;
+        RunConfig::from_str(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        assert!(Cluster::rtx_titan(8, 8.0).validate().is_ok());
+        assert!(Cluster::two_server_a100(16.0).validate().is_ok());
+    }
+
+    #[test]
+    fn two_server_crosses_nodes() {
+        let c = Cluster::two_server_a100(16.0);
+        assert_eq!(c.n_nodes(), 2);
+        assert!(c.crosses_nodes());
+        assert_eq!(c.ring_link(), (c.alpha_inter, c.beta_inter));
+        let single = Cluster::rtx_titan(8, 8.0);
+        assert!(!single.crosses_nodes());
+        assert_eq!(single.ring_link(), (single.alpha_intra, single.beta_intra));
+    }
+
+    #[test]
+    fn run_config_parses_full() {
+        let cfg = RunConfig::from_str(
+            r#"
+            [cluster]
+            preset = "rtx_titan"
+            n_devices = 4
+            mem_limit_gib = 16.0
+            flops = 1.0e12
+
+            [search]
+            max_batch = 64
+            granularities = [0, 4]
+            checkpointing = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.n_devices, 4);
+        assert_eq!(cfg.cluster.mem_limit, 16.0 * GIB);
+        assert_eq!(cfg.cluster.flops, 1.0e12);
+        assert_eq!(cfg.search.max_batch, 64);
+        assert_eq!(cfg.search.granularities, vec![0, 4]);
+        assert!(cfg.search.checkpointing);
+    }
+
+    #[test]
+    fn run_config_defaults() {
+        let cfg = RunConfig::from_str("").unwrap();
+        assert_eq!(cfg.cluster.n_devices, 8);
+        assert_eq!(cfg.search.max_batch, 1024);
+    }
+
+    #[test]
+    fn bad_preset_rejected() {
+        assert!(RunConfig::from_str("[cluster]\npreset = \"tpu\"").is_err());
+    }
+
+    #[test]
+    fn invalid_cluster_rejected() {
+        let c = Cluster { n_devices: 0, ..Cluster::rtx_titan(8, 8.0) };
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,248 @@
+//! TOML-subset parser for run configuration files.
+//!
+//! Supported grammar (all the project's configs need):
+//!   - `[section]` headers
+//!   - `key = value` with value ∈ string ("..."), float/int, bool,
+//!     flat arrays `[v, v, ...]`
+//!   - `#` comments, blank lines
+//!
+//! Not supported (rejected loudly): nested tables, inline tables, dotted
+//! keys, multi-line strings, datetime.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed scalar or flat array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().and_then(|n| {
+            if n >= 0.0 && n.fract() == 0.0 { Some(n as usize) } else { None }
+        })
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parse failure with line number.
+#[derive(Debug, Clone)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// A parsed document: `section -> key -> value`. Keys before any header
+/// land in the "" section.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, ParseError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or(ParseError {
+                    line: lineno,
+                    msg: "unterminated section header".into(),
+                })?;
+                if name.contains('[') || name.contains('.') {
+                    return Err(ParseError {
+                        line: lineno,
+                        msg: format!("unsupported table syntax '{name}'"),
+                    });
+                }
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let eq = line.find('=').ok_or(ParseError {
+                line: lineno,
+                msg: "expected 'key = value'".into(),
+            })?;
+            let key = line[..eq].trim();
+            if key.is_empty() || key.contains('.') {
+                return Err(ParseError {
+                    line: lineno,
+                    msg: format!("bad key '{key}'"),
+                });
+            }
+            let value = parse_value(line[eq + 1..].trim()).map_err(|msg| {
+                ParseError { line: lineno, msg }
+            })?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    /// Look up `[section] key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        if inner.contains('"') {
+            return Err("embedded quote in string".into());
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let mut out = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue; // trailing comma
+            }
+            out.push(parse_value(part)?);
+        }
+        return Ok(Value::Arr(out));
+    }
+    s.replace('_', "")
+        .parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| format!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+            top = 1
+            [a]
+            s = "hello"   # comment
+            n = -2.5e3
+            b = true
+            arr = [1, 2, 3,]
+            [b]
+            big = 1_000_000
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top"), Some(&Value::Num(1.0)));
+        assert_eq!(doc.get("a", "s").unwrap().as_str(), Some("hello"));
+        assert_eq!(doc.get("a", "n").unwrap().as_f64(), Some(-2500.0));
+        assert_eq!(doc.get("a", "b").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("a", "arr").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(doc.get("b", "big").unwrap().as_usize(), Some(1_000_000));
+    }
+
+    #[test]
+    fn hash_in_string_not_comment() {
+        let doc = TomlDoc::parse(r##"k = "a#b""##).unwrap();
+        assert_eq!(doc.get("", "k").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_nested_tables() {
+        assert!(TomlDoc::parse("[a.b]\nk = 1").is_err());
+        assert!(TomlDoc::parse("a.b = 1").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlDoc::parse("[open").is_err());
+        assert!(TomlDoc::parse("novalue =").is_err());
+        assert!(TomlDoc::parse("just a line").is_err());
+        assert!(TomlDoc::parse("k = [1, 2").is_err());
+        assert!(TomlDoc::parse("k = \"open").is_err());
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let err = TomlDoc::parse("good = 1\nbad line").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+}

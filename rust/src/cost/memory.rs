@@ -1,0 +1,175 @@
+//! Memory cost model (paper Eq. in §3.1):
+//!
+//! ```text
+//! M_i(p_i, b) = M_model(/N for the ZDP share) + b·M_act + M_extra
+//! ```
+//!
+//! extended with the two effects the paper layers on top:
+//!
+//! * **Operator splitting** (§3.3): the transient gather of a ZDP slice
+//!   materializes only `param_bytes/g` at a time ("amortizes the memory
+//!   from size(MatMul) to size(MatMul)/slice_granularity").
+//! * **Checkpointing** (§2.3/4.3): only segment-boundary activations stay
+//!   resident; interior activations are recomputed.
+//!
+//! Memory is split into a *persistent* part (additive across ops) and a
+//! *transient* part (peaks one op at a time); the device peak is
+//! `Σ persistent + max transient`, which the search engine tracks
+//! incrementally.
+
+use super::Decision;
+use crate::model::Operator;
+
+/// Per-operator memory breakdown on one device.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoryCost {
+    /// Model states resident for the whole iteration (params+grads+Adam;
+    /// the ZDP share is divided by N).
+    pub states: f64,
+    /// Activations resident until backward (scales with batch).
+    pub activations: f64,
+    /// Mode-independent workspace that exists only while the op runs.
+    pub workspace: f64,
+    /// ZDP re-gather transient: unsharded fp32 params (+ full-size gradient
+    /// before reduce-scatter in backward), divided by the slice granularity.
+    pub gather: f64,
+}
+
+impl MemoryCost {
+    /// Bytes that add up across operators.
+    pub fn persistent(&self) -> f64 {
+        self.states + self.activations
+    }
+
+    /// Bytes that exist only while this operator executes.
+    pub fn transient(&self) -> f64 {
+        self.workspace + self.gather
+    }
+
+    /// Stand-alone total (the paper's additive `M_i`).
+    pub fn total(&self) -> f64 {
+        self.persistent() + self.transient()
+    }
+}
+
+/// Memory cost of operator `op` under decision `d` with per-device batch
+/// size `b` on an `n`-way cluster.
+pub fn op_memory(op: &Operator, d: Decision, b: usize, n: usize,
+                 checkpointing: bool) -> MemoryCost {
+    debug_assert!(n >= 1);
+    debug_assert!(d.zdp_slices <= d.slices());
+    let zdp_frac = d.zdp_fraction();
+    let dp_frac = 1.0 - zdp_frac;
+    // ZDP shards states 1/N; DP replicates them.
+    let states = op.state_bytes() * (dp_frac + zdp_frac / n as f64);
+
+    let act_per_sample = if checkpointing {
+        op.ckpt_act_bytes_per_sample
+    } else {
+        op.act_bytes_per_sample
+    };
+    let activations = b as f64 * act_per_sample;
+
+    // Attention-score style workspaces scale with batch.
+    let workspace = b as f64 * op.extra_bytes;
+
+    // The gather transient exists only if some slice is sharded: one slice
+    // of fp32 params in forward, and (param + grad) slices in backward
+    // before the reduce-scatter — 2× param_bytes / g at peak.
+    let gather = if d.zdp_slices > 0 {
+        2.0 * op.param_bytes() / d.slices() as f64
+    } else {
+        0.0
+    };
+
+    MemoryCost { states, activations, workspace, gather }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{GptDims, build_gpt};
+
+    fn mm_op() -> Operator {
+        let m = build_gpt(&GptDims::uniform("t", 1000, 64, 1, 512, 4));
+        m.ops.iter().find(|o| o.name == "l0.mlp_up").unwrap().clone()
+    }
+
+    #[test]
+    fn zdp_shards_states_to_one_nth() {
+        let op = mm_op();
+        let dp = op_memory(&op, Decision::DP, 1, 8, false);
+        let zdp = op_memory(&op, Decision::ZDP, 1, 8, false);
+        assert!((zdp.states - dp.states / 8.0).abs() < 1e-6);
+        // activations are mode-independent
+        assert_eq!(zdp.activations, dp.activations);
+    }
+
+    #[test]
+    fn dp_has_no_gather_transient() {
+        let op = mm_op();
+        assert_eq!(op_memory(&op, Decision::DP, 4, 8, false).gather, 0.0);
+        assert!(op_memory(&op, Decision::ZDP, 4, 8, false).gather > 0.0);
+    }
+
+    #[test]
+    fn splitting_divides_gather_peak() {
+        // Paper Fig 7: up to ~50% peak reduction at g=2, monotone in g.
+        let op = mm_op();
+        let peaks: Vec<f64> = [0usize, 2, 4, 8, 16]
+            .iter()
+            .map(|&g| op_memory(&op, Decision::zdp_at(g), 1, 8, false).gather)
+            .collect();
+        assert!((peaks[1] - peaks[0] / 2.0).abs() < 1e-6, "g=2 halves");
+        for w in peaks.windows(2) {
+            assert!(w[1] < w[0]);
+        }
+    }
+
+    #[test]
+    fn mixed_slices_interpolate_states() {
+        let op = mm_op();
+        let n = 8;
+        let dp = op_memory(&op, Decision::DP, 1, n, false).states;
+        let zdp = op_memory(&op, Decision::ZDP, 1, n, false).states;
+        let half = op_memory(
+            &op,
+            Decision { granularity: 4, zdp_slices: 2 },
+            1,
+            n,
+            false,
+        )
+        .states;
+        assert!((half - (dp + zdp) / 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn activations_scale_with_batch() {
+        let op = mm_op();
+        let m1 = op_memory(&op, Decision::DP, 1, 8, false).activations;
+        let m8 = op_memory(&op, Decision::DP, 8, 8, false).activations;
+        assert!((m8 - 8.0 * m1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn checkpointing_frees_interior_activations() {
+        let op = mm_op(); // interior matmul: ckpt residency 0
+        let off = op_memory(&op, Decision::DP, 4, 8, false).activations;
+        let on = op_memory(&op, Decision::DP, 4, 8, true).activations;
+        assert!(off > 0.0);
+        assert_eq!(on, 0.0);
+    }
+
+    #[test]
+    fn full_model_dp_memory_matches_closed_form() {
+        let m = build_gpt(&GptDims::uniform("t", 1000, 64, 2, 128, 4));
+        let b = 4;
+        let total: f64 = m
+            .ops
+            .iter()
+            .map(|o| op_memory(o, Decision::DP, b, 8, false).persistent())
+            .sum::<f64>();
+        let expect = m.state_bytes() + b as f64 * m.act_bytes_per_sample();
+        assert!((total - expect).abs() / expect < 1e-9);
+    }
+}

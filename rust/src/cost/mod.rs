@@ -1,0 +1,96 @@
+//! The paper's §3.1 cost model: per-operator memory `M_i(p_i, b)` and time
+//! `T_i(p_i, b)` under the (α, β, γ) communication/computation model, plus
+//! the Profiler that precomputes per-op cost tables for the search engine.
+
+pub mod memory;
+pub mod profiler;
+pub mod time;
+
+pub use memory::{MemoryCost, op_memory};
+pub use profiler::{DecisionCost, OpCostTable, PlanCost, Profiler};
+pub use time::{comm_rounds, op_comm_time, op_compute_time};
+
+/// Per-operator parallel mode decision. The paper's base space is
+/// `{DP, ZDP}`; operator splitting (§3.3) enlarges it to per-slice choices:
+/// an op split into `granularity` slices can hold `zdp_slices` of them in
+/// ZDP mode and the rest in DP mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Decision {
+    /// Slice granularity `g` (0 = no splitting; the paper's figures use 0
+    /// for "off", treated identically to 1 slice).
+    pub granularity: usize,
+    /// Number of slices trained in ZDP mode (sharded states);
+    /// `0 ≤ zdp_slices ≤ max(granularity, 1)`.
+    pub zdp_slices: usize,
+}
+
+impl Decision {
+    /// Plain DP (no sharding, no splitting).
+    pub const DP: Decision = Decision { granularity: 0, zdp_slices: 0 };
+    /// Plain ZDP (fully sharded, no splitting).
+    pub const ZDP: Decision = Decision { granularity: 0, zdp_slices: 1 };
+
+    /// Effective slice count (granularity 0 behaves as a single slice).
+    pub fn slices(&self) -> usize {
+        self.granularity.max(1)
+    }
+
+    /// Fraction of the operator's states that are sharded.
+    pub fn zdp_fraction(&self) -> f64 {
+        self.zdp_slices as f64 / self.slices() as f64
+    }
+
+    pub fn is_pure_dp(&self) -> bool {
+        self.zdp_slices == 0
+    }
+
+    pub fn is_pure_zdp(&self) -> bool {
+        self.zdp_slices == self.slices()
+    }
+
+    /// Fully-ZDP decision at a given granularity.
+    pub fn zdp_at(granularity: usize) -> Decision {
+        Decision { granularity, zdp_slices: granularity.max(1) }
+    }
+
+    /// Fully-DP decision at a given granularity.
+    pub fn dp_at(granularity: usize) -> Decision {
+        Decision { granularity, zdp_slices: 0 }
+    }
+
+    pub fn label(&self) -> String {
+        match (self.is_pure_dp(), self.is_pure_zdp()) {
+            (true, _) if self.granularity <= 1 => "DP".into(),
+            (_, true) if self.granularity <= 1 => "ZDP".into(),
+            (true, _) => format!("DP/g{}", self.granularity),
+            (_, true) => format!("ZDP/g{}", self.granularity),
+            _ => format!("MIX{}:{}/g{}", self.zdp_slices,
+                         self.slices() - self.zdp_slices, self.granularity),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decision_fractions() {
+        assert_eq!(Decision::DP.zdp_fraction(), 0.0);
+        assert_eq!(Decision::ZDP.zdp_fraction(), 1.0);
+        let mixed = Decision { granularity: 4, zdp_slices: 1 };
+        assert_eq!(mixed.zdp_fraction(), 0.25);
+        assert!(!mixed.is_pure_dp() && !mixed.is_pure_zdp());
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(Decision::DP.label(), "DP");
+        assert_eq!(Decision::ZDP.label(), "ZDP");
+        assert_eq!(Decision::zdp_at(4).label(), "ZDP/g4");
+        assert_eq!(
+            Decision { granularity: 4, zdp_slices: 1 }.label(),
+            "MIX1:3/g4"
+        );
+    }
+}

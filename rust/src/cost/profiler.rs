@@ -1,0 +1,327 @@
+//! The Profiler (Figure 2): turns a model description + device information
+//! into per-operator cost tables the Search Engine evaluates millions of
+//! times, and prunes each operator's decision menu to its Pareto frontier.
+//!
+//! Every quantity is split into decision-independent per-sample terms
+//! (activations, workspace, γ_i) and per-decision terms (comm seconds,
+//! launch overhead, resident states, gather transient), so evaluating a
+//! full plan is a handful of fused multiply-adds per operator.
+
+use super::memory::op_memory;
+use super::time::{batch_efficiency, op_comm_time, SPLIT_LAUNCH_OVERHEAD};
+use super::Decision;
+use crate::config::{Cluster, SearchConfig};
+use crate::model::ModelDesc;
+
+/// Cost of one candidate decision for one operator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DecisionCost {
+    pub decision: Decision,
+    /// Communication seconds per iteration (batch-independent).
+    pub comm: f64,
+    /// Slice launch overhead seconds (batch-independent).
+    pub launch: f64,
+    /// Resident model-state bytes on one device.
+    pub states: f64,
+    /// Transient gather bytes while this op executes.
+    pub gather: f64,
+}
+
+impl DecisionCost {
+    /// Batch-independent time contribution.
+    pub fn time_fixed(&self) -> f64 {
+        self.comm + self.launch
+    }
+
+    /// `self` is at least as good as `other` on every axis.
+    fn dominates(&self, other: &DecisionCost) -> bool {
+        self.time_fixed() <= other.time_fixed()
+            && self.states <= other.states
+            && self.gather <= other.gather
+    }
+}
+
+/// Precomputed cost table for one operator.
+#[derive(Debug, Clone)]
+pub struct OpCostTable {
+    pub name: String,
+    /// Pareto-optimal decisions, sorted by ascending `time_fixed` (the
+    /// first entry is the fastest = most DP-ish, the last the smallest).
+    pub options: Vec<DecisionCost>,
+    /// Activation bytes per sample (resident; respects checkpointing).
+    pub act_per_sample: f64,
+    /// Workspace bytes per sample (transient).
+    pub workspace_per_sample: f64,
+    /// γ_i: compute seconds per sample (includes ckpt recompute factor).
+    pub gamma: f64,
+}
+
+impl OpCostTable {
+    pub fn fastest(&self) -> &DecisionCost {
+        &self.options[0]
+    }
+
+    /// Minimum possible state+gather memory over the menu.
+    pub fn min_states(&self) -> f64 {
+        self.options.iter().map(|o| o.states).fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn min_time_fixed(&self) -> f64 {
+        self.fastest().time_fixed()
+    }
+}
+
+/// Evaluated cost of a full execution plan at a batch size.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanCost {
+    /// Per-iteration wall time `Σ T_i` (seconds).
+    pub time: f64,
+    /// Per-device peak memory: `Σ persistent + max transient` (bytes).
+    pub peak_mem: f64,
+}
+
+impl PlanCost {
+    /// The paper's objective: averaged per-sample time `T(p,b)/b`
+    /// (minimizing it maximizes throughput).
+    pub fn per_sample_time(&self, b: usize) -> f64 {
+        self.time / b as f64
+    }
+
+    /// Cluster-wide samples/second at per-device batch `b`.
+    pub fn throughput(&self, b: usize, n_devices: usize) -> f64 {
+        (b * n_devices) as f64 / self.time
+    }
+}
+
+/// The Profiler: per-op cost tables for a (model, cluster, search) triple.
+#[derive(Debug, Clone)]
+pub struct Profiler {
+    pub cluster: Cluster,
+    pub checkpointing: bool,
+    pub tables: Vec<OpCostTable>,
+}
+
+impl Profiler {
+    pub fn new(model: &ModelDesc, cluster: &Cluster,
+               search: &SearchConfig) -> Profiler {
+        let model_owned;
+        let model = if search.paper_granularity {
+            model_owned = model.fuse_paper_granularity();
+            &model_owned
+        } else {
+            model
+        };
+        let ck = search.checkpointing;
+        let n = cluster.n_devices;
+        let tables = model
+            .ops
+            .iter()
+            .map(|op| {
+                // Build the candidate menu.
+                let mut cands: Vec<Decision> = Vec::new();
+                if !op.shardable() {
+                    cands.push(Decision::DP);
+                } else {
+                    for &g in &search.granularities {
+                        // Splitting applies to matmul-bearing ops and to
+                        // embeddings (vocab-dim slicing follows the same
+                        // Figure-4 slice/process/sum semantics: each slice
+                        // holds a vocab range, lookups hit one slice, the
+                        // partial results sum). LayerNorms are too small
+                        // to be worth slicing.
+                        let splittable = op.matmul_dims.is_some()
+                            || op.kind == crate::model::OpKind::Embedding;
+                        if g > 1 && !splittable {
+                            continue;
+                        }
+                        let slices = g.max(1);
+                        for z in 0..=slices {
+                            cands.push(Decision { granularity: g,
+                                                  zdp_slices: z });
+                        }
+                    }
+                    if cands.is_empty() {
+                        cands.push(Decision::DP);
+                        cands.push(Decision::ZDP);
+                    }
+                }
+                let mut options: Vec<DecisionCost> = cands
+                    .into_iter()
+                    .map(|d| {
+                        let mem = op_memory(op, d, 1, n, ck);
+                        DecisionCost {
+                            decision: d,
+                            comm: op_comm_time(op, d, cluster, ck),
+                            launch: (d.slices() - 1) as f64
+                                * SPLIT_LAUNCH_OVERHEAD,
+                            states: mem.states,
+                            gather: mem.gather,
+                        }
+                    })
+                    .collect();
+                // Pareto-prune: drop every dominated decision.
+                options = pareto(options);
+                options.sort_by(|a, b| {
+                    a.time_fixed().partial_cmp(&b.time_fixed()).unwrap()
+                });
+
+                // raw γ_i (seconds per sample at 100% efficiency);
+                // evaluate() divides by batch_efficiency(b)
+                let mut flops = op.flops_per_sample;
+                if ck && op.ckpt_act_bytes_per_sample < op.act_bytes_per_sample
+                {
+                    flops *= 4.0 / 3.0; // recompute
+                }
+                let gamma = flops / cluster.flops;
+                let mem1 = op_memory(op, Decision::DP, 1, n, ck);
+                OpCostTable {
+                    name: op.name.clone(),
+                    options,
+                    act_per_sample: mem1.activations,
+                    workspace_per_sample: mem1.workspace,
+                    gamma,
+                }
+            })
+            .collect();
+        Profiler { cluster: cluster.clone(), checkpointing: ck, tables }
+    }
+
+    pub fn n_ops(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Total decision-space size (product of menu sizes), as a log10.
+    pub fn log10_plan_space(&self) -> f64 {
+        self.tables.iter().map(|t| (t.options.len() as f64).log10()).sum()
+    }
+
+    /// Evaluate a plan given per-op option indices.
+    pub fn evaluate(&self, choice: &[usize], b: usize) -> PlanCost {
+        assert_eq!(choice.len(), self.tables.len());
+        let bf = b as f64;
+        let eff = batch_efficiency(b);
+        let mut time = 0.0;
+        let mut persistent = 0.0;
+        let mut transient_max: f64 = 0.0;
+        for (t, &c) in self.tables.iter().zip(choice) {
+            let opt = &t.options[c];
+            time += opt.time_fixed() + bf * t.gamma / eff;
+            persistent += opt.states + bf * t.act_per_sample;
+            transient_max = transient_max
+                .max(opt.gather + bf * t.workspace_per_sample);
+        }
+        PlanCost { time, peak_mem: persistent + transient_max }
+    }
+
+    /// Evaluate the all-DP plan (option 0 is always the fastest ⇒ for DP it
+    /// must exist in the menu; use explicit search to be safe).
+    pub fn index_of(&self, pred: impl Fn(&Decision) -> bool) -> Vec<usize> {
+        self.tables
+            .iter()
+            .map(|t| {
+                t.options
+                    .iter()
+                    .position(|o| pred(&o.decision))
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+fn pareto(options: Vec<DecisionCost>) -> Vec<DecisionCost> {
+    let mut keep: Vec<DecisionCost> = Vec::new();
+    for o in &options {
+        if options
+            .iter()
+            .any(|p| p != o && p.dominates(o) && !o.dominates(p))
+        {
+            continue;
+        }
+        // also dedupe exact ties
+        if keep.iter().any(|k| {
+            k.time_fixed() == o.time_fixed()
+                && k.states == o.states
+                && k.gather == o.gather
+        }) {
+            continue;
+        }
+        keep.push(*o);
+    }
+    keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{GptDims, build_gpt};
+
+    fn profiler(granularities: Vec<usize>) -> Profiler {
+        let m = build_gpt(&GptDims::uniform("t", 1000, 64, 2, 256, 4));
+        let c = Cluster::rtx_titan(8, 8.0);
+        let s = SearchConfig { granularities, ..Default::default() };
+        Profiler::new(&m, &c, &s)
+    }
+
+    #[test]
+    fn menu_has_dp_and_zdp_extremes() {
+        let p = profiler(vec![0]);
+        for t in &p.tables {
+            assert!(!t.options.is_empty());
+            // fastest option is pure DP (comm 2 rounds)
+            assert!(t.fastest().decision.is_pure_dp());
+        }
+    }
+
+    #[test]
+    fn pareto_drops_dominated() {
+        // With granularities {0, 4}: DP@g4 is dominated by DP@g0 (same
+        // states/gather, more latency) — must be pruned.
+        let p = profiler(vec![0, 4]);
+        for t in &p.tables {
+            for o in &t.options {
+                if o.decision.is_pure_dp() {
+                    assert!(o.decision.granularity <= 1,
+                            "dominated DP@g4 kept in {}", t.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn evaluate_all_dp_matches_components() {
+        let p = profiler(vec![0]);
+        let dp = p.index_of(|d| d.is_pure_dp());
+        let cost = p.evaluate(&dp, 2);
+        assert!(cost.time > 0.0);
+        assert!(cost.peak_mem > 0.0);
+        // doubling batch increases both time and memory
+        let cost4 = p.evaluate(&dp, 4);
+        assert!(cost4.time > cost.time);
+        assert!(cost4.peak_mem > cost.peak_mem);
+    }
+
+    #[test]
+    fn zdp_plan_smaller_but_slower() {
+        let p = profiler(vec![0]);
+        let dp = p.index_of(|d| d.is_pure_dp());
+        let zdp = p.index_of(|d| d.is_pure_zdp());
+        let cd = p.evaluate(&dp, 1);
+        let cz = p.evaluate(&zdp, 1);
+        assert!(cz.time > cd.time, "ZDP must pay more comm");
+        assert!(cz.peak_mem < cd.peak_mem, "ZDP must save memory");
+    }
+
+    #[test]
+    fn throughput_and_per_sample_agree() {
+        let cost = PlanCost { time: 2.0, peak_mem: 0.0 };
+        assert_eq!(cost.per_sample_time(4), 0.5);
+        assert_eq!(cost.throughput(4, 8), 16.0);
+    }
+
+    #[test]
+    fn plan_space_grows_with_granularities() {
+        let small = profiler(vec![0]).log10_plan_space();
+        let big = profiler(vec![0, 2, 4, 8]).log10_plan_space();
+        assert!(big > small);
+    }
+}

@@ -1,0 +1,252 @@
+//! In-process device fabric: the hardware substitute (DESIGN.md §2).
+//!
+//! One OS thread per simulated device. Data really moves between threads
+//! (collectives are numerically checked), while *time* is simulated with a
+//! per-device logical clock and a link model: a message of `B` bytes sent
+//! at sender-time `t` arrives no earlier than `t + α + B·β`, with (α, β)
+//! chosen per link by the [`Topology`] (intra- vs inter-node) — exactly the
+//! Hockney model the paper's cost formulas assume, so measured fabric time
+//! and the analytic model can be compared (they are, in `rust/tests/`).
+
+pub mod topology;
+
+pub use topology::Topology;
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender, channel};
+use std::sync::Arc;
+use std::thread;
+
+/// Bytes per f32 element on the wire.
+pub const WIRE_F32: f64 = 4.0;
+
+/// A message between devices: payload plus the sender's departure time.
+struct Msg {
+    from: usize,
+    tag: u64,
+    data: Vec<f32>,
+    /// Sender logical time at send.
+    depart: f64,
+}
+
+/// One device's handle onto the fabric, owned by its worker thread.
+pub struct Endpoint {
+    pub rank: usize,
+    pub n: usize,
+    topology: Topology,
+    clock: f64,
+    tx: Vec<Sender<Msg>>,
+    rx: Receiver<Msg>,
+    /// Out-of-order receive buffer keyed by (from, tag).
+    pending: HashMap<(usize, u64), (Vec<f32>, f64)>,
+    /// Per-collective tag namespace (see [`Endpoint::next_op_tag`]).
+    op_seq: u64,
+    /// Total payload bytes sent (for bandwidth accounting).
+    pub bytes_sent: u64,
+}
+
+impl Endpoint {
+    /// Current logical time (seconds since iteration start).
+    pub fn now(&self) -> f64 {
+        self.clock
+    }
+
+    /// Advance the local clock by `seconds` of computation.
+    pub fn compute(&mut self, seconds: f64) {
+        debug_assert!(seconds >= 0.0);
+        self.clock += seconds;
+    }
+
+    /// Reserve a fresh tag namespace for one collective operation. All
+    /// ranks call collectives in the same order, so sequence numbers agree.
+    pub fn next_op_tag(&mut self) -> u64 {
+        self.op_seq += 1;
+        self.op_seq << 20
+    }
+
+    /// Send `data` to `to` (non-blocking; the link model is applied on the
+    /// receive side using the departure timestamp).
+    pub fn send(&mut self, to: usize, tag: u64, data: Vec<f32>) {
+        debug_assert!(to != self.rank, "self-send");
+        self.bytes_sent += (data.len() as f64 * WIRE_F32) as u64;
+        let msg = Msg { from: self.rank, tag, data, depart: self.clock };
+        self.tx[to].send(msg).expect("fabric channel closed");
+    }
+
+    /// Blocking receive of the message tagged `tag` from `from`; advances
+    /// the local clock to the arrival time.
+    pub fn recv(&mut self, from: usize, tag: u64) -> Vec<f32> {
+        let (data, depart) = loop {
+            if let Some(hit) = self.pending.remove(&(from, tag)) {
+                break hit;
+            }
+            let m = self.rx.recv().expect("fabric channel closed");
+            // fast path: in SPMD collectives the next message is almost
+            // always the one we're waiting for — skip the pending map
+            if m.from == from && m.tag == tag {
+                break (m.data, m.depart);
+            }
+            self.pending.insert((m.from, m.tag), (m.data, m.depart));
+        };
+        let bytes = data.len() as f64 * WIRE_F32;
+        let (alpha, beta) = self.topology.link(from, self.rank);
+        let arrival = depart + alpha + bytes * beta;
+        self.clock = self.clock.max(arrival);
+        data
+    }
+
+    /// Devices per node in the underlying topology (used by hierarchical
+    /// collectives to form intra-node subgroups).
+    pub fn topology_devices_per_node(&self) -> usize {
+        self.topology.devices_per_node
+    }
+
+    /// Ring neighbors (next/prev rank).
+    pub fn ring_next(&self) -> usize {
+        (self.rank + 1) % self.n
+    }
+
+    pub fn ring_prev(&self) -> usize {
+        (self.rank + self.n - 1) % self.n
+    }
+}
+
+/// Spawn `n` device threads, run `f` on each, and return per-rank results
+/// paired with each device's final logical clock. Panics propagate.
+pub fn run_timed<T, F>(n: usize, topology: Topology, f: F) -> Vec<(T, f64)>
+where
+    T: Send + 'static,
+    F: Fn(&mut Endpoint) -> T + Send + Sync + 'static,
+{
+    assert!(n > 0);
+    let mut to_device: Vec<Sender<Msg>> = Vec::with_capacity(n);
+    let mut rxs: Vec<Option<Receiver<Msg>>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel();
+        to_device.push(tx);
+        rxs.push(Some(rx));
+    }
+    let f = Arc::new(f);
+    let mut handles = Vec::with_capacity(n);
+    for (rank, rx_slot) in rxs.iter_mut().enumerate() {
+        let rx = rx_slot.take().unwrap();
+        let tx = to_device.clone();
+        let topology = topology.clone();
+        let f = f.clone();
+        handles.push(thread::spawn(move || {
+            let mut ep = Endpoint {
+                rank,
+                n,
+                topology,
+                clock: 0.0,
+                tx,
+                rx,
+                pending: HashMap::new(),
+                op_seq: 0,
+                bytes_sent: 0,
+            };
+            let out = f(&mut ep);
+            (out, ep.clock)
+        }));
+    }
+    handles
+        .into_iter()
+        .map(|h| h.join().expect("device thread panicked"))
+        .collect()
+}
+
+/// [`run_timed`] without the clocks.
+pub fn run<T, F>(n: usize, topology: Topology, f: F) -> Vec<T>
+where
+    T: Send + 'static,
+    F: Fn(&mut Endpoint) -> T + Send + Sync + 'static,
+{
+    run_timed(n, topology, f).into_iter().map(|(t, _)| t).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat(n: usize) -> Topology {
+        Topology::flat(n, 1e-6, 1e-9)
+    }
+
+    #[test]
+    fn pingpong_moves_data_and_time() {
+        let out = run_timed(2, flat(2), |ep| {
+            if ep.rank == 0 {
+                ep.send(1, 7, vec![1.0, 2.0, 3.0]);
+                Vec::new()
+            } else {
+                ep.recv(0, 7)
+            }
+        });
+        assert_eq!(out[1].0, vec![1.0, 2.0, 3.0]);
+        // receiver clock advanced by α + 12B·β
+        let expect = 1e-6 + 12.0 * 1e-9;
+        assert!((out[1].1 - expect).abs() < 1e-12, "{}", out[1].1);
+        assert_eq!(out[0].1, 0.0); // sender: async send, no time
+    }
+
+    #[test]
+    fn out_of_order_tags_are_buffered() {
+        let out = run(2, flat(2), |ep| {
+            if ep.rank == 0 {
+                ep.send(1, 1, vec![1.0]);
+                ep.send(1, 2, vec![2.0]);
+                0.0
+            } else {
+                // receive in reverse order
+                let b = ep.recv(0, 2)[0];
+                let a = ep.recv(0, 1)[0];
+                10.0 * a + b
+            }
+        });
+        assert_eq!(out[1], 12.0);
+    }
+
+    #[test]
+    fn compute_advances_clock() {
+        let out = run_timed(1, flat(1), |ep| {
+            ep.compute(0.25);
+            ep.compute(0.25);
+        });
+        assert_eq!(out[0].1, 0.5);
+    }
+
+    #[test]
+    fn receive_waits_for_late_sender() {
+        let out = run_timed(2, flat(2), |ep| {
+            if ep.rank == 0 {
+                ep.compute(1.0); // busy before sending
+                ep.send(1, 3, vec![1.0; 256]);
+            } else {
+                ep.recv(0, 3);
+            }
+        });
+        // receiver idles until 1.0 + link time
+        assert!(out[1].1 >= 1.0);
+    }
+
+    #[test]
+    fn bytes_sent_accounted() {
+        let out = run(2, flat(2), |ep| {
+            if ep.rank == 0 {
+                ep.send(1, 1, vec![0.0; 100]);
+            } else {
+                ep.recv(0, 1);
+            }
+            ep.bytes_sent
+        });
+        assert_eq!(out[0], 400);
+        assert_eq!(out[1], 0);
+    }
+
+    #[test]
+    fn ring_neighbors() {
+        let out = run(4, flat(4), |ep| (ep.ring_next(), ep.ring_prev()));
+        assert_eq!(out[0], (1, 3));
+        assert_eq!(out[3], (0, 2));
+    }
+}

@@ -1,0 +1,108 @@
+//! Link topology: per-pair (α, β) for the fabric's time model.
+//!
+//! Two levels, matching the paper's testbeds: devices within a node share
+//! the fast link (PCIe/NVLink); devices on different nodes pay the
+//! inter-node link (the 100 Gb/s Ethernet of the two-server setup).
+
+use crate::config::Cluster;
+
+/// Two-level cluster topology.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    pub n_devices: usize,
+    pub devices_per_node: usize,
+    pub alpha_intra: f64,
+    pub beta_intra: f64,
+    pub alpha_inter: f64,
+    pub beta_inter: f64,
+}
+
+impl Topology {
+    /// Single-level topology: every pair shares (α, β).
+    pub fn flat(n: usize, alpha: f64, beta: f64) -> Topology {
+        Topology {
+            n_devices: n,
+            devices_per_node: n,
+            alpha_intra: alpha,
+            beta_intra: beta,
+            alpha_inter: alpha,
+            beta_inter: beta,
+        }
+    }
+
+    /// Build from a [`Cluster`] description.
+    pub fn from_cluster(c: &Cluster) -> Topology {
+        Topology {
+            n_devices: c.n_devices,
+            devices_per_node: c.devices_per_node,
+            alpha_intra: c.alpha_intra,
+            beta_intra: c.beta_intra,
+            alpha_inter: c.alpha_inter,
+            beta_inter: c.beta_inter,
+        }
+    }
+
+    /// Node index of a device.
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.devices_per_node
+    }
+
+    /// (α, β) of the link between two devices.
+    pub fn link(&self, from: usize, to: usize) -> (f64, f64) {
+        if self.node_of(from) == self.node_of(to) {
+            (self.alpha_intra, self.beta_intra)
+        } else {
+            (self.alpha_inter, self.beta_inter)
+        }
+    }
+
+    /// Ranks co-located on `node`.
+    pub fn node_members(&self, node: usize) -> Vec<usize> {
+        let lo = node * self.devices_per_node;
+        let hi = ((node + 1) * self.devices_per_node).min(self.n_devices);
+        (lo..hi).collect()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_devices.div_ceil(self.devices_per_node)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_topology_is_uniform() {
+        let t = Topology::flat(4, 1e-6, 1e-9);
+        assert_eq!(t.link(0, 3), (1e-6, 1e-9));
+        assert_eq!(t.n_nodes(), 1);
+    }
+
+    #[test]
+    fn two_level_links() {
+        let t = Topology {
+            n_devices: 16,
+            devices_per_node: 8,
+            alpha_intra: 1e-6,
+            beta_intra: 1e-10,
+            alpha_inter: 1e-5,
+            beta_inter: 1e-8,
+        };
+        assert_eq!(t.link(0, 7), (1e-6, 1e-10)); // same node
+        assert_eq!(t.link(7, 8), (1e-5, 1e-8)); // across nodes
+        assert_eq!(t.node_of(7), 0);
+        assert_eq!(t.node_of(8), 1);
+        assert_eq!(t.n_nodes(), 2);
+        assert_eq!(t.node_members(1), (8..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn from_cluster_copies_links() {
+        let c = Cluster::two_server_a100(16.0);
+        let t = Topology::from_cluster(&c);
+        assert_eq!(t.n_devices, 16);
+        assert_eq!(t.devices_per_node, 8);
+        assert_eq!(t.link(0, 15), (c.alpha_inter, c.beta_inter));
+    }
+}

@@ -1,0 +1,35 @@
+//! # OSDP: Optimal Sharded Data Parallel
+//!
+//! A reproduction of *OSDP: Optimal Sharded Data Parallel for Distributed
+//! Deep Learning* (Jiang et al., IJCAI 2023) as a three-layer
+//! rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's system: per-operator DP/ZDP mode
+//!   search under a device memory limit ([`planner`]), the (α,β,γ) cost
+//!   model ([`cost`]), operator splitting, baseline parallel strategies
+//!   ([`parallel`]), a simulated multi-device fabric with real byte-moving
+//!   ring collectives ([`fabric`], [`collectives`]), a discrete-event
+//!   timeline simulator ([`sim`]), and a real training runtime executing
+//!   AOT-compiled JAX/Pallas artifacts over PJRT ([`runtime`], [`train`]).
+//! * **L2** — `python/compile/model.py`: GPT fwd/bwd/Adam in JAX.
+//! * **L1** — `python/compile/kernels/`: Pallas kernels (operator-splitting
+//!   matmul, tiled attention, layernorm).
+//!
+//! Python runs once at `make artifacts`; the binary is self-contained after.
+
+pub mod bench;
+pub mod cli;
+pub mod collectives;
+pub mod config;
+pub mod cost;
+pub mod fabric;
+pub mod figures;
+pub mod memory;
+pub mod metrics;
+pub mod model;
+pub mod parallel;
+pub mod planner;
+pub mod runtime;
+pub mod sim;
+pub mod train;
+pub mod util;

@@ -1,0 +1,291 @@
+//! OSDP command-line interface — the L3 leader entrypoint.
+//!
+//! ```text
+//! osdp zoo                              Table 1 (model statistics)
+//! osdp gantt                            Figure 1 (DP vs ZDP op gantt)
+//! osdp plan --setting 48L/1024H ...     search an execution plan
+//! osdp fig5|fig6|fig8|fig9 [--mem 8]    regenerate a figure
+//! osdp fig7                             splitting sweep table
+//! osdp search-time [--mem 8]            §3.2 search-cost table
+//! osdp headline [--mem 8]               paper headline speedups
+//! osdp train --model tiny --workers 4   real distributed training
+//! osdp calibrate                        measure device FLOP/s via PJRT
+//! ```
+
+use osdp::cli::Args;
+use osdp::config::{Cluster, SearchConfig};
+use osdp::cost::Profiler;
+use osdp::figures::{self, Quality};
+use osdp::metrics::{speedup, speedup_vs_best};
+use osdp::model::zoo;
+use osdp::planner::Scheduler;
+use osdp::train::{ShardMode, TrainConfig, train};
+
+fn main() {
+    let args = Args::from_env();
+    let quality =
+        if args.flag("full") { Quality::Full } else { Quality::Quick };
+    match args.command.as_str() {
+        "zoo" => print!("{}", figures::table1()),
+        "gantt" => print!("{}", figures::fig1_gantt()),
+        "fig5" => {
+            let fig = figures::fig5(args.f64_or("mem", 8.0), quality);
+            print!("{}", fig.render());
+            maybe_csv(&args, &fig.to_csv());
+        }
+        "fig6" => {
+            let fig = figures::fig6(args.f64_or("mem", 16.0), quality);
+            print!("{}", fig.render());
+            maybe_csv(&args, &fig.to_csv());
+        }
+        "fig7" => {
+            let (t, _) = figures::fig7();
+            println!("== Figure 7: operator splitting sweep (ZDP matmul, \
+                      b=8, N=8) ==");
+            print!("{}", t.render());
+        }
+        "fig8" => {
+            let fig = figures::fig8(args.f64_or("mem", 8.0), quality);
+            print!("{}", fig.render());
+            if let Some(s) = speedup(&fig, "OSDP", "OSDP-base") {
+                println!("splitting speedup: max {:.0}%, avg {:.0}% \
+                          (paper: 3%-92%)",
+                         (s.max - 1.0) * 100.0, (s.avg - 1.0) * 100.0);
+            }
+            maybe_csv(&args, &fig.to_csv());
+        }
+        "fig9" => {
+            let fig = figures::fig9(args.f64_or("mem", 8.0), quality);
+            print!("{}", fig.render());
+            if let Some(s) = speedup(&fig, "OSDP", "FSDP") {
+                println!("OSDP vs FSDP under checkpointing: max {:.1}%, \
+                          avg {:.1}% (paper: max 108.3%, avg 52.9%)",
+                         (s.max - 1.0) * 100.0, (s.avg - 1.0) * 100.0);
+            }
+            maybe_csv(&args, &fig.to_csv());
+        }
+        "search-time" => {
+            let t = figures::search_times(args.f64_or("mem", 8.0), quality);
+            println!("== Search-engine cost per zoo setting (paper: \
+                      9-307 s) ==");
+            print!("{}", t.render());
+        }
+        "headline" => headline(&args, quality),
+        "plan" => plan(&args),
+        "train" => run_train(&args),
+        "calibrate" => calibrate(&args),
+        "" | "help" | "--help" => usage(),
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            usage();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn usage() {
+    let doc = "osdp — Optimal Sharded Data Parallel (IJCAI 2023 reproduction)
+
+commands:
+  zoo                                Table 1 model statistics
+  gantt                              Figure 1 DP-vs-ZDP gantt chart
+  plan    --setting 48L/1024H [--devices 8] [--mem 8] [--g 0,4]
+          [--ckpt] [--batch-cap 64] [--fine]
+  fig5    [--mem 8] [--full] [--csv out.csv]
+  fig6    [--mem 16] [--full] [--csv out.csv]
+  fig7
+  fig8    [--mem 8] [--full]
+  fig9    [--mem 8] [--full]
+  search-time [--mem 8]
+  headline [--mem 8] [--full]        paper headline speedup summary
+  train   [--model tiny|e2e] [--workers 4] [--steps 20] [--mode dp|zdp]
+          [--seed 7] [--artifacts DIR] [--log 5]
+  calibrate [--artifacts DIR]        measure device FLOP/s";
+    println!("{doc}");
+}
+
+fn maybe_csv(args: &Args, csv: &str) {
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, csv).expect("writing csv");
+        eprintln!("wrote {path}");
+    }
+}
+
+fn plan(args: &Args) {
+    let setting = args.get_or("setting", "48L/1024H");
+    let entry = zoo()
+        .into_iter()
+        .find(|e| e.setting == setting)
+        .unwrap_or_else(|| {
+            eprintln!("unknown setting '{setting}'; available:");
+            for e in zoo() {
+                eprintln!("  {} ({})", e.setting, e.family.label());
+            }
+            std::process::exit(2);
+        });
+    let cluster = Cluster::rtx_titan(args.usize_or("devices", 8),
+                                     args.f64_or("mem", 8.0));
+    let search = SearchConfig {
+        max_batch: args.usize_or("batch-cap", 64),
+        granularities: args.usize_list_or("g", &[0, 4]),
+        checkpointing: args.flag("ckpt"),
+        paper_granularity: !args.flag("fine"),
+    };
+    println!(
+        "model {} ({}): {:.2}B params, {} ops ({} fine)",
+        entry.model.name,
+        entry.family.label(),
+        entry.model.param_count() / 1e9,
+        entry.model.fuse_paper_granularity().n_ops(),
+        entry.model.n_ops(),
+    );
+    let profiler = Profiler::new(&entry.model, &cluster, &search);
+    println!(
+        "plan space: 10^{:.1} plans over {} ops; limit {}",
+        profiler.log10_plan_space(),
+        profiler.n_ops(),
+        osdp::util::fmt_bytes(cluster.mem_limit),
+    );
+    let t0 = std::time::Instant::now();
+    match Scheduler::new(&profiler, cluster.mem_limit, search.max_batch).run()
+    {
+        None => println!("NO FEASIBLE PLAN (even all-ZDP at b=1 exceeds the \
+                          limit)"),
+        Some(res) => {
+            let c = &res.candidates[res.best];
+            println!(
+                "searched {} batch sizes, {} nodes, {:.2}s",
+                res.candidates.len(),
+                res.total_nodes,
+                t0.elapsed().as_secs_f64()
+            );
+            println!("best plan: {}", c.plan.describe(&profiler));
+            println!("  memory: {}",
+                     figures::explain_plan(&profiler, &c.plan.choice,
+                                           c.plan.batch));
+            println!(
+                "  throughput {:.1} samples/s across {} devices",
+                c.throughput, cluster.n_devices
+            );
+            for cand in &res.candidates {
+                println!(
+                    "    b={:<3} -> {:>8.1} samples/s (peak {})",
+                    cand.plan.batch,
+                    cand.throughput,
+                    osdp::util::fmt_bytes(cand.plan.cost.peak_mem)
+                );
+            }
+        }
+    }
+}
+
+fn headline(args: &Args, quality: Quality) {
+    let mem = args.f64_or("mem", 8.0);
+    println!("running Figure 5 ({mem:.0}G) ...");
+    let f5 = figures::fig5(mem, quality);
+    print!("{}", f5.render());
+    let pct = |x: f64| (x - 1.0) * 100.0;
+    if let Some(s) = speedup(&f5, "OSDP", "FSDP") {
+        println!("OSDP vs FSDP: max {:.0}%, avg {:.0}% (paper N&D: max 23%, \
+                  avg 22%)", pct(s.max), pct(s.avg));
+    }
+    if let Some(s) = speedup_vs_best(&f5, "OSDP",
+                                     &["OSDP-base", "3D", "3D+OSDP"]) {
+        println!("OSDP vs best pure baseline: max {:.0}%, avg {:.0}% \
+                  (paper: up to 174% on N&D)", pct(s.max), pct(s.avg));
+    }
+    if let Some(s) = speedup(&f5, "3D+OSDP", "3D") {
+        println!("3D+OSDP vs 3D: max {:.0}%, avg {:.0}% (paper: max 73%, \
+                  avg 31%)", pct(s.max), pct(s.avg));
+    }
+    if let Some(s) = speedup_vs_best(&f5, "3D+OSDP", &[]) {
+        println!("3D+OSDP vs all others: max {:.0}%, avg {:.0}% (paper: \
+                  max 184%, avg 38%; headline 2.84x)", pct(s.max), pct(s.avg));
+    }
+}
+
+fn run_train(args: &Args) {
+    let artifacts = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(osdp::runtime::default_artifact_dir);
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("no artifacts at {artifacts:?}; run `make artifacts`");
+        std::process::exit(1);
+    }
+    let mode = match args.get_or("mode", "zdp") {
+        "dp" => ShardMode::Dp,
+        "zdp" => ShardMode::Zdp,
+        other => {
+            eprintln!("--mode must be dp or zdp, got '{other}'");
+            std::process::exit(2);
+        }
+    };
+    let workers = args.usize_or("workers", 4);
+    let cluster = Cluster::rtx_titan(workers, args.f64_or("mem", 8.0));
+    let cfg = TrainConfig {
+        model: args.get_or("model", "tiny").to_string(),
+        n_workers: workers,
+        steps: args.usize_or("steps", 20),
+        mode,
+        seed: args.usize_or("seed", 7) as i32,
+        topology: osdp::fabric::Topology::from_cluster(&cluster),
+        mem_limit: cluster.mem_limit,
+        log_every: args.usize_or("log", 5),
+        device_flops: cluster.flops,
+        reshard_after_forward: !args.flag("no-reshard"),
+    };
+    println!(
+        "training {} on {} workers ({:?}), {} steps ...",
+        cfg.model, cfg.n_workers, cfg.mode, cfg.steps
+    );
+    match train(artifacts, cfg) {
+        Err(e) => {
+            eprintln!("training failed: {e:?}");
+            std::process::exit(1);
+        }
+        Ok(rep) => {
+            println!(
+                "loss {:.4} -> {:.4} over {} steps",
+                rep.first_loss(),
+                rep.last_loss(),
+                rep.steps.len()
+            );
+            println!(
+                "wall {:.1}s | simulated {:.3}s | {} sent/worker | peak {}",
+                rep.wall_seconds,
+                rep.sim_seconds,
+                osdp::util::fmt_bytes(rep.bytes_sent_per_worker as f64),
+                osdp::util::fmt_bytes(rep.peak_mem),
+            );
+        }
+    }
+}
+
+fn calibrate(args: &Args) {
+    let artifacts = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(osdp::runtime::default_artifact_dir);
+    let mut rt = match osdp::runtime::Runtime::open(&artifacts) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("open runtime: {e:?} (run `make artifacts`)");
+            std::process::exit(1);
+        }
+    };
+    let x = vec![1.0f32; 512 * 512];
+    let xt = || osdp::runtime::HostTensor::f32m(&x, 512, 512);
+    // warmup (compiles)
+    rt.execute("calib_matmul.hlo.txt", &[xt(), xt()]).unwrap();
+    let iters = 20;
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        rt.execute("calib_matmul.hlo.txt", &[xt(), xt()]).unwrap();
+    }
+    let secs = t0.elapsed().as_secs_f64() / iters as f64;
+    let flops = 2.0 * 512f64.powi(3) / secs;
+    println!("matmul 512^3: {:.3} ms -> {:.2} GFLOP/s", secs * 1e3,
+             flops / 1e9);
+    println!("suggested config: [cluster] flops = {:.3e}", flops);
+}

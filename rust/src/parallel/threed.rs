@@ -1,0 +1,328 @@
+//! 3D parallelism (DeepSpeed-style DP × TP × PP composition) and 3D+OSDP
+//! (the paper's hybrid: OSDP replaces the DP dimension).
+//!
+//! For every factorization `dp·tp·pp = N` the estimator composes the three
+//! axes the way the individual baselines do:
+//!
+//! * **PP**: layers split into `pp` flop-balanced stages; GPipe microbatch
+//!   schedule with its `(m + pp − 1)` bubble;
+//! * **TP** within a stage: states and matmul compute divide by `tp`; each
+//!   block pays Megatron's four activation all-reduces per microbatch over
+//!   the `tp` group;
+//! * **DP** across replicas: gradient all-reduce of the per-device shard
+//!   (`stage/tp`) — or, for 3D+OSDP, the OSDP search engine plans per-op
+//!   DP/ZDP modes *within the dp group* and contributes its comm time and
+//!   sharded memory instead.
+//!
+//! The best feasible (dp, tp, pp, m) is reported ("we tune the combinations
+//! of parallel strategies for hybrid parallelism and report the one with
+//! the best performance", §4.1).
+
+use super::pp::assign_stages;
+use super::{Estimate, Strategy};
+use crate::config::{Cluster, SearchConfig};
+use crate::cost::Profiler;
+use crate::model::{ModelDesc, OpKind};
+use crate::planner::dfs;
+
+pub struct ThreeD;
+pub struct ThreeDOsdp;
+
+/// Factorizations dp·tp·pp = n.
+pub fn factorizations(n: usize) -> Vec<(usize, usize, usize)> {
+    let mut out = Vec::new();
+    for dp in 1..=n {
+        if n % dp != 0 {
+            continue;
+        }
+        let rest = n / dp;
+        for tp in 1..=rest {
+            if rest % tp != 0 {
+                continue;
+            }
+            out.push((dp, tp, rest / tp));
+        }
+    }
+    out
+}
+
+struct StageAgg {
+    states: f64,
+    act_per_sample: f64,
+    flops_per_sample: f64,
+    param_bytes: f64,
+    layers: usize,
+    op_indices: Vec<usize>,
+}
+
+fn aggregate(model: &ModelDesc, stages: &[Vec<usize>]) -> Vec<StageAgg> {
+    stages
+        .iter()
+        .map(|ops| {
+            let mut layers = std::collections::BTreeSet::new();
+            let mut agg = StageAgg {
+                states: 0.0,
+                act_per_sample: 0.0,
+                flops_per_sample: 0.0,
+                param_bytes: 0.0,
+                layers: 0,
+                op_indices: ops.clone(),
+            };
+            for &i in ops {
+                let op = &model.ops[i];
+                agg.states += op.state_bytes();
+                agg.act_per_sample += op.act_bytes_per_sample;
+                agg.flops_per_sample += op.flops_per_sample;
+                agg.param_bytes += op.param_bytes();
+                if let Some(l) = op.layer {
+                    layers.insert(l);
+                }
+            }
+            agg.layers = layers.len().max(1);
+            agg
+        })
+        .collect()
+}
+
+/// Estimate one (dp, tp, pp) composition; `use_osdp` swaps the DP gradient
+/// sync for an OSDP plan over the dp group.
+fn compose(model: &ModelDesc, cluster: &Cluster, search: &SearchConfig,
+           dp: usize, tp: usize, pp: usize, use_osdp: bool)
+           -> Option<Estimate> {
+    let n_stages = pp;
+    let stages = if n_stages == 1 {
+        vec![(0..model.ops.len()).collect::<Vec<_>>()]
+    } else {
+        assign_stages(model, n_stages)?
+    };
+    let aggs = aggregate(model, &stages);
+    let (alpha, beta) = cluster.ring_link();
+    let tpf = tp as f64;
+    let dpf = dp as f64;
+
+    // bottleneck stage: compute and memory
+    let hot = aggs
+        .iter()
+        .max_by(|a, b| {
+            a.flops_per_sample.partial_cmp(&b.flops_per_sample).unwrap()
+        })
+        .unwrap();
+    let fat = aggs
+        .iter()
+        .max_by(|a, b| a.states.partial_cmp(&b.states).unwrap())
+        .unwrap();
+
+    // TP activation sync per sample in the hot stage (4 all-reduces per
+    // block over the tp group)
+    let tp_sync_per_sample = if tp > 1 {
+        let bytes = (model.seq * model.hidden) as f64 * crate::model::F32;
+        let t_ar = 2.0 * (tpf - 1.0) * (alpha + bytes * beta / tpf);
+        4.0 * hot.layers as f64 * t_ar
+    } else {
+        0.0
+    };
+
+    // OSDP sub-model of the fat stage with TP-sharded parameters
+    let sub_profiler = if use_osdp && dp > 1 {
+        let mut sub = ModelDesc {
+            name: format!("{}-stage", model.name),
+            ops: fat.op_indices.iter().map(|&i| {
+                let mut op = model.ops[i].clone();
+                if tp > 1 && op.kind != OpKind::LayerNorm {
+                    op.params /= tpf;
+                    if let Some((a, b)) = op.matmul_dims {
+                        op.matmul_dims = Some((a, (b / tp).max(1)));
+                    }
+                }
+                op
+            }).collect(),
+            seq: model.seq,
+            layers: fat.layers,
+            hidden: model.hidden,
+        };
+        // plan at the paper's coarse granularity: fast + faithful
+        sub = sub.fuse_paper_granularity();
+        let sub_cluster = Cluster { n_devices: dp, ..cluster.clone() };
+        Some(Profiler::new(&sub, &sub_cluster, &SearchConfig {
+            paper_granularity: false, // already fused above
+            ..search.clone()
+        }))
+    } else {
+        None
+    };
+
+    let mut best: Option<Estimate> = None;
+    // pp == 1 degenerates to DP×TP: the replica runs its whole batch at
+    // once (no pipeline, no microbatching penalty)
+    let mb_options: &[usize] =
+        if pp == 1 { &[usize::MAX] } else { &[1, 2, 4, 8] };
+    for &mb_opt in mb_options {
+    for m in 1..=search.max_batch {
+        // pp==1: m is the per-replica batch, one "microbatch" of size m
+        let (mb, m) = if mb_opt == usize::MAX { (m, 1) } else { (mb_opt, m) };
+        let eff = crate::cost::time::batch_efficiency(mb);
+        let mf = m as f64;
+        // per-microbatch stage time at microbatch size mb
+        let stage_t = mb as f64 * hot.flops_per_sample
+            / (tpf * cluster.flops * eff)
+            + mb as f64 * tp_sync_per_sample;
+        let boundary = if pp > 1 {
+            alpha + (model.seq * model.hidden) as f64 * crate::model::F32
+                * beta
+        } else {
+            0.0
+        };
+        let pipe = (mf + pp as f64 - 1.0) * (stage_t + 2.0 * boundary);
+
+        let samples = m * mb;
+        // DP dimension: plain grad all-reduce or OSDP plan
+        let (sync, peak) = match &sub_profiler {
+            Some(p) => {
+                match dfs::search(p, cluster.mem_limit, samples) {
+                    None => break, // no feasible plan at this m
+                    Some((choice, cost, _)) => {
+                        let fixed: f64 = p
+                            .tables
+                            .iter()
+                            .zip(&choice)
+                            .map(|(t, &c)| t.options[c].time_fixed())
+                            .sum();
+                        (fixed, cost.peak_mem)
+                    }
+                }
+            }
+            None => {
+                let shard_params = fat.param_bytes / tpf;
+                let sync = if dp > 1 {
+                    2.0 * (dpf - 1.0) * (alpha + shard_params * beta / dpf)
+                } else {
+                    0.0
+                };
+                let peak = fat.states / tpf
+                    + samples as f64 * fat.act_per_sample;
+                (sync, peak)
+            }
+        };
+        if peak > cluster.mem_limit {
+            break;
+        }
+        let iter = pipe + sync;
+        let global = dp * samples;
+        let throughput = global as f64 / iter;
+        if best.as_ref().map(|e| throughput > e.throughput).unwrap_or(true) {
+            best = Some(Estimate {
+                strategy: if use_osdp { "3D+OSDP" } else { "3D" }.into(),
+                feasible: true,
+                reason: None,
+                global_batch: global,
+                iter_time: iter,
+                throughput,
+                peak_mem: peak,
+                detail: format!("dp={dp} tp={tp} pp={pp} m={m}x{mb}"),
+            });
+        }
+    }
+    }
+    best
+}
+
+fn best_composition(model: &ModelDesc, cluster: &Cluster,
+                    search: &SearchConfig, use_osdp: bool) -> Estimate {
+    let name = if use_osdp { "3D+OSDP" } else { "3D" };
+    let mut best: Option<Estimate> = None;
+    for (dp, tp, pp) in factorizations(cluster.n_devices) {
+        if pp > model.layers {
+            continue;
+        }
+        if let Some(e) = compose(model, cluster, search, dp, tp, pp, use_osdp)
+        {
+            if best.as_ref().map(|b| e.throughput > b.throughput)
+                .unwrap_or(true)
+            {
+                best = Some(e);
+            }
+        }
+    }
+    best.unwrap_or_else(|| Estimate::infeasible(name, "OOM"))
+}
+
+impl Strategy for ThreeD {
+    fn name(&self) -> &'static str {
+        "3D"
+    }
+
+    fn estimate(&self, model: &ModelDesc, cluster: &Cluster,
+                search: &SearchConfig) -> Estimate {
+        best_composition(model, cluster, search, false)
+    }
+}
+
+impl Strategy for ThreeDOsdp {
+    fn name(&self) -> &'static str {
+        "3D+OSDP"
+    }
+
+    fn estimate(&self, model: &ModelDesc, cluster: &Cluster,
+                search: &SearchConfig) -> Estimate {
+        best_composition(model, cluster, search, true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{GptDims, build_gpt};
+
+    #[test]
+    fn factorizations_multiply_to_n() {
+        for n in [1usize, 4, 8, 16] {
+            let fs = factorizations(n);
+            assert!(!fs.is_empty());
+            for (dp, tp, pp) in fs {
+                assert_eq!(dp * tp * pp, n);
+            }
+        }
+        assert_eq!(factorizations(8).len(), 10); // 3 exps of 2 -> C(5,2)=10
+    }
+
+    #[test]
+    fn three_d_feasible_on_tight_memory() {
+        let m = build_gpt(&GptDims::uniform("t", 5000, 128, 8, 384, 4));
+        // limit below DP needs but fine for sharded hybrid
+        let c = Cluster { mem_limit: m.state_bytes() * 0.3,
+                          ..Cluster::rtx_titan(8, 8.0) };
+        let s = SearchConfig { max_batch: 16, ..Default::default() };
+        let e = ThreeD.estimate(&m, &c, &s);
+        assert!(e.feasible, "{:?}", e.reason);
+        assert!(e.peak_mem <= c.mem_limit);
+        assert!(e.detail.contains("dp="));
+    }
+
+    #[test]
+    fn osdp_variant_at_least_as_good() {
+        let m = build_gpt(&GptDims::uniform("t", 5000, 128, 8, 384, 4));
+        let c = Cluster { mem_limit: m.state_bytes() * 0.5,
+                          ..Cluster::rtx_titan(8, 8.0) };
+        let s = SearchConfig { max_batch: 8, granularities: vec![0, 4],
+                               ..Default::default() };
+        let plain = ThreeD.estimate(&m, &c, &s);
+        let osdp = ThreeDOsdp.estimate(&m, &c, &s);
+        assert!(osdp.feasible);
+        // OSDP's plan space includes the plain DP sync as one point
+        assert!(osdp.throughput >= plain.throughput * 0.98,
+                "3D+OSDP {} vs 3D {}", osdp.throughput, plain.throughput);
+    }
+
+    #[test]
+    fn pp_degree_respects_layer_count() {
+        let m = build_gpt(&GptDims::uniform("ws", 5000, 128, 2, 1024, 8));
+        let c = Cluster::rtx_titan(8, 16.0);
+        let s = SearchConfig { max_batch: 8, ..Default::default() };
+        let e = ThreeD.estimate(&m, &c, &s);
+        assert!(e.feasible);
+        // pp can't exceed 2 layers
+        let pp: usize = e.detail.split("pp=").nth(1).unwrap()
+            .split(' ').next().unwrap().parse().unwrap();
+        assert!(pp <= 2);
+    }
+}

@@ -1,0 +1,119 @@
+//! Megatron-LM-style tensor parallelism baseline.
+//!
+//! Every matmul's weight is partitioned N ways (column- then row-parallel
+//! pairs), so model states shrink to 1/N per device while each transformer
+//! block pays two all-reduces of the full activation in forward and two in
+//! backward (Megatron's `f`/`g` operators). Activations stay full-size on
+//! every device; compute divides by N.
+
+use super::{Estimate, Strategy};
+use crate::config::{Cluster, SearchConfig};
+use crate::model::{ModelDesc, OpKind};
+
+pub struct MegatronTp;
+
+impl Strategy for MegatronTp {
+    fn name(&self) -> &'static str {
+        "TP"
+    }
+
+    fn estimate(&self, model: &ModelDesc, cluster: &Cluster,
+                search: &SearchConfig) -> Estimate {
+        let n = cluster.n_devices as f64;
+        let (alpha, beta) = cluster.ring_link();
+
+        let states = model.state_bytes() / n;
+        let act_per_sample: f64 = model.act_bytes_per_sample(); // replicated
+        let gamma_raw = model.flops_per_sample() / cluster.flops / n;
+
+        // per-layer sync: 2 all-reduces fwd + 2 bwd over (seq·hidden·b)
+        // bytes; all-reduce = 2(N-1)/N · bytes·β + 2(N-1)·α per op
+        let act_row = |hidden: usize| {
+            (model.seq * hidden) as f64 * crate::model::F32
+        };
+        let mut per_sample_sync = 0.0;
+        for op in &model.ops {
+            if op.kind == OpKind::Attention {
+                // one block ≈ attention + mlp: 4 all-reduces total, use the
+                // block's hidden size
+                let h = op.act_bytes_per_sample
+                    / (model.seq as f64 * crate::model::F32);
+                let h = h.min(model.hidden as f64) as usize;
+                let bytes = act_row(h.max(1));
+                let t_ar = 2.0 * (n - 1.0) * (alpha + bytes * beta / n);
+                per_sample_sync += 4.0 * t_ar;
+            }
+        }
+
+        let mut best: Option<Estimate> = None;
+        for b in 1..=search.max_batch {
+            let bf = b as f64;
+            let peak = states + bf * act_per_sample;
+            if peak > cluster.mem_limit {
+                break;
+            }
+            let eff = crate::cost::time::batch_efficiency(b);
+            let iter = bf * (gamma_raw / eff + per_sample_sync);
+            let throughput = bf / iter;
+            if best.as_ref().map(|e| throughput > e.throughput).unwrap_or(true)
+            {
+                best = Some(Estimate {
+                    strategy: "TP".into(),
+                    feasible: true,
+                    reason: None,
+                    global_batch: b,
+                    iter_time: iter,
+                    throughput,
+                    peak_mem: peak,
+                    detail: format!("{}-way tensor parallel, b={b}",
+                                    cluster.n_devices),
+                });
+            }
+        }
+        best.unwrap_or_else(|| Estimate::infeasible("TP", "OOM"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{GptDims, build_gpt};
+    use crate::parallel::Ddp;
+
+    fn model() -> ModelDesc {
+        build_gpt(&GptDims::uniform("t", 5000, 128, 4, 384, 4))
+    }
+
+    #[test]
+    fn tp_states_shrink_by_n() {
+        let m = model();
+        let c = Cluster::rtx_titan(8, 64.0);
+        let s = SearchConfig { max_batch: 1, ..Default::default() };
+        let e = MegatronTp.estimate(&m, &c, &s);
+        assert!(e.feasible);
+        let expect = m.state_bytes() / 8.0 + m.act_bytes_per_sample();
+        assert!((e.peak_mem - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn tp_slower_than_dp_when_memory_free() {
+        // frequent activation all-reduces make TP lose without memory
+        // pressure — the paper's motivation for not using TP alone
+        let m = model();
+        let c = Cluster::rtx_titan(8, 1024.0);
+        let s = SearchConfig { max_batch: 16, ..Default::default() };
+        let tp = MegatronTp.estimate(&m, &c, &s);
+        let dp = Ddp.estimate(&m, &c, &s);
+        assert!(tp.throughput < dp.throughput);
+    }
+
+    #[test]
+    fn tp_fits_where_dp_cannot() {
+        let m = model();
+        let c = Cluster { mem_limit: m.state_bytes() * 0.4,
+                          ..Cluster::rtx_titan(8, 8.0) };
+        let s = SearchConfig { max_batch: 4, ..Default::default() };
+        assert!(!Ddp.estimate(&m, &c, &s).feasible);
+        assert!(MegatronTp.estimate(&m, &c, &s).feasible);
+    }
+}

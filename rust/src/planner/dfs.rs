@@ -1,0 +1,381 @@
+//! Depth-first search over per-operator decisions — the paper's Algorithm 1
+//! inner loop ("Traverse execution plans via Depth First Search") with its
+//! two prunings:
+//!
+//! 1. *memory pruning*: "if the current memory usage exceeds memory limit";
+//! 2. *time pruning*: "or the current time cost exceeds the best plan so
+//!    far, we will prune the searching immediately".
+//!
+//! We strengthen both with admissible suffix bounds (the minimum possible
+//! time / memory any completion of the prefix can reach) and a
+//! fast-completion rule (if the time-optimal completion of the suffix is
+//! memory-feasible, take it — no descent needed). Both preserve exactness:
+//! the result equals brute-force enumeration (proven against
+//! [`super::exhaustive`] in tests).
+
+use crate::cost::{PlanCost, Profiler};
+
+/// Search diagnostics.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DfsStats {
+    /// Tree nodes expanded.
+    pub nodes: u64,
+    /// Branches cut by the memory bound.
+    pub pruned_mem: u64,
+    /// Branches cut by the incumbent-time bound.
+    pub pruned_time: u64,
+    /// Subtrees closed by fast completion.
+    pub fast_completions: u64,
+    /// True when the search ran to completion (result is provably optimal);
+    /// false when the node budget expired first (result is the best plan
+    /// found so far, never worse than the greedy seed).
+    pub complete: bool,
+}
+
+/// Node budget for one search. The paper reports 9–307 s per search; the
+/// budget keeps the batch-size sweep bounded on the biggest zoo models
+/// while leaving small/medium instances provably exact (see tests vs
+/// [`super::exhaustive`]). Anytime behavior: the greedy seed guarantees a
+/// feasible incumbent before descent begins.
+pub const DEFAULT_NODE_BUDGET: u64 = 2_000_000;
+
+/// One option's costs, flattened into search order with the transient
+/// (gather + b·workspace) precomputed — the DFS inner loop touches only
+/// this contiguous structure (perf pass: EXPERIMENTS.md §Perf).
+#[derive(Clone, Copy)]
+struct FlatOpt {
+    time_fixed: f64,
+    states: f64,
+    transient: f64,
+}
+
+struct Ctx<'a> {
+    #[allow(dead_code)] // kept for debugging/extension hooks
+    profiler: &'a Profiler,
+    /// op evaluation order (largest params first), as profiler indices
+    order: Vec<usize>,
+    /// per ordered position: the option menu, flattened
+    flat: Vec<Vec<FlatOpt>>,
+    mem_limit: f64,
+    #[allow(dead_code)]
+    b: f64,
+    // per ordered position i: min over options of time_fixed / states /
+    // transient for ops at positions >= i
+    suffix_min_time: Vec<f64>,
+    suffix_min_states: Vec<f64>,
+    /// max over remaining ops of their minimum transient (admissible lower
+    /// bound on the final transient max)
+    suffix_min_trans: Vec<f64>,
+    // fast-completion (option 0 = fastest) suffix sums
+    suffix_opt0_states: Vec<f64>,
+    suffix_opt0_trans: Vec<f64>,
+    // decision-independent totals
+    base_time: f64,
+    base_act: f64,
+    // incumbent
+    best_time: f64,
+    best_choice: Option<Vec<usize>>,
+    stats: DfsStats,
+    budget: u64,
+}
+
+/// Search with the default node budget (see [`DEFAULT_NODE_BUDGET`]):
+/// minimal `Σ T_i` plan whose peak memory fits `mem_limit` at per-device
+/// batch `b`. Returns `None` when nothing fits.
+pub fn search(profiler: &Profiler, mem_limit: f64, b: usize)
+              -> Option<(Vec<usize>, PlanCost, DfsStats)> {
+    search_with_budget(profiler, mem_limit, b, DEFAULT_NODE_BUDGET)
+}
+
+/// [`search`] with an explicit node budget (`u64::MAX` = provably exact).
+pub fn search_with_budget(profiler: &Profiler, mem_limit: f64, b: usize,
+                          budget: u64)
+                          -> Option<(Vec<usize>, PlanCost, DfsStats)> {
+    let n = profiler.n_ops();
+    let bf = b as f64;
+
+    // Seed the incumbent with the greedy plan: a feasible solution before
+    // descent makes the time-pruning bound bite from node one and gives the
+    // budget-expired case a quality floor.
+    let seed = super::greedy::search(profiler, mem_limit, b);
+
+    // Visit ops with the largest parameter mass first: their decisions move
+    // the most memory/time, so bounds tighten early.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&x, &y| {
+        let sx = profiler.tables[x].fastest().states;
+        let sy = profiler.tables[y].fastest().states;
+        sy.partial_cmp(&sx).unwrap()
+    });
+
+    let mut suffix_min_time = vec![0.0; n + 1];
+    let mut suffix_min_states = vec![0.0; n + 1];
+    let mut suffix_min_trans = vec![0.0f64; n + 1];
+    let mut suffix_opt0_states = vec![0.0; n + 1];
+    let mut suffix_opt0_trans = vec![0.0f64; n + 1];
+    for i in (0..n).rev() {
+        let t = &profiler.tables[order[i]];
+        let min_time = t.min_time_fixed();
+        let min_states = t.min_states();
+        let min_trans = t
+            .options
+            .iter()
+            .map(|o| o.gather)
+            .fold(f64::INFINITY, f64::min)
+            + bf * t.workspace_per_sample;
+        suffix_min_time[i] = suffix_min_time[i + 1] + min_time;
+        suffix_min_states[i] = suffix_min_states[i + 1] + min_states;
+        suffix_min_trans[i] = suffix_min_trans[i + 1].max(min_trans);
+        suffix_opt0_states[i] =
+            suffix_opt0_states[i + 1] + t.fastest().states;
+        suffix_opt0_trans[i] = suffix_opt0_trans[i + 1]
+            .max(t.fastest().gather + bf * t.workspace_per_sample);
+    }
+    let eff = crate::cost::time::batch_efficiency(b);
+    let base_time: f64 =
+        profiler.tables.iter().map(|t| bf * t.gamma / eff).sum();
+    let base_act: f64 =
+        profiler.tables.iter().map(|t| bf * t.act_per_sample).sum();
+
+    let (seed_time, seed_choice_ordered) = match &seed {
+        Some((choice, cost)) => {
+            // permute the greedy choice into search order
+            let ordered: Vec<usize> =
+                order.iter().map(|&op| choice[op]).collect();
+            (cost.time, Some(ordered))
+        }
+        None => (f64::INFINITY, None),
+    };
+
+    let mut ctx = Ctx {
+        profiler,
+        order,
+        flat: Vec::new(),
+        mem_limit,
+        b: bf,
+        suffix_min_time,
+        suffix_min_states,
+        suffix_min_trans,
+        suffix_opt0_states,
+        suffix_opt0_trans,
+        base_time,
+        base_act,
+        best_time: seed_time,
+        best_choice: seed_choice_ordered,
+        stats: DfsStats::default(),
+        budget,
+    };
+
+    ctx.flat = ctx
+        .order
+        .iter()
+        .map(|&op| {
+            profiler.tables[op]
+                .options
+                .iter()
+                .map(|o| FlatOpt {
+                    time_fixed: o.time_fixed(),
+                    states: o.states,
+                    transient: o.gather
+                        + bf * profiler.tables[op].workspace_per_sample,
+                })
+                .collect()
+        })
+        .collect();
+
+    let mut prefix = vec![0usize; n];
+    descend(&mut ctx, 0, 0.0, 0.0, 0.0, &mut prefix);
+    ctx.stats.complete = ctx.stats.nodes < ctx.budget;
+
+    let choice_ordered = ctx.best_choice?;
+    // un-permute to profiler order
+    let mut choice = vec![0usize; n];
+    for (pos, &op_idx) in ctx.order.iter().enumerate() {
+        choice[op_idx] = choice_ordered[pos];
+    }
+    let cost = profiler.evaluate(&choice, b);
+    Some((choice, cost, ctx.stats))
+}
+
+fn descend(ctx: &mut Ctx, i: usize, time_fixed: f64, states: f64,
+           trans_max: f64, prefix: &mut Vec<usize>) {
+    if ctx.stats.nodes >= ctx.budget {
+        return; // budget expired: keep the incumbent (anytime result)
+    }
+    ctx.stats.nodes += 1;
+    let n = ctx.order.len();
+
+    // ---- time pruning (paper's incumbent rule + admissible suffix bound)
+    if ctx.base_time + time_fixed + ctx.suffix_min_time[i] >= ctx.best_time {
+        ctx.stats.pruned_time += 1;
+        return;
+    }
+    // ---- memory pruning (paper's limit rule + admissible suffix bound)
+    let min_possible_peak = states
+        + ctx.suffix_min_states[i]
+        + ctx.base_act
+        + trans_max.max(ctx.suffix_min_trans[i]);
+    if min_possible_peak > ctx.mem_limit {
+        ctx.stats.pruned_mem += 1;
+        return;
+    }
+
+    if i == n {
+        let total = ctx.base_time + time_fixed;
+        // bounds above guarantee feasibility and improvement
+        ctx.best_time = total;
+        ctx.best_choice = Some(prefix.clone());
+        return;
+    }
+
+    // ---- fast completion: the all-fastest suffix is time-minimal; if it
+    // fits, no other completion of this prefix can beat it.
+    let opt0_peak = states
+        + ctx.suffix_opt0_states[i]
+        + ctx.base_act
+        + trans_max.max(ctx.suffix_opt0_trans[i]);
+    if opt0_peak <= ctx.mem_limit {
+        let total = ctx.base_time + time_fixed + ctx.suffix_min_time_opt0(i);
+        if total < ctx.best_time {
+            ctx.stats.fast_completions += 1;
+            for pos in i..n {
+                prefix[pos] = 0;
+            }
+            ctx.best_time = total;
+            ctx.best_choice = Some(prefix.clone());
+        }
+        return;
+    }
+
+    let n_opts = ctx.flat[i].len();
+    for c in 0..n_opts {
+        let opt = ctx.flat[i][c];
+        let trans = trans_max.max(opt.transient);
+        prefix[i] = c;
+        descend(ctx, i + 1, time_fixed + opt.time_fixed,
+                states + opt.states, trans, prefix);
+    }
+}
+
+impl<'a> Ctx<'a> {
+    /// Suffix time of the all-fastest completion. Option 0 is the fastest
+    /// in every menu, so this equals the admissible bound.
+    fn suffix_min_time_opt0(&self, i: usize) -> f64 {
+        self.suffix_min_time[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Cluster, GIB, SearchConfig};
+    use crate::cost::Profiler;
+    use crate::model::{GptDims, build_gpt};
+
+    fn profiler(hidden: usize, layers: usize, grans: Vec<usize>)
+                -> (Profiler, Cluster) {
+        let m = build_gpt(&GptDims::uniform("t", 5000, 128, layers, hidden, 4));
+        let c = Cluster::rtx_titan(8, 8.0);
+        let s = SearchConfig { granularities: grans, ..Default::default() };
+        (Profiler::new(&m, &c, &s), c)
+    }
+
+    #[test]
+    fn unlimited_memory_yields_all_dp() {
+        let (p, _) = profiler(256, 2, vec![0]);
+        let (choice, cost, stats) = search(&p, 1e18, 4).unwrap();
+        let all_dp = p.index_of(|d| d.is_pure_dp());
+        assert_eq!(choice, all_dp);
+        assert!(cost.time > 0.0);
+        // greedy seed is already optimal; the root closes immediately
+        assert!(stats.nodes <= 2, "nodes={}", stats.nodes);
+        assert!(stats.complete);
+    }
+
+    #[test]
+    fn infeasible_when_even_zdp_oom() {
+        let (p, _) = profiler(256, 2, vec![0]);
+        assert!(search(&p, 1.0, 1).is_none());
+    }
+
+    #[test]
+    fn tight_memory_forces_sharding() {
+        let (p, _) = profiler(512, 4, vec![0]);
+        // all-DP memory
+        let dp = p.evaluate(&p.index_of(|d| d.is_pure_dp()), 1);
+        let zdp = p.evaluate(&p.index_of(|d| d.is_pure_zdp()), 1);
+        let limit = (dp.peak_mem + zdp.peak_mem) / 2.0;
+        let (choice, cost, _) = search(&p, limit, 1).unwrap();
+        assert!(cost.peak_mem <= limit);
+        // must shard something but not everything
+        let plan =
+            crate::planner::ExecutionPlan::from_choice(&p, choice, 1);
+        let (dp_ops, zdp_ops, mixed) = plan.mode_counts();
+        assert!(zdp_ops + mixed > 0, "must shard: {dp_ops} dp");
+        assert!(dp_ops > 0, "should keep small ops in DP");
+        // faster than all-ZDP, slower than all-DP
+        assert!(cost.time <= zdp.time + 1e-12);
+        assert!(cost.time >= dp.time - 1e-12);
+    }
+
+    #[test]
+    fn monotone_in_memory_limit() {
+        let (p, _) = profiler(384, 3, vec![0, 4]);
+        let dp = p.evaluate(&p.index_of(|d| d.is_pure_dp()), 2);
+        let mut last_time = f64::INFINITY;
+        for frac in [0.4, 0.6, 0.8, 1.0, 1.2] {
+            if let Some((_, cost, _)) = search(&p, dp.peak_mem * frac, 2) {
+                assert!(cost.time <= last_time + 1e-12,
+                        "more memory must not slow the plan");
+                last_time = cost.time;
+            }
+        }
+        assert!(last_time.is_finite());
+    }
+
+    #[test]
+    fn splitting_enables_otherwise_infeasible_fits() {
+        // Choose a limit below what unsplit ZDP can reach: the gather
+        // transient of the biggest op is the floor; splitting divides it.
+        let (p0, _) = profiler(2048, 2, vec![0]);
+        let zdp = p0.evaluate(&p0.index_of(|d| d.is_pure_zdp()), 1);
+        // limit slightly under the unsplit ZDP peak
+        let limit = zdp.peak_mem * 0.96;
+        assert!(search(&p0, limit, 1).is_none(),
+                "unsplit should be infeasible at this limit");
+        let (p1, _) = profiler(2048, 2, vec![0, 8]);
+        let hit = search(&p1, limit, 1);
+        assert!(hit.is_some(), "splitting must unlock the fit");
+        let (_, cost, _) = hit.unwrap();
+        assert!(cost.peak_mem <= limit);
+    }
+
+    #[test]
+    fn stats_count_pruning() {
+        let (p, _) = profiler(512, 4, vec![0, 2, 4]);
+        let dp = p.evaluate(&p.index_of(|d| d.is_pure_dp()), 1);
+        let (_, _, stats) = search(&p, dp.peak_mem * 0.5, 1).unwrap();
+        assert!(stats.nodes > 0);
+        assert!(stats.pruned_mem + stats.pruned_time + stats.fast_completions
+                > 0);
+    }
+
+    #[test]
+    fn respects_8gib_style_limits_on_big_models() {
+        // A zoo-sized model: the budgeted search must terminate promptly,
+        // fit the limit, and never be worse than its greedy seed.
+        let m = build_gpt(&GptDims::uniform("nd", 50257, 1024, 48, 1024, 16));
+        let c = Cluster::rtx_titan(8, 8.0);
+        let s = SearchConfig { granularities: vec![0, 4],
+                               ..Default::default() };
+        let p = Profiler::new(&m, &c, &s);
+        let t0 = std::time::Instant::now();
+        let got = search_with_budget(&p, 8.0 * GIB, 1, 200_000);
+        assert!(t0.elapsed().as_secs() < 60, "search too slow");
+        let (_, cost, _) = got.expect("8 GiB must be feasible for 48L/1024H");
+        assert!(cost.peak_mem <= 8.0 * GIB);
+        let (_, gcost) =
+            crate::planner::greedy::search(&p, 8.0 * GIB, 1).unwrap();
+        assert!(cost.time <= gcost.time + 1e-12);
+    }
+}

@@ -1,0 +1,118 @@
+//! Brute-force plan enumeration: ground truth the DFS is validated against
+//! (only viable for small operator counts; tests keep `Π|menu| ≤ ~1e6`).
+
+use crate::cost::{PlanCost, Profiler};
+
+/// Enumerate every decision combination; return the feasible minimum-time
+/// plan, or `None` if nothing fits.
+pub fn search(profiler: &Profiler, mem_limit: f64, b: usize)
+              -> Option<(Vec<usize>, PlanCost)> {
+    let n = profiler.n_ops();
+    let mut choice = vec![0usize; n];
+    let mut best: Option<(Vec<usize>, PlanCost)> = None;
+    loop {
+        let cost = profiler.evaluate(&choice, b);
+        if cost.peak_mem <= mem_limit {
+            let better = match &best {
+                None => true,
+                Some((_, c)) => cost.time < c.time,
+            };
+            if better {
+                best = Some((choice.clone(), cost));
+            }
+        }
+        // odometer increment
+        let mut i = 0;
+        loop {
+            if i == n {
+                return best;
+            }
+            choice[i] += 1;
+            if choice[i] < profiler.tables[i].options.len() {
+                break;
+            }
+            choice[i] = 0;
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Cluster, SearchConfig};
+    use crate::cost::Profiler;
+    use crate::model::{GptDims, build_gpt};
+    use crate::planner::dfs;
+    use crate::util::rng::Rng;
+
+    /// The core exactness guarantee: DFS == brute force on every feasible
+    /// instance we can afford to enumerate.
+    #[test]
+    fn dfs_matches_exhaustive_across_limits() {
+        let m = build_gpt(&GptDims::uniform("t", 2000, 64, 1, 96, 4));
+        let c = Cluster::rtx_titan(4, 8.0);
+        let s = SearchConfig { granularities: vec![0], ..Default::default() };
+        let p = Profiler::new(&m, &c, &s);
+        let dp_mem = p.evaluate(&p.index_of(|d| d.is_pure_dp()), 2).peak_mem;
+        let zdp_mem = p.evaluate(&p.index_of(|d| d.is_pure_zdp()), 2).peak_mem;
+        for frac in [0.95, 0.99, 1.02, 1.1, 1.5] {
+            let limit = zdp_mem + (dp_mem - zdp_mem) * frac / 1.5;
+            let brute = search(&p, limit, 2);
+            let smart = dfs::search(&p, limit, 2);
+            match (brute, smart) {
+                (None, None) => {}
+                (Some((_, bc)), Some((_, sc, _))) => {
+                    assert!(
+                        (bc.time - sc.time).abs() < 1e-12,
+                        "limit {limit}: brute {} vs dfs {}",
+                        bc.time,
+                        sc.time
+                    );
+                    assert!(sc.peak_mem <= limit);
+                }
+                (b, s) => panic!(
+                    "feasibility disagreement at {limit}: brute={:?} dfs={:?}",
+                    b.map(|x| x.1),
+                    s.map(|x| x.1)
+                ),
+            }
+        }
+    }
+
+    /// Property: random small instances with splitting menus.
+    #[test]
+    fn dfs_matches_exhaustive_random_instances() {
+        let mut rng = Rng::new(0xD15C);
+        for trial in 0..8 {
+            let hidden = 32 * rng.range(1, 4);
+            let m = build_gpt(&GptDims::uniform("t", 500, 32, 1, hidden, 2));
+            let c = Cluster::rtx_titan(rng.range(2, 8), 8.0);
+            let s = SearchConfig {
+                granularities: vec![0, 2],
+                ..Default::default()
+            };
+            let p = Profiler::new(&m, &c, &s);
+            let b = rng.range(1, 4);
+            let dp_mem =
+                p.evaluate(&p.index_of(|d| d.is_pure_dp()), b).peak_mem;
+            let limit = dp_mem * (0.3 + rng.f64() * 0.9);
+            let brute = search(&p, limit, b);
+            let smart = dfs::search(&p, limit, b);
+            match (brute, smart) {
+                (None, None) => {}
+                (Some((_, bc)), Some((_, sc, _))) => assert!(
+                    (bc.time - sc.time).abs() <= 1e-12 * bc.time.max(1.0),
+                    "trial {trial}: brute {} dfs {}",
+                    bc.time,
+                    sc.time
+                ),
+                (b, s) => panic!(
+                    "trial {trial}: disagreement brute={:?} dfs={:?}",
+                    b.map(|x| x.1),
+                    s.map(|x| x.1)
+                ),
+            }
+        }
+    }
+}

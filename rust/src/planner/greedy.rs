@@ -1,0 +1,99 @@
+//! Greedy planner (ablation baseline): start from the all-fastest plan and
+//! repeatedly apply the memory-per-time-cheapest decision downgrade until
+//! the plan fits. Near-optimal here because both the time penalty and the
+//! memory saving of sharding an operator scale with its parameter bytes —
+//! but not exact (see tests for a constructed gap), which is why the paper
+//! (and we) search.
+
+use crate::cost::{PlanCost, Profiler};
+
+/// Greedy descent. Returns `None` when even the memory-minimal plan
+/// violates the limit.
+pub fn search(profiler: &Profiler, mem_limit: f64, b: usize)
+              -> Option<(Vec<usize>, PlanCost)> {
+    let n = profiler.n_ops();
+    let mut choice = vec![0usize; n]; // option 0 = fastest per op
+    let mut cost = profiler.evaluate(&choice, b);
+    while cost.peak_mem > mem_limit {
+        // candidate moves: advance any op to any later (smaller) option;
+        // pick the best Δmem/Δtime ratio (Δmem>0 by Pareto ordering)
+        let mut best: Option<(usize, usize, f64)> = None;
+        for i in 0..n {
+            let t = &profiler.tables[i];
+            let cur = &t.options[choice[i]];
+            for c in choice[i] + 1..t.options.len() {
+                let cand = &t.options[c];
+                let dmem = (cur.states - cand.states)
+                    + (cur.gather - cand.gather).max(0.0);
+                let dtime = cand.time_fixed() - cur.time_fixed();
+                if dmem <= 0.0 {
+                    continue;
+                }
+                let ratio = dmem / dtime.max(1e-15);
+                if best.map(|(_, _, r)| ratio > r).unwrap_or(true) {
+                    best = Some((i, c, ratio));
+                }
+            }
+        }
+        let (i, c, _) = best?; // no downgrades left -> infeasible
+        choice[i] = c;
+        cost = profiler.evaluate(&choice, b);
+    }
+    Some((choice, cost))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Cluster, SearchConfig};
+    use crate::cost::Profiler;
+    use crate::model::{GptDims, build_gpt};
+    use crate::planner::dfs;
+
+    fn profiler() -> Profiler {
+        let m = build_gpt(&GptDims::uniform("t", 5000, 128, 2, 256, 4));
+        let c = Cluster::rtx_titan(8, 8.0);
+        let s = SearchConfig { granularities: vec![0, 4],
+                               ..Default::default() };
+        Profiler::new(&m, &c, &s)
+    }
+
+    #[test]
+    fn feasible_and_never_better_than_dfs() {
+        let p = profiler();
+        let dp = p.evaluate(&p.index_of(|d| d.is_pure_dp()), 2);
+        for frac in [0.5, 0.7, 0.9] {
+            let limit = dp.peak_mem * frac;
+            let g = search(&p, limit, 2);
+            let d = dfs::search(&p, limit, 2);
+            match (g, d) {
+                (Some((_, gc)), Some((_, dc, _))) => {
+                    assert!(gc.peak_mem <= limit);
+                    assert!(
+                        gc.time >= dc.time - 1e-12,
+                        "greedy {} cannot beat exact {}",
+                        gc.time,
+                        dc.time
+                    );
+                    // and shouldn't be wildly off on this well-behaved family
+                    assert!(gc.time <= dc.time * 1.25);
+                }
+                (None, None) => {}
+                other => panic!("feasibility disagreement {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn unlimited_memory_returns_all_fastest() {
+        let p = profiler();
+        let (choice, _) = search(&p, 1e18, 1).unwrap();
+        assert!(choice.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let p = profiler();
+        assert!(search(&p, 1.0, 1).is_none());
+    }
+}

@@ -1,0 +1,123 @@
+//! The Search Engine + Scheduler (paper §3.2, Algorithm 1).
+//!
+//! Given the Profiler's per-operator cost tables and the device memory
+//! limit, the search engine picks a decision per operator minimizing the
+//! iteration time `Σ T_i` subject to `peak_mem ≤ M_limit`; the Scheduler
+//! sweeps batch sizes and keeps the candidate with the best throughput.
+//!
+//! Three planners share the problem definition:
+//! * [`dfs`] — the paper's depth-first search with its two prunings
+//!   (memory exceeded / incumbent time exceeded), strengthened with
+//!   admissible suffix bounds and fast-completion (branch-and-bound).
+//!   Exact.
+//! * [`exhaustive`] — brute-force enumeration; ground truth for tests.
+//! * [`greedy`] — flip-the-best-ratio heuristic; ablation baseline.
+
+pub mod dfs;
+pub mod exhaustive;
+pub mod greedy;
+pub mod scheduler;
+
+pub use dfs::{DfsStats, search as dfs_search};
+pub use exhaustive::search as exhaustive_search;
+pub use greedy::search as greedy_search;
+pub use scheduler::{Candidate, Scheduler, SchedulerResult};
+
+use crate::cost::{Decision, PlanCost, Profiler};
+
+/// A fully-resolved execution plan: one decision per operator plus the
+/// batch size it was evaluated at.
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    /// Per-op index into the Profiler's Pareto menu.
+    pub choice: Vec<usize>,
+    /// Resolved decisions (same order as the profiler's tables).
+    pub decisions: Vec<Decision>,
+    /// Per-device batch size.
+    pub batch: usize,
+    pub cost: PlanCost,
+}
+
+impl ExecutionPlan {
+    pub fn from_choice(profiler: &Profiler, choice: Vec<usize>, batch: usize)
+                       -> ExecutionPlan {
+        let cost = profiler.evaluate(&choice, batch);
+        let decisions = profiler
+            .tables
+            .iter()
+            .zip(&choice)
+            .map(|(t, &c)| t.options[c].decision)
+            .collect();
+        ExecutionPlan { choice, decisions, batch, cost }
+    }
+
+    /// Cluster-wide samples/second.
+    pub fn throughput(&self, n_devices: usize) -> f64 {
+        self.cost.throughput(self.batch, n_devices)
+    }
+
+    /// Counts of (pure-DP, pure-ZDP, mixed) operators.
+    pub fn mode_counts(&self) -> (usize, usize, usize) {
+        let mut dp = 0;
+        let mut zdp = 0;
+        let mut mixed = 0;
+        for d in &self.decisions {
+            if d.is_pure_dp() {
+                dp += 1;
+            } else if d.is_pure_zdp() {
+                zdp += 1;
+            } else {
+                mixed += 1;
+            }
+        }
+        (dp, zdp, mixed)
+    }
+
+    /// Fraction of operators with slice granularity > 1 (Figure 8's
+    /// "% of operators partitioned").
+    pub fn split_fraction(&self) -> f64 {
+        let split =
+            self.decisions.iter().filter(|d| d.granularity > 1).count();
+        split as f64 / self.decisions.len().max(1) as f64
+    }
+
+    /// One-line human summary.
+    pub fn describe(&self, profiler: &Profiler) -> String {
+        let (dp, zdp, mixed) = self.mode_counts();
+        format!(
+            "b={} time={} peak={} [{} DP, {} ZDP, {} mixed, {:.0}% split] over {} ops",
+            self.batch,
+            crate::util::fmt_time(self.cost.time),
+            crate::util::fmt_bytes(self.cost.peak_mem),
+            dp,
+            zdp,
+            mixed,
+            self.split_fraction() * 100.0,
+            profiler.n_ops(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Cluster, SearchConfig};
+    use crate::model::{GptDims, build_gpt};
+
+    #[test]
+    fn plan_mode_counts_and_split_fraction() {
+        let m = build_gpt(&GptDims::uniform("t", 1000, 64, 2, 128, 4));
+        let c = Cluster::rtx_titan(8, 8.0);
+        let s = SearchConfig { granularities: vec![0, 4],
+                               ..Default::default() };
+        let p = Profiler::new(&m, &c, &s);
+        let all_dp = p.index_of(|d| d.is_pure_dp());
+        let plan = ExecutionPlan::from_choice(&p, all_dp, 2);
+        let (dp, zdp, mixed) = plan.mode_counts();
+        assert_eq!(dp, p.n_ops());
+        assert_eq!(zdp + mixed, 0);
+        assert_eq!(plan.split_fraction(), 0.0);
+        assert!(plan.throughput(8) > 0.0);
+        assert!(plan.describe(&p).contains("DP"));
+    }
+}

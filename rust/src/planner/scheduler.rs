@@ -1,0 +1,170 @@
+//! The Scheduler (Algorithm 1's outer loop): "iteratively collects the
+//! output plan and throughput from Search Engine as candidates, and
+//! increases the training batch size ... until the minimum possible overall
+//! memory cost exceeds device memory limit", then returns the candidate
+//! with the highest estimated system throughput — which is *not* always the
+//! largest batch (§3.2's closing observation), because a smaller batch can
+//! afford more DP-mode operators.
+
+use super::dfs;
+use super::ExecutionPlan;
+use crate::cost::Profiler;
+
+/// One batch size's best plan.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub plan: ExecutionPlan,
+    /// Cluster-wide samples/second.
+    pub throughput: f64,
+    pub search_nodes: u64,
+}
+
+/// Scheduler outcome: every candidate plus the winner index.
+#[derive(Debug, Clone)]
+pub struct SchedulerResult {
+    pub candidates: Vec<Candidate>,
+    pub best: usize,
+    /// Total search-engine nodes across the batch sweep.
+    pub total_nodes: u64,
+    pub elapsed: std::time::Duration,
+}
+
+impl SchedulerResult {
+    pub fn best_plan(&self) -> &ExecutionPlan {
+        &self.candidates[self.best].plan
+    }
+
+    pub fn best_throughput(&self) -> f64 {
+        self.candidates[self.best].throughput
+    }
+}
+
+/// Batch-size sweep driver.
+pub struct Scheduler<'a> {
+    pub profiler: &'a Profiler,
+    pub mem_limit: f64,
+    pub max_batch: usize,
+}
+
+impl<'a> Scheduler<'a> {
+    pub fn new(profiler: &'a Profiler, mem_limit: f64,
+               max_batch: usize) -> Self {
+        Scheduler { profiler, mem_limit, max_batch }
+    }
+
+    /// Run Algorithm 1. Returns `None` when no batch size fits at all.
+    pub fn run(&self) -> Option<SchedulerResult> {
+        let start = std::time::Instant::now();
+        let n_dev = self.profiler.cluster.n_devices;
+        let mut candidates = Vec::new();
+        let mut total_nodes = 0;
+        for b in 1..=self.max_batch {
+            match dfs::search(self.profiler, self.mem_limit, b) {
+                None => break, // smallest-memory plan no longer fits
+                Some((choice, _cost, stats)) => {
+                    let plan =
+                        ExecutionPlan::from_choice(self.profiler, choice, b);
+                    let throughput = plan.throughput(n_dev);
+                    total_nodes += stats.nodes;
+                    candidates.push(Candidate {
+                        plan,
+                        throughput,
+                        search_nodes: stats.nodes,
+                    });
+                }
+            }
+        }
+        if candidates.is_empty() {
+            return None;
+        }
+        let best = candidates
+            .iter()
+            .enumerate()
+            .max_by(|a, b| {
+                a.1.throughput.partial_cmp(&b.1.throughput).unwrap()
+            })
+            .map(|(i, _)| i)
+            .unwrap();
+        Some(SchedulerResult {
+            candidates,
+            best,
+            total_nodes,
+            elapsed: start.elapsed(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Cluster, SearchConfig};
+    use crate::cost::Profiler;
+    use crate::model::{GptDims, build_gpt};
+
+    fn profiler(n_dev: usize) -> Profiler {
+        let m = build_gpt(&GptDims::uniform("t", 5000, 128, 2, 256, 4));
+        let c = Cluster::rtx_titan(n_dev, 8.0);
+        let s = SearchConfig { granularities: vec![0],
+                               ..Default::default() };
+        Profiler::new(&m, &c, &s)
+    }
+
+    #[test]
+    fn sweep_stops_at_memory_wall() {
+        let p = profiler(8);
+        // pick a limit that fits only a handful of batch sizes
+        let zdp1 = p.evaluate(&p.index_of(|d| d.is_pure_zdp()), 1);
+        let limit = zdp1.peak_mem * 2.0;
+        let res = Scheduler::new(&p, limit, 1024).run().unwrap();
+        let n = res.candidates.len();
+        assert!(n >= 1);
+        assert!(n < 1024, "must hit the wall, got {n}");
+        // batch sizes are exactly 1..=n
+        for (i, c) in res.candidates.iter().enumerate() {
+            assert_eq!(c.plan.batch, i + 1);
+            assert!(c.plan.cost.peak_mem <= limit);
+        }
+    }
+
+    #[test]
+    fn none_when_nothing_fits() {
+        let p = profiler(8);
+        assert!(Scheduler::new(&p, 1.0, 16).run().is_none());
+    }
+
+    #[test]
+    fn best_candidate_maximizes_throughput() {
+        let p = profiler(8);
+        let dp1 = p.evaluate(&p.index_of(|d| d.is_pure_dp()), 1);
+        let res = Scheduler::new(&p, dp1.peak_mem * 4.0, 64).run().unwrap();
+        let best_tp = res.best_throughput();
+        for c in &res.candidates {
+            assert!(c.throughput <= best_tp + 1e-12);
+        }
+    }
+
+    #[test]
+    fn larger_memory_never_hurts_throughput() {
+        let p = profiler(8);
+        let base = p.evaluate(&p.index_of(|d| d.is_pure_zdp()), 1).peak_mem;
+        let mut last = 0.0;
+        for mult in [1.5, 2.5, 4.0, 8.0] {
+            if let Some(res) = Scheduler::new(&p, base * mult, 64).run() {
+                let tp = res.best_throughput();
+                assert!(tp >= last - 1e-9,
+                        "throughput regressed with more memory");
+                last = tp;
+            }
+        }
+        assert!(last > 0.0);
+    }
+
+    #[test]
+    fn throughput_counts_all_devices() {
+        let p4 = profiler(4);
+        let res = Scheduler::new(&p4, 1e18, 4).run().unwrap();
+        let c = &res.candidates[0];
+        let per_dev = c.plan.batch as f64 / c.plan.cost.time;
+        assert!((c.throughput - per_dev * 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,220 @@
+//! Typed view over `artifacts/manifest.json` (written by aot.py): model
+//! configs, packed-parameter layouts, artifact inventories.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result, anyhow};
+use std::path::Path;
+
+/// One leaf in the packed parameter vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+    pub size: usize,
+}
+
+/// Adam hyperparameters baked into the artifacts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdamParams {
+    pub lr: f64,
+    pub b1: f64,
+    pub b2: f64,
+    pub eps: f64,
+}
+
+/// One lowered model configuration.
+#[derive(Debug, Clone)]
+pub struct ConfigEntry {
+    pub name: String,
+    pub vocab: usize,
+    pub seq: usize,
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub param_count: usize,
+    /// Packed vector length (padded to `pad`).
+    pub packed_len: usize,
+    pub pad: usize,
+    pub batch_per_worker: usize,
+    pub shard_degrees: Vec<usize>,
+    pub adam: AdamParams,
+    pub layout: Vec<LayoutEntry>,
+}
+
+impl ConfigEntry {
+    pub fn shard_len(&self, n: usize) -> usize {
+        assert!(self.packed_len % n == 0,
+                "packed_len {} not divisible by {n}", self.packed_len);
+        self.packed_len / n
+    }
+
+    pub fn artifact(&self, role: &str) -> String {
+        format!("{}_{role}.hlo.txt", self.name)
+    }
+
+    pub fn adam_artifact(&self, shard_degree: usize) -> String {
+        format!("{}_adam_p{shard_degree}.hlo.txt", self.name)
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub configs: Vec<ConfigEntry>,
+    pub files: Vec<String>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let mut configs = Vec::new();
+        let cfgs = root
+            .get("configs")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest missing 'configs'"))?;
+        for (name, c) in cfgs {
+            let u = |k: &str| -> Result<usize> {
+                c.get(k)
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("config {name}: bad '{k}'"))
+            };
+            let layout = c
+                .get("layout")
+                .as_arr()
+                .ok_or_else(|| anyhow!("config {name}: bad layout"))?
+                .iter()
+                .map(|e| -> Result<LayoutEntry> {
+                    Ok(LayoutEntry {
+                        name: e
+                            .get("name")
+                            .as_str()
+                            .ok_or_else(|| anyhow!("layout name"))?
+                            .to_string(),
+                        offset: e
+                            .get("offset")
+                            .as_usize()
+                            .ok_or_else(|| anyhow!("layout offset"))?,
+                        shape: e
+                            .get("shape")
+                            .as_arr()
+                            .ok_or_else(|| anyhow!("layout shape"))?
+                            .iter()
+                            .filter_map(Json::as_usize)
+                            .collect(),
+                        size: e
+                            .get("size")
+                            .as_usize()
+                            .ok_or_else(|| anyhow!("layout size"))?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let adam = AdamParams {
+                lr: c.get("adam").get("lr").as_f64().unwrap_or(3e-4),
+                b1: c.get("adam").get("b1").as_f64().unwrap_or(0.9),
+                b2: c.get("adam").get("b2").as_f64().unwrap_or(0.999),
+                eps: c.get("adam").get("eps").as_f64().unwrap_or(1e-8),
+            };
+            configs.push(ConfigEntry {
+                name: name.clone(),
+                vocab: u("vocab")?,
+                seq: u("seq")?,
+                layers: u("layers")?,
+                hidden: u("hidden")?,
+                heads: u("heads")?,
+                param_count: u("param_count")?,
+                packed_len: u("packed_len")?,
+                pad: u("pad")?,
+                batch_per_worker: u("batch_per_worker")?,
+                shard_degrees: c
+                    .get("shard_degrees")
+                    .as_arr()
+                    .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_else(|| vec![1, 2, 4, 8]),
+                adam,
+                layout,
+            });
+        }
+        let files = root
+            .get("files")
+            .as_obj()
+            .map(|o| o.keys().cloned().collect())
+            .unwrap_or_default();
+        Ok(Manifest { configs, files })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigEntry> {
+        self.configs
+            .iter()
+            .find(|c| c.name == name)
+            .ok_or_else(|| anyhow!("config '{name}' not in manifest \
+                (have: {:?})", self.configs.iter().map(|c| &c.name)
+                .collect::<Vec<_>>()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "configs": {
+        "tiny": {
+          "vocab": 512, "seq": 64, "layers": 2, "hidden": 64, "heads": 2,
+          "slice_granularity": 4, "param_count": 136960,
+          "packed_len": 136960, "pad": 8, "batch_per_worker": 4,
+          "shard_degrees": [1, 2, 4, 8],
+          "adam": {"lr": 3e-4, "b1": 0.9, "b2": 0.999, "eps": 1e-8},
+          "layout": [
+            {"name": "wte", "offset": 0, "shape": [512, 64], "size": 32768},
+            {"name": "wpe", "offset": 32768, "shape": [64, 64], "size": 4096}
+          ]
+        }
+      },
+      "files": {"tiny_init.hlo.txt": {"bytes": 10}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let c = m.config("tiny").unwrap();
+        assert_eq!(c.packed_len, 136960);
+        assert_eq!(c.shard_len(4), 34240);
+        assert_eq!(c.layout[1].name, "wpe");
+        assert_eq!(c.layout[1].offset, 32768);
+        assert_eq!(c.adam.lr, 3e-4);
+        assert_eq!(c.artifact("grad_step"), "tiny_grad_step.hlo.txt");
+        assert_eq!(c.adam_artifact(4), "tiny_adam_p4.hlo.txt");
+        assert_eq!(m.files, vec!["tiny_init.hlo.txt"]);
+    }
+
+    #[test]
+    fn missing_config_is_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.config("nope").is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        let dir = crate::runtime::default_artifact_dir();
+        let path = dir.join("manifest.json");
+        if !path.exists() {
+            eprintln!("SKIP: no artifacts");
+            return;
+        }
+        let m = Manifest::load(&path).unwrap();
+        let tiny = m.config("tiny").unwrap();
+        // layout covers param_count exactly
+        let total: usize = tiny.layout.iter().map(|l| l.size).sum();
+        assert_eq!(total, tiny.param_count);
+        assert!(tiny.packed_len >= total);
+        assert_eq!(tiny.packed_len % tiny.pad, 0);
+    }
+}

@@ -1,0 +1,255 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`) produced by `python/compile/aot.py` and executes them
+//! on the CPU PJRT client. This is the only place python-authored compute
+//! enters the rust system — and python itself is never on this path.
+//!
+//! Interchange is HLO *text* (see aot.py's module docs for the 64-bit-id
+//! proto incompatibility this sidesteps).
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so a [`Runtime`] is per-thread:
+//! each trainer worker opens its own client and compiles its own
+//! executables; the [`Manifest`] is plain data and freely shared.
+
+pub mod manifest;
+
+pub use manifest::{ConfigEntry, LayoutEntry, Manifest};
+
+use anyhow::{Context, Result, anyhow};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Per-thread PJRT runtime: client + executable cache over one artifact
+/// directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.json`, creates the CPU
+    /// PJRT client).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?}"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, cache: HashMap::new() })
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load + compile an artifact by file name (cached).
+    pub fn load(&mut self, file: &str) -> Result<()> {
+        if self.cache.contains_key(file) {
+            return Ok(());
+        }
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {file}: {e:?}"))?;
+        self.cache.insert(file.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a loaded artifact. All our AOT modules are lowered with
+    /// `return_tuple=True`, so the outputs come back as one tuple literal,
+    /// decomposed here.
+    ///
+    /// Inputs are uploaded through `buffer_from_host_buffer` and executed
+    /// with `execute_b` so the device input buffers are owned (and freed)
+    /// on the rust side — the crate's literal-taking `execute` leaks every
+    /// input buffer per call (xla_rs.cc `buffer.release()` without a
+    /// matching free), which OOM-killed long training runs.
+    pub fn execute(&mut self, file: &str, inputs: &[HostTensor])
+                   -> Result<Vec<xla::Literal>> {
+        self.load(file)?;
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|t| t.upload(&self.client))
+            .collect::<Result<_>>()?;
+        let exe = self.cache.get(file).unwrap();
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(&bufs)
+            .map_err(|e| anyhow!("executing {file}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {file}: {e:?}"))?;
+        decompose(tuple)
+    }
+
+    /// Number of executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// Split a (possibly 1-ary) tuple literal into its elements.
+pub fn decompose(mut lit: xla::Literal) -> Result<Vec<xla::Literal>> {
+    match lit.decompose_tuple() {
+        Ok(parts) if !parts.is_empty() => Ok(parts),
+        Ok(_) => Ok(vec![]),
+        Err(_) => Ok(vec![lit]), // not a tuple: single output
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Host tensors (borrowed input data + shape) and literal helpers
+// ---------------------------------------------------------------------------
+
+/// Borrowed host data + shape, uploaded per execute call.
+pub enum HostTensor<'a> {
+    F32(&'a [f32], Vec<usize>),
+    I32(&'a [i32], Vec<usize>),
+}
+
+impl<'a> HostTensor<'a> {
+    /// 1-D f32 vector.
+    pub fn f32v(v: &'a [f32]) -> HostTensor<'a> {
+        HostTensor::F32(v, vec![v.len()])
+    }
+
+    /// i32 scalar (rank 0).
+    pub fn i32s(v: &'a [i32; 1]) -> HostTensor<'a> {
+        HostTensor::I32(v, vec![])
+    }
+
+    /// 2-D i32 matrix.
+    pub fn i32m(v: &'a [i32], rows: usize, cols: usize) -> HostTensor<'a> {
+        assert_eq!(v.len(), rows * cols);
+        HostTensor::I32(v, vec![rows, cols])
+    }
+
+    /// 2-D f32 matrix.
+    pub fn f32m(v: &'a [f32], rows: usize, cols: usize) -> HostTensor<'a> {
+        assert_eq!(v.len(), rows * cols);
+        HostTensor::F32(v, vec![rows, cols])
+    }
+
+    fn upload(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        match self {
+            HostTensor::F32(data, dims) => client
+                .buffer_from_host_buffer::<f32>(data, dims, None)
+                .map_err(|e| anyhow!("upload f32 {dims:?}: {e:?}")),
+            HostTensor::I32(data, dims) => client
+                .buffer_from_host_buffer::<i32>(data, dims, None)
+                .map_err(|e| anyhow!("upload i32 {dims:?}: {e:?}")),
+        }
+    }
+}
+
+/// f32 scalar from a literal (accepts rank-0 or single-element).
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("literal to f32 vec: {e:?}"))?;
+    v.first().copied().ok_or_else(|| anyhow!("empty literal"))
+}
+
+/// Vec<f32> from a literal.
+pub fn vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to f32 vec: {e:?}"))
+}
+
+
+/// Locate the repo's artifact directory for tests/examples: env var
+/// `OSDP_ARTIFACTS`, else `<crate>/artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("OSDP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| {
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}
+
+/// True when artifacts exist (tests skip politely otherwise; `make
+/// artifacts` builds them).
+pub fn artifacts_available() -> bool {
+    default_artifact_dir().join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        if !artifacts_available() {
+            eprintln!("SKIP: run `make artifacts` first");
+            return None;
+        }
+        Some(Runtime::open(default_artifact_dir()).unwrap())
+    }
+
+    #[test]
+    fn calib_matmul_numerics() {
+        let Some(mut rt) = runtime() else { return };
+        // x = I (512), w = ramp: result must equal w
+        let mut x = vec![0.0f32; 512 * 512];
+        for i in 0..512 {
+            x[i * 512 + i] = 1.0;
+        }
+        let w: Vec<f32> = (0..512 * 512).map(|i| (i % 97) as f32).collect();
+        let out = rt
+            .execute("calib_matmul.hlo.txt", &[
+                HostTensor::f32m(&x, 512, 512),
+                HostTensor::f32m(&w, 512, 512),
+            ])
+            .unwrap();
+        let y = vec_f32(&out[0]).unwrap();
+        assert_eq!(y.len(), 512 * 512);
+        for (a, b) in y.iter().zip(&w) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn split_demo_matches_direct_matmul_at_all_granularities() {
+        // The Pallas operator-splitting kernel, AOT-compiled, loaded and
+        // run from rust: same numbers at every granularity.
+        let Some(mut rt) = runtime() else { return };
+        let x: Vec<f32> =
+            (0..256 * 1024).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+        let w: Vec<f32> =
+            (0..1024 * 1024).map(|i| ((i % 7) as f32 - 3.0) * 0.05).collect();
+        let mut results: Vec<Vec<f32>> = Vec::new();
+        for g in [1usize, 2, 4, 8] {
+            let out = rt
+                .execute(&format!("split_demo_g{g}.hlo.txt"),
+                         &[HostTensor::f32m(&x, 256, 1024),
+                           HostTensor::f32m(&w, 1024, 1024)])
+                .unwrap();
+            results.push(vec_f32(&out[0]).unwrap());
+        }
+        for r in &results[1..] {
+            for (a, b) in r.iter().zip(&results[0]) {
+                assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+            }
+        }
+        // spot-check vs direct f64 matmul on one row
+        for col in [0usize, 511, 1023] {
+            let want: f64 = (0..1024)
+                .map(|k| x[k] as f64 * w[k * 1024 + col] as f64)
+                .sum();
+            let got = results[0][col] as f64;
+            assert!((got - want).abs() < 0.05, "col {col}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn executable_cache_reuses() {
+        let Some(mut rt) = runtime() else { return };
+        rt.load("calib_matmul.hlo.txt").unwrap();
+        rt.load("calib_matmul.hlo.txt").unwrap();
+        assert_eq!(rt.cached(), 1);
+    }
+}

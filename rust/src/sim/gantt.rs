@@ -1,0 +1,78 @@
+//! Text gantt-chart rendering of a simulated timeline (Figure 1).
+
+use super::{Event, Phase, Timeline};
+
+/// Render the timeline as an ASCII gantt chart, one row per (op, phase),
+/// `width` columns of resolution. Ops are shown in first-event order.
+pub fn render_gantt(tl: &Timeline, width: usize) -> String {
+    if tl.events.is_empty() {
+        return "(empty timeline)\n".into();
+    }
+    let total = tl.iter_time.max(1e-30);
+    let scale = width as f64 / total;
+    let mut rows: Vec<(String, &Event)> = tl
+        .events
+        .iter()
+        .map(|e| (format!("{:<14} {:<10}", trunc(&e.op, 14), e.phase.label()),
+                  e))
+        .collect();
+    rows.sort_by(|a, b| a.1.start.partial_cmp(&b.1.start).unwrap());
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "iteration {:.3} ms | comm busy {:.3} ms | compute busy {:.3} ms\n",
+        tl.iter_time * 1e3,
+        tl.comm_busy * 1e3,
+        tl.compute_busy * 1e3
+    ));
+    for (label, e) in rows {
+        let s = (e.start * scale).round() as usize;
+        let w = ((e.end - e.start) * scale).round().max(1.0) as usize;
+        let ch = match e.phase {
+            Phase::FwdGather | Phase::BwdGather => '▒',
+            Phase::GradSync => '█',
+            _ => '■',
+        };
+        let mut bar = String::new();
+        bar.push_str(&" ".repeat(s.min(width)));
+        bar.push_str(&ch.to_string().repeat(w.min(width.saturating_sub(s))));
+        out.push_str(&format!("{label} |{bar}\n"));
+    }
+    out
+}
+
+fn trunc(s: &str, n: usize) -> String {
+    if s.len() <= n { s.to_string() } else { format!("{}…", &s[..n - 1]) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Cluster;
+    use crate::cost::Decision;
+    use crate::model::{GptDims, build_gpt};
+    use crate::sim::simulate;
+
+    #[test]
+    fn renders_rows_for_each_event() {
+        let m = build_gpt(&GptDims::uniform("t", 500, 32, 1, 64, 2));
+        let c = Cluster::rtx_titan(4, 8.0);
+        let decisions = vec![Decision::ZDP; m.ops.len()];
+        let tl = simulate(&m, &decisions, &c, 1, false, false);
+        let g = render_gantt(&tl, 60);
+        assert_eq!(g.lines().count(), tl.events.len() + 1);
+        assert!(g.contains("fwd-gather"));
+        assert!(g.contains("grad-sync"));
+    }
+
+    #[test]
+    fn empty_timeline_safe() {
+        let tl = Timeline {
+            events: vec![],
+            iter_time: 0.0,
+            comm_busy: 0.0,
+            compute_busy: 0.0,
+        };
+        assert!(render_gantt(&tl, 40).contains("empty"));
+    }
+}

@@ -1,0 +1,328 @@
+//! Discrete-event iteration simulator: turns an execution plan into a
+//! per-operator timeline over two device resources (a compute stream and a
+//! communication stream), reproducing Figure 1's gantt chart and modeling
+//! the comm/compute overlap that hides the operator-splitting overhead
+//! (§3.3).
+//!
+//! All data-parallel ranks are symmetric under DP/ZDP (bulk-synchronous,
+//! same op sequence, same collective participation), so one device's
+//! timeline is the iteration time. The *fabric* (real byte-moving
+//! collectives with logical clocks) cross-validates this model in
+//! `rust/tests/sim_vs_fabric.rs`.
+
+pub mod gantt;
+
+pub use gantt::render_gantt;
+
+use crate::cost::Decision;
+use crate::config::Cluster;
+use crate::model::{ModelDesc, Operator};
+
+/// Which stream an event occupies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// ZDP parameter all-gather before forward compute.
+    FwdGather,
+    ForwardCompute,
+    /// ZDP parameter re-gather before backward (and the extra
+    /// checkpointing-recompute gather when enabled).
+    BwdGather,
+    BackwardCompute,
+    /// Gradient synchronization (reduce-scatter / all-reduce).
+    GradSync,
+}
+
+impl Phase {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Phase::FwdGather => "fwd-gather",
+            Phase::ForwardCompute => "fwd",
+            Phase::BwdGather => "bwd-gather",
+            Phase::BackwardCompute => "bwd",
+            Phase::GradSync => "grad-sync",
+        }
+    }
+
+    pub fn is_comm(&self) -> bool {
+        matches!(self, Phase::FwdGather | Phase::BwdGather | Phase::GradSync)
+    }
+}
+
+/// One scheduled interval on a stream.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub op: String,
+    pub phase: Phase,
+    pub start: f64,
+    pub end: f64,
+    /// Payload bytes for comm events (0 for compute).
+    pub bytes: f64,
+}
+
+impl Event {
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+/// Simulated iteration: events plus totals.
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    pub events: Vec<Event>,
+    pub iter_time: f64,
+    pub comm_busy: f64,
+    pub compute_busy: f64,
+}
+
+impl Timeline {
+    /// Fraction of the iteration the compute stream is busy.
+    pub fn compute_utilization(&self) -> f64 {
+        self.compute_busy / self.iter_time.max(1e-30)
+    }
+}
+
+/// Per-op slice of the (α,β) comm formula: one collective of `rounds`
+/// rounds over `bytes/g` per slice, times `g` slices.
+fn comm_seconds(op: &Operator, d: Decision, cluster: &Cluster, rounds: f64)
+                -> f64 {
+    if !op.shardable() || cluster.n_devices == 1 {
+        return 0.0;
+    }
+    let (alpha, beta) = cluster.ring_link();
+    let n = cluster.n_devices as f64;
+    let g = d.slices() as f64;
+    let bytes = op.param_bytes();
+    rounds * (n - 1.0) * (g * alpha + bytes * beta / n)
+}
+
+/// Simulate one training iteration of `model` under per-op `decisions` at
+/// per-device batch `b`. `overlap` allows the comm stream to run ahead
+/// (prefetching gathers) as real FSDP implementations do; without it, every
+/// event serializes (the paper's additive cost model).
+pub fn simulate(model: &ModelDesc, decisions: &[Decision], cluster: &Cluster,
+                b: usize, checkpointing: bool, overlap: bool) -> Timeline {
+    assert_eq!(model.ops.len(), decisions.len());
+    let bf = b as f64;
+    let eff = crate::cost::time::batch_efficiency(b);
+    let mut events = Vec::new();
+    let mut comm_free = 0.0f64; // comm stream frontier
+    let mut comp_free = 0.0f64; // compute stream frontier
+
+    // helper: schedule on a stream, honoring dependency time `ready`
+    let mut schedule = |events: &mut Vec<Event>, comm: bool, ready: f64,
+                        dur: f64, op: &str, phase: Phase, bytes: f64|
+     -> f64 {
+        let stream = if comm { &mut comm_free } else { &mut comp_free };
+        let start = if overlap {
+            stream.max(ready)
+        } else {
+            // serial mode: both streams are one resource
+            let s = comm_free.max(comp_free).max(ready);
+            comm_free = s;
+            comp_free = s;
+            s
+        };
+        let end = start + dur;
+        if comm {
+            comm_free = end;
+            if !overlap {
+                comp_free = end;
+            }
+        } else {
+            comp_free = end;
+            if !overlap {
+                comm_free = end;
+            }
+        }
+        if dur > 0.0 {
+            events.push(Event {
+                op: op.to_string(),
+                phase,
+                start,
+                end,
+                bytes,
+            });
+        }
+        end
+    };
+
+    // ---------- forward ----------
+    // dependency: op i's forward compute needs its gather done
+    let mut fwd_done = vec![0.0f64; model.ops.len()];
+    let mut prev_fwd = 0.0f64;
+    for (i, (op, d)) in model.ops.iter().zip(decisions).enumerate() {
+        let gather = if d.zdp_slices > 0 {
+            // forward share of the gathers: one all-gather round
+            comm_seconds(op, *d, cluster, 1.0) * d.zdp_fraction()
+        } else {
+            0.0
+        };
+        // gathers have no data dependency (shards are resident): the comm
+        // stream prefetches ahead of compute, as real FSDP does
+        let g_end = schedule(&mut events, true, 0.0, gather, &op.name,
+                             Phase::FwdGather, op.param_bytes());
+        // forward compute = 1/3 of fwd+bwd flops
+        let fwd_t = bf * op.flops_per_sample / 3.0 / (cluster.flops * eff);
+        let ready = g_end.max(prev_fwd);
+        let f_end = schedule(&mut events, false, ready, fwd_t, &op.name,
+                             Phase::ForwardCompute, 0.0);
+        fwd_done[i] = f_end;
+        prev_fwd = f_end;
+    }
+
+    // ---------- backward (reverse op order) ----------
+    let mut prev_bwd = prev_fwd;
+    for (op, d) in model.ops.iter().zip(decisions).rev() {
+        let regather_rounds = if checkpointing { 2.0 } else { 1.0 };
+        let gather = if d.zdp_slices > 0 {
+            comm_seconds(op, *d, cluster, regather_rounds) * d.zdp_fraction()
+        } else {
+            0.0
+        };
+        let g_end = schedule(&mut events, true, 0.0, gather, &op.name,
+                             Phase::BwdGather, op.param_bytes());
+        let mut bwd_t =
+            bf * op.flops_per_sample * 2.0 / 3.0 / (cluster.flops * eff);
+        if checkpointing
+            && op.ckpt_act_bytes_per_sample < op.act_bytes_per_sample
+        {
+            // recompute forward before backward
+            bwd_t += bf * op.flops_per_sample / 3.0 / (cluster.flops * eff);
+        }
+        let ready = g_end.max(prev_bwd);
+        let b_end = schedule(&mut events, false, ready, bwd_t, &op.name,
+                             Phase::BackwardCompute, 0.0);
+        // gradient sync: DP slices pay 2 rounds (RS+AG); ZDP slices pay 1
+        // (RS only — the AG half was charged as the gathers above)
+        let sync = if op.shardable() {
+            let dp_part =
+                comm_seconds(op, *d, cluster, 2.0) * (1.0 - d.zdp_fraction());
+            let zdp_part =
+                comm_seconds(op, *d, cluster, 1.0) * d.zdp_fraction();
+            dp_part + zdp_part
+        } else {
+            0.0
+        };
+        schedule(&mut events, true, b_end, sync, &op.name, Phase::GradSync,
+                 op.param_bytes());
+        prev_bwd = b_end;
+    }
+
+    let iter_time = comm_free.max(comp_free);
+    let comm_busy: f64 =
+        events.iter().filter(|e| e.phase.is_comm()).map(Event::duration).sum();
+    let compute_busy: f64 = events
+        .iter()
+        .filter(|e| !e.phase.is_comm())
+        .map(Event::duration)
+        .sum();
+    Timeline { events, iter_time, comm_busy, compute_busy }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Cluster;
+    use crate::cost::Decision;
+    use crate::model::{GptDims, build_gpt};
+
+    fn setup() -> (ModelDesc, Cluster) {
+        let m = build_gpt(&GptDims::uniform("t", 1000, 64, 2, 128, 4));
+        (m, Cluster::rtx_titan(8, 8.0))
+    }
+
+    fn all(m: &ModelDesc, d: Decision) -> Vec<Decision> {
+        vec![d; m.ops.len()]
+    }
+
+    #[test]
+    fn zdp_timeline_slower_than_dp() {
+        let (m, c) = setup();
+        let dp = simulate(&m, &all(&m, Decision::DP), &c, 2, false, false);
+        let zdp = simulate(&m, &all(&m, Decision::ZDP), &c, 2, false, false);
+        assert!(zdp.iter_time > dp.iter_time);
+        // ZDP has gather events; DP has none
+        assert!(zdp.events.iter().any(|e| e.phase == Phase::FwdGather));
+        assert!(!dp.events.iter().any(|e| e.phase == Phase::FwdGather));
+    }
+
+    #[test]
+    fn serial_time_matches_additive_cost_model() {
+        // Without overlap, the timeline must equal Σ comm + Σ compute.
+        let (m, c) = setup();
+        let tl = simulate(&m, &all(&m, Decision::ZDP), &c, 2, false, false);
+        let want = tl.comm_busy + tl.compute_busy;
+        assert!((tl.iter_time - want).abs() / want < 1e-9);
+    }
+
+    #[test]
+    fn overlap_shortens_iteration() {
+        let (m, c) = setup();
+        let serial =
+            simulate(&m, &all(&m, Decision::ZDP), &c, 4, false, false);
+        let over = simulate(&m, &all(&m, Decision::ZDP), &c, 4, false, true);
+        assert!(over.iter_time < serial.iter_time);
+        // but never below either stream's busy time
+        assert!(over.iter_time >= over.comm_busy.max(over.compute_busy) - 1e-12);
+    }
+
+    #[test]
+    fn events_never_overlap_within_a_stream() {
+        let (m, c) = setup();
+        let tl = simulate(&m, &all(&m, Decision::ZDP), &c, 2, false, true);
+        let mut comm: Vec<&Event> =
+            tl.events.iter().filter(|e| e.phase.is_comm()).collect();
+        comm.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        for w in comm.windows(2) {
+            assert!(w[1].start >= w[0].end - 1e-12, "comm stream overlap");
+        }
+        let mut comp: Vec<&Event> =
+            tl.events.iter().filter(|e| !e.phase.is_comm()).collect();
+        comp.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        for w in comp.windows(2) {
+            assert!(w[1].start >= w[0].end - 1e-12, "compute stream overlap");
+        }
+    }
+
+    #[test]
+    fn checkpointing_adds_bwd_gather_and_recompute() {
+        let (m, c) = setup();
+        let plain = simulate(&m, &all(&m, Decision::ZDP), &c, 2, false, false);
+        let ckpt = simulate(&m, &all(&m, Decision::ZDP), &c, 2, true, false);
+        let plain_bg: f64 = plain.events.iter()
+            .filter(|e| e.phase == Phase::BwdGather)
+            .map(Event::duration).sum();
+        let ckpt_bg: f64 = ckpt.events.iter()
+            .filter(|e| e.phase == Phase::BwdGather)
+            .map(Event::duration).sum();
+        assert!((ckpt_bg / plain_bg - 2.0).abs() < 1e-9,
+                "ckpt doubles the backward gather");
+        assert!(ckpt.compute_busy > plain.compute_busy, "recompute");
+    }
+
+    #[test]
+    fn splitting_overhead_small_when_bandwidth_bound() {
+        // §3.3: for large operators the per-slice latency term is dwarfed
+        // by the bandwidth term, so splitting barely moves iteration time —
+        // while Figure 7 shows (and `cost::time` models) a real slowdown
+        // for small-hidden operators where α dominates.
+        let m = build_gpt(&GptDims::uniform("big", 1000, 512, 2, 4096, 8));
+        let c = Cluster::rtx_titan(8, 8.0);
+        let g1 = simulate(&m, &all(&m, Decision::zdp_at(1)), &c, 1, false,
+                          true);
+        let g8 = simulate(&m, &all(&m, Decision::zdp_at(8)), &c, 1, false,
+                          true);
+        assert!(g1.comm_busy > g1.compute_busy, "setup should be comm-bound");
+        let slowdown = g8.iter_time / g1.iter_time;
+        assert!(slowdown < 1.10, "split overhead visible: {slowdown}");
+
+        // and the contrast: a small-hidden model slows down markedly
+        let (small, c2) = setup();
+        let s1 = simulate(&small, &all(&small, Decision::zdp_at(1)), &c2, 1,
+                          false, true);
+        let s8 = simulate(&small, &all(&small, Decision::zdp_at(8)), &c2, 1,
+                          false, true);
+        assert!(s8.iter_time / s1.iter_time > 1.5,
+                "small ops should feel the per-slice latency");
+    }
+}

@@ -1,0 +1,59 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is offline with only the `xla` crate's vendored
+//! dependency closure available, so the JSON reader, RNG, stats, table
+//! printer, and property-testing helpers live here instead of coming from
+//! serde / rand / criterion / proptest.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Format a byte count human-readably (GiB/MiB/KiB).
+pub fn fmt_bytes(b: f64) -> String {
+    const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+    const MIB: f64 = 1024.0 * 1024.0;
+    const KIB: f64 = 1024.0;
+    if b >= GIB {
+        format!("{:.2} GiB", b / GIB)
+    } else if b >= MIB {
+        format!("{:.2} MiB", b / MIB)
+    } else if b >= KIB {
+        format!("{:.2} KiB", b / KIB)
+    } else {
+        format!("{:.0} B", b)
+    }
+}
+
+/// Format seconds with an adaptive unit (s/ms/µs).
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512.0), "512 B");
+        assert_eq!(fmt_bytes(2048.0), "2.00 KiB");
+        assert_eq!(fmt_bytes(3.5 * 1024.0 * 1024.0), "3.50 MiB");
+        assert_eq!(fmt_bytes(8.0 * 1024.0 * 1024.0 * 1024.0), "8.00 GiB");
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(2.5), "2.500 s");
+        assert_eq!(fmt_time(0.0125), "12.500 ms");
+        assert_eq!(fmt_time(3e-6), "3.0 µs");
+    }
+}

@@ -1,0 +1,97 @@
+//! Tiny property-testing harness (proptest substitute).
+//!
+//! `check(seed, cases, gen, prop)` runs `prop` on `cases` generated inputs;
+//! on failure it retries with a simple halving shrinker over the generator's
+//! size budget and panics with the seed + the smallest failing case found,
+//! so failures are reproducible (`Rng::new(seed)`).
+
+use super::rng::Rng;
+use std::fmt::Debug;
+
+/// Run a property over `cases` random inputs.
+///
+/// `gen(rng, size)` draws a case at complexity `size` in `[1, 100]`;
+/// `prop(case)` returns `Err(reason)` on violation.
+pub fn check<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: Debug + Clone,
+    G: FnMut(&mut Rng, usize) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case_idx in 0..cases {
+        // ramp complexity up over the run, like proptest's sizing
+        let size = 1 + (case_idx * 100) / cases.max(1);
+        let case = gen(&mut rng, size);
+        if let Err(reason) = prop(&case) {
+            // shrink: re-generate at smaller sizes from a derived seed and
+            // keep the smallest failure
+            let mut smallest = (case.clone(), reason.clone(), size);
+            let mut srng = Rng::new(seed ^ 0xdead_beef);
+            let mut s = size;
+            while s > 1 {
+                s /= 2;
+                for _ in 0..16 {
+                    let c = gen(&mut srng, s);
+                    if let Err(r) = prop(&c) {
+                        smallest = (c, r, s);
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case #{case_idx}, size={}):\n  \
+                 case: {:?}\n  reason: {}",
+                smallest.2, smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Assert two f64 values are close (absolute + relative tolerance).
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (tol {tol}, diff {})", (a - b).abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            1,
+            50,
+            |rng, size| rng.range(0, size),
+            |&x| {
+                count += 1;
+                if x <= 100 { Ok(()) } else { Err("impossible".into()) }
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            2,
+            50,
+            |rng, _| rng.range(0, 1000),
+            |&x| if x < 990 { Ok(()) } else { Err(format!("{x} too big")) },
+        );
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6).is_ok());
+        assert!(close(1e9, 1e9 * (1.0 + 1e-9), 1e-6).is_ok());
+        assert!(close(1.0, 1.1, 1e-6).is_err());
+    }
+}

@@ -1,0 +1,79 @@
+//! Integration: config files load end-to-end; figure generators honor the
+//! paper's qualitative invariants at reduced scale; failure paths fail
+//! loudly.
+
+use osdp::config::{GIB, RunConfig};
+use osdp::figures::{self, Quality};
+use osdp::metrics::speedup;
+
+#[test]
+fn shipped_config_files_parse() {
+    for f in ["configs/rtx_titan_8x8g.toml", "configs/two_server_a100_16g.toml",
+              "configs/cpu_testbed.toml"] {
+        let cfg = RunConfig::from_file(f)
+            .unwrap_or_else(|e| panic!("{f}: {e}"));
+        assert!(cfg.cluster.validate().is_ok(), "{f}");
+        assert!(cfg.cluster.mem_limit >= 1.0 * GIB);
+    }
+    // the custom testbed overrides flops
+    let cpu = RunConfig::from_file("configs/cpu_testbed.toml").unwrap();
+    assert_eq!(cpu.cluster.flops, 5.0e10);
+    assert_eq!(cpu.cluster.n_devices, 4);
+}
+
+#[test]
+fn missing_config_file_is_error() {
+    assert!(RunConfig::from_file("configs/nope.toml").is_err());
+}
+
+#[test]
+fn fig7_is_deterministic() {
+    let (_, a) = figures::fig7();
+    let (_, b) = figures::fig7();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn fig9_margin_positive_under_memory_pressure() {
+    // at 8G (memory-limited) OSDP must beat FSDP with ckpt on — the
+    // Figure 9 direction
+    let fig = figures::fig9(8.0, Quality::Quick);
+    let s = speedup(&fig, "OSDP", "FSDP").expect("both feasible somewhere");
+    assert!(s.avg >= 1.0, "avg {}", s.avg);
+    assert!(s.max > 1.05, "max {}", s.max);
+}
+
+#[test]
+fn table1_row_count_matches_zoo() {
+    let t = figures::table1();
+    // header + separator + 12 settings
+    assert_eq!(t.lines().count(), 1 + 2 + 12);
+}
+
+#[test]
+fn gantt_zdp_charges_three_collectives_worth() {
+    let g = figures::fig1_gantt();
+    // Figure 1's claim is about *communication*: ZDP pays 3 rounds vs
+    // DP's 2 (1.5×). Parse the "comm busy" column of both headers.
+    let comm: Vec<f64> = g
+        .lines()
+        .filter(|l| l.starts_with("iteration"))
+        .map(|l| {
+            l.split("comm busy").nth(1).unwrap().trim()
+                .split_whitespace().next().unwrap()
+                .parse::<f64>().unwrap()
+        })
+        .collect();
+    assert_eq!(comm.len(), 2);
+    let ratio = comm[1] / comm[0];
+    assert!((ratio - 1.5).abs() < 0.01, "ZDP/DP comm ratio {ratio}");
+    // and the ZDP iteration is visibly longer end-to-end
+    let iters: Vec<f64> = g
+        .lines()
+        .filter(|l| l.starts_with("iteration"))
+        .map(|l| {
+            l.split_whitespace().nth(1).unwrap().parse::<f64>().unwrap()
+        })
+        .collect();
+    assert!(iters[1] > iters[0] * 1.02, "{iters:?}");
+}

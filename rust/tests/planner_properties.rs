@@ -1,0 +1,183 @@
+//! Property-based integration tests on the planner (proptest-style via
+//! util::prop): optimality, feasibility, monotonicity, and dominance
+//! invariants over randomized models, clusters and limits.
+
+use osdp::config::{Cluster, SearchConfig};
+use osdp::cost::Profiler;
+use osdp::model::{GptDims, build_gpt};
+use osdp::planner::{ExecutionPlan, dfs_search, exhaustive_search,
+                    greedy_search};
+use osdp::util::prop;
+use osdp::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+struct Instance {
+    layers: usize,
+    hidden: usize,
+    n_dev: usize,
+    b: usize,
+    limit_frac: f64,
+    grans: Vec<usize>,
+}
+
+fn gen_instance(rng: &mut Rng, size: usize) -> Instance {
+    Instance {
+        layers: rng.range(1, 1 + size / 30),
+        hidden: 32 * rng.range(1, 6),
+        n_dev: *rng.pick(&[2usize, 4, 8]),
+        b: rng.range(1, 4),
+        limit_frac: 0.25 + rng.f64() * 1.1,
+        grans: if rng.chance(0.5) { vec![0] } else { vec![0, 2] },
+    }
+}
+
+fn build(inst: &Instance) -> (Profiler, f64) {
+    let m = build_gpt(&GptDims::uniform("p", 1000, 64, inst.layers,
+                                        inst.hidden, 2));
+    let c = Cluster::rtx_titan(inst.n_dev, 8.0);
+    let s = SearchConfig { granularities: inst.grans.clone(),
+                           ..Default::default() };
+    let p = Profiler::new(&m, &c, &s);
+    let dp_mem = p.evaluate(&p.index_of(|d| d.is_pure_dp()), inst.b).peak_mem;
+    (p, dp_mem * inst.limit_frac)
+}
+
+/// DFS equals brute force wherever brute force is affordable.
+#[test]
+fn prop_dfs_is_exact() {
+    prop::check(0xE1AC7, 20, gen_instance, |inst| {
+        let (p, limit) = build(inst);
+        if p.log10_plan_space() > 5.5 {
+            return Ok(()); // brute force too big; covered by other props
+        }
+        let brute = exhaustive_search(&p, limit, inst.b);
+        let smart = dfs_search(&p, limit, inst.b);
+        match (brute, smart) {
+            (None, None) => Ok(()),
+            (Some((_, bc)), Some((_, sc, _))) => {
+                prop::close(bc.time, sc.time, 1e-10)
+            }
+            (b, s) => Err(format!(
+                "feasibility disagreement: brute={:?} dfs={:?}",
+                b.is_some(),
+                s.is_some()
+            )),
+        }
+    });
+}
+
+/// Any returned plan respects the memory limit, and greedy never beats DFS.
+#[test]
+fn prop_feasible_and_dominant() {
+    prop::check(0xFEA51B, 30, gen_instance, |inst| {
+        let (p, limit) = build(inst);
+        let smart = dfs_search(&p, limit, inst.b);
+        let greedy = greedy_search(&p, limit, inst.b);
+        match (&smart, &greedy) {
+            (Some((_, sc, _)), Some((_, gc))) => {
+                if sc.peak_mem > limit {
+                    return Err(format!("DFS overflows: {}", sc.peak_mem));
+                }
+                if gc.peak_mem > limit {
+                    return Err(format!("greedy overflows: {}", gc.peak_mem));
+                }
+                if gc.time < sc.time - 1e-12 {
+                    return Err(format!(
+                        "greedy {} beat exact {}", gc.time, sc.time
+                    ));
+                }
+                Ok(())
+            }
+            (None, Some(_)) => {
+                Err("greedy feasible but DFS said infeasible".into())
+            }
+            // greedy may fail where DFS succeeds (heuristic) — but our
+            // greedy saturates to min memory, so it shouldn't. Flag it.
+            (Some(_), None) => {
+                Err("DFS feasible but greedy said infeasible".into())
+            }
+            (None, None) => Ok(()),
+        }
+    });
+}
+
+/// Loosening the memory limit never slows the optimal plan.
+#[test]
+fn prop_monotone_in_limit() {
+    prop::check(0x300700, 15, gen_instance, |inst| {
+        let (p, limit) = build(inst);
+        let tighter = dfs_search(&p, limit, inst.b);
+        let looser = dfs_search(&p, limit * 1.3, inst.b);
+        match (tighter, looser) {
+            (Some((_, tc, _)), Some((_, lc, _))) => {
+                if lc.time <= tc.time + 1e-12 {
+                    Ok(())
+                } else {
+                    Err(format!("loosening slowed plan: {} -> {}", tc.time,
+                                lc.time))
+                }
+            }
+            (Some(_), None) => Err("loosening lost feasibility".into()),
+            _ => Ok(()),
+        }
+    });
+}
+
+/// The optimal plan never loses to the fixed all-DP / all-ZDP baselines.
+#[test]
+fn prop_dominates_fixed_modes() {
+    prop::check(0xD031, 25, gen_instance, |inst| {
+        let (p, limit) = build(inst);
+        let smart = dfs_search(&p, limit, inst.b);
+        let Some((choice, sc, _)) = smart else { return Ok(()) };
+        let plan = ExecutionPlan::from_choice(&p, choice, inst.b);
+        assert_eq!(plan.cost.time, sc.time);
+        for pred in [
+            |d: &osdp::cost::Decision| d.is_pure_dp(),
+            |d: &osdp::cost::Decision| d.is_pure_zdp() && d.granularity == 0,
+        ] {
+            let fixed = p.index_of(pred);
+            let cost = p.evaluate(&fixed, inst.b);
+            if cost.peak_mem <= limit && cost.time < sc.time - 1e-12 {
+                return Err(format!(
+                    "fixed-mode plan beat the search: {} < {}",
+                    cost.time, sc.time
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Enlarging the decision menu (splitting granularities) never hurts.
+#[test]
+fn prop_bigger_menu_never_hurts() {
+    prop::check(0xB16, 15, gen_instance, |inst| {
+        let m = build_gpt(&GptDims::uniform("p", 1000, 64, inst.layers,
+                                            inst.hidden, 2));
+        let c = Cluster::rtx_titan(inst.n_dev, 8.0);
+        let base_cfg = SearchConfig { granularities: vec![0],
+                                      ..Default::default() };
+        let big_cfg = SearchConfig { granularities: vec![0, 2, 4],
+                                     ..Default::default() };
+        let pb = Profiler::new(&m, &c, &base_cfg);
+        let pg = Profiler::new(&m, &c, &big_cfg);
+        let dp_mem =
+            pb.evaluate(&pb.index_of(|d| d.is_pure_dp()), inst.b).peak_mem;
+        let limit = dp_mem * inst.limit_frac;
+        let base = dfs_search(&pb, limit, inst.b);
+        let big = dfs_search(&pg, limit, inst.b);
+        match (base, big) {
+            (Some((_, bc, _)), Some((_, gc, _))) => {
+                if gc.time <= bc.time + 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("bigger menu slower: {} vs {}", gc.time,
+                                bc.time))
+                }
+            }
+            (Some(_), None) => Err("bigger menu lost feasibility".into()),
+            _ => Ok(()),
+        }
+    });
+}

@@ -1,0 +1,119 @@
+//! Cross-validation: the analytic (α,β,γ) cost model, the discrete-event
+//! simulator, and the byte-moving fabric must agree on communication time —
+//! three independent implementations of the same physics.
+
+use osdp::collectives::{all_gather, all_reduce, reduce_scatter,
+                        ring_model_seconds};
+use osdp::config::Cluster;
+use osdp::cost::{Decision, op_comm_time};
+use osdp::fabric::{self, Topology};
+use osdp::model::{GptDims, build_gpt};
+use osdp::sim;
+
+const ALPHA: f64 = 5e-6;
+const BETA: f64 = 2e-10;
+
+fn max_clock(times: Vec<((), f64)>) -> f64 {
+    times.into_iter().map(|(_, t)| t).fold(0.0, f64::max)
+}
+
+/// Fabric all-reduce realizes the paper's 2(N-1)(α+Sβ/N) within tolerance.
+#[test]
+fn fabric_all_reduce_matches_analytic_model() {
+    for n in [2usize, 4, 8] {
+        for len in [1usize << 14, 1 << 18] {
+            let topo = Topology::flat(n, ALPHA, BETA);
+            let t = max_clock(fabric::run_timed(n, topo, move |ep| {
+                all_reduce(ep, &vec![1.0f32; len]);
+            }));
+            let model =
+                ring_model_seconds(2.0, (len * 4) as f64, n, ALPHA, BETA);
+            let ratio = t / model;
+            assert!(
+                (0.7..1.4).contains(&ratio),
+                "n={n} len={len}: fabric {t:.6} vs model {model:.6}"
+            );
+        }
+    }
+}
+
+/// The ZDP collective sequence (gather + gather + reduce-scatter) costs
+/// ≈1.5× the DP sequence on the fabric too, not just in the formula.
+#[test]
+fn fabric_zdp_sequence_is_1_5x_dp() {
+    let n = 8;
+    let len = 1 << 18;
+    let topo = Topology::flat(n, ALPHA, BETA);
+    // DP: one all-reduce (RS + AG)
+    let t_dp = max_clock(fabric::run_timed(n, topo.clone(), move |ep| {
+        all_reduce(ep, &vec![1.0f32; len]);
+    }));
+    // ZDP: two all-gathers (fwd + bwd re-gather) + one reduce-scatter
+    let t_zdp = max_clock(fabric::run_timed(n, topo, move |ep| {
+        let shard = vec![1.0f32; len / 8];
+        all_gather(ep, &shard, len);
+        all_gather(ep, &shard, len);
+        reduce_scatter(ep, &vec![1.0f32; len]);
+    }));
+    let ratio = t_zdp / t_dp;
+    assert!(
+        (1.3..1.7).contains(&ratio),
+        "ZDP/DP comm ratio {ratio} (expected ≈1.5)"
+    );
+}
+
+/// Simulator serial-mode iteration time equals the cost model's Σ T_i.
+#[test]
+fn sim_matches_cost_model_sum() {
+    let m = build_gpt(&GptDims::uniform("x", 2000, 128, 3, 256, 4));
+    let c = Cluster::rtx_titan(8, 8.0);
+    for d in [Decision::DP, Decision::ZDP, Decision::zdp_at(4)] {
+        let decisions = vec![d; m.ops.len()];
+        let tl = sim::simulate(&m, &decisions, &c, 2, false, false);
+        let comm_expected: f64 = m
+            .ops
+            .iter()
+            .map(|op| op_comm_time(op, d, &c, false))
+            .sum();
+        assert!(
+            (tl.comm_busy - comm_expected).abs() / comm_expected.max(1e-12)
+                < 1e-6,
+            "{}: sim comm {} vs model {}",
+            d.label(),
+            tl.comm_busy,
+            comm_expected
+        );
+    }
+}
+
+/// Hierarchical all-reduce beats the flat ring across a slow inter-node
+/// link — and both deliver identical sums.
+#[test]
+fn hierarchical_wins_across_nodes() {
+    use osdp::collectives::hier_all_reduce;
+    let topo = Topology {
+        n_devices: 8,
+        devices_per_node: 4,
+        alpha_intra: 1e-6,
+        beta_intra: 1e-11,
+        alpha_inter: 2e-5,
+        beta_inter: 8e-10,
+    };
+    let len = 1 << 18;
+    let flat = fabric::run_timed(8, topo.clone(), move |ep| {
+        all_reduce(ep, &vec![ep.rank as f32; len])[0]
+    });
+    let hier = fabric::run_timed(8, topo, move |ep| {
+        hier_all_reduce(ep, &vec![ep.rank as f32; len])[0]
+    });
+    let want: f32 = (0..8).map(|r| r as f32).sum();
+    for (v, _) in &flat {
+        assert_eq!(*v, want);
+    }
+    for (v, _) in &hier {
+        assert_eq!(*v, want);
+    }
+    let t_flat = flat.iter().map(|(_, t)| *t).fold(0.0, f64::max);
+    let t_hier = hier.iter().map(|(_, t)| *t).fold(0.0, f64::max);
+    assert!(t_hier < t_flat, "hier {t_hier} vs flat {t_flat}");
+}

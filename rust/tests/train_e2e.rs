@@ -1,0 +1,116 @@
+//! End-to-end integration over the real runtime: AOT artifacts → PJRT →
+//! fabric collectives → training. Skips politely when artifacts are absent
+//! (`make artifacts`).
+
+use osdp::fabric::Topology;
+use osdp::config::Cluster;
+use osdp::runtime::{artifacts_available, default_artifact_dir};
+use osdp::train::{ShardMode, TrainConfig, train};
+
+fn cfg(mode: ShardMode, workers: usize, steps: usize) -> TrainConfig {
+    let c = Cluster::rtx_titan(workers, 8.0);
+    TrainConfig {
+        model: "tiny".into(),
+        n_workers: workers,
+        steps,
+        mode,
+        seed: 11,
+        topology: Topology::from_cluster(&c),
+        mem_limit: c.mem_limit,
+        log_every: 0,
+        device_flops: c.flops,
+        reshard_after_forward: true,
+    }
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("SKIP: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+/// Four-way ZDP training descends and matches the corpus structure.
+#[test]
+fn zdp_four_workers_descends() {
+    require_artifacts!();
+    let rep = train(default_artifact_dir(), cfg(ShardMode::Zdp, 4, 25))
+        .expect("training");
+    assert_eq!(rep.steps.len(), 25);
+    assert!(
+        rep.last_loss() < rep.first_loss() * 0.95,
+        "expected descent: {} -> {}",
+        rep.first_loss(),
+        rep.last_loss()
+    );
+}
+
+/// DP and ZDP make identical optimization trajectories at every worker
+/// count — sharding changes the layout, never the math.
+#[test]
+fn dp_equals_zdp_across_worker_counts() {
+    require_artifacts!();
+    for workers in [1usize, 2, 4] {
+        let dp = train(default_artifact_dir(), cfg(ShardMode::Dp, workers, 5))
+            .expect("dp");
+        let zdp =
+            train(default_artifact_dir(), cfg(ShardMode::Zdp, workers, 5))
+                .expect("zdp");
+        for (a, b) in dp.steps.iter().zip(&zdp.steps) {
+            assert!(
+                (a.loss - b.loss).abs() < 5e-4,
+                "workers={workers} step {}: {} vs {}",
+                a.step,
+                a.loss,
+                b.loss
+            );
+        }
+    }
+}
+
+/// Changing the worker count preserves the *global* computation when the
+/// global batch is fixed by construction? It is not (batch per worker is
+/// fixed), so instead check determinism: same config twice = same losses.
+#[test]
+fn training_is_deterministic() {
+    require_artifacts!();
+    let a = train(default_artifact_dir(), cfg(ShardMode::Zdp, 2, 4)).unwrap();
+    let b = train(default_artifact_dir(), cfg(ShardMode::Zdp, 2, 4)).unwrap();
+    for (x, y) in a.steps.iter().zip(&b.steps) {
+        assert_eq!(x.loss, y.loss, "nondeterminism at step {}", x.step);
+    }
+}
+
+/// ZDP moves more bytes than DP (the 1.5× of Figure 1) and the simulated
+/// clock reflects the (α,β) charges.
+#[test]
+fn zdp_pays_more_communication() {
+    require_artifacts!();
+    let dp = train(default_artifact_dir(), cfg(ShardMode::Dp, 4, 3)).unwrap();
+    let zdp = train(default_artifact_dir(), cfg(ShardMode::Zdp, 4, 3)).unwrap();
+    let ratio = zdp.bytes_sent_per_worker as f64
+        / dp.bytes_sent_per_worker as f64;
+    // DP all-reduce sends 2·(N−1)/N·P per worker; ZDP gather+gather+RS
+    // sends (N−1)/N·(P + P + P) = 1.5× — allow loose bounds for the loss
+    // collective etc.
+    assert!(
+        (1.3..1.7).contains(&ratio),
+        "ZDP/DP bytes ratio {ratio} (expected ≈1.5)"
+    );
+    assert!(zdp.sim_seconds > dp.sim_seconds * 0.9);
+}
+
+/// Memory tracker: ZDP peak (shards + transient gather) sits well under
+/// DP peak (full states) for the tiny model at 4 workers.
+#[test]
+fn tracked_memory_reflects_sharding() {
+    require_artifacts!();
+    let dp = train(default_artifact_dir(), cfg(ShardMode::Dp, 4, 2)).unwrap();
+    let zdp = train(default_artifact_dir(), cfg(ShardMode::Zdp, 4, 2)).unwrap();
+    // tiny: P = 136960 f32. DP states = 16·P bytes; ZDP = 4·P + gather 4·P.
+    let p_bytes = 136_960.0 * 4.0;
+    assert!((dp.peak_mem - 4.0 * p_bytes).abs() < 1.0);
+    assert!((zdp.peak_mem - (p_bytes + p_bytes)).abs() < 1.0);
+}
