@@ -1,0 +1,41 @@
+# Reproduce CI locally before pushing: `make ci` runs the same commands
+# .github/workflows/ci.yml runs (tier-1 verify = build + test).
+
+CARGO ?= cargo
+PY ?= python3
+
+.PHONY: ci build test fmt clippy bench-smoke python-test artifacts
+
+ci: build test fmt clippy bench-smoke python-test
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+# Advisory for now (the imported seed tree predates rustfmt/clippy); CI
+# mirrors this with continue-on-error until the tree is formatted.
+fmt:
+	-$(CARGO) fmt --check
+
+clippy:
+	-$(CARGO) clippy --all-targets -- -D warnings
+
+# Benches compile everywhere; running them is a local-only activity.
+bench-smoke:
+	$(CARGO) bench --no-run
+
+# pytest exit 5 = nothing collected/selected (e.g. hypothesis missing):
+# not a failure for this gate.
+python-test:
+	@if $(PY) -c "import jax" 2>/dev/null; then \
+		$(PY) -m pytest python/tests -q -m "not perf"; \
+		rc=$$?; test $$rc -eq 0 -o $$rc -eq 5; \
+	else \
+		echo "JAX unavailable - skipping python kernel tests"; \
+	fi
+
+# AOT-compile the JAX/Pallas artifacts the training runtime executes.
+artifacts:
+	cd python && $(PY) compile/aot.py --out ../artifacts

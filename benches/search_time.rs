@@ -10,7 +10,7 @@ use osdp::bench::Bencher;
 use osdp::config::{Cluster, GIB, SearchConfig};
 use osdp::cost::Profiler;
 use osdp::figures::{self, Quality};
-use osdp::planner::{Scheduler, dfs_search};
+use osdp::planner::{ParallelConfig, Scheduler, dfs_search, parallel_search};
 
 fn main() {
     println!("== per-setting scheduler wall clock (paper: 9-307 s) ==");
@@ -54,4 +54,50 @@ fn main() {
     println!("full batch sweep: {}", osdp::util::fmt_time(m3.per_iter()));
     assert!(m3.per_iter() < 307.0,
             "must not exceed the paper's own upper bound");
+
+    // serial DFS vs the parallel branch-and-bound on the same GPT-XL-class
+    // menu (zoo 96L/1536H, 2.9B params — the search the tentpole targets)
+    println!("\n== serial vs parallel B&B (GPT-XL-class 96L/1536H, b=4) ==");
+    let limit = 16.0 * GIB;
+    let mut bs = Bencher::new(1, 5, 1);
+    let ms = bs.bench("search/serial_dfs", || {
+        dfs_search(&profiler, limit, 4)
+    });
+    let cfg1 = ParallelConfig { threads: 1, ..Default::default() };
+    let cfg8 = ParallelConfig { threads: 8, ..Default::default() };
+    let mut b1 = Bencher::new(1, 5, 1);
+    let m1 = b1.bench("search/parallel_1thread", || {
+        parallel_search(&profiler, limit, 4, &cfg1)
+    });
+    let mut b8 = Bencher::new(1, 5, 1);
+    let m8 = b8.bench("search/parallel_8threads", || {
+        parallel_search(&profiler, limit, 4, &cfg8)
+    });
+    print!("{}{}{}", bs.report(), b1.report(), b8.report());
+
+    // same answer, bit-identical, whatever the thread count (guaranteed
+    // whenever the node budget doesn't expire; budget slicing differs
+    // between the serial and parallel engines, so gate on completeness)
+    let serial = dfs_search(&profiler, limit, 4).unwrap();
+    let par = parallel_search(&profiler, limit, 4, &cfg8).unwrap();
+    if serial.2.complete && par.2.complete {
+        assert_eq!(serial.0, par.0, "parallel B&B must match serial DFS");
+        assert_eq!(serial.1.time.to_bits(), par.1.time.to_bits());
+    } else {
+        println!("(budget expired: skipping bit-identity check; \
+                  serial {} vs parallel {} s)",
+                 serial.1.time, par.1.time);
+    }
+
+    let speedup = ms.per_iter() / m8.per_iter();
+    println!(
+        "serial {} | parallel(1) {} | parallel(8) {} | speedup {speedup:.2}x",
+        osdp::util::fmt_time(ms.per_iter()),
+        osdp::util::fmt_time(m1.per_iter()),
+        osdp::util::fmt_time(m8.per_iter()),
+    );
+    if std::env::var_os("OSDP_BENCH_STRICT").is_some() {
+        assert!(speedup >= 2.0,
+                "expected >=2x at 8 threads, measured {speedup:.2}x");
+    }
 }

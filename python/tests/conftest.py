@@ -1,5 +1,21 @@
+import importlib.util
 import os
 import sys
 
 # Tests import `compile.*` relative to python/ regardless of invocation dir.
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def _missing(mod):
+    return importlib.util.find_spec(mod) is None
+
+
+# Skip gracefully when optional heavyweight deps are absent (CI installs
+# JAX best-effort; offline containers may lack hypothesis too).
+collect_ignore = []
+if _missing("jax"):
+    collect_ignore += [
+        "test_kernels.py", "test_model.py", "test_perf_structure.py",
+    ]
+elif _missing("hypothesis"):
+    collect_ignore += ["test_kernels.py", "test_model.py"]

@@ -18,6 +18,10 @@ import pytest
 from compile.kernels.split_matmul import vmem_footprint_bytes
 from compile import model as M
 
+# CI runs `-m "not perf"`: these checks are analytical (no TPU), but they
+# sweep every model config and don't gate correctness.
+pytestmark = pytest.mark.perf
+
 VMEM_BUDGET = 16 * 1024 * 1024  # bytes per core
 DOUBLE_BUFFER = 2  # in/out staging headroom
 

@@ -55,6 +55,17 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Optional integer flag: `None` when absent, so callers can
+    /// distinguish "use the computed default" (e.g. `--threads` defaulting
+    /// to the hardware parallelism) from an explicit value.
+    pub fn usize_opt(&self, key: &str) -> Option<usize> {
+        self.get(key).map(|v| {
+            v.parse().unwrap_or_else(|_| {
+                panic!("--{key} expects an integer, got '{v}'")
+            })
+        })
+    }
+
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.get(key)
             .map(|v| v.parse().unwrap_or_else(|_| {
@@ -107,6 +118,14 @@ mod tests {
         let a = parse("zoo");
         assert_eq!(a.usize_or("devices", 8), 8);
         assert_eq!(a.get_or("model", "tiny"), "tiny");
+    }
+
+    #[test]
+    fn optional_integers_distinguish_absent() {
+        let a = parse("plan --threads 8 --split-depth 2");
+        assert_eq!(a.usize_opt("threads"), Some(8));
+        assert_eq!(a.usize_opt("split-depth"), Some(2));
+        assert_eq!(a.usize_opt("batch"), None);
     }
 
     #[test]

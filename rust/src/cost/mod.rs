@@ -3,10 +3,12 @@
 //! the Profiler that precomputes per-op cost tables for the search engine.
 
 pub mod memory;
+pub mod menu;
 pub mod profiler;
 pub mod time;
 
 pub use memory::{MemoryCost, op_memory};
+pub use menu::{MenuStats, pareto_filter};
 pub use profiler::{DecisionCost, OpCostTable, PlanCost, Profiler};
 pub use time::{comm_rounds, op_comm_time, op_compute_time};
 

@@ -1,6 +1,8 @@
 //! The Profiler (Figure 2): turns a model description + device information
 //! into per-operator cost tables the Search Engine evaluates millions of
-//! times, and prunes each operator's decision menu to its Pareto frontier.
+//! times, and prunes each operator's decision menu to its Pareto frontier
+//! (the [`super::menu`] preprocessing pass; per-menu reductions are kept
+//! in [`Profiler::menu_stats`]).
 //!
 //! Every quantity is split into decision-independent per-sample terms
 //! (activations, workspace, γ_i) and per-decision terms (comm seconds,
@@ -8,6 +10,7 @@
 //! full plan is a handful of fused multiply-adds per operator.
 
 use super::memory::op_memory;
+use super::menu::{self, MenuStats};
 use super::time::{batch_efficiency, op_comm_time, SPLIT_LAUNCH_OVERHEAD};
 use super::Decision;
 use crate::config::{Cluster, SearchConfig};
@@ -33,8 +36,9 @@ impl DecisionCost {
         self.comm + self.launch
     }
 
-    /// `self` is at least as good as `other` on every axis.
-    fn dominates(&self, other: &DecisionCost) -> bool {
+    /// `self` is at least as good as `other` on every axis (the dominance
+    /// relation of the [`super::menu`] preprocessing pass).
+    pub fn dominates(&self, other: &DecisionCost) -> bool {
         self.time_fixed() <= other.time_fixed()
             && self.states <= other.states
             && self.gather <= other.gather
@@ -99,11 +103,22 @@ pub struct Profiler {
     pub cluster: Cluster,
     pub checkpointing: bool,
     pub tables: Vec<OpCostTable>,
+    /// Per-operator menu sizes before/after dominance filtering (same
+    /// order as `tables`).
+    pub menu_stats: Vec<MenuStats>,
 }
 
 impl Profiler {
     pub fn new(model: &ModelDesc, cluster: &Cluster,
                search: &SearchConfig) -> Profiler {
+        Profiler::with_pruning(model, cluster, search, true)
+    }
+
+    /// [`Profiler::new`] with the menu dominance filter optionally
+    /// disabled — ground truth for "pruning never removes the optimum"
+    /// tests; production callers always prune.
+    pub fn with_pruning(model: &ModelDesc, cluster: &Cluster,
+                        search: &SearchConfig, prune: bool) -> Profiler {
         let model_owned;
         let model = if search.paper_granularity {
             model_owned = model.fuse_paper_granularity();
@@ -113,7 +128,7 @@ impl Profiler {
         };
         let ck = search.checkpointing;
         let n = cluster.n_devices;
-        let tables = model
+        let (tables, menu_stats): (Vec<_>, Vec<_>) = model
             .ops
             .iter()
             .map(|op| {
@@ -145,7 +160,7 @@ impl Profiler {
                         cands.push(Decision::ZDP);
                     }
                 }
-                let mut options: Vec<DecisionCost> = cands
+                let raw: Vec<DecisionCost> = cands
                     .into_iter()
                     .map(|d| {
                         let mem = op_memory(op, d, 1, n, ck);
@@ -159,11 +174,14 @@ impl Profiler {
                         }
                     })
                     .collect();
-                // Pareto-prune: drop every dominated decision.
-                options = pareto(options);
-                options.sort_by(|a, b| {
-                    a.time_fixed().partial_cmp(&b.time_fixed()).unwrap()
-                });
+                // Menu preprocessing: drop every dominated decision (or,
+                // for ground-truth profilers, keep the raw menu under the
+                // same fastest-first ordering invariant).
+                let (options, mstats) = if prune {
+                    menu::pareto_filter(raw)
+                } else {
+                    menu::sorted_unfiltered(raw)
+                };
 
                 // raw γ_i (seconds per sample at 100% efficiency);
                 // evaluate() divides by batch_efficiency(b)
@@ -174,20 +192,36 @@ impl Profiler {
                 }
                 let gamma = flops / cluster.flops;
                 let mem1 = op_memory(op, Decision::DP, 1, n, ck);
-                OpCostTable {
+                let table = OpCostTable {
                     name: op.name.clone(),
                     options,
                     act_per_sample: mem1.activations,
                     workspace_per_sample: mem1.workspace,
                     gamma,
-                }
+                };
+                (table, mstats)
             })
-            .collect();
-        Profiler { cluster: cluster.clone(), checkpointing: ck, tables }
+            .unzip();
+        Profiler {
+            cluster: cluster.clone(),
+            checkpointing: ck,
+            tables,
+            menu_stats,
+        }
     }
 
     pub fn n_ops(&self) -> usize {
         self.tables.len()
+    }
+
+    /// Aggregate menu reduction across all operators: how many raw
+    /// candidate decisions the dominance pass saw and how many survived.
+    pub fn menu_reduction(&self) -> MenuStats {
+        let mut total = MenuStats::default();
+        for s in &self.menu_stats {
+            total.absorb(s);
+        }
+        total
     }
 
     /// Total decision-space size (product of menu sizes), as a log10.
@@ -228,28 +262,6 @@ impl Profiler {
     }
 }
 
-fn pareto(options: Vec<DecisionCost>) -> Vec<DecisionCost> {
-    let mut keep: Vec<DecisionCost> = Vec::new();
-    for o in &options {
-        if options
-            .iter()
-            .any(|p| p != o && p.dominates(o) && !o.dominates(p))
-        {
-            continue;
-        }
-        // also dedupe exact ties
-        if keep.iter().any(|k| {
-            k.time_fixed() == o.time_fixed()
-                && k.states == o.states
-                && k.gather == o.gather
-        }) {
-            continue;
-        }
-        keep.push(*o);
-    }
-    keep
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -285,6 +297,14 @@ mod tests {
                 }
             }
         }
+        // the per-menu bookkeeping matches the tables
+        assert_eq!(p.menu_stats.len(), p.n_ops());
+        for (t, s) in p.tables.iter().zip(&p.menu_stats) {
+            assert_eq!(t.options.len(), s.kept);
+            assert!(s.kept <= s.raw);
+        }
+        assert!(p.menu_reduction().removed() > 0,
+                "the {{0,4}} menus must contain dominated entries");
     }
 
     #[test]

@@ -5,12 +5,17 @@
 //! rust + JAX + Pallas system:
 //!
 //! * **L3 (this crate)** — the paper's system: per-operator DP/ZDP mode
-//!   search under a device memory limit ([`planner`]), the (α,β,γ) cost
-//!   model ([`cost`]), operator splitting, baseline parallel strategies
-//!   ([`parallel`]), a simulated multi-device fabric with real byte-moving
-//!   ring collectives ([`fabric`], [`collectives`]), a discrete-event
-//!   timeline simulator ([`sim`]), and a real training runtime executing
-//!   AOT-compiled JAX/Pallas artifacts over PJRT ([`runtime`], [`train`]).
+//!   search under a device memory limit ([`planner`]) — an exact
+//!   branch-and-bound, available serial ([`planner::dfs`]) or split
+//!   across a `std::thread` worker pool with a shared atomic incumbent
+//!   ([`planner::parallel`], bit-identical results at any thread count) —
+//!   the (α,β,γ) cost model with dominance-pruned decision menus
+//!   ([`cost`], [`cost::menu`]), operator splitting, baseline parallel
+//!   strategies ([`parallel`]), a simulated multi-device fabric with real
+//!   byte-moving ring collectives ([`fabric`], [`collectives`]), a
+//!   discrete-event timeline simulator ([`sim`]), and a real training
+//!   runtime executing AOT-compiled JAX/Pallas artifacts over PJRT
+//!   ([`runtime`], [`train`]).
 //! * **L2** — `python/compile/model.py`: GPT fwd/bwd/Adam in JAX.
 //! * **L1** — `python/compile/kernels/`: Pallas kernels (operator-splitting
 //!   matmul, tiled attention, layernorm).

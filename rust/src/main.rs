@@ -18,7 +18,7 @@ use osdp::cost::Profiler;
 use osdp::figures::{self, Quality};
 use osdp::metrics::{speedup, speedup_vs_best};
 use osdp::model::zoo;
-use osdp::planner::Scheduler;
+use osdp::planner::{ParallelConfig, Scheduler, parallel};
 use osdp::train::{ShardMode, TrainConfig, train};
 
 fn main() {
@@ -91,6 +91,10 @@ commands:
   gantt                              Figure 1 DP-vs-ZDP gantt chart
   plan    --setting 48L/1024H [--devices 8] [--mem 8] [--g 0,4]
           [--ckpt] [--batch-cap 64] [--fine]
+          [--threads N]      sweep/search worker threads (default: all cores)
+          [--split-depth D]  parallel B&B tree-split depth (default 3)
+          [--batch B]        search one batch size with the parallel B&B
+                             instead of sweeping
   fig5    [--mem 8] [--full] [--csv out.csv]
   fig6    [--mem 16] [--full] [--csv out.csv]
   fig7
@@ -140,23 +144,66 @@ fn plan(args: &Args) {
         entry.model.n_ops(),
     );
     let profiler = Profiler::new(&entry.model, &cluster, &search);
+    let menus = profiler.menu_reduction();
+    let threads = args
+        .usize_opt("threads")
+        .unwrap_or_else(parallel::default_threads);
+    let split_depth =
+        args.usize_or("split-depth", parallel::DEFAULT_SPLIT_DEPTH);
     println!(
-        "plan space: 10^{:.1} plans over {} ops; limit {}",
+        "plan space: 10^{:.1} plans over {} ops ({} -> {} menu options \
+         after dominance pruning); limit {}; {} threads",
         profiler.log10_plan_space(),
         profiler.n_ops(),
+        menus.raw,
+        menus.kept,
         osdp::util::fmt_bytes(cluster.mem_limit),
+        threads,
     );
+
+    // --batch B: one parallel branch-and-bound search instead of a sweep
+    if let Some(b) = args.usize_opt("batch") {
+        let cfg = ParallelConfig { threads, split_depth,
+                                   ..Default::default() };
+        let t0 = std::time::Instant::now();
+        match osdp::planner::parallel_search(&profiler, cluster.mem_limit, b,
+                                             &cfg)
+        {
+            None => println!("NO FEASIBLE PLAN at b={b}"),
+            Some((choice, _cost, stats)) => {
+                let plan = osdp::planner::ExecutionPlan::from_choice(
+                    &profiler, choice, b);
+                println!(
+                    "parallel B&B (split depth {split_depth}): {} nodes, \
+                     {:.2}s{}",
+                    stats.nodes,
+                    t0.elapsed().as_secs_f64(),
+                    if stats.complete { "" } else { " [budget expired]" },
+                );
+                println!("best plan: {}", plan.describe(&profiler));
+                println!("  memory: {}",
+                         figures::explain_plan(&profiler, &plan.choice, b));
+                println!("  throughput {:.1} samples/s across {} devices",
+                         plan.throughput(cluster.n_devices),
+                         cluster.n_devices);
+            }
+        }
+        return;
+    }
+
     let t0 = std::time::Instant::now();
-    match Scheduler::new(&profiler, cluster.mem_limit, search.max_batch).run()
+    match Scheduler::new(&profiler, cluster.mem_limit, search.max_batch)
+        .with_threads(threads)
+        .run()
     {
         None => println!("NO FEASIBLE PLAN (even all-ZDP at b=1 exceeds the \
                           limit)"),
         Some(res) => {
             let c = &res.candidates[res.best];
             println!(
-                "searched {} batch sizes, {} nodes, {:.2}s",
-                res.candidates.len(),
-                res.total_nodes,
+                "sweep on {} threads: {}, {:.2}s",
+                threads,
+                res.stats.describe(),
                 t0.elapsed().as_secs_f64()
             );
             println!("best plan: {}", c.plan.describe(&profiler));

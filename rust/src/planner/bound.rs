@@ -1,0 +1,365 @@
+//! Shared branch-and-bound machinery for the serial DFS ([`super::dfs`])
+//! and the parallel planner ([`super::parallel`]).
+//!
+//! The two planners explore the same tree with the same bounds; this module
+//! owns the pieces they share so they cannot drift apart:
+//!
+//! * [`SearchSpace`] — the precomputation pass: operator visit order
+//!   (largest parameter mass first), flattened per-position option menus,
+//!   admissible suffix bounds, decision-independent base terms, and the
+//!   greedy incumbent seed.
+//! * [`Walker`] — one depth-first worker over a (possibly proper) subtree
+//!   of the space, carrying its local incumbent and [`DfsStats`].
+//! * [`SharedBound`] — the global incumbent *time* shared across workers as
+//!   an `AtomicU64` holding the f64 bit pattern (for non-negative floats
+//!   the IEEE-754 bit pattern is monotone in the numeric value, so
+//!   `fetch_min` over bits is `fetch_min` over seconds).
+//!
+//! # Exactness and determinism
+//!
+//! The walker optimizes the *lexicographic* objective
+//! `(Σ T_i, choice-vector in visit order)`: among all minimum-time feasible
+//! plans it returns the one whose choice vector is lexicographically
+//! smallest in the search order. Three rules make that exact and — crucial
+//! for the parallel planner — independent of worker timing:
+//!
+//! 1. Time pruning against the *shared* bound is strict (`lb > bound`), so
+//!    another worker's equal-time incumbent can never hide a tied plan that
+//!    this worker's subtree must still report.
+//! 2. Time pruning against the *local* incumbent closes ties only when the
+//!    lexicographically least completion of the prefix (`prefix + 0…0`;
+//!    option 0 is the fastest entry of every menu) cannot beat the local
+//!    incumbent's choice — so the tie-break never explodes the tree the
+//!    way a fully strict bound would on symmetric (equal-layer) models.
+//! 3. Leaf/fast-completion acceptance compares against the local incumbent
+//!    only. The shared bound accelerates pruning of strictly worse
+//!    subtrees; it never participates in a tie decision.
+//!
+//! Consequently every walker returns the exact `(time, lex)`-minimum of
+//! {greedy seed} ∪ {feasible leaves of its subtree}, whatever the other
+//! workers did, and the merge over subtrees is deterministic. The only
+//! caveat is the node budget: when it expires (`DfsStats::complete ==
+//! false`) the result is anytime-best-so-far and the visit order — hence
+//! the result — may depend on shared-bound timing.
+
+use super::dfs::DfsStats;
+use crate::cost::Profiler;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One option's costs, flattened into search order with the transient
+/// (gather + b·workspace) precomputed — the DFS inner loop touches only
+/// this contiguous structure (perf pass: EXPERIMENTS.md §Perf).
+#[derive(Clone, Copy)]
+pub(crate) struct FlatOpt {
+    pub time_fixed: f64,
+    pub states: f64,
+    pub transient: f64,
+}
+
+/// The precomputed search problem: everything descend needs, none of it
+/// mutable. Built once per (profiler, memory limit, batch) triple and
+/// shared by reference across workers.
+pub(crate) struct SearchSpace {
+    /// op evaluation order (largest params first), as profiler indices
+    pub order: Vec<usize>,
+    /// per ordered position: the option menu, flattened
+    pub flat: Vec<Vec<FlatOpt>>,
+    pub mem_limit: f64,
+    // per ordered position i: min over options of time_fixed / states for
+    // ops at positions >= i
+    pub suffix_min_time: Vec<f64>,
+    pub suffix_min_states: Vec<f64>,
+    /// max over remaining ops of their minimum transient (admissible lower
+    /// bound on the final transient max)
+    pub suffix_min_trans: Vec<f64>,
+    // fast-completion (option 0 = fastest) suffix sums
+    pub suffix_opt0_states: Vec<f64>,
+    pub suffix_opt0_trans: Vec<f64>,
+    // decision-independent totals
+    pub base_time: f64,
+    pub base_act: f64,
+    /// Greedy incumbent: (time, choice in *search order*). Feasible seed
+    /// for every walker; `None` when even the memory-minimal plan fails.
+    pub seed: Option<(f64, Vec<usize>)>,
+}
+
+impl SearchSpace {
+    pub fn new(profiler: &Profiler, mem_limit: f64, b: usize) -> SearchSpace {
+        let n = profiler.n_ops();
+        let bf = b as f64;
+
+        // Seed the incumbent with the greedy plan: a feasible solution
+        // before descent makes the time-pruning bound bite from node one
+        // and gives the budget-expired case a quality floor.
+        let seed = super::greedy::search(profiler, mem_limit, b);
+
+        // Visit ops with the largest parameter mass first: their decisions
+        // move the most memory/time, so bounds tighten early. The sort is
+        // stable (ties keep profiler order), so the order — and with it the
+        // planner's canonical tie-break — is deterministic.
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&x, &y| {
+            let sx = profiler.tables[x].fastest().states;
+            let sy = profiler.tables[y].fastest().states;
+            sy.partial_cmp(&sx).unwrap()
+        });
+
+        let mut suffix_min_time = vec![0.0; n + 1];
+        let mut suffix_min_states = vec![0.0; n + 1];
+        let mut suffix_min_trans = vec![0.0f64; n + 1];
+        let mut suffix_opt0_states = vec![0.0; n + 1];
+        let mut suffix_opt0_trans = vec![0.0f64; n + 1];
+        for i in (0..n).rev() {
+            let t = &profiler.tables[order[i]];
+            let min_time = t.min_time_fixed();
+            let min_states = t.min_states();
+            let min_trans = t
+                .options
+                .iter()
+                .map(|o| o.gather)
+                .fold(f64::INFINITY, f64::min)
+                + bf * t.workspace_per_sample;
+            suffix_min_time[i] = suffix_min_time[i + 1] + min_time;
+            suffix_min_states[i] = suffix_min_states[i + 1] + min_states;
+            suffix_min_trans[i] = suffix_min_trans[i + 1].max(min_trans);
+            suffix_opt0_states[i] =
+                suffix_opt0_states[i + 1] + t.fastest().states;
+            suffix_opt0_trans[i] = suffix_opt0_trans[i + 1]
+                .max(t.fastest().gather + bf * t.workspace_per_sample);
+        }
+        let eff = crate::cost::time::batch_efficiency(b);
+        let base_time: f64 =
+            profiler.tables.iter().map(|t| bf * t.gamma / eff).sum();
+        let base_act: f64 =
+            profiler.tables.iter().map(|t| bf * t.act_per_sample).sum();
+
+        let seed = seed.map(|(choice, cost)| {
+            // permute the greedy choice into search order
+            let ordered: Vec<usize> =
+                order.iter().map(|&op| choice[op]).collect();
+            (cost.time, ordered)
+        });
+
+        let flat = order
+            .iter()
+            .map(|&op| {
+                profiler.tables[op]
+                    .options
+                    .iter()
+                    .map(|o| FlatOpt {
+                        time_fixed: o.time_fixed(),
+                        states: o.states,
+                        transient: o.gather
+                            + bf * profiler.tables[op].workspace_per_sample,
+                    })
+                    .collect()
+            })
+            .collect();
+
+        SearchSpace {
+            order,
+            flat,
+            mem_limit,
+            suffix_min_time,
+            suffix_min_states,
+            suffix_min_trans,
+            suffix_opt0_states,
+            suffix_opt0_trans,
+            base_time,
+            base_act,
+            seed,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.order.len()
+    }
+
+    /// Map a search-order choice vector back to profiler order.
+    pub fn unpermute(&self, ordered: &[usize]) -> Vec<usize> {
+        let mut choice = vec![0usize; ordered.len()];
+        for (pos, &op_idx) in self.order.iter().enumerate() {
+            choice[op_idx] = ordered[pos];
+        }
+        choice
+    }
+}
+
+/// `a` strictly precedes `b` lexicographically. Both vectors are full
+/// search-order choice vectors of equal length.
+pub(crate) fn lex_less(a: &[usize], b: &[usize]) -> bool {
+    for (x, y) in a.iter().zip(b) {
+        if x != y {
+            return x < y;
+        }
+    }
+    false
+}
+
+/// Global incumbent time shared across workers: f64 bits in an atomic,
+/// monotonically decreasing under `fetch_min` (valid because iteration
+/// times are non-negative, where the IEEE bit pattern orders like the
+/// value).
+pub(crate) struct SharedBound(AtomicU64);
+
+impl SharedBound {
+    pub fn new(time: f64) -> SharedBound {
+        SharedBound(AtomicU64::new(time.to_bits()))
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    pub fn publish(&self, time: f64) {
+        self.0.fetch_min(time.to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// One depth-first worker over a subtree of the space. Local incumbent
+/// starts at the greedy seed; the optional [`SharedBound`] tightens time
+/// pruning across workers without ever deciding a tie.
+pub(crate) struct Walker<'a> {
+    space: &'a SearchSpace,
+    shared: Option<&'a SharedBound>,
+    /// Local incumbent time (search arithmetic for plans found here; the
+    /// greedy seed's evaluated time before any improvement).
+    pub best_time: f64,
+    /// Local incumbent choice in search order.
+    pub best_choice: Option<Vec<usize>>,
+    pub stats: DfsStats,
+    budget: u64,
+    prefix: Vec<usize>,
+}
+
+impl<'a> Walker<'a> {
+    pub fn new(space: &'a SearchSpace, shared: Option<&'a SharedBound>,
+               budget: u64) -> Walker<'a> {
+        let (best_time, best_choice) = match &space.seed {
+            Some((t, c)) => (*t, Some(c.clone())),
+            None => (f64::INFINITY, None),
+        };
+        Walker {
+            space,
+            shared,
+            best_time,
+            best_choice,
+            stats: DfsStats::default(),
+            budget,
+            prefix: vec![0usize; space.n()],
+        }
+    }
+
+    /// Search the subtree rooted at `prefix[..depth]` given the prefix's
+    /// accumulated time/states/transient (left-to-right, so the arithmetic
+    /// is bit-identical to a serial descent through the same prefix).
+    pub fn run(&mut self, depth: usize, prefix: &[usize], time_fixed: f64,
+               states: f64, trans_max: f64) {
+        self.prefix[..depth].copy_from_slice(prefix);
+        self.descend(depth, time_fixed, states, trans_max);
+        self.stats.complete = self.stats.nodes < self.budget;
+    }
+
+    /// Search the whole space (the serial planner's entry point).
+    pub fn run_root(&mut self) {
+        self.run(0, &[], 0.0, 0.0, 0.0);
+    }
+
+    fn descend(&mut self, i: usize, time_fixed: f64, states: f64,
+               trans_max: f64) {
+        if self.stats.nodes >= self.budget {
+            return; // budget expired: keep the incumbent (anytime result)
+        }
+        self.stats.nodes += 1;
+        let sp = self.space;
+        let n = sp.order.len();
+
+        // ---- time pruning (paper's incumbent rule + admissible suffix
+        // bound). Strictly worse than any incumbent is dead; tied with the
+        // *local* incumbent is dead unless the lex-least completion of this
+        // prefix would still win the tie-break. Ties against the shared
+        // bound are explored: the merge tie-breaks deterministically.
+        let lb = sp.base_time + time_fixed + sp.suffix_min_time[i];
+        let shared_bound =
+            self.shared.map(|s| s.get()).unwrap_or(f64::INFINITY);
+        if lb > self.best_time.min(shared_bound)
+            || (lb == self.best_time && !self.prefix_zero_beats_best(i))
+        {
+            self.stats.pruned_time += 1;
+            return;
+        }
+        // ---- memory pruning (paper's limit rule + admissible suffix
+        // bound); decision-independent, hence deterministic.
+        let min_possible_peak = states
+            + sp.suffix_min_states[i]
+            + sp.base_act
+            + trans_max.max(sp.suffix_min_trans[i]);
+        if min_possible_peak > sp.mem_limit {
+            self.stats.pruned_mem += 1;
+            return;
+        }
+
+        if i == n {
+            // feasibility is exact here (the suffix terms above are zero)
+            self.try_accept(sp.base_time + time_fixed);
+            return;
+        }
+
+        // ---- fast completion: the all-fastest suffix is both time-minimal
+        // and lex-minimal among completions of this prefix; if it fits, it
+        // is the subtree's (time, lex) optimum and the subtree closes.
+        let opt0_peak = states
+            + sp.suffix_opt0_states[i]
+            + sp.base_act
+            + trans_max.max(sp.suffix_opt0_trans[i]);
+        if opt0_peak <= sp.mem_limit {
+            for slot in self.prefix[i..].iter_mut() {
+                *slot = 0;
+            }
+            let total = sp.base_time + time_fixed + sp.suffix_min_time[i];
+            if self.try_accept(total) {
+                self.stats.fast_completions += 1;
+            }
+            return;
+        }
+
+        for c in 0..sp.flat[i].len() {
+            let opt = sp.flat[i][c];
+            self.prefix[i] = c;
+            self.descend(i + 1, time_fixed + opt.time_fixed,
+                         states + opt.states, trans_max.max(opt.transient));
+        }
+    }
+
+    /// Would `prefix[..i]` completed with all zeros beat the local
+    /// incumbent's choice lexicographically? (Trivially yes when there is
+    /// no local incumbent.)
+    fn prefix_zero_beats_best(&self, i: usize) -> bool {
+        let Some(best) = &self.best_choice else { return true };
+        for j in 0..i {
+            if self.prefix[j] != best[j] {
+                return self.prefix[j] < best[j];
+            }
+        }
+        best[i..].iter().any(|&c| c > 0)
+    }
+
+    /// Offer `self.prefix` at time `total` to the local incumbent; publish
+    /// to the shared bound on improvement. Returns true when accepted.
+    fn try_accept(&mut self, total: f64) -> bool {
+        let better = total < self.best_time
+            || (total == self.best_time
+                && match &self.best_choice {
+                    None => true,
+                    Some(b) => lex_less(&self.prefix, b),
+                });
+        if better {
+            self.best_time = total;
+            self.best_choice = Some(self.prefix.clone());
+            if let Some(s) = self.shared {
+                s.publish(total);
+            }
+        }
+        better
+    }
+}

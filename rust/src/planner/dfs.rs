@@ -12,7 +12,14 @@
 //! memory-feasible, take it — no descent needed). Both preserve exactness:
 //! the result equals brute-force enumeration (proven against
 //! [`super::exhaustive`] in tests).
+//!
+//! The bound precomputation and the descend loop live in the crate-private
+//! `bound` module, shared verbatim with [`super::parallel`] — this serial
+//! entry point is a single [`bound::Walker`] over the whole tree, so serial
+//! and parallel results are bit-identical whenever the node budget does not
+//! expire (see `rust/tests/parallel_planner.rs`).
 
+use super::bound::{SearchSpace, Walker};
 use crate::cost::{PlanCost, Profiler};
 
 /// Search diagnostics.
@@ -32,6 +39,18 @@ pub struct DfsStats {
     pub complete: bool,
 }
 
+impl DfsStats {
+    /// Fold another worker's counters into this one (`complete` is the
+    /// conjunction: an aggregate is exact only if every part was).
+    pub fn absorb(&mut self, other: &DfsStats) {
+        self.nodes += other.nodes;
+        self.pruned_mem += other.pruned_mem;
+        self.pruned_time += other.pruned_time;
+        self.fast_completions += other.fast_completions;
+        self.complete &= other.complete;
+    }
+}
+
 /// Node budget for one search. The paper reports 9–307 s per search; the
 /// budget keeps the batch-size sweep bounded on the biggest zoo models
 /// while leaving small/medium instances provably exact (see tests vs
@@ -39,49 +58,11 @@ pub struct DfsStats {
 /// feasible incumbent before descent begins.
 pub const DEFAULT_NODE_BUDGET: u64 = 2_000_000;
 
-/// One option's costs, flattened into search order with the transient
-/// (gather + b·workspace) precomputed — the DFS inner loop touches only
-/// this contiguous structure (perf pass: EXPERIMENTS.md §Perf).
-#[derive(Clone, Copy)]
-struct FlatOpt {
-    time_fixed: f64,
-    states: f64,
-    transient: f64,
-}
-
-struct Ctx<'a> {
-    #[allow(dead_code)] // kept for debugging/extension hooks
-    profiler: &'a Profiler,
-    /// op evaluation order (largest params first), as profiler indices
-    order: Vec<usize>,
-    /// per ordered position: the option menu, flattened
-    flat: Vec<Vec<FlatOpt>>,
-    mem_limit: f64,
-    #[allow(dead_code)]
-    b: f64,
-    // per ordered position i: min over options of time_fixed / states /
-    // transient for ops at positions >= i
-    suffix_min_time: Vec<f64>,
-    suffix_min_states: Vec<f64>,
-    /// max over remaining ops of their minimum transient (admissible lower
-    /// bound on the final transient max)
-    suffix_min_trans: Vec<f64>,
-    // fast-completion (option 0 = fastest) suffix sums
-    suffix_opt0_states: Vec<f64>,
-    suffix_opt0_trans: Vec<f64>,
-    // decision-independent totals
-    base_time: f64,
-    base_act: f64,
-    // incumbent
-    best_time: f64,
-    best_choice: Option<Vec<usize>>,
-    stats: DfsStats,
-    budget: u64,
-}
-
 /// Search with the default node budget (see [`DEFAULT_NODE_BUDGET`]):
 /// minimal `Σ T_i` plan whose peak memory fits `mem_limit` at per-device
-/// batch `b`. Returns `None` when nothing fits.
+/// batch `b`. Returns `None` when nothing fits. Ties in time resolve to
+/// the lexicographically least choice vector in the planner's visit order
+/// (canonical, so serial and parallel runs agree).
 pub fn search(profiler: &Profiler, mem_limit: f64, b: usize)
               -> Option<(Vec<usize>, PlanCost, DfsStats)> {
     search_with_budget(profiler, mem_limit, b, DEFAULT_NODE_BUDGET)
@@ -91,178 +72,14 @@ pub fn search(profiler: &Profiler, mem_limit: f64, b: usize)
 pub fn search_with_budget(profiler: &Profiler, mem_limit: f64, b: usize,
                           budget: u64)
                           -> Option<(Vec<usize>, PlanCost, DfsStats)> {
-    let n = profiler.n_ops();
-    let bf = b as f64;
+    let space = SearchSpace::new(profiler, mem_limit, b);
+    let mut walker = Walker::new(&space, None, budget);
+    walker.run_root();
 
-    // Seed the incumbent with the greedy plan: a feasible solution before
-    // descent makes the time-pruning bound bite from node one and gives the
-    // budget-expired case a quality floor.
-    let seed = super::greedy::search(profiler, mem_limit, b);
-
-    // Visit ops with the largest parameter mass first: their decisions move
-    // the most memory/time, so bounds tighten early.
-    let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&x, &y| {
-        let sx = profiler.tables[x].fastest().states;
-        let sy = profiler.tables[y].fastest().states;
-        sy.partial_cmp(&sx).unwrap()
-    });
-
-    let mut suffix_min_time = vec![0.0; n + 1];
-    let mut suffix_min_states = vec![0.0; n + 1];
-    let mut suffix_min_trans = vec![0.0f64; n + 1];
-    let mut suffix_opt0_states = vec![0.0; n + 1];
-    let mut suffix_opt0_trans = vec![0.0f64; n + 1];
-    for i in (0..n).rev() {
-        let t = &profiler.tables[order[i]];
-        let min_time = t.min_time_fixed();
-        let min_states = t.min_states();
-        let min_trans = t
-            .options
-            .iter()
-            .map(|o| o.gather)
-            .fold(f64::INFINITY, f64::min)
-            + bf * t.workspace_per_sample;
-        suffix_min_time[i] = suffix_min_time[i + 1] + min_time;
-        suffix_min_states[i] = suffix_min_states[i + 1] + min_states;
-        suffix_min_trans[i] = suffix_min_trans[i + 1].max(min_trans);
-        suffix_opt0_states[i] =
-            suffix_opt0_states[i + 1] + t.fastest().states;
-        suffix_opt0_trans[i] = suffix_opt0_trans[i + 1]
-            .max(t.fastest().gather + bf * t.workspace_per_sample);
-    }
-    let eff = crate::cost::time::batch_efficiency(b);
-    let base_time: f64 =
-        profiler.tables.iter().map(|t| bf * t.gamma / eff).sum();
-    let base_act: f64 =
-        profiler.tables.iter().map(|t| bf * t.act_per_sample).sum();
-
-    let (seed_time, seed_choice_ordered) = match &seed {
-        Some((choice, cost)) => {
-            // permute the greedy choice into search order
-            let ordered: Vec<usize> =
-                order.iter().map(|&op| choice[op]).collect();
-            (cost.time, Some(ordered))
-        }
-        None => (f64::INFINITY, None),
-    };
-
-    let mut ctx = Ctx {
-        profiler,
-        order,
-        flat: Vec::new(),
-        mem_limit,
-        b: bf,
-        suffix_min_time,
-        suffix_min_states,
-        suffix_min_trans,
-        suffix_opt0_states,
-        suffix_opt0_trans,
-        base_time,
-        base_act,
-        best_time: seed_time,
-        best_choice: seed_choice_ordered,
-        stats: DfsStats::default(),
-        budget,
-    };
-
-    ctx.flat = ctx
-        .order
-        .iter()
-        .map(|&op| {
-            profiler.tables[op]
-                .options
-                .iter()
-                .map(|o| FlatOpt {
-                    time_fixed: o.time_fixed(),
-                    states: o.states,
-                    transient: o.gather
-                        + bf * profiler.tables[op].workspace_per_sample,
-                })
-                .collect()
-        })
-        .collect();
-
-    let mut prefix = vec![0usize; n];
-    descend(&mut ctx, 0, 0.0, 0.0, 0.0, &mut prefix);
-    ctx.stats.complete = ctx.stats.nodes < ctx.budget;
-
-    let choice_ordered = ctx.best_choice?;
-    // un-permute to profiler order
-    let mut choice = vec![0usize; n];
-    for (pos, &op_idx) in ctx.order.iter().enumerate() {
-        choice[op_idx] = choice_ordered[pos];
-    }
+    let choice_ordered = walker.best_choice?;
+    let choice = space.unpermute(&choice_ordered);
     let cost = profiler.evaluate(&choice, b);
-    Some((choice, cost, ctx.stats))
-}
-
-fn descend(ctx: &mut Ctx, i: usize, time_fixed: f64, states: f64,
-           trans_max: f64, prefix: &mut Vec<usize>) {
-    if ctx.stats.nodes >= ctx.budget {
-        return; // budget expired: keep the incumbent (anytime result)
-    }
-    ctx.stats.nodes += 1;
-    let n = ctx.order.len();
-
-    // ---- time pruning (paper's incumbent rule + admissible suffix bound)
-    if ctx.base_time + time_fixed + ctx.suffix_min_time[i] >= ctx.best_time {
-        ctx.stats.pruned_time += 1;
-        return;
-    }
-    // ---- memory pruning (paper's limit rule + admissible suffix bound)
-    let min_possible_peak = states
-        + ctx.suffix_min_states[i]
-        + ctx.base_act
-        + trans_max.max(ctx.suffix_min_trans[i]);
-    if min_possible_peak > ctx.mem_limit {
-        ctx.stats.pruned_mem += 1;
-        return;
-    }
-
-    if i == n {
-        let total = ctx.base_time + time_fixed;
-        // bounds above guarantee feasibility and improvement
-        ctx.best_time = total;
-        ctx.best_choice = Some(prefix.clone());
-        return;
-    }
-
-    // ---- fast completion: the all-fastest suffix is time-minimal; if it
-    // fits, no other completion of this prefix can beat it.
-    let opt0_peak = states
-        + ctx.suffix_opt0_states[i]
-        + ctx.base_act
-        + trans_max.max(ctx.suffix_opt0_trans[i]);
-    if opt0_peak <= ctx.mem_limit {
-        let total = ctx.base_time + time_fixed + ctx.suffix_min_time_opt0(i);
-        if total < ctx.best_time {
-            ctx.stats.fast_completions += 1;
-            for pos in i..n {
-                prefix[pos] = 0;
-            }
-            ctx.best_time = total;
-            ctx.best_choice = Some(prefix.clone());
-        }
-        return;
-    }
-
-    let n_opts = ctx.flat[i].len();
-    for c in 0..n_opts {
-        let opt = ctx.flat[i][c];
-        let trans = trans_max.max(opt.transient);
-        prefix[i] = c;
-        descend(ctx, i + 1, time_fixed + opt.time_fixed,
-                states + opt.states, trans, prefix);
-    }
-}
-
-impl<'a> Ctx<'a> {
-    /// Suffix time of the all-fastest completion. Option 0 is the fastest
-    /// in every menu, so this equals the admissible bound.
-    fn suffix_min_time_opt0(&self, i: usize) -> f64 {
-        self.suffix_min_time[i]
-    }
+    Some((choice, cost, walker.stats))
 }
 
 #[cfg(test)]

@@ -1,0 +1,287 @@
+//! Parallel branch-and-bound planner: the serial DFS tree split at a
+//! configurable depth into independent subtree tasks executed across
+//! `std::thread` workers, all pruning against one shared incumbent (an
+//! `AtomicU64` carrying the best time's f64 bits — see `bound`).
+//!
+//! Exactness and determinism are inherited from the shared `bound` module:
+//! every worker reports the exact `(time, lex)`-minimum of its subtree and
+//! the merge is a deterministic fold in task order, so the result is
+//! bit-identical to [`super::dfs::search`] for any thread count whenever
+//! the node budget does not expire — property-tested against
+//! [`super::exhaustive`] in `rust/tests/parallel_planner.rs`.
+//!
+//! The split works on the *menu-preprocessed* space (the Profiler's
+//! dominance pass, [`crate::cost::menu`]): subtree tasks are every
+//! combination of the first `split_depth` operators' Pareto menus, capped
+//! at [`MAX_TASKS`] by shrinking the depth, then drained by workers over an
+//! atomic task counter (cheap work stealing: whichever worker is free
+//! takes the next prefix).
+
+use super::bound::{SearchSpace, SharedBound, Walker, lex_less};
+use super::dfs::{DEFAULT_NODE_BUDGET, DfsStats};
+use crate::cost::{PlanCost, Profiler};
+use std::sync::Mutex;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Default tree-split depth: combinations of the first 3 operators' menus
+/// give a few hundred tasks on paper-scale menus — enough to load-balance
+/// 8–64 workers without per-task overhead mattering.
+pub const DEFAULT_SPLIT_DEPTH: usize = 3;
+
+/// Hard cap on subtree tasks; the split depth shrinks until the task count
+/// (product of the first `depth` menu sizes) fits. Keeps per-task overhead
+/// (one incumbent clone + one claim) under ~1% of any real search.
+pub const MAX_TASKS: usize = 4096;
+
+/// Floor on the per-task node budget so a huge task count cannot starve
+/// individual subtrees into returning only the greedy seed.
+const MIN_TASK_BUDGET: u64 = 16_384;
+
+/// Worker-pool settings for [`search`] (and the `--threads` /
+/// `--split-depth` CLI flags).
+#[derive(Debug, Clone)]
+pub struct ParallelConfig {
+    /// Worker threads (clamped to at least 1).
+    pub threads: usize,
+    /// Depth at which the DFS tree splits into tasks (0 = one task, i.e.
+    /// serial search on a worker thread).
+    pub split_depth: usize,
+    /// Global node budget. The split depth shrinks until every task gets
+    /// at least `MIN_TASK_BUDGET` nodes from it, so the aggregate stays
+    /// within the cap; exactness holds iff the merged stats report
+    /// `complete`.
+    pub node_budget: u64,
+}
+
+impl Default for ParallelConfig {
+    fn default() -> Self {
+        ParallelConfig {
+            threads: default_threads(),
+            split_depth: DEFAULT_SPLIT_DEPTH,
+            node_budget: DEFAULT_NODE_BUDGET,
+        }
+    }
+}
+
+/// Hardware parallelism (1 when it cannot be determined).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// One subtree task: a fixed choice for the first `depth` ordered
+/// operators plus its accumulated partial sums (folded left-to-right, so
+/// task arithmetic is bit-identical to a serial descent).
+struct Task {
+    prefix: Vec<usize>,
+    time_fixed: f64,
+    states: f64,
+    trans_max: f64,
+}
+
+/// Parallel branch-and-bound: minimal `Σ T_i` plan whose peak memory fits
+/// `mem_limit` at per-device batch `b`, bit-identical to
+/// [`super::dfs::search`] (ties resolve to the lexicographically least
+/// choice in visit order). Returns `None` when nothing fits.
+pub fn search(profiler: &Profiler, mem_limit: f64, b: usize,
+              cfg: &ParallelConfig)
+              -> Option<(Vec<usize>, PlanCost, DfsStats)> {
+    let space = SearchSpace::new(profiler, mem_limit, b);
+
+    // Shrink the split depth until (a) the task count is bounded and
+    // (b) dividing the node budget across tasks leaves each at least the
+    // per-task floor — so the budget stays a real global cap instead of
+    // being silently multiplied by the task count.
+    let mut depth = cfg.split_depth.min(space.n());
+    while depth > 0 && {
+        let tasks = task_count(&space, depth) as u64;
+        tasks > MAX_TASKS as u64
+            || cfg.node_budget / tasks < MIN_TASK_BUDGET
+    } {
+        depth -= 1;
+    }
+    let tasks = enumerate_tasks(&space, depth);
+    let budget = per_task_budget(cfg.node_budget, tasks.len());
+
+    let shared = SharedBound::new(
+        space.seed.as_ref().map(|(t, _)| *t).unwrap_or(f64::INFINITY),
+    );
+    let threads = cfg.threads.max(1).min(tasks.len().max(1));
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<(f64, Option<Vec<usize>>, DfsStats)>>> =
+        Mutex::new((0..tasks.len()).map(|_| None).collect());
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                loop {
+                    let idx = next.fetch_add(1, Ordering::Relaxed);
+                    if idx >= tasks.len() {
+                        break;
+                    }
+                    let t = &tasks[idx];
+                    let mut w = Walker::new(&space, Some(&shared), budget);
+                    w.run(depth, &t.prefix, t.time_fixed, t.states,
+                          t.trans_max);
+                    results.lock().unwrap()[idx] =
+                        Some((w.best_time, w.best_choice, w.stats));
+                }
+            });
+        }
+    });
+
+    // Deterministic merge in task order: every walker's result is exact
+    // for its subtree (see bound.rs), so the fold below does not depend on
+    // which worker ran which task, or when.
+    let mut agg = DfsStats { complete: true, ..DfsStats::default() };
+    let mut best: Option<(f64, Vec<usize>)> = space.seed.clone();
+    for slot in results.into_inner().unwrap() {
+        let (time, choice, stats) = slot.expect("worker pool drained");
+        agg.absorb(&stats);
+        let Some(choice) = choice else { continue };
+        let improves = match &best {
+            None => true,
+            Some((bt, bc)) => {
+                time < *bt || (time == *bt && lex_less(&choice, bc))
+            }
+        };
+        if improves {
+            best = Some((time, choice));
+        }
+    }
+
+    let (_, choice_ordered) = best?;
+    let choice = space.unpermute(&choice_ordered);
+    let cost = profiler.evaluate(&choice, b);
+    Some((choice, cost, agg))
+}
+
+/// Product of the first `depth` menu sizes, saturating.
+fn task_count(space: &SearchSpace, depth: usize) -> usize {
+    space.flat[..depth]
+        .iter()
+        .fold(1usize, |acc, menu| acc.saturating_mul(menu.len()))
+}
+
+/// All prefixes of length `depth` in lexicographic order, with their
+/// left-to-right partial sums.
+fn enumerate_tasks(space: &SearchSpace, depth: usize) -> Vec<Task> {
+    let mut tasks = Vec::with_capacity(task_count(space, depth));
+    let mut idx = vec![0usize; depth];
+    loop {
+        let mut time_fixed = 0.0;
+        let mut states = 0.0;
+        let mut trans_max = 0.0f64;
+        for (i, &c) in idx.iter().enumerate() {
+            let o = space.flat[i][c];
+            time_fixed += o.time_fixed;
+            states += o.states;
+            trans_max = trans_max.max(o.transient);
+        }
+        tasks.push(Task {
+            prefix: idx.clone(),
+            time_fixed,
+            states,
+            trans_max,
+        });
+        // odometer, rightmost digit fastest = lexicographic order
+        let mut pos = depth;
+        loop {
+            if pos == 0 {
+                return tasks;
+            }
+            pos -= 1;
+            idx[pos] += 1;
+            if idx[pos] < space.flat[pos].len() {
+                break;
+            }
+            idx[pos] = 0;
+        }
+    }
+}
+
+/// Slice the global budget across tasks. The floor keeps tiny slices
+/// useful; the final `min` keeps the aggregate within the configured cap
+/// even when the floor would otherwise exceed a very small budget.
+fn per_task_budget(total: u64, tasks: usize) -> u64 {
+    if total == u64::MAX {
+        return u64::MAX;
+    }
+    (total / tasks.max(1) as u64).max(MIN_TASK_BUDGET).min(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Cluster, SearchConfig};
+    use crate::cost::Profiler;
+    use crate::planner::dfs;
+
+    fn profiler(hidden: usize, layers: usize, grans: Vec<usize>) -> Profiler {
+        let m = crate::model::build_gpt(&crate::model::GptDims::uniform(
+            "t", 5000, 128, layers, hidden, 4,
+        ));
+        let c = Cluster::rtx_titan(8, 8.0);
+        let s = SearchConfig { granularities: grans, ..Default::default() };
+        Profiler::new(&m, &c, &s)
+    }
+
+    fn cfg(threads: usize, split_depth: usize) -> ParallelConfig {
+        ParallelConfig { threads, split_depth, node_budget: u64::MAX }
+    }
+
+    #[test]
+    fn unlimited_memory_yields_all_dp() {
+        let p = profiler(256, 2, vec![0]);
+        let (choice, cost, stats) =
+            search(&p, 1e18, 4, &cfg(4, 2)).unwrap();
+        assert_eq!(choice, p.index_of(|d| d.is_pure_dp()));
+        assert!(cost.time > 0.0);
+        assert!(stats.complete);
+    }
+
+    #[test]
+    fn infeasible_matches_serial() {
+        let p = profiler(256, 2, vec![0]);
+        assert!(search(&p, 1.0, 1, &cfg(4, 2)).is_none());
+    }
+
+    #[test]
+    fn matches_serial_bitwise_across_limits_and_split_depths() {
+        let p = profiler(512, 3, vec![0, 2]);
+        let dp = p.evaluate(&p.index_of(|d| d.is_pure_dp()), 1);
+        for frac in [0.45, 0.6, 0.8, 1.1] {
+            let limit = dp.peak_mem * frac;
+            let serial = dfs::search_with_budget(&p, limit, 1, u64::MAX);
+            for d in [0, 1, 2, 5] {
+                let par = search(&p, limit, 1, &cfg(4, d));
+                match (&serial, &par) {
+                    (None, None) => {}
+                    (Some((sc, scost, sst)), Some((pc, pcost, pst))) => {
+                        assert!(sst.complete && pst.complete);
+                        assert_eq!(sc, pc, "frac {frac} depth {d}");
+                        assert_eq!(scost.time.to_bits(),
+                                   pcost.time.to_bits());
+                        assert_eq!(scost.peak_mem.to_bits(),
+                                   pcost.peak_mem.to_bits());
+                    }
+                    _ => panic!("feasibility disagreement at {frac}/{d}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_depth_exceeding_ops_is_clamped() {
+        let p = profiler(128, 1, vec![0]);
+        let n = p.n_ops();
+        let (choice, _, _) =
+            search(&p, 1e18, 1, &cfg(2, n + 10)).unwrap();
+        assert_eq!(choice.len(), n);
+    }
+
+    #[test]
+    fn more_threads_than_tasks_is_fine() {
+        let p = profiler(128, 1, vec![0]);
+        assert!(search(&p, 1e18, 1, &cfg(64, 1)).is_some());
+    }
+}

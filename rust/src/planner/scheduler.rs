@@ -5,10 +5,21 @@
 //! with the highest estimated system throughput — which is *not* always the
 //! largest batch (§3.2's closing observation), because a smaller batch can
 //! afford more DP-mode operators.
+//!
+//! The sweep runs on a worker pool: batch sizes are claimed off an atomic
+//! counter and searched concurrently, with an atomic "memory wall" (the
+//! lowest batch size known infeasible) stopping the pool. Per-candidate
+//! [`DfsStats`] are merged into a [`SweepStats`] aggregate. Because each
+//! per-batch search is the deterministic serial engine and feasibility is
+//! monotone in `b` under the §3.1 cost model (every memory term is
+//! non-decreasing in the batch), the candidate set — and hence the result —
+//! is identical for any thread count.
 
-use super::dfs;
 use super::ExecutionPlan;
-use crate::cost::Profiler;
+use super::dfs::{self, DfsStats};
+use crate::cost::{PlanCost, Profiler};
+use std::sync::Mutex;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// One batch size's best plan.
 #[derive(Debug, Clone)]
@@ -16,7 +27,48 @@ pub struct Candidate {
     pub plan: ExecutionPlan,
     /// Cluster-wide samples/second.
     pub throughput: f64,
-    pub search_nodes: u64,
+    /// Full search diagnostics for this batch size (`stats.nodes` is the
+    /// per-candidate search-engine node count).
+    pub stats: DfsStats,
+}
+
+/// Aggregate search diagnostics across the batch sweep (the merge of every
+/// kept candidate's [`DfsStats`]).
+#[derive(Debug, Clone, Default)]
+pub struct SweepStats {
+    /// Batch sizes that produced a feasible plan.
+    pub searches: usize,
+    pub nodes: u64,
+    pub pruned_mem: u64,
+    pub pruned_time: u64,
+    pub fast_completions: u64,
+    /// True iff every kept search ran to completion (all results provably
+    /// optimal for their batch size).
+    pub complete: bool,
+}
+
+impl SweepStats {
+    fn absorb(&mut self, s: &DfsStats) {
+        self.searches += 1;
+        self.nodes += s.nodes;
+        self.pruned_mem += s.pruned_mem;
+        self.pruned_time += s.pruned_time;
+        self.fast_completions += s.fast_completions;
+        self.complete &= s.complete;
+    }
+
+    /// One-line human summary for CLI/bench reports.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} searches, {} nodes ({} mem-pruned, {} time-pruned, {} fast){}",
+            self.searches,
+            self.nodes,
+            self.pruned_mem,
+            self.pruned_time,
+            self.fast_completions,
+            if self.complete { "" } else { " [budget expired]" },
+        )
+    }
 }
 
 /// Scheduler outcome: every candidate plus the winner index.
@@ -27,6 +79,8 @@ pub struct SchedulerResult {
     /// Total search-engine nodes across the batch sweep.
     pub total_nodes: u64,
     pub elapsed: std::time::Duration,
+    /// Aggregate per-candidate diagnostics.
+    pub stats: SweepStats,
 }
 
 impl SchedulerResult {
@@ -44,35 +98,89 @@ pub struct Scheduler<'a> {
     pub profiler: &'a Profiler,
     pub mem_limit: f64,
     pub max_batch: usize,
+    /// Worker threads for the sweep (1 = serial). Defaults to the
+    /// hardware parallelism; the result is thread-count-invariant.
+    pub threads: usize,
 }
 
 impl<'a> Scheduler<'a> {
     pub fn new(profiler: &'a Profiler, mem_limit: f64,
                max_batch: usize) -> Self {
-        Scheduler { profiler, mem_limit, max_batch }
+        Scheduler {
+            profiler,
+            mem_limit,
+            max_batch,
+            threads: super::parallel::default_threads(),
+        }
+    }
+
+    /// Override the sweep's worker count (the CLI's `--threads`).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
     }
 
     /// Run Algorithm 1. Returns `None` when no batch size fits at all.
     pub fn run(&self) -> Option<SchedulerResult> {
         let start = std::time::Instant::now();
         let n_dev = self.profiler.cluster.n_devices;
-        let mut candidates = Vec::new();
-        let mut total_nodes = 0;
-        for b in 1..=self.max_batch {
-            match dfs::search(self.profiler, self.mem_limit, b) {
-                None => break, // smallest-memory plan no longer fits
-                Some((choice, _cost, stats)) => {
-                    let plan =
-                        ExecutionPlan::from_choice(self.profiler, choice, b);
-                    let throughput = plan.throughput(n_dev);
-                    total_nodes += stats.nodes;
-                    candidates.push(Candidate {
-                        plan,
-                        throughput,
-                        search_nodes: stats.nodes,
-                    });
-                }
+
+        let threads = self.threads.max(1).min(self.max_batch.max(1));
+        let next = AtomicUsize::new(1);
+        // lowest batch size known to be infeasible (the "memory wall")
+        let wall = AtomicUsize::new(usize::MAX);
+        type Row = (usize, Vec<usize>, PlanCost, DfsStats);
+        let found: Mutex<Vec<Row>> = Mutex::new(Vec::new());
+
+        // Known bounded overshoot: a worker already searching some b when
+        // another worker lowers the wall below it runs that search to
+        // completion and the row is discarded by the contiguous-prefix
+        // filter — at most threads-1 wasted searches per sweep (infeasible
+        // instances die fast on the memory bound). Cancelling mid-search
+        // would thread a token through the walker for little gain.
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| {
+                    loop {
+                        let b = next.fetch_add(1, Ordering::Relaxed);
+                        // claims increase monotonically: past the wall (or
+                        // the cap) this worker can never see feasible work
+                        if b > self.max_batch
+                            || b >= wall.load(Ordering::Relaxed)
+                        {
+                            break;
+                        }
+                        match dfs::search(self.profiler, self.mem_limit, b) {
+                            None => {
+                                wall.fetch_min(b, Ordering::Relaxed);
+                                break;
+                            }
+                            Some((choice, cost, stats)) => {
+                                found.lock()
+                                     .unwrap()
+                                     .push((b, choice, cost, stats));
+                            }
+                        }
+                    }
+                });
             }
+        });
+
+        let mut rows = found.into_inner().unwrap();
+        rows.sort_by_key(|r| r.0);
+        // Keep only the contiguous feasible prefix starting at b=1 — the
+        // serial sweep's stop-at-first-failure semantics, kept explicit so
+        // even a non-monotone cost model could not change the result.
+        let mut candidates = Vec::new();
+        let mut stats = SweepStats { complete: true, ..Default::default() };
+        for (i, (b, choice, _cost, st)) in rows.into_iter().enumerate() {
+            if b != i + 1 {
+                break;
+            }
+            let plan = ExecutionPlan::from_choice(self.profiler, choice, b);
+            let throughput = plan.throughput(n_dev);
+            stats.absorb(&st);
+            candidates.push(Candidate { plan, throughput, stats: st });
         }
         if candidates.is_empty() {
             return None;
@@ -86,10 +194,11 @@ impl<'a> Scheduler<'a> {
             .map(|(i, _)| i)
             .unwrap();
         Some(SchedulerResult {
-            candidates,
             best,
-            total_nodes,
+            total_nodes: stats.nodes,
             elapsed: start.elapsed(),
+            stats,
+            candidates,
         })
     }
 }
@@ -166,5 +275,27 @@ mod tests {
         let c = &res.candidates[0];
         let per_dev = c.plan.batch as f64 / c.plan.cost.time;
         assert!((c.throughput - per_dev * 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial_sweep() {
+        let p = profiler(8);
+        let dp1 = p.evaluate(&p.index_of(|d| d.is_pure_dp()), 1);
+        let limit = dp1.peak_mem * 3.0;
+        let serial =
+            Scheduler::new(&p, limit, 32).with_threads(1).run().unwrap();
+        let par =
+            Scheduler::new(&p, limit, 32).with_threads(8).run().unwrap();
+        assert_eq!(serial.candidates.len(), par.candidates.len());
+        assert_eq!(serial.best, par.best);
+        assert_eq!(serial.total_nodes, par.total_nodes);
+        for (a, b) in serial.candidates.iter().zip(&par.candidates) {
+            assert_eq!(a.plan.choice, b.plan.choice);
+            assert_eq!(a.plan.cost.time.to_bits(),
+                       b.plan.cost.time.to_bits());
+            assert_eq!(a.stats, b.stats);
+        }
+        assert!(par.stats.complete);
+        assert_eq!(par.stats.searches, par.candidates.len());
     }
 }

@@ -1,0 +1,193 @@
+//! Tentpole guarantees of the parallel branch-and-bound planner:
+//!
+//! * exactness — parallel B&B equals brute-force enumeration on random
+//!   profiler instances (seeded via `util::rng`);
+//! * determinism — results are identical for `threads = 1` and
+//!   `threads = 8` (the shared incumbent accelerates pruning but never
+//!   decides a tie);
+//! * serial equivalence — parallel results are bit-identical to the
+//!   serial DFS, which shares the same bound machinery;
+//! * menu safety — dominance filtering never removes the optimal plan.
+
+use osdp::config::{Cluster, SearchConfig};
+use osdp::cost::Profiler;
+use osdp::model::{GptDims, build_gpt};
+use osdp::planner::{ParallelConfig, exhaustive_search, parallel_search};
+use osdp::util::prop;
+use osdp::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+struct Instance {
+    layers: usize,
+    hidden: usize,
+    n_dev: usize,
+    b: usize,
+    limit_frac: f64,
+    grans: Vec<usize>,
+}
+
+fn gen_instance(rng: &mut Rng, size: usize) -> Instance {
+    Instance {
+        layers: rng.range(1, 1 + size / 30),
+        hidden: 32 * rng.range(1, 6),
+        n_dev: *rng.pick(&[2usize, 4, 8]),
+        b: rng.range(1, 4),
+        limit_frac: 0.25 + rng.f64() * 1.1,
+        grans: if rng.chance(0.5) { vec![0] } else { vec![0, 2] },
+    }
+}
+
+fn build(inst: &Instance) -> (Profiler, f64) {
+    let m = build_gpt(&GptDims::uniform("p", 1000, 64, inst.layers,
+                                        inst.hidden, 2));
+    let c = Cluster::rtx_titan(inst.n_dev, 8.0);
+    let s = SearchConfig { granularities: inst.grans.clone(),
+                           ..Default::default() };
+    let p = Profiler::new(&m, &c, &s);
+    let dp_mem = p.evaluate(&p.index_of(|d| d.is_pure_dp()), inst.b).peak_mem;
+    (p, dp_mem * inst.limit_frac)
+}
+
+/// Unlimited node budget: exactness/determinism are only guaranteed for
+/// complete searches, so the tests make completeness structural instead of
+/// asserting their way around per-task budget slicing.
+fn cfg(threads: usize, split_depth: usize) -> ParallelConfig {
+    ParallelConfig { threads, split_depth, node_budget: u64::MAX }
+}
+
+/// Parallel B&B equals brute force wherever brute force is affordable.
+#[test]
+fn prop_parallel_bnb_is_exact() {
+    prop::check(0x9A8A11E1, 20, gen_instance, |inst| {
+        let (p, limit) = build(inst);
+        if p.log10_plan_space() > 5.5 {
+            return Ok(()); // brute force too big; covered by other props
+        }
+        let brute = exhaustive_search(&p, limit, inst.b);
+        let smart = parallel_search(&p, limit, inst.b, &cfg(4, 2));
+        match (brute, smart) {
+            (None, None) => Ok(()),
+            (Some((_, bc)), Some((_, sc, stats))) => {
+                if !stats.complete {
+                    return Err("budget expired on a tiny instance".into());
+                }
+                if sc.peak_mem > limit {
+                    return Err(format!("overflows: {}", sc.peak_mem));
+                }
+                prop::close(bc.time, sc.time, 1e-10)
+            }
+            (b, s) => Err(format!(
+                "feasibility disagreement: brute={:?} parallel={:?}",
+                b.is_some(),
+                s.is_some()
+            )),
+        }
+    });
+}
+
+/// Parallel results are bit-identical to the serial DFS (shared bound
+/// machinery, shared canonical tie-break) on random instances.
+#[test]
+fn prop_parallel_matches_serial_bitwise() {
+    prop::check(0x5E71A1, 25, gen_instance, |inst| {
+        let (p, limit) = build(inst);
+        let serial =
+            osdp::planner::dfs::search_with_budget(&p, limit, inst.b,
+                                                   u64::MAX);
+        let par = parallel_search(&p, limit, inst.b, &cfg(4, 3));
+        match (serial, par) {
+            (None, None) => Ok(()),
+            (Some((sc, scost, sst)), Some((pc, pcost, pst))) => {
+                if !(sst.complete && pst.complete) {
+                    return Err("budget expired".into());
+                }
+                if sc != pc {
+                    return Err(format!("choice differs: {sc:?} vs {pc:?}"));
+                }
+                if scost.time.to_bits() != pcost.time.to_bits()
+                    || scost.peak_mem.to_bits() != pcost.peak_mem.to_bits()
+                {
+                    return Err(format!(
+                        "cost differs: {:?} vs {:?}", scost, pcost
+                    ));
+                }
+                Ok(())
+            }
+            (s, p) => Err(format!(
+                "feasibility disagreement: serial={:?} parallel={:?}",
+                s.is_some(),
+                p.is_some()
+            )),
+        }
+    });
+}
+
+/// The `--threads 1` and `--threads 8` results are identical — choice
+/// vector and cost bits — across a sweep of memory limits.
+#[test]
+fn determinism_one_vs_eight_threads() {
+    let m = build_gpt(&GptDims::uniform("det", 4000, 128, 4, 256, 4));
+    let c = Cluster::rtx_titan(8, 8.0);
+    let s = SearchConfig { granularities: vec![0, 2],
+                           ..Default::default() };
+    let p = Profiler::new(&m, &c, &s);
+    let dp_mem = p.evaluate(&p.index_of(|d| d.is_pure_dp()), 2).peak_mem;
+    let mut feasible = 0;
+    for frac in [0.35, 0.5, 0.65, 0.8, 0.95, 1.1] {
+        let limit = dp_mem * frac;
+        let one = parallel_search(&p, limit, 2, &cfg(1, 3));
+        // repeat the 8-thread run to also catch run-to-run nondeterminism
+        for _ in 0..3 {
+            let eight = parallel_search(&p, limit, 2, &cfg(8, 3));
+            match (&one, &eight) {
+                (None, None) => {}
+                (Some((c1, cost1, st1)), Some((c8, cost8, st8))) => {
+                    assert!(st1.complete && st8.complete);
+                    assert_eq!(c1, c8, "choice diverged at frac {frac}");
+                    assert_eq!(cost1.time.to_bits(), cost8.time.to_bits());
+                    assert_eq!(cost1.peak_mem.to_bits(),
+                               cost8.peak_mem.to_bits());
+                    feasible += 1;
+                }
+                _ => panic!("feasibility diverged at frac {frac}"),
+            }
+        }
+    }
+    assert!(feasible > 0, "sweep must exercise feasible limits");
+}
+
+/// Dominance filtering never removes the optimal plan: exhaustive search
+/// over raw menus and Pareto-filtered menus returns the same optimum on
+/// random small instances.
+#[test]
+fn prop_dominance_preserves_optimum() {
+    prop::check(0xD0317A7E, 15, gen_instance, |inst| {
+        let m = build_gpt(&GptDims::uniform("p", 1000, 64, inst.layers,
+                                            inst.hidden, 2));
+        let c = Cluster::rtx_titan(inst.n_dev, 8.0);
+        let s = SearchConfig { granularities: inst.grans.clone(),
+                               ..Default::default() };
+        let raw = Profiler::with_pruning(&m, &c, &s, false);
+        if raw.log10_plan_space() > 5.5 {
+            return Ok(());
+        }
+        let pruned = Profiler::new(&m, &c, &s);
+        let dp_mem = raw
+            .evaluate(&raw.index_of(|d| d.is_pure_dp()), inst.b)
+            .peak_mem;
+        let limit = dp_mem * inst.limit_frac;
+        let a = exhaustive_search(&raw, limit, inst.b);
+        let b = exhaustive_search(&pruned, limit, inst.b);
+        match (a, b) {
+            (None, None) => Ok(()),
+            (Some((_, ca)), Some((_, cb))) => {
+                prop::close(ca.time, cb.time, 1e-10)
+            }
+            (a, b) => Err(format!(
+                "pruning changed feasibility: raw={:?} pruned={:?}",
+                a.is_some(),
+                b.is_some()
+            )),
+        }
+    });
+}

@@ -1,0 +1,100 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment vendors no registry crates, so this in-repo stub
+//! provides exactly the subset `osdp` uses: [`Result`], [`Error`], the
+//! [`anyhow!`] and [`ensure!`] macros, and the [`Context`] extension
+//! trait. Errors are a single formatted message with `:`-joined context —
+//! enough for the runtime/train error paths, which only ever display them.
+//! To use the real crate, point the root `Cargo.toml`'s `anyhow` entry at
+//! crates.io instead of this path.
+
+use std::fmt;
+
+/// String-backed error value (the real crate's dynamic error + backtrace
+/// machinery is not needed for display-only consumers).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to any `Result` whose error is debuggable.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T>;
+}
+
+impl<T, E: fmt::Debug> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{c}: {e:?}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e:?}", f()) })
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        Err(anyhow!("bad {}", 7))
+    }
+
+    fn guarded(x: u32) -> Result<u32> {
+        ensure!(x > 1, "x too small: {x}");
+        Ok(x)
+    }
+
+    #[test]
+    fn macros_and_context_chain() {
+        let e = fails().context("opening").unwrap_err();
+        assert_eq!(format!("{e}"), "opening: bad 7");
+        let e2: Error = "io".parse::<u32>()
+            .with_context(|| format!("parsing {}", "io"))
+            .unwrap_err();
+        assert!(format!("{e2:?}").starts_with("parsing io: "));
+        assert!(guarded(0).is_err());
+        assert_eq!(guarded(2).unwrap(), 2);
+    }
+}
