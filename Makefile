@@ -14,13 +14,12 @@ build:
 test:
 	$(CARGO) test -q
 
-# Advisory for now (the imported seed tree predates rustfmt/clippy); CI
-# mirrors this with continue-on-error until the tree is formatted.
+# Blocking since PR 2 (CI mirrors this; run `cargo fmt` to fix).
 fmt:
-	-$(CARGO) fmt --check
+	$(CARGO) fmt --check
 
 clippy:
-	-$(CARGO) clippy --all-targets -- -D warnings
+	$(CARGO) clippy --all-targets -- -D warnings
 
 # Benches compile everywhere; running them is a local-only activity.
 bench-smoke:

@@ -1,8 +1,10 @@
 //! §3.2 search-cost claim: "it takes merely 9-307 seconds in our
 //! experiments to complete the search process". Our branch-and-bound
-//! (greedy-seeded, suffix-bounded) searches the same spaces in well under
-//! a second per setting — reported here per zoo model, plus planner
-//! micro-benchmarks (plans evaluated per second, nodes per second).
+//! (greedy-seeded, suffix-bounded, symmetry-folded) searches the same
+//! spaces in well under a second per setting — reported here per zoo
+//! model, plus planner micro-benchmarks (plans evaluated per second,
+//! folded-vs-unfolded node counts) and a machine-readable
+//! `BENCH_search.json` so the perf trajectory is tracked across PRs.
 //!
 //! Run: `cargo bench --bench search_time`
 
@@ -10,9 +12,18 @@ use osdp::bench::Bencher;
 use osdp::config::{Cluster, GIB, SearchConfig};
 use osdp::cost::Profiler;
 use osdp::figures::{self, Quality};
-use osdp::planner::{ParallelConfig, Scheduler, dfs_search, parallel_search};
+use osdp::planner::{ParallelConfig, Scheduler, dfs_search,
+                    dfs_search_unfolded, parallel_search};
+use osdp::util::json::Json;
+use std::collections::BTreeMap;
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
 
 fn main() {
+    let mut out: BTreeMap<String, Json> = BTreeMap::new();
+
     println!("== per-setting scheduler wall clock (paper: 9-307 s) ==");
     let t = figures::search_times(8.0, Quality::Full);
     print!("{}", t.render());
@@ -32,14 +43,21 @@ fn main() {
     let profiler = Profiler::new(&entry.model, &cluster, &search);
     let choice = profiler.index_of(|d| d.is_pure_zdp());
 
+    let fold = osdp::planner::fold_report(&profiler);
+    println!("\nsymmetry fold: {}", fold.describe());
+    out.insert("fold_ops".into(), num(fold.ops as f64));
+    out.insert("fold_classes".into(), num(fold.classes as f64));
+    out.insert("fold_max_multiplicity".into(),
+               num(fold.max_multiplicity as f64));
+    out.insert("log10_space_unfolded".into(), num(fold.log10_unfolded));
+    out.insert("log10_space_folded".into(), num(fold.log10_folded));
+
     let mut b = Bencher::new(3, 10, 100);
     let m = b.bench("profiler/evaluate_194op_plan", || {
         profiler.evaluate(&choice, 4)
     });
-    println!(
-        "\nplan evaluations: {:.2} M plans/s",
-        1e-6 / m.per_iter()
-    );
+    println!("plan evaluations: {:.2} M plans/s", 1e-6 / m.per_iter());
+    out.insert("evaluate_per_iter_s".into(), num(m.per_iter()));
 
     let mut b2 = Bencher::new(1, 5, 1);
     let m2 = b2.bench("dfs/96L_1536H_16G_b4", || {
@@ -54,11 +72,35 @@ fn main() {
     println!("full batch sweep: {}", osdp::util::fmt_time(m3.per_iter()));
     assert!(m3.per_iter() < 307.0,
             "must not exceed the paper's own upper bound");
+    out.insert("sweep_wall_s".into(), num(m3.per_iter()));
 
-    // serial DFS vs the parallel branch-and-bound on the same GPT-XL-class
-    // menu (zoo 96L/1536H, 2.9B params — the search the tentpole targets)
-    println!("\n== serial vs parallel B&B (GPT-XL-class 96L/1536H, b=4) ==");
+    // folded vs unfolded search trees on the same GPT-XL-class menu (zoo
+    // 96L/1536H, 2.9B params — the search the tentpole targets)
+    println!("\n== folded vs unfolded search tree (96L/1536H, b=4) ==");
     let limit = 16.0 * GIB;
+    let folded = dfs_search(&profiler, limit, 4).unwrap();
+    let unfolded =
+        dfs_search_unfolded(&profiler, limit, 4, 2_000_000).unwrap();
+    let reduction = unfolded.2.nodes as f64 / folded.2.nodes.max(1) as f64;
+    println!(
+        "folded {} nodes vs unfolded {} nodes{} -> {reduction:.1}x fewer",
+        folded.2.nodes,
+        unfolded.2.nodes,
+        if unfolded.2.complete { "" } else { " [budget expired]" },
+    );
+    if folded.2.complete && unfolded.2.complete {
+        assert_eq!(folded.0, unfolded.0,
+                   "folded planner must match the per-op engine");
+        assert_eq!(folded.1.time.to_bits(), unfolded.1.time.to_bits());
+    }
+    out.insert("nodes_folded".into(), num(folded.2.nodes as f64));
+    out.insert("nodes_unfolded".into(), num(unfolded.2.nodes as f64));
+    out.insert("fold_node_reduction".into(), num(reduction));
+    out.insert("unfolded_budget_expired".into(),
+               Json::Bool(!unfolded.2.complete));
+
+    // serial DFS vs the parallel branch-and-bound
+    println!("\n== serial vs parallel B&B (GPT-XL-class 96L/1536H, b=4) ==");
     let mut bs = Bencher::new(1, 5, 1);
     let ms = bs.bench("search/serial_dfs", || {
         dfs_search(&profiler, limit, 4)
@@ -96,8 +138,22 @@ fn main() {
         osdp::util::fmt_time(m1.per_iter()),
         osdp::util::fmt_time(m8.per_iter()),
     );
+    out.insert("search_serial_s".into(), num(ms.per_iter()));
+    out.insert("search_parallel1_s".into(), num(m1.per_iter()));
+    out.insert("search_parallel8_s".into(), num(m8.per_iter()));
+    out.insert("parallel_speedup_8t".into(), num(speedup));
+
+    // machine-readable perf record, tracked across PRs
+    let path = std::env::var("OSDP_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_search.json".to_string());
+    let doc = osdp::util::json::to_string(&Json::Obj(out));
+    std::fs::write(&path, format!("{doc}\n")).expect("writing bench json");
+    println!("\nwrote {path}");
+
     if std::env::var_os("OSDP_BENCH_STRICT").is_some() {
         assert!(speedup >= 2.0,
                 "expected >=2x at 8 threads, measured {speedup:.2}x");
+        assert!(reduction >= 10.0,
+                "expected >=10x fold reduction, measured {reduction:.1}x");
     }
 }

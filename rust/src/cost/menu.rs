@@ -15,7 +15,7 @@
 //! deduplicated; option 0 being the fastest entry is an invariant both the
 //! suffix bounds and the fast-completion rule of the search rely on.
 
-use super::profiler::DecisionCost;
+use super::profiler::{DecisionCost, OpCostTable};
 
 /// Before/after size of one operator's menu.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -36,6 +36,35 @@ impl MenuStats {
         self.raw += other.raw;
         self.kept += other.kept;
     }
+}
+
+/// Canonical equality key of one operator's pruned cost table: the exact
+/// bit patterns of every quantity the search engine (and `evaluate`) reads.
+/// Two operators with equal keys are *interchangeable* — swapping their
+/// decisions changes neither any plan's time nor its peak memory — which is
+/// what lets the planner fold them into one multiplicity class
+/// (`planner::bound`). Deliberately excludes names and `Decision` labels:
+/// they do not enter any cost.
+///
+/// `Ord`/`Hash` are derived over the bit encoding so the key can index
+/// maps and give classes a canonical order.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TableKey(Vec<u64>);
+
+/// Build the [`TableKey`] for a table. Menus are already sorted
+/// fastest-first with exact ties deduplicated, so equal menus produce
+/// equal encodings positionally.
+pub fn table_key(t: &OpCostTable) -> TableKey {
+    let mut bits = Vec::with_capacity(3 * t.options.len() + 3);
+    bits.push(t.act_per_sample.to_bits());
+    bits.push(t.workspace_per_sample.to_bits());
+    bits.push(t.gamma.to_bits());
+    for o in &t.options {
+        bits.push(o.time_fixed().to_bits());
+        bits.push(o.states.to_bits());
+        bits.push(o.gather.to_bits());
+    }
+    TableKey(bits)
 }
 
 /// Drop every strictly dominated decision, dedupe exact ties, and sort the
@@ -122,6 +151,27 @@ mod tests {
         ]);
         assert_eq!(stats.kept, 3);
         assert_eq!(menu.len(), 3);
+    }
+
+    #[test]
+    fn table_key_separates_search_relevant_differences_only() {
+        let mk = |options: Vec<DecisionCost>, act: f64, gamma: f64| {
+            crate::cost::OpCostTable::new("x".into(), options, act, 0.0,
+                                          gamma)
+        };
+        let a = mk(vec![cost(1.0, 4.0, 0.0), cost(2.0, 2.0, 0.0)], 8.0, 1e-3);
+        // same costs, different name — equal keys
+        let mut b = mk(vec![cost(1.0, 4.0, 0.0), cost(2.0, 2.0, 0.0)], 8.0,
+                       1e-3);
+        b.name = "y".into();
+        assert_eq!(table_key(&a), table_key(&b));
+        // any search-relevant field difference splits the key
+        let c = mk(vec![cost(1.0, 4.0, 0.0), cost(2.0, 2.5, 0.0)], 8.0, 1e-3);
+        let d = mk(vec![cost(1.0, 4.0, 0.0), cost(2.0, 2.0, 0.0)], 9.0, 1e-3);
+        let e = mk(vec![cost(1.0, 4.0, 0.0), cost(2.0, 2.0, 0.0)], 8.0, 2e-3);
+        assert_ne!(table_key(&a), table_key(&c));
+        assert_ne!(table_key(&a), table_key(&d));
+        assert_ne!(table_key(&a), table_key(&e));
     }
 
     /// The load-bearing property: filtering the menus never changes the

@@ -10,8 +10,9 @@
 //! full plan is a handful of fused multiply-adds per operator.
 
 use super::memory::op_memory;
-use super::menu::{self, MenuStats};
-use super::time::{batch_efficiency, op_comm_time, SPLIT_LAUNCH_OVERHEAD};
+use super::menu::{self, MenuStats, TableKey};
+use super::time::{batch_efficiency, op_comm_time, snap_time,
+                  SPLIT_LAUNCH_OVERHEAD};
 use super::Decision;
 use crate::config::{Cluster, SearchConfig};
 use crate::model::ModelDesc;
@@ -58,16 +59,36 @@ pub struct OpCostTable {
     pub workspace_per_sample: f64,
     /// γ_i: compute seconds per sample (includes ckpt recompute factor).
     pub gamma: f64,
+    /// Cached `min(states)` over the menu — the search engine's suffix
+    /// bounds read this once per op instead of re-folding over `options`.
+    pub min_states: f64,
+    /// Cached `min(gather)` over the menu (the batch-independent part of
+    /// the minimum transient; add `b · workspace_per_sample` per batch).
+    pub min_gather: f64,
 }
 
 impl OpCostTable {
-    pub fn fastest(&self) -> &DecisionCost {
-        &self.options[0]
+    /// Build a table, caching the per-menu minima the search bounds read.
+    pub fn new(name: String, options: Vec<DecisionCost>, act_per_sample: f64,
+               workspace_per_sample: f64, gamma: f64) -> OpCostTable {
+        assert!(!options.is_empty(), "empty menu for {name}");
+        let min_states =
+            options.iter().map(|o| o.states).fold(f64::INFINITY, f64::min);
+        let min_gather =
+            options.iter().map(|o| o.gather).fold(f64::INFINITY, f64::min);
+        OpCostTable {
+            name,
+            options,
+            act_per_sample,
+            workspace_per_sample,
+            gamma,
+            min_states,
+            min_gather,
+        }
     }
 
-    /// Minimum possible state+gather memory over the menu.
-    pub fn min_states(&self) -> f64 {
-        self.options.iter().map(|o| o.states).fold(f64::INFINITY, f64::min)
+    pub fn fastest(&self) -> &DecisionCost {
+        &self.options[0]
     }
 
     pub fn min_time_fixed(&self) -> f64 {
@@ -160,17 +181,25 @@ impl Profiler {
                         cands.push(Decision::ZDP);
                     }
                 }
+                // Times snap to the 2⁻³⁰ s grid and memory to whole bytes:
+                // both are far below model resolution, and they make every
+                // sum the search engine forms *exact* in f64 — so plan
+                // costs are independent of operator visit order, which the
+                // symmetry-folded planner's tie-breaking requires (see
+                // `cost::time::TIME_GRID` and `planner::bound`).
                 let raw: Vec<DecisionCost> = cands
                     .into_iter()
                     .map(|d| {
                         let mem = op_memory(op, d, 1, n, ck);
                         DecisionCost {
                             decision: d,
-                            comm: op_comm_time(op, d, cluster, ck),
-                            launch: (d.slices() - 1) as f64
-                                * SPLIT_LAUNCH_OVERHEAD,
-                            states: mem.states,
-                            gather: mem.gather,
+                            comm: snap_time(op_comm_time(op, d, cluster, ck)),
+                            launch: snap_time(
+                                (d.slices() - 1) as f64
+                                    * SPLIT_LAUNCH_OVERHEAD,
+                            ),
+                            states: mem.states.ceil(),
+                            gather: mem.gather.ceil(),
                         }
                     })
                     .collect();
@@ -192,13 +221,13 @@ impl Profiler {
                 }
                 let gamma = flops / cluster.flops;
                 let mem1 = op_memory(op, Decision::DP, 1, n, ck);
-                let table = OpCostTable {
-                    name: op.name.clone(),
+                let table = OpCostTable::new(
+                    op.name.clone(),
                     options,
-                    act_per_sample: mem1.activations,
-                    workspace_per_sample: mem1.workspace,
+                    mem1.activations.ceil(),
+                    mem1.workspace.ceil(),
                     gamma,
-                };
+                );
                 (table, mstats)
             })
             .unzip();
@@ -229,26 +258,73 @@ impl Profiler {
         self.tables.iter().map(|t| (t.options.len() as f64).log10()).sum()
     }
 
+    /// Partition the operators into interchangeability classes: groups
+    /// whose pruned cost tables are byte-for-byte equal (menus *and*
+    /// per-sample act/workspace/γ — see [`menu::table_key`]). On the
+    /// GPT-style stacks the paper targets this collapses runs of identical
+    /// layers into one class per op shape, which is what the planner's
+    /// symmetry fold searches over.
+    ///
+    /// Classes are returned in order of first appearance; members keep
+    /// profiler order, so the partition is deterministic.
+    pub fn op_classes(&self) -> Vec<Vec<usize>> {
+        let mut classes: Vec<(TableKey, Vec<usize>)> = Vec::new();
+        for (i, t) in self.tables.iter().enumerate() {
+            let key = menu::table_key(t);
+            match classes.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, members)) => members.push(i),
+                None => classes.push((key, vec![i])),
+            }
+        }
+        classes.into_iter().map(|(_, m)| m).collect()
+    }
+
+    /// Per-operator class index (same class numbering as
+    /// [`Profiler::op_classes`]).
+    pub fn class_ids(&self) -> Vec<usize> {
+        let classes = self.op_classes();
+        let mut ids = vec![0usize; self.n_ops()];
+        for (c, members) in classes.iter().enumerate() {
+            for &op in members {
+                ids[op] = c;
+            }
+        }
+        ids
+    }
+
     /// Evaluate a plan given per-op option indices.
+    ///
+    /// The decision-dependent time (a sum of grid-snapped `time_fixed`
+    /// terms) and the decision-independent compute time are accumulated
+    /// separately, so the result is bit-identical under any permutation of
+    /// interchangeable operators' decisions — the invariant the folded
+    /// planner's canonical unfold relies on.
     pub fn evaluate(&self, choice: &[usize], b: usize) -> PlanCost {
         assert_eq!(choice.len(), self.tables.len());
         let bf = b as f64;
         let eff = batch_efficiency(b);
-        let mut time = 0.0;
+        let mut time_fixed = 0.0;
+        let mut compute = 0.0;
         let mut persistent = 0.0;
         let mut transient_max: f64 = 0.0;
         for (t, &c) in self.tables.iter().zip(choice) {
             let opt = &t.options[c];
-            time += opt.time_fixed() + bf * t.gamma / eff;
+            time_fixed += opt.time_fixed();
+            compute += bf * t.gamma;
             persistent += opt.states + bf * t.act_per_sample;
             transient_max = transient_max
                 .max(opt.gather + bf * t.workspace_per_sample);
         }
-        PlanCost { time, peak_mem: persistent + transient_max }
+        PlanCost {
+            time: time_fixed + compute / eff,
+            peak_mem: persistent + transient_max,
+        }
     }
 
-    /// Evaluate the all-DP plan (option 0 is always the fastest ⇒ for DP it
-    /// must exist in the menu; use explicit search to be safe).
+    /// Per-op option index of the first menu entry whose decision matches
+    /// `pred` (a decision-predicate lookup, e.g. "the pure-DP option" or
+    /// "the pure-ZDP option"); falls back to option 0 — the fastest entry —
+    /// for any op whose menu has no match.
     pub fn index_of(&self, pred: impl Fn(&Decision) -> bool) -> Vec<usize> {
         self.tables
             .iter()
@@ -343,5 +419,70 @@ mod tests {
         let small = profiler(vec![0]).log10_plan_space();
         let big = profiler(vec![0, 2, 4, 8]).log10_plan_space();
         assert!(big > small);
+    }
+
+    #[test]
+    fn menu_costs_are_grid_quantized() {
+        let p = profiler(vec![0, 4]);
+        for t in &p.tables {
+            assert_eq!(t.act_per_sample.fract(), 0.0, "{}", t.name);
+            assert_eq!(t.workspace_per_sample.fract(), 0.0);
+            for o in &t.options {
+                assert_eq!((o.comm / crate::cost::time::TIME_GRID).fract(),
+                           0.0);
+                assert_eq!((o.launch / crate::cost::time::TIME_GRID).fract(),
+                           0.0);
+                assert_eq!(o.states.fract(), 0.0, "whole bytes");
+                assert_eq!(o.gather.fract(), 0.0, "whole bytes");
+            }
+        }
+    }
+
+    #[test]
+    fn cached_menu_minima_match_folds() {
+        let p = profiler(vec![0, 4]);
+        for t in &p.tables {
+            let ms =
+                t.options.iter().map(|o| o.states).fold(f64::INFINITY,
+                                                        f64::min);
+            let mg =
+                t.options.iter().map(|o| o.gather).fold(f64::INFINITY,
+                                                        f64::min);
+            assert_eq!(t.min_states.to_bits(), ms.to_bits());
+            assert_eq!(t.min_gather.to_bits(), mg.to_bits());
+        }
+    }
+
+    #[test]
+    fn identical_layers_share_a_class() {
+        // 2 identical fine-grained layers: each per-layer op shape folds
+        // into one class of multiplicity 2 (+ lnf joining the ln class
+        // when checkpointing is off), embed and head stay singletons.
+        let p = profiler(vec![0]);
+        let classes = p.op_classes();
+        let total: usize = classes.iter().map(|c| c.len()).sum();
+        assert_eq!(total, p.n_ops());
+        assert!(classes.len() < p.n_ops(), "identical layers must fold");
+        let max_mult = classes.iter().map(|c| c.len()).max().unwrap();
+        assert!(max_mult >= 2);
+        // the id view agrees with the partition
+        let ids = p.class_ids();
+        for (c, members) in classes.iter().enumerate() {
+            for &op in members {
+                assert_eq!(ids[op], c);
+            }
+        }
+        // interchangeability is real: swapping two same-class members'
+        // decisions changes neither time nor peak memory
+        let big = classes.iter().find(|c| c.len() >= 2).unwrap();
+        let (a, b) = (big[0], big[1]);
+        let mut choice = p.index_of(|d| d.is_pure_dp());
+        choice[a] = p.tables[a].options.len() - 1;
+        let cost = p.evaluate(&choice, 2);
+        let mut swapped = choice.clone();
+        swapped.swap(a, b);
+        let cost2 = p.evaluate(&swapped, 2);
+        assert_eq!(cost.time.to_bits(), cost2.time.to_bits());
+        assert_eq!(cost.peak_mem.to_bits(), cost2.peak_mem.to_bits());
     }
 }

@@ -21,6 +21,27 @@ use crate::model::Operator;
 /// communication dominates, so it only surfaces on compute-bound ops).
 pub const SPLIT_LAUNCH_OVERHEAD: f64 = 5e-6;
 
+/// Grid every per-decision time is snapped to when the Profiler builds its
+/// cost tables: 2⁻³⁰ s ≈ 0.93 ns, far below anything the (α, β, γ) model
+/// can resolve.
+///
+/// The point is not precision but *exactness*: sums of multiples of a
+/// power-of-two grid are computed without rounding by f64 (any total below
+/// 2²³ s stays within 53 significand bits of the grid), so plan times are
+/// identical no matter the order operators are visited in. That makes time
+/// ties exact rather than ULP-dependent, which the symmetry-folded planner
+/// relies on: permuting the decisions of interchangeable operators must
+/// not change a plan's time by even one bit (see `planner::bound`).
+pub const TIME_GRID: f64 = 1.0 / (1u64 << 30) as f64;
+
+/// Snap a non-negative time to the nearest [`TIME_GRID`] multiple. Exact
+/// for every physically plausible input: `t · 2³⁰` fits f64's integer
+/// range for `t` up to days, `round` is exact, and scaling by a power of
+/// two never rounds.
+pub fn snap_time(t: f64) -> f64 {
+    (t * (1u64 << 30) as f64).round() * TIME_GRID
+}
+
 /// Device compute efficiency at per-device batch `b`: small batches
 /// under-utilize wide execution units (GEMM tiles, pipelines), so effective
 /// FLOP/s saturate with batch. This simple `b/(b+2)` curve (33% at b=1,
@@ -95,6 +116,27 @@ mod tests {
         let m = build_gpt(&GptDims::uniform("t", 1000, 64, 1, 512, 4));
         let op = m.ops.iter().find(|o| o.name == "l0.mlp_up").unwrap().clone();
         (op, Cluster::rtx_titan(8, 8.0))
+    }
+
+    #[test]
+    fn snapped_times_sum_exactly_in_any_order() {
+        // The property the folded planner relies on: snapped values are
+        // grid multiples, and grid-multiple sums never round — so the sum
+        // is bit-identical under permutation.
+        let vals: Vec<f64> =
+            [1.7e-3, 3.1e-5, 0.25, 9.9e-7, 1.0 / 3.0, 42.0e-3]
+                .iter()
+                .map(|&t| snap_time(t))
+                .collect();
+        let fwd: f64 = vals.iter().sum();
+        let rev: f64 = vals.iter().rev().sum();
+        assert_eq!(fwd.to_bits(), rev.to_bits());
+        for v in &vals {
+            assert_eq!(snap_time(*v).to_bits(), v.to_bits(), "idempotent");
+            assert_eq!((v / TIME_GRID).fract(), 0.0, "grid multiple");
+        }
+        // snapping moves a value by at most half a grid step
+        assert!((snap_time(1.0 / 3.0) - 1.0 / 3.0).abs() <= TIME_GRID);
     }
 
     #[test]

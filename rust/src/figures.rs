@@ -342,9 +342,8 @@ pub fn debug_min_mem(setting: &str, mem_gib: f64) -> String {
     let mut act = 0.0;
     let mut trans: f64 = 0.0;
     for t in &p.tables {
-        let min_states = t.min_states();
-        let min_trans = t.options.iter().map(|o| o.gather)
-            .fold(f64::INFINITY, f64::min) + t.workspace_per_sample;
+        let min_states = t.min_states;
+        let min_trans = t.min_gather + t.workspace_per_sample;
         states += min_states;
         act += t.act_per_sample;
         trans = trans.max(min_trans);

@@ -95,6 +95,9 @@ commands:
           [--split-depth D]  parallel B&B tree-split depth (default 3)
           [--batch B]        search one batch size with the parallel B&B
                              instead of sweeping
+          [--no-fold]        plan per operator instead of per equivalence
+                             class (identical result, exponentially more
+                             search nodes on symmetric models)
   fig5    [--mem 8] [--full] [--csv out.csv]
   fig6    [--mem 16] [--full] [--csv out.csv]
   fig7
@@ -150,6 +153,7 @@ fn plan(args: &Args) {
         .unwrap_or_else(parallel::default_threads);
     let split_depth =
         args.usize_or("split-depth", parallel::DEFAULT_SPLIT_DEPTH);
+    let fold = !args.flag("no-fold");
     println!(
         "plan space: 10^{:.1} plans over {} ops ({} -> {} menu options \
          after dominance pruning); limit {}; {} threads",
@@ -160,10 +164,16 @@ fn plan(args: &Args) {
         osdp::util::fmt_bytes(cluster.mem_limit),
         threads,
     );
+    let fr = osdp::planner::fold_report(&profiler);
+    println!(
+        "symmetry fold{}: {}",
+        if fold { "" } else { " (DISABLED via --no-fold)" },
+        fr.describe(),
+    );
 
     // --batch B: one parallel branch-and-bound search instead of a sweep
     if let Some(b) = args.usize_opt("batch") {
-        let cfg = ParallelConfig { threads, split_depth,
+        let cfg = ParallelConfig { threads, split_depth, fold,
                                    ..Default::default() };
         let t0 = std::time::Instant::now();
         match osdp::planner::parallel_search(&profiler, cluster.mem_limit, b,
@@ -194,6 +204,7 @@ fn plan(args: &Args) {
     let t0 = std::time::Instant::now();
     match Scheduler::new(&profiler, cluster.mem_limit, search.max_batch)
         .with_threads(threads)
+        .with_fold(fold)
         .run()
     {
         None => println!("NO FEASIBLE PLAN (even all-ZDP at b=1 exceeds the \

@@ -1,19 +1,65 @@
 //! Shared branch-and-bound machinery for the serial DFS ([`super::dfs`])
-//! and the parallel planner ([`super::parallel`]).
+//! and the parallel planner ([`super::parallel`]), including the
+//! **symmetry fold**: planning over operator equivalence classes instead
+//! of individual operators.
 //!
-//! The two planners explore the same tree with the same bounds; this module
-//! owns the pieces they share so they cannot drift apart:
-//!
-//! * [`SearchSpace`] — the precomputation pass: operator visit order
-//!   (largest parameter mass first), flattened per-position option menus,
-//!   admissible suffix bounds, decision-independent base terms, and the
+//! * [`Prefold`] — the batch-independent precomputation pass, built once
+//!   per profiler and reused across every batch size of a sweep: the
+//!   class partition (operators whose pruned [`crate::cost::OpCostTable`]s
+//!   are byte-for-byte equal, via [`crate::cost::menu::table_key`]), the
+//!   class-contiguous visit order, and the batch-independent suffix
+//!   bounds.
+//! * [`SearchSpace`] — the per-(memory limit, batch) view over a
+//!   `Prefold`: flattened option menus with the batch's transients,
+//!   transient suffix bounds, decision-independent base terms, and the
 //!   greedy incumbent seed.
 //! * [`Walker`] — one depth-first worker over a (possibly proper) subtree
-//!   of the space, carrying its local incumbent and [`DfsStats`].
-//! * [`SharedBound`] — the global incumbent *time* shared across workers as
-//!   an `AtomicU64` holding the f64 bit pattern (for non-negative floats
-//!   the IEEE-754 bit pattern is monotone in the numeric value, so
+//!   of the space, carrying its local incumbent and [`DfsStats`]. It has
+//!   two descent modes over the *same* incumbent machinery: the classic
+//!   per-operator descent, and the folded descent whose positions are
+//!   `(class, multiplicity)` and whose branches assign counts per option.
+//! * [`SharedBound`] — the global incumbent *time* shared across workers
+//!   as an `AtomicU64` holding the f64 bit pattern (for non-negative
+//!   floats the IEEE-754 bit pattern is monotone in the numeric value, so
 //!   `fetch_min` over bits is `fetch_min` over seconds).
+//!
+//! # The symmetry fold
+//!
+//! GPT-style stacks are dominated by runs of identical layers whose cost
+//! tables are equal, so the per-operator tree has `Π |menu|^L` leaves
+//! while the *distinct-cost* plan space only has one point per count
+//! vector: what matters is **how many** members of a class take each
+//! option, never **which** members. The folded descent therefore branches
+//! over count compositions — equivalently, over the monotone
+//! (non-decreasing) option blocks that canonically represent them — and
+//! a class with multiplicity `m` and menu size `o` contributes
+//! `C(m+o-1, o-1)` branches (polynomial in `m`) instead of `o^m`.
+//!
+//! The fold is *exact*, and bit-identical to the unfolded engine, by
+//! construction:
+//!
+//! 1. **Interchangeability is bitwise.** The Profiler snaps menu times to
+//!    the power-of-two [`crate::cost::time::TIME_GRID`] and memory to
+//!    whole bytes, so every sum the search forms is computed without f64
+//!    rounding. Permuting the decisions of same-class operators changes
+//!    no accumulated time, no state sum, and no transient max — not even
+//!    in the last bit.
+//! 2. **The visit order is class-contiguous.** Classes are laid out as
+//!    contiguous runs (members of a class have equal menus, hence equal
+//!    sort keys, so this only reorders within equal-key runs of the
+//!    largest-parameter-mass-first order). A folded prefix of classes is
+//!    therefore also a plain positional prefix, and the folded walker
+//!    accumulates each block's options left-to-right through the same
+//!    per-position arithmetic as the unfolded walker descending the same
+//!    positions.
+//! 3. **The canonical unfold is the lex-least representative.** Within a
+//!    class, sorting the assigned options ascending over its positions is
+//!    the lexicographically least member of the permutation orbit, and
+//!    the orbit's members all tie exactly (point 1) — so the
+//!    `(time, lex)`-minimum of the full space is always a monotone
+//!    assignment, which is exactly the set of leaves the folded descent
+//!    enumerates (in the same lex order the unfolded descent would meet
+//!    them).
 //!
 //! # Exactness and determinism
 //!
@@ -56,24 +102,115 @@ pub(crate) struct FlatOpt {
     pub transient: f64,
 }
 
-/// The precomputed search problem: everything descend needs, none of it
-/// mutable. Built once per (profiler, memory limit, batch) triple and
-/// shared by reference across workers.
-pub(crate) struct SearchSpace {
-    /// op evaluation order (largest params first), as profiler indices
+/// Batch-independent precomputation: the class partition, the
+/// class-contiguous visit order, and every suffix bound that does not
+/// depend on the batch size. Built once per profiler; the scheduler's
+/// batch sweep shares one `Prefold` across all its workers and batch
+/// sizes instead of rebuilding the fold for every `b`.
+pub(crate) struct Prefold {
+    /// Op evaluation order (largest params first, then regrouped so each
+    /// equivalence class is a contiguous run), as profiler indices.
     pub order: Vec<usize>,
-    /// per ordered position: the option menu, flattened
+    /// Class boundaries over `order`: class `k` occupies positions
+    /// `class_start[k]..class_start[k+1]`; `class_start[n_classes] == n`.
+    pub class_start: Vec<usize>,
+    /// Per ordered position `i`: min over options of `time_fixed` summed
+    /// over positions `>= i` (batch-independent).
+    pub suffix_min_time: Vec<f64>,
+    /// Per ordered position `i`: min over options of `states` summed over
+    /// positions `>= i` (batch-independent).
+    pub suffix_min_states: Vec<f64>,
+    /// Fast-completion (option 0 = fastest) states suffix sums.
+    pub suffix_opt0_states: Vec<f64>,
+}
+
+impl Prefold {
+    pub fn new(profiler: &Profiler) -> Prefold {
+        let n = profiler.n_ops();
+
+        // Visit ops with the largest parameter mass first: their decisions
+        // move the most memory/time, so bounds tighten early. The sort is
+        // stable (ties keep profiler order), so the order is
+        // deterministic.
+        let mut base: Vec<usize> = (0..n).collect();
+        base.sort_by(|&x, &y| {
+            let sx = profiler.tables[x].fastest().states;
+            let sy = profiler.tables[y].fastest().states;
+            sy.partial_cmp(&sx).unwrap()
+        });
+
+        // Regroup so every equivalence class is contiguous, keyed on the
+        // canonical table key. Same-class ops have identical menus —
+        // identical sort keys — so members only move within equal-key
+        // runs: the "heaviest first" shape of the order is preserved, and
+        // a folded class prefix is also a positional prefix.
+        let class_id = profiler.class_ids();
+        let n_classes = class_id.iter().copied().max().map_or(0, |m| m + 1);
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); n_classes];
+        for &op in &base {
+            members[class_id[op]].push(op);
+        }
+        let mut order = Vec::with_capacity(n);
+        let mut class_start = Vec::with_capacity(n_classes + 1);
+        let mut placed = vec![false; n_classes];
+        for &op in &base {
+            let c = class_id[op];
+            if !placed[c] {
+                placed[c] = true;
+                class_start.push(order.len());
+                order.extend_from_slice(&members[c]);
+            }
+        }
+        class_start.push(n);
+        debug_assert_eq!(order.len(), n);
+
+        let mut suffix_min_time = vec![0.0; n + 1];
+        let mut suffix_min_states = vec![0.0; n + 1];
+        let mut suffix_opt0_states = vec![0.0; n + 1];
+        for i in (0..n).rev() {
+            let t = &profiler.tables[order[i]];
+            suffix_min_time[i] = suffix_min_time[i + 1] + t.min_time_fixed();
+            suffix_min_states[i] = suffix_min_states[i + 1] + t.min_states;
+            suffix_opt0_states[i] =
+                suffix_opt0_states[i + 1] + t.fastest().states;
+        }
+
+        Prefold {
+            order,
+            class_start,
+            suffix_min_time,
+            suffix_min_states,
+            suffix_opt0_states,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.class_start.len() - 1
+    }
+
+    /// Members of class `k` (count of positions it occupies).
+    pub fn multiplicity(&self, k: usize) -> usize {
+        self.class_start[k + 1] - self.class_start[k]
+    }
+}
+
+/// The per-(memory limit, batch) search problem over a [`Prefold`]:
+/// everything descend needs, none of it mutable. Shared by reference
+/// across workers.
+pub(crate) struct SearchSpace<'p> {
+    pub pre: &'p Prefold,
+    /// Per ordered position: the option menu, flattened with this batch's
+    /// transients.
     pub flat: Vec<Vec<FlatOpt>>,
     pub mem_limit: f64,
-    // per ordered position i: min over options of time_fixed / states for
-    // ops at positions >= i
-    pub suffix_min_time: Vec<f64>,
-    pub suffix_min_states: Vec<f64>,
-    /// max over remaining ops of their minimum transient (admissible lower
-    /// bound on the final transient max)
+    /// Max over remaining ops of their minimum transient (admissible lower
+    /// bound on the final transient max).
     pub suffix_min_trans: Vec<f64>,
-    // fast-completion (option 0 = fastest) suffix sums
-    pub suffix_opt0_states: Vec<f64>,
+    /// Fast-completion transient suffix max.
     pub suffix_opt0_trans: Vec<f64>,
     // decision-independent totals
     pub base_time: f64,
@@ -83,9 +220,12 @@ pub(crate) struct SearchSpace {
     pub seed: Option<(f64, Vec<usize>)>,
 }
 
-impl SearchSpace {
-    pub fn new(profiler: &Profiler, mem_limit: f64, b: usize) -> SearchSpace {
-        let n = profiler.n_ops();
+impl<'p> SearchSpace<'p> {
+    /// The per-batch pass: transients, base terms, and the greedy seed.
+    /// Everything else comes from the shared `Prefold`.
+    pub fn for_batch(pre: &'p Prefold, profiler: &Profiler, mem_limit: f64,
+                     b: usize) -> SearchSpace<'p> {
+        let n = pre.n();
         let bf = b as f64;
 
         // Seed the incumbent with the greedy plan: a feasible solution
@@ -93,54 +233,26 @@ impl SearchSpace {
         // and gives the budget-expired case a quality floor.
         let seed = super::greedy::search(profiler, mem_limit, b);
 
-        // Visit ops with the largest parameter mass first: their decisions
-        // move the most memory/time, so bounds tighten early. The sort is
-        // stable (ties keep profiler order), so the order — and with it the
-        // planner's canonical tie-break — is deterministic.
-        let mut order: Vec<usize> = (0..n).collect();
-        order.sort_by(|&x, &y| {
-            let sx = profiler.tables[x].fastest().states;
-            let sy = profiler.tables[y].fastest().states;
-            sy.partial_cmp(&sx).unwrap()
-        });
-
-        let mut suffix_min_time = vec![0.0; n + 1];
-        let mut suffix_min_states = vec![0.0; n + 1];
         let mut suffix_min_trans = vec![0.0f64; n + 1];
-        let mut suffix_opt0_states = vec![0.0; n + 1];
         let mut suffix_opt0_trans = vec![0.0f64; n + 1];
         for i in (0..n).rev() {
-            let t = &profiler.tables[order[i]];
-            let min_time = t.min_time_fixed();
-            let min_states = t.min_states();
-            let min_trans = t
-                .options
-                .iter()
-                .map(|o| o.gather)
-                .fold(f64::INFINITY, f64::min)
-                + bf * t.workspace_per_sample;
-            suffix_min_time[i] = suffix_min_time[i + 1] + min_time;
-            suffix_min_states[i] = suffix_min_states[i + 1] + min_states;
-            suffix_min_trans[i] = suffix_min_trans[i + 1].max(min_trans);
-            suffix_opt0_states[i] =
-                suffix_opt0_states[i + 1] + t.fastest().states;
-            suffix_opt0_trans[i] = suffix_opt0_trans[i + 1]
-                .max(t.fastest().gather + bf * t.workspace_per_sample);
+            let t = &profiler.tables[pre.order[i]];
+            let bws = bf * t.workspace_per_sample;
+            suffix_min_trans[i] =
+                suffix_min_trans[i + 1].max(t.min_gather + bws);
+            suffix_opt0_trans[i] =
+                suffix_opt0_trans[i + 1].max(t.fastest().gather + bws);
         }
         let eff = crate::cost::time::batch_efficiency(b);
-        let base_time: f64 =
-            profiler.tables.iter().map(|t| bf * t.gamma / eff).sum();
+        let compute: f64 = profiler.tables.iter().map(|t| bf * t.gamma).sum();
+        // Snapped to the time grid so engine totals (base + grid sums)
+        // stay exact under any accumulation order — see TIME_GRID.
+        let base_time = crate::cost::time::snap_time(compute / eff);
         let base_act: f64 =
             profiler.tables.iter().map(|t| bf * t.act_per_sample).sum();
 
-        let seed = seed.map(|(choice, cost)| {
-            // permute the greedy choice into search order
-            let ordered: Vec<usize> =
-                order.iter().map(|&op| choice[op]).collect();
-            (cost.time, ordered)
-        });
-
-        let flat = order
+        let flat: Vec<Vec<FlatOpt>> = pre
+            .order
             .iter()
             .map(|&op| {
                 profiler.tables[op]
@@ -156,14 +268,29 @@ impl SearchSpace {
             })
             .collect();
 
+        let seed = seed.map(|(choice, _cost)| {
+            // Permute the greedy choice into search order and price it in
+            // *search arithmetic* (base_time + the same grid-exact
+            // time_fixed sum a descent accumulates) — NOT evaluate()'s
+            // time, whose unsnapped compute term differs from base_time by
+            // up to half a grid step. Pricing the seed like any other leaf
+            // keeps time ties against the incumbent exact, so the strict
+            // `lb > best_time` prune can never hide a plan that ties (or
+            // marginally beats) the greedy seed.
+            let ordered: Vec<usize> =
+                pre.order.iter().map(|&op| choice[op]).collect();
+            let mut time_fixed = 0.0;
+            for (i, &c) in ordered.iter().enumerate() {
+                time_fixed += flat[i][c].time_fixed;
+            }
+            (base_time + time_fixed, ordered)
+        });
+
         SearchSpace {
-            order,
+            pre,
             flat,
             mem_limit,
-            suffix_min_time,
-            suffix_min_states,
             suffix_min_trans,
-            suffix_opt0_states,
             suffix_opt0_trans,
             base_time,
             base_act,
@@ -172,13 +299,13 @@ impl SearchSpace {
     }
 
     pub fn n(&self) -> usize {
-        self.order.len()
+        self.pre.n()
     }
 
     /// Map a search-order choice vector back to profiler order.
     pub fn unpermute(&self, ordered: &[usize]) -> Vec<usize> {
         let mut choice = vec![0usize; ordered.len()];
-        for (pos, &op_idx) in self.order.iter().enumerate() {
+        for (pos, &op_idx) in self.pre.order.iter().enumerate() {
             choice[op_idx] = ordered[pos];
         }
         choice
@@ -194,6 +321,42 @@ pub(crate) fn lex_less(a: &[usize], b: &[usize]) -> bool {
         }
     }
     false
+}
+
+/// Advance `block` to the next monotone non-decreasing option block over a
+/// menu of size `o`, in lexicographic order (`[0,0,…,0]` first). Returns
+/// false when exhausted. These blocks are exactly the canonical
+/// representatives of the count compositions: one per multiset of options.
+pub(crate) fn next_monotone_block(block: &mut [usize], o: usize) -> bool {
+    for p in (0..block.len()).rev() {
+        if block[p] + 1 < o {
+            let v = block[p] + 1;
+            for slot in block[p..].iter_mut() {
+                *slot = v;
+            }
+            return true;
+        }
+    }
+    false
+}
+
+/// Number of monotone blocks (count compositions) of length `m` over `o`
+/// options: `C(m+o-1, o-1)`, saturating at `usize::MAX`.
+pub(crate) fn composition_count(m: usize, o: usize) -> usize {
+    if o == 0 {
+        return if m == 0 { 1 } else { 0 };
+    }
+    // multiplicative binomial with early saturation
+    let mut num: u128 = 1;
+    let k = (o - 1).min(m);
+    for j in 1..=k as u128 {
+        num = num.saturating_mul((m + o - 1) as u128 - k as u128 + j);
+        num /= j; // exact: C(n, j) is an integer at every step
+        if num > usize::MAX as u128 {
+            return usize::MAX;
+        }
+    }
+    num as usize
 }
 
 /// Global incumbent time shared across workers: f64 bits in an atomic,
@@ -218,9 +381,10 @@ impl SharedBound {
 
 /// One depth-first worker over a subtree of the space. Local incumbent
 /// starts at the greedy seed; the optional [`SharedBound`] tightens time
-/// pruning across workers without ever deciding a tie.
+/// pruning across workers without ever deciding a tie. The same incumbent
+/// machinery serves both the per-operator and the folded descent.
 pub(crate) struct Walker<'a> {
-    space: &'a SearchSpace,
+    space: &'a SearchSpace<'a>,
     shared: Option<&'a SharedBound>,
     /// Local incumbent time (search arithmetic for plans found here; the
     /// greedy seed's evaluated time before any improvement).
@@ -230,15 +394,22 @@ pub(crate) struct Walker<'a> {
     pub stats: DfsStats,
     budget: u64,
     prefix: Vec<usize>,
+    /// Per-class monotone-block scratch, preallocated so the folded
+    /// descent's hot loop never touches the heap (taken/restored around
+    /// the recursion with `mem::take`).
+    blocks: Vec<Vec<usize>>,
 }
 
 impl<'a> Walker<'a> {
-    pub fn new(space: &'a SearchSpace, shared: Option<&'a SharedBound>,
+    pub fn new(space: &'a SearchSpace<'a>, shared: Option<&'a SharedBound>,
                budget: u64) -> Walker<'a> {
         let (best_time, best_choice) = match &space.seed {
             Some((t, c)) => (*t, Some(c.clone())),
             None => (f64::INFINITY, None),
         };
+        let blocks = (0..space.pre.n_classes())
+            .map(|k| Vec::with_capacity(space.pre.multiplicity(k)))
+            .collect();
         Walker {
             space,
             shared,
@@ -247,12 +418,14 @@ impl<'a> Walker<'a> {
             stats: DfsStats::default(),
             budget,
             prefix: vec![0usize; space.n()],
+            blocks,
         }
     }
 
-    /// Search the subtree rooted at `prefix[..depth]` given the prefix's
-    /// accumulated time/states/transient (left-to-right, so the arithmetic
-    /// is bit-identical to a serial descent through the same prefix).
+    /// Search the per-operator subtree rooted at `prefix[..depth]` given
+    /// the prefix's accumulated time/states/transient (left-to-right, so
+    /// the arithmetic is bit-identical to a serial descent through the
+    /// same prefix).
     pub fn run(&mut self, depth: usize, prefix: &[usize], time_fixed: f64,
                states: f64, trans_max: f64) {
         self.prefix[..depth].copy_from_slice(prefix);
@@ -260,75 +433,161 @@ impl<'a> Walker<'a> {
         self.stats.complete = self.stats.nodes < self.budget;
     }
 
-    /// Search the whole space (the serial planner's entry point).
+    /// Search the whole per-operator space.
     pub fn run_root(&mut self) {
         self.run(0, &[], 0.0, 0.0, 0.0);
     }
 
-    fn descend(&mut self, i: usize, time_fixed: f64, states: f64,
-               trans_max: f64) {
-        if self.stats.nodes >= self.budget {
-            return; // budget expired: keep the incumbent (anytime result)
-        }
-        self.stats.nodes += 1;
-        let sp = self.space;
-        let n = sp.order.len();
+    /// Search the folded subtree rooted at class `class_depth`, with the
+    /// first `class_start[class_depth]` positions fixed to `prefix` (their
+    /// accumulated sums passed alongside, as in [`Walker::run`]).
+    pub fn run_folded(&mut self, class_depth: usize, prefix: &[usize],
+                      time_fixed: f64, states: f64, trans_max: f64) {
+        self.prefix[..prefix.len()].copy_from_slice(prefix);
+        self.descend_folded(class_depth, time_fixed, states, trans_max);
+        self.stats.complete = self.stats.nodes < self.budget;
+    }
 
+    /// Search the whole folded space.
+    pub fn run_root_folded(&mut self) {
+        self.run_folded(0, &[], 0.0, 0.0, 0.0);
+    }
+
+    /// Bound checks shared by both descents at ordered position `i`:
+    /// returns false when the subtree is pruned. The expressions — and so
+    /// the f64 bits — are identical whichever descent evaluates them.
+    #[inline]
+    fn open_subtree(&mut self, i: usize, time_fixed: f64, states: f64,
+                    trans_max: f64) -> bool {
+        let sp = self.space;
         // ---- time pruning (paper's incumbent rule + admissible suffix
         // bound). Strictly worse than any incumbent is dead; tied with the
         // *local* incumbent is dead unless the lex-least completion of this
         // prefix would still win the tie-break. Ties against the shared
         // bound are explored: the merge tie-breaks deterministically.
-        let lb = sp.base_time + time_fixed + sp.suffix_min_time[i];
+        let lb = sp.base_time + time_fixed + sp.pre.suffix_min_time[i];
         let shared_bound =
             self.shared.map(|s| s.get()).unwrap_or(f64::INFINITY);
         if lb > self.best_time.min(shared_bound)
             || (lb == self.best_time && !self.prefix_zero_beats_best(i))
         {
             self.stats.pruned_time += 1;
-            return;
+            return false;
         }
         // ---- memory pruning (paper's limit rule + admissible suffix
         // bound); decision-independent, hence deterministic.
         let min_possible_peak = states
-            + sp.suffix_min_states[i]
+            + sp.pre.suffix_min_states[i]
             + sp.base_act
             + trans_max.max(sp.suffix_min_trans[i]);
         if min_possible_peak > sp.mem_limit {
             self.stats.pruned_mem += 1;
-            return;
+            return false;
         }
+        true
+    }
 
-        if i == n {
-            // feasibility is exact here (the suffix terms above are zero)
-            self.try_accept(sp.base_time + time_fixed);
-            return;
-        }
-
-        // ---- fast completion: the all-fastest suffix is both time-minimal
-        // and lex-minimal among completions of this prefix; if it fits, it
-        // is the subtree's (time, lex) optimum and the subtree closes.
+    /// Fast completion at position `i`: the all-fastest suffix is both
+    /// time-minimal and lex-minimal among completions of this prefix; if
+    /// it fits, it is the subtree's `(time, lex)` optimum and the subtree
+    /// closes. Returns true when it fired (subtree done).
+    #[inline]
+    fn try_fast_completion(&mut self, i: usize, time_fixed: f64, states: f64,
+                           trans_max: f64) -> bool {
+        let sp = self.space;
         let opt0_peak = states
-            + sp.suffix_opt0_states[i]
+            + sp.pre.suffix_opt0_states[i]
             + sp.base_act
             + trans_max.max(sp.suffix_opt0_trans[i]);
-        if opt0_peak <= sp.mem_limit {
-            for slot in self.prefix[i..].iter_mut() {
-                *slot = 0;
-            }
-            let total = sp.base_time + time_fixed + sp.suffix_min_time[i];
-            if self.try_accept(total) {
-                self.stats.fast_completions += 1;
-            }
+        if opt0_peak > sp.mem_limit {
+            return false;
+        }
+        for slot in self.prefix[i..].iter_mut() {
+            *slot = 0;
+        }
+        let total = sp.base_time + time_fixed + sp.pre.suffix_min_time[i];
+        if self.try_accept(total) {
+            self.stats.fast_completions += 1;
+        }
+        true
+    }
+
+    /// Per-operator descent from ordered position `i`.
+    fn descend(&mut self, i: usize, time_fixed: f64, states: f64,
+               trans_max: f64) {
+        if self.stats.nodes >= self.budget {
+            return; // budget expired: keep the incumbent (anytime result)
+        }
+        self.stats.nodes += 1;
+        if !self.open_subtree(i, time_fixed, states, trans_max) {
             return;
         }
-
-        for c in 0..sp.flat[i].len() {
-            let opt = sp.flat[i][c];
+        if i == self.space.n() {
+            // feasibility is exact here (the suffix terms above are zero)
+            self.try_accept(self.space.base_time + time_fixed);
+            return;
+        }
+        if self.try_fast_completion(i, time_fixed, states, trans_max) {
+            return;
+        }
+        let sp = self.space;
+        for (c, opt) in sp.flat[i].iter().enumerate() {
             self.prefix[i] = c;
             self.descend(i + 1, time_fixed + opt.time_fixed,
                          states + opt.states, trans_max.max(opt.transient));
         }
+    }
+
+    /// Folded descent from class `k`. One node per count composition
+    /// instead of one per per-op branch: the subtree for class `k`
+    /// enumerates its monotone option blocks in lex order (exactly the
+    /// order the per-operator descent meets their canonical
+    /// representatives), accumulating each block's costs through the same
+    /// per-position left-to-right arithmetic — so accepted totals and all
+    /// bound expressions are bit-identical to the unfolded engine's.
+    fn descend_folded(&mut self, k: usize, time_fixed: f64, states: f64,
+                      trans_max: f64) {
+        if self.stats.nodes >= self.budget {
+            return; // budget expired: keep the incumbent (anytime result)
+        }
+        self.stats.nodes += 1;
+        let i = self.space.pre.class_start[k];
+        if !self.open_subtree(i, time_fixed, states, trans_max) {
+            return;
+        }
+        if i == self.space.n() {
+            self.try_accept(self.space.base_time + time_fixed);
+            return;
+        }
+        if self.try_fast_completion(i, time_fixed, states, trans_max) {
+            return;
+        }
+        let end = self.space.pre.class_start[k + 1];
+        let o = self.space.flat[i].len();
+        let mut block = std::mem::take(&mut self.blocks[k]);
+        block.clear();
+        block.resize(end - i, 0);
+        loop {
+            let mut tf = time_fixed;
+            let mut st = states;
+            let mut tm = trans_max;
+            for (j, &c) in block.iter().enumerate() {
+                let opt = self.space.flat[i + j][c];
+                tf += opt.time_fixed;
+                st += opt.states;
+                tm = tm.max(opt.transient);
+                self.prefix[i + j] = c;
+            }
+            self.descend_folded(k + 1, tf, st, tm);
+            // once the budget expires, stop enumerating compositions too —
+            // a wide class can hold billions of them
+            if self.stats.nodes >= self.budget
+                || !next_monotone_block(&mut block, o)
+            {
+                break;
+            }
+        }
+        self.blocks[k] = block;
     }
 
     /// Would `prefix[..i]` completed with all zeros beat the local
@@ -361,5 +620,68 @@ impl<'a> Walker<'a> {
             }
         }
         better
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Cluster, SearchConfig};
+    use crate::model::{GptDims, build_gpt};
+
+    #[test]
+    fn monotone_blocks_enumerate_all_compositions_in_lex_order() {
+        let (m, o) = (3usize, 3usize);
+        let mut block = vec![0usize; m];
+        let mut seen = vec![block.clone()];
+        while next_monotone_block(&mut block, o) {
+            seen.push(block.clone());
+        }
+        assert_eq!(seen.len(), composition_count(m, o)); // C(5,2) = 10
+        for w in seen.windows(2) {
+            assert!(lex_less(&w[0], &w[1]), "{:?} !< {:?}", w[0], w[1]);
+        }
+        for b in &seen {
+            assert!(b.windows(2).all(|w| w[0] <= w[1]), "monotone {b:?}");
+        }
+    }
+
+    #[test]
+    fn composition_counts() {
+        assert_eq!(composition_count(1, 4), 4);
+        assert_eq!(composition_count(24, 1), 1);
+        assert_eq!(composition_count(24, 2), 25);
+        assert_eq!(composition_count(2, 3), 6);
+        assert_eq!(composition_count(0, 3), 1);
+    }
+
+    #[test]
+    fn prefold_order_is_class_contiguous_and_heavy_first() {
+        let m = build_gpt(&GptDims::uniform("t", 3000, 64, 6, 128, 4));
+        let c = Cluster::rtx_titan(8, 8.0);
+        let s = SearchConfig { granularities: vec![0, 2],
+                               ..Default::default() };
+        let p = crate::cost::Profiler::new(&m, &c, &s);
+        let pre = Prefold::new(&p);
+        assert_eq!(pre.n(), p.n_ops());
+        assert_eq!(*pre.class_start.last().unwrap(), p.n_ops());
+        assert_eq!(pre.n_classes(), p.op_classes().len());
+        let ids = p.class_ids();
+        let mult_total: usize =
+            (0..pre.n_classes()).map(|k| pre.multiplicity(k)).sum();
+        assert_eq!(mult_total, p.n_ops());
+        // contiguity: each class run holds exactly one class id
+        for k in 0..pre.n_classes() {
+            let run = &pre.order[pre.class_start[k]..pre.class_start[k + 1]];
+            assert!(run.iter().all(|&op| ids[op] == ids[run[0]]));
+        }
+        // heaviest-first is preserved across class boundaries: the first
+        // member of each class is non-increasing in fastest-option states
+        let firsts: Vec<f64> = (0..pre.n_classes())
+            .map(|k| p.tables[pre.order[pre.class_start[k]]].fastest().states)
+            .collect();
+        for w in firsts.windows(2) {
+            assert!(w[0] >= w[1], "class order not heavy-first: {w:?}");
+        }
     }
 }

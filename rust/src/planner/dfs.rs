@@ -18,8 +18,16 @@
 //! entry point is a single [`bound::Walker`] over the whole tree, so serial
 //! and parallel results are bit-identical whenever the node budget does not
 //! expire (see `rust/tests/parallel_planner.rs`).
+//!
+//! By default the walker runs on the **symmetry-folded** space: operators
+//! with byte-identical cost tables are planned as one `(class,
+//! multiplicity)` position whose branches assign counts per option — exact
+//! and bit-identical to the per-operator descent (see `bound`), but with
+//! `C(m+o-1, o-1)` branches per class instead of `o^m`. The unfolded
+//! engine remains available ([`search_unfolded`], the CLI's `--no-fold`)
+//! as ground truth and for measuring the fold's node reduction.
 
-use super::bound::{SearchSpace, Walker};
+use super::bound::{Prefold, SearchSpace, Walker};
 use crate::cost::{PlanCost, Profiler};
 
 /// Search diagnostics.
@@ -58,11 +66,12 @@ impl DfsStats {
 /// feasible incumbent before descent begins.
 pub const DEFAULT_NODE_BUDGET: u64 = 2_000_000;
 
-/// Search with the default node budget (see [`DEFAULT_NODE_BUDGET`]):
-/// minimal `Σ T_i` plan whose peak memory fits `mem_limit` at per-device
-/// batch `b`. Returns `None` when nothing fits. Ties in time resolve to
-/// the lexicographically least choice vector in the planner's visit order
-/// (canonical, so serial and parallel runs agree).
+/// Search with the default node budget (see [`DEFAULT_NODE_BUDGET`]) on
+/// the symmetry-folded space: minimal `Σ T_i` plan whose peak memory fits
+/// `mem_limit` at per-device batch `b`. Returns `None` when nothing fits.
+/// Ties in time resolve to the lexicographically least choice vector in
+/// the planner's visit order (canonical, so serial and parallel runs
+/// agree — and so folded and unfolded runs agree bit-for-bit).
 pub fn search(profiler: &Profiler, mem_limit: f64, b: usize)
               -> Option<(Vec<usize>, PlanCost, DfsStats)> {
     search_with_budget(profiler, mem_limit, b, DEFAULT_NODE_BUDGET)
@@ -72,9 +81,34 @@ pub fn search(profiler: &Profiler, mem_limit: f64, b: usize)
 pub fn search_with_budget(profiler: &Profiler, mem_limit: f64, b: usize,
                           budget: u64)
                           -> Option<(Vec<usize>, PlanCost, DfsStats)> {
-    let space = SearchSpace::new(profiler, mem_limit, b);
+    let prefold = Prefold::new(profiler);
+    search_prefolded(profiler, &prefold, mem_limit, b, budget, true)
+}
+
+/// The per-operator (unfolded) engine: identical results, exponentially
+/// more nodes on symmetric models. Ground truth for the fold's exactness
+/// tests and the baseline for its node-reduction benchmarks.
+pub fn search_unfolded(profiler: &Profiler, mem_limit: f64, b: usize,
+                       budget: u64)
+                       -> Option<(Vec<usize>, PlanCost, DfsStats)> {
+    let prefold = Prefold::new(profiler);
+    search_prefolded(profiler, &prefold, mem_limit, b, budget, false)
+}
+
+/// Search over a prebuilt [`Prefold`] — the scheduler's batch sweep builds
+/// the fold and the batch-independent suffix bounds once and calls this
+/// per batch size, recomputing only the transient and base terms.
+pub(crate) fn search_prefolded(profiler: &Profiler, prefold: &Prefold,
+                               mem_limit: f64, b: usize, budget: u64,
+                               fold: bool)
+                               -> Option<(Vec<usize>, PlanCost, DfsStats)> {
+    let space = SearchSpace::for_batch(prefold, profiler, mem_limit, b);
     let mut walker = Walker::new(&space, None, budget);
-    walker.run_root();
+    if fold {
+        walker.run_root_folded();
+    } else {
+        walker.run_root();
+    }
 
     let choice_ordered = walker.best_choice?;
     let choice = space.unpermute(&choice_ordered);

@@ -19,10 +19,20 @@
 //! * [`greedy`] — flip-the-best-ratio heuristic; ablation baseline, and
 //!   the incumbent seed for both exact searches.
 //!
+//! Both exact engines plan over the **symmetry-folded** space by default:
+//! operators whose pruned cost tables are byte-identical (runs of equal
+//! transformer layers) collapse into `(class, multiplicity)` positions
+//! whose branches assign counts per option, shrinking `Π |menu|^L` trees
+//! to polynomial count-composition spaces with provably bit-identical
+//! results (see `bound` for the argument, [`fold_report`] for the
+//! numbers, and `--no-fold` / [`dfs::search_unfolded`] for the escape
+//! hatch).
+//!
 //! The [`scheduler`]'s batch-size sweep runs on the same worker-pool
 //! pattern, claiming batch sizes off an atomic counter until the memory
 //! wall, and merges per-candidate [`DfsStats`] into a [`SweepStats`]
-//! aggregate.
+//! aggregate. The fold and every batch-independent suffix bound are built
+//! once per sweep and shared across batch sizes.
 
 mod bound;
 pub mod dfs;
@@ -31,13 +41,76 @@ pub mod greedy;
 pub mod parallel;
 pub mod scheduler;
 
-pub use dfs::{DfsStats, search as dfs_search};
+pub use dfs::{DfsStats, search as dfs_search,
+              search_unfolded as dfs_search_unfolded};
 pub use exhaustive::search as exhaustive_search;
 pub use greedy::search as greedy_search;
 pub use parallel::{ParallelConfig, search as parallel_search};
 pub use scheduler::{Candidate, Scheduler, SchedulerResult, SweepStats};
 
 use crate::cost::{Decision, PlanCost, Profiler};
+
+/// What the symmetry fold buys on a given profiler: how many operators
+/// collapse into how many equivalence classes, and the search-space sizes
+/// (as log10) with and without the fold. Reported by `osdp plan` and the
+/// search benchmarks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FoldReport {
+    /// Operators in the profiler.
+    pub ops: usize,
+    /// Interchangeability classes (equal pruned cost tables).
+    pub classes: usize,
+    /// Largest class multiplicity.
+    pub max_multiplicity: usize,
+    /// log10 of the per-operator plan space `Π |menu_i|`.
+    pub log10_unfolded: f64,
+    /// log10 of the folded space `Π C(m_k + o_k - 1, o_k - 1)` (count
+    /// compositions per class).
+    pub log10_folded: f64,
+}
+
+impl FoldReport {
+    /// One-line human summary for CLI/bench reports.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} ops -> {} classes (max multiplicity {}); plan space \
+             10^{:.1} -> 10^{:.1} folded",
+            self.ops,
+            self.classes,
+            self.max_multiplicity,
+            self.log10_unfolded,
+            self.log10_folded,
+        )
+    }
+}
+
+/// Compute the [`FoldReport`] for a profiler.
+pub fn fold_report(profiler: &Profiler) -> FoldReport {
+    let classes = profiler.op_classes();
+    let mut log10_folded = 0.0;
+    let mut max_multiplicity = 0;
+    for members in &classes {
+        let m = members.len();
+        let o = profiler.tables[members[0]].options.len();
+        max_multiplicity = max_multiplicity.max(m);
+        log10_folded += log10_binomial(m + o - 1, o - 1);
+    }
+    FoldReport {
+        ops: profiler.n_ops(),
+        classes: classes.len(),
+        max_multiplicity,
+        log10_unfolded: profiler.log10_plan_space(),
+        log10_folded,
+    }
+}
+
+/// `log10(C(n, k))` without overflow.
+fn log10_binomial(n: usize, k: usize) -> f64 {
+    let k = k.min(n - k);
+    (1..=k)
+        .map(|j| (((n - k + j) as f64) / j as f64).log10())
+        .sum()
+}
 
 /// A fully-resolved execution plan: one decision per operator plus the
 /// batch size it was evaluated at.
@@ -117,6 +190,26 @@ mod tests {
     use super::*;
     use crate::config::{Cluster, SearchConfig};
     use crate::model::{GptDims, build_gpt};
+
+    #[test]
+    fn fold_report_shrinks_symmetric_spaces() {
+        let m = build_gpt(&GptDims::uniform("t", 2000, 64, 8, 128, 4));
+        let c = Cluster::rtx_titan(8, 8.0);
+        let s = SearchConfig { granularities: vec![0, 2],
+                               ..Default::default() };
+        let p = Profiler::new(&m, &c, &s);
+        let r = fold_report(&p);
+        assert_eq!(r.ops, p.n_ops());
+        assert!(r.classes < r.ops, "8 identical layers must fold");
+        assert!(r.max_multiplicity >= 8);
+        assert!(r.log10_folded < r.log10_unfolded,
+                "folded space must be smaller: {} vs {}",
+                r.log10_folded, r.log10_unfolded);
+        assert!(r.describe().contains("classes"));
+        // exact small case: C(3+2-1, 1) = 4 compositions
+        assert!((log10_binomial(4, 1) - 4f64.log10()).abs() < 1e-12);
+        assert!((log10_binomial(26, 2) - 325f64.log10()).abs() < 1e-9);
+    }
 
     #[test]
     fn plan_mode_counts_and_split_fraction() {

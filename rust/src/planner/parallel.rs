@@ -1,4 +1,4 @@
-//! Parallel branch-and-bound planner: the serial DFS tree split at a
+//! Parallel branch-and-bound planner: the search tree split at a
 //! configurable depth into independent subtree tasks executed across
 //! `std::thread` workers, all pruning against one shared incumbent (an
 //! `AtomicU64` carrying the best time's f64 bits — see `bound`).
@@ -8,29 +8,35 @@
 //! the merge is a deterministic fold in task order, so the result is
 //! bit-identical to [`super::dfs::search`] for any thread count whenever
 //! the node budget does not expire — property-tested against
-//! [`super::exhaustive`] in `rust/tests/parallel_planner.rs`.
+//! [`super::exhaustive`] in `rust/tests/parallel_planner.rs` and against
+//! the unfolded engine in `rust/tests/folded_planner.rs`.
 //!
-//! The split works on the *menu-preprocessed* space (the Profiler's
-//! dominance pass, [`crate::cost::menu`]): subtree tasks are every
-//! combination of the first `split_depth` operators' Pareto menus, capped
-//! at [`MAX_TASKS`] by shrinking the depth, then drained by workers over an
-//! atomic task counter (cheap work stealing: whichever worker is free
-//! takes the next prefix).
+//! By default the split works on the **symmetry-folded** space: subtree
+//! tasks are every combination of the first `split_depth` *equivalence
+//! classes'* count compositions (monotone option blocks — see `bound`),
+//! rather than the first `split_depth` operators' raw menus. On symmetric
+//! models that keeps the task list proportional to the distinct-plan
+//! space. Tasks are capped at [`MAX_TASKS`] by shrinking the depth, then
+//! drained by workers over an atomic task counter (cheap work stealing:
+//! whichever worker is free takes the next prefix).
 
-use super::bound::{SearchSpace, SharedBound, Walker, lex_less};
+use super::bound::{Prefold, SearchSpace, SharedBound, Walker,
+                   composition_count, lex_less, next_monotone_block};
 use super::dfs::{DEFAULT_NODE_BUDGET, DfsStats};
 use crate::cost::{PlanCost, Profiler};
 use std::sync::Mutex;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Default tree-split depth: combinations of the first 3 operators' menus
-/// give a few hundred tasks on paper-scale menus — enough to load-balance
-/// 8–64 workers without per-task overhead mattering.
+/// Default tree-split depth: combinations of the first 3 positions'
+/// branch menus (class compositions when folding, operator menus
+/// otherwise) give a few hundred tasks on paper-scale menus — enough to
+/// load-balance 8–64 workers without per-task overhead mattering.
 pub const DEFAULT_SPLIT_DEPTH: usize = 3;
 
 /// Hard cap on subtree tasks; the split depth shrinks until the task count
-/// (product of the first `depth` menu sizes) fits. Keeps per-task overhead
-/// (one incumbent clone + one claim) under ~1% of any real search.
+/// (product of the first `depth` branch counts) fits. Keeps per-task
+/// overhead (one incumbent clone + one claim) under ~1% of any real
+/// search.
 pub const MAX_TASKS: usize = 4096;
 
 /// Floor on the per-task node budget so a huge task count cannot starve
@@ -38,19 +44,24 @@ pub const MAX_TASKS: usize = 4096;
 const MIN_TASK_BUDGET: u64 = 16_384;
 
 /// Worker-pool settings for [`search`] (and the `--threads` /
-/// `--split-depth` CLI flags).
+/// `--split-depth` / `--no-fold` CLI flags).
 #[derive(Debug, Clone)]
 pub struct ParallelConfig {
     /// Worker threads (clamped to at least 1).
     pub threads: usize,
-    /// Depth at which the DFS tree splits into tasks (0 = one task, i.e.
-    /// serial search on a worker thread).
+    /// Depth at which the search tree splits into tasks (0 = one task,
+    /// i.e. serial search on a worker thread). Counts classes when
+    /// `fold` is set, operators otherwise.
     pub split_depth: usize,
     /// Global node budget. The split depth shrinks until every task gets
     /// at least `MIN_TASK_BUDGET` nodes from it, so the aggregate stays
     /// within the cap; exactness holds iff the merged stats report
     /// `complete`.
     pub node_budget: u64,
+    /// Plan over operator equivalence classes (the symmetry fold) instead
+    /// of individual operators. Identical results either way; folding is
+    /// the default and `--no-fold` is the escape hatch.
+    pub fold: bool,
 }
 
 impl Default for ParallelConfig {
@@ -59,6 +70,7 @@ impl Default for ParallelConfig {
             threads: default_threads(),
             split_depth: DEFAULT_SPLIT_DEPTH,
             node_budget: DEFAULT_NODE_BUDGET,
+            fold: true,
         }
     }
 }
@@ -68,9 +80,11 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
-/// One subtree task: a fixed choice for the first `depth` ordered
-/// operators plus its accumulated partial sums (folded left-to-right, so
-/// task arithmetic is bit-identical to a serial descent).
+/// One subtree task: a fixed choice for a positional prefix of the
+/// ordered operators (the first `depth` operators, or every member of the
+/// first `depth` classes when folding) plus its accumulated partial sums
+/// (folded left-to-right, so task arithmetic is bit-identical to a serial
+/// descent).
 struct Task {
     prefix: Vec<usize>,
     time_fixed: f64,
@@ -85,21 +99,27 @@ struct Task {
 pub fn search(profiler: &Profiler, mem_limit: f64, b: usize,
               cfg: &ParallelConfig)
               -> Option<(Vec<usize>, PlanCost, DfsStats)> {
-    let space = SearchSpace::new(profiler, mem_limit, b);
+    let prefold = Prefold::new(profiler);
+    let space = SearchSpace::for_batch(&prefold, profiler, mem_limit, b);
 
     // Shrink the split depth until (a) the task count is bounded and
     // (b) dividing the node budget across tasks leaves each at least the
     // per-task floor — so the budget stays a real global cap instead of
     // being silently multiplied by the task count.
-    let mut depth = cfg.split_depth.min(space.n());
+    let max_depth = if cfg.fold { prefold.n_classes() } else { space.n() };
+    let mut depth = cfg.split_depth.min(max_depth);
     while depth > 0 && {
-        let tasks = task_count(&space, depth) as u64;
+        let tasks = task_count(&space, depth, cfg.fold) as u64;
         tasks > MAX_TASKS as u64
             || cfg.node_budget / tasks < MIN_TASK_BUDGET
     } {
         depth -= 1;
     }
-    let tasks = enumerate_tasks(&space, depth);
+    let tasks = if cfg.fold {
+        enumerate_tasks_folded(&space, depth)
+    } else {
+        enumerate_tasks(&space, depth)
+    };
     let budget = per_task_budget(cfg.node_budget, tasks.len());
 
     let shared = SharedBound::new(
@@ -120,8 +140,13 @@ pub fn search(profiler: &Profiler, mem_limit: f64, b: usize,
                     }
                     let t = &tasks[idx];
                     let mut w = Walker::new(&space, Some(&shared), budget);
-                    w.run(depth, &t.prefix, t.time_fixed, t.states,
-                          t.trans_max);
+                    if cfg.fold {
+                        w.run_folded(depth, &t.prefix, t.time_fixed,
+                                     t.states, t.trans_max);
+                    } else {
+                        w.run(depth, &t.prefix, t.time_fixed, t.states,
+                              t.trans_max);
+                    }
                     results.lock().unwrap()[idx] =
                         Some((w.best_time, w.best_choice, w.stats));
                 }
@@ -155,34 +180,30 @@ pub fn search(profiler: &Profiler, mem_limit: f64, b: usize,
     Some((choice, cost, agg))
 }
 
-/// Product of the first `depth` menu sizes, saturating.
-fn task_count(space: &SearchSpace, depth: usize) -> usize {
-    space.flat[..depth]
-        .iter()
-        .fold(1usize, |acc, menu| acc.saturating_mul(menu.len()))
+/// Branch-count product of the first `depth` split positions, saturating.
+fn task_count(space: &SearchSpace, depth: usize, fold: bool) -> usize {
+    if fold {
+        (0..depth).fold(1usize, |acc, k| {
+            let i = space.pre.class_start[k];
+            acc.saturating_mul(composition_count(
+                space.pre.multiplicity(k),
+                space.flat[i].len(),
+            ))
+        })
+    } else {
+        space.flat[..depth]
+            .iter()
+            .fold(1usize, |acc, menu| acc.saturating_mul(menu.len()))
+    }
 }
 
-/// All prefixes of length `depth` in lexicographic order, with their
-/// left-to-right partial sums.
+/// All per-operator prefixes of length `depth` in lexicographic order,
+/// with their left-to-right partial sums.
 fn enumerate_tasks(space: &SearchSpace, depth: usize) -> Vec<Task> {
-    let mut tasks = Vec::with_capacity(task_count(space, depth));
+    let mut tasks = Vec::with_capacity(task_count(space, depth, false));
     let mut idx = vec![0usize; depth];
     loop {
-        let mut time_fixed = 0.0;
-        let mut states = 0.0;
-        let mut trans_max = 0.0f64;
-        for (i, &c) in idx.iter().enumerate() {
-            let o = space.flat[i][c];
-            time_fixed += o.time_fixed;
-            states += o.states;
-            trans_max = trans_max.max(o.transient);
-        }
-        tasks.push(Task {
-            prefix: idx.clone(),
-            time_fixed,
-            states,
-            trans_max,
-        });
+        tasks.push(make_task(space, &idx));
         // odometer, rightmost digit fastest = lexicographic order
         let mut pos = depth;
         loop {
@@ -197,6 +218,53 @@ fn enumerate_tasks(space: &SearchSpace, depth: usize) -> Vec<Task> {
             idx[pos] = 0;
         }
     }
+}
+
+/// All folded prefixes over the first `class_depth` classes — one task
+/// per combination of count compositions, each materialized as its
+/// canonical monotone position prefix — in lexicographic order, with
+/// their left-to-right partial sums.
+fn enumerate_tasks_folded(space: &SearchSpace, class_depth: usize)
+                          -> Vec<Task> {
+    let pre = space.pre;
+    let len = pre.class_start[class_depth];
+    let mut tasks = Vec::with_capacity(task_count(space, class_depth, true));
+    let mut prefix = vec![0usize; len];
+    loop {
+        tasks.push(make_task(space, &prefix));
+        // odometer over classes, rightmost class fastest; each class
+        // steps through its monotone blocks in lex order
+        let mut k = class_depth;
+        loop {
+            if k == 0 {
+                return tasks;
+            }
+            k -= 1;
+            let (s, e) = (pre.class_start[k], pre.class_start[k + 1]);
+            let o = space.flat[s].len();
+            if next_monotone_block(&mut prefix[s..e], o) {
+                break;
+            }
+            for slot in prefix[s..e].iter_mut() {
+                *slot = 0;
+            }
+        }
+    }
+}
+
+/// Accumulate a positional prefix's sums left-to-right (bit-identical to
+/// a serial descent through the same positions).
+fn make_task(space: &SearchSpace, prefix: &[usize]) -> Task {
+    let mut time_fixed = 0.0;
+    let mut states = 0.0;
+    let mut trans_max = 0.0f64;
+    for (i, &c) in prefix.iter().enumerate() {
+        let o = space.flat[i][c];
+        time_fixed += o.time_fixed;
+        states += o.states;
+        trans_max = trans_max.max(o.transient);
+    }
+    Task { prefix: prefix.to_vec(), time_fixed, states, trans_max }
 }
 
 /// Slice the global budget across tasks. The floor keeps tiny slices
@@ -226,7 +294,12 @@ mod tests {
     }
 
     fn cfg(threads: usize, split_depth: usize) -> ParallelConfig {
-        ParallelConfig { threads, split_depth, node_budget: u64::MAX }
+        ParallelConfig {
+            threads,
+            split_depth,
+            node_budget: u64::MAX,
+            fold: true,
+        }
     }
 
     #[test]
@@ -253,30 +326,40 @@ mod tests {
             let limit = dp.peak_mem * frac;
             let serial = dfs::search_with_budget(&p, limit, 1, u64::MAX);
             for d in [0, 1, 2, 5] {
-                let par = search(&p, limit, 1, &cfg(4, d));
-                match (&serial, &par) {
-                    (None, None) => {}
-                    (Some((sc, scost, sst)), Some((pc, pcost, pst))) => {
-                        assert!(sst.complete && pst.complete);
-                        assert_eq!(sc, pc, "frac {frac} depth {d}");
-                        assert_eq!(scost.time.to_bits(),
-                                   pcost.time.to_bits());
-                        assert_eq!(scost.peak_mem.to_bits(),
-                                   pcost.peak_mem.to_bits());
+                for fold in [true, false] {
+                    let mut c = cfg(4, d);
+                    c.fold = fold;
+                    let par = search(&p, limit, 1, &c);
+                    match (&serial, &par) {
+                        (None, None) => {}
+                        (Some((sc, scost, sst)), Some((pc, pcost, pst))) => {
+                            assert!(sst.complete && pst.complete);
+                            assert_eq!(sc, pc,
+                                       "frac {frac} depth {d} fold {fold}");
+                            assert_eq!(scost.time.to_bits(),
+                                       pcost.time.to_bits());
+                            assert_eq!(scost.peak_mem.to_bits(),
+                                       pcost.peak_mem.to_bits());
+                        }
+                        _ => panic!(
+                            "feasibility disagreement at {frac}/{d}/{fold}"
+                        ),
                     }
-                    _ => panic!("feasibility disagreement at {frac}/{d}"),
                 }
             }
         }
     }
 
     #[test]
-    fn split_depth_exceeding_ops_is_clamped() {
+    fn split_depth_exceeding_positions_is_clamped() {
         let p = profiler(128, 1, vec![0]);
         let n = p.n_ops();
-        let (choice, _, _) =
-            search(&p, 1e18, 1, &cfg(2, n + 10)).unwrap();
-        assert_eq!(choice.len(), n);
+        for fold in [true, false] {
+            let mut c = cfg(2, n + 10);
+            c.fold = fold;
+            let (choice, _, _) = search(&p, 1e18, 1, &c).unwrap();
+            assert_eq!(choice.len(), n);
+        }
     }
 
     #[test]

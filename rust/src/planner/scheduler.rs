@@ -14,8 +14,16 @@
 //! monotone in `b` under the §3.1 cost model (every memory term is
 //! non-decreasing in the batch), the candidate set — and hence the result —
 //! is identical for any thread count.
+//!
+//! The sweep is **incremental** over the symmetry fold: the class
+//! partition, visit order, and every batch-independent suffix bound (the
+//! menus' `time_fixed`/`states` terms) live in one shared
+//! [`super::bound::Prefold`] built before the pool starts; each per-batch
+//! search only recomputes the transient and `base_*` terms (and its greedy
+//! seed) instead of rebuilding the whole space for every `b`.
 
 use super::ExecutionPlan;
+use super::bound::Prefold;
 use super::dfs::{self, DfsStats};
 use crate::cost::{PlanCost, Profiler};
 use std::sync::Mutex;
@@ -101,6 +109,9 @@ pub struct Scheduler<'a> {
     /// Worker threads for the sweep (1 = serial). Defaults to the
     /// hardware parallelism; the result is thread-count-invariant.
     pub threads: usize,
+    /// Plan over operator equivalence classes (the symmetry fold). On by
+    /// default; identical results either way (the CLI's `--no-fold`).
+    pub fold: bool,
 }
 
 impl<'a> Scheduler<'a> {
@@ -111,6 +122,7 @@ impl<'a> Scheduler<'a> {
             mem_limit,
             max_batch,
             threads: super::parallel::default_threads(),
+            fold: true,
         }
     }
 
@@ -120,10 +132,20 @@ impl<'a> Scheduler<'a> {
         self
     }
 
+    /// Toggle the symmetry fold (the CLI's `--no-fold` escape hatch).
+    pub fn with_fold(mut self, fold: bool) -> Self {
+        self.fold = fold;
+        self
+    }
+
     /// Run Algorithm 1. Returns `None` when no batch size fits at all.
     pub fn run(&self) -> Option<SchedulerResult> {
         let start = std::time::Instant::now();
         let n_dev = self.profiler.cluster.n_devices;
+
+        // Fold + batch-independent suffix structures: built once, shared
+        // read-only by every worker and batch size.
+        let prefold = Prefold::new(self.profiler);
 
         let threads = self.threads.max(1).min(self.max_batch.max(1));
         let next = AtomicUsize::new(1);
@@ -150,7 +172,14 @@ impl<'a> Scheduler<'a> {
                         {
                             break;
                         }
-                        match dfs::search(self.profiler, self.mem_limit, b) {
+                        match dfs::search_prefolded(
+                            self.profiler,
+                            &prefold,
+                            self.mem_limit,
+                            b,
+                            dfs::DEFAULT_NODE_BUDGET,
+                            self.fold,
+                        ) {
                             None => {
                                 wall.fetch_min(b, Ordering::Relaxed);
                                 break;
@@ -185,14 +214,7 @@ impl<'a> Scheduler<'a> {
         if candidates.is_empty() {
             return None;
         }
-        let best = candidates
-            .iter()
-            .enumerate()
-            .max_by(|a, b| {
-                a.1.throughput.partial_cmp(&b.1.throughput).unwrap()
-            })
-            .map(|(i, _)| i)
-            .unwrap();
+        let best = pick_best(&candidates);
         Some(SchedulerResult {
             best,
             total_nodes: stats.nodes,
@@ -201,6 +223,22 @@ impl<'a> Scheduler<'a> {
             candidates,
         })
     }
+}
+
+/// Winner of the sweep: highest throughput; exact ties go to the
+/// *smallest* batch (explicitly — `max_by` would keep the last maximum,
+/// i.e. the largest batch, a tie-break by iteration accident). Smaller
+/// batches reach the same throughput with less memory headroom and lower
+/// latency, so they are the canonical pick. `candidates` is sorted by
+/// batch ascending and non-empty.
+fn pick_best(candidates: &[Candidate]) -> usize {
+    let mut best = 0;
+    for (i, c) in candidates.iter().enumerate().skip(1) {
+        if c.throughput > candidates[best].throughput {
+            best = i;
+        }
+    }
+    best
 }
 
 #[cfg(test)]
@@ -275,6 +313,39 @@ mod tests {
         let c = &res.candidates[0];
         let per_dev = c.plan.batch as f64 / c.plan.cost.time;
         assert!((c.throughput - per_dev * 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_ties_resolve_to_smallest_batch() {
+        let p = profiler(8);
+        let mk = |batch: usize, throughput: f64| {
+            let choice = p.index_of(|d| d.is_pure_dp());
+            Candidate {
+                plan: ExecutionPlan::from_choice(&p, choice, batch),
+                throughput,
+                stats: DfsStats::default(),
+            }
+        };
+        let cands = vec![mk(1, 5.0), mk(2, 9.0), mk(3, 9.0), mk(4, 7.0)];
+        assert_eq!(pick_best(&cands), 1, "tie must keep the smaller batch");
+        assert_eq!(pick_best(&cands[..1]), 0);
+    }
+
+    #[test]
+    fn folded_and_unfolded_sweeps_agree() {
+        let p = profiler(8);
+        let dp1 = p.evaluate(&p.index_of(|d| d.is_pure_dp()), 1);
+        let limit = dp1.peak_mem * 3.0;
+        let folded =
+            Scheduler::new(&p, limit, 24).with_fold(true).run().unwrap();
+        let plain =
+            Scheduler::new(&p, limit, 24).with_fold(false).run().unwrap();
+        assert_eq!(folded.best, plain.best);
+        assert_eq!(folded.candidates.len(), plain.candidates.len());
+        for (a, b) in folded.candidates.iter().zip(&plain.candidates) {
+            assert_eq!(a.plan.choice, b.plan.choice);
+            assert_eq!(a.plan.cost.time.to_bits(), b.plan.cost.time.to_bits());
+        }
     }
 
     #[test]

@@ -1,0 +1,274 @@
+//! Tentpole guarantees of the symmetry-folded planner:
+//!
+//! * exactness — the folded engine returns bit-identical `(choice, time)`
+//!   to the unfolded per-operator engine on random uniform *and*
+//!   heterogeneous (per-layer-varied) GPTs, serially and at 1 and 8
+//!   worker threads;
+//! * compression — on a deep uniform stack the fold shrinks the explored
+//!   tree by at least an order of magnitude;
+//! * ground truth — the folded engine still equals brute-force
+//!   enumeration wherever that is affordable.
+
+use osdp::config::{Cluster, SearchConfig};
+use osdp::cost::Profiler;
+use osdp::model::{GptDims, build_gpt};
+use osdp::planner::{ParallelConfig, dfs_search_unfolded, exhaustive_search,
+                    parallel_search};
+use osdp::util::prop;
+use osdp::util::rng::Rng;
+
+/// Node budget for the property runs: far beyond what these instances
+/// need, while keeping a hard ceiling on worst-case test time. Instances
+/// where any engine expires are skipped (anytime results are legitimately
+/// engine-specific), but the suite asserts it verified plenty of full
+/// comparisons.
+const PROP_BUDGET: u64 = 5_000_000;
+
+#[derive(Debug, Clone)]
+struct Instance {
+    layers: usize,
+    /// Per-layer hidden sizes; all equal for the uniform family.
+    hidden: Vec<usize>,
+    n_dev: usize,
+    b: usize,
+    limit_frac: f64,
+    grans: Vec<usize>,
+}
+
+fn gen_uniform(rng: &mut Rng, size: usize) -> Instance {
+    let layers = rng.range(2, 2 + size / 25);
+    Instance {
+        layers,
+        hidden: vec![32 * rng.range(1, 5); layers],
+        n_dev: *rng.pick(&[2usize, 4, 8]),
+        b: rng.range(1, 4),
+        limit_frac: 0.25 + rng.f64() * 1.1,
+        grans: if rng.chance(0.5) { vec![0] } else { vec![0, 2] },
+    }
+}
+
+/// Per-layer-varied widths: several symmetry classes of multiplicity > 1
+/// plus stage-transition projections that stay singletons.
+fn gen_hetero(rng: &mut Rng, size: usize) -> Instance {
+    let layers = rng.range(2, 2 + size / 25);
+    let w1 = 32 * rng.range(1, 4);
+    let w2 = w1 + 32 * rng.range(1, 3);
+    let split = rng.range(1, layers);
+    let hidden = (0..layers)
+        .map(|l| if l < split { w1 } else { w2 })
+        .collect();
+    Instance {
+        layers,
+        hidden,
+        n_dev: *rng.pick(&[2usize, 4, 8]),
+        b: rng.range(1, 4),
+        limit_frac: 0.25 + rng.f64() * 1.1,
+        grans: if rng.chance(0.5) { vec![0] } else { vec![0, 2] },
+    }
+}
+
+fn build(inst: &Instance) -> (Profiler, f64) {
+    let m = build_gpt(&GptDims {
+        name: "p".into(),
+        vocab: 1000,
+        seq: 64,
+        layers: inst.layers,
+        hidden_per_layer: inst.hidden.clone(),
+        heads: 2,
+        tied_head: false,
+    });
+    let c = Cluster::rtx_titan(inst.n_dev, 8.0);
+    let s = SearchConfig { granularities: inst.grans.clone(),
+                           ..Default::default() };
+    let p = Profiler::new(&m, &c, &s);
+    let dp_mem = p.evaluate(&p.index_of(|d| d.is_pure_dp()), inst.b).peak_mem;
+    (p, dp_mem * inst.limit_frac)
+}
+
+fn cfg(threads: usize, fold: bool) -> ParallelConfig {
+    ParallelConfig {
+        threads,
+        split_depth: 3,
+        node_budget: PROP_BUDGET,
+        fold,
+    }
+}
+
+/// Compare the folded engine against the unfolded one — serial, and the
+/// parallel engine at 1 and 8 threads — on one instance. Returns true
+/// when a full (all-engines-complete, feasible) comparison happened.
+fn assert_fold_exact(p: &Profiler, limit: f64, b: usize)
+                     -> Result<bool, String> {
+    let unfolded = dfs_search_unfolded(p, limit, b, PROP_BUDGET);
+    let folded =
+        osdp::planner::dfs::search_with_budget(p, limit, b, PROP_BUDGET);
+    match (&unfolded, &folded) {
+        (None, None) => Ok(false),
+        (Some((uc, ucost, ust)), Some((fc, fcost, fst))) => {
+            if !(ust.complete && fst.complete) {
+                return Ok(false); // anytime results may legitimately differ
+            }
+            if uc != fc {
+                return Err(format!("choice differs: {uc:?} vs {fc:?}"));
+            }
+            if ucost.time.to_bits() != fcost.time.to_bits()
+                || ucost.peak_mem.to_bits() != fcost.peak_mem.to_bits()
+            {
+                return Err(format!("cost differs: {ucost:?} vs {fcost:?}"));
+            }
+            for threads in [1usize, 8] {
+                let par = parallel_search(p, limit, b, &cfg(threads, true));
+                match &par {
+                    Some((pc, pcost, pst)) => {
+                        if !pst.complete {
+                            return Ok(false);
+                        }
+                        if pc != uc {
+                            return Err(format!(
+                                "parallel({threads}) folded choice differs: \
+                                 {pc:?} vs {uc:?}"
+                            ));
+                        }
+                        if pcost.time.to_bits() != ucost.time.to_bits() {
+                            return Err(format!(
+                                "parallel({threads}) folded time differs"
+                            ));
+                        }
+                    }
+                    None => {
+                        return Err(format!(
+                            "parallel({threads}) lost feasibility"
+                        ));
+                    }
+                }
+            }
+            Ok(true)
+        }
+        (u, f) => Err(format!(
+            "feasibility disagreement: unfolded={:?} folded={:?}",
+            u.is_some(),
+            f.is_some()
+        )),
+    }
+}
+
+/// Folded == unfolded, bit-for-bit, on random *uniform* GPTs (the case
+/// the fold is built for: every layer collapses into shared classes).
+#[test]
+fn prop_fold_is_exact_on_uniform_stacks() {
+    let mut compared = 0;
+    prop::check(0xF01D_0001, 18, gen_uniform, |inst| {
+        let (p, limit) = build(inst);
+        if assert_fold_exact(&p, limit, inst.b)? {
+            compared += 1;
+        }
+        Ok(())
+    });
+    assert!(compared >= 5, "only {compared} full comparisons ran");
+}
+
+/// Folded == unfolded, bit-for-bit, on random *heterogeneous* GPTs
+/// (mixed widths: several classes per op shape plus singletons).
+#[test]
+fn prop_fold_is_exact_on_heterogeneous_stacks() {
+    let mut compared = 0;
+    prop::check(0xF01D_0002, 18, gen_hetero, |inst| {
+        let (p, limit) = build(inst);
+        if assert_fold_exact(&p, limit, inst.b)? {
+            compared += 1;
+        }
+        Ok(())
+    });
+    assert!(compared >= 5, "only {compared} full comparisons ran");
+}
+
+/// The folded engine still equals brute force wherever brute force is
+/// affordable (independent anchor: not just "same as the unfolded DFS").
+#[test]
+fn prop_folded_planner_is_exact_vs_exhaustive() {
+    prop::check(0xF01D_0003, 15, gen_hetero, |inst| {
+        let (p, limit) = build(inst);
+        if p.log10_plan_space() > 5.5 {
+            return Ok(()); // brute force too big; covered by other props
+        }
+        let brute = exhaustive_search(&p, limit, inst.b);
+        let smart = osdp::planner::dfs_search(&p, limit, inst.b);
+        match (brute, smart) {
+            (None, None) => Ok(()),
+            (Some((_, bc)), Some((_, sc, stats))) => {
+                if !stats.complete {
+                    return Err("budget expired on a tiny instance".into());
+                }
+                if sc.peak_mem > limit {
+                    return Err(format!("overflows: {}", sc.peak_mem));
+                }
+                prop::close(bc.time, sc.time, 1e-10)
+            }
+            (b, s) => Err(format!(
+                "feasibility disagreement: brute={:?} folded={:?}",
+                b.is_some(),
+                s.is_some()
+            )),
+        }
+    });
+}
+
+/// The headline compression claim: on a 24-layer uniform GPT (paper
+/// granularity: 50 ops collapsing to 4 classes) the folded tree is at
+/// least 10x smaller than the per-operator tree at the hardest limit of a
+/// mid-range sweep. With binary menus the whole folded space has
+/// ~25·25·2·2 count compositions, so the folded search provably
+/// completes; the per-operator tree over the same 2^50 space must either
+/// blow past the node budget or pay combinatorially for the C(48, k)
+/// interior selections.
+#[test]
+fn fold_shrinks_tree_10x_on_deep_uniform_stack() {
+    let m = build_gpt(&GptDims::uniform("deep", 5000, 128, 24, 256, 4));
+    let c = Cluster::rtx_titan(8, 8.0);
+    let s = SearchConfig {
+        granularities: vec![0],
+        paper_granularity: true,
+        ..Default::default()
+    };
+    let p = Profiler::new(&m, &c, &s);
+    assert_eq!(p.n_ops(), 2 * 24 + 2);
+    let r = osdp::planner::fold_report(&p);
+    assert!(r.classes <= 6, "24 fused layers must fold: {r:?}");
+    assert!(r.max_multiplicity >= 24);
+
+    let dp = p.evaluate(&p.index_of(|d| d.is_pure_dp()), 1).peak_mem;
+    let zdp = p.evaluate(&p.index_of(|d| d.is_pure_zdp()), 1).peak_mem;
+    const BUDGET: u64 = 3_000_000;
+    let mut best_ratio = 0.0f64;
+    let mut hardest = (0u64, 0u64);
+    for frac in [0.15, 0.3, 0.45, 0.6, 0.75, 0.9] {
+        let limit = zdp + (dp - zdp) * frac;
+        let folded =
+            osdp::planner::dfs::search_with_budget(&p, limit, 1, BUDGET)
+                .expect("above the all-ZDP peak is feasible");
+        let unfolded = dfs_search_unfolded(&p, limit, 1, BUDGET)
+            .expect("above the all-ZDP peak is feasible");
+        assert!(folded.2.complete,
+                "folded search must finish within budget (frac {frac}): \
+                 {} nodes", folded.2.nodes);
+        // wherever the unfolded engine also finished, results are
+        // bit-identical
+        if unfolded.2.complete {
+            assert_eq!(folded.0, unfolded.0, "choice differs at {frac}");
+            assert_eq!(folded.1.time.to_bits(), unfolded.1.time.to_bits());
+        }
+        let (fnodes, unodes) = (folded.2.nodes, unfolded.2.nodes);
+        if unodes > hardest.1 {
+            hardest = (fnodes, unodes);
+        }
+        best_ratio = best_ratio.max(unodes as f64 / fnodes.max(1) as f64);
+    }
+    assert!(
+        best_ratio >= 10.0,
+        "fold must shrink the deep-uniform tree >=10x somewhere in the \
+         sweep; best ratio {best_ratio:.1} (hardest instance: folded {} vs \
+         unfolded {} nodes)",
+        hardest.0,
+        hardest.1,
+    );
+}

@@ -52,7 +52,12 @@ fn build(inst: &Instance) -> (Profiler, f64) {
 /// complete searches, so the tests make completeness structural instead of
 /// asserting their way around per-task budget slicing.
 fn cfg(threads: usize, split_depth: usize) -> ParallelConfig {
-    ParallelConfig { threads, split_depth, node_budget: u64::MAX }
+    ParallelConfig {
+        threads,
+        split_depth,
+        node_budget: u64::MAX,
+        fold: true,
+    }
 }
 
 /// Parallel B&B equals brute force wherever brute force is affordable.
