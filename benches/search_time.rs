@@ -3,8 +3,10 @@
 //! (greedy-seeded, suffix-bounded, symmetry-folded) searches the same
 //! spaces in well under a second per setting — reported here per zoo
 //! model, plus planner micro-benchmarks (plans evaluated per second,
-//! folded-vs-unfolded node counts) and a machine-readable
-//! `BENCH_search.json` so the perf trajectory is tracked across PRs.
+//! folded-vs-unfolded node counts, frontier-vs-folded sweep times and
+//! per-class frontier point counts) and a machine-readable
+//! `BENCH_search.json` so the perf trajectory is tracked across PRs (CI
+//! archives it per commit).
 //!
 //! Run: `cargo bench --bench search_time`
 
@@ -12,7 +14,8 @@ use osdp::bench::Bencher;
 use osdp::config::{Cluster, GIB, SearchConfig};
 use osdp::cost::Profiler;
 use osdp::figures::{self, Quality};
-use osdp::planner::{ParallelConfig, Scheduler, dfs_search,
+use osdp::model::{GptDims, build_gpt};
+use osdp::planner::{Engine, ParallelConfig, Scheduler, dfs_search,
                     dfs_search_unfolded, parallel_search};
 use osdp::util::json::Json;
 use std::collections::BTreeMap;
@@ -105,8 +108,12 @@ fn main() {
     let ms = bs.bench("search/serial_dfs", || {
         dfs_search(&profiler, limit, 4)
     });
-    let cfg1 = ParallelConfig { threads: 1, ..Default::default() };
-    let cfg8 = ParallelConfig { threads: 8, ..Default::default() };
+    // folded engine explicitly: this section measures the parallel B&B
+    // against the serial B&B, not the frontier engine (below)
+    let cfg1 = ParallelConfig { threads: 1, engine: Engine::FoldedBb,
+                                ..Default::default() };
+    let cfg8 = ParallelConfig { threads: 8, engine: Engine::FoldedBb,
+                                ..Default::default() };
     let mut b1 = Bencher::new(1, 5, 1);
     let m1 = b1.bench("search/parallel_1thread", || {
         parallel_search(&profiler, limit, 4, &cfg1)
@@ -143,6 +150,82 @@ fn main() {
     out.insert("search_parallel8_s".into(), num(m8.per_iter()));
     out.insert("parallel_speedup_8t".into(), num(speedup));
 
+    // frontier stats on the 96L menus (wide classes fall back — recorded
+    // so the build behavior is tracked across PRs too)
+    let f96 = osdp::planner::frontier_report(&profiler);
+    println!("\n96L frontiers: {}", f96.describe());
+    out.insert("frontier_points_96l".into(), num(f96.points as f64));
+    out.insert("frontier_too_wide_96l".into(), num(f96.too_wide as f64));
+
+    // frontier engine vs folded B&B on the scheduler's hot path: the
+    // 24-layer uniform GPT sweep (the tentpole's target instance — one
+    // frontier build amortized across every batch size of the sweep)
+    println!("\n== frontier vs folded B&B sweep (24L uniform GPT, 8G) ==");
+    let deep = build_gpt(&GptDims::uniform("deep", 5000, 128, 24, 256, 4));
+    let cdeep = Cluster::rtx_titan(8, 8.0);
+    let sdeep = SearchConfig {
+        granularities: vec![0],
+        paper_granularity: true,
+        ..Default::default()
+    };
+    let pdeep = Profiler::new(&deep, &cdeep, &sdeep);
+    let f24 = osdp::planner::frontier_report(&pdeep);
+    println!("frontiers: {}", f24.describe());
+    let mut bfo = Bencher::new(1, 5, 1);
+    let mfo = bfo.bench("scheduler/24L_folded_sweep", || {
+        Scheduler::new(&pdeep, 8.0 * GIB, 16)
+            .with_engine(Engine::FoldedBb)
+            .run()
+    });
+    let mut bfr = Bencher::new(1, 5, 1);
+    let mfr = bfr.bench("scheduler/24L_frontier_sweep", || {
+        Scheduler::new(&pdeep, 8.0 * GIB, 16).run()
+    });
+    print!("{}{}", bfo.report(), bfr.report());
+
+    // same candidates, bit-identical, and never more search nodes
+    let fo_sweep = Scheduler::new(&pdeep, 8.0 * GIB, 16)
+        .with_engine(Engine::FoldedBb)
+        .run()
+        .unwrap();
+    let fr_sweep = Scheduler::new(&pdeep, 8.0 * GIB, 16).run().unwrap();
+    assert_eq!(fr_sweep.candidates.len(), fo_sweep.candidates.len());
+    for (a, b) in fr_sweep.candidates.iter().zip(&fo_sweep.candidates) {
+        assert_eq!(a.plan.choice, b.plan.choice,
+                   "frontier sweep diverged at b={}", a.plan.batch);
+        assert_eq!(a.plan.cost.time.to_bits(), b.plan.cost.time.to_bits());
+    }
+    assert!(fr_sweep.total_nodes <= fo_sweep.total_nodes,
+            "frontier sweep explored more nodes");
+    let sweep_speedup = mfo.per_iter() / mfr.per_iter();
+    println!(
+        "folded {} | frontier {} | {sweep_speedup:.2}x; sweep nodes {} -> {}",
+        osdp::util::fmt_time(mfo.per_iter()),
+        osdp::util::fmt_time(mfr.per_iter()),
+        fo_sweep.total_nodes,
+        fr_sweep.total_nodes,
+    );
+    out.insert("sweep24_folded_s".into(), num(mfo.per_iter()));
+    out.insert("sweep24_frontier_s".into(), num(mfr.per_iter()));
+    out.insert("sweep24_frontier_speedup".into(), num(sweep_speedup));
+    out.insert("sweep24_nodes_folded".into(),
+               num(fo_sweep.total_nodes as f64));
+    out.insert("sweep24_nodes_frontier".into(),
+               num(fr_sweep.total_nodes as f64));
+    out.insert("frontier_classes_24l".into(), num(f24.classes as f64));
+    out.insert("frontier_compositions_24l".into(),
+               num(f24.compositions as f64));
+    out.insert("frontier_points_24l".into(), num(f24.points as f64));
+    // per-class point counts, in fold-class order
+    out.insert(
+        "frontier_points_per_class_24l".into(),
+        Json::Arr(f24.per_class.iter().map(|s| num(s.kept as f64)).collect()),
+    );
+    out.insert(
+        "frontier_compositions_per_class_24l".into(),
+        Json::Arr(f24.per_class.iter().map(|s| num(s.raw as f64)).collect()),
+    );
+
     // machine-readable perf record, tracked across PRs
     let path = std::env::var("OSDP_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_search.json".to_string());
@@ -155,5 +238,12 @@ fn main() {
                 "expected >=2x at 8 threads, measured {speedup:.2}x");
         assert!(reduction >= 10.0,
                 "expected >=10x fold reduction, measured {reduction:.1}x");
+        assert!(
+            mfr.per_iter() <= mfo.per_iter(),
+            "frontier sweep ({}) must not be slower than the folded \
+             B&B sweep ({}) on the 24L uniform GPT",
+            osdp::util::fmt_time(mfr.per_iter()),
+            osdp::util::fmt_time(mfo.per_iter()),
+        );
     }
 }

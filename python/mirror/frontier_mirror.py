@@ -1,0 +1,672 @@
+"""Python mirror of the Rust planner's frontier engine (PR 3 validation).
+
+Mirrors, operation-for-operation in IEEE-754 doubles:
+
+* ``planner/bound.rs``  — Prefold order, suffix bounds, the folded
+  branch-and-bound Walker (greedy seed pricing, strict/tie time pruning,
+  memory pruning, fast completion);
+* ``planner/frontier.rs`` — the per-class composition-frontier build
+  ((time, lex) processing + 2-D staircase prune) and the frontier descent,
+  including the too-wide fallback;
+* ``planner/exhaustive.rs`` — the folded (time, lex) ground-truth
+  enumerator.
+
+Checks, on hundreds of random instances x batch sizes x memory limits:
+
+1. folded B&B  == brute force over the raw product space, bit-for-bit
+   (total time bits AND full choice vector — the canonical (total, lex)
+   objective);
+2. frontier    == folded B&B, bit-for-bit, with node count <= folded's;
+3. frontier with a forced too-wide class == folded B&B (fallback path);
+4. folded exhaustive == brute force, bit-for-bit;
+5. one shared frontier build serves a whole batch sweep (batch
+   invariance): per-batch results equal fresh builds at every b;
+6. the parallel split over the leading classes' frontier points
+   (``enumerate_tasks_frontier`` + the deterministic (time, lex) merge)
+   equals the serial frontier engine at every split depth.
+
+Run: ``python3 python/mirror/frontier_mirror.py`` (exits non-zero on any
+mismatch; prints node-count evidence for the 24-layer-style instance).
+"""
+
+import random
+import sys
+from itertools import product
+
+TIME_GRID = 1.0 / (1 << 30)
+
+
+def snap(t):
+    # exact for grid multiples; synthetic menus only use grid multiples
+    return round(t * (1 << 30)) * TIME_GRID
+
+
+# ----------------------------------------------------------------- model
+
+
+class Table:
+    def __init__(self, tf, st, g, act, ws, gamma):
+        # menus sorted fastest-first, like cost/menu.rs emits
+        order = sorted(range(len(tf)), key=lambda i: tf[i])
+        self.tf = [tf[i] for i in order]
+        self.st = [float(st[i]) for i in order]
+        self.g = [float(g[i]) for i in order]
+        self.act = float(act)
+        self.ws = float(ws)
+        self.gamma = gamma
+
+    def key(self):
+        return (self.act, self.ws, self.gamma, tuple(self.tf),
+                tuple(self.st), tuple(self.g))
+
+
+def batch_eff(b):
+    return b / (b + 2.0)
+
+
+def base_time(tables, b):
+    compute = sum(b * t.gamma for t in tables)
+    return snap(compute / batch_eff(b))
+
+
+def evaluate(tables, choice, b):
+    """profiler.evaluate mirror: (time, peak)."""
+    tf = 0.0
+    compute = 0.0
+    persistent = 0.0
+    trans = 0.0
+    for t, c in zip(tables, choice):
+        tf += t.tf[c]
+        compute += b * t.gamma
+        persistent += t.st[c] + b * t.act
+        trans = max(trans, t.g[c] + b * t.ws)
+    return tf + compute / batch_eff(b), persistent + trans
+
+
+def total_of(tables, order, ordered, b):
+    """Search-arithmetic total: base + grid tf sum in visit order."""
+    tf = 0.0
+    for pos, c in enumerate(ordered):
+        tf += tables[order[pos]].tf[c]
+    return base_time(tables, b) + tf
+
+
+# --------------------------------------------------------------- prefold
+
+
+class Prefold:
+    def __init__(self, tables):
+        n = len(tables)
+        base = sorted(range(n), key=lambda i: -tables[i].st[0])
+        # stable sort: ties keep profiler order (python sort is stable)
+        keys = {}
+        cid = []
+        for i in range(n):
+            k = tables[i].key()
+            cid.append(keys.setdefault(k, len(keys)))
+        members = [[] for _ in keys]
+        for op in base:
+            members[cid[op]].append(op)
+        self.order = []
+        self.class_start = []
+        placed = [False] * len(keys)
+        for op in base:
+            c = cid[op]
+            if not placed[c]:
+                placed[c] = True
+                self.class_start.append(len(self.order))
+                self.order.extend(members[c])
+        self.class_start.append(n)
+        self.suffix_min_time = [0.0] * (n + 1)
+        self.suffix_min_states = [0.0] * (n + 1)
+        self.suffix_opt0_states = [0.0] * (n + 1)
+        for i in reversed(range(n)):
+            t = tables[self.order[i]]
+            self.suffix_min_time[i] = self.suffix_min_time[i + 1] + t.tf[0]
+            self.suffix_min_states[i] = (self.suffix_min_states[i + 1]
+                                         + min(t.st))
+            self.suffix_opt0_states[i] = (self.suffix_opt0_states[i + 1]
+                                          + t.st[0])
+
+    def n(self):
+        return len(self.order)
+
+    def n_classes(self):
+        return len(self.class_start) - 1
+
+    def mult(self, k):
+        return self.class_start[k + 1] - self.class_start[k]
+
+
+def next_monotone_block(block, o):
+    for p in reversed(range(len(block))):
+        if block[p] + 1 < o:
+            v = block[p] + 1
+            for q in range(p, len(block)):
+                block[q] = v
+            return True
+    return False
+
+
+# ---------------------------------------------------------------- greedy
+
+
+def greedy(tables, limit, b):
+    n = len(tables)
+    choice = [0] * n
+    _, peak = evaluate(tables, choice, b)
+    while peak > limit:
+        best = None
+        for i in range(n):
+            t = tables[i]
+            cur = choice[i]
+            for c in range(cur + 1, len(t.tf)):
+                dmem = (t.st[cur] - t.st[c]) + max(t.g[cur] - t.g[c], 0.0)
+                dtime = t.tf[c] - t.tf[cur]
+                if dmem <= 0.0:
+                    continue
+                ratio = dmem / max(dtime, 1e-15)
+                if best is None or ratio > best[2]:
+                    best = (i, c, ratio)
+        if best is None:
+            return None
+        choice[best[0]] = best[1]
+        _, peak = evaluate(tables, choice, b)
+    return choice
+
+
+# ---------------------------------------------------------------- spaces
+
+
+class Space:
+    def __init__(self, pre, tables, limit, b):
+        self.pre = pre
+        self.tables = tables
+        self.limit = limit
+        n = pre.n()
+        bf = float(b)
+        self.flat = []
+        for op in pre.order:
+            t = tables[op]
+            self.flat.append([(t.tf[c], t.st[c], t.g[c] + bf * t.ws)
+                              for c in range(len(t.tf))])
+        self.class_bws = [
+            bf * tables[pre.order[pre.class_start[k]]].ws
+            for k in range(pre.n_classes())
+        ]
+        self.suffix_min_trans = [0.0] * (n + 1)
+        self.suffix_opt0_trans = [0.0] * (n + 1)
+        for i in reversed(range(n)):
+            t = tables[pre.order[i]]
+            bws = bf * t.ws
+            self.suffix_min_trans[i] = max(self.suffix_min_trans[i + 1],
+                                           min(t.g) + bws)
+            self.suffix_opt0_trans[i] = max(self.suffix_opt0_trans[i + 1],
+                                            t.g[0] + bws)
+        self.base_time = base_time(tables, b)
+        self.base_act = sum(bf * t.act for t in tables)
+        seed = greedy(tables, limit, b)
+        if seed is None:
+            self.seed = None
+        else:
+            ordered = [seed[op] for op in pre.order]
+            tf = 0.0
+            for i, c in enumerate(ordered):
+                tf += self.flat[i][c][0]
+            self.seed = (self.base_time + tf, ordered)
+
+    def n(self):
+        return self.pre.n()
+
+    def unpermute(self, ordered):
+        choice = [0] * len(ordered)
+        for pos, op in enumerate(self.pre.order):
+            choice[op] = ordered[pos]
+        return choice
+
+
+# ---------------------------------------------------------------- walker
+
+
+def lex_less(a, b):
+    for x, y in zip(a, b):
+        if x != y:
+            return x < y
+    return False
+
+
+class Walker:
+    def __init__(self, space, frontiers=None):
+        self.sp = space
+        self.fr = frontiers
+        if space.seed is None:
+            self.best_time, self.best = float("inf"), None
+        else:
+            self.best_time, self.best = space.seed[0], list(space.seed[1])
+        self.prefix = [0] * space.n()
+        self.nodes = 0
+
+    def open_subtree(self, i, tf, st, tm):
+        sp = self.sp
+        lb = sp.base_time + tf + sp.pre.suffix_min_time[i]
+        if lb > self.best_time or (lb == self.best_time
+                                   and not self.zero_beats_best(i)):
+            return False
+        peak = (st + sp.pre.suffix_min_states[i] + sp.base_act
+                + max(tm, sp.suffix_min_trans[i]))
+        return peak <= sp.limit
+
+    def zero_beats_best(self, i):
+        if self.best is None:
+            return True
+        for j in range(i):
+            if self.prefix[j] != self.best[j]:
+                return self.prefix[j] < self.best[j]
+        return any(c > 0 for c in self.best[i:])
+
+    def fast_completion(self, i, tf, st, tm):
+        sp = self.sp
+        peak = (st + sp.pre.suffix_opt0_states[i] + sp.base_act
+                + max(tm, sp.suffix_opt0_trans[i]))
+        if peak > sp.limit:
+            return False
+        for j in range(i, sp.n()):
+            self.prefix[j] = 0
+        self.accept(sp.base_time + tf + sp.pre.suffix_min_time[i])
+        return True
+
+    def accept(self, total):
+        better = total < self.best_time or (
+            total == self.best_time
+            and (self.best is None or lex_less(self.prefix, self.best)))
+        if better:
+            self.best_time = total
+            self.best = list(self.prefix)
+
+    def descend_folded(self, k, tf, st, tm):
+        self.nodes += 1
+        i = self.sp.pre.class_start[k]
+        if not self.open_subtree(i, tf, st, tm):
+            return
+        if i == self.sp.n():
+            self.accept(self.sp.base_time + tf)
+            return
+        if self.fast_completion(i, tf, st, tm):
+            return
+        end = self.sp.pre.class_start[k + 1]
+        o = len(self.sp.flat[i])
+        block = [0] * (end - i)
+        while True:
+            btf, bst, btm = tf, st, tm
+            for j, c in enumerate(block):
+                opt = self.sp.flat[i + j][c]
+                btf += opt[0]
+                bst += opt[1]
+                btm = max(btm, opt[2])
+                self.prefix[i + j] = c
+            self.descend_folded(k + 1, btf, bst, btm)
+            if not next_monotone_block(block, o):
+                break
+
+    def descend_frontier(self, k, tf, st, tm):
+        self.nodes += 1
+        i = self.sp.pre.class_start[k]
+        if not self.open_subtree(i, tf, st, tm):
+            return
+        if i == self.sp.n():
+            self.accept(self.sp.base_time + tf)
+            return
+        if self.fast_completion(i, tf, st, tm):
+            return
+        cls = self.fr[k]
+        if cls is not None:
+            bws = self.sp.class_bws[k]
+            for ptf, pst, pg, block in cls:
+                for j, c in enumerate(block):
+                    self.prefix[i + j] = c
+                self.descend_frontier(k + 1, tf + ptf, st + pst,
+                                      max(tm, pg + bws))
+        else:  # too-wide fallback: enumerate blocks in place
+            end = self.sp.pre.class_start[k + 1]
+            o = len(self.sp.flat[i])
+            block = [0] * (end - i)
+            while True:
+                btf, bst, btm = tf, st, tm
+                for j, c in enumerate(block):
+                    opt = self.sp.flat[i + j][c]
+                    btf += opt[0]
+                    bst += opt[1]
+                    btm = max(btm, opt[2])
+                    self.prefix[i + j] = c
+                self.descend_frontier(k + 1, btf, bst, btm)
+                if not next_monotone_block(block, o):
+                    break
+
+
+def run_split_frontier(tables, limit, b, depth):
+    """Mirror of parallel.rs: tasks = combinations of the first `depth`
+    classes' frontier points, each walker run from its prefix, merged by
+    (time, lex). Shared-bound pruning omitted (it never decides a tie)."""
+    pre = Prefold(tables)
+    fr = build_frontiers(pre, tables)
+    depth = min(depth, next((k for k, c in enumerate(fr) if c is None),
+                            pre.n_classes()))
+    space = Space(pre, tables, limit, b)
+    # enumerate tasks: odometer over per-class point indices
+    tasks = []
+    pidx = [0] * depth
+    while True:
+        prefix = []
+        for k in range(depth):
+            prefix.extend(fr[k][pidx[k]][3])
+        tf = 0.0
+        st = 0.0
+        tm = 0.0
+        for i, c in enumerate(prefix):
+            opt = space.flat[i][c]
+            tf += opt[0]
+            st += opt[1]
+            tm = max(tm, opt[2])
+        tasks.append((list(prefix), tf, st, tm))
+        k = depth
+        adv = False
+        while k > 0:
+            k -= 1
+            pidx[k] += 1
+            if pidx[k] < len(fr[k]):
+                adv = True
+                break
+            pidx[k] = 0
+        if not adv:
+            break
+    best = None if space.seed is None else (space.seed[0],
+                                            list(space.seed[1]))
+    nodes = 0
+    for prefix, tf, st, tm in tasks:
+        w = Walker(space, fr)
+        w.prefix[:len(prefix)] = prefix
+        w.descend_frontier(depth, tf, st, tm)
+        nodes += w.nodes
+        if w.best is None:
+            continue
+        if (best is None or w.best_time < best[0]
+                or (w.best_time == best[0] and lex_less(w.best, best[1]))):
+            best = (w.best_time, list(w.best))
+    if best is None:
+        return None
+    return best[0], space.unpermute(best[1]), nodes
+
+
+def run_engine(tables, limit, b, engine, frontiers=None, pre=None):
+    pre = pre or Prefold(tables)
+    space = Space(pre, tables, limit, b)
+    if engine == "frontier" and frontiers is None:
+        frontiers = build_frontiers(pre, tables)
+    w = Walker(space, frontiers)
+    if engine == "folded":
+        w.descend_folded(0, 0.0, 0.0, 0.0)
+    else:
+        w.descend_frontier(0, 0.0, 0.0, 0.0)
+    if w.best is None:
+        return None
+    return w.best_time, space.unpermute(w.best), w.nodes
+
+
+# -------------------------------------------------------------- frontier
+
+
+def build_frontiers(pre, tables, cap=1 << 18, force_too_wide=()):
+    out = []
+    for k in range(pre.n_classes()):
+        t = tables[pre.order[pre.class_start[k]]]
+        m = pre.mult(k)
+        o = len(t.tf)
+        if k in force_too_wide:
+            out.append(None)
+            continue
+        cand = []
+        block = [0] * m
+        while True:
+            tf = 0.0
+            st = 0.0
+            g = 0.0
+            for c in block:
+                tf += t.tf[c]
+                st += t.st[c]
+                g = max(g, t.g[c])
+            cand.append((tf, st, g, list(block)))
+            if not next_monotone_block(block, o):
+                break
+        if len(cand) > cap:
+            out.append(None)
+            continue
+        idx = sorted(range(len(cand)), key=lambda p: cand[p][0])
+        stair = []  # (st, g) staircase
+
+        def dominated(st_, g_):
+            lo, hi = 0, len(stair)
+            while lo < hi:
+                mid = (lo + hi) // 2
+                if stair[mid][0] <= st_:
+                    lo = mid + 1
+                else:
+                    hi = mid
+            return lo > 0 and stair[lo - 1][1] <= g_
+
+        def insert(st_, g_):
+            lo, hi = 0, len(stair)
+            while lo < hi:
+                mid = (lo + hi) // 2
+                if stair[mid][0] < st_:
+                    lo = mid + 1
+                else:
+                    hi = mid
+            j = lo
+            while j < len(stair) and stair[j][1] >= g_:
+                j += 1
+            stair[lo:j] = [(st_, g_)]
+
+        kept = []
+        for p in idx:
+            tf, st, g, block_ = cand[p]
+            if dominated(st, g):
+                continue
+            insert(st, g)
+            kept.append((tf, st, g, block_))
+        out.append(kept)
+    return out
+
+
+# ------------------------------------------------------------ exhaustive
+
+
+def brute_product(tables, limit, b):
+    """Raw product space, canonical (total, lex-in-visit-order)."""
+    pre = Prefold(tables)
+    n = len(tables)
+    best = None
+    for choice in product(*[range(len(t.tf)) for t in tables]):
+        ordered = [choice[op] for op in pre.order]
+        _, peak = evaluate(tables, choice, b)
+        if peak > limit:
+            continue
+        total = total_of(tables, pre.order, ordered, b)
+        if (best is None or total < best[0]
+                or (total == best[0] and lex_less(ordered, best[1]))):
+            best = (total, ordered, list(choice))
+    return None if best is None else (best[0], best[2])
+
+
+def exhaustive_folded(tables, limit, b):
+    """Monotone-block enumeration, canonical (total, lex)."""
+    pre = Prefold(tables)
+    n = pre.n()
+    ordered = [0] * n
+    best = None
+    while True:
+        choice = [0] * n
+        for pos, op in enumerate(pre.order):
+            choice[op] = ordered[pos]
+        _, peak = evaluate(tables, choice, b)
+        if peak <= limit:
+            total = total_of(tables, pre.order, ordered, b)
+            if (best is None or total < best[0]
+                    or (total == best[0] and lex_less(ordered, best[1]))):
+                best = (total, list(ordered), choice)
+        k = pre.n_classes()
+        advanced = False
+        while k > 0:
+            k -= 1
+            s, e = pre.class_start[k], pre.class_start[k + 1]
+            o = len(tables[pre.order[s]].tf)
+            seg = ordered[s:e]
+            if next_monotone_block(seg, o):
+                ordered[s:e] = seg
+                advanced = True
+                break
+            ordered[s:e] = [0] * (e - s)
+        if not advanced:
+            return None if best is None else (best[0], best[2])
+
+
+# -------------------------------------------------------------- fixtures
+
+
+def rand_instance(rng, max_classes=4, max_mult=4, max_opts=3):
+    tables = []
+    n_classes = rng.randint(1, max_classes)
+    for _ in range(n_classes):
+        mult = rng.randint(1, max_mult)
+        o = rng.randint(1, max_opts)
+        tf = sorted(rng.sample(range(1, 4000), o))
+        tf = [v * TIME_GRID * 1000 for v in tf]
+        st = [float(rng.randint(1, 400)) for _ in range(o)]
+        g = [float(rng.randint(0, 300)) for _ in range(o)]
+        act = rng.randint(0, 40)
+        ws = rng.randint(0, 30)
+        gamma = rng.randint(1, 100) * 1e-6
+        proto = (tf, st, g, act, ws, gamma)
+        for _ in range(mult):
+            tables.append(Table(*proto))
+    rng.shuffle(tables)
+    return tables
+
+
+def check(cond, msg, ctx):
+    if not cond:
+        print("FAIL:", msg)
+        print("  ctx:", ctx)
+        sys.exit(1)
+
+
+def main():
+    rng = random.Random(0xF807)
+    full = 0
+    for trial in range(400):
+        tables = rand_instance(rng)
+        b = rng.randint(1, 6)
+        dp_peak = evaluate(tables, [0] * len(tables), b)[1]
+        limit = dp_peak * (0.2 + rng.random() * 1.2)
+        ctx = f"trial {trial} b={b} limit={limit}"
+
+        brute = brute_product(tables, limit, b)
+        folded = run_engine(tables, limit, b, "folded")
+        front = run_engine(tables, limit, b, "frontier")
+        exf = exhaustive_folded(tables, limit, b)
+
+        if brute is None:
+            check(folded is None and front is None and exf is None,
+                  "feasibility disagreement (infeasible)", ctx)
+            continue
+        full += 1
+        check(folded is not None, "folded lost feasibility", ctx)
+        check(front is not None, "frontier lost feasibility", ctx)
+        bt, bc = brute
+        check(folded[0] == bt and folded[1] == bc,
+              f"folded != brute: {folded[:2]} vs {brute}", ctx)
+        check(front[0] == bt and front[1] == bc,
+              f"frontier != brute: {front[:2]} vs {brute}", ctx)
+        check(front[2] <= folded[2],
+              f"frontier nodes {front[2]} > folded {folded[2]}", ctx)
+        check(exf is not None and exf[0] == bt and exf[1] == bc,
+              f"exhaustive_folded != brute: {exf} vs {brute}", ctx)
+
+        # forced too-wide fallback on a random class
+        pre = Prefold(tables)
+        wide = rng.randrange(pre.n_classes())
+        fr = build_frontiers(pre, tables, force_too_wide={wide})
+        fb = run_engine(tables, limit, b, "frontier", frontiers=fr, pre=pre)
+        check(fb is not None and fb[0] == bt and fb[1] == bc,
+              f"fallback engine != brute: {fb} vs {brute}", ctx)
+
+        # parallel split over frontier points, at several depths
+        for depth in (0, 1, 2, 5):
+            ps = run_split_frontier(tables, limit, b, depth)
+            check(ps is not None and ps[0] == bt and ps[1] == bc,
+                  f"split(depth={depth}) != brute: "
+                  f"{ps and ps[:2]} vs {brute}", ctx)
+
+    print(f"random instances: {full} full comparisons "
+          f"(of 400 trials) all bit-exact")
+
+    # batch-invariance: one frontier build across a sweep
+    rng2 = random.Random(7)
+    for trial in range(40):
+        tables = rand_instance(rng2, max_classes=3, max_mult=5)
+        pre = Prefold(tables)
+        fr = build_frontiers(pre, tables)
+        dp_peak = evaluate(tables, [0] * len(tables), 1)[1]
+        limit = dp_peak * (0.4 + rng2.random() * 2.0)
+        for b in range(1, 9):
+            shared = run_engine(tables, limit, b, "frontier",
+                                frontiers=fr, pre=pre)
+            fresh = run_engine(tables, limit, b, "frontier")
+            folded = run_engine(tables, limit, b, "folded")
+            ctx = f"sweep trial {trial} b={b}"
+            check(shared == fresh, "shared frontier != fresh build", ctx)
+            if folded is None:
+                check(shared is None, "sweep feasibility disagreement", ctx)
+            else:
+                check(shared is not None
+                      and shared[:2] == folded[:2], "sweep mismatch", ctx)
+    print("batch sweeps: shared frontier build bit-identical to fresh "
+          "builds and to folded B&B at every batch size")
+
+    # 24-layer-style instance: 2 big classes (m=24, o=2) + 2 singletons,
+    # mirroring the paper-granularity deep uniform GPT
+    grid = lambda v: v * TIME_GRID * 1000
+    big_a = (
+        [grid(10), grid(35)], [4000.0, 500.0], [0.0, 3500.0], 64, 16, 2e-5)
+    big_b = (
+        [grid(8), grid(30)], [3000.0, 380.0], [0.0, 2600.0], 48, 12, 1.5e-5)
+    emb = ([grid(4), grid(18)], [9000.0, 1200.0], [0.0, 7800.0], 8, 4, 1e-5)
+    head = ([grid(5), grid(20)], [9000.0, 1150.0], [0.0, 7900.0], 8, 4, 1e-5)
+    tables = ([Table(*big_a) for _ in range(24)]
+              + [Table(*big_b) for _ in range(24)]
+              + [Table(*emb), Table(*head)])
+    pre = Prefold(tables)
+    fr = build_frontiers(pre, tables)
+    pts = sum(len(c) for c in fr)
+    comp = sum(25 for _ in range(2)) + 4
+    print(f"24L-style: {comp} compositions -> {pts} frontier points; "
+          f"per-class {[len(c) for c in fr]}")
+    dp_peak = evaluate(tables, [0] * len(tables), 1)[1]
+    zdp_peak = evaluate(tables, [len(t.tf) - 1 for t in tables], 1)[1]
+    rows = []
+    for b in range(1, 9):
+        limit = zdp_peak * b * 0.2 + dp_peak * 0.55
+        folded = run_engine(tables, limit, b, "folded")
+        front = run_engine(tables, limit, b, "frontier", frontiers=fr,
+                           pre=pre)
+        if folded is None:
+            check(front is None, "24L feasibility disagreement", b)
+            continue
+        check(front[:2] == folded[:2], "24L mismatch", b)
+        check(front[2] <= folded[2], "24L frontier explored more", b)
+        rows.append((b, folded[2], front[2]))
+    print("24L-style per-batch nodes (b, folded, frontier):", rows)
+    print("OK: all mirror checks passed")
+
+
+if __name__ == "__main__":
+    main()

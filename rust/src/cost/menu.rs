@@ -17,12 +17,17 @@
 
 use super::profiler::{DecisionCost, OpCostTable};
 
-/// Before/after size of one operator's menu.
+/// Before/after size of one dominance-filtering pass. Used at both
+/// levels of the planner's Pareto machinery: per *operator* (raw
+/// candidate decisions → menu entries, this module's filter) and per
+/// *equivalence class* (count compositions → composition-frontier points,
+/// `planner::frontier` — same relation, one level up, where each "raw
+/// candidate" is a whole monotone option block).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct MenuStats {
-    /// Candidate decisions before dominance filtering.
+    /// Candidate entries before dominance filtering.
     pub raw: usize,
-    /// Pareto-frontier decisions handed to the search engine.
+    /// Pareto-frontier entries handed to the search engine.
     pub kept: usize,
 }
 
@@ -31,10 +36,16 @@ impl MenuStats {
         self.raw - self.kept
     }
 
-    /// Fold another operator's counts into a running total.
+    /// `raw / kept` shrink factor (1.0 = nothing removed) — the
+    /// branching-factor reduction the filter bought.
+    pub fn reduction_factor(&self) -> f64 {
+        self.raw as f64 / self.kept.max(1) as f64
+    }
+
+    /// Fold another pass's counts into a running total.
     pub fn absorb(&mut self, other: &MenuStats) {
-        self.raw += other.raw;
-        self.kept += other.kept;
+        self.raw = self.raw.saturating_add(other.raw);
+        self.kept = self.kept.saturating_add(other.kept);
     }
 }
 
@@ -134,6 +145,7 @@ mod tests {
         ]);
         assert_eq!(stats, MenuStats { raw: 4, kept: 3 });
         assert_eq!(stats.removed(), 1);
+        assert!((stats.reduction_factor() - 4.0 / 3.0).abs() < 1e-12);
         assert!(menu.iter().all(|o| o.comm != 3.0));
         // sorted fastest-first
         for w in menu.windows(2) {

@@ -18,7 +18,7 @@ use osdp::cost::Profiler;
 use osdp::figures::{self, Quality};
 use osdp::metrics::{speedup, speedup_vs_best};
 use osdp::model::zoo;
-use osdp::planner::{ParallelConfig, Scheduler, parallel};
+use osdp::planner::{Engine, ParallelConfig, Scheduler, parallel};
 use osdp::train::{ShardMode, TrainConfig, train};
 
 fn main() {
@@ -92,9 +92,13 @@ commands:
   plan    --setting 48L/1024H [--devices 8] [--mem 8] [--g 0,4]
           [--ckpt] [--batch-cap 64] [--fine]
           [--threads N]      sweep/search worker threads (default: all cores)
-          [--split-depth D]  parallel B&B tree-split depth (default 3)
-          [--batch B]        search one batch size with the parallel B&B
-                             instead of sweeping
+          [--split-depth D]  parallel tree-split depth (default 3)
+          [--batch B]        search one batch size with the parallel
+                             engine instead of sweeping
+          [--engine E]       frontier (default): per-class composition
+                             frontiers built once per sweep and merged
+                             per batch; bb: folded branch-and-bound
+                             ground truth (identical result)
           [--no-fold]        plan per operator instead of per equivalence
                              class (identical result, exponentially more
                              search nodes on symmetric models)
@@ -153,27 +157,45 @@ fn plan(args: &Args) {
         .unwrap_or_else(parallel::default_threads);
     let split_depth =
         args.usize_or("split-depth", parallel::DEFAULT_SPLIT_DEPTH);
-    let fold = !args.flag("no-fold");
+    // --no-fold (the historical escape hatch) means the per-operator
+    // B&B, whatever --engine says; otherwise frontier is the default and
+    // --engine bb selects the folded branch-and-bound ground truth.
+    let engine = if args.flag("no-fold") {
+        Engine::UnfoldedBb
+    } else {
+        match Engine::parse(args.get_or("engine", "frontier")) {
+            Some(e) => e,
+            None => {
+                eprintln!("--engine must be 'frontier' or 'bb', got '{}'",
+                          args.get_or("engine", ""));
+                std::process::exit(2);
+            }
+        }
+    };
     println!(
         "plan space: 10^{:.1} plans over {} ops ({} -> {} menu options \
-         after dominance pruning); limit {}; {} threads",
+         after dominance pruning); limit {}; {} threads; {} engine",
         profiler.log10_plan_space(),
         profiler.n_ops(),
         menus.raw,
         menus.kept,
         osdp::util::fmt_bytes(cluster.mem_limit),
         threads,
+        engine.label(),
     );
     let fr = osdp::planner::fold_report(&profiler);
     println!(
         "symmetry fold{}: {}",
-        if fold { "" } else { " (DISABLED via --no-fold)" },
+        if engine == Engine::UnfoldedBb {
+            " (DISABLED via --no-fold)"
+        } else {
+            ""
+        },
         fr.describe(),
     );
-
-    // --batch B: one parallel branch-and-bound search instead of a sweep
+    // --batch B: one parallel search instead of a sweep
     if let Some(b) = args.usize_opt("batch") {
-        let cfg = ParallelConfig { threads, split_depth, fold,
+        let cfg = ParallelConfig { threads, split_depth, engine,
                                    ..Default::default() };
         let t0 = std::time::Instant::now();
         match osdp::planner::parallel_search(&profiler, cluster.mem_limit, b,
@@ -184,8 +206,9 @@ fn plan(args: &Args) {
                 let plan = osdp::planner::ExecutionPlan::from_choice(
                     &profiler, choice, b);
                 println!(
-                    "parallel B&B (split depth {split_depth}): {} nodes, \
+                    "parallel {} (split depth {split_depth}): {} nodes, \
                      {:.2}s{}",
+                    engine.label(),
                     stats.nodes,
                     t0.elapsed().as_secs_f64(),
                     if stats.complete { "" } else { " [budget expired]" },
@@ -204,7 +227,7 @@ fn plan(args: &Args) {
     let t0 = std::time::Instant::now();
     match Scheduler::new(&profiler, cluster.mem_limit, search.max_batch)
         .with_threads(threads)
-        .with_fold(fold)
+        .with_engine(engine)
         .run()
     {
         None => println!("NO FEASIBLE PLAN (even all-ZDP at b=1 exceeds the \
@@ -217,6 +240,11 @@ fn plan(args: &Args) {
                 res.stats.describe(),
                 t0.elapsed().as_secs_f64()
             );
+            // the sweep's one-time frontier build, reported from the
+            // result so the CLI never builds the frontiers twice
+            if let Some(f) = &res.frontier {
+                println!("composition frontiers: {}", f.describe());
+            }
             println!("best plan: {}", c.plan.describe(&profiler));
             println!("  memory: {}",
                      figures::explain_plan(&profiler, &c.plan.choice,

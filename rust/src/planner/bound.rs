@@ -1,7 +1,8 @@
-//! Shared branch-and-bound machinery for the serial DFS ([`super::dfs`])
-//! and the parallel planner ([`super::parallel`]), including the
-//! **symmetry fold**: planning over operator equivalence classes instead
-//! of individual operators.
+//! Shared branch-and-bound machinery for the serial DFS ([`super::dfs`]),
+//! the parallel planner ([`super::parallel`]), and the frontier engine
+//! ([`super::frontier`], which adds a third descent mode to the same
+//! [`Walker`]), including the **symmetry fold**: planning over operator
+//! equivalence classes instead of individual operators.
 //!
 //! * [`Prefold`] — the batch-independent precomputation pass, built once
 //!   per profiler and reused across every batch size of a sweep: the
@@ -196,6 +197,28 @@ impl Prefold {
     pub fn multiplicity(&self, k: usize) -> usize {
         self.class_start[k + 1] - self.class_start[k]
     }
+
+    /// Map a search-order choice vector back to profiler order.
+    pub fn unpermute(&self, ordered: &[usize]) -> Vec<usize> {
+        let mut choice = vec![0usize; ordered.len()];
+        for (pos, &op_idx) in self.order.iter().enumerate() {
+            choice[op_idx] = ordered[pos];
+        }
+        choice
+    }
+}
+
+/// The decision-independent search-arithmetic time term, shared by every
+/// engine **and** the exhaustive ground truth — snapped to the grid so
+/// `base + grid time_fixed sums` are exact under any accumulation order
+/// (see [`crate::cost::time::TIME_GRID`]). Their bit-for-bit agreement is
+/// load-bearing for the `(total, lex)` tie-break, so there is exactly one
+/// copy of this expression.
+pub(crate) fn base_time(profiler: &Profiler, b: usize) -> f64 {
+    let bf = b as f64;
+    let eff = crate::cost::time::batch_efficiency(b);
+    let compute: f64 = profiler.tables.iter().map(|t| bf * t.gamma).sum();
+    crate::cost::time::snap_time(compute / eff)
 }
 
 /// The per-(memory limit, batch) search problem over a [`Prefold`]:
@@ -206,6 +229,11 @@ pub(crate) struct SearchSpace<'p> {
     /// Per ordered position: the option menu, flattened with this batch's
     /// transients.
     pub flat: Vec<Vec<FlatOpt>>,
+    /// Per class: this batch's `b · workspace_per_sample` (class-constant
+    /// because equal tables define the class). A composition's transient
+    /// is `gather_max + class_bws[k]` — the frontier engine's per-batch
+    /// term (see `super::frontier`).
+    pub class_bws: Vec<f64>,
     pub mem_limit: f64,
     /// Max over remaining ops of their minimum transient (admissible lower
     /// bound on the final transient max).
@@ -243,13 +271,16 @@ impl<'p> SearchSpace<'p> {
             suffix_opt0_trans[i] =
                 suffix_opt0_trans[i + 1].max(t.fastest().gather + bws);
         }
-        let eff = crate::cost::time::batch_efficiency(b);
-        let compute: f64 = profiler.tables.iter().map(|t| bf * t.gamma).sum();
-        // Snapped to the time grid so engine totals (base + grid sums)
-        // stay exact under any accumulation order — see TIME_GRID.
-        let base_time = crate::cost::time::snap_time(compute / eff);
+        let base_time = base_time(profiler, b);
         let base_act: f64 =
             profiler.tables.iter().map(|t| bf * t.act_per_sample).sum();
+
+        let class_bws: Vec<f64> = (0..pre.n_classes())
+            .map(|k| {
+                let op = pre.order[pre.class_start[k]];
+                bf * profiler.tables[op].workspace_per_sample
+            })
+            .collect();
 
         let flat: Vec<Vec<FlatOpt>> = pre
             .order
@@ -289,6 +320,7 @@ impl<'p> SearchSpace<'p> {
         SearchSpace {
             pre,
             flat,
+            class_bws,
             mem_limit,
             suffix_min_trans,
             suffix_opt0_trans,
@@ -304,11 +336,7 @@ impl<'p> SearchSpace<'p> {
 
     /// Map a search-order choice vector back to profiler order.
     pub fn unpermute(&self, ordered: &[usize]) -> Vec<usize> {
-        let mut choice = vec![0usize; ordered.len()];
-        for (pos, &op_idx) in self.pre.order.iter().enumerate() {
-            choice[op_idx] = ordered[pos];
-        }
-        choice
+        self.pre.unpermute(ordered)
     }
 }
 
@@ -382,27 +410,32 @@ impl SharedBound {
 /// One depth-first worker over a subtree of the space. Local incumbent
 /// starts at the greedy seed; the optional [`SharedBound`] tightens time
 /// pruning across workers without ever deciding a tie. The same incumbent
-/// machinery serves both the per-operator and the folded descent.
+/// machinery serves the per-operator, the folded, and the frontier
+/// descent (the last lives in `super::frontier`).
 pub(crate) struct Walker<'a> {
-    space: &'a SearchSpace<'a>,
+    pub(crate) space: &'a SearchSpace<'a>,
     shared: Option<&'a SharedBound>,
+    /// Per-class composition frontiers; required by the frontier descent
+    /// only (`None` for the per-operator and folded engines).
+    pub(crate) frontier: Option<&'a super::frontier::Frontiers>,
     /// Local incumbent time (search arithmetic for plans found here; the
     /// greedy seed's evaluated time before any improvement).
     pub best_time: f64,
     /// Local incumbent choice in search order.
     pub best_choice: Option<Vec<usize>>,
     pub stats: DfsStats,
-    budget: u64,
-    prefix: Vec<usize>,
+    pub(crate) budget: u64,
+    pub(crate) prefix: Vec<usize>,
     /// Per-class monotone-block scratch, preallocated so the folded
     /// descent's hot loop never touches the heap (taken/restored around
     /// the recursion with `mem::take`).
-    blocks: Vec<Vec<usize>>,
+    pub(crate) blocks: Vec<Vec<usize>>,
 }
 
 impl<'a> Walker<'a> {
-    pub fn new(space: &'a SearchSpace<'a>, shared: Option<&'a SharedBound>,
-               budget: u64) -> Walker<'a> {
+    pub fn new(space: &'a SearchSpace<'a>,
+               frontier: Option<&'a super::frontier::Frontiers>,
+               shared: Option<&'a SharedBound>, budget: u64) -> Walker<'a> {
         let (best_time, best_choice) = match &space.seed {
             Some((t, c)) => (*t, Some(c.clone())),
             None => (f64::INFINITY, None),
@@ -413,6 +446,7 @@ impl<'a> Walker<'a> {
         Walker {
             space,
             shared,
+            frontier,
             best_time,
             best_choice,
             stats: DfsStats::default(),
@@ -457,8 +491,8 @@ impl<'a> Walker<'a> {
     /// returns false when the subtree is pruned. The expressions — and so
     /// the f64 bits — are identical whichever descent evaluates them.
     #[inline]
-    fn open_subtree(&mut self, i: usize, time_fixed: f64, states: f64,
-                    trans_max: f64) -> bool {
+    pub(crate) fn open_subtree(&mut self, i: usize, time_fixed: f64,
+                               states: f64, trans_max: f64) -> bool {
         let sp = self.space;
         // ---- time pruning (paper's incumbent rule + admissible suffix
         // bound). Strictly worse than any incumbent is dead; tied with the
@@ -492,8 +526,8 @@ impl<'a> Walker<'a> {
     /// it fits, it is the subtree's `(time, lex)` optimum and the subtree
     /// closes. Returns true when it fired (subtree done).
     #[inline]
-    fn try_fast_completion(&mut self, i: usize, time_fixed: f64, states: f64,
-                           trans_max: f64) -> bool {
+    pub(crate) fn try_fast_completion(&mut self, i: usize, time_fixed: f64,
+                                      states: f64, trans_max: f64) -> bool {
         let sp = self.space;
         let opt0_peak = states
             + sp.pre.suffix_opt0_states[i]
@@ -605,7 +639,7 @@ impl<'a> Walker<'a> {
 
     /// Offer `self.prefix` at time `total` to the local incumbent; publish
     /// to the shared bound on improvement. Returns true when accepted.
-    fn try_accept(&mut self, total: f64) -> bool {
+    pub(crate) fn try_accept(&mut self, total: f64) -> bool {
         let better = total < self.best_time
             || (total == self.best_time
                 && match &self.best_choice {

@@ -27,7 +27,9 @@
 //! engine remains available ([`search_unfolded`], the CLI's `--no-fold`)
 //! as ground truth and for measuring the fold's node reduction.
 
+use super::Engine;
 use super::bound::{Prefold, SearchSpace, Walker};
+use super::frontier::Frontiers;
 use crate::cost::{PlanCost, Profiler};
 
 /// Search diagnostics.
@@ -82,7 +84,8 @@ pub fn search_with_budget(profiler: &Profiler, mem_limit: f64, b: usize,
                           budget: u64)
                           -> Option<(Vec<usize>, PlanCost, DfsStats)> {
     let prefold = Prefold::new(profiler);
-    search_prefolded(profiler, &prefold, mem_limit, b, budget, true)
+    search_prefolded(profiler, &prefold, None, mem_limit, b, budget,
+                     Engine::FoldedBb)
 }
 
 /// The per-operator (unfolded) engine: identical results, exponentially
@@ -92,22 +95,25 @@ pub fn search_unfolded(profiler: &Profiler, mem_limit: f64, b: usize,
                        budget: u64)
                        -> Option<(Vec<usize>, PlanCost, DfsStats)> {
     let prefold = Prefold::new(profiler);
-    search_prefolded(profiler, &prefold, mem_limit, b, budget, false)
+    search_prefolded(profiler, &prefold, None, mem_limit, b, budget,
+                     Engine::UnfoldedBb)
 }
 
-/// Search over a prebuilt [`Prefold`] — the scheduler's batch sweep builds
-/// the fold and the batch-independent suffix bounds once and calls this
-/// per batch size, recomputing only the transient and base terms.
+/// Search over a prebuilt [`Prefold`] (and, for [`Engine::Frontier`],
+/// prebuilt [`Frontiers`]) — the scheduler's batch sweep builds the fold,
+/// the batch-independent suffix bounds, and the class frontiers once and
+/// calls this per batch size, recomputing only the transient and base
+/// terms (and the greedy seed).
 pub(crate) fn search_prefolded(profiler: &Profiler, prefold: &Prefold,
-                               mem_limit: f64, b: usize, budget: u64,
-                               fold: bool)
+                               frontiers: Option<&Frontiers>, mem_limit: f64,
+                               b: usize, budget: u64, engine: Engine)
                                -> Option<(Vec<usize>, PlanCost, DfsStats)> {
     let space = SearchSpace::for_batch(prefold, profiler, mem_limit, b);
-    let mut walker = Walker::new(&space, None, budget);
-    if fold {
-        walker.run_root_folded();
-    } else {
-        walker.run_root();
+    let mut walker = Walker::new(&space, frontiers, None, budget);
+    match engine {
+        Engine::Frontier => walker.run_root_frontier(),
+        Engine::FoldedBb => walker.run_root_folded(),
+        Engine::UnfoldedBb => walker.run_root(),
     }
 
     let choice_ordered = walker.best_choice?;

@@ -1,31 +1,127 @@
-//! Brute-force plan enumeration: ground truth the DFS is validated against
-//! (only viable for small operator counts; tests keep `Π|menu| ≤ ~1e6`).
+//! Brute-force plan enumeration: ground truth the exact engines are
+//! validated against.
+//!
+//! Two enumerators, both optimizing the *same* canonical objective as the
+//! branch-and-bound engines — `(total, lex)` where `total` is the search
+//! arithmetic `base_time + Σ time_fixed` (grid-exact, see
+//! `cost::time::TIME_GRID`) and `lex` is over the planner's visit order —
+//! so ground-truth comparisons can assert **full choice-vector
+//! equality**, not just time:
+//!
+//! * [`search`] — folded over the symmetry classes: enumerates each
+//!   class's monotone option blocks (the canonical representatives of its
+//!   count compositions) instead of the raw per-operator product, so
+//!   exhaustive anchors scale to deeper stacks. Exact by the same
+//!   argument as the folded engine (`planner::bound`): permuting
+//!   same-class decisions changes no cost bit, and the `(total, lex)`
+//!   optimum is always a monotone assignment.
+//! * [`search_unfolded`] — the raw product space, for instances whose
+//!   menus were *not* built with the interchangeability invariants (and
+//!   as ground truth for the fold of this very enumerator).
+//!
+//! Ties are compared on the search-arithmetic total rather than
+//! `evaluate()`'s time because the latter adds an unsnapped compute term
+//! that can round two distinct `time_fixed` sums into the same f64 —
+//! exactly the collapse the grid exists to avoid. (The previous
+//! implementation instead kept the first minimum in odometer order with
+//! index 0 varying fastest — i.e. *reverse*-lex in profiler order — which
+//! made tie instances incomparable against the engines' canonical
+//! `(time, lex)` choice.)
 
+use super::bound::{Prefold, base_time, lex_less, next_monotone_block};
 use crate::cost::{PlanCost, Profiler};
 
-/// Enumerate every decision combination; return the feasible minimum-time
-/// plan, or `None` if nothing fits.
+/// Offer one feasible plan to the incumbent under the canonical
+/// `(total, lex-in-visit-order)` objective.
+fn consider(profiler: &Profiler, pre: &Prefold, base: f64, mem_limit: f64,
+            b: usize, ordered: &[usize],
+            best: &mut Option<(f64, Vec<usize>, Vec<usize>)>) {
+    let mut time_fixed = 0.0;
+    for (pos, &c) in ordered.iter().enumerate() {
+        time_fixed += profiler.tables[pre.order[pos]].options[c].time_fixed();
+    }
+    let total = base + time_fixed;
+    let choice = pre.unpermute(ordered);
+    if profiler.evaluate(&choice, b).peak_mem > mem_limit {
+        return;
+    }
+    let better = match best {
+        None => true,
+        Some((bt, bo, _)) => {
+            total < *bt || (total == *bt && lex_less(ordered, bo))
+        }
+    };
+    if better {
+        *best = Some((total, ordered.to_vec(), choice));
+    }
+}
+
+fn finish(profiler: &Profiler, b: usize,
+          best: Option<(f64, Vec<usize>, Vec<usize>)>)
+          -> Option<(Vec<usize>, PlanCost)> {
+    best.map(|(_, _, choice)| {
+        let cost = profiler.evaluate(&choice, b);
+        (choice, cost)
+    })
+}
+
+/// Enumerate every *distinct-cost* decision combination — one monotone
+/// option block per class and count composition — and return the feasible
+/// `(total, lex)`-minimum plan, or `None` if nothing fits. Matches the
+/// exact engines bit-for-bit, choice vector included.
 pub fn search(profiler: &Profiler, mem_limit: f64, b: usize)
               -> Option<(Vec<usize>, PlanCost)> {
-    let n = profiler.n_ops();
-    let mut choice = vec![0usize; n];
-    let mut best: Option<(Vec<usize>, PlanCost)> = None;
+    let pre = Prefold::new(profiler);
+    let n = pre.n();
+    let n_classes = pre.n_classes();
+    let base = base_time(profiler, b);
+    let mut ordered = vec![0usize; n];
+    let mut best: Option<(f64, Vec<usize>, Vec<usize>)> = None;
     loop {
-        let cost = profiler.evaluate(&choice, b);
-        if cost.peak_mem <= mem_limit {
-            let better = match &best {
-                None => true,
-                Some((_, c)) => cost.time < c.time,
-            };
-            if better {
-                best = Some((choice.clone(), cost));
+        consider(profiler, &pre, base, mem_limit, b, &ordered, &mut best);
+        // odometer over classes, rightmost fastest; each class steps
+        // through its monotone blocks in lex order
+        let mut k = n_classes;
+        loop {
+            if k == 0 {
+                return finish(profiler, b, best);
+            }
+            k -= 1;
+            let (s, e) = (pre.class_start[k], pre.class_start[k + 1]);
+            let o = profiler.tables[pre.order[s]].options.len();
+            if next_monotone_block(&mut ordered[s..e], o) {
+                break;
+            }
+            for slot in ordered[s..e].iter_mut() {
+                *slot = 0;
             }
         }
-        // odometer increment
+    }
+}
+
+/// Enumerate the raw per-operator product space under the same
+/// `(total, lex)` objective. Exponentially larger than [`search`] on
+/// symmetric models (tests keep `Π|menu| ≤ ~1e6`); ground truth for the
+/// folded enumerator itself.
+pub fn search_unfolded(profiler: &Profiler, mem_limit: f64, b: usize)
+                       -> Option<(Vec<usize>, PlanCost)> {
+    let pre = Prefold::new(profiler);
+    let n = profiler.n_ops();
+    let base = base_time(profiler, b);
+    let mut choice = vec![0usize; n];
+    let mut ordered = vec![0usize; n];
+    let mut best: Option<(f64, Vec<usize>, Vec<usize>)> = None;
+    loop {
+        for (pos, &op) in pre.order.iter().enumerate() {
+            ordered[pos] = choice[op];
+        }
+        consider(profiler, &pre, base, mem_limit, b, &ordered, &mut best);
+        // odometer increment (profiler order; enumeration order is
+        // irrelevant because the comparison above is explicit)
         let mut i = 0;
         loop {
             if i == n {
-                return best;
+                return finish(profiler, b, best);
             }
             choice[i] += 1;
             if choice[i] < profiler.tables[i].options.len() {
@@ -47,7 +143,8 @@ mod tests {
     use crate::util::rng::Rng;
 
     /// The core exactness guarantee: DFS == brute force on every feasible
-    /// instance we can afford to enumerate.
+    /// instance we can afford to enumerate — including the full choice
+    /// vector, now that both optimize the same `(total, lex)` objective.
     #[test]
     fn dfs_matches_exhaustive_across_limits() {
         let m = build_gpt(&GptDims::uniform("t", 2000, 64, 1, 96, 4));
@@ -62,13 +159,9 @@ mod tests {
             let smart = dfs::search(&p, limit, 2);
             match (brute, smart) {
                 (None, None) => {}
-                (Some((_, bc)), Some((_, sc, _))) => {
-                    assert!(
-                        (bc.time - sc.time).abs() < 1e-12,
-                        "limit {limit}: brute {} vs dfs {}",
-                        bc.time,
-                        sc.time
-                    );
+                (Some((bchoice, bc)), Some((schoice, sc, _))) => {
+                    assert_eq!(bchoice, schoice, "limit {limit}");
+                    assert_eq!(bc.time.to_bits(), sc.time.to_bits());
                     assert!(sc.peak_mem <= limit);
                 }
                 (b, s) => panic!(
@@ -101,12 +194,11 @@ mod tests {
             let smart = dfs::search(&p, limit, b);
             match (brute, smart) {
                 (None, None) => {}
-                (Some((_, bc)), Some((_, sc, _))) => assert!(
-                    (bc.time - sc.time).abs() <= 1e-12 * bc.time.max(1.0),
-                    "trial {trial}: brute {} dfs {}",
-                    bc.time,
-                    sc.time
-                ),
+                (Some((bchoice, bc)), Some((schoice, sc, _))) => {
+                    assert_eq!(bchoice, schoice, "trial {trial}");
+                    assert_eq!(bc.time.to_bits(), sc.time.to_bits(),
+                               "trial {trial}");
+                }
                 (b, s) => panic!(
                     "trial {trial}: disagreement brute={:?} dfs={:?}",
                     b.map(|x| x.1),
@@ -114,5 +206,38 @@ mod tests {
                 ),
             }
         }
+    }
+
+    /// The fold of the enumerator itself is exact: folded and raw-product
+    /// enumeration return the identical choice vector (not just time) on
+    /// symmetric models, where ties across interchangeable operators are
+    /// the norm.
+    #[test]
+    fn folded_enumeration_matches_raw_product() {
+        let m = build_gpt(&GptDims::uniform("t", 800, 32, 2, 64, 2));
+        let c = Cluster::rtx_titan(4, 8.0);
+        let s = SearchConfig { granularities: vec![0],
+                               ..Default::default() };
+        let p = Profiler::new(&m, &c, &s);
+        assert!(p.log10_plan_space() < 6.0, "keep the product affordable");
+        let dp_mem = p.evaluate(&p.index_of(|d| d.is_pure_dp()), 1).peak_mem;
+        let mut feasible = 0;
+        for frac in [0.3, 0.55, 0.8, 1.1] {
+            let limit = dp_mem * frac;
+            let folded = search(&p, limit, 1);
+            let raw = search_unfolded(&p, limit, 1);
+            match (folded, raw) {
+                (None, None) => {}
+                (Some((fc, fcost)), Some((rc, rcost))) => {
+                    assert_eq!(fc, rc, "frac {frac}");
+                    assert_eq!(fcost.time.to_bits(), rcost.time.to_bits());
+                    assert_eq!(fcost.peak_mem.to_bits(),
+                               rcost.peak_mem.to_bits());
+                    feasible += 1;
+                }
+                _ => panic!("feasibility disagreement at frac {frac}"),
+            }
+        }
+        assert!(feasible > 0, "sweep must exercise feasible limits");
     }
 }

@@ -5,19 +5,25 @@
 //! iteration time `Σ T_i` subject to `peak_mem ≤ M_limit`; the Scheduler
 //! sweeps batch sizes and keeps the candidate with the best throughput.
 //!
-//! Four planners share the problem definition (and, for the two exact
+//! Five planners share the problem definition (and, for the exact
 //! searches, the bound machinery in the crate-private `bound` module):
 //! * [`dfs`] — the paper's depth-first search with its two prunings
 //!   (memory exceeded / incumbent time exceeded), strengthened with
 //!   admissible suffix bounds and fast-completion (branch-and-bound).
 //!   Exact.
-//! * [`parallel`] — the same branch-and-bound split at a configurable
-//!   depth into subtree tasks over a `std::thread` worker pool, pruning
-//!   against a shared atomic incumbent. Bit-identical to [`dfs`] for any
-//!   thread count; ≥2x faster on paper-scale menus at 8 threads.
-//! * [`exhaustive`] — brute-force enumeration; ground truth for tests.
+//! * [`frontier`] — the sweep-optimized engine ([`Engine::Frontier`],
+//!   the default): each class's count compositions are enumerated once
+//!   per sweep into a batch-invariant dominance-pruned frontier, and
+//!   every per-batch search merges those small Pareto sets under the
+//!   same bounds. Bit-identical to [`dfs`].
+//! * [`parallel`] — the same searches split at a configurable depth into
+//!   subtree tasks over a `std::thread` worker pool, pruning against a
+//!   shared atomic incumbent. Bit-identical to [`dfs`] for any thread
+//!   count; ≥2x faster on paper-scale menus at 8 threads.
+//! * [`exhaustive`] — brute-force enumeration (folded over monotone
+//!   blocks, with a raw product-space variant); ground truth for tests.
 //! * [`greedy`] — flip-the-best-ratio heuristic; ablation baseline, and
-//!   the incumbent seed for both exact searches.
+//!   the incumbent seed for the exact searches.
 //!
 //! Both exact engines plan over the **symmetry-folded** space by default:
 //! operators whose pruned cost tables are byte-identical (runs of equal
@@ -37,6 +43,7 @@
 mod bound;
 pub mod dfs;
 pub mod exhaustive;
+pub mod frontier;
 pub mod greedy;
 pub mod parallel;
 pub mod scheduler;
@@ -44,11 +51,53 @@ pub mod scheduler;
 pub use dfs::{DfsStats, search as dfs_search,
               search_unfolded as dfs_search_unfolded};
 pub use exhaustive::search as exhaustive_search;
+pub use frontier::{FrontierStats, report as frontier_report,
+                   search as frontier_search};
 pub use greedy::search as greedy_search;
 pub use parallel::{ParallelConfig, search as parallel_search};
 pub use scheduler::{Candidate, Scheduler, SchedulerResult, SweepStats};
 
 use crate::cost::{Decision, PlanCost, Profiler};
+
+/// Which exact search engine to run. All three return the bit-identical
+/// `(time, lex)` optimum (property-tested in `rust/tests/`); they differ
+/// only in how much of the tree they must materialize, so the choice is a
+/// pure performance knob with [`Engine::Frontier`] the default and the
+/// branch-and-bound engines kept as ground truth (the CLI's
+/// `--engine bb` / `--no-fold`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Engine {
+    /// Per-class composition frontiers, built once per sweep and merged
+    /// under the B&B bounds (see [`frontier`]).
+    #[default]
+    Frontier,
+    /// Symmetry-folded branch-and-bound over count compositions
+    /// (ground truth for the frontier engine).
+    FoldedBb,
+    /// Per-operator branch-and-bound over the raw product space
+    /// (ground truth for the fold).
+    UnfoldedBb,
+}
+
+impl Engine {
+    /// Parse a CLI spelling (`--engine frontier|bb`).
+    pub fn parse(s: &str) -> Option<Engine> {
+        match s {
+            "frontier" => Some(Engine::Frontier),
+            "bb" => Some(Engine::FoldedBb),
+            _ => None,
+        }
+    }
+
+    /// Human label for reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Engine::Frontier => "frontier",
+            Engine::FoldedBb => "folded B&B",
+            Engine::UnfoldedBb => "per-op B&B",
+        }
+    }
+}
 
 /// What the symmetry fold buys on a given profiler: how many operators
 /// collapse into how many equivalence classes, and the search-space sizes

@@ -11,18 +11,21 @@
 //! [`super::exhaustive`] in `rust/tests/parallel_planner.rs` and against
 //! the unfolded engine in `rust/tests/folded_planner.rs`.
 //!
-//! By default the split works on the **symmetry-folded** space: subtree
-//! tasks are every combination of the first `split_depth` *equivalence
-//! classes'* count compositions (monotone option blocks — see `bound`),
-//! rather than the first `split_depth` operators' raw menus. On symmetric
+//! By default the split works on the **frontier** space ([`Engine`]):
+//! subtree tasks are every combination of the first `split_depth`
+//! equivalence classes' *frontier points* (see `super::frontier`) — or
+//! their count compositions for the folded engine, or the first
+//! `split_depth` operators' raw menus for the per-op engine. On symmetric
 //! models that keeps the task list proportional to the distinct-plan
 //! space. Tasks are capped at [`MAX_TASKS`] by shrinking the depth, then
 //! drained by workers over an atomic task counter (cheap work stealing:
 //! whichever worker is free takes the next prefix).
 
+use super::Engine;
 use super::bound::{Prefold, SearchSpace, SharedBound, Walker,
                    composition_count, lex_less, next_monotone_block};
 use super::dfs::{DEFAULT_NODE_BUDGET, DfsStats};
+use super::frontier::Frontiers;
 use crate::cost::{PlanCost, Profiler};
 use std::sync::Mutex;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -44,24 +47,24 @@ pub const MAX_TASKS: usize = 4096;
 const MIN_TASK_BUDGET: u64 = 16_384;
 
 /// Worker-pool settings for [`search`] (and the `--threads` /
-/// `--split-depth` / `--no-fold` CLI flags).
+/// `--split-depth` / `--engine` / `--no-fold` CLI flags).
 #[derive(Debug, Clone)]
 pub struct ParallelConfig {
     /// Worker threads (clamped to at least 1).
     pub threads: usize,
     /// Depth at which the search tree splits into tasks (0 = one task,
-    /// i.e. serial search on a worker thread). Counts classes when
-    /// `fold` is set, operators otherwise.
+    /// i.e. serial search on a worker thread). Counts classes for the
+    /// frontier and folded engines, operators for the per-op engine.
     pub split_depth: usize,
     /// Global node budget. The split depth shrinks until every task gets
     /// at least `MIN_TASK_BUDGET` nodes from it, so the aggregate stays
     /// within the cap; exactness holds iff the merged stats report
     /// `complete`.
     pub node_budget: u64,
-    /// Plan over operator equivalence classes (the symmetry fold) instead
-    /// of individual operators. Identical results either way; folding is
-    /// the default and `--no-fold` is the escape hatch.
-    pub fold: bool,
+    /// Which exact engine runs in every worker. Identical results for
+    /// all of them; [`Engine::Frontier`] is the default and splits the
+    /// tree over the first classes' frontier points.
+    pub engine: Engine,
 }
 
 impl Default for ParallelConfig {
@@ -70,7 +73,7 @@ impl Default for ParallelConfig {
             threads: default_threads(),
             split_depth: DEFAULT_SPLIT_DEPTH,
             node_budget: DEFAULT_NODE_BUDGET,
-            fold: true,
+            engine: Engine::Frontier,
         }
     }
 }
@@ -100,25 +103,46 @@ pub fn search(profiler: &Profiler, mem_limit: f64, b: usize,
               cfg: &ParallelConfig)
               -> Option<(Vec<usize>, PlanCost, DfsStats)> {
     let prefold = Prefold::new(profiler);
+    let frontiers = match cfg.engine {
+        Engine::Frontier => Some(Frontiers::new(&prefold, profiler)),
+        _ => None,
+    };
     let space = SearchSpace::for_batch(&prefold, profiler, mem_limit, b);
 
     // Shrink the split depth until (a) the task count is bounded and
     // (b) dividing the node budget across tasks leaves each at least the
     // per-task floor — so the budget stays a real global cap instead of
-    // being silently multiplied by the task count.
-    let max_depth = if cfg.fold { prefold.n_classes() } else { space.n() };
+    // being silently multiplied by the task count. Frontier tasks are
+    // materialized from prebuilt points, so that split region also stops
+    // at the first too-wide class (its blocks are only enumerated inside
+    // the walkers).
+    let max_depth = match cfg.engine {
+        Engine::UnfoldedBb => space.n(),
+        Engine::FoldedBb => prefold.n_classes(),
+        Engine::Frontier => frontiers
+            .as_ref()
+            .unwrap()
+            .classes
+            .iter()
+            .position(|c| c.points.is_none())
+            .unwrap_or(prefold.n_classes()),
+    };
     let mut depth = cfg.split_depth.min(max_depth);
     while depth > 0 && {
-        let tasks = task_count(&space, depth, cfg.fold) as u64;
+        let tasks =
+            task_count(&space, frontiers.as_ref(), depth, cfg.engine) as u64;
         tasks > MAX_TASKS as u64
             || cfg.node_budget / tasks < MIN_TASK_BUDGET
     } {
         depth -= 1;
     }
-    let tasks = if cfg.fold {
-        enumerate_tasks_folded(&space, depth)
-    } else {
-        enumerate_tasks(&space, depth)
+    let tasks = match cfg.engine {
+        Engine::Frontier => {
+            enumerate_tasks_frontier(&space, frontiers.as_ref().unwrap(),
+                                     depth)
+        }
+        Engine::FoldedBb => enumerate_tasks_folded(&space, depth),
+        Engine::UnfoldedBb => enumerate_tasks(&space, depth),
     };
     let budget = per_task_budget(cfg.node_budget, tasks.len());
 
@@ -139,13 +163,21 @@ pub fn search(profiler: &Profiler, mem_limit: f64, b: usize,
                         break;
                     }
                     let t = &tasks[idx];
-                    let mut w = Walker::new(&space, Some(&shared), budget);
-                    if cfg.fold {
-                        w.run_folded(depth, &t.prefix, t.time_fixed,
-                                     t.states, t.trans_max);
-                    } else {
-                        w.run(depth, &t.prefix, t.time_fixed, t.states,
-                              t.trans_max);
+                    let mut w = Walker::new(&space, frontiers.as_ref(),
+                                            Some(&shared), budget);
+                    match cfg.engine {
+                        Engine::Frontier => {
+                            w.run_frontier(depth, &t.prefix, t.time_fixed,
+                                           t.states, t.trans_max);
+                        }
+                        Engine::FoldedBb => {
+                            w.run_folded(depth, &t.prefix, t.time_fixed,
+                                         t.states, t.trans_max);
+                        }
+                        Engine::UnfoldedBb => {
+                            w.run(depth, &t.prefix, t.time_fixed, t.states,
+                                  t.trans_max);
+                        }
                     }
                     results.lock().unwrap()[idx] =
                         Some((w.best_time, w.best_choice, w.stats));
@@ -181,26 +213,35 @@ pub fn search(profiler: &Profiler, mem_limit: f64, b: usize,
 }
 
 /// Branch-count product of the first `depth` split positions, saturating.
-fn task_count(space: &SearchSpace, depth: usize, fold: bool) -> usize {
-    if fold {
-        (0..depth).fold(1usize, |acc, k| {
+fn task_count(space: &SearchSpace, frontiers: Option<&Frontiers>,
+              depth: usize, engine: Engine) -> usize {
+    match engine {
+        Engine::Frontier => {
+            let fr = frontiers.expect("frontier engine without frontiers");
+            (0..depth).fold(1usize, |acc, k| {
+                // the split region never crosses a too-wide class
+                let pts = fr.classes[k].points.as_ref().unwrap().len();
+                acc.saturating_mul(pts)
+            })
+        }
+        Engine::FoldedBb => (0..depth).fold(1usize, |acc, k| {
             let i = space.pre.class_start[k];
             acc.saturating_mul(composition_count(
                 space.pre.multiplicity(k),
                 space.flat[i].len(),
             ))
-        })
-    } else {
-        space.flat[..depth]
+        }),
+        Engine::UnfoldedBb => space.flat[..depth]
             .iter()
-            .fold(1usize, |acc, menu| acc.saturating_mul(menu.len()))
+            .fold(1usize, |acc, menu| acc.saturating_mul(menu.len())),
     }
 }
 
 /// All per-operator prefixes of length `depth` in lexicographic order,
 /// with their left-to-right partial sums.
 fn enumerate_tasks(space: &SearchSpace, depth: usize) -> Vec<Task> {
-    let mut tasks = Vec::with_capacity(task_count(space, depth, false));
+    let mut tasks = Vec::with_capacity(task_count(space, None, depth,
+                                                  Engine::UnfoldedBb));
     let mut idx = vec![0usize; depth];
     loop {
         tasks.push(make_task(space, &idx));
@@ -228,7 +269,8 @@ fn enumerate_tasks_folded(space: &SearchSpace, class_depth: usize)
                           -> Vec<Task> {
     let pre = space.pre;
     let len = pre.class_start[class_depth];
-    let mut tasks = Vec::with_capacity(task_count(space, class_depth, true));
+    let mut tasks = Vec::with_capacity(task_count(space, None, class_depth,
+                                                  Engine::FoldedBb));
     let mut prefix = vec![0usize; len];
     loop {
         tasks.push(make_task(space, &prefix));
@@ -248,6 +290,50 @@ fn enumerate_tasks_folded(space: &SearchSpace, class_depth: usize)
             for slot in prefix[s..e].iter_mut() {
                 *slot = 0;
             }
+        }
+    }
+}
+
+/// All frontier prefixes over the first `class_depth` classes — one task
+/// per combination of frontier points, each materialized as its canonical
+/// monotone position prefix — in point order, with their left-to-right
+/// partial sums. The caller guarantees every class in the split region
+/// has prebuilt points.
+fn enumerate_tasks_frontier(space: &SearchSpace, fr: &Frontiers,
+                            class_depth: usize) -> Vec<Task> {
+    let pre = space.pre;
+    let len = pre.class_start[class_depth];
+    let mut tasks = Vec::with_capacity(task_count(
+        space,
+        Some(fr),
+        class_depth,
+        Engine::Frontier,
+    ));
+    let mut pidx = vec![0usize; class_depth];
+    let mut prefix = vec![0usize; len];
+    loop {
+        for k in 0..class_depth {
+            let (s, e) = (pre.class_start[k], pre.class_start[k + 1]);
+            fr.classes[k]
+                .points
+                .as_ref()
+                .unwrap()
+                .write_block(pidx[k], &mut prefix[s..e]);
+        }
+        tasks.push(make_task(space, &prefix));
+        // odometer over classes, rightmost class fastest; each class
+        // steps through its frontier points in (time, lex) order
+        let mut k = class_depth;
+        loop {
+            if k == 0 {
+                return tasks;
+            }
+            k -= 1;
+            pidx[k] += 1;
+            if pidx[k] < fr.classes[k].points.as_ref().unwrap().len() {
+                break;
+            }
+            pidx[k] = 0;
         }
     }
 }
@@ -298,7 +384,7 @@ mod tests {
             threads,
             split_depth,
             node_budget: u64::MAX,
-            fold: true,
+            engine: Engine::Frontier,
         }
     }
 
@@ -326,23 +412,28 @@ mod tests {
             let limit = dp.peak_mem * frac;
             let serial = dfs::search_with_budget(&p, limit, 1, u64::MAX);
             for d in [0, 1, 2, 5] {
-                for fold in [true, false] {
+                for engine in [Engine::Frontier, Engine::FoldedBb,
+                               Engine::UnfoldedBb]
+                {
                     let mut c = cfg(4, d);
-                    c.fold = fold;
+                    c.engine = engine;
                     let par = search(&p, limit, 1, &c);
                     match (&serial, &par) {
                         (None, None) => {}
                         (Some((sc, scost, sst)), Some((pc, pcost, pst))) => {
                             assert!(sst.complete && pst.complete);
-                            assert_eq!(sc, pc,
-                                       "frac {frac} depth {d} fold {fold}");
+                            assert_eq!(
+                                sc, pc,
+                                "frac {frac} depth {d} engine {engine:?}"
+                            );
                             assert_eq!(scost.time.to_bits(),
                                        pcost.time.to_bits());
                             assert_eq!(scost.peak_mem.to_bits(),
                                        pcost.peak_mem.to_bits());
                         }
                         _ => panic!(
-                            "feasibility disagreement at {frac}/{d}/{fold}"
+                            "feasibility disagreement at \
+                             {frac}/{d}/{engine:?}"
                         ),
                     }
                 }
@@ -354,9 +445,11 @@ mod tests {
     fn split_depth_exceeding_positions_is_clamped() {
         let p = profiler(128, 1, vec![0]);
         let n = p.n_ops();
-        for fold in [true, false] {
+        for engine in [Engine::Frontier, Engine::FoldedBb,
+                       Engine::UnfoldedBb]
+        {
             let mut c = cfg(2, n + 10);
-            c.fold = fold;
+            c.engine = engine;
             let (choice, _, _) = search(&p, 1e18, 1, &c).unwrap();
             assert_eq!(choice.len(), n);
         }

@@ -20,11 +20,17 @@
 //! menus' `time_fixed`/`states` terms) live in one shared
 //! [`super::bound::Prefold`] built before the pool starts; each per-batch
 //! search only recomputes the transient and `base_*` terms (and its greedy
-//! seed) instead of rebuilding the whole space for every `b`.
+//! seed) instead of rebuilding the whole space for every `b`. Under the
+//! default [`Engine::Frontier`] the per-class composition frontiers are
+//! likewise built **once per sweep** and shared read-only across every
+//! batch size — they are batch-invariant by construction (see
+//! [`super::frontier`]) — so the per-batch search work collapses to a
+//! merge over precomputed Pareto sets.
 
-use super::ExecutionPlan;
 use super::bound::Prefold;
 use super::dfs::{self, DfsStats};
+use super::frontier::{FrontierStats, Frontiers};
+use super::{Engine, ExecutionPlan};
 use crate::cost::{PlanCost, Profiler};
 use std::sync::Mutex;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -89,6 +95,9 @@ pub struct SchedulerResult {
     pub elapsed: std::time::Duration,
     /// Aggregate per-candidate diagnostics.
     pub stats: SweepStats,
+    /// The one-time frontier build's statistics (composition/point counts
+    /// per class); `None` for the branch-and-bound engines.
+    pub frontier: Option<FrontierStats>,
 }
 
 impl SchedulerResult {
@@ -109,9 +118,9 @@ pub struct Scheduler<'a> {
     /// Worker threads for the sweep (1 = serial). Defaults to the
     /// hardware parallelism; the result is thread-count-invariant.
     pub threads: usize,
-    /// Plan over operator equivalence classes (the symmetry fold). On by
-    /// default; identical results either way (the CLI's `--no-fold`).
-    pub fold: bool,
+    /// Which exact engine every per-batch search runs
+    /// ([`Engine::Frontier`] by default; identical results for all).
+    pub engine: Engine,
 }
 
 impl<'a> Scheduler<'a> {
@@ -122,7 +131,7 @@ impl<'a> Scheduler<'a> {
             mem_limit,
             max_batch,
             threads: super::parallel::default_threads(),
-            fold: true,
+            engine: Engine::Frontier,
         }
     }
 
@@ -132,9 +141,18 @@ impl<'a> Scheduler<'a> {
         self
     }
 
-    /// Toggle the symmetry fold (the CLI's `--no-fold` escape hatch).
+    /// Pick the search engine (the CLI's `--engine`).
+    pub fn with_engine(mut self, engine: Engine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Toggle the symmetry fold (the CLI's `--no-fold` escape hatch):
+    /// `true` is the folded branch-and-bound, `false` the per-operator
+    /// engine. Use [`Scheduler::with_engine`] for the frontier default.
     pub fn with_fold(mut self, fold: bool) -> Self {
-        self.fold = fold;
+        self.engine =
+            if fold { Engine::FoldedBb } else { Engine::UnfoldedBb };
         self
     }
 
@@ -143,9 +161,16 @@ impl<'a> Scheduler<'a> {
         let start = std::time::Instant::now();
         let n_dev = self.profiler.cluster.n_devices;
 
-        // Fold + batch-independent suffix structures: built once, shared
-        // read-only by every worker and batch size.
+        // Fold + batch-independent suffix structures — and, for the
+        // frontier engine, the per-class composition frontiers — built
+        // once, shared read-only by every worker and batch size.
         let prefold = Prefold::new(self.profiler);
+        let frontiers = match self.engine {
+            Engine::Frontier => {
+                Some(Frontiers::new(&prefold, self.profiler))
+            }
+            _ => None,
+        };
 
         let threads = self.threads.max(1).min(self.max_batch.max(1));
         let next = AtomicUsize::new(1);
@@ -175,10 +200,11 @@ impl<'a> Scheduler<'a> {
                         match dfs::search_prefolded(
                             self.profiler,
                             &prefold,
+                            frontiers.as_ref(),
                             self.mem_limit,
                             b,
                             dfs::DEFAULT_NODE_BUDGET,
-                            self.fold,
+                            self.engine,
                         ) {
                             None => {
                                 wall.fetch_min(b, Ordering::Relaxed);
@@ -221,6 +247,7 @@ impl<'a> Scheduler<'a> {
             elapsed: start.elapsed(),
             stats,
             candidates,
+            frontier: frontiers.map(|f| f.stats()),
         })
     }
 }
@@ -345,6 +372,32 @@ mod tests {
         for (a, b) in folded.candidates.iter().zip(&plain.candidates) {
             assert_eq!(a.plan.choice, b.plan.choice);
             assert_eq!(a.plan.cost.time.to_bits(), b.plan.cost.time.to_bits());
+        }
+    }
+
+    #[test]
+    fn frontier_sweep_matches_bb_sweeps_and_explores_no_more() {
+        let p = profiler(8);
+        let dp1 = p.evaluate(&p.index_of(|d| d.is_pure_dp()), 1);
+        let limit = dp1.peak_mem * 3.0;
+        let fr = Scheduler::new(&p, limit, 24).run().unwrap();
+        let stats = fr.frontier.as_ref().expect("default engine is frontier");
+        assert!(stats.points > 0);
+        assert_eq!(stats.per_class.len(), stats.classes);
+        let folded = Scheduler::new(&p, limit, 24)
+            .with_engine(Engine::FoldedBb)
+            .run()
+            .unwrap();
+        assert!(folded.frontier.is_none());
+        assert_eq!(fr.best, folded.best);
+        assert_eq!(fr.candidates.len(), folded.candidates.len());
+        for (a, b) in fr.candidates.iter().zip(&folded.candidates) {
+            assert_eq!(a.plan.choice, b.plan.choice);
+            assert_eq!(a.plan.cost.time.to_bits(),
+                       b.plan.cost.time.to_bits());
+            assert!(a.stats.nodes <= b.stats.nodes,
+                    "frontier explored more nodes than the fold at b={}",
+                    a.plan.batch);
         }
     }
 

@@ -12,8 +12,8 @@
 use osdp::config::{Cluster, SearchConfig};
 use osdp::cost::Profiler;
 use osdp::model::{GptDims, build_gpt};
-use osdp::planner::{ParallelConfig, dfs_search_unfolded, exhaustive_search,
-                    parallel_search};
+use osdp::planner::{Engine, ParallelConfig, dfs_search_unfolded,
+                    exhaustive_search, parallel_search};
 use osdp::util::prop;
 use osdp::util::rng::Rng;
 
@@ -85,12 +85,12 @@ fn build(inst: &Instance) -> (Profiler, f64) {
     (p, dp_mem * inst.limit_frac)
 }
 
-fn cfg(threads: usize, fold: bool) -> ParallelConfig {
+fn cfg(threads: usize, engine: Engine) -> ParallelConfig {
     ParallelConfig {
         threads,
         split_depth: 3,
         node_budget: PROP_BUDGET,
-        fold,
+        engine,
     }
 }
 
@@ -117,7 +117,9 @@ fn assert_fold_exact(p: &Profiler, limit: f64, b: usize)
                 return Err(format!("cost differs: {ucost:?} vs {fcost:?}"));
             }
             for threads in [1usize, 8] {
-                let par = parallel_search(p, limit, b, &cfg(threads, true));
+                let par =
+                    parallel_search(p, limit, b,
+                                    &cfg(threads, Engine::FoldedBb));
                 match &par {
                     Some((pc, pcost, pst)) => {
                         if !pst.complete {

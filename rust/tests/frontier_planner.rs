@@ -1,0 +1,345 @@
+//! Tentpole guarantees of the composition-frontier planner:
+//!
+//! * exactness — the frontier engine returns bit-identical
+//!   `(choice, time)` to the folded and per-operator branch-and-bound on
+//!   random uniform *and* heterogeneous (per-layer-varied) GPTs, serially
+//!   and at 1 and 8 worker threads;
+//! * ground truth — it still equals brute-force enumeration (choice
+//!   vector included, now that the exhaustive enumerator shares the
+//!   canonical `(time, lex)` objective) wherever that is affordable;
+//! * batch invariance — one frontier build serves every batch size of a
+//!   sweep: the scheduler's frontier sweep is bit-identical to the folded
+//!   sweep at every batch, while never exploring more nodes;
+//! * amortization — on the 24-layer uniform stack the per-batch search
+//!   work stays small and bounded after the one-time frontier build.
+
+use osdp::config::{Cluster, SearchConfig};
+use osdp::cost::Profiler;
+use osdp::model::{GptDims, build_gpt};
+use osdp::planner::{Engine, ParallelConfig, Scheduler, exhaustive_search,
+                    frontier, parallel_search};
+use osdp::util::prop;
+use osdp::util::rng::Rng;
+
+/// Node budget for the property runs (see `folded_planner.rs`).
+const PROP_BUDGET: u64 = 5_000_000;
+
+#[derive(Debug, Clone)]
+struct Instance {
+    layers: usize,
+    hidden: Vec<usize>,
+    n_dev: usize,
+    b: usize,
+    limit_frac: f64,
+    grans: Vec<usize>,
+}
+
+fn gen_uniform(rng: &mut Rng, size: usize) -> Instance {
+    let layers = rng.range(2, 2 + size / 25);
+    Instance {
+        layers,
+        hidden: vec![32 * rng.range(1, 5); layers],
+        n_dev: *rng.pick(&[2usize, 4, 8]),
+        b: rng.range(1, 4),
+        limit_frac: 0.25 + rng.f64() * 1.1,
+        grans: if rng.chance(0.5) { vec![0] } else { vec![0, 2] },
+    }
+}
+
+fn gen_hetero(rng: &mut Rng, size: usize) -> Instance {
+    let layers = rng.range(2, 2 + size / 25);
+    let w1 = 32 * rng.range(1, 4);
+    let w2 = w1 + 32 * rng.range(1, 3);
+    let split = rng.range(1, layers);
+    let hidden = (0..layers)
+        .map(|l| if l < split { w1 } else { w2 })
+        .collect();
+    Instance {
+        layers,
+        hidden,
+        n_dev: *rng.pick(&[2usize, 4, 8]),
+        b: rng.range(1, 4),
+        limit_frac: 0.25 + rng.f64() * 1.1,
+        grans: if rng.chance(0.5) { vec![0] } else { vec![0, 2] },
+    }
+}
+
+fn build(inst: &Instance) -> (Profiler, f64) {
+    let m = build_gpt(&GptDims {
+        name: "p".into(),
+        vocab: 1000,
+        seq: 64,
+        layers: inst.layers,
+        hidden_per_layer: inst.hidden.clone(),
+        heads: 2,
+        tied_head: false,
+    });
+    let c = Cluster::rtx_titan(inst.n_dev, 8.0);
+    let s = SearchConfig { granularities: inst.grans.clone(),
+                           ..Default::default() };
+    let p = Profiler::new(&m, &c, &s);
+    let dp_mem = p.evaluate(&p.index_of(|d| d.is_pure_dp()), inst.b).peak_mem;
+    (p, dp_mem * inst.limit_frac)
+}
+
+fn cfg(threads: usize) -> ParallelConfig {
+    ParallelConfig {
+        threads,
+        split_depth: 3,
+        node_budget: PROP_BUDGET,
+        engine: Engine::Frontier,
+    }
+}
+
+/// Compare the frontier engine — serial and parallel at 1 and 8 threads —
+/// against the folded branch-and-bound on one instance. Returns true when
+/// a full (all-engines-complete, feasible) comparison happened.
+fn assert_frontier_exact(p: &Profiler, limit: f64, b: usize)
+                         -> Result<bool, String> {
+    let folded =
+        osdp::planner::dfs::search_with_budget(p, limit, b, PROP_BUDGET);
+    let front = frontier::search_with_budget(p, limit, b, PROP_BUDGET);
+    match (&folded, &front) {
+        (None, None) => Ok(false),
+        (Some((gc, gcost, gst)), Some((fc, fcost, fst))) => {
+            if !(gst.complete && fst.complete) {
+                return Ok(false); // anytime results may legitimately differ
+            }
+            if fc != gc {
+                return Err(format!("choice differs: {fc:?} vs {gc:?}"));
+            }
+            if fcost.time.to_bits() != gcost.time.to_bits()
+                || fcost.peak_mem.to_bits() != gcost.peak_mem.to_bits()
+            {
+                return Err(format!("cost differs: {fcost:?} vs {gcost:?}"));
+            }
+            if fst.nodes > gst.nodes {
+                return Err(format!(
+                    "frontier explored more than the fold: {} > {}",
+                    fst.nodes, gst.nodes
+                ));
+            }
+            for threads in [1usize, 8] {
+                let par = parallel_search(p, limit, b, &cfg(threads));
+                match &par {
+                    Some((pc, pcost, pst)) => {
+                        if !pst.complete {
+                            return Ok(false);
+                        }
+                        if pc != gc {
+                            return Err(format!(
+                                "parallel({threads}) frontier choice \
+                                 differs: {pc:?} vs {gc:?}"
+                            ));
+                        }
+                        if pcost.time.to_bits() != gcost.time.to_bits() {
+                            return Err(format!(
+                                "parallel({threads}) frontier time differs"
+                            ));
+                        }
+                    }
+                    None => {
+                        return Err(format!(
+                            "parallel({threads}) lost feasibility"
+                        ));
+                    }
+                }
+            }
+            Ok(true)
+        }
+        (g, f) => Err(format!(
+            "feasibility disagreement: folded={:?} frontier={:?}",
+            g.is_some(),
+            f.is_some()
+        )),
+    }
+}
+
+/// Frontier == folded, bit-for-bit, on random *uniform* GPTs.
+#[test]
+fn prop_frontier_is_exact_on_uniform_stacks() {
+    let mut compared = 0;
+    prop::check(0xF807_0001, 18, gen_uniform, |inst| {
+        let (p, limit) = build(inst);
+        if assert_frontier_exact(&p, limit, inst.b)? {
+            compared += 1;
+        }
+        Ok(())
+    });
+    assert!(compared >= 5, "only {compared} full comparisons ran");
+}
+
+/// Frontier == folded, bit-for-bit, on random *heterogeneous* GPTs
+/// (mixed widths: several classes of multiplicity > 1 plus singletons).
+#[test]
+fn prop_frontier_is_exact_on_heterogeneous_stacks() {
+    let mut compared = 0;
+    prop::check(0xF807_0002, 18, gen_hetero, |inst| {
+        let (p, limit) = build(inst);
+        if assert_frontier_exact(&p, limit, inst.b)? {
+            compared += 1;
+        }
+        Ok(())
+    });
+    assert!(compared >= 5, "only {compared} full comparisons ran");
+}
+
+/// Independent anchor: the frontier engine equals brute-force enumeration
+/// — full choice vector, not just time — wherever brute force is
+/// affordable.
+#[test]
+fn prop_frontier_is_exact_vs_exhaustive() {
+    prop::check(0xF807_0003, 15, gen_hetero, |inst| {
+        let (p, limit) = build(inst);
+        if p.log10_plan_space() > 5.5 {
+            return Ok(()); // brute force too big; covered by other props
+        }
+        let brute = exhaustive_search(&p, limit, inst.b);
+        let smart = frontier::search(&p, limit, inst.b);
+        match (brute, smart) {
+            (None, None) => Ok(()),
+            (Some((bchoice, bc)), Some((schoice, sc, stats))) => {
+                if !stats.complete {
+                    return Err("budget expired on a tiny instance".into());
+                }
+                if schoice != bchoice {
+                    return Err(format!(
+                        "choice differs: {schoice:?} vs {bchoice:?}"
+                    ));
+                }
+                if sc.time.to_bits() != bc.time.to_bits() {
+                    return Err(format!(
+                        "time differs: {} vs {}", sc.time, bc.time
+                    ));
+                }
+                if sc.peak_mem > limit {
+                    return Err(format!("overflows: {}", sc.peak_mem));
+                }
+                Ok(())
+            }
+            (b, s) => Err(format!(
+                "feasibility disagreement: brute={:?} frontier={:?}",
+                b.is_some(),
+                s.is_some()
+            )),
+        }
+    });
+}
+
+/// The exhaustive-fold satellite, anchored end-to-end: folded and
+/// raw-product enumeration agree on the full choice vector on random
+/// instances with real symmetry.
+#[test]
+fn prop_folded_exhaustive_matches_raw_product() {
+    prop::check(0xF807_0004, 12, gen_uniform, |inst| {
+        let (p, limit) = build(inst);
+        if p.log10_plan_space() > 4.5 {
+            return Ok(()); // raw product too big
+        }
+        let folded = exhaustive_search(&p, limit, inst.b);
+        let raw =
+            osdp::planner::exhaustive::search_unfolded(&p, limit, inst.b);
+        match (folded, raw) {
+            (None, None) => Ok(()),
+            (Some((fc, fcost)), Some((rc, rcost))) => {
+                if fc != rc {
+                    return Err(format!("choice differs: {fc:?} vs {rc:?}"));
+                }
+                if fcost.time.to_bits() != rcost.time.to_bits() {
+                    return Err("time differs".into());
+                }
+                Ok(())
+            }
+            (f, r) => Err(format!(
+                "feasibility disagreement: folded={:?} raw={:?}",
+                f.is_some(),
+                r.is_some()
+            )),
+        }
+    });
+}
+
+/// Batch invariance, end to end: one frontier build serves the whole
+/// sweep. The scheduler's frontier sweep returns bit-identical candidates
+/// to the folded sweep at every batch size, never explores more nodes,
+/// and equals fresh per-batch frontier builds (so sharing the build
+/// across batches changes nothing — the invariance claim in practice).
+#[test]
+fn frontier_sweep_is_bit_identical_across_all_batches() {
+    let m = build_gpt(&GptDims::uniform("sweep", 4000, 64, 6, 192, 4));
+    let c = Cluster::rtx_titan(8, 8.0);
+    let s = SearchConfig { granularities: vec![0, 2],
+                           ..Default::default() };
+    let p = Profiler::new(&m, &c, &s);
+    let dp1 = p.evaluate(&p.index_of(|d| d.is_pure_dp()), 1).peak_mem;
+    let limit = dp1 * 3.0;
+    let fr = Scheduler::new(&p, limit, 64).run().unwrap();
+    let fo = Scheduler::new(&p, limit, 64)
+        .with_engine(Engine::FoldedBb)
+        .run()
+        .unwrap();
+    assert!(fr.candidates.len() >= 2, "sweep must cover several batches");
+    assert_eq!(fr.candidates.len(), fo.candidates.len());
+    assert_eq!(fr.best, fo.best);
+    let stats = fr.frontier.as_ref().expect("frontier sweep records stats");
+    assert!(stats.points > 0 && stats.points <= stats.compositions);
+    for (a, b) in fr.candidates.iter().zip(&fo.candidates) {
+        assert_eq!(a.plan.batch, b.plan.batch);
+        assert_eq!(a.plan.choice, b.plan.choice, "b={}", a.plan.batch);
+        assert_eq!(a.plan.cost.time.to_bits(), b.plan.cost.time.to_bits());
+        assert_eq!(a.plan.cost.peak_mem.to_bits(),
+                   b.plan.cost.peak_mem.to_bits());
+        assert!(a.stats.nodes <= b.stats.nodes,
+                "frontier explored more at b={}", a.plan.batch);
+        // a fresh per-batch frontier build gives the same result as the
+        // sweep-shared one
+        let fresh = frontier::search(&p, limit, a.plan.batch).unwrap();
+        assert_eq!(fresh.0, a.plan.choice);
+        assert_eq!(fresh.1.time.to_bits(), a.plan.cost.time.to_bits());
+    }
+}
+
+/// The headline amortization claim on the deep uniform stack the fold
+/// test targets: after the one-time frontier build, every per-batch
+/// search of the sweep stays within a small node bound (the merge over
+/// precomputed Pareto sets), never exceeds the folded engine's work, and
+/// the sweep is bit-identical to the folded sweep at the hardest limits.
+#[test]
+fn per_batch_work_stays_small_on_deep_uniform_sweep() {
+    let m = build_gpt(&GptDims::uniform("deep", 5000, 128, 24, 256, 4));
+    let c = Cluster::rtx_titan(8, 8.0);
+    let s = SearchConfig {
+        granularities: vec![0],
+        paper_granularity: true,
+        ..Default::default()
+    };
+    let p = Profiler::new(&m, &c, &s);
+    let r = frontier::report(&p);
+    assert_eq!(r.too_wide, 0, "paper-granularity menus must prebuild");
+    assert!(r.points <= r.compositions);
+
+    let dp = p.evaluate(&p.index_of(|d| d.is_pure_dp()), 1).peak_mem;
+    let zdp = p.evaluate(&p.index_of(|d| d.is_pure_zdp()), 1).peak_mem;
+    for frac in [0.2, 0.5, 0.8] {
+        let limit = zdp + (dp - zdp) * frac;
+        let fr = Scheduler::new(&p, limit, 8).run().unwrap();
+        let fo = Scheduler::new(&p, limit, 8)
+            .with_engine(Engine::FoldedBb)
+            .run()
+            .unwrap();
+        assert_eq!(fr.candidates.len(), fo.candidates.len());
+        for (a, b) in fr.candidates.iter().zip(&fo.candidates) {
+            assert_eq!(a.plan.choice, b.plan.choice,
+                       "frac {frac} b={}", a.plan.batch);
+            assert_eq!(a.plan.cost.time.to_bits(),
+                       b.plan.cost.time.to_bits());
+            assert!(a.stats.complete, "frontier search must finish");
+            assert!(a.stats.nodes <= b.stats.nodes);
+            // per-batch work after the build: a merge over small Pareto
+            // sets, orders of magnitude under the 2^50 per-op space
+            assert!(a.stats.nodes <= 20_000,
+                    "per-batch frontier work blew up: {} nodes at b={}",
+                    a.stats.nodes, a.plan.batch);
+        }
+    }
+}

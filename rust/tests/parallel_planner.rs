@@ -12,7 +12,8 @@
 use osdp::config::{Cluster, SearchConfig};
 use osdp::cost::Profiler;
 use osdp::model::{GptDims, build_gpt};
-use osdp::planner::{ParallelConfig, exhaustive_search, parallel_search};
+use osdp::planner::{Engine, ParallelConfig, exhaustive_search,
+                    parallel_search};
 use osdp::util::prop;
 use osdp::util::rng::Rng;
 
@@ -56,7 +57,7 @@ fn cfg(threads: usize, split_depth: usize) -> ParallelConfig {
         threads,
         split_depth,
         node_budget: u64::MAX,
-        fold: true,
+        engine: Engine::FoldedBb,
     }
 }
 
