@@ -4,12 +4,16 @@
 CARGO ?= cargo
 PY ?= python3
 
-.PHONY: ci build test fmt clippy bench-smoke python-test artifacts
+.PHONY: ci build examples test fmt clippy bench-smoke python-test artifacts
 
-ci: build test fmt clippy bench-smoke python-test
+ci: build examples test fmt clippy bench-smoke python-test
 
 build:
 	$(CARGO) build --release
+
+# CI builds these too: examples are documentation that must keep compiling.
+examples:
+	$(CARGO) build --release --examples
 
 test:
 	$(CARGO) test -q

@@ -42,6 +42,7 @@ fn main() {
         granularities: vec![0, 2, 4, 8],
         checkpointing: false,
         paper_granularity: true,
+        ..Default::default()
     };
     let profiler = Profiler::new(&entry.model, &cluster, &search);
     let choice = profiler.index_of(|d| d.is_pure_zdp());

@@ -20,6 +20,7 @@ fn main() {
             granularities: vec![0, 4],
             checkpointing: false,
             paper_granularity: true,
+            ..Default::default()
         };
         let mut t = Table::new(vec![
             "setting", "batch", "DP ops", "ZDP ops", "mixed", "split%",

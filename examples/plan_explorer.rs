@@ -22,6 +22,7 @@ fn main() {
         granularities: vec![0, 4, 8],
         checkpointing: false,
         paper_granularity: true,
+        ..Default::default()
     };
     let profiler = Profiler::new(&model, &cluster, &search);
     let b = 4;

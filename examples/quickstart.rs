@@ -34,6 +34,7 @@ fn main() {
         granularities: vec![0, 4],
         checkpointing: false,
         paper_granularity: false, // plan at fine granularity
+        ..Default::default()
     };
 
     // -- 3. OSDP: profile, search, schedule

@@ -9,7 +9,8 @@
 pub mod hierarchical;
 pub mod ring;
 
-pub use hierarchical::{hier_all_gather, hier_all_reduce};
+pub use hierarchical::{hier_all_gather, hier_all_reduce, node_all_gather,
+                       node_grad_sync};
 pub use ring::{all_gather, all_reduce, broadcast, reduce_scatter};
 
 use crate::fabric::Endpoint;
@@ -35,6 +36,32 @@ pub fn ring_model_seconds(k: f64, bytes: f64, n: usize, alpha: f64,
     }
     let nf = n as f64;
     k * (nf - 1.0) * (alpha + bytes * beta / nf)
+}
+
+/// Analytic seconds for the two-phase [`hierarchical::hier_all_gather`]
+/// of `bytes` total payload over a uniform `(n, devices_per_node)`
+/// layout: the intra phase forwards per-rank chunks around the node ring,
+/// the inter phase exchanges whole node spans among same-local peers.
+pub fn hier_gather_model_seconds(bytes: f64, n: usize, dpn: usize,
+                                 alpha_intra: f64, beta_intra: f64,
+                                 alpha_inter: f64, beta_inter: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    if dpn == 0 || n == dpn || n % dpn != 0 {
+        // flat-ring fallback on the bottleneck link
+        let (a, b) = if n > dpn {
+            (alpha_inter, beta_inter)
+        } else {
+            (alpha_intra, beta_intra)
+        };
+        return ring_model_seconds(1.0, bytes, n, a, b);
+    }
+    let nodes = (n / dpn) as f64;
+    let intra = (dpn as f64 - 1.0)
+        * (alpha_intra + (bytes / n as f64) * beta_intra);
+    let inter = (nodes - 1.0) * (alpha_inter + (bytes / nodes) * beta_inter);
+    intra + inter
 }
 
 /// Helper trait so collectives can be written once over an [`Endpoint`].

@@ -76,6 +76,14 @@ impl Cluster {
         self.n_devices.div_ceil(self.devices_per_node)
     }
 
+    /// Effective size of one node's device group — `devices_per_node`
+    /// clamped to the cluster (a "node" never exceeds the machine). The
+    /// single definition every node-scoped quantity derives its divisor
+    /// from (cost, memory, sim).
+    pub fn node_group_size(&self) -> usize {
+        self.devices_per_node.min(self.n_devices)
+    }
+
     /// Whether a collective over all N devices crosses a node boundary.
     pub fn crosses_nodes(&self) -> bool {
         self.n_devices > self.devices_per_node
@@ -97,6 +105,20 @@ impl Cluster {
         }
         if self.devices_per_node == 0 {
             return Err("devices_per_node must be > 0".into());
+        }
+        // Non-uniform node layouts (a trailing partial node) would make
+        // the hierarchical collectives silently fall back to the flat
+        // ring and desynchronize the cost model from the fabric — reject
+        // them up front rather than mis-plan quietly.
+        if self.n_devices > self.devices_per_node
+            && self.n_devices % self.devices_per_node != 0
+        {
+            return Err(format!(
+                "non-uniform node layout: {} devices cannot be split into \
+                 equal nodes of {} (hierarchical schedules and node-scoped \
+                 sharding require uniform nodes)",
+                self.n_devices, self.devices_per_node
+            ));
         }
         if self.mem_limit <= 0.0 {
             return Err("mem_limit must be > 0".into());
@@ -131,6 +153,11 @@ pub struct SearchConfig {
     /// Plan on the paper's coarse 2-ops/layer granularity instead of the
     /// fine-grained graph.
     pub paper_granularity: bool,
+    /// Offer node-local sharding scopes (MiCS/HSDP-style) alongside the
+    /// paper's global scope on clusters that cross node boundaries; menus
+    /// grow by at most 2× per operator. Off restricts the search to the
+    /// paper's `{DP, ZDP-over-N}` space.
+    pub hybrid_scopes: bool,
 }
 
 impl Default for SearchConfig {
@@ -140,6 +167,7 @@ impl Default for SearchConfig {
             granularities: vec![0, 2, 4, 8, 16],
             checkpointing: false,
             paper_granularity: false,
+            hybrid_scopes: true,
         }
     }
 }
@@ -214,6 +242,11 @@ impl RunConfig {
         {
             search.paper_granularity = p;
         }
+        if let Some(h) = doc.get("search", "hybrid_scopes")
+            .and_then(Value::as_bool)
+        {
+            search.hybrid_scopes = h;
+        }
         Ok(RunConfig { cluster, search })
     }
 
@@ -286,5 +319,43 @@ mod tests {
     fn invalid_cluster_rejected() {
         let c = Cluster { n_devices: 0, ..Cluster::rtx_titan(8, 8.0) };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn non_uniform_node_layout_rejected() {
+        // 10 devices over nodes of 4 leaves a partial node: the
+        // hierarchical schedules would silently fall back — reject.
+        let c = Cluster {
+            n_devices: 10,
+            devices_per_node: 4,
+            ..Cluster::rtx_titan(8, 8.0)
+        };
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("non-uniform"), "{err}");
+        // uniform multi-node and single-node layouts stay valid, and so
+        // does devices_per_node exceeding n_devices (one partial node =
+        // one node)
+        for (n, dpn) in [(16usize, 8usize), (8, 8), (4, 8), (12, 4)] {
+            let ok = Cluster {
+                n_devices: n,
+                devices_per_node: dpn,
+                ..Cluster::rtx_titan(8, 8.0)
+            };
+            assert!(ok.validate().is_ok(), "n={n} dpn={dpn}");
+        }
+        // ...and the config loader surfaces the validation error
+        assert!(RunConfig::from_str(
+            "[cluster]\nn_devices = 10\ndevices_per_node = 4"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn hybrid_scopes_knob_parses_and_defaults_on() {
+        let def = RunConfig::from_str("").unwrap();
+        assert!(def.search.hybrid_scopes, "scopes default on");
+        let off = RunConfig::from_str("[search]\nhybrid_scopes = false")
+            .unwrap();
+        assert!(!off.search.hybrid_scopes);
     }
 }

@@ -16,8 +16,15 @@
 //! *transient* part (peaks one op at a time); the device peak is
 //! `Σ persistent + max transient`, which the search engine tracks
 //! incrementally.
+//!
+//! The sharding [`Scope`] sets the divisor of the ZDP share: states spread
+//! over the whole cluster (`/N`, the paper's formula) or over the
+//! intra-node group only (`/devices_per_node`, replicated across nodes) —
+//! less memory relief, but the collectives stay on the fast link (see
+//! `cost::time`).
 
 use super::Decision;
+use crate::config::Cluster;
 use crate::model::Operator;
 
 /// Per-operator memory breakdown on one device.
@@ -53,15 +60,18 @@ impl MemoryCost {
 }
 
 /// Memory cost of operator `op` under decision `d` with per-device batch
-/// size `b` on an `n`-way cluster.
-pub fn op_memory(op: &Operator, d: Decision, b: usize, n: usize,
+/// size `b` on `cluster`.
+pub fn op_memory(op: &Operator, d: Decision, b: usize, cluster: &Cluster,
                  checkpointing: bool) -> MemoryCost {
-    debug_assert!(n >= 1);
+    debug_assert!(cluster.n_devices >= 1);
     debug_assert!(d.zdp_slices <= d.slices());
     let zdp_frac = d.zdp_fraction();
     let dp_frac = 1.0 - zdp_frac;
-    // ZDP shards states 1/N; DP replicates them.
-    let states = op.state_bytes() * (dp_frac + zdp_frac / n as f64);
+    // ZDP shards states over the scope's device group (the whole cluster
+    // for the paper's global ZDP, one node's worth for node scope); DP
+    // replicates them.
+    let group = d.scope.group_size(cluster) as f64;
+    let states = op.state_bytes() * (dp_frac + zdp_frac / group);
 
     let act_per_sample = if checkpointing {
         op.ckpt_act_bytes_per_sample
@@ -88,6 +98,7 @@ pub fn op_memory(op: &Operator, d: Decision, b: usize, n: usize,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cost::Scope;
     use crate::model::{GptDims, build_gpt};
 
     fn mm_op() -> Operator {
@@ -95,21 +106,45 @@ mod tests {
         m.ops.iter().find(|o| o.name == "l0.mlp_up").unwrap().clone()
     }
 
+    fn c8() -> Cluster {
+        Cluster::rtx_titan(8, 8.0)
+    }
+
     #[test]
     fn zdp_shards_states_to_one_nth() {
         let op = mm_op();
-        let dp = op_memory(&op, Decision::DP, 1, 8, false);
-        let zdp = op_memory(&op, Decision::ZDP, 1, 8, false);
+        let dp = op_memory(&op, Decision::DP, 1, &c8(), false);
+        let zdp = op_memory(&op, Decision::ZDP, 1, &c8(), false);
         assert!((zdp.states - dp.states / 8.0).abs() < 1e-6);
         // activations are mode-independent
         assert_eq!(zdp.activations, dp.activations);
     }
 
     #[test]
+    fn node_scope_shards_states_by_group_size() {
+        // two_server_a100: N=16 but 8 devices/node — node scope divides by
+        // 8 (replicated across the two nodes), global by 16.
+        let op = mm_op();
+        let c = Cluster::two_server_a100(16.0);
+        let dp = op_memory(&op, Decision::DP, 1, &c, false);
+        let global = op_memory(&op, Decision::ZDP, 1, &c, false);
+        let node = op_memory(&op, Decision::ZDP_NODE, 1, &c, false);
+        assert!((global.states - dp.states / 16.0).abs() < 1e-6);
+        assert!((node.states - dp.states / 8.0).abs() < 1e-6);
+        // the gather transient materializes the full slice either way
+        assert_eq!(global.gather, node.gather);
+        // single node: both scopes shard identically
+        let single = c8();
+        let g1 = op_memory(&op, Decision::ZDP, 1, &single, false);
+        let n1 = op_memory(&op, Decision::ZDP_NODE, 1, &single, false);
+        assert_eq!(g1.states.to_bits(), n1.states.to_bits());
+    }
+
+    #[test]
     fn dp_has_no_gather_transient() {
         let op = mm_op();
-        assert_eq!(op_memory(&op, Decision::DP, 4, 8, false).gather, 0.0);
-        assert!(op_memory(&op, Decision::ZDP, 4, 8, false).gather > 0.0);
+        assert_eq!(op_memory(&op, Decision::DP, 4, &c8(), false).gather, 0.0);
+        assert!(op_memory(&op, Decision::ZDP, 4, &c8(), false).gather > 0.0);
     }
 
     #[test]
@@ -118,7 +153,9 @@ mod tests {
         let op = mm_op();
         let peaks: Vec<f64> = [0usize, 2, 4, 8, 16]
             .iter()
-            .map(|&g| op_memory(&op, Decision::zdp_at(g), 1, 8, false).gather)
+            .map(|&g| {
+                op_memory(&op, Decision::zdp_at(g), 1, &c8(), false).gather
+            })
             .collect();
         assert!((peaks[1] - peaks[0] / 2.0).abs() < 1e-6, "g=2 halves");
         for w in peaks.windows(2) {
@@ -129,14 +166,14 @@ mod tests {
     #[test]
     fn mixed_slices_interpolate_states() {
         let op = mm_op();
-        let n = 8;
-        let dp = op_memory(&op, Decision::DP, 1, n, false).states;
-        let zdp = op_memory(&op, Decision::ZDP, 1, n, false).states;
+        let c = c8();
+        let dp = op_memory(&op, Decision::DP, 1, &c, false).states;
+        let zdp = op_memory(&op, Decision::ZDP, 1, &c, false).states;
         let half = op_memory(
             &op,
-            Decision { granularity: 4, zdp_slices: 2 },
+            Decision { granularity: 4, zdp_slices: 2, scope: Scope::Global },
             1,
-            n,
+            &c,
             false,
         )
         .states;
@@ -146,16 +183,16 @@ mod tests {
     #[test]
     fn activations_scale_with_batch() {
         let op = mm_op();
-        let m1 = op_memory(&op, Decision::DP, 1, 8, false).activations;
-        let m8 = op_memory(&op, Decision::DP, 8, 8, false).activations;
+        let m1 = op_memory(&op, Decision::DP, 1, &c8(), false).activations;
+        let m8 = op_memory(&op, Decision::DP, 8, &c8(), false).activations;
         assert!((m8 - 8.0 * m1).abs() < 1e-6);
     }
 
     #[test]
     fn checkpointing_frees_interior_activations() {
         let op = mm_op(); // interior matmul: ckpt residency 0
-        let off = op_memory(&op, Decision::DP, 4, 8, false).activations;
-        let on = op_memory(&op, Decision::DP, 4, 8, true).activations;
+        let off = op_memory(&op, Decision::DP, 4, &c8(), false).activations;
+        let on = op_memory(&op, Decision::DP, 4, &c8(), true).activations;
         assert!(off > 0.0);
         assert_eq!(on, 0.0);
     }
@@ -164,10 +201,11 @@ mod tests {
     fn full_model_dp_memory_matches_closed_form() {
         let m = build_gpt(&GptDims::uniform("t", 1000, 64, 2, 128, 4));
         let b = 4;
+        let c = c8();
         let total: f64 = m
             .ops
             .iter()
-            .map(|o| op_memory(o, Decision::DP, b, 8, false).persistent())
+            .map(|o| op_memory(o, Decision::DP, b, &c, false).persistent())
             .sum::<f64>();
         let expect = m.state_bytes() + b as f64 * m.act_bytes_per_sample();
         assert!((total - expect).abs() / expect < 1e-9);

@@ -12,10 +12,47 @@ pub use menu::{MenuStats, pareto_filter};
 pub use profiler::{DecisionCost, OpCostTable, PlanCost, Profiler};
 pub use time::{comm_rounds, op_comm_time, op_compute_time};
 
+/// Where in the device hierarchy an operator's ZDP slices shard their
+/// model states. The paper's formulation implicitly uses [`Scope::Global`]
+/// (ZeRO over the whole cluster); [`Scope::Node`] is the MiCS/HSDP-style
+/// hybrid: states sharded over the intra-node group and replicated across
+/// nodes, so the parameter gathers ride the fast intra-node link and only
+/// the gradient reduce crosses nodes — a second Pareto point the planner
+/// can trade against the global scope's smaller state footprint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Scope {
+    /// Shard over all `N` devices (the paper's ZDP; collectives pay the
+    /// cluster's bottleneck ring link).
+    #[default]
+    Global,
+    /// Shard over the `devices_per_node` intra-node group, replicated
+    /// across nodes: gathers stay on the intra link, gradients pay one
+    /// hierarchical cross-node reduce of the 1/`devices_per_node` shard.
+    Node,
+}
+
+impl Scope {
+    /// Number of devices the sharded states spread over.
+    pub fn group_size(&self, cluster: &crate::config::Cluster) -> usize {
+        match self {
+            Scope::Global => cluster.n_devices,
+            Scope::Node => cluster.node_group_size(),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scope::Global => "global",
+            Scope::Node => "node",
+        }
+    }
+}
+
 /// Per-operator parallel mode decision. The paper's base space is
-/// `{DP, ZDP}`; operator splitting (§3.3) enlarges it to per-slice choices:
-/// an op split into `granularity` slices can hold `zdp_slices` of them in
-/// ZDP mode and the rest in DP mode.
+/// `{DP, ZDP}`; operator splitting (§3.3) enlarges it to per-slice choices
+/// (an op split into `granularity` slices can hold `zdp_slices` of them in
+/// ZDP mode and the rest in DP mode), and the sharding [`Scope`] adds the
+/// hierarchy dimension: *where* the ZDP slices' states are sharded.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Decision {
     /// Slice granularity `g` (0 = no splitting; the paper's figures use 0
@@ -24,13 +61,22 @@ pub struct Decision {
     /// Number of slices trained in ZDP mode (sharded states);
     /// `0 ≤ zdp_slices ≤ max(granularity, 1)`.
     pub zdp_slices: usize,
+    /// Device group the ZDP slices shard over (irrelevant — and kept
+    /// [`Scope::Global`] — when `zdp_slices == 0`: pure DP shards nothing).
+    pub scope: Scope,
 }
 
 impl Decision {
     /// Plain DP (no sharding, no splitting).
-    pub const DP: Decision = Decision { granularity: 0, zdp_slices: 0 };
-    /// Plain ZDP (fully sharded, no splitting).
-    pub const ZDP: Decision = Decision { granularity: 0, zdp_slices: 1 };
+    pub const DP: Decision =
+        Decision { granularity: 0, zdp_slices: 0, scope: Scope::Global };
+    /// Plain ZDP (fully sharded over the whole cluster, no splitting).
+    pub const ZDP: Decision =
+        Decision { granularity: 0, zdp_slices: 1, scope: Scope::Global };
+    /// Node-scoped ZDP (fully sharded within each node, replicated across
+    /// nodes — MiCS/HSDP-style, no splitting).
+    pub const ZDP_NODE: Decision =
+        Decision { granularity: 0, zdp_slices: 1, scope: Scope::Node };
 
     /// Effective slice count (granularity 0 behaves as a single slice).
     pub fn slices(&self) -> usize {
@@ -50,24 +96,46 @@ impl Decision {
         self.zdp_slices == self.slices()
     }
 
-    /// Fully-ZDP decision at a given granularity.
+    /// Fully-ZDP decision at a given granularity (global scope).
     pub fn zdp_at(granularity: usize) -> Decision {
-        Decision { granularity, zdp_slices: granularity.max(1) }
+        Decision {
+            granularity,
+            zdp_slices: granularity.max(1),
+            scope: Scope::Global,
+        }
     }
 
     /// Fully-DP decision at a given granularity.
     pub fn dp_at(granularity: usize) -> Decision {
-        Decision { granularity, zdp_slices: 0 }
+        Decision { granularity, zdp_slices: 0, scope: Scope::Global }
     }
 
+    /// The same decision with its sharding scope replaced.
+    pub fn with_scope(self, scope: Scope) -> Decision {
+        Decision { scope, ..self }
+    }
+
+    /// Whether any state is sharded over the intra-node group only.
+    pub fn is_node_scoped(&self) -> bool {
+        self.scope == Scope::Node && self.zdp_slices > 0
+    }
+
+    /// Plan-label grammar: `DP`, `ZDP`, `ZDP/g4`, `MIX1:3/g4`, with an
+    /// `@node` suffix when the sharded slices are node-scoped (e.g.
+    /// `ZDP@node`, `MIX1:3/g4@node`).
     pub fn label(&self) -> String {
-        match (self.is_pure_dp(), self.is_pure_zdp()) {
-            (true, _) if self.granularity <= 1 => "DP".into(),
-            (_, true) if self.granularity <= 1 => "ZDP".into(),
+        let base = match (self.is_pure_dp(), self.is_pure_zdp()) {
+            (true, _) if self.granularity <= 1 => "DP".to_string(),
+            (_, true) if self.granularity <= 1 => "ZDP".to_string(),
             (true, _) => format!("DP/g{}", self.granularity),
             (_, true) => format!("ZDP/g{}", self.granularity),
             _ => format!("MIX{}:{}/g{}", self.zdp_slices,
                          self.slices() - self.zdp_slices, self.granularity),
+        };
+        if self.is_node_scoped() {
+            format!("{base}@node")
+        } else {
+            base
         }
     }
 }
@@ -80,7 +148,8 @@ mod tests {
     fn decision_fractions() {
         assert_eq!(Decision::DP.zdp_fraction(), 0.0);
         assert_eq!(Decision::ZDP.zdp_fraction(), 1.0);
-        let mixed = Decision { granularity: 4, zdp_slices: 1 };
+        let mixed = Decision { granularity: 4, zdp_slices: 1,
+                               scope: Scope::Global };
         assert_eq!(mixed.zdp_fraction(), 0.25);
         assert!(!mixed.is_pure_dp() && !mixed.is_pure_zdp());
     }
@@ -91,8 +160,30 @@ mod tests {
         assert_eq!(Decision::ZDP.label(), "ZDP");
         assert_eq!(Decision::zdp_at(4).label(), "ZDP/g4");
         assert_eq!(
-            Decision { granularity: 4, zdp_slices: 1 }.label(),
+            Decision { granularity: 4, zdp_slices: 1, scope: Scope::Global }
+                .label(),
             "MIX1:3/g4"
         );
+        assert_eq!(Decision::ZDP_NODE.label(), "ZDP@node");
+        assert_eq!(Decision::zdp_at(4).with_scope(Scope::Node).label(),
+                   "ZDP/g4@node");
+        assert_eq!(
+            Decision { granularity: 4, zdp_slices: 1, scope: Scope::Node }
+                .label(),
+            "MIX1:3/g4@node"
+        );
+        // pure DP shards nothing: the scope never shows in its label
+        assert_eq!(Decision::DP.with_scope(Scope::Node).label(), "DP");
+        assert!(!Decision::DP.with_scope(Scope::Node).is_node_scoped());
+    }
+
+    #[test]
+    fn scope_group_sizes() {
+        let c = crate::config::Cluster::two_server_a100(16.0);
+        assert_eq!(Scope::Global.group_size(&c), 16);
+        assert_eq!(Scope::Node.group_size(&c), 8);
+        let single = crate::config::Cluster::rtx_titan(8, 8.0);
+        assert_eq!(Scope::Node.group_size(&single), 8);
+        assert_eq!(Scope::default(), Scope::Global);
     }
 }

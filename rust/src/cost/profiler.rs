@@ -13,7 +13,7 @@ use super::memory::op_memory;
 use super::menu::{self, MenuStats, TableKey};
 use super::time::{batch_efficiency, op_comm_time, snap_time,
                   SPLIT_LAUNCH_OVERHEAD};
-use super::Decision;
+use super::{Decision, Scope};
 use crate::config::{Cluster, SearchConfig};
 use crate::model::ModelDesc;
 
@@ -148,7 +148,18 @@ impl Profiler {
             model
         };
         let ck = search.checkpointing;
-        let n = cluster.n_devices;
+        // Sharding scopes on offer: the global (paper) scope always; the
+        // node-local (MiCS/HSDP-style) scope only when the cluster actually
+        // crosses a node boundary — on a single node both scopes price
+        // identically, so enumerating Node would only duplicate menu
+        // entries for the dominance filter to drop. Each op's menu grows by
+        // at most 2× (every zdp_slices > 0 candidate forks per scope).
+        let scopes: &[Scope] =
+            if cluster.crosses_nodes() && search.hybrid_scopes {
+                &[Scope::Global, Scope::Node]
+            } else {
+                &[Scope::Global]
+            };
         let (tables, menu_stats): (Vec<_>, Vec<_>) = model
             .ops
             .iter()
@@ -172,13 +183,23 @@ impl Profiler {
                         }
                         let slices = g.max(1);
                         for z in 0..=slices {
-                            cands.push(Decision { granularity: g,
-                                                  zdp_slices: z });
+                            for &scope in scopes {
+                                // scope only governs where sharded states
+                                // live; pure DP has none to place
+                                if z == 0 && scope != Scope::Global {
+                                    continue;
+                                }
+                                cands.push(Decision { granularity: g,
+                                                      zdp_slices: z,
+                                                      scope });
+                            }
                         }
                     }
                     if cands.is_empty() {
                         cands.push(Decision::DP);
-                        cands.push(Decision::ZDP);
+                        for &scope in scopes {
+                            cands.push(Decision::ZDP.with_scope(scope));
+                        }
                     }
                 }
                 // Times snap to the 2⁻³⁰ s grid and memory to whole bytes:
@@ -190,7 +211,7 @@ impl Profiler {
                 let raw: Vec<DecisionCost> = cands
                     .into_iter()
                     .map(|d| {
-                        let mem = op_memory(op, d, 1, n, ck);
+                        let mem = op_memory(op, d, 1, cluster, ck);
                         DecisionCost {
                             decision: d,
                             comm: snap_time(op_comm_time(op, d, cluster, ck)),
@@ -220,7 +241,7 @@ impl Profiler {
                     flops *= 4.0 / 3.0; // recompute
                 }
                 let gamma = flops / cluster.flops;
-                let mem1 = op_memory(op, Decision::DP, 1, n, ck);
+                let mem1 = op_memory(op, Decision::DP, 1, cluster, ck);
                 let table = OpCostTable::new(
                     op.name.clone(),
                     options,
@@ -419,6 +440,60 @@ mod tests {
         let small = profiler(vec![0]).log10_plan_space();
         let big = profiler(vec![0, 2, 4, 8]).log10_plan_space();
         assert!(big > small);
+    }
+
+    fn two_server_profiler(hybrid_scopes: bool) -> Profiler {
+        let m = build_gpt(&GptDims::uniform("t", 1000, 64, 2, 256, 4));
+        let c = Cluster::two_server_a100(16.0);
+        let s = SearchConfig { granularities: vec![0], hybrid_scopes,
+                               ..Default::default() };
+        Profiler::new(&m, &c, &s)
+    }
+
+    #[test]
+    fn node_scope_candidates_only_on_multi_node_clusters() {
+        // Single node: no node-scoped entries even with the knob on.
+        let single = profiler(vec![0]);
+        for t in &single.tables {
+            assert!(t.options.iter().all(|o| !o.decision.is_node_scoped()),
+                    "{}: node scope on a single-node cluster", t.name);
+        }
+        // Two servers: every shardable op's menu keeps a node-scoped entry
+        // (incomparable with global ZDP: faster, more states) and the menu
+        // grows by at most 2x per op.
+        let scoped = two_server_profiler(true);
+        let plain = two_server_profiler(false);
+        assert_eq!(scoped.n_ops(), plain.n_ops());
+        let mut any_node = false;
+        for (ts, tp) in scoped.tables.iter().zip(&plain.tables) {
+            assert!(ts.options.len() <= 2 * tp.options.len(),
+                    "{}: menu more than doubled", ts.name);
+            let node =
+                ts.options.iter().any(|o| o.decision.is_node_scoped());
+            any_node |= node;
+            // scope-free menus never contain node-scoped entries
+            assert!(tp.options.iter().all(|o| !o.decision.is_node_scoped()));
+        }
+        assert!(any_node, "two-server menus must offer node scope");
+    }
+
+    #[test]
+    fn node_scope_is_a_distinct_pareto_point() {
+        // On the two-server cluster node-ZDP must survive the dominance
+        // filter alongside global ZDP: strictly faster, strictly more
+        // states.
+        let p = two_server_profiler(true);
+        let c = Cluster::two_server_a100(16.0);
+        let t = p.tables.iter().find(|t| t.name.contains("mlp_up")).unwrap();
+        let global = t.options.iter()
+            .find(|o| o.decision.is_pure_zdp() && !o.decision.is_node_scoped())
+            .expect("global ZDP kept");
+        let node = t.options.iter()
+            .find(|o| o.decision.is_pure_zdp() && o.decision.is_node_scoped())
+            .expect("node ZDP kept");
+        assert!(node.time_fixed() < global.time_fixed());
+        assert!(node.states > global.states);
+        assert!(c.crosses_nodes());
     }
 
     #[test]

@@ -11,8 +11,21 @@
 //! collectives of `S_i/g` bytes: the bandwidth term is unchanged while the
 //! latency term grows to `g·α` — exactly the small-op slowdown Figure 7
 //! shows. Mixed per-slice decisions charge each slice its own `k`.
+//!
+//! The sharding [`Scope`] picks which ring the ZDP rounds ride:
+//!
+//! * [`Scope::Global`] — all `k` rounds on the N-device ring at the
+//!   cluster's bottleneck `(α, β)` (`Cluster::ring_link`), the paper's
+//!   formula verbatim.
+//! * [`Scope::Node`] — all `k` rounds on the `devices_per_node`-device
+//!   intra-node ring at `(α_intra, β_intra)`, plus one hierarchical
+//!   cross-node reduce of the 1/`devices_per_node` gradient shard
+//!   ([`inter_node_grad_time`]) so the gradient is still averaged over all
+//!   N data-parallel replicas. DP slices are scope-independent: nothing is
+//!   sharded, so their gradient all-reduce keeps the paper's flat-ring
+//!   charge.
 
-use super::Decision;
+use super::{Decision, Scope};
 use crate::config::Cluster;
 use crate::model::Operator;
 
@@ -62,24 +75,71 @@ pub fn comm_rounds(zdp: bool, checkpointing: bool) -> f64 {
     }
 }
 
+/// The `(α, β, ring size)` a scope's collectives run over: the bottleneck
+/// link of the whole N-device ring for [`Scope::Global`], the intra-node
+/// link over the `devices_per_node`-device subgroup for [`Scope::Node`].
+pub fn scope_ring(cluster: &Cluster, scope: Scope) -> (f64, f64, usize) {
+    match scope {
+        Scope::Global => {
+            let (alpha, beta) = cluster.ring_link();
+            (alpha, beta, cluster.n_devices)
+        }
+        Scope::Node => (
+            cluster.alpha_intra,
+            cluster.beta_intra,
+            cluster.node_group_size(),
+        ),
+    }
+}
+
+/// Hierarchical cross-node gradient term of one node-scoped ZDP slice of
+/// `slice_bytes`: after the intra-node reduce-scatter each device holds a
+/// `slice_bytes / devices_per_node` shard summed only within its node;
+/// same-local-rank peers all-reduce it across the `n_nodes` ring (2 rounds
+/// on the inter-node link). Zero on single-node clusters, where node scope
+/// degenerates to global.
+pub fn inter_node_grad_time(slice_bytes: f64, cluster: &Cluster) -> f64 {
+    let nodes = cluster.n_nodes();
+    if nodes <= 1 {
+        return 0.0;
+    }
+    let group = cluster.node_group_size() as f64;
+    let shard = slice_bytes / group;
+    2.0 * (nodes as f64 - 1.0)
+        * (cluster.alpha_inter + shard * cluster.beta_inter / nodes as f64)
+}
+
 /// Communication seconds for operator `op` under decision `d`.
 pub fn op_comm_time(op: &Operator, d: Decision, cluster: &Cluster,
                     checkpointing: bool) -> f64 {
     if !op.shardable() {
         return 0.0;
     }
-    let n = cluster.n_devices as f64;
     if cluster.n_devices == 1 {
         return 0.0; // single device: no collectives at all
     }
-    let (alpha, beta) = cluster.ring_link();
     let g = d.slices() as f64;
     let slice_bytes = op.param_bytes() / g;
-    let per_slice = |k: f64| (n - 1.0) * k * (alpha + slice_bytes * beta / n);
     let zdp = d.zdp_slices as f64;
     let dp = g - zdp;
-    dp * per_slice(comm_rounds(false, checkpointing))
-        + zdp * per_slice(comm_rounds(true, checkpointing))
+    // DP slices: nothing sharded, gradient all-reduce on the flat N-ring
+    // (scope-independent).
+    let n = cluster.n_devices as f64;
+    let (alpha, beta) = cluster.ring_link();
+    let per_dp_slice = (n - 1.0)
+        * comm_rounds(false, checkpointing)
+        * (alpha + slice_bytes * beta / n);
+    // ZDP slices: every gather/reduce-scatter round rides the scope's
+    // ring; node scope adds the hierarchical cross-node shard reduce.
+    let (sa, sb, ring) = scope_ring(cluster, d.scope);
+    let rf = ring as f64;
+    let mut per_zdp_slice = (rf - 1.0)
+        * comm_rounds(true, checkpointing)
+        * (sa + slice_bytes * sb / rf);
+    if d.scope == Scope::Node {
+        per_zdp_slice += inter_node_grad_time(slice_bytes, cluster);
+    }
+    dp * per_dp_slice + zdp * per_zdp_slice
 }
 
 /// Computation seconds for operator `op` at per-device batch `b`:
@@ -216,9 +276,12 @@ mod tests {
         let g = 4;
         let all_dp = op_comm_time(&op, Decision::dp_at(g), &c, false);
         let all_zdp = op_comm_time(&op, Decision::zdp_at(g), &c, false);
-        let half =
-            op_comm_time(&op, Decision { granularity: g, zdp_slices: 2 }, &c,
-                         false);
+        let half = op_comm_time(
+            &op,
+            Decision { granularity: g, zdp_slices: 2, scope: Scope::Global },
+            &c,
+            false,
+        );
         assert!((half - (all_dp + all_zdp) / 2.0).abs() < 1e-12);
     }
 
@@ -231,5 +294,55 @@ mod tests {
         let t8 = op_comm_time(&op, Decision::DP, &c8, false);
         // crossing nodes switches β from NVLink to 12.5 GB/s: much slower
         assert!(t16 > 5.0 * t8, "t16={t16} t8={t8}");
+    }
+
+    #[test]
+    fn node_scope_matches_closed_form_on_two_server() {
+        let (op, _) = setup();
+        let c = Cluster::two_server_a100(16.0);
+        let t = op_comm_time(&op, Decision::ZDP_NODE, &c, false);
+        let s = op.param_bytes();
+        // 3 rounds on the 8-device intra ring + the hierarchical reduce of
+        // the S/8 shard across the 2-node ring (2 rounds)
+        let intra = 3.0 * 7.0 * (c.alpha_intra + s * c.beta_intra / 8.0);
+        let inter =
+            2.0 * 1.0 * (c.alpha_inter + (s / 8.0) * c.beta_inter / 2.0);
+        assert!((t - (intra + inter)).abs() < 1e-12 * (intra + inter),
+                "{t} vs {}", intra + inter);
+    }
+
+    #[test]
+    fn node_scope_beats_global_zdp_across_slow_inter_link() {
+        // The whole point of the scope dimension: on the Figure-6 topology
+        // the node-scoped gathers ride NVLink instead of pricing every
+        // round at the 12.5 GB/s bottleneck.
+        let (op, _) = setup();
+        let c = Cluster::two_server_a100(16.0);
+        let global = op_comm_time(&op, Decision::ZDP, &c, false);
+        let node = op_comm_time(&op, Decision::ZDP_NODE, &c, false);
+        assert!(node < global / 4.0, "node {node} vs global {global}");
+    }
+
+    #[test]
+    fn node_scope_degenerates_to_global_on_single_node() {
+        // One node: the intra ring spans all devices and there is no
+        // cross-node term, so both scopes price identically.
+        let (op, c) = setup(); // rtx_titan: devices_per_node == n_devices
+        let global = op_comm_time(&op, Decision::ZDP, &c, false);
+        let node = op_comm_time(&op, Decision::ZDP_NODE, &c, false);
+        assert_eq!(global.to_bits(), node.to_bits());
+        assert_eq!(inter_node_grad_time(1e9, &c), 0.0);
+    }
+
+    #[test]
+    fn scope_ring_picks_links() {
+        let c = Cluster::two_server_a100(16.0);
+        assert_eq!(scope_ring(&c, Scope::Global),
+                   (c.alpha_inter, c.beta_inter, 16));
+        assert_eq!(scope_ring(&c, Scope::Node),
+                   (c.alpha_intra, c.beta_intra, 8));
+        let single = Cluster::rtx_titan(4, 8.0);
+        assert_eq!(scope_ring(&single, Scope::Node),
+                   (single.alpha_intra, single.beta_intra, 4));
     }
 }

@@ -17,7 +17,7 @@ use crate::config::{Cluster, SearchConfig};
 use crate::cost::{Decision, Profiler, op_memory, op_comm_time, op_compute_time};
 use crate::metrics::FigureData;
 use crate::model::{GptDims, ModelDesc, build_gpt, zoo};
-use crate::parallel::{Strategy, hybrid_strategies, pure_strategies};
+use crate::parallel::{Osdp, Strategy, hybrid_strategies, pure_strategies};
 use crate::planner::Scheduler;
 use crate::sim;
 use crate::util::table::Table;
@@ -37,12 +37,14 @@ impl Quality {
                 granularities: vec![0, 4],
                 checkpointing: false,
                 paper_granularity: true,
+                ..Default::default()
             },
             Quality::Full => SearchConfig {
                 max_batch: 64,
                 granularities: vec![0, 2, 4, 8],
                 checkpointing: false,
                 paper_granularity: true,
+                ..Default::default()
             },
         }
     }
@@ -121,15 +123,50 @@ pub fn fig5(mem_gib: f64, q: Quality) -> FigureData {
 }
 
 /// Figure 6: 16 devices across two servers (A100-like, 100 Gb/s).
+///
+/// Pinned to the paper's `{DP, ZDP-over-N}` search space
+/// (`hybrid_scopes: false`) so the reproduction stays comparable to the
+/// published figure — node-local sharding would otherwise lift the OSDP
+/// rows far above anything the paper's formulation can express. The
+/// scope dimension's effect on this topology is its own figure,
+/// [`fig6_scopes`].
 pub fn fig6(mem_gib: f64, q: Quality) -> FigureData {
     let cluster = Cluster::two_server_a100(mem_gib);
+    let search = SearchConfig { hybrid_scopes: false, ..q.search() };
     end_to_end(
         &format!("Figure 6: end-to-end, 16 devices / 2 servers, \
                   {mem_gib:.0}G limit"),
         &cluster,
-        &q.search(),
+        &search,
         true,
     )
+}
+
+/// Scope ablation on the Figure-6 topology: OSDP planning over hybrid
+/// sharding scopes (global + node-local, the default) vs the same planner
+/// restricted to the paper's global-only space, with FSDP as the common
+/// baseline. The gap between the two OSDP rows is what the per-operator
+/// scope dimension buys on a bandwidth-asymmetric cluster.
+pub fn fig6_scopes(mem_gib: f64, q: Quality) -> FigureData {
+    let cluster = Cluster::two_server_a100(mem_gib);
+    let mut fig = FigureData::new(&format!(
+        "Figure 6b: hybrid sharding scopes, 16 devices / 2 servers, \
+         {mem_gib:.0}G limit"
+    ));
+    let scoped = q.search(); // hybrid_scopes defaults on
+    let global = SearchConfig { hybrid_scopes: false, ..scoped.clone() };
+    for entry in zoo() {
+        let mut hybrid = Osdp.estimate(&entry.model, &cluster, &scoped);
+        hybrid.strategy = "OSDP+scopes".into();
+        fig.push(entry.family.label(), &entry.setting, hybrid);
+        let mut flat = Osdp.estimate(&entry.model, &cluster, &global);
+        flat.strategy = "OSDP-global".into();
+        fig.push(entry.family.label(), &entry.setting, flat);
+        let fsdp = crate::parallel::Fsdp.estimate(&entry.model, &cluster,
+                                                  &scoped);
+        fig.push(entry.family.label(), &entry.setting, fsdp);
+    }
+    fig
 }
 
 /// Figure 7 rows: (hidden, granularity, peak memory MiB, time ms) for a
@@ -146,7 +183,7 @@ pub fn fig7() -> (Table, Vec<(usize, usize, f64, f64)>) {
         let op = &m.ops[0];
         for g in [0usize, 2, 4, 8, 16] {
             let d = Decision::zdp_at(g);
-            let mem = op_memory(op, d, b, c.n_devices, false);
+            let mem = op_memory(op, d, b, &c, false);
             let peak = mem.total();
             let time = op_comm_time(op, d, &c, false)
                 + op_compute_time(op, d, &c, b, false);
@@ -299,6 +336,34 @@ mod tests {
         assert!(small_times.last().unwrap() > small_times.first().unwrap());
     }
 
+    /// Mini fig6-scopes: hybrid-scope planning never loses to global-only
+    /// planning on the two-server topology (its plan space is a strict
+    /// superset) and strictly beats it under memory pressure.
+    #[test]
+    fn fig6_scope_ablation_shape() {
+        let m = crate::model::build_gpt(
+            &crate::model::GptDims::uniform("t", 4000, 128, 4, 512, 8));
+        let cluster = Cluster::two_server_a100(16.0);
+        // memory pressure: all-DP must not fit, so sharding is forced
+        let cluster = Cluster { mem_limit: m.state_bytes() * 0.6, ..cluster };
+        let scoped = SearchConfig {
+            max_batch: 8,
+            granularities: vec![0],
+            paper_granularity: true,
+            ..Default::default()
+        };
+        let global = SearchConfig { hybrid_scopes: false, ..scoped.clone() };
+        let hybrid = Osdp.estimate(&m, &cluster, &scoped);
+        let flat = Osdp.estimate(&m, &cluster, &global);
+        assert!(hybrid.feasible && flat.feasible);
+        assert!(hybrid.throughput >= flat.throughput * 0.999,
+                "hybrid {} must not lose to global {}",
+                hybrid.throughput, flat.throughput);
+        assert!(hybrid.throughput > flat.throughput * 1.05,
+                "node-local gathers should win clearly across the slow \
+                 link: {} vs {}", hybrid.throughput, flat.throughput);
+    }
+
     /// The marquee shape-check: a small Figure-5-style run where OSDP must
     /// dominate DP and FSDP and 3D+OSDP must dominate 3D.
     #[test]
@@ -310,6 +375,7 @@ mod tests {
             granularities: vec![0, 4],
             checkpointing: false,
             paper_granularity: true,
+            ..Default::default()
         };
         let mut fig = FigureData::new("mini-fig5");
         for entry in zoo().into_iter().take(2) {

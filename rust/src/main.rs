@@ -38,6 +38,16 @@ fn main() {
             print!("{}", fig.render());
             maybe_csv(&args, &fig.to_csv());
         }
+        "fig6-scopes" => {
+            let fig = figures::fig6_scopes(args.f64_or("mem", 16.0), quality);
+            print!("{}", fig.render());
+            if let Some(s) = speedup(&fig, "OSDP+scopes", "OSDP-global") {
+                println!("hybrid scopes vs global-only planning: max \
+                          {:.0}%, avg {:.0}%",
+                         (s.max - 1.0) * 100.0, (s.avg - 1.0) * 100.0);
+            }
+            maybe_csv(&args, &fig.to_csv());
+        }
         "fig7" => {
             let (t, _) = figures::fig7();
             println!("== Figure 7: operator splitting sweep (ZDP matmul, \
@@ -91,6 +101,13 @@ commands:
   gantt                              Figure 1 DP-vs-ZDP gantt chart
   plan    --setting 48L/1024H [--devices 8] [--mem 8] [--g 0,4]
           [--ckpt] [--batch-cap 64] [--fine]
+          [--cluster C]      rtx_titan (default, --devices sets N) or
+                             two_server_a100 (16 devices, 2x8 nodes)
+          [--no-scopes]      restrict sharding to the paper's global scope
+                             (multi-node menus otherwise also offer
+                             node-local ZDP: states sharded per node,
+                             gathers on the intra link — plan labels
+                             carry an @node suffix)
           [--threads N]      sweep/search worker threads (default: all cores)
           [--split-depth D]  parallel tree-split depth (default 3)
           [--batch B]        search one batch size with the parallel
@@ -104,6 +121,8 @@ commands:
                              search nodes on symmetric models)
   fig5    [--mem 8] [--full] [--csv out.csv]
   fig6    [--mem 16] [--full] [--csv out.csv]
+  fig6-scopes [--mem 16] [--full]    hybrid- vs global-scope planning on
+                                     the two-server topology
   fig7
   fig8    [--mem 8] [--full]
   fig9    [--mem 8] [--full]
@@ -134,13 +153,36 @@ fn plan(args: &Args) {
             }
             std::process::exit(2);
         });
-    let cluster = Cluster::rtx_titan(args.usize_or("devices", 8),
-                                     args.f64_or("mem", 8.0));
+    let cluster = match args.get_or("cluster", "rtx_titan") {
+        "rtx_titan" => Cluster::rtx_titan(args.usize_or("devices", 8),
+                                          args.f64_or("mem", 8.0)),
+        "two_server_a100" => {
+            // fixed 16-device / 2-node topology: reject a conflicting
+            // --devices instead of silently planning for other hardware
+            if args.usize_opt("devices").is_some() {
+                eprintln!("--cluster two_server_a100 is a fixed 2x8 \
+                           topology; drop --devices (or use --cluster \
+                           rtx_titan)");
+                std::process::exit(2);
+            }
+            Cluster::two_server_a100(args.f64_or("mem", 8.0))
+        }
+        other => {
+            eprintln!("--cluster must be 'rtx_titan' or 'two_server_a100', \
+                       got '{other}'");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = cluster.validate() {
+        eprintln!("invalid cluster: {e}");
+        std::process::exit(2);
+    }
     let search = SearchConfig {
         max_batch: args.usize_or("batch-cap", 64),
         granularities: args.usize_list_or("g", &[0, 4]),
         checkpointing: args.flag("ckpt"),
         paper_granularity: !args.flag("fine"),
+        hybrid_scopes: !args.flag("no-scopes"),
     };
     println!(
         "model {} ({}): {:.2}B params, {} ops ({} fine)",
@@ -183,6 +225,20 @@ fn plan(args: &Args) {
         threads,
         engine.label(),
     );
+    if cluster.crosses_nodes() {
+        println!(
+            "sharding scopes: {} ({} nodes x {} devices; node-local \
+             gathers ride the intra link, global pays the inter-node \
+             bottleneck)",
+            if search.hybrid_scopes {
+                "global + node-local"
+            } else {
+                "global only (--no-scopes)"
+            },
+            cluster.n_nodes(),
+            cluster.devices_per_node,
+        );
+    }
     let fr = osdp::planner::fold_report(&profiler);
     println!(
         "symmetry fold{}: {}",

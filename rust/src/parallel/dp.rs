@@ -58,7 +58,9 @@ impl Strategy for Ddp {
 }
 
 /// FairScale-FSDP / ZeRO-3: every operator sharded (3 comm rounds, 1/N
-/// states).
+/// states). Pinned to the *global* sharding scope — the baseline shards
+/// over all N devices like ZeRO does, even when the planner's menu also
+/// offers node-local scopes.
 pub struct Fsdp;
 
 impl Strategy for Fsdp {
@@ -69,7 +71,7 @@ impl Strategy for Fsdp {
     fn estimate(&self, model: &ModelDesc, cluster: &Cluster,
                 search: &SearchConfig) -> Estimate {
         fixed_plan_estimate("FSDP", model, cluster, search,
-                            |d| d.is_pure_zdp())
+                            |d| d.is_pure_zdp() && !d.is_node_scoped())
     }
 }
 

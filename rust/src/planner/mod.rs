@@ -217,17 +217,30 @@ impl ExecutionPlan {
         split as f64 / self.decisions.len().max(1) as f64
     }
 
+    /// Operators whose sharded slices live at node-local scope
+    /// (MiCS/HSDP-style: sharded within a node, replicated across nodes).
+    pub fn node_scoped_ops(&self) -> usize {
+        self.decisions.iter().filter(|d| d.is_node_scoped()).count()
+    }
+
     /// One-line human summary.
     pub fn describe(&self, profiler: &Profiler) -> String {
         let (dp, zdp, mixed) = self.mode_counts();
+        let node = self.node_scoped_ops();
+        let scopes = if node > 0 {
+            format!(", {node} @node")
+        } else {
+            String::new()
+        };
         format!(
-            "b={} time={} peak={} [{} DP, {} ZDP, {} mixed, {:.0}% split] over {} ops",
+            "b={} time={} peak={} [{} DP, {} ZDP, {} mixed{}, {:.0}% split] over {} ops",
             self.batch,
             crate::util::fmt_time(self.cost.time),
             crate::util::fmt_bytes(self.cost.peak_mem),
             dp,
             zdp,
             mixed,
+            scopes,
             self.split_fraction() * 100.0,
             profiler.n_ops(),
         )
@@ -273,7 +286,22 @@ mod tests {
         assert_eq!(dp, p.n_ops());
         assert_eq!(zdp + mixed, 0);
         assert_eq!(plan.split_fraction(), 0.0);
+        assert_eq!(plan.node_scoped_ops(), 0);
         assert!(plan.throughput(8) > 0.0);
         assert!(plan.describe(&p).contains("DP"));
+        assert!(!plan.describe(&p).contains("@node"));
+    }
+
+    #[test]
+    fn describe_reports_node_scoped_ops() {
+        let m = build_gpt(&GptDims::uniform("t", 1000, 64, 2, 128, 4));
+        let c = Cluster::two_server_a100(16.0);
+        let s = SearchConfig { granularities: vec![0],
+                               ..Default::default() };
+        let p = Profiler::new(&m, &c, &s);
+        let choice = p.index_of(|d| d.is_node_scoped());
+        let plan = ExecutionPlan::from_choice(&p, choice, 2);
+        assert!(plan.node_scoped_ops() > 0);
+        assert!(plan.describe(&p).contains("@node"));
     }
 }

@@ -30,7 +30,7 @@ pub fn render_gantt(tl: &Timeline, width: usize) -> String {
         let w = ((e.end - e.start) * scale).round().max(1.0) as usize;
         let ch = match e.phase {
             Phase::FwdGather | Phase::BwdGather => '▒',
-            Phase::GradSync => '█',
+            Phase::GradSync | Phase::GradSyncInter => '█',
             _ => '■',
         };
         let mut bar = String::new();

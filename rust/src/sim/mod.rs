@@ -14,22 +14,29 @@ pub mod gantt;
 
 pub use gantt::render_gantt;
 
-use crate::cost::Decision;
+use crate::cost::{Decision, Scope};
+use crate::cost::time::scope_ring;
 use crate::config::Cluster;
 use crate::model::{ModelDesc, Operator};
 
 /// Which stream an event occupies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
-    /// ZDP parameter all-gather before forward compute.
+    /// ZDP parameter all-gather before forward compute (rides the
+    /// decision's scope ring: the full cluster for global scope, the
+    /// intra-node group for node scope).
     FwdGather,
     ForwardCompute,
     /// ZDP parameter re-gather before backward (and the extra
     /// checkpointing-recompute gather when enabled).
     BwdGather,
     BackwardCompute,
-    /// Gradient synchronization (reduce-scatter / all-reduce).
+    /// Gradient synchronization on the scope ring (reduce-scatter /
+    /// all-reduce).
     GradSync,
+    /// Node-scoped decisions only: the hierarchical cross-node all-reduce
+    /// of the gradient shard after the intra-node reduce-scatter.
+    GradSyncInter,
 }
 
 impl Phase {
@@ -40,11 +47,18 @@ impl Phase {
             Phase::BwdGather => "bwd-gather",
             Phase::BackwardCompute => "bwd",
             Phase::GradSync => "grad-sync",
+            Phase::GradSyncInter => "grad-sync-x",
         }
     }
 
     pub fn is_comm(&self) -> bool {
-        matches!(self, Phase::FwdGather | Phase::BwdGather | Phase::GradSync)
+        matches!(
+            self,
+            Phase::FwdGather
+                | Phase::BwdGather
+                | Phase::GradSync
+                | Phase::GradSyncInter
+        )
     }
 }
 
@@ -81,10 +95,19 @@ impl Timeline {
     }
 }
 
-/// Per-op slice of the (α,β) comm formula: one collective of `rounds`
-/// rounds over `bytes/g` per slice, times `g` slices.
-fn comm_seconds(op: &Operator, d: Decision, cluster: &Cluster, rounds: f64)
-                -> f64 {
+// The comm formulas below deliberately re-derive the (α,β) model instead
+// of calling `cost::time`: the simulator is one of three *independent*
+// implementations of the same physics (analytic model, discrete-event
+// sim, byte-moving fabric) whose agreement is the cross-check —
+// `sim_matches_cost_model_sum` in `rust/tests/sim_vs_fabric.rs` (and the
+// unit tests here) hold them together to 1e-9 relative.
+
+/// Per-op slice of the (α,β) comm formula on the flat N-device ring: one
+/// collective of `rounds` rounds over `bytes/g` per slice, times `g`
+/// slices. Used for the DP share of an op (nothing sharded, so its
+/// gradient all-reduce is scope-independent).
+fn flat_comm_seconds(op: &Operator, d: Decision, cluster: &Cluster,
+                     rounds: f64) -> f64 {
     if !op.shardable() || cluster.n_devices == 1 {
         return 0.0;
     }
@@ -93,6 +116,44 @@ fn comm_seconds(op: &Operator, d: Decision, cluster: &Cluster, rounds: f64)
     let g = d.slices() as f64;
     let bytes = op.param_bytes();
     rounds * (n - 1.0) * (g * alpha + bytes * beta / n)
+}
+
+/// The same formula on the decision's *scope* ring — what the ZDP share's
+/// gathers and reduce-scatter ride: identical to [`flat_comm_seconds`] for
+/// global scope, the intra-node `(α, β, devices_per_node)` ring for node
+/// scope.
+fn scoped_comm_seconds(op: &Operator, d: Decision, cluster: &Cluster,
+                       rounds: f64) -> f64 {
+    if !op.shardable() || cluster.n_devices == 1 {
+        return 0.0;
+    }
+    let (alpha, beta, ring) = scope_ring(cluster, d.scope);
+    if ring <= 1 {
+        return 0.0;
+    }
+    let rf = ring as f64;
+    let g = d.slices() as f64;
+    let bytes = op.param_bytes();
+    rounds * (rf - 1.0) * (g * alpha + bytes * beta / rf)
+}
+
+/// Whole-op hierarchical cross-node gradient term (node scope only): each
+/// slice's 1/`devices_per_node` shard is all-reduced across the node ring
+/// after the intra-node reduce-scatter (2 rounds on the inter link).
+fn inter_sync_seconds(op: &Operator, d: Decision, cluster: &Cluster) -> f64 {
+    if d.scope != Scope::Node || !op.shardable() {
+        return 0.0;
+    }
+    let nodes = cluster.n_nodes();
+    if nodes <= 1 || cluster.n_devices == 1 {
+        return 0.0;
+    }
+    let group = cluster.node_group_size() as f64;
+    let g = d.slices() as f64;
+    let shard_bytes = op.param_bytes() / group;
+    2.0 * (nodes as f64 - 1.0)
+        * (g * cluster.alpha_inter
+            + shard_bytes * cluster.beta_inter / nodes as f64)
 }
 
 /// Simulate one training iteration of `model` under per-op `decisions` at
@@ -152,8 +213,9 @@ pub fn simulate(model: &ModelDesc, decisions: &[Decision], cluster: &Cluster,
     let mut prev_fwd = 0.0f64;
     for (i, (op, d)) in model.ops.iter().zip(decisions).enumerate() {
         let gather = if d.zdp_slices > 0 {
-            // forward share of the gathers: one all-gather round
-            comm_seconds(op, *d, cluster, 1.0) * d.zdp_fraction()
+            // forward share of the gathers: one all-gather round on the
+            // decision's scope ring
+            scoped_comm_seconds(op, *d, cluster, 1.0) * d.zdp_fraction()
         } else {
             0.0
         };
@@ -175,7 +237,8 @@ pub fn simulate(model: &ModelDesc, decisions: &[Decision], cluster: &Cluster,
     for (op, d) in model.ops.iter().zip(decisions).rev() {
         let regather_rounds = if checkpointing { 2.0 } else { 1.0 };
         let gather = if d.zdp_slices > 0 {
-            comm_seconds(op, *d, cluster, regather_rounds) * d.zdp_fraction()
+            scoped_comm_seconds(op, *d, cluster, regather_rounds)
+                * d.zdp_fraction()
         } else {
             0.0
         };
@@ -192,19 +255,28 @@ pub fn simulate(model: &ModelDesc, decisions: &[Decision], cluster: &Cluster,
         let ready = g_end.max(prev_bwd);
         let b_end = schedule(&mut events, false, ready, bwd_t, &op.name,
                              Phase::BackwardCompute, 0.0);
-        // gradient sync: DP slices pay 2 rounds (RS+AG); ZDP slices pay 1
-        // (RS only — the AG half was charged as the gathers above)
+        // gradient sync: DP slices pay 2 flat-ring rounds (RS+AG); ZDP
+        // slices pay 1 on their scope ring (RS only — the AG half was
+        // charged as the gathers above)
         let sync = if op.shardable() {
-            let dp_part =
-                comm_seconds(op, *d, cluster, 2.0) * (1.0 - d.zdp_fraction());
+            let dp_part = flat_comm_seconds(op, *d, cluster, 2.0)
+                * (1.0 - d.zdp_fraction());
             let zdp_part =
-                comm_seconds(op, *d, cluster, 1.0) * d.zdp_fraction();
+                scoped_comm_seconds(op, *d, cluster, 1.0) * d.zdp_fraction();
             dp_part + zdp_part
         } else {
             0.0
         };
-        schedule(&mut events, true, b_end, sync, &op.name, Phase::GradSync,
-                 op.param_bytes());
+        let s_end = schedule(&mut events, true, b_end, sync, &op.name,
+                             Phase::GradSync, op.param_bytes());
+        // node scope: the intra-node reduce-scatter leaves per-node
+        // partial shards; same-local peers all-reduce them across nodes
+        let inter = inter_sync_seconds(op, *d, cluster) * d.zdp_fraction();
+        if inter > 0.0 {
+            let group = cluster.node_group_size() as f64;
+            schedule(&mut events, true, s_end, inter, &op.name,
+                     Phase::GradSyncInter, op.param_bytes() / group);
+        }
         prev_bwd = b_end;
     }
 
@@ -298,6 +370,41 @@ mod tests {
         assert!((ckpt_bg / plain_bg - 2.0).abs() < 1e-9,
                 "ckpt doubles the backward gather");
         assert!(ckpt.compute_busy > plain.compute_busy, "recompute");
+    }
+
+    #[test]
+    fn node_scope_timeline_matches_analytic_sum_and_wins_across_nodes() {
+        // On the two-server topology the node-scoped timeline must (a)
+        // charge exactly the analytic scoped comm model in serial mode,
+        // (b) carry the hierarchical cross-node sync as explicit events,
+        // and (c) beat the global-scope timeline.
+        let m = build_gpt(&GptDims::uniform("t", 2000, 128, 2, 256, 4));
+        let c = Cluster::two_server_a100(16.0);
+        let node =
+            simulate(&m, &all(&m, Decision::ZDP_NODE), &c, 2, false, false);
+        let global =
+            simulate(&m, &all(&m, Decision::ZDP), &c, 2, false, false);
+        let expected: f64 = m
+            .ops
+            .iter()
+            .map(|op| {
+                crate::cost::op_comm_time(op, Decision::ZDP_NODE, &c, false)
+            })
+            .sum();
+        assert!((node.comm_busy - expected).abs() / expected < 1e-9,
+                "sim {} vs model {}", node.comm_busy, expected);
+        assert!(node.events.iter().any(|e| e.phase == Phase::GradSyncInter),
+                "hierarchical reduce must appear on the timeline");
+        assert!(!global.events.iter()
+                    .any(|e| e.phase == Phase::GradSyncInter),
+                "global scope has no cross-node shard reduce");
+        assert!(node.iter_time < global.iter_time,
+                "node {} vs global {}", node.iter_time, global.iter_time);
+        // the inter event carries the 1/devices_per_node shard
+        let inter = node.events.iter()
+            .find(|e| e.phase == Phase::GradSyncInter).unwrap();
+        let op = m.ops.iter().find(|o| o.name == inter.op).unwrap();
+        assert_eq!(inter.bytes, op.param_bytes() / 8.0);
     }
 
     #[test]

@@ -1,0 +1,167 @@
+//! Acceptance tests for the per-operator sharding-scope dimension
+//! (ISSUE 4): on the paper's two-server topology with a memory limit that
+//! forces sharding, the swept plan must place at least one operator at
+//! node-local scope, strictly beat both the all-global-ZDP baseline and
+//! the best scope-free plan, and keep every exact engine bit-identical on
+//! the full choice vector (scope included) at 1 and 8 threads.
+
+use osdp::config::{Cluster, SearchConfig};
+use osdp::cost::{Decision, Profiler, Scope};
+use osdp::model::{GptDims, ModelDesc, build_gpt};
+use osdp::planner::{Engine, ExecutionPlan, ParallelConfig, Scheduler,
+                    exhaustive_search, parallel_search};
+
+fn model() -> ModelDesc {
+    build_gpt(&GptDims::uniform("accept", 4000, 128, 4, 512, 8))
+}
+
+/// The two-server cluster with a limit between the all-DP and sharded
+/// footprints, so the planner *must* shard somewhere.
+fn forcing_cluster(m: &ModelDesc) -> Cluster {
+    let base = Cluster::two_server_a100(16.0);
+    Cluster { mem_limit: m.state_bytes() * 0.6, ..base }
+}
+
+fn search_cfg(hybrid_scopes: bool) -> SearchConfig {
+    SearchConfig {
+        max_batch: 8,
+        granularities: vec![0],
+        paper_granularity: true,
+        hybrid_scopes,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn swept_plan_uses_node_scope_and_beats_global_and_scope_free() {
+    let m = model();
+    let c = forcing_cluster(&m);
+    let scoped = Profiler::new(&m, &c, &search_cfg(true));
+    let flat = Profiler::new(&m, &c, &search_cfg(false));
+
+    // sharding is genuinely forced: all-DP does not fit at b=1
+    let dp = scoped.evaluate(&scoped.index_of(|d| d.is_pure_dp()), 1);
+    assert!(dp.peak_mem > c.mem_limit, "limit must force sharding");
+
+    let res = Scheduler::new(&scoped, c.mem_limit, 8).run()
+        .expect("scoped sweep feasible");
+    let best = res.best_plan();
+    assert!(
+        best.node_scoped_ops() >= 1,
+        "the swept plan must use node-local scope somewhere: {}",
+        best.describe(&scoped)
+    );
+    let best_tp = res.best_throughput();
+
+    // strictly beats the all-global-ZDP plan at its best batch size
+    let zdp_choice =
+        scoped.index_of(|d| d.is_pure_zdp() && d.scope == Scope::Global);
+    let mut zdp_best = 0.0f64;
+    for b in 1..=8usize {
+        let cost = scoped.evaluate(&zdp_choice, b);
+        if cost.peak_mem <= c.mem_limit {
+            zdp_best = zdp_best.max(cost.throughput(b, c.n_devices));
+        }
+    }
+    assert!(zdp_best > 0.0, "all-global-ZDP must be feasible somewhere");
+    assert!(
+        best_tp > zdp_best,
+        "scoped plan {best_tp} must strictly beat all-global-ZDP {zdp_best}"
+    );
+
+    // ... and the best plan of the scope-free search space
+    let flat_res = Scheduler::new(&flat, c.mem_limit, 8).run()
+        .expect("scope-free sweep feasible");
+    assert!(
+        best_tp > flat_res.best_throughput(),
+        "scoped plan {best_tp} must strictly beat the best scope-free plan {}",
+        flat_res.best_throughput()
+    );
+}
+
+#[test]
+fn engines_agree_bitwise_on_scoped_space_at_1_and_8_threads() {
+    let m = model();
+    let c = forcing_cluster(&m);
+    let p = Profiler::new(&m, &c, &search_cfg(true));
+    let res = Scheduler::new(&p, c.mem_limit, 8).run().unwrap();
+    let best = res.best_plan();
+    let b = best.batch;
+
+    // ground truth: the folded exhaustive enumerator over the scoped space
+    let (brute_choice, brute_cost) =
+        exhaustive_search(&p, c.mem_limit, b).expect("exhaustive feasible");
+    assert_eq!(brute_choice, best.choice, "sweep != exhaustive");
+    assert_eq!(brute_cost.time.to_bits(), best.cost.time.to_bits());
+
+    // every engine, 1 and 8 threads: identical full choice vector
+    for threads in [1usize, 8] {
+        for engine in
+            [Engine::Frontier, Engine::FoldedBb, Engine::UnfoldedBb]
+        {
+            let cfg =
+                ParallelConfig { threads, engine, ..Default::default() };
+            let (choice, cost, stats) =
+                parallel_search(&p, c.mem_limit, b, &cfg)
+                    .unwrap_or_else(|| {
+                        panic!("{engine:?} at {threads} threads infeasible")
+                    });
+            assert!(stats.complete, "{engine:?}@{threads}t budget expired");
+            assert_eq!(choice, brute_choice,
+                       "{engine:?}@{threads}t diverged");
+            assert_eq!(cost.time.to_bits(), brute_cost.time.to_bits());
+            assert_eq!(cost.peak_mem.to_bits(),
+                       brute_cost.peak_mem.to_bits());
+            // the agreed-on plan really is scoped
+            let plan = ExecutionPlan::from_choice(&p, choice, b);
+            assert!(plan.node_scoped_ops() >= 1);
+            assert!(plan.decisions.iter().any(|d| d.is_node_scoped()
+                && d.label().ends_with("@node")));
+        }
+    }
+}
+
+#[test]
+fn scope_dimension_respects_memory_semantics() {
+    // Node scope trades state memory for comm: at equal batch the scoped
+    // optimum uses no more time and no less states than the global-only
+    // optimum, and both respect the limit.
+    let m = model();
+    let c = forcing_cluster(&m);
+    let scoped = Profiler::new(&m, &c, &search_cfg(true));
+    let flat = Profiler::new(&m, &c, &search_cfg(false));
+    for b in 1..=4usize {
+        let s = osdp::planner::dfs_search(&scoped, c.mem_limit, b);
+        let f = osdp::planner::dfs_search(&flat, c.mem_limit, b);
+        let (Some((_, sc, _)), Some((_, fc, _))) = (s, f) else {
+            continue;
+        };
+        assert!(sc.peak_mem <= c.mem_limit);
+        assert!(fc.peak_mem <= c.mem_limit);
+        // superset space: scoped time can only match or improve
+        assert!(sc.time <= fc.time + 1e-15, "b={b}: {} > {}", sc.time,
+                fc.time);
+    }
+}
+
+#[test]
+fn disabling_scopes_recovers_the_paper_space() {
+    let m = model();
+    let c = forcing_cluster(&m);
+    let flat = Profiler::new(&m, &c, &search_cfg(false));
+    for t in &flat.tables {
+        for o in &t.options {
+            assert_eq!(o.decision.scope, Scope::Global,
+                       "{}: scope-free menus must be all-global", t.name);
+        }
+    }
+    // and on a single node the scoped profiler generates no node entries
+    // even when enabled, so the paper's single-server experiments are
+    // untouched
+    let single = Cluster::rtx_titan(8, 8.0);
+    let p = Profiler::new(&m, &single, &search_cfg(true));
+    for t in &p.tables {
+        assert!(t.options.iter().all(|o| !o.decision.is_node_scoped()));
+    }
+    let _ = Decision::ZDP_NODE; // the label surface is covered elsewhere
+}

@@ -5,8 +5,9 @@
 use osdp::config::{Cluster, SearchConfig};
 use osdp::cost::Profiler;
 use osdp::model::{GptDims, build_gpt};
-use osdp::planner::{ExecutionPlan, dfs_search, exhaustive_search,
-                    greedy_search};
+use osdp::planner::{Engine, ExecutionPlan, ParallelConfig, dfs_search,
+                    exhaustive_search, frontier, greedy_search,
+                    parallel_search};
 use osdp::util::prop;
 use osdp::util::rng::Rng;
 
@@ -147,6 +148,118 @@ fn prop_dominates_fixed_modes() {
         }
         Ok(())
     });
+}
+
+/// Hybrid-scope menus on multi-node clusters change nothing about the
+/// engines' agreement: folded B&B == frontier == per-op B&B == exhaustive
+/// (full choice vector, bit-for-bit), serially and at 1 and 8 threads.
+/// The scope dimension only enriches the menus — `TableKey` canonicalizes
+/// by cost bits, so the fold/frontier machinery carries through untouched.
+#[test]
+fn prop_scoped_menus_keep_engines_bit_identical() {
+    #[derive(Debug, Clone)]
+    struct ScopedInstance {
+        layers: usize,
+        hidden: usize,
+        n_dev: usize,
+        dpn: usize,
+        b: usize,
+        limit_frac: f64,
+        grans: Vec<usize>,
+    }
+    let gen = |rng: &mut Rng, size: usize| {
+        let (n_dev, dpn) = *rng.pick(&[(4usize, 2usize), (8, 4), (8, 2),
+                                       (16, 8)]);
+        ScopedInstance {
+            layers: rng.range(1, 1 + size / 30),
+            hidden: 32 * rng.range(1, 6),
+            n_dev,
+            dpn,
+            b: rng.range(1, 4),
+            limit_frac: 0.25 + rng.f64() * 1.1,
+            grans: if rng.chance(0.5) { vec![0] } else { vec![0, 2] },
+        }
+    };
+    let mut compared = 0;
+    prop::check(0x5C09E, 20, gen, |inst| {
+        let m = build_gpt(&GptDims::uniform("p", 1000, 64, inst.layers,
+                                            inst.hidden, 2));
+        let c = Cluster {
+            n_devices: inst.n_dev,
+            devices_per_node: inst.dpn,
+            ..Cluster::two_server_a100(8.0)
+        };
+        c.validate().map_err(|e| e.to_string())?;
+        let s = SearchConfig { granularities: inst.grans.clone(),
+                               ..Default::default() };
+        let p = Profiler::new(&m, &c, &s);
+        // the scope dimension must actually be on the menus
+        if !p.tables.iter().any(|t| {
+            t.options.iter().any(|o| o.decision.is_node_scoped())
+        }) {
+            return Err("no node-scoped menu entries generated".into());
+        }
+        let dp_mem =
+            p.evaluate(&p.index_of(|d| d.is_pure_dp()), inst.b).peak_mem;
+        let limit = dp_mem * inst.limit_frac;
+        let folded = dfs_search(&p, limit, inst.b);
+        let front = frontier::search(&p, limit, inst.b);
+        match (&folded, &front) {
+            (None, None) => return Ok(()),
+            (Some((fc, fcost, fst)), Some((rc, rcost, rst))) => {
+                if !(fst.complete && rst.complete) {
+                    return Ok(());
+                }
+                if fc != rc || fcost.time.to_bits() != rcost.time.to_bits() {
+                    return Err(format!(
+                        "frontier != folded on scoped menus: {rc:?} vs {fc:?}"
+                    ));
+                }
+                for threads in [1usize, 8] {
+                    for engine in [Engine::Frontier, Engine::FoldedBb,
+                                   Engine::UnfoldedBb] {
+                        let cfg = ParallelConfig { threads, engine,
+                                                   ..Default::default() };
+                        let par = parallel_search(&p, limit, inst.b, &cfg);
+                        let Some((pc, pcost, pst)) = par else {
+                            return Err(format!(
+                                "{engine:?}@{threads}t lost feasibility"
+                            ));
+                        };
+                        if !pst.complete {
+                            return Ok(());
+                        }
+                        if &pc != fc
+                            || pcost.time.to_bits() != fcost.time.to_bits()
+                        {
+                            return Err(format!(
+                                "{engine:?}@{threads}t diverged on scoped \
+                                 menus"
+                            ));
+                        }
+                    }
+                }
+                if p.log10_plan_space() <= 5.5 {
+                    let brute = exhaustive_search(&p, limit, inst.b)
+                        .ok_or("exhaustive lost feasibility")?;
+                    if &brute.0 != fc
+                        || brute.1.time.to_bits() != fcost.time.to_bits()
+                    {
+                        return Err("exhaustive diverged on scoped menus"
+                            .into());
+                    }
+                }
+                compared += 1;
+                Ok(())
+            }
+            (f, r) => Err(format!(
+                "feasibility disagreement: folded={:?} frontier={:?}",
+                f.is_some(),
+                r.is_some()
+            )),
+        }
+    });
+    assert!(compared >= 5, "only {compared} full comparisons ran");
 }
 
 /// Enlarging the decision menu (splitting granularities) never hurts.

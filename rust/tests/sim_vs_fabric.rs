@@ -2,7 +2,9 @@
 //! simulator, and the byte-moving fabric must agree on communication time —
 //! three independent implementations of the same physics.
 
-use osdp::collectives::{all_gather, all_reduce, reduce_scatter,
+use osdp::collectives::{all_gather, all_reduce, chunk_range,
+                        hier_all_gather, hier_gather_model_seconds,
+                        node_all_gather, node_grad_sync, reduce_scatter,
                         ring_model_seconds};
 use osdp::config::Cluster;
 use osdp::cost::{Decision, op_comm_time};
@@ -62,28 +64,112 @@ fn fabric_zdp_sequence_is_1_5x_dp() {
     );
 }
 
-/// Simulator serial-mode iteration time equals the cost model's Σ T_i.
+/// Simulator serial-mode iteration time equals the cost model's Σ T_i —
+/// on the single-node cluster and, scope included, on the two-server one.
 #[test]
 fn sim_matches_cost_model_sum() {
     let m = build_gpt(&GptDims::uniform("x", 2000, 128, 3, 256, 4));
-    let c = Cluster::rtx_titan(8, 8.0);
-    for d in [Decision::DP, Decision::ZDP, Decision::zdp_at(4)] {
-        let decisions = vec![d; m.ops.len()];
-        let tl = sim::simulate(&m, &decisions, &c, 2, false, false);
-        let comm_expected: f64 = m
-            .ops
-            .iter()
-            .map(|op| op_comm_time(op, d, &c, false))
-            .sum();
-        assert!(
-            (tl.comm_busy - comm_expected).abs() / comm_expected.max(1e-12)
-                < 1e-6,
-            "{}: sim comm {} vs model {}",
-            d.label(),
-            tl.comm_busy,
-            comm_expected
-        );
+    for (c, decisions) in [
+        (Cluster::rtx_titan(8, 8.0),
+         vec![Decision::DP, Decision::ZDP, Decision::zdp_at(4)]),
+        (Cluster::two_server_a100(16.0),
+         vec![Decision::ZDP, Decision::ZDP_NODE,
+              Decision::zdp_at(4).with_scope(osdp::cost::Scope::Node)]),
+    ] {
+        for d in decisions {
+            let plan = vec![d; m.ops.len()];
+            let tl = sim::simulate(&m, &plan, &c, 2, false, false);
+            let comm_expected: f64 = m
+                .ops
+                .iter()
+                .map(|op| op_comm_time(op, d, &c, false))
+                .sum();
+            assert!(
+                (tl.comm_busy - comm_expected).abs()
+                    / comm_expected.max(1e-12)
+                    < 1e-6,
+                "{}: sim comm {} vs model {}",
+                d.label(),
+                tl.comm_busy,
+                comm_expected
+            );
+        }
     }
+}
+
+/// Two-server scenario: the *measured* node-scoped collective sequence —
+/// two intra-node parameter gathers plus the hierarchical gradient sync
+/// (intra reduce-scatter + cross-node shard all-reduce) — realizes the
+/// cost model's scoped analytic term `op_comm_time(ZDP@node)` on the
+/// byte-moving fabric.
+#[test]
+fn fabric_node_scoped_sequence_matches_scoped_analytic_term() {
+    let m = build_gpt(&GptDims::uniform("x", 2000, 128, 1, 512, 4));
+    let op = m.ops.iter().find(|o| o.name == "l0.mlp_up").unwrap().clone();
+    let cluster = Cluster::two_server_a100(16.0);
+    let topo = Topology::from_cluster(&cluster);
+    let n = cluster.n_devices;
+    let dpn = cluster.devices_per_node;
+    let elems = (op.param_bytes() / 4.0) as usize;
+    let t_node = max_clock(fabric::run_timed(n, topo.clone(), move |ep| {
+        let local = ep.rank % dpn;
+        // chunk `local` of the node's dpn-way partition
+        let (_, shard_len) = chunk_range(elems, dpn, local);
+        let shard = vec![1.0f32; shard_len];
+        node_all_gather(ep, &shard, elems); // fwd param gather
+        node_all_gather(ep, &shard, elems); // bwd re-gather
+        node_grad_sync(ep, &vec![1.0f32; elems]); // hierarchical grad sync
+    }));
+    let model = op_comm_time(&op, Decision::ZDP_NODE, &cluster, false);
+    let ratio = t_node / model;
+    assert!(
+        (0.7..1.4).contains(&ratio),
+        "fabric {t_node:.6} vs scoped model {model:.6} (ratio {ratio:.3})"
+    );
+    // and the scope direction is physical, not just analytic: the same
+    // ZDP sequence at global scope is far slower on the fabric
+    let t_global = max_clock(fabric::run_timed(n, topo, move |ep| {
+        let (_, shard_len) = chunk_range(elems, n, ep.rank);
+        let shard = vec![1.0f32; shard_len];
+        all_gather(ep, &shard, elems);
+        all_gather(ep, &shard, elems);
+        reduce_scatter(ep, &vec![1.0f32; elems]);
+    }));
+    assert!(t_node < t_global / 2.0,
+            "node-scoped {t_node:.6} vs global {t_global:.6}");
+}
+
+/// The two-phase hierarchical all-gather realizes its analytic model and
+/// beats the flat ring across the slow link (same bytes, same result).
+#[test]
+fn fabric_hier_all_gather_matches_model() {
+    let topo = Topology {
+        n_devices: 8,
+        devices_per_node: 4,
+        alpha_intra: 1e-6,
+        beta_intra: 1e-11,
+        alpha_inter: 2e-5,
+        beta_inter: 8e-10,
+    };
+    let total = 1 << 18;
+    let timed = fabric::run_timed(8, topo.clone(), move |ep| {
+        let (_, len) = chunk_range(total, ep.n, ep.rank);
+        hier_all_gather(ep, &vec![1.0f32; len], total)[0]
+    });
+    for (v, _) in &timed {
+        assert_eq!(*v, 1.0);
+    }
+    let t = timed.iter().map(|(_, c)| *c).fold(0.0, f64::max);
+    let model = hier_gather_model_seconds(
+        (total * 4) as f64, 8, 4, 1e-6, 1e-11, 2e-5, 8e-10);
+    let ratio = t / model;
+    assert!((0.7..1.4).contains(&ratio),
+            "hier gather {t:.6} vs model {model:.6} (ratio {ratio:.3})");
+    let t_flat = max_clock(fabric::run_timed(8, topo, move |ep| {
+        let (_, len) = chunk_range(total, ep.n, ep.rank);
+        all_gather(ep, &vec![1.0f32; len], total);
+    }));
+    assert!(t < t_flat, "hier {t:.6} vs flat {t_flat:.6}");
 }
 
 /// Hierarchical all-reduce beats the flat ring across a slow inter-node
