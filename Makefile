@@ -4,7 +4,8 @@
 CARGO ?= cargo
 PY ?= python3
 
-.PHONY: ci build examples test fmt clippy bench-smoke python-test artifacts
+.PHONY: ci build examples test fmt clippy bench-smoke bench-search \
+        bench-service python-test artifacts
 
 ci: build examples test fmt clippy bench-smoke python-test
 
@@ -28,6 +29,15 @@ clippy:
 # Benches compile everywhere; running them is a local-only activity.
 bench-smoke:
 	$(CARGO) bench --no-run
+
+# The perf-tracking benches CI runs and archives per commit
+# (BENCH_search.json / BENCH_service.json); OSDP_BENCH_STRICT=1 adds
+# timing assertions for toolchain-equipped local runs.
+bench-search:
+	$(CARGO) bench --bench search_time
+
+bench-service:
+	$(CARGO) bench --bench service_throughput
 
 # pytest exit 5 = nothing collected/selected (e.g. hypothesis missing):
 # not a failure for this gate.

@@ -120,11 +120,16 @@ impl Cluster {
                 self.n_devices, self.devices_per_node
             ));
         }
-        if self.mem_limit <= 0.0 {
-            return Err("mem_limit must be > 0".into());
+        // `!(x > 0.0)` instead of `x <= 0.0`: NaN fails every comparison,
+        // so the old spelling silently accepted NaN limits — which then
+        // defeat every `peak > limit` prune downstream (NaN comparisons
+        // are false, so *everything* looks feasible). Found auditing the
+        // plan-service query path.
+        if !(self.mem_limit > 0.0) || !self.mem_limit.is_finite() {
+            return Err("mem_limit must be finite and > 0".into());
         }
-        if self.flops <= 0.0 {
-            return Err("flops must be > 0".into());
+        if !(self.flops > 0.0) || !self.flops.is_finite() {
+            return Err("flops must be finite and > 0".into());
         }
         for (name, v) in [
             ("alpha_intra", self.alpha_intra),
@@ -319,6 +324,16 @@ mod tests {
     fn invalid_cluster_rejected() {
         let c = Cluster { n_devices: 0, ..Cluster::rtx_titan(8, 8.0) };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn non_finite_limits_rejected() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 0.0, -1.0] {
+            let c = Cluster { mem_limit: bad, ..Cluster::rtx_titan(8, 8.0) };
+            assert!(c.validate().is_err(), "mem_limit={bad} accepted");
+            let c = Cluster { flops: bad, ..Cluster::rtx_titan(8, 8.0) };
+            assert!(c.validate().is_err(), "flops={bad} accepted");
+        }
     }
 
     #[test]

@@ -62,6 +62,16 @@ impl MenuStats {
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct TableKey(Vec<u64>);
 
+impl TableKey {
+    /// The raw bit encoding, in field order — the plan service feeds
+    /// these words into its canonical query fingerprint
+    /// (`service::key`), so cache identity inherits exactly this module's
+    /// "search-relevant fields only" discipline.
+    pub fn bits(&self) -> &[u64] {
+        &self.0
+    }
+}
+
 /// Build the [`TableKey`] for a table. Menus are already sorted
 /// fastest-first with exact ties deduplicated, so equal menus produce
 /// equal encodings positionally.

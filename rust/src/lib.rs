@@ -35,6 +35,7 @@ pub mod model;
 pub mod parallel;
 pub mod planner;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod train;
 pub mod util;

@@ -4,6 +4,8 @@
 //! osdp zoo                              Table 1 (model statistics)
 //! osdp gantt                            Figure 1 (DP vs ZDP op gantt)
 //! osdp plan --setting 48L/1024H ...     search an execution plan
+//! osdp serve                            cached/coalescing plan service
+//! osdp query --setting ... --batch 4    one-shot through the plan cache
 //! osdp fig5|fig6|fig8|fig9 [--mem 8]    regenerate a figure
 //! osdp fig7                             splitting sweep table
 //! osdp search-time [--mem 8]            §3.2 search-cost table
@@ -19,6 +21,8 @@ use osdp::figures::{self, Quality};
 use osdp::metrics::{speedup, speedup_vs_best};
 use osdp::model::zoo;
 use osdp::planner::{Engine, ParallelConfig, Scheduler, parallel};
+use osdp::service::{Answer, CacheConfig, PlanError, PlanQuery, PlanService,
+                    QueryShape, server};
 use osdp::train::{ShardMode, TrainConfig, train};
 
 fn main() {
@@ -82,6 +86,8 @@ fn main() {
         }
         "headline" => headline(&args, quality),
         "plan" => plan(&args),
+        "serve" => serve(&args),
+        "query" => service_query(&args),
         "train" => run_train(&args),
         "calibrate" => calibrate(&args),
         "" | "help" | "--help" => usage(),
@@ -119,6 +125,19 @@ commands:
           [--no-fold]        plan per operator instead of per equivalence
                              class (identical result, exponentially more
                              search nodes on symmetric models)
+  serve   [--cache-dir D] [--cache-cap 256]
+          line-oriented plan service on stdin/stdout: one request per
+          line in ('query setting=48L/1024H mem=8 batch=4', 'sweep ...',
+          'stats', 'quit'), one JSON document per line out. Identical
+          queries are answered from the plan cache, concurrent identical
+          queries coalesce into one search, and cache misses warm-start
+          from neighboring entries (provably bit-identical results).
+  query   --setting S (--batch B | [--batch-cap 64])
+          [--mem 8] [--devices 8] [--cluster C] [--g 0,4] [--ckpt]
+          [--fine] [--no-scopes] [--engine E] [--threads N] [--no-warm]
+          [--cache-dir D] [--json]
+          one-shot request through the same plan service (a --cache-dir
+          makes the cache persistent across invocations)
   fig5    [--mem 8] [--full] [--csv out.csv]
   fig6    [--mem 16] [--full] [--csv out.csv]
   fig6-scopes [--mem 16] [--full]    hybrid- vs global-scope planning on
@@ -317,6 +336,109 @@ fn plan(args: &Args) {
                     osdp::util::fmt_bytes(cand.plan.cost.peak_mem)
                 );
             }
+        }
+    }
+}
+
+fn cache_config(args: &Args) -> CacheConfig {
+    CacheConfig {
+        capacity: args.usize_or("cache-cap", 256),
+        disk_dir: args.get("cache-dir").map(std::path::PathBuf::from),
+    }
+}
+
+fn plan_query_from_args(args: &Args) -> PlanQuery {
+    let mut q = PlanQuery::batch(args.get_or("setting", "48L/1024H"),
+                                 args.f64_or("mem", 8.0), 1);
+    q.cluster.preset = args.get_or("cluster", "rtx_titan").to_string();
+    q.cluster.devices = args.usize_opt("devices");
+    q.search.granularities = args.usize_list_or("g", &[0, 4]);
+    q.search.checkpointing = args.flag("ckpt");
+    q.search.paper_granularity = !args.flag("fine");
+    q.search.hybrid_scopes = !args.flag("no-scopes");
+    q.threads = args.usize_opt("threads").unwrap_or(0);
+    q.warm = !args.flag("no-warm");
+    q.engine = match Engine::parse(args.get_or("engine", "frontier")) {
+        Some(e) => e,
+        None => {
+            eprintln!("--engine must be 'frontier' or 'bb', got '{}'",
+                      args.get_or("engine", ""));
+            std::process::exit(2);
+        }
+    };
+    q.shape = match args.usize_opt("batch") {
+        Some(b) => QueryShape::Batch(b),
+        None => QueryShape::Sweep { max_batch: args.usize_or("batch-cap",
+                                                            64) },
+    };
+    q
+}
+
+fn serve(args: &Args) {
+    let service = PlanService::new(cache_config(args));
+    eprintln!("osdp serve: ready (one request per line; 'query \
+               setting=48L/1024H mem=8 batch=4', 'sweep ...', 'stats', \
+               'quit')");
+    let stdin = std::io::stdin();
+    let mut stdout = std::io::stdout();
+    if let Err(e) = server::serve_loop(&service, stdin.lock(), &mut stdout) {
+        eprintln!("serve: io error: {e}");
+        std::process::exit(1);
+    }
+    eprintln!("osdp serve: done — {}", service.stats().describe());
+}
+
+fn service_query(args: &Args) {
+    let q = plan_query_from_args(args);
+    let service = PlanService::new(cache_config(args));
+    let outcome = service.query(&q);
+    if args.flag("json") {
+        println!("{}", server::render_response(&outcome));
+        if outcome.is_err() {
+            std::process::exit(1);
+        }
+        return;
+    }
+    match outcome {
+        Err(e @ PlanError::Infeasible { .. }) => {
+            eprintln!("{e}");
+            std::process::exit(1);
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+        Ok(resp) => {
+            println!("source: {} (key {})", resp.source.label(),
+                     resp.key.id());
+            let print_plan = |p: &osdp::planner::ExecutionPlan| {
+                println!(
+                    "  b={:<3} time={} peak={} -> {:>8.1} samples/s \
+                     across {} devices",
+                    p.batch,
+                    osdp::util::fmt_time(p.cost.time),
+                    osdp::util::fmt_bytes(p.cost.peak_mem),
+                    p.throughput(resp.n_devices),
+                    resp.n_devices,
+                );
+            };
+            match &resp.answer {
+                Answer::Plan { plan, stats } => {
+                    println!("plan ({} nodes{}):", stats.nodes,
+                             if stats.complete { "" }
+                             else { ", budget expired" });
+                    print_plan(plan);
+                }
+                Answer::Sweep { plans, best, stats } => {
+                    println!("sweep winner ({}):", stats.describe());
+                    print_plan(&plans[*best]);
+                    println!("candidates:");
+                    for p in plans {
+                        print_plan(p);
+                    }
+                }
+            }
+            println!("service: {}", service.stats().describe());
         }
     }
 }

@@ -338,6 +338,53 @@ impl<'p> SearchSpace<'p> {
     pub fn unpermute(&self, ordered: &[usize]) -> Vec<usize> {
         self.pre.unpermute(ordered)
     }
+
+    /// Offer a full profiler-order choice vector — the plan service's
+    /// **warm start** from a cached neighbor query — as an additional
+    /// incumbent seed. Installed only when it is memory-feasible at this
+    /// batch and `(time, lex)`-better than the greedy seed, and priced in
+    /// the same search arithmetic as any leaf (`base_time` + the grid
+    /// `time_fixed` sum in visit order), exactly like the greedy seed —
+    /// so exact ties against the incumbent survive the strict `lb` prune
+    /// and the search result stays **bit-identical** to a cold search:
+    /// the incumbent only tightens bounds (see `service::warm` for the
+    /// argument, `rust/tests/plan_service.rs` for the property tests).
+    ///
+    /// Returns true when the seed was feasible (whether or not it beat
+    /// the greedy seed; either way it cannot loosen anything). Rejects —
+    /// rather than panics on — length or menu-index mismatches, so a
+    /// stale cache entry can never poison a search.
+    pub fn offer_warm(&mut self, choice: &[usize]) -> bool {
+        if choice.len() != self.n() {
+            return false;
+        }
+        let mut time_fixed = 0.0;
+        let mut states = 0.0;
+        let mut trans_max = 0.0f64;
+        let mut ordered = Vec::with_capacity(self.n());
+        for (i, &op) in self.pre.order.iter().enumerate() {
+            let c = choice[op];
+            let Some(opt) = self.flat[i].get(c) else { return false };
+            time_fixed += opt.time_fixed;
+            states += opt.states;
+            trans_max = trans_max.max(opt.transient);
+            ordered.push(c);
+        }
+        if states + self.base_act + trans_max > self.mem_limit {
+            return false;
+        }
+        let total = self.base_time + time_fixed;
+        let better = match &self.seed {
+            None => true,
+            Some((t, c)) => {
+                total < *t || (total == *t && lex_less(&ordered, c))
+            }
+        };
+        if better {
+            self.seed = Some((total, ordered));
+        }
+        true
+    }
 }
 
 /// `a` strictly precedes `b` lexicographically. Both vectors are full

@@ -84,8 +84,9 @@ pub fn search_with_budget(profiler: &Profiler, mem_limit: f64, b: usize,
                           budget: u64)
                           -> Option<(Vec<usize>, PlanCost, DfsStats)> {
     let prefold = Prefold::new(profiler);
-    search_prefolded(profiler, &prefold, None, mem_limit, b, budget,
-                     Engine::FoldedBb)
+    let (r, stats) = search_prefolded(profiler, &prefold, None, mem_limit,
+                                      b, budget, Engine::FoldedBb, None);
+    r.map(|(choice, cost)| (choice, cost, stats))
 }
 
 /// The per-operator (unfolded) engine: identical results, exponentially
@@ -95,20 +96,63 @@ pub fn search_unfolded(profiler: &Profiler, mem_limit: f64, b: usize,
                        budget: u64)
                        -> Option<(Vec<usize>, PlanCost, DfsStats)> {
     let prefold = Prefold::new(profiler);
-    search_prefolded(profiler, &prefold, None, mem_limit, b, budget,
-                     Engine::UnfoldedBb)
+    let (r, stats) = search_prefolded(profiler, &prefold, None, mem_limit,
+                                      b, budget, Engine::UnfoldedBb, None);
+    r.map(|(choice, cost)| (choice, cost, stats))
+}
+
+/// Search with an optional **warm-start seed**: a full profiler-order
+/// choice vector (typically a cached neighbor query's plan, see
+/// `crate::service::warm`) installed as the initial incumbent when it is
+/// feasible at this `(mem_limit, b)`. The seed only tightens the
+/// incumbent bound, so the result is provably bit-identical to the
+/// unseeded search for every engine — it just visits fewer nodes
+/// (property-tested in `rust/tests/plan_service.rs`). An infeasible or
+/// malformed seed is ignored.
+pub fn search_warm(profiler: &Profiler, mem_limit: f64, b: usize,
+                   budget: u64, engine: Engine, warm: Option<&[usize]>)
+                   -> Option<(Vec<usize>, PlanCost, DfsStats)> {
+    let prefold = Prefold::new(profiler);
+    let frontiers = match engine {
+        Engine::Frontier => Some(Frontiers::new(&prefold, profiler)),
+        _ => None,
+    };
+    let (r, stats) = search_prefolded(profiler, &prefold, frontiers.as_ref(),
+                                      mem_limit, b, budget, engine, warm);
+    r.map(|(choice, cost)| (choice, cost, stats))
 }
 
 /// Search over a prebuilt [`Prefold`] (and, for [`Engine::Frontier`],
 /// prebuilt [`Frontiers`]) — the scheduler's batch sweep builds the fold,
 /// the batch-independent suffix bounds, and the class frontiers once and
 /// calls this per batch size, recomputing only the transient and base
-/// terms (and the greedy seed).
+/// terms (and the greedy seed). `warm` optionally installs a feasible
+/// profiler-order choice as the initial incumbent (see [`search_warm`]).
+///
+/// Stats come back even when no plan exists: `stats.complete` is the
+/// *certificate* that infeasibility was proven rather than the node
+/// budget expiring first — the plan service refuses to cache an
+/// un-proven "nothing fits".
+#[allow(clippy::too_many_arguments)] // crate-internal plumbing entry
 pub(crate) fn search_prefolded(profiler: &Profiler, prefold: &Prefold,
                                frontiers: Option<&Frontiers>, mem_limit: f64,
-                               b: usize, budget: u64, engine: Engine)
-                               -> Option<(Vec<usize>, PlanCost, DfsStats)> {
-    let space = SearchSpace::for_batch(prefold, profiler, mem_limit, b);
+                               b: usize, budget: u64, engine: Engine,
+                               warm: Option<&[usize]>)
+                               -> (Option<(Vec<usize>, PlanCost)>, DfsStats) {
+    let mut space = SearchSpace::for_batch(prefold, profiler, mem_limit, b);
+    if let Some(w) = warm {
+        // Repair the seed first (greedy downgrades from the neighbor
+        // plan until it fits this batch/limit): a neighbor that no
+        // longer fits verbatim is usually one move from a strong
+        // incumbent. The repaired plan is still just a feasible full
+        // assignment, so exactness is untouched (service::warm).
+        if let Some((repaired, _)) =
+            super::greedy::search_from(profiler, mem_limit, b, w)
+        {
+            space.offer_warm(&repaired);
+        }
+    }
+    let space = space;
     let mut walker = Walker::new(&space, frontiers, None, budget);
     match engine {
         Engine::Frontier => walker.run_root_frontier(),
@@ -116,10 +160,12 @@ pub(crate) fn search_prefolded(profiler: &Profiler, prefold: &Prefold,
         Engine::UnfoldedBb => walker.run_root(),
     }
 
-    let choice_ordered = walker.best_choice?;
-    let choice = space.unpermute(&choice_ordered);
-    let cost = profiler.evaluate(&choice, b);
-    Some((choice, cost, walker.stats))
+    let result = walker.best_choice.map(|choice_ordered| {
+        let choice = space.unpermute(&choice_ordered);
+        let cost = profiler.evaluate(&choice, b);
+        (choice, cost)
+    });
+    (result, walker.stats)
 }
 
 #[cfg(test)]

@@ -437,8 +437,11 @@ pub fn search_with_budget(profiler: &Profiler, mem_limit: f64, b: usize,
                           -> Option<(Vec<usize>, PlanCost, DfsStats)> {
     let prefold = Prefold::new(profiler);
     let frontiers = Frontiers::new(&prefold, profiler);
-    dfs::search_prefolded(profiler, &prefold, Some(&frontiers), mem_limit,
-                          b, budget, super::Engine::Frontier)
+    let (r, stats) =
+        dfs::search_prefolded(profiler, &prefold, Some(&frontiers),
+                              mem_limit, b, budget,
+                              super::Engine::Frontier, None);
+    r.map(|(choice, cost)| (choice, cost, stats))
 }
 
 /// Build the frontiers for a profiler and report their statistics (the
@@ -620,13 +623,13 @@ mod tests {
         let dp = p.evaluate(&p.index_of(|d| d.is_pure_dp()), 2).peak_mem;
         for frac in [0.4, 0.7, 1.1] {
             let limit = dp * frac;
-            let with_fallback = dfs::search_prefolded(
+            let (with_fallback, _) = dfs::search_prefolded(
                 &p, &pre, Some(&fr), limit, 2, u64::MAX,
-                crate::planner::Engine::Frontier);
+                crate::planner::Engine::Frontier, None);
             let folded = dfs::search_with_budget(&p, limit, 2, u64::MAX);
             match (with_fallback, folded) {
                 (None, None) => {}
-                (Some((fc, fcost, _)), Some((gc, gcost, _))) => {
+                (Some((fc, fcost)), Some((gc, gcost, _))) => {
                     assert_eq!(fc, gc, "choice differs at frac {frac}");
                     assert_eq!(fcost.time.to_bits(), gcost.time.to_bits());
                 }

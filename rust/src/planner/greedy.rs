@@ -11,8 +11,32 @@ use crate::cost::{PlanCost, Profiler};
 /// violates the limit.
 pub fn search(profiler: &Profiler, mem_limit: f64, b: usize)
               -> Option<(Vec<usize>, PlanCost)> {
+    // option 0 = fastest per op
+    search_from(profiler, mem_limit, b, &vec![0usize; profiler.n_ops()])
+}
+
+/// Greedy descent from an arbitrary start plan — the plan service's
+/// **warm-start repair**: a cached neighbor plan that no longer fits at
+/// this `(mem_limit, b)` is downgraded along the same
+/// best-memory-per-time moves until it does, which keeps it a useful
+/// incumbent instead of discarding it (a plan one batch away is usually
+/// one or two downgrades from optimal). Starting from the all-fastest
+/// plan is exactly [`search`]. Malformed starts (wrong length,
+/// out-of-menu indices — e.g. a stale cache entry) and unrepairable
+/// starts return `None`; since moves only advance menu indices, the
+/// loop terminates in at most `Σ |menu|` steps.
+pub fn search_from(profiler: &Profiler, mem_limit: f64, b: usize,
+                   start: &[usize]) -> Option<(Vec<usize>, PlanCost)> {
     let n = profiler.n_ops();
-    let mut choice = vec![0usize; n]; // option 0 = fastest per op
+    if start.len() != n
+        || start
+            .iter()
+            .zip(&profiler.tables)
+            .any(|(&c, t)| c >= t.options.len())
+    {
+        return None;
+    }
+    let mut choice = start.to_vec();
     let mut cost = profiler.evaluate(&choice, b);
     while cost.peak_mem > mem_limit {
         // candidate moves: advance any op to any later (smaller) option;
@@ -95,5 +119,36 @@ mod tests {
     fn infeasible_detected() {
         let p = profiler();
         assert!(search(&p, 1.0, 1).is_none());
+    }
+
+    #[test]
+    fn search_from_repairs_or_rejects() {
+        let p = profiler();
+        let dp = p.evaluate(&p.index_of(|d| d.is_pure_dp()), 2);
+        // starting from all-fastest is exactly the classic greedy
+        let a = search(&p, dp.peak_mem * 0.6, 2).unwrap();
+        let b = search_from(&p, dp.peak_mem * 0.6, 2,
+                            &vec![0; p.n_ops()])
+            .unwrap();
+        assert_eq!(a.0, b.0);
+        // a feasible start passes through untouched...
+        let (repaired, cost) =
+            search_from(&p, dp.peak_mem * 0.6, 2, &a.0).unwrap();
+        assert!(cost.peak_mem <= dp.peak_mem * 0.6);
+        assert_eq!(repaired, a.0, "feasible start needs no repair");
+        // ...while a start that no longer fits a tighter limit is
+        // downgraded until it does
+        let tight = search_from(&p, dp.peak_mem * 0.45, 2, &a.0);
+        if let Some((_, c)) = tight {
+            assert!(c.peak_mem <= dp.peak_mem * 0.45);
+        }
+        // malformed starts are rejected, not panicked on
+        assert!(search_from(&p, 1e18, 2, &vec![0; p.n_ops() + 1])
+            .is_none());
+        assert!(search_from(&p, 1e18, 2,
+                            &vec![usize::MAX; p.n_ops()])
+            .is_none());
+        // unrepairable: nothing fits one byte
+        assert!(search_from(&p, 1.0, 1, &vec![0; p.n_ops()]).is_none());
     }
 }

@@ -49,12 +49,16 @@ pub mod parallel;
 pub mod scheduler;
 
 pub use dfs::{DfsStats, search as dfs_search,
-              search_unfolded as dfs_search_unfolded};
+              search_unfolded as dfs_search_unfolded,
+              search_warm as dfs_search_warm};
 pub use exhaustive::search as exhaustive_search;
 pub use frontier::{FrontierStats, report as frontier_report,
                    search as frontier_search};
-pub use greedy::search as greedy_search;
-pub use parallel::{ParallelConfig, search as parallel_search};
+pub use greedy::{search as greedy_search,
+                 search_from as greedy_search_from};
+pub use parallel::{ParallelConfig, search as parallel_search,
+                   search_seeded as parallel_search_seeded,
+                   search_with_stats as parallel_search_with_stats};
 pub use scheduler::{Candidate, Scheduler, SchedulerResult, SweepStats};
 
 use crate::cost::{Decision, PlanCost, Profiler};

@@ -102,12 +102,46 @@ struct Task {
 pub fn search(profiler: &Profiler, mem_limit: f64, b: usize,
               cfg: &ParallelConfig)
               -> Option<(Vec<usize>, PlanCost, DfsStats)> {
+    search_seeded(profiler, mem_limit, b, cfg, None)
+}
+
+/// [`search`] with an optional warm-start seed (a full profiler-order
+/// choice vector, installed as the initial incumbent — and the shared
+/// bound's starting value — when feasible). The seed only tightens
+/// pruning, so the result is bit-identical to the unseeded search at any
+/// thread count; see `crate::planner::dfs::search_warm`.
+pub fn search_seeded(profiler: &Profiler, mem_limit: f64, b: usize,
+                     cfg: &ParallelConfig, warm: Option<&[usize]>)
+                     -> Option<(Vec<usize>, PlanCost, DfsStats)> {
+    let (r, stats) = search_with_stats(profiler, mem_limit, b, cfg, warm);
+    r.map(|(choice, cost)| (choice, cost, stats))
+}
+
+/// [`search_seeded`], but the merged [`DfsStats`] come back even when no
+/// plan exists — `stats.complete` is then the certificate that
+/// infeasibility was *proven* (every subtree searched to completion)
+/// rather than the node budget expiring first. The plan service caches
+/// "nothing fits" only under that certificate.
+pub fn search_with_stats(profiler: &Profiler, mem_limit: f64, b: usize,
+                         cfg: &ParallelConfig, warm: Option<&[usize]>)
+                         -> (Option<(Vec<usize>, PlanCost)>, DfsStats) {
     let prefold = Prefold::new(profiler);
     let frontiers = match cfg.engine {
         Engine::Frontier => Some(Frontiers::new(&prefold, profiler)),
         _ => None,
     };
-    let space = SearchSpace::for_batch(&prefold, profiler, mem_limit, b);
+    let mut space = SearchSpace::for_batch(&prefold, profiler, mem_limit, b);
+    if let Some(w) = warm {
+        // Same warm-seed repair as the serial engine (see
+        // `super::dfs::search_prefolded`): greedy-downgrade the
+        // neighbor plan until it fits, then offer it as the incumbent.
+        if let Some((repaired, _)) =
+            super::greedy::search_from(profiler, mem_limit, b, w)
+        {
+            space.offer_warm(&repaired);
+        }
+    }
+    let space = space;
 
     // Shrink the split depth until (a) the task count is bounded and
     // (b) dividing the node budget across tasks leaves each at least the
@@ -206,10 +240,12 @@ pub fn search(profiler: &Profiler, mem_limit: f64, b: usize,
         }
     }
 
-    let (_, choice_ordered) = best?;
-    let choice = space.unpermute(&choice_ordered);
-    let cost = profiler.evaluate(&choice, b);
-    Some((choice, cost, agg))
+    let result = best.map(|(_, choice_ordered)| {
+        let choice = space.unpermute(&choice_ordered);
+        let cost = profiler.evaluate(&choice, b);
+        (choice, cost)
+    });
+    (result, agg)
 }
 
 /// Branch-count product of the first `depth` split positions, saturating.

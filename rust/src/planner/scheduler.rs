@@ -98,6 +98,13 @@ pub struct SchedulerResult {
     /// The one-time frontier build's statistics (composition/point counts
     /// per class); `None` for the branch-and-bound engines.
     pub frontier: Option<FrontierStats>,
+    /// True when the sweep's stopping point is *proven*: either every
+    /// batch up to `max_batch` was feasible (no wall), or the search at
+    /// the first infeasible batch ran to completion. False means that
+    /// failing search's node budget expired first — "nothing fits at
+    /// b = n+1" is then the engine's verdict but not a certificate (the
+    /// plan service refuses to cache the wall in that case).
+    pub wall_complete: bool,
 }
 
 impl SchedulerResult {
@@ -121,6 +128,13 @@ pub struct Scheduler<'a> {
     /// Which exact engine every per-batch search runs
     /// ([`Engine::Frontier`] by default; identical results for all).
     pub engine: Engine,
+    /// Optional warm-start seed (profiler-order choice vector, typically
+    /// a cached neighbor query's plan handed down by the plan service):
+    /// re-priced per batch size and installed as the initial incumbent
+    /// wherever it is feasible. Only tightens pruning — the sweep result
+    /// is bit-identical with or without it (see
+    /// `crate::planner::dfs::search_warm`).
+    pub warm: Option<Vec<usize>>,
 }
 
 impl<'a> Scheduler<'a> {
@@ -132,6 +146,7 @@ impl<'a> Scheduler<'a> {
             max_batch,
             threads: super::parallel::default_threads(),
             engine: Engine::Frontier,
+            warm: None,
         }
     }
 
@@ -144,6 +159,14 @@ impl<'a> Scheduler<'a> {
     /// Pick the search engine (the CLI's `--engine`).
     pub fn with_engine(mut self, engine: Engine) -> Self {
         self.engine = engine;
+        self
+    }
+
+    /// Install a warm-start seed for every per-batch search (the plan
+    /// service's cached-neighbor incumbent). Bit-identical results,
+    /// fewer nodes.
+    pub fn with_warm(mut self, warm: Vec<usize>) -> Self {
+        self.warm = Some(warm);
         self
     }
 
@@ -178,6 +201,9 @@ impl<'a> Scheduler<'a> {
         let wall = AtomicUsize::new(usize::MAX);
         type Row = (usize, Vec<usize>, PlanCost, DfsStats);
         let found: Mutex<Vec<Row>> = Mutex::new(Vec::new());
+        // per failed batch: did that search run to completion (proven
+        // infeasible) or merely exhaust its node budget?
+        let failed: Mutex<Vec<(usize, bool)>> = Mutex::new(Vec::new());
 
         // Known bounded overshoot: a worker already searching some b when
         // another worker lowers the wall below it runs that search to
@@ -205,12 +231,16 @@ impl<'a> Scheduler<'a> {
                             b,
                             dfs::DEFAULT_NODE_BUDGET,
                             self.engine,
+                            self.warm.as_deref(),
                         ) {
-                            None => {
+                            (None, stats) => {
+                                failed.lock()
+                                      .unwrap()
+                                      .push((b, stats.complete));
                                 wall.fetch_min(b, Ordering::Relaxed);
                                 break;
                             }
-                            Some((choice, cost, stats)) => {
+                            (Some((choice, cost)), stats) => {
                                 found.lock()
                                      .unwrap()
                                      .push((b, choice, cost, stats));
@@ -240,6 +270,19 @@ impl<'a> Scheduler<'a> {
         if candidates.is_empty() {
             return None;
         }
+        // The first gap is b = n+1; when it is below the cap some worker
+        // searched exactly that batch and recorded its completeness (a
+        // worker skips a batch only when it is at or past the recorded
+        // wall, which is itself such a failure).
+        let n = candidates.len();
+        let wall_complete = n >= self.max_batch
+            || failed
+                .into_inner()
+                .unwrap()
+                .iter()
+                .find(|(b, _)| *b == n + 1)
+                .map(|&(_, complete)| complete)
+                .unwrap_or(false);
         let best = pick_best(&candidates);
         Some(SchedulerResult {
             best,
@@ -248,6 +291,7 @@ impl<'a> Scheduler<'a> {
             stats,
             candidates,
             frontier: frontiers.map(|f| f.stats()),
+            wall_complete,
         })
     }
 }
@@ -293,6 +337,8 @@ mod tests {
         let n = res.candidates.len();
         assert!(n >= 1);
         assert!(n < 1024, "must hit the wall, got {n}");
+        assert!(res.wall_complete,
+                "this tiny instance's wall search must run to completion");
         // batch sizes are exactly 1..=n
         for (i, c) in res.candidates.iter().enumerate() {
             assert_eq!(c.plan.batch, i + 1);

@@ -1,0 +1,451 @@
+//! The plan cache: an in-memory LRU over [`QueryKey`]s with optional
+//! JSON persistence (the production-planner pattern — cf. the Apollo
+//! router's query-plan cache — made trivially sound here because OSDP
+//! plans are deterministic and bit-exact, so a cached plan *is* the
+//! answer, not an approximation of it).
+//!
+//! Entries store **choice vectors only** (small integers), never plan
+//! costs: costs are re-derived through `Profiler::evaluate` on every
+//! hit, which is deterministic, avoids any float round-tripping through
+//! the JSON layer, and means a served hit is bit-identical to the search
+//! that populated it. The on-disk file is versioned by
+//! [`CACHE_SCHEMA_VERSION`] and [`COST_MODEL_EPOCH`]; a file from
+//! another epoch or schema is rejected wholesale (counted, never
+//! half-loaded), and individual entries are re-validated against the
+//! live profiler's menus at hit time so a corrupt or stale entry demotes
+//! to a miss instead of panicking the query path.
+
+use super::key::{CACHE_SCHEMA_VERSION, COST_MODEL_EPOCH, QueryKey,
+                 QueryShape};
+use crate::cost::Profiler;
+use crate::util::json::{self, Json};
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+
+/// Cache sizing + persistence knobs.
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    /// In-memory entry cap; least-recently-used entries evict beyond it.
+    pub capacity: usize,
+    /// Directory for the persistent cache file (`plan_cache.json`);
+    /// `None` keeps the cache memory-only.
+    pub disk_dir: Option<PathBuf>,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig { capacity: 256, disk_dir: None }
+    }
+}
+
+/// A cached answer. Infeasibility is cached too: "nothing fits" cost a
+/// full search to establish and is as deterministic as any plan.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CachedValue {
+    /// The `(time, lex)`-optimal profiler-order choice vector for a
+    /// [`QueryShape::Batch`] key.
+    Plan { choice: Vec<usize> },
+    /// No feasible plan at this key.
+    Infeasible,
+    /// A full sweep: per-batch winners for `b = 1..=choices.len()` and
+    /// the throughput-best index.
+    Sweep { choices: Vec<Vec<usize>>, best: usize },
+}
+
+impl CachedValue {
+    /// Entry sanity against the live profiler: every choice vector must
+    /// index real menu entries. A mismatch means the entry predates a
+    /// table change the epoch failed to capture (or the file was edited)
+    /// — callers demote it to a miss.
+    pub fn validates_against(&self, profiler: &Profiler) -> bool {
+        let ok = |choice: &[usize]| {
+            choice.len() == profiler.n_ops()
+                && choice
+                    .iter()
+                    .zip(&profiler.tables)
+                    .all(|(&c, t)| c < t.options.len())
+        };
+        match self {
+            CachedValue::Plan { choice } => ok(choice),
+            CachedValue::Infeasible => true,
+            CachedValue::Sweep { choices, best } => {
+                !choices.is_empty()
+                    && *best < choices.len()
+                    && choices.iter().all(|c| ok(c))
+            }
+        }
+    }
+}
+
+struct Slot {
+    value: CachedValue,
+    last_used: u64,
+}
+
+/// LRU plan cache. All counters live in the owning service's
+/// `ServiceStats`; this type only reports what happened per call.
+pub struct PlanCache {
+    cfg: CacheConfig,
+    map: HashMap<QueryKey, Slot>,
+    tick: u64,
+}
+
+impl PlanCache {
+    /// Open a cache: empty, or primed from `disk_dir`'s
+    /// `plan_cache.json` when one exists. Returns the cache and the
+    /// number of entries rejected as stale (wrong schema/epoch or
+    /// unparseable — always the whole file or nothing).
+    pub fn open(cfg: CacheConfig) -> (PlanCache, u64) {
+        let mut cache = PlanCache { cfg, map: HashMap::new(), tick: 0 };
+        let stale = cache.load_disk();
+        (cache, stale)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Look up a key, refreshing its recency. The caller counts the
+    /// hit/miss.
+    pub fn get(&mut self, key: &QueryKey) -> Option<&CachedValue> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(key).map(|slot| {
+            slot.last_used = tick;
+            &slot.value
+        })
+    }
+
+    /// Drop an entry (a hit that failed validation).
+    pub fn remove(&mut self, key: &QueryKey) {
+        self.map.remove(key);
+    }
+
+    /// Insert (or replace) an entry; returns how many entries the LRU
+    /// cap evicted to make room.
+    pub fn insert(&mut self, key: QueryKey, value: CachedValue) -> u64 {
+        self.tick += 1;
+        self.map.insert(key, Slot { value, last_used: self.tick });
+        let mut evicted = 0;
+        while self.map.len() > self.cfg.capacity.max(1) {
+            // O(n) scan — the cap is a few hundred entries and eviction
+            // is off the planning hot path. Recency ties cannot happen
+            // (every touch gets a fresh tick).
+            let Some(oldest) = self
+                .map
+                .iter()
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| *k)
+            else {
+                break;
+            };
+            self.map.remove(&oldest);
+            evicted += 1;
+        }
+        evicted
+    }
+
+    /// The warm-start neighbor of `key`: the feasible single-batch entry
+    /// sharing its structural fingerprint (any batch, any memory limit —
+    /// but not the key itself, which would have been a hit) whose
+    /// `(batch distance, limit distance)` to the query is smallest.
+    /// Deterministic: the rank tuple ends in the entry's own
+    /// `(batch, limit bits)`, which is unique per key, so map iteration
+    /// order cannot leak through.
+    pub fn neighbor(&self, key: &QueryKey)
+                    -> Option<(Vec<usize>, usize)> {
+        let target_b = match key.shape {
+            QueryShape::Batch(b) => b,
+            QueryShape::Sweep { .. } => 1,
+        };
+        let mem_q = key.mem_limit();
+        self.map
+            .iter()
+            .filter(|(k, _)| k.structure == key.structure && **k != *key)
+            .filter_map(|(k, slot)| {
+                let QueryShape::Batch(nb) = k.shape else { return None };
+                let CachedValue::Plan { choice } = &slot.value else {
+                    return None;
+                };
+                let mem_dist = (k.mem_limit() - mem_q).abs();
+                Some((
+                    (nb.abs_diff(target_b), mem_dist.to_bits(), nb,
+                     k.mem_limit_bits),
+                    choice,
+                    nb,
+                ))
+            })
+            .min_by_key(|(rank, _, _)| *rank)
+            .map(|(_, choice, nb)| (choice.clone(), nb))
+    }
+
+    // ----- persistence -----
+
+    fn disk_path(&self) -> Option<PathBuf> {
+        self.cfg.disk_dir.as_ref().map(|d| d.join("plan_cache.json"))
+    }
+
+    /// The serialized disk image: target path + JSON document (`None`
+    /// without a `disk_dir`). Pure in-memory work — the owning service
+    /// snapshots this under its lock and performs the actual write
+    /// *outside* it ([`write_cache_file`]), so slow disks never stall
+    /// concurrent cache hits.
+    pub fn serialize(&self) -> Option<(PathBuf, String)> {
+        let path = self.disk_path()?;
+        let mut entries = BTreeMap::new();
+        for (k, slot) in &self.map {
+            entries.insert(k.id(), value_to_json(&slot.value));
+        }
+        let mut doc = BTreeMap::new();
+        doc.insert("schema".to_string(),
+                   Json::Num(CACHE_SCHEMA_VERSION as f64));
+        doc.insert("epoch".to_string(), Json::Num(COST_MODEL_EPOCH as f64));
+        doc.insert("entries".to_string(), Json::Obj(entries));
+        Some((path, json::to_string(&Json::Obj(doc))))
+    }
+
+    /// Write every entry to disk (no-op without a `disk_dir`). Errors
+    /// are returned, not panicked — a read-only disk degrades the
+    /// service to memory-only caching.
+    pub fn persist(&self) -> Result<(), String> {
+        match self.serialize() {
+            None => Ok(()),
+            Some((path, doc)) => write_cache_file(&path, &doc),
+        }
+    }
+
+    /// Load the disk file into the (empty) cache. Returns the stale
+    /// count: entries discarded because the file's schema or epoch does
+    /// not match, or the file/entries do not parse.
+    fn load_disk(&mut self) -> u64 {
+        let Some(path) = self.disk_path() else { return 0 };
+        let Ok(text) = std::fs::read_to_string(&path) else { return 0 };
+        let Ok(doc) = Json::parse(&text) else { return 1 };
+        let schema = doc.get("schema").as_usize();
+        let epoch = doc.get("epoch").as_usize();
+        let Some(entries) = doc.get("entries").as_obj() else { return 1 };
+        if schema != Some(CACHE_SCHEMA_VERSION as usize)
+            || epoch != Some(COST_MODEL_EPOCH as usize)
+        {
+            return entries.len() as u64;
+        }
+        let mut stale = 0;
+        for (id, v) in entries {
+            match (QueryKey::from_id(id), value_from_json(v)) {
+                (Some(key), Some(value)) => {
+                    self.insert(key, value);
+                }
+                _ => stale += 1,
+            }
+        }
+        stale
+    }
+}
+
+/// Write a serialized cache image ([`PlanCache::serialize`]) to disk,
+/// creating the parent directory as needed.
+pub fn write_cache_file(path: &std::path::Path, doc: &str)
+                        -> Result<(), String> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| format!("creating {dir:?}: {e}"))?;
+    }
+    std::fs::write(path, doc).map_err(|e| format!("writing {path:?}: {e}"))
+}
+
+fn choice_to_json(choice: &[usize]) -> Json {
+    Json::Arr(choice.iter().map(|&c| Json::Num(c as f64)).collect())
+}
+
+fn choice_from_json(v: &Json) -> Option<Vec<usize>> {
+    v.as_arr()?.iter().map(Json::as_usize).collect()
+}
+
+fn value_to_json(v: &CachedValue) -> Json {
+    let mut o = BTreeMap::new();
+    match v {
+        CachedValue::Plan { choice } => {
+            o.insert("kind".into(), Json::Str("plan".into()));
+            o.insert("choice".into(), choice_to_json(choice));
+        }
+        CachedValue::Infeasible => {
+            o.insert("kind".into(), Json::Str("infeasible".into()));
+        }
+        CachedValue::Sweep { choices, best } => {
+            o.insert("kind".into(), Json::Str("sweep".into()));
+            o.insert("best".into(), Json::Num(*best as f64));
+            o.insert(
+                "choices".into(),
+                Json::Arr(choices.iter().map(|c| choice_to_json(c))
+                                 .collect()),
+            );
+        }
+    }
+    Json::Obj(o)
+}
+
+fn value_from_json(v: &Json) -> Option<CachedValue> {
+    match v.get("kind").as_str()? {
+        "plan" => Some(CachedValue::Plan {
+            choice: choice_from_json(v.get("choice"))?,
+        }),
+        "infeasible" => Some(CachedValue::Infeasible),
+        "sweep" => {
+            let best = v.get("best").as_usize()?;
+            let choices: Option<Vec<Vec<usize>>> = v
+                .get("choices")
+                .as_arr()?
+                .iter()
+                .map(choice_from_json)
+                .collect();
+            let choices = choices?;
+            if best >= choices.len() {
+                return None;
+            }
+            Some(CachedValue::Sweep { choices, best })
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::key::StructKey;
+
+    fn key(b: usize, mem: f64) -> QueryKey {
+        QueryKey {
+            structure: StructKey([1, 2]),
+            mem_limit_bits: mem.to_bits(),
+            shape: QueryShape::Batch(b),
+        }
+    }
+
+    fn plan(c: Vec<usize>) -> CachedValue {
+        CachedValue::Plan { choice: c }
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let (mut cache, stale) =
+            PlanCache::open(CacheConfig { capacity: 2, disk_dir: None });
+        assert_eq!(stale, 0);
+        assert!(cache.is_empty());
+        assert_eq!(cache.insert(key(1, 8e9), plan(vec![0])), 0);
+        assert_eq!(cache.insert(key(2, 8e9), plan(vec![1])), 0);
+        // touch batch 1 so batch 2 is the LRU victim
+        assert!(cache.get(&key(1, 8e9)).is_some());
+        assert_eq!(cache.insert(key(3, 8e9), plan(vec![2])), 1);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(&key(2, 8e9)).is_none(), "LRU entry evicted");
+        assert!(cache.get(&key(1, 8e9)).is_some());
+        assert!(cache.get(&key(3, 8e9)).is_some());
+    }
+
+    #[test]
+    fn neighbor_prefers_closest_batch_then_limit() {
+        let (mut cache, _) = PlanCache::open(CacheConfig::default());
+        cache.insert(key(1, 8e9), plan(vec![10]));
+        cache.insert(key(6, 8e9), plan(vec![60]));
+        cache.insert(key(4, 9e9), plan(vec![49]));
+        cache.insert(key(4, 7e9), plan(vec![47]));
+        // infeasible and sweep entries are never neighbors
+        cache.insert(key(5, 8e9), CachedValue::Infeasible);
+        // exact key is excluded even though it matches best
+        cache.insert(key(4, 8e9), plan(vec![48]));
+        let (choice, nb) = cache.neighbor(&key(4, 8e9)).unwrap();
+        // batch distance 0 beats distance 1; among the b=4 entries the
+        // limit distance decides (1e9 both ways -> tie broken by the
+        // rank tuple's trailing mem bits: 7e9 < 9e9 as bits)
+        assert_eq!(nb, 4);
+        assert_eq!(choice, vec![47]);
+        // a sweep key's neighbor target is b=1
+        let sweep = QueryKey {
+            shape: QueryShape::Sweep { max_batch: 16 },
+            ..key(0, 8e9)
+        };
+        let (choice, nb) = cache.neighbor(&sweep).unwrap();
+        assert_eq!((choice, nb), (vec![10], 1));
+        // no structural sibling -> no neighbor
+        let other = QueryKey { structure: StructKey([9, 9]), ..key(4, 8e9) };
+        assert!(cache.neighbor(&other).is_none());
+    }
+
+    #[test]
+    fn disk_round_trip_and_epoch_rejection() {
+        let dir = std::env::temp_dir().join(format!(
+            "osdp-cache-test-{}-{}",
+            std::process::id(),
+            "roundtrip"
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = CacheConfig { capacity: 16, disk_dir: Some(dir.clone()) };
+        let (mut cache, stale) = PlanCache::open(cfg.clone());
+        assert_eq!(stale, 0);
+        cache.insert(key(4, 8e9), plan(vec![0, 2, 1]));
+        cache.insert(
+            key(1, 8e9).with_shape(QueryShape::Sweep { max_batch: 8 }),
+            CachedValue::Sweep { choices: vec![vec![0], vec![1]], best: 1 },
+        );
+        cache.insert(key(9, 8e9), CachedValue::Infeasible);
+        cache.persist().unwrap();
+
+        let (mut reloaded, stale) = PlanCache::open(cfg.clone());
+        assert_eq!(stale, 0);
+        assert_eq!(reloaded.len(), 3);
+        assert_eq!(reloaded.get(&key(4, 8e9)),
+                   Some(&plan(vec![0, 2, 1])));
+        assert_eq!(reloaded.get(&key(9, 8e9)),
+                   Some(&CachedValue::Infeasible));
+
+        // tamper with the epoch: the whole file must be rejected
+        let path = dir.join("plan_cache.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        let mut obj = doc.as_obj().unwrap().clone();
+        obj.insert("epoch".into(),
+                   Json::Num((COST_MODEL_EPOCH + 1) as f64));
+        std::fs::write(&path, json::to_string(&Json::Obj(obj))).unwrap();
+        let (stale_cache, stale) = PlanCache::open(cfg.clone());
+        assert!(stale_cache.is_empty(), "stale epoch must load nothing");
+        assert_eq!(stale, 3);
+
+        // and a garbage file counts as one stale rejection
+        std::fs::write(&path, "not json").unwrap();
+        let (garbage, stale) = PlanCache::open(cfg);
+        assert!(garbage.is_empty());
+        assert_eq!(stale, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn values_validate_against_menu_shape() {
+        let m = crate::model::build_gpt(
+            &crate::model::GptDims::uniform("t", 1000, 64, 2, 128, 4));
+        let c = crate::config::Cluster::rtx_titan(8, 8.0);
+        let s = crate::config::SearchConfig {
+            granularities: vec![0],
+            ..Default::default()
+        };
+        let p = Profiler::new(&m, &c, &s);
+        let good = p.index_of(|d| d.is_pure_dp());
+        assert!(plan(good.clone()).validates_against(&p));
+        assert!(CachedValue::Infeasible.validates_against(&p));
+        let mut short = good.clone();
+        short.pop();
+        assert!(!plan(short).validates_against(&p));
+        let mut wild = good.clone();
+        wild[0] = 1_000_000;
+        assert!(!plan(wild).validates_against(&p));
+        assert!(CachedValue::Sweep { choices: vec![good.clone()], best: 0 }
+            .validates_against(&p));
+        assert!(!CachedValue::Sweep { choices: vec![good], best: 3 }
+            .validates_against(&p));
+        assert!(!CachedValue::Sweep { choices: vec![], best: 0 }
+            .validates_against(&p));
+    }
+}

@@ -1,0 +1,241 @@
+//! In-flight request coalescing ("single-flight"): N concurrent
+//! identical queries run the planner **once**; the other N−1 callers
+//! block on the leader's flight and share its result. Sound for OSDP
+//! because planning is deterministic and bit-exact — every caller would
+//! have computed the same answer, so sharing the leader's is not an
+//! approximation.
+//!
+//! Ordering contract with the cache (see `super::PlanService`): the
+//! leader inserts its result into the cache *inside* the computation,
+//! before the flight resolves and is retired — so a caller that misses
+//! the flight entirely (arrives after retirement) necessarily hits the
+//! cache instead of becoming a second leader. The service's query path
+//! returns structured `PlanError`s instead of panicking; should a
+//! leader unwind anyway, a drop guard resolves its flight with the
+//! caller-supplied `poison` value and retires it, so waiters get an
+//! error instead of hanging and the key never becomes a permanent tar
+//! pit.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Flight<R> {
+    slot: Mutex<Option<R>>,
+    done: Condvar,
+}
+
+/// Single-flight gate, keyed by string (the service uses
+/// `QueryKey::id()`).
+pub struct Coalescer<R> {
+    flights: Mutex<HashMap<String, Arc<Flight<R>>>>,
+}
+
+impl<R: Clone> Coalescer<R> {
+    pub fn new() -> Coalescer<R> {
+        Coalescer { flights: Mutex::new(HashMap::new()) }
+    }
+
+    /// Run `compute` under the key, coalescing with any in-flight run of
+    /// the same key. Returns `(result, led)`: `led` is true for the one
+    /// caller that actually computed; joiners get a clone of the
+    /// leader's result. If `compute` unwinds, the flight resolves with
+    /// `poison` (waiters see it; the panic still propagates here).
+    pub fn run(&self, key: &str, poison: R,
+               compute: impl FnOnce() -> R) -> (R, bool) {
+        let existing = {
+            let mut flights = self.flights.lock().unwrap();
+            match flights.get(key) {
+                Some(f) => Some(f.clone()),
+                None => {
+                    let f = Arc::new(Flight {
+                        slot: Mutex::new(None),
+                        done: Condvar::new(),
+                    });
+                    flights.insert(key.to_string(), f);
+                    None
+                }
+            }
+        };
+        match existing {
+            Some(flight) => {
+                let mut slot = flight.slot.lock().unwrap();
+                while slot.is_none() {
+                    slot = flight.done.wait(slot).unwrap();
+                }
+                (slot.clone().expect("flight resolved"), false)
+            }
+            None => {
+                let mut guard =
+                    PoisonGuard { coalescer: self, key, poison: Some(poison) };
+                let result = compute();
+                guard.poison = None; // disarm: normal resolution below
+                drop(guard);
+                self.resolve(key, result.clone());
+                (result, true)
+            }
+        }
+    }
+
+    /// Publish a flight's value (waking every joiner), then retire it.
+    /// Publication happens BEFORE retirement: a joiner holding the Arc
+    /// wakes with the value; a caller arriving after retirement starts
+    /// fresh (and, per the module contract, hits the cache the leader
+    /// filled). No-op if the flight is already gone.
+    fn resolve(&self, key: &str, value: R) {
+        let flight = self.flights.lock().unwrap().get(key).cloned();
+        if let Some(f) = flight {
+            *f.slot.lock().unwrap() = Some(value);
+            f.done.notify_all();
+            self.flights.lock().unwrap().remove(key);
+        }
+    }
+}
+
+/// Resolves the leader's flight with the poison value when the compute
+/// closure unwinds (armed iff `poison` is still `Some` at drop).
+struct PoisonGuard<'a, R: Clone> {
+    coalescer: &'a Coalescer<R>,
+    key: &'a str,
+    poison: Option<R>,
+}
+
+impl<'a, R: Clone> Drop for PoisonGuard<'a, R> {
+    fn drop(&mut self) {
+        if let Some(p) = self.poison.take() {
+            self.coalescer.resolve(self.key, p);
+        }
+    }
+}
+
+impl<R: Clone> Default for Coalescer<R> {
+    fn default() -> Self {
+        Coalescer::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Barrier;
+
+    #[test]
+    fn sequential_runs_each_lead() {
+        let c: Coalescer<u32> = Coalescer::new();
+        let (r1, led1) = c.run("k", 0, || 7);
+        let (r2, led2) = c.run("k", 0, || 8);
+        assert_eq!((r1, led1), (7, true));
+        // the first flight retired, so the second run computes afresh
+        assert_eq!((r2, led2), (8, true));
+    }
+
+    #[test]
+    fn panicking_leader_poisons_waiters_instead_of_stranding_them() {
+        let c: Coalescer<i64> = Coalescer::new();
+        let entered = AtomicUsize::new(0);
+        let release = AtomicUsize::new(0);
+        let (leader_panicked, joiner_result) = std::thread::scope(|scope| {
+            let leader = scope.spawn(|| {
+                std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| {
+                        c.run("k", -1, || {
+                            entered.store(1, Ordering::SeqCst);
+                            while release.load(Ordering::SeqCst) == 0 {
+                                std::thread::yield_now();
+                            }
+                            panic!("planner exploded");
+                        })
+                    }),
+                )
+                .is_err()
+            });
+            while entered.load(Ordering::SeqCst) == 0 {
+                std::thread::yield_now();
+            }
+            let joiner = scope.spawn(|| c.run("k", -2, || 99));
+            // give the joiner time to attach to the in-flight entry,
+            // then let the leader unwind
+            std::thread::sleep(std::time::Duration::from_millis(100));
+            release.store(1, Ordering::SeqCst);
+            (leader.join().unwrap(), joiner.join().unwrap())
+        });
+        assert!(leader_panicked);
+        // the joiner either coalesced onto the doomed flight (leader's
+        // poison, led=false) or arrived after it was retired and
+        // computed fresh (99, led=true) — it must never hang or see -2
+        match joiner_result {
+            (-1, false) | (99, true) => {}
+            other => panic!("unexpected joiner outcome {other:?}"),
+        }
+        // the key is not a tar pit: a later run leads normally
+        assert_eq!(c.run("k", -3, || 5), (5, true));
+    }
+
+    #[test]
+    fn concurrent_identical_keys_compute_once() {
+        let c: Coalescer<usize> = Coalescer::new();
+        let runs = AtomicUsize::new(0);
+        let joiners_started = AtomicUsize::new(0);
+        let release = AtomicUsize::new(0);
+        let results: Vec<(usize, bool)> = std::thread::scope(|scope| {
+            // the leader computes while captive: its flight stays
+            // in-flight until every joiner has reached run(), so the
+            // joiners deterministically coalesce onto it
+            let leader = scope.spawn(|| {
+                c.run("k", 0, || {
+                    runs.fetch_add(1, Ordering::SeqCst);
+                    while release.load(Ordering::SeqCst) == 0 {
+                        std::thread::yield_now();
+                    }
+                    42
+                })
+            });
+            let joiners: Vec<_> = (0..7)
+                .map(|_| {
+                    scope.spawn(|| {
+                        joiners_started.fetch_add(1, Ordering::SeqCst);
+                        c.run("k", 0, || {
+                            runs.fetch_add(1, Ordering::SeqCst);
+                            42
+                        })
+                    })
+                })
+                .collect();
+            while joiners_started.load(Ordering::SeqCst) < 7 {
+                std::thread::yield_now();
+            }
+            // small grace between "joiner announced itself" and "joiner
+            // looked the flight up" (a few instructions), then let the
+            // leader finish
+            std::thread::sleep(std::time::Duration::from_millis(100));
+            release.store(1, Ordering::SeqCst);
+            let mut out = vec![leader.join().unwrap()];
+            out.extend(joiners.into_iter().map(|h| h.join().unwrap()));
+            out
+        });
+        assert_eq!(runs.load(Ordering::SeqCst), 1,
+                   "exactly one compute across 8 concurrent callers");
+        assert_eq!(results.iter().filter(|(_, led)| *led).count(), 1);
+        assert!(results[0].1, "the captive caller led");
+        assert!(results.iter().all(|(r, _)| *r == 42));
+    }
+
+    #[test]
+    fn distinct_keys_do_not_coalesce() {
+        let c: Coalescer<&'static str> = Coalescer::new();
+        let barrier = Barrier::new(2);
+        let (a, b) = std::thread::scope(|scope| {
+            let ha = scope.spawn(|| {
+                barrier.wait();
+                c.run("a", "poisoned", || "a")
+            });
+            let hb = scope.spawn(|| {
+                barrier.wait();
+                c.run("b", "poisoned", || "b")
+            });
+            (ha.join().unwrap(), hb.join().unwrap())
+        });
+        assert_eq!(a, ("a", true));
+        assert_eq!(b, ("b", true));
+    }
+}

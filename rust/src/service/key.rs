@@ -1,0 +1,277 @@
+//! Canonical plan-query keys: the cache identity of a planning request.
+//!
+//! A query's answer depends on exactly three things: the Profiler's
+//! per-operator cost tables (which already bake in the model, the
+//! cluster's link/compute model, the granularity menu, checkpointing,
+//! and the sharding-scope knob — see [`crate::cost::menu::table_key`]),
+//! the device memory limit, and the query shape (one batch size, or a
+//! sweep capped at `max_batch`). The key therefore fingerprints the
+//! **profiler**, not the configuration text: two configs that spell the
+//! same search problem differently (TOML field order, defaulted vs
+//! explicit knobs, a `--cluster` preset vs its fields written out)
+//! collide on the same key, while any search-relevant change — limit,
+//! granularities, `hybrid_scopes`, checkpointing, a cost-model epoch
+//! bump — changes it. Engine choice and thread count are deliberately
+//! *not* part of the key: every engine returns the bit-identical
+//! `(time, lex)` optimum at any thread count (the repo's load-bearing
+//! invariant), so plans cached by one engine are valid answers for all.
+//!
+//! The memory limit and the shape stay outside the structural
+//! fingerprint so the warm-start pass can find **neighbor** entries:
+//! same structure, different batch or limit (see `super::warm`).
+
+use crate::cost::Profiler;
+use crate::cost::menu::table_key;
+
+/// Cost-model epoch. Bump whenever the Profiler's cost semantics or the
+/// choice-vector encoding changes in a way the table bits do not already
+/// capture (they capture almost everything; the epoch is the belt to
+/// their suspenders). Folded into every structural fingerprint, so
+/// entries persisted by an older cost model can never be served.
+pub const COST_MODEL_EPOCH: u64 = 5;
+
+/// On-disk cache schema version (`super::cache`). Bump on any change to
+/// the persisted JSON layout; mismatching files are rejected wholesale.
+pub const CACHE_SCHEMA_VERSION: u64 = 1;
+
+/// 128-bit structural fingerprint: two independent FNV-1a/64 lanes over
+/// the search-relevant word stream (epoch, cluster shape, per-table
+/// [`crate::cost::menu::TableKey`] bits). Two lanes because a single
+/// 64-bit FNV is too collidable to gate cache correctness on; jointly
+/// colliding both lanes on real inputs is vanishingly unlikely, and the
+/// cost-model epoch bounds the blast radius of any collision to one
+/// epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct StructKey(pub [u64; 2]);
+
+impl StructKey {
+    /// Hex spelling used in the on-disk cache and log lines.
+    pub fn hex(&self) -> String {
+        format!("{:016x}{:016x}", self.0[0], self.0[1])
+    }
+
+    /// Parse [`StructKey::hex`] (32 hex digits).
+    pub fn from_hex(s: &str) -> Option<StructKey> {
+        if s.len() != 32 {
+            return None;
+        }
+        let hi = u64::from_str_radix(&s[..16], 16).ok()?;
+        let lo = u64::from_str_radix(&s[16..], 16).ok()?;
+        Some(StructKey([hi, lo]))
+    }
+}
+
+/// What the query asks for: one batch size, or the Scheduler's sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QueryShape {
+    /// Plan a single per-device batch size.
+    Batch(usize),
+    /// Sweep batch sizes `1..=max_batch` and keep the throughput winner.
+    Sweep { max_batch: usize },
+}
+
+impl QueryShape {
+    /// Compact spelling (`b4` / `s64`) for the on-disk key.
+    pub fn tag(&self) -> String {
+        match self {
+            QueryShape::Batch(b) => format!("b{b}"),
+            QueryShape::Sweep { max_batch } => format!("s{max_batch}"),
+        }
+    }
+
+    /// Parse [`QueryShape::tag`]. Total: any malformed tag (empty,
+    /// multi-byte lead, bad number) is `None`, never a panic — this
+    /// parses on-disk cache keys.
+    pub fn from_tag(s: &str) -> Option<QueryShape> {
+        let kind = s.get(..1)?;
+        let n: usize = s.get(1..)?.parse().ok()?;
+        match kind {
+            "b" => Some(QueryShape::Batch(n)),
+            "s" => Some(QueryShape::Sweep { max_batch: n }),
+            _ => None,
+        }
+    }
+}
+
+/// The full cache key: structural fingerprint + memory limit + shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct QueryKey {
+    pub structure: StructKey,
+    /// `mem_limit.to_bits()` — exact, no float round-tripping.
+    pub mem_limit_bits: u64,
+    pub shape: QueryShape,
+}
+
+impl QueryKey {
+    /// Build the key for a planning query. The profiler must be the one
+    /// the search will run on (the fingerprint covers its tables
+    /// bit-for-bit).
+    pub fn for_query(profiler: &Profiler, mem_limit: f64,
+                     shape: QueryShape) -> QueryKey {
+        QueryKey {
+            structure: fingerprint(profiler),
+            mem_limit_bits: mem_limit.to_bits(),
+            shape,
+        }
+    }
+
+    /// The memory limit this key was built at.
+    pub fn mem_limit(&self) -> f64 {
+        f64::from_bits(self.mem_limit_bits)
+    }
+
+    /// Same structure and limit, different shape — how a sweep names the
+    /// per-batch entries it populates.
+    pub fn with_shape(&self, shape: QueryShape) -> QueryKey {
+        QueryKey { shape, ..*self }
+    }
+
+    /// Canonical string id: `<struct hex>-<mem bits hex>-<shape>`. Used
+    /// as the on-disk entry name and the request-coalescing key.
+    pub fn id(&self) -> String {
+        format!("{}-{:016x}-{}", self.structure.hex(), self.mem_limit_bits,
+                self.shape.tag())
+    }
+
+    /// Parse [`QueryKey::id`].
+    pub fn from_id(s: &str) -> Option<QueryKey> {
+        let mut parts = s.splitn(3, '-');
+        let structure = StructKey::from_hex(parts.next()?)?;
+        let mem_limit_bits = u64::from_str_radix(parts.next()?, 16).ok()?;
+        let shape = QueryShape::from_tag(parts.next()?)?;
+        Some(QueryKey { structure, mem_limit_bits, shape })
+    }
+}
+
+/// Structural fingerprint of a profiler (plus the cluster shape the
+/// throughput report depends on), via the two FNV lanes.
+pub fn fingerprint(profiler: &Profiler) -> StructKey {
+    let mut lanes = [Fnv::new(FNV_OFFSET), Fnv::new(FNV_OFFSET_ALT)];
+    let mut feed = |w: u64| {
+        for l in &mut lanes {
+            l.write_u64(w);
+        }
+    };
+    feed(COST_MODEL_EPOCH);
+    feed(profiler.cluster.n_devices as u64);
+    feed(profiler.cluster.devices_per_node as u64);
+    feed(profiler.n_ops() as u64);
+    for t in &profiler.tables {
+        let key = table_key(t);
+        let bits = key.bits();
+        feed(bits.len() as u64);
+        for &w in bits {
+            feed(w);
+        }
+    }
+    StructKey([lanes[0].finish(), lanes[1].finish()])
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// Second lane: FNV-1a seeded with the golden-ratio constant instead of
+/// the standard offset basis, so the lanes disagree on any single-lane
+/// collision.
+const FNV_OFFSET_ALT: u64 = 0x9e37_79b9_7f4a_7c15;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over bytes (little-endian u64 feeding).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new(offset: u64) -> Fnv {
+        Fnv(offset)
+    }
+
+    fn write_u64(&mut self, w: u64) {
+        for byte in w.to_le_bytes() {
+            self.0 ^= byte as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Cluster, SearchConfig};
+    use crate::model::{GptDims, build_gpt};
+
+    fn profiler(grans: Vec<usize>) -> Profiler {
+        let m = build_gpt(&GptDims::uniform("t", 1000, 64, 2, 128, 4));
+        let c = Cluster::rtx_titan(8, 8.0);
+        let s = SearchConfig { granularities: grans, ..Default::default() };
+        Profiler::new(&m, &c, &s)
+    }
+
+    #[test]
+    fn fnv_lanes_match_reference_vectors() {
+        // Cross-language fixture shared with python/mirror/
+        // service_mirror.py: FNV-1a/64 of the single word 0x6f736470
+        // ("osdp" LE) from both lane offsets.
+        let mut a = Fnv::new(FNV_OFFSET);
+        a.write_u64(0x6f73_6470);
+        let mut b = Fnv::new(FNV_OFFSET_ALT);
+        b.write_u64(0x6f73_6470);
+        assert_eq!(a.finish(), 0xc57a_be0d_2d23_77bb);
+        assert_eq!(b.finish(), 0x065f_a0a7_968e_0c6b);
+    }
+
+    #[test]
+    fn same_profiler_same_key_different_menus_differ() {
+        let a = fingerprint(&profiler(vec![0, 4]));
+        let b = fingerprint(&profiler(vec![0, 4]));
+        let c = fingerprint(&profiler(vec![0, 2, 4]));
+        assert_eq!(a, b);
+        assert_ne!(a, c, "granularity change must change the key");
+    }
+
+    #[test]
+    fn limit_and_shape_stay_outside_the_structure() {
+        let p = profiler(vec![0]);
+        let a = QueryKey::for_query(&p, 8e9, QueryShape::Batch(4));
+        let b = QueryKey::for_query(&p, 9e9, QueryShape::Batch(4));
+        let c = QueryKey::for_query(&p, 8e9, QueryShape::Batch(5));
+        let d = QueryKey::for_query(&p, 8e9,
+                                    QueryShape::Sweep { max_batch: 4 });
+        assert_eq!(a.structure, b.structure);
+        assert_eq!(a.structure, c.structure);
+        assert_ne!(a, b, "limit is part of the key");
+        assert_ne!(a, c, "batch is part of the key");
+        assert_ne!(a, d, "shape is part of the key");
+        assert_eq!(a.mem_limit(), 8e9);
+        assert_eq!(a.with_shape(QueryShape::Batch(5)), c);
+    }
+
+    #[test]
+    fn id_round_trips() {
+        let p = profiler(vec![0]);
+        for shape in [QueryShape::Batch(7),
+                      QueryShape::Sweep { max_batch: 64 }] {
+            let k = QueryKey::for_query(&p, 8.5e9, shape);
+            assert_eq!(QueryKey::from_id(&k.id()), Some(k));
+        }
+        assert_eq!(QueryKey::from_id("garbage"), None);
+        assert_eq!(QueryKey::from_id(""), None);
+        let k = QueryKey::for_query(&p, 8.5e9, QueryShape::Batch(1));
+        assert_eq!(StructKey::from_hex(&k.structure.hex()),
+                   Some(k.structure));
+        assert_eq!(QueryShape::from_tag("b12"), Some(QueryShape::Batch(12)));
+        assert_eq!(QueryShape::from_tag("s3"),
+                   Some(QueryShape::Sweep { max_batch: 3 }));
+        assert_eq!(QueryShape::from_tag("x3"), None);
+    }
+
+    #[test]
+    fn cluster_shape_enters_the_structure() {
+        let m = build_gpt(&GptDims::uniform("t", 1000, 64, 2, 128, 4));
+        let s = SearchConfig { granularities: vec![0],
+                               ..Default::default() };
+        let p8 = Profiler::new(&m, &Cluster::rtx_titan(8, 8.0), &s);
+        let p4 = Profiler::new(&m, &Cluster::rtx_titan(4, 8.0), &s);
+        assert_ne!(fingerprint(&p8), fingerprint(&p4));
+    }
+}

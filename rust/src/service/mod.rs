@@ -1,0 +1,925 @@
+//! The **plan service**: OSDP's automated plan search behind a caching,
+//! deduplicating, warm-starting service layer — the production-planner
+//! architecture (cf. the Apollo router's query planner: a deterministic
+//! planning traversal behind a plan cache with planning statistics, or
+//! GSPMD's reusable auto-partitioner service) applied to sharded-data-
+//! parallel planning. OSDP makes the pattern unusually clean: every
+//! search engine returns the **bit-identical** `(time, lex)` optimum at
+//! any thread count, so a cached plan, a coalesced plan, and a
+//! warm-started plan are all *exactly* the plan a cold search would have
+//! produced — property-tested, not hoped.
+//!
+//! The layers, front to back (each its own module):
+//!
+//! * [`key`] — canonical query identity: a fingerprint of the Profiler's
+//!   bit-exact cost tables (the [`crate::cost::menu::TableKey`]
+//!   discipline), the memory limit, and the query shape; versioned by a
+//!   cost-model epoch.
+//! * [`cache`] — in-memory LRU + optional on-disk JSON persistence;
+//!   stores choice vectors only (costs re-derive bit-identically).
+//! * [`coalesce`] — single-flight deduplication: N concurrent identical
+//!   queries run one planner search.
+//! * [`warm`] — cache-miss warm starts from neighbor entries (same
+//!   structure, different batch/limit), provably result-preserving.
+//! * [`server`] — the line-oriented request protocol behind `osdp serve`
+//!   and `osdp query`.
+//!
+//! Counters for all of it surface as [`ServiceStats`], alongside the
+//! planner's own `DfsStats`/`SweepStats`/`FrontierStats`.
+
+pub mod cache;
+pub mod coalesce;
+pub mod key;
+pub mod server;
+pub mod warm;
+
+pub use cache::{CacheConfig, CachedValue, PlanCache};
+pub use coalesce::Coalescer;
+pub use key::{COST_MODEL_EPOCH, QueryKey, QueryShape, StructKey};
+pub use server::{Request, handle_line, serve_loop};
+
+use crate::config::{Cluster, SearchConfig};
+use crate::cost::Profiler;
+use crate::model::ModelDesc;
+use crate::planner::scheduler::SweepStats;
+use crate::planner::{self, DfsStats, Engine, ExecutionPlan, ParallelConfig,
+                     Scheduler};
+use std::fmt;
+use std::sync::Mutex;
+
+/// Structured failure of a served planning query. Every error the query
+/// path can hit maps here — the service never panics on a request, no
+/// matter how hostile (property: `rust/tests/plan_service.rs`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlanError {
+    /// The search proved (under its node budget) that nothing fits the
+    /// memory limit — at the requested batch, or at `b = 1` for sweeps.
+    Infeasible { batch: Option<usize> },
+    /// The setting names neither a zoo entry nor a valid `gpt:` spec.
+    UnknownSetting(String),
+    /// The cluster description is invalid or conflicts with a preset.
+    InvalidCluster(String),
+    /// Malformed or out-of-bounds request parameters.
+    BadRequest(String),
+}
+
+impl PlanError {
+    /// Stable machine-readable tag for the wire protocol.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            PlanError::Infeasible { .. } => "infeasible",
+            PlanError::UnknownSetting(_) => "unknown-setting",
+            PlanError::InvalidCluster(_) => "invalid-cluster",
+            PlanError::BadRequest(_) => "bad-request",
+        }
+    }
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanError::Infeasible { batch: Some(b) } => {
+                write!(f, "no feasible plan at b={b} (memory wall)")
+            }
+            PlanError::Infeasible { batch: None } => {
+                write!(f, "no feasible plan at any batch size")
+            }
+            PlanError::UnknownSetting(s) => {
+                write!(f, "unknown setting '{s}' (zoo name or \
+                           gpt:vocab,seq,layers,hidden,heads)")
+            }
+            PlanError::InvalidCluster(m) => write!(f, "invalid cluster: {m}"),
+            PlanError::BadRequest(m) => write!(f, "bad request: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// Where a served answer came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Source {
+    /// Cache hit: no planner ran.
+    Cache,
+    /// This caller joined another caller's in-flight search.
+    Coalesced,
+    /// Cache miss planned with a warm-start incumbent from a neighbor
+    /// entry.
+    Warm,
+    /// Cache miss planned cold.
+    Cold,
+}
+
+impl Source {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Source::Cache => "cache",
+            Source::Coalesced => "coalesced",
+            Source::Warm => "warm",
+            Source::Cold => "cold",
+        }
+    }
+}
+
+/// Service-layer counters, surfaced next to the planner's own
+/// `DfsStats`/`SweepStats`/`FrontierStats`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    /// Queries answered from the cache.
+    pub hits: u64,
+    /// Queries that missed the cache (coalesced or planned).
+    pub misses: u64,
+    /// Cache entries written.
+    pub inserts: u64,
+    /// Entries evicted by the LRU cap.
+    pub evictions: u64,
+    /// Entries rejected as stale (epoch/schema mismatch on disk, or a
+    /// live entry failing menu validation).
+    pub stale_rejected: u64,
+    /// Misses that joined another caller's in-flight search.
+    pub coalesced: u64,
+    /// Actual planner executions (the coalescing denominator).
+    pub planner_runs: u64,
+    /// Planner runs seeded with a feasible neighbor incumbent.
+    pub warm_seeded: u64,
+    /// Neighbor candidates rejected as infeasible at the queried
+    /// batch/limit (the search then ran cold).
+    pub warm_infeasible: u64,
+    /// Failed cache persistence attempts (service degrades to
+    /// memory-only).
+    pub persist_errors: u64,
+}
+
+impl ServiceStats {
+    /// One-line human summary for CLI/bench reports.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} hits / {} misses ({} coalesced), {} planner runs \
+             ({} warm-seeded, {} warm-infeasible), {} inserts, \
+             {} evicted, {} stale",
+            self.hits,
+            self.misses,
+            self.coalesced,
+            self.planner_runs,
+            self.warm_seeded,
+            self.warm_infeasible,
+            self.inserts,
+            self.evictions,
+            self.stale_rejected,
+        )
+    }
+}
+
+/// Cluster half of a query: a preset plus the knobs the CLI exposes.
+/// Resolution canonicalizes — two spellings of the same hardware produce
+/// the same [`Cluster`], hence the same cache key.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    /// `rtx_titan` or `two_server_a100`.
+    pub preset: String,
+    /// Device count (rtx_titan only; the two-server topology is fixed).
+    pub devices: Option<usize>,
+    pub mem_gib: f64,
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        ClusterSpec { preset: "rtx_titan".into(), devices: None,
+                      mem_gib: 8.0 }
+    }
+}
+
+impl ClusterSpec {
+    pub fn resolve(&self) -> Result<Cluster, PlanError> {
+        if !self.mem_gib.is_finite() || self.mem_gib <= 0.0 {
+            return Err(PlanError::BadRequest(
+                "mem must be a positive finite GiB value".into(),
+            ));
+        }
+        let cluster = match self.preset.as_str() {
+            "rtx_titan" => {
+                Cluster::rtx_titan(self.devices.unwrap_or(8), self.mem_gib)
+            }
+            "two_server_a100" => {
+                if let Some(d) = self.devices {
+                    if d != 16 {
+                        return Err(PlanError::InvalidCluster(format!(
+                            "two_server_a100 is a fixed 2x8 topology \
+                             (16 devices); got devices={d}"
+                        )));
+                    }
+                }
+                Cluster::two_server_a100(self.mem_gib)
+            }
+            other => {
+                return Err(PlanError::InvalidCluster(format!(
+                    "unknown preset '{other}' (rtx_titan | two_server_a100)"
+                )));
+            }
+        };
+        cluster.validate().map_err(PlanError::InvalidCluster)?;
+        Ok(cluster)
+    }
+}
+
+/// Request caps: a served planner must bound hostile inputs *before*
+/// they become candidate-enumeration blowups.
+pub const MAX_GRANULARITY: usize = 1024;
+pub const MAX_GRANULARITIES: usize = 64;
+pub const MAX_QUERY_THREADS: usize = 1024;
+/// Largest batch size / sweep cap a request may ask for — a sweep is up
+/// to this many full searches, so an unbounded cap would let one
+/// request wedge the service (and every caller coalesced onto it).
+pub const MAX_QUERY_BATCH: usize = 4096;
+const MAX_CUSTOM_LAYERS: usize = 512;
+const MAX_CUSTOM_DIM: usize = 1 << 20;
+
+/// One planning request, shape included. Engine and thread count are
+/// perf knobs only — they are *not* part of the cache key, because every
+/// engine returns the bit-identical optimum.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanQuery {
+    /// Zoo setting (`48L/1024H`) or custom
+    /// `gpt:vocab,seq,layers,hidden,heads` spec.
+    pub setting: String,
+    pub cluster: ClusterSpec,
+    pub search: SearchConfig,
+    pub shape: QueryShape,
+    pub engine: Engine,
+    /// Worker threads (0 = hardware default).
+    pub threads: usize,
+    /// Allow warm-starting from cached neighbors (on by default; the
+    /// result is identical either way).
+    pub warm: bool,
+}
+
+impl PlanQuery {
+    /// A single-batch query with the CLI's defaults (`osdp plan`'s
+    /// granularity menu `{0, 4}` and the paper's coarse 2-ops/layer
+    /// graph — the search space figures in the paper quote).
+    pub fn batch(setting: &str, mem_gib: f64, b: usize) -> PlanQuery {
+        PlanQuery {
+            setting: setting.into(),
+            cluster: ClusterSpec { mem_gib, ..Default::default() },
+            search: SearchConfig {
+                granularities: vec![0, 4],
+                paper_granularity: true,
+                ..Default::default()
+            },
+            shape: QueryShape::Batch(b),
+            engine: Engine::Frontier,
+            threads: 0,
+            warm: true,
+        }
+    }
+
+    /// A sweep query with defaults.
+    pub fn sweep(setting: &str, mem_gib: f64, max_batch: usize) -> PlanQuery {
+        PlanQuery {
+            shape: QueryShape::Sweep { max_batch },
+            ..PlanQuery::batch(setting, mem_gib, 1)
+        }
+    }
+
+    fn validate(&self) -> Result<(), PlanError> {
+        match self.shape {
+            QueryShape::Batch(0) => {
+                return Err(PlanError::BadRequest("batch must be >= 1".into()));
+            }
+            QueryShape::Sweep { max_batch: 0 } => {
+                return Err(PlanError::BadRequest(
+                    "batch-cap must be >= 1".into(),
+                ));
+            }
+            QueryShape::Batch(b) | QueryShape::Sweep { max_batch: b }
+                if b > MAX_QUERY_BATCH =>
+            {
+                return Err(PlanError::BadRequest(format!(
+                    "batch size {b} too large (max {MAX_QUERY_BATCH})"
+                )));
+            }
+            _ => {}
+        }
+        if self.search.granularities.len() > MAX_GRANULARITIES {
+            return Err(PlanError::BadRequest(format!(
+                "too many granularities (max {MAX_GRANULARITIES})"
+            )));
+        }
+        if let Some(&g) = self
+            .search
+            .granularities
+            .iter()
+            .find(|&&g| g > MAX_GRANULARITY)
+        {
+            return Err(PlanError::BadRequest(format!(
+                "granularity {g} too large (max {MAX_GRANULARITY})"
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Resolve a setting string to a model: a zoo name, or a custom
+/// `gpt:vocab,seq,layers,hidden,heads` spec (scriptable and cheap —
+/// serve-loop tests plan tiny models through the full stack).
+pub fn resolve_setting(setting: &str) -> Result<ModelDesc, PlanError> {
+    if let Some(spec) = setting.strip_prefix("gpt:") {
+        let parts: Vec<usize> = spec
+            .split(',')
+            .map(|p| p.trim().parse::<usize>())
+            .collect::<Result<_, _>>()
+            .map_err(|_| {
+                PlanError::BadRequest(format!(
+                    "bad gpt spec '{spec}' (want vocab,seq,layers,hidden,\
+                     heads)"
+                ))
+            })?;
+        let [vocab, seq, layers, hidden, heads] = parts[..] else {
+            return Err(PlanError::BadRequest(format!(
+                "gpt spec '{spec}' needs exactly 5 fields"
+            )));
+        };
+        if [vocab, seq, layers, hidden, heads].contains(&0) {
+            return Err(PlanError::BadRequest(
+                "gpt spec fields must all be >= 1".into(),
+            ));
+        }
+        if layers > MAX_CUSTOM_LAYERS
+            || vocab > MAX_CUSTOM_DIM
+            || seq > MAX_CUSTOM_DIM
+            || hidden > MAX_CUSTOM_DIM
+        {
+            return Err(PlanError::BadRequest(
+                "gpt spec dimension out of range".into(),
+            ));
+        }
+        if hidden % heads != 0 {
+            return Err(PlanError::BadRequest(format!(
+                "hidden ({hidden}) must be a multiple of heads ({heads})"
+            )));
+        }
+        Ok(crate::model::build_gpt(&crate::model::GptDims::uniform(
+            "custom", vocab, seq, layers, hidden, heads,
+        )))
+    } else {
+        crate::model::zoo()
+            .into_iter()
+            .find(|e| e.setting == setting)
+            .map(|e| e.model)
+            .ok_or_else(|| PlanError::UnknownSetting(setting.into()))
+    }
+}
+
+/// A served answer: the plan(s) plus the search diagnostics of the run
+/// that produced them (zeroed, `complete`, for cache hits — nothing
+/// ran).
+#[derive(Debug, Clone)]
+pub enum Answer {
+    Plan { plan: ExecutionPlan, stats: DfsStats },
+    Sweep { plans: Vec<ExecutionPlan>, best: usize, stats: SweepStats },
+}
+
+impl Answer {
+    /// The headline plan (the sweep's throughput winner).
+    pub fn best_plan(&self) -> &ExecutionPlan {
+        match self {
+            Answer::Plan { plan, .. } => plan,
+            Answer::Sweep { plans, best, .. } => &plans[*best],
+        }
+    }
+
+    /// Total search nodes behind this answer.
+    pub fn nodes(&self) -> u64 {
+        match self {
+            Answer::Plan { stats, .. } => stats.nodes,
+            Answer::Sweep { stats, .. } => stats.nodes,
+        }
+    }
+}
+
+/// A successful query: the answer, where it came from, and its key.
+#[derive(Debug, Clone)]
+pub struct QueryResponse {
+    pub answer: Answer,
+    pub source: Source,
+    pub key: QueryKey,
+    /// Devices the throughput figures are quoted over.
+    pub n_devices: usize,
+}
+
+struct Inner {
+    cache: PlanCache,
+    stats: ServiceStats,
+    /// Unpersisted cache mutations pending (write-behind dirty flag, so
+    /// a miss that inserted nothing does not rewrite the disk file).
+    dirty: bool,
+}
+
+/// What a resolved flight hands every coalesced caller: the cacheable
+/// value plus whether the search that produced it ran to completion
+/// (followers must not report an anytime result as proven).
+type FlightValue = Result<(CachedValue, bool), PlanError>;
+
+/// The served planner: cache + coalescer + warm starts over the existing
+/// engines. Thread-safe behind `&self`; one instance serves any number
+/// of concurrent callers.
+pub struct PlanService {
+    inner: Mutex<Inner>,
+    coalescer: Coalescer<FlightValue>,
+}
+
+impl PlanService {
+    pub fn new(cfg: CacheConfig) -> PlanService {
+        let (cache, stale) = PlanCache::open(cfg);
+        PlanService {
+            inner: Mutex::new(Inner {
+                cache,
+                stats: ServiceStats {
+                    stale_rejected: stale,
+                    ..Default::default()
+                },
+                dirty: false,
+            }),
+            coalescer: Coalescer::new(),
+        }
+    }
+
+    /// Memory-only service with default sizing.
+    pub fn in_memory() -> PlanService {
+        PlanService::new(CacheConfig::default())
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Cached entry count (observability; the `stats` protocol verb).
+    pub fn cache_len(&self) -> usize {
+        self.inner.lock().unwrap().cache.len()
+    }
+
+    /// Answer one query through the cache → coalescer → warm-start →
+    /// planner pipeline.
+    pub fn query(&self, q: &PlanQuery) -> Result<QueryResponse, PlanError> {
+        q.validate()?;
+        let cluster = q.cluster.resolve()?;
+        let model = resolve_setting(&q.setting)?;
+        let profiler = Profiler::new(&model, &cluster, &q.search);
+        let key = QueryKey::for_query(&profiler, cluster.mem_limit, q.shape);
+
+        // ---- cache fast path
+        {
+            let mut guard = self.inner.lock().unwrap();
+            // reborrow so cache/stats borrows stay field-disjoint
+            let inner = &mut *guard;
+            if let Some(v) = inner.cache.get(&key) {
+                if v.validates_against(&profiler) {
+                    let v = v.clone();
+                    inner.stats.hits += 1;
+                    drop(guard);
+                    return self.answer_from_value(&profiler, key, v,
+                                                  Source::Cache, true);
+                }
+                // stale live entry (menus changed under the epoch):
+                // demote to a miss rather than serve garbage
+                inner.cache.remove(&key);
+                inner.stats.stale_rejected += 1;
+            }
+            inner.stats.misses += 1;
+        }
+
+        // ---- single-flight the planner run; a leader that unwinds
+        // resolves its flight with the poison error so waiters never
+        // hang (coalesce.rs)
+        let poison: FlightValue = Err(PlanError::BadRequest(
+            "internal error: the planning leader panicked".into(),
+        ));
+        let mut led_outcome: Option<(Answer, Source)> = None;
+        let (value, led) = self.coalescer.run(&key.id(), poison, || {
+            match self.plan_miss(&profiler, q, &key) {
+                Ok((value, complete, answer, source)) => {
+                    led_outcome = Some((answer, source));
+                    Ok((value, complete))
+                }
+                Err(e) => Err(e),
+            }
+        });
+        if led {
+            let (value, complete) = value?;
+            match led_outcome {
+                Some((answer, source)) => Ok(QueryResponse {
+                    answer,
+                    source,
+                    key,
+                    n_devices: cluster.n_devices,
+                }),
+                // unreachable by construction (Ok value implies an
+                // outcome); rebuild from the value rather than panic
+                None => self.answer_from_value(&profiler, key, value,
+                                               Source::Cold, complete),
+            }
+        } else {
+            self.inner.lock().unwrap().stats.coalesced += 1;
+            let (value, complete) = value?;
+            self.answer_from_value(&profiler, key, value,
+                                   Source::Coalesced, complete)
+        }
+    }
+
+    /// The miss path: neighbor lookup → warm-or-cold search → cache
+    /// population (plans only when the search ran to completion —
+    /// budget-expired results are anytime, not canonical) → one persist.
+    fn plan_miss(&self, profiler: &Profiler, q: &PlanQuery, key: &QueryKey)
+                 -> Result<(CachedValue, bool, Answer, Source), PlanError> {
+        // Double-checked cache read: a caller that missed the cache but
+        // lost the flight-timing race (its would-be leader finished and
+        // retired the flight before this caller reached the coalescer)
+        // becomes a new "leader" — it must serve the freshly-cached
+        // result, not run a second search. This is what makes "N
+        // concurrent identical queries -> exactly one planner
+        // execution" a guarantee rather than a likelihood.
+        {
+            let mut guard = self.inner.lock().unwrap();
+            let inner = &mut *guard;
+            if let Some(v) = inner.cache.get(key) {
+                if v.validates_against(profiler) {
+                    let v = v.clone();
+                    // reclassify this query: it was counted as a miss
+                    // on the outer check, but it is being served from
+                    // the cache — keep hits + misses == queries
+                    inner.stats.misses -= 1;
+                    inner.stats.hits += 1;
+                    drop(guard);
+                    let answer =
+                        self.answer_of(profiler, key, v.clone(), true)?;
+                    return Ok((v, true, answer, Source::Cache));
+                }
+            }
+        }
+        let warm_choice = if q.warm {
+            let neighbor =
+                self.inner.lock().unwrap().cache.neighbor(key);
+            neighbor.and_then(|(choice, _nb)| {
+                // Repair the neighbor once here (greedy downgrades until
+                // it fits — `greedy::search_from`). Single-batch queries
+                // hand the engine the already-repaired seed (its own
+                // repair then exits after one feasibility check); sweeps
+                // keep the raw neighbor because every batch of the sweep
+                // re-repairs it at its own size.
+                let b_gate = match key.shape {
+                    QueryShape::Batch(b) => b,
+                    QueryShape::Sweep { .. } => 1,
+                };
+                match planner::greedy_search_from(profiler,
+                                                  key.mem_limit(), b_gate,
+                                                  &choice)
+                {
+                    Some((repaired, _cost)) => Some(match key.shape {
+                        QueryShape::Batch(_) => repaired,
+                        QueryShape::Sweep { .. } => choice,
+                    }),
+                    None => {
+                        self.inner.lock().unwrap().stats.warm_infeasible +=
+                            1;
+                        None
+                    }
+                }
+            })
+        } else {
+            None
+        };
+        let source = if warm_choice.is_some() {
+            Source::Warm
+        } else {
+            Source::Cold
+        };
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.stats.planner_runs += 1;
+            if warm_choice.is_some() {
+                inner.stats.warm_seeded += 1;
+            }
+        }
+        let threads = match q.threads {
+            0 => planner::parallel::default_threads(),
+            t => t.min(MAX_QUERY_THREADS),
+        };
+
+        let result = match key.shape {
+            QueryShape::Batch(b) => {
+                let cfg = ParallelConfig {
+                    threads,
+                    engine: q.engine,
+                    ..Default::default()
+                };
+                let (outcome, stats) = planner::parallel_search_with_stats(
+                    profiler,
+                    key.mem_limit(),
+                    b,
+                    &cfg,
+                    warm_choice.as_deref(),
+                );
+                match outcome {
+                    None => {
+                        // cache "nothing fits" only when it was proven
+                        // (search ran to completion), never when the
+                        // node budget expired first — an un-proven
+                        // verdict must not poison future queries
+                        if stats.complete {
+                            self.store(*key, CachedValue::Infeasible);
+                        }
+                        Err(PlanError::Infeasible { batch: Some(b) })
+                    }
+                    Some((choice, _cost)) => {
+                        let value =
+                            CachedValue::Plan { choice: choice.clone() };
+                        let complete = stats.complete;
+                        if complete {
+                            self.store(*key, value.clone());
+                        }
+                        let plan = ExecutionPlan::from_choice(
+                            profiler, choice, b);
+                        Ok((value, complete,
+                            Answer::Plan { plan, stats }, source))
+                    }
+                }
+            }
+            QueryShape::Sweep { max_batch } => {
+                let mut sched =
+                    Scheduler::new(profiler, key.mem_limit(), max_batch)
+                        .with_threads(threads)
+                        .with_engine(q.engine);
+                if let Some(w) = warm_choice {
+                    sched = sched.with_warm(w);
+                }
+                match sched.run() {
+                    None => {
+                        // the scheduler proves nothing-fits via its b=1
+                        // search but does not surface that search's
+                        // completeness; probe b=1 once (rare path) so
+                        // only a *proven* verdict is cached
+                        let probe_cfg = ParallelConfig {
+                            threads,
+                            engine: q.engine,
+                            ..Default::default()
+                        };
+                        let (probe, probe_stats) =
+                            planner::parallel_search_with_stats(
+                                profiler,
+                                key.mem_limit(),
+                                1,
+                                &probe_cfg,
+                                None,
+                            );
+                        if probe.is_none() && probe_stats.complete {
+                            self.store(*key, CachedValue::Infeasible);
+                        }
+                        Err(PlanError::Infeasible { batch: None })
+                    }
+                    Some(res) => {
+                        let choices: Vec<Vec<usize>> = res
+                            .candidates
+                            .iter()
+                            .map(|c| c.plan.choice.clone())
+                            .collect();
+                        let value = CachedValue::Sweep {
+                            choices: choices.clone(),
+                            best: res.best,
+                        };
+                        if res.stats.complete {
+                            self.store(*key, value.clone());
+                            // a sweep populates the per-batch entries
+                            // (future single-batch queries hit, and
+                            // neighbor lookups see every batch) plus the
+                            // memory wall it proved
+                            for (i, ch) in choices.iter().enumerate() {
+                                self.store(
+                                    key.with_shape(QueryShape::Batch(i + 1)),
+                                    CachedValue::Plan { choice: ch.clone() },
+                                );
+                            }
+                            // the wall entry needs its own certificate:
+                            // the failing search must have run to
+                            // completion, not merely out of budget
+                            if choices.len() < max_batch
+                                && res.wall_complete
+                            {
+                                self.store(
+                                    key.with_shape(QueryShape::Batch(
+                                        choices.len() + 1,
+                                    )),
+                                    CachedValue::Infeasible,
+                                );
+                            }
+                        }
+                        let complete = res.stats.complete;
+                        let answer = Answer::Sweep {
+                            plans: res
+                                .candidates
+                                .into_iter()
+                                .map(|c| c.plan)
+                                .collect(),
+                            best: res.best,
+                            stats: res.stats,
+                        };
+                        Ok((value, complete, answer, source))
+                    }
+                }
+            }
+        };
+        self.persist();
+        result
+    }
+
+    fn store(&self, key: QueryKey, value: CachedValue) {
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        inner.stats.inserts += 1;
+        inner.stats.evictions += inner.cache.insert(key, value);
+        inner.dirty = true;
+    }
+
+    /// Write-behind: rewrite the disk file only when something was
+    /// stored since the last successful persist (a miss that cached
+    /// nothing — budget expired, double-check hit — costs no I/O). The
+    /// image is snapshotted under the lock but *written outside it*, so
+    /// a slow disk never stalls concurrent cache hits; the dirty flag
+    /// is cleared optimistically and restored on a failed write (and a
+    /// store racing the write re-sets it, so its data is re-persisted
+    /// next time).
+    fn persist(&self) {
+        let snapshot = {
+            let mut guard = self.inner.lock().unwrap();
+            let inner = &mut *guard;
+            if !inner.dirty {
+                return;
+            }
+            inner.dirty = false;
+            inner.cache.serialize()
+        };
+        let Some((path, doc)) = snapshot else { return };
+        if cache::write_cache_file(&path, &doc).is_err() {
+            let mut guard = self.inner.lock().unwrap();
+            guard.dirty = true;
+            guard.stats.persist_errors += 1;
+        }
+    }
+
+    /// Rebuild a served answer from a cached or flight-shared value
+    /// (hits and coalesced followers). Costs re-derive through
+    /// `Profiler::evaluate`, which is deterministic — the response is
+    /// bit-identical to the search that populated the entry. `complete`
+    /// is the originating search's certificate (always true for real
+    /// cache hits, which are only written under it; possibly false for
+    /// a coalesced copy of an anytime result — a follower must not
+    /// report an unproven plan as proven).
+    fn answer_from_value(&self, profiler: &Profiler, key: QueryKey,
+                         value: CachedValue, source: Source,
+                         complete: bool)
+                         -> Result<QueryResponse, PlanError> {
+        Ok(QueryResponse {
+            answer: self.answer_of(profiler, &key, value, complete)?,
+            source,
+            key,
+            n_devices: profiler.cluster.n_devices,
+        })
+    }
+
+    /// The served [`Answer`] for a cached value under `key`'s shape
+    /// (`Err` for cached infeasibility).
+    fn answer_of(&self, profiler: &Profiler, key: &QueryKey,
+                 value: CachedValue, complete: bool)
+                 -> Result<Answer, PlanError> {
+        let served_stats = DfsStats { complete, ..Default::default() };
+        let answer = match (value, key.shape) {
+            (CachedValue::Infeasible, shape) => {
+                let batch = match shape {
+                    QueryShape::Batch(b) => Some(b),
+                    QueryShape::Sweep { .. } => None,
+                };
+                return Err(PlanError::Infeasible { batch });
+            }
+            (CachedValue::Plan { choice }, QueryShape::Batch(b)) => {
+                Answer::Plan {
+                    plan: ExecutionPlan::from_choice(profiler, choice, b),
+                    stats: served_stats,
+                }
+            }
+            (CachedValue::Sweep { choices, best },
+             QueryShape::Sweep { .. }) => Answer::Sweep {
+                plans: choices
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, ch)| {
+                        ExecutionPlan::from_choice(profiler, ch, i + 1)
+                    })
+                    .collect(),
+                best,
+                stats: SweepStats { complete, ..Default::default() },
+            },
+            // value/shape mismatch: impossible through this service's
+            // writes; surface as a structured error, never a panic
+            _ => {
+                return Err(PlanError::BadRequest(
+                    "cache entry shape mismatch".into(),
+                ));
+            }
+        };
+        Ok(answer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn errors_have_kinds_and_messages() {
+        for (e, kind) in [
+            (PlanError::Infeasible { batch: Some(3) }, "infeasible"),
+            (PlanError::Infeasible { batch: None }, "infeasible"),
+            (PlanError::UnknownSetting("x".into()), "unknown-setting"),
+            (PlanError::InvalidCluster("y".into()), "invalid-cluster"),
+            (PlanError::BadRequest("z".into()), "bad-request"),
+        ] {
+            assert_eq!(e.kind(), kind);
+            assert!(!e.to_string().is_empty());
+        }
+    }
+
+    #[test]
+    fn cluster_spec_canonicalizes_and_rejects() {
+        let a = ClusterSpec::default().resolve().unwrap();
+        let b = ClusterSpec {
+            preset: "rtx_titan".into(),
+            devices: Some(8),
+            mem_gib: 8.0,
+        }
+        .resolve()
+        .unwrap();
+        assert_eq!(a, b, "default devices == explicit 8");
+        assert!(matches!(
+            ClusterSpec { preset: "tpu".into(), ..Default::default() }
+                .resolve(),
+            Err(PlanError::InvalidCluster(_))
+        ));
+        assert!(matches!(
+            ClusterSpec {
+                preset: "two_server_a100".into(),
+                devices: Some(8),
+                mem_gib: 8.0
+            }
+            .resolve(),
+            Err(PlanError::InvalidCluster(_))
+        ));
+        for mem in [f64::NAN, f64::INFINITY, 0.0, -1.0] {
+            assert!(matches!(
+                ClusterSpec { mem_gib: mem, ..Default::default() }.resolve(),
+                Err(PlanError::BadRequest(_))
+            ), "mem={mem} must be rejected");
+        }
+        assert!(matches!(
+            ClusterSpec { devices: Some(0), ..Default::default() }.resolve(),
+            Err(PlanError::InvalidCluster(_))
+        ));
+    }
+
+    #[test]
+    fn settings_resolve_zoo_and_custom() {
+        assert!(resolve_setting("48L/1024H").is_ok());
+        assert!(matches!(resolve_setting("nope"),
+                         Err(PlanError::UnknownSetting(_))));
+        let m = resolve_setting("gpt:1000,64,2,128,4").unwrap();
+        assert!(m.n_ops() > 0);
+        for bad in [
+            "gpt:1000,64,2,128",       // too few fields
+            "gpt:1000,64,2,128,4,9",   // too many
+            "gpt:a,b,c,d,e",           // not numbers
+            "gpt:1000,64,0,128,4",     // zero layers
+            "gpt:1000,64,2,130,4",     // heads don't divide hidden
+            "gpt:1000,64,9999,128,4",  // out of range
+        ] {
+            assert!(matches!(resolve_setting(bad),
+                             Err(PlanError::BadRequest(_))), "{bad}");
+        }
+    }
+
+    #[test]
+    fn query_validation_caps_hostile_inputs() {
+        let mut q = PlanQuery::batch("gpt:1000,64,1,128,4", 8.0, 0);
+        assert!(matches!(q.validate(), Err(PlanError::BadRequest(_))));
+        q.shape = QueryShape::Sweep { max_batch: 0 };
+        assert!(matches!(q.validate(), Err(PlanError::BadRequest(_))));
+        q.shape = QueryShape::Batch(MAX_QUERY_BATCH + 1);
+        assert!(matches!(q.validate(), Err(PlanError::BadRequest(_))));
+        q.shape = QueryShape::Sweep { max_batch: MAX_QUERY_BATCH + 1 };
+        assert!(matches!(q.validate(), Err(PlanError::BadRequest(_))));
+        q.shape = QueryShape::Batch(1);
+        q.search.granularities = vec![0, usize::MAX];
+        assert!(matches!(q.validate(), Err(PlanError::BadRequest(_))));
+        q.search.granularities = vec![0; MAX_GRANULARITIES + 1];
+        assert!(matches!(q.validate(), Err(PlanError::BadRequest(_))));
+        q.search.granularities = vec![0, 4];
+        assert!(q.validate().is_ok());
+    }
+}

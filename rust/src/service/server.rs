@@ -1,0 +1,333 @@
+//! The plan service's wire surface: a line-oriented request loop (one
+//! request per line in, one JSON document per line out) suitable for
+//! scripting, piping, and tests — `osdp serve` binds it to
+//! stdin/stdout, `osdp query` runs a single request through the same
+//! code path.
+//!
+//! ```text
+//! query setting=48L/1024H mem=8 batch=4 [devices=8] [cluster=PRESET]
+//!       [g=0,4] [engine=frontier|bb] [threads=N] [ckpt] [fine]
+//!       [no-scopes] [no-warm]
+//! sweep setting=48L/1024H mem=8 [batch-cap=64] [...same knobs]
+//! stats
+//! quit
+//! ```
+//!
+//! Settings are zoo names (`48L/1024H`) or custom
+//! `gpt:vocab,seq,layers,hidden,heads` specs. Malformed requests answer
+//! `{"ok":false,"error":"bad-request",...}` — the loop never panics and
+//! never exits on bad input (error-path property tests in
+//! `rust/tests/plan_service.rs`).
+
+use super::{Answer, PlanError, PlanQuery, PlanService, QueryResponse,
+            QueryShape};
+use crate::planner::Engine;
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::io::{BufRead, Write};
+
+/// One parsed protocol line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Query(PlanQuery),
+    Stats,
+    Quit,
+}
+
+/// Parse a protocol line. Strict: unknown keys are rejected so typos
+/// fail loudly instead of planning the wrong thing.
+pub fn parse_request(line: &str) -> Result<Request, PlanError> {
+    let mut toks = line.split_whitespace();
+    let verb = toks
+        .next()
+        .ok_or_else(|| PlanError::BadRequest("empty request".into()))?;
+    match verb {
+        "stats" => Ok(Request::Stats),
+        "quit" | "exit" => Ok(Request::Quit),
+        "query" | "sweep" => parse_query(verb, toks),
+        other => Err(PlanError::BadRequest(format!(
+            "unknown verb '{other}' (query | sweep | stats | quit)"
+        ))),
+    }
+}
+
+fn parse_query<'a>(verb: &str, toks: impl Iterator<Item = &'a str>)
+                   -> Result<Request, PlanError> {
+    let bad = PlanError::BadRequest;
+    let mut q = PlanQuery::batch("", 8.0, 1);
+    let mut setting = None;
+    let mut batch = None;
+    let mut batch_cap = 64usize;
+    for tok in toks {
+        match tok.split_once('=') {
+            Some(("setting", v)) => setting = Some(v.to_string()),
+            Some(("mem", v)) => {
+                q.cluster.mem_gib = v
+                    .parse()
+                    .map_err(|_| bad(format!("mem: bad number '{v}'")))?;
+            }
+            Some(("devices", v)) => {
+                q.cluster.devices = Some(parse_usize("devices", v)?);
+            }
+            Some(("cluster", v)) => q.cluster.preset = v.to_string(),
+            Some(("g", v)) => {
+                q.search.granularities = v
+                    .split(',')
+                    .filter(|s| !s.is_empty())
+                    .map(|s| parse_usize("g", s.trim()))
+                    .collect::<Result<_, _>>()?;
+            }
+            Some(("engine", v)) => {
+                q.engine = Engine::parse(v).ok_or_else(|| {
+                    bad(format!("engine: want frontier|bb, got '{v}'"))
+                })?;
+            }
+            Some(("threads", v)) => q.threads = parse_usize("threads", v)?,
+            Some(("batch", v)) if verb == "query" => {
+                batch = Some(parse_usize("batch", v)?);
+            }
+            Some(("batch-cap", v)) if verb == "sweep" => {
+                batch_cap = parse_usize("batch-cap", v)?;
+            }
+            None if tok == "ckpt" => q.search.checkpointing = true,
+            None if tok == "fine" => q.search.paper_granularity = false,
+            None if tok == "no-scopes" => q.search.hybrid_scopes = false,
+            None if tok == "no-warm" => q.warm = false,
+            _ => {
+                return Err(bad(format!(
+                    "unexpected parameter '{tok}' for '{verb}'"
+                )));
+            }
+        }
+    }
+    q.setting = setting
+        .ok_or_else(|| bad("missing required setting=...".to_string()))?;
+    // the shape is the single source of truth for the sweep cap
+    // (SearchConfig::max_batch is unread on the service path)
+    q.shape = match verb {
+        "query" => QueryShape::Batch(
+            batch.ok_or_else(|| bad("query needs batch=N".to_string()))?,
+        ),
+        _ => QueryShape::Sweep { max_batch: batch_cap },
+    };
+    Ok(Request::Query(q))
+}
+
+fn parse_usize(key: &str, v: &str) -> Result<usize, PlanError> {
+    v.parse().map_err(|_| {
+        PlanError::BadRequest(format!("{key}: bad integer '{v}'"))
+    })
+}
+
+/// Render a query outcome as the single-line JSON the protocol speaks.
+pub fn render_response(outcome: &Result<QueryResponse, PlanError>)
+                       -> String {
+    let mut o = BTreeMap::new();
+    match outcome {
+        Err(e) => {
+            o.insert("ok".into(), Json::Bool(false));
+            o.insert("error".into(), Json::Str(e.kind().into()));
+            o.insert("detail".into(), Json::Str(e.to_string()));
+        }
+        Ok(resp) => {
+            o.insert("ok".into(), Json::Bool(true));
+            o.insert("source".into(),
+                     Json::Str(resp.source.label().into()));
+            o.insert("key".into(), Json::Str(resp.key.id()));
+            match &resp.answer {
+                Answer::Plan { plan, stats } => {
+                    o.insert("kind".into(), Json::Str("plan".into()));
+                    o.insert("batch".into(),
+                             Json::Num(plan.batch as f64));
+                    o.insert("time_s".into(), Json::Num(plan.cost.time));
+                    o.insert("peak_bytes".into(),
+                             Json::Num(plan.cost.peak_mem));
+                    o.insert(
+                        "throughput".into(),
+                        Json::Num(plan.throughput(resp.n_devices)),
+                    );
+                    o.insert("nodes".into(),
+                             Json::Num(stats.nodes as f64));
+                    o.insert("complete".into(),
+                             Json::Bool(stats.complete));
+                    o.insert(
+                        "choice".into(),
+                        Json::Arr(plan.choice.iter()
+                                      .map(|&c| Json::Num(c as f64))
+                                      .collect()),
+                    );
+                }
+                Answer::Sweep { plans, best, stats } => {
+                    let winner = &plans[*best];
+                    o.insert("kind".into(), Json::Str("sweep".into()));
+                    o.insert("best_batch".into(),
+                             Json::Num(winner.batch as f64));
+                    o.insert(
+                        "throughput".into(),
+                        Json::Num(winner.throughput(resp.n_devices)),
+                    );
+                    o.insert("nodes".into(),
+                             Json::Num(stats.nodes as f64));
+                    o.insert("complete".into(),
+                             Json::Bool(stats.complete));
+                    o.insert(
+                        "candidates".into(),
+                        Json::Arr(
+                            plans
+                                .iter()
+                                .map(|p| {
+                                    let mut c = BTreeMap::new();
+                                    c.insert("batch".into(),
+                                             Json::Num(p.batch as f64));
+                                    c.insert(
+                                        "throughput".into(),
+                                        Json::Num(p.throughput(
+                                            resp.n_devices)),
+                                    );
+                                    c.insert("peak_bytes".into(),
+                                             Json::Num(p.cost.peak_mem));
+                                    Json::Obj(c)
+                                })
+                                .collect(),
+                        ),
+                    );
+                }
+            }
+        }
+    }
+    json::to_string(&Json::Obj(o))
+}
+
+fn render_stats(service: &PlanService) -> String {
+    let s = service.stats();
+    let mut o = BTreeMap::new();
+    o.insert("ok".into(), Json::Bool(true));
+    o.insert("kind".into(), Json::Str("stats".into()));
+    o.insert("cache_entries".into(),
+             Json::Num(service.cache_len() as f64));
+    for (name, v) in [
+        ("hits", s.hits),
+        ("misses", s.misses),
+        ("inserts", s.inserts),
+        ("evictions", s.evictions),
+        ("stale_rejected", s.stale_rejected),
+        ("coalesced", s.coalesced),
+        ("planner_runs", s.planner_runs),
+        ("warm_seeded", s.warm_seeded),
+        ("warm_infeasible", s.warm_infeasible),
+        ("persist_errors", s.persist_errors),
+    ] {
+        o.insert(name.into(), Json::Num(v as f64));
+    }
+    json::to_string(&Json::Obj(o))
+}
+
+/// Handle one protocol line; always returns exactly one JSON line (the
+/// `quit` acknowledgement included — the caller decides to stop on
+/// [`Request::Quit`]).
+pub fn handle_line(service: &PlanService, line: &str) -> (String, bool) {
+    match parse_request(line) {
+        Err(e) => (render_response(&Err(e)), false),
+        Ok(Request::Stats) => (render_stats(service), false),
+        Ok(Request::Quit) => {
+            (r#"{"kind":"bye","ok":true}"#.to_string(), true)
+        }
+        Ok(Request::Query(q)) => {
+            (render_response(&service.query(&q)), false)
+        }
+    }
+}
+
+/// The serve loop: read requests line by line, answer each with one
+/// JSON line, stop at `quit` or EOF. Blank lines and `#` comments are
+/// ignored (scripts can be annotated).
+pub fn serve_loop<R: BufRead, W: Write>(service: &PlanService, reader: R,
+                                        writer: &mut W)
+                                        -> std::io::Result<()> {
+    for line in reader.lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (response, quit) = handle_line(service, line);
+        writeln!(writer, "{response}")?;
+        writer.flush()?;
+        if quit {
+            break;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_query_lines() {
+        let r = parse_request(
+            "query setting=gpt:1000,64,2,128,4 mem=4 batch=2 g=0,2 \
+             threads=2 engine=bb ckpt no-warm",
+        )
+        .unwrap();
+        let Request::Query(q) = r else { panic!("not a query") };
+        assert_eq!(q.setting, "gpt:1000,64,2,128,4");
+        assert_eq!(q.cluster.mem_gib, 4.0);
+        assert_eq!(q.shape, QueryShape::Batch(2));
+        assert_eq!(q.search.granularities, vec![0, 2]);
+        assert_eq!(q.threads, 2);
+        assert_eq!(q.engine, Engine::FoldedBb);
+        assert!(q.search.checkpointing);
+        assert!(!q.warm);
+        assert!(q.search.paper_granularity, "coarse by default");
+    }
+
+    #[test]
+    fn parses_sweep_lines_and_verbs() {
+        let r = parse_request(
+            "sweep setting=48L/1024H mem=8 batch-cap=16 fine no-scopes",
+        )
+        .unwrap();
+        let Request::Query(q) = r else { panic!("not a query") };
+        assert_eq!(q.shape, QueryShape::Sweep { max_batch: 16 });
+        assert!(!q.search.paper_granularity);
+        assert!(!q.search.hybrid_scopes);
+        assert_eq!(parse_request("stats").unwrap(), Request::Stats);
+        assert_eq!(parse_request("quit").unwrap(), Request::Quit);
+        assert_eq!(parse_request("exit").unwrap(), Request::Quit);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        for bad in [
+            "",
+            "frobnicate x=1",
+            "query batch=1",                       // missing setting
+            "query setting=x",                     // missing batch
+            "query setting=x batch=nope",
+            "query setting=x batch=1 mem=wat",
+            "query setting=x batch=1 bogus=1",     // unknown key
+            "query setting=x batch=1 batch-cap=4", // sweep-only key
+            "sweep setting=x batch=4",             // query-only key
+            "query setting=x batch=1 engine=warp",
+            "query setting=x batch=1 g=1,x",
+        ] {
+            assert!(
+                matches!(parse_request(bad),
+                         Err(PlanError::BadRequest(_))),
+                "'{bad}' must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn error_rendering_is_json() {
+        let out = render_response(&Err(PlanError::UnknownSetting(
+            "x".into(),
+        )));
+        let v = Json::parse(&out).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(false));
+        assert_eq!(v.get("error").as_str(), Some("unknown-setting"));
+    }
+}

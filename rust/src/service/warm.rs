@@ -1,0 +1,58 @@
+//! Warm-started planning: turning a cached **neighbor** plan (same
+//! model/cluster structure, different batch size or memory limit) into
+//! an initial incumbent for a cache-miss search.
+//!
+//! The seed travels through two stages inside the engines
+//! (`dfs::search_prefolded` / `parallel::search_seeded`):
+//!
+//! 1. **Repair** (`planner::greedy::search_from`): a neighbor plan that
+//!    no longer fits verbatim at the queried `(mem_limit, b)` — e.g.
+//!    the previous batch's optimum, one activation-step too big — is
+//!    downgraded along greedy's best-memory-per-time moves until it
+//!    fits. A plan one batch away is usually one or two downgrades from
+//!    a near-optimal incumbent, where the cold greedy seed has to find
+//!    the whole assignment from all-fastest.
+//! 2. **Offer** (`SearchSpace::offer_warm`): the repaired plan is
+//!    priced in search arithmetic and installed iff it `(time, lex)`-
+//!    beats the greedy seed.
+//!
+//! # Why the result is bit-identical to a cold search
+//!
+//! The branch-and-bound walkers return the `(time, lex)`-minimum of
+//! `{seed} ∪ {feasible leaves}` (see `planner::bound`'s exactness
+//! argument — the pruning rules provably never hide that minimum). A
+//! cold search seeds with the greedy plan; a warm search seeds with the
+//! `(time, lex)`-better of the greedy plan and the re-priced neighbor.
+//! Either way the seed is a *feasible full assignment*, and every
+//! feasible full assignment is weakly `(time, lex)`-dominated by a leaf
+//! of the search space: sorting its within-class decisions ascending
+//! (the canonical monotone representative) changes no cost — all search
+//! sums are grid-/byte-exact, so permuting interchangeable operators'
+//! decisions is bitwise free — stays feasible, and is lexicographically
+//! `≤` the assignment itself in the class-contiguous visit order. The
+//! minimum over `{seed} ∪ {leaves}` therefore always equals the minimum
+//! over `{leaves}` alone, whatever feasible seed is installed: the seed
+//! can *prune* (it tightens the incumbent bound from node one) but can
+//! never *change* the answer. For the frontier engine the same holds
+//! because the `(time, lex)` optimum over the folded leaves is composed
+//! of kept frontier points (`planner::frontier`'s dominance argument),
+//! independent of the incumbent. Property-tested across all three
+//! engines, serial and 8-threaded, in `rust/tests/plan_service.rs`, and
+//! mirrored in f64 in `python/mirror/service_mirror.py`.
+//!
+//! The seed is priced in **search arithmetic** — `base_time` plus the
+//! grid-exact `time_fixed` sum in visit order, exactly like the greedy
+//! seed and every accepted leaf (`SearchSpace::offer_warm`) — never with
+//! `evaluate()`'s unsnapped compute term, so exact ties against the
+//! incumbent survive the strict `lb > bound` prune.
+//!
+//! There is deliberately no code here: the repair lives with the greedy
+//! planner (`crate::planner::greedy::search_from`, whose move loop it
+//! reuses verbatim) and the install lives with the bound machinery
+//! (`SearchSpace::offer_warm`, which owns the incumbent's arithmetic).
+//! Both validate their inputs — wrong-length or out-of-menu seeds from a
+//! stale cache entry are rejected, never panicked on — so a third copy
+//! of that predicate would only drift. This module is the design's
+//! documentation anchor; the property tests live in
+//! `rust/tests/plan_service.rs` and the f64 mirror in
+//! `python/mirror/service_mirror.py`.

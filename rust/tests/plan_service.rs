@@ -1,0 +1,622 @@
+//! Plan-service acceptance tests (ISSUE 5):
+//!
+//! * warm-started and coalesced queries are **bit-identical** to cold
+//!   planning (full choice-vector equality, across engines and thread
+//!   counts);
+//! * a warm-start from a neighboring batch strictly reduces visited
+//!   nodes on the 24L sweep;
+//! * ≥8 concurrent identical queries observe exactly one planner
+//!   execution;
+//! * cache-key canonicalization: equivalent config spellings collide,
+//!   search-relevant changes split;
+//! * error-path hardening: hostile requests come back as structured
+//!   `PlanError`s, never panics;
+//! * the serve loop scripts cleanly and the disk cache survives a
+//!   restart.
+
+use osdp::config::{Cluster, GIB, RunConfig, SearchConfig};
+use osdp::cost::Profiler;
+use osdp::model::{GptDims, build_gpt};
+use osdp::planner::{self, Engine, Scheduler};
+use osdp::service::key::fingerprint;
+use osdp::service::{Answer, CacheConfig, PlanError, PlanQuery, PlanService,
+                    QueryKey, QueryShape, Source, server};
+use osdp::util::json::Json;
+
+fn tiny_profiler(layers: usize, hidden: usize, grans: Vec<usize>)
+                 -> Profiler {
+    let m = build_gpt(&GptDims::uniform("t", 3000, 64, layers, hidden, 4));
+    let c = Cluster::rtx_titan(8, 8.0);
+    // coarse 2-ops/layer graph keeps the unfolded ground-truth engine's
+    // unbudgeted searches test-sized
+    let s = SearchConfig {
+        granularities: grans,
+        paper_granularity: true,
+        ..Default::default()
+    };
+    Profiler::new(&m, &c, &s)
+}
+
+fn dp_peak(p: &Profiler, b: usize) -> f64 {
+    p.evaluate(&p.index_of(|d| d.is_pure_dp()), b).peak_mem
+}
+
+// ---------------------------------------------------------------------
+// cache-key canonicalization
+// ---------------------------------------------------------------------
+
+#[test]
+fn equivalent_config_spellings_share_a_key() {
+    let m = build_gpt(&GptDims::uniform("t", 2000, 64, 4, 128, 4));
+    let prof = |toml: &str| {
+        let cfg = RunConfig::from_str(toml).unwrap();
+        Profiler::new(&m, &cfg.cluster, &cfg.search)
+    };
+    // baseline spelling
+    let a = prof(
+        "[cluster]\npreset = \"rtx_titan\"\nn_devices = 8\n\
+         [search]\ngranularities = [0, 4]",
+    );
+    // field order swapped, defaults written out explicitly
+    let b = prof(
+        "[search]\ngranularities = [0, 4]\ncheckpointing = false\n\
+         hybrid_scopes = true\n[cluster]\nmem_limit_gib = 8.0\n\
+         n_devices = 8\npreset = \"rtx_titan\"",
+    );
+    // the preset spelled out as a custom cluster, field by field
+    let c = prof(
+        "[cluster]\npreset = \"custom\"\nn_devices = 8\n\
+         alpha_intra = 1e-5\nbeta_intra = 8.333333333333334e-11\n\
+         alpha_inter = 1e-5\nbeta_inter = 8.333333333333334e-11\n\
+         flops = 14e12\n[search]\ngranularities = [0, 4]",
+    );
+    assert_eq!(fingerprint(&a), fingerprint(&b),
+               "field order / explicit defaults must not split the key");
+    assert_eq!(fingerprint(&a), fingerprint(&c),
+               "preset vs spelled-out cluster must not split the key");
+
+    // search-relevant changes split the key
+    let grans = prof(
+        "[cluster]\npreset = \"rtx_titan\"\nn_devices = 8\n\
+         [search]\ngranularities = [0, 2, 4]",
+    );
+    let ckpt = prof(
+        "[cluster]\npreset = \"rtx_titan\"\nn_devices = 8\n\
+         [search]\ngranularities = [0, 4]\ncheckpointing = true",
+    );
+    assert_ne!(fingerprint(&a), fingerprint(&grans));
+    assert_ne!(fingerprint(&a), fingerprint(&ckpt));
+
+    // hybrid_scopes is search-irrelevant on a single node (menus are
+    // identical) but search-relevant on a multi-node cluster
+    let single_off = prof(
+        "[cluster]\npreset = \"rtx_titan\"\nn_devices = 8\n\
+         [search]\ngranularities = [0, 4]\nhybrid_scopes = false",
+    );
+    assert_eq!(fingerprint(&a), fingerprint(&single_off),
+               "scopes knob is irrelevant on one node");
+    let two_on = prof(
+        "[cluster]\npreset = \"two_server_a100\"\n\
+         [search]\ngranularities = [0, 4]",
+    );
+    let two_off = prof(
+        "[cluster]\npreset = \"two_server_a100\"\n\
+         [search]\ngranularities = [0, 4]\nhybrid_scopes = false",
+    );
+    assert_ne!(fingerprint(&two_on), fingerprint(&two_off),
+               "scopes knob is search-relevant across nodes");
+
+    // limit and shape live outside the structure (warm-start neighbors)
+    let ka = QueryKey::for_query(&a, 4.0 * GIB, QueryShape::Batch(2));
+    let kb = QueryKey::for_query(&a, 6.0 * GIB, QueryShape::Batch(2));
+    let kc = QueryKey::for_query(&a, 4.0 * GIB,
+                                 QueryShape::Sweep { max_batch: 8 });
+    assert_eq!(ka.structure, kb.structure);
+    assert_eq!(ka.structure, kc.structure);
+    assert_ne!(ka, kb);
+    assert_ne!(ka, kc);
+}
+
+// ---------------------------------------------------------------------
+// warm-start bit-identity (engines x threads x seed provenance)
+// ---------------------------------------------------------------------
+
+#[test]
+fn warm_seeding_never_changes_the_result() {
+    for (layers, hidden, grans) in
+        [(4usize, 256usize, vec![0usize]), (6, 192, vec![0, 2]),
+         (3, 320, vec![0, 4])]
+    {
+        let p = tiny_profiler(layers, hidden, grans);
+        let dp = dp_peak(&p, 2);
+        for frac in [0.4, 0.65, 0.9] {
+            let limit = dp * frac;
+            // candidate warm seeds: the optima of neighboring batches
+            // and limits (what the cache would hold), a feasible-ish
+            // all-ZDP plan, and malformed junk the search must shrug off
+            let mut seeds: Vec<Vec<usize>> = Vec::new();
+            for (nb, nlimit) in
+                [(1usize, limit), (3, limit), (2, limit * 0.8),
+                 (2, limit * 1.3)]
+            {
+                if let Some((choice, _, _)) =
+                    planner::dfs_search_warm(&p, nlimit, nb, u64::MAX,
+                                             Engine::FoldedBb, None)
+                {
+                    seeds.push(choice);
+                }
+            }
+            seeds.push(p.index_of(|d| d.is_pure_zdp()));
+            seeds.push(vec![0; p.n_ops() + 3]); // wrong length
+            seeds.push(vec![usize::MAX; p.n_ops()]); // wild indices
+            for engine in
+                [Engine::Frontier, Engine::FoldedBb, Engine::UnfoldedBb]
+            {
+                let cold = planner::dfs_search_warm(&p, limit, 2, u64::MAX,
+                                                    engine, None);
+                for seed in &seeds {
+                    let warm = planner::dfs_search_warm(
+                        &p, limit, 2, u64::MAX, engine, Some(seed));
+                    match (&cold, &warm) {
+                        (None, None) => {}
+                        (Some((cc, ccost, cst)), Some((wc, wcost, wst))) => {
+                            assert_eq!(cc, wc,
+                                       "choice changed: {engine:?} \
+                                        frac={frac}");
+                            assert_eq!(ccost.time.to_bits(),
+                                       wcost.time.to_bits());
+                            assert_eq!(ccost.peak_mem.to_bits(),
+                                       wcost.peak_mem.to_bits());
+                            assert!(wst.nodes <= cst.nodes,
+                                    "warm explored more: {} > {}",
+                                    wst.nodes, cst.nodes);
+                        }
+                        _ => panic!(
+                            "feasibility changed by warm seed \
+                             ({engine:?}, frac={frac})"
+                        ),
+                    }
+                }
+                // and through the parallel engine at 8 threads
+                let cfg = planner::ParallelConfig {
+                    threads: 8,
+                    engine,
+                    ..Default::default()
+                };
+                let par_cold =
+                    planner::parallel_search_seeded(&p, limit, 2, &cfg,
+                                                    None);
+                let par_warm = planner::parallel_search_seeded(
+                    &p, limit, 2, &cfg, seeds.first().map(|s| s.as_slice()));
+                match (&cold, &par_cold, &par_warm) {
+                    (None, None, None) => {}
+                    (Some((cc, ccost, _)), Some((pc, pcost, _)),
+                     Some((wc, wcost, _))) => {
+                        assert_eq!(cc, pc);
+                        assert_eq!(cc, wc);
+                        assert_eq!(ccost.time.to_bits(),
+                                   pcost.time.to_bits());
+                        assert_eq!(ccost.time.to_bits(),
+                                   wcost.time.to_bits());
+                    }
+                    _ => panic!("parallel/seeded feasibility mismatch"),
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// the 24L sweep: warm-start node reduction (strict) + sweep identity
+// ---------------------------------------------------------------------
+
+#[test]
+fn warm_start_reduces_nodes_on_the_24l_sweep() {
+    let m = build_gpt(&GptDims::uniform("deep", 5000, 128, 24, 256, 4));
+    let c = Cluster::rtx_titan(8, 8.0);
+    let s = SearchConfig {
+        granularities: vec![0],
+        paper_granularity: true,
+        ..Default::default()
+    };
+    let p = Profiler::new(&m, &c, &s);
+    let dp = dp_peak(&p, 1);
+
+    let mut strict_seen = false;
+    for frac in [0.3, 0.35, 0.425, 0.5, 0.575, 0.65, 0.725, 0.8] {
+        let limit = dp * frac;
+        let Some(cold) =
+            Scheduler::new(&p, limit, 8).with_threads(1).run()
+        else {
+            continue;
+        };
+        // sweep-level: warm-starting the whole sweep from the b=1 winner
+        // (what the service's cache hands the Scheduler) is bit-identical
+        // and never explores more
+        let warm_sweep = Scheduler::new(&p, limit, 8)
+            .with_threads(1)
+            .with_warm(cold.candidates[0].plan.choice.clone())
+            .run()
+            .unwrap();
+        assert_eq!(cold.candidates.len(), warm_sweep.candidates.len());
+        for (a, b) in cold.candidates.iter().zip(&warm_sweep.candidates) {
+            assert_eq!(a.plan.choice, b.plan.choice);
+            assert_eq!(a.plan.cost.time.to_bits(),
+                       b.plan.cost.time.to_bits());
+        }
+        assert!(warm_sweep.total_nodes <= cold.total_nodes);
+
+        // per-batch: warm-start each batch from its *neighboring* batch's
+        // winner; identical plan, never more nodes, strictly fewer
+        // somewhere on the sweep (asserted across the scan below)
+        for b in 1..=cold.candidates.len() {
+            for nb in [b.saturating_sub(1), b + 1] {
+                if nb < 1 || nb > cold.candidates.len() || nb == b {
+                    continue;
+                }
+                let seed = &cold.candidates[nb - 1].plan.choice;
+                let cold_one = planner::dfs_search_warm(
+                    &p, limit, b, u64::MAX, Engine::Frontier, None)
+                    .expect("swept batch is feasible");
+                let warm_one = planner::dfs_search_warm(
+                    &p, limit, b, u64::MAX, Engine::Frontier,
+                    Some(seed))
+                    .expect("warm seed cannot break feasibility");
+                assert_eq!(cold_one.0, warm_one.0);
+                assert_eq!(cold_one.1.time.to_bits(),
+                           warm_one.1.time.to_bits());
+                assert!(warm_one.2.nodes <= cold_one.2.nodes);
+                if warm_one.2.nodes < cold_one.2.nodes {
+                    strict_seen = true;
+                }
+            }
+        }
+    }
+    assert!(
+        strict_seen,
+        "no neighboring-batch warm start strictly reduced nodes anywhere \
+         on the 24L sweep — the warm path is not actually pruning"
+    );
+}
+
+// ---------------------------------------------------------------------
+// the service: sources, bit-identity, coalescing, sweeps, errors
+// ---------------------------------------------------------------------
+
+const TINY: &str = "gpt:3000,64,6,192,4";
+
+fn tiny_service_profiler() -> Profiler {
+    let q = PlanQuery::batch(TINY, 8.0, 1);
+    let cluster = q.cluster.resolve().unwrap();
+    let model = osdp::service::resolve_setting(TINY).unwrap();
+    Profiler::new(&model, &cluster, &q.search)
+}
+
+/// A limit (in GiB) around `frac` of the tiny model's all-DP peak at
+/// `b`, computed through the same profiler the service will build.
+fn tiny_mem_gib(frac: f64, b: usize) -> f64 {
+    dp_peak(&tiny_service_profiler(), b) * frac / GIB
+}
+
+/// A limit (in GiB) just above the tiny model's all-ZDP peak at `b` —
+/// memory terms are non-decreasing in the batch, so a sweep under this
+/// limit is feasible through `b` and hits the memory wall shortly after.
+fn tiny_wall_gib(b: usize) -> f64 {
+    let p = tiny_service_profiler();
+    let zdp = p.evaluate(&p.index_of(|d| d.is_pure_zdp()), b).peak_mem;
+    zdp * 1.02 / GIB
+}
+
+#[test]
+fn service_sources_cache_then_warm_are_bit_identical() {
+    let mem_a = tiny_mem_gib(0.55, 2);
+    let mem_b = tiny_mem_gib(0.75, 2);
+    let q_a = PlanQuery::batch(TINY, mem_a, 2);
+    let q_b = PlanQuery::batch(TINY, mem_b, 2);
+
+    // cold then cache
+    let service = PlanService::in_memory();
+    let cold = service.query(&q_b).unwrap();
+    assert_eq!(cold.source, Source::Cold);
+    let hit = service.query(&q_b).unwrap();
+    assert_eq!(hit.source, Source::Cache);
+    let (Answer::Plan { plan: cold_plan, stats: cold_stats },
+         Answer::Plan { plan: hit_plan, .. }) =
+        (&cold.answer, &hit.answer)
+    else {
+        panic!("batch query must answer a plan");
+    };
+    assert_eq!(cold_plan.choice, hit_plan.choice);
+    assert_eq!(cold_plan.cost.time.to_bits(),
+               hit_plan.cost.time.to_bits());
+    assert!(cold_stats.nodes > 0);
+    let s = service.stats();
+    assert_eq!((s.hits, s.misses, s.planner_runs), (1, 1, 1));
+
+    // warm from a tighter-limit neighbor: its plan is feasible at the
+    // looser limit by construction, so the source is deterministically
+    // Warm — and the answer is bit-identical to the cold run above
+    let warm_service = PlanService::in_memory();
+    warm_service.query(&q_a).unwrap();
+    let warm = warm_service.query(&q_b).unwrap();
+    assert_eq!(warm.source, Source::Warm);
+    let Answer::Plan { plan: warm_plan, stats: warm_stats } = &warm.answer
+    else {
+        panic!("batch query must answer a plan");
+    };
+    assert_eq!(warm_plan.choice, cold_plan.choice,
+               "warm-started answer must equal the cold answer");
+    assert_eq!(warm_plan.cost.time.to_bits(),
+               cold_plan.cost.time.to_bits());
+    assert!(warm_stats.nodes <= cold_stats.nodes);
+    let ws = warm_service.stats();
+    assert_eq!(ws.warm_seeded, 1);
+    assert_eq!(ws.planner_runs, 2);
+
+    // no-warm opt-out plans cold and still matches
+    let cold_service = PlanService::in_memory();
+    cold_service.query(&q_a).unwrap();
+    let mut q_nw = q_b.clone();
+    q_nw.warm = false;
+    let nw = cold_service.query(&q_nw).unwrap();
+    assert_eq!(nw.source, Source::Cold);
+    let Answer::Plan { plan: nw_plan, .. } = &nw.answer else {
+        panic!()
+    };
+    assert_eq!(nw_plan.choice, cold_plan.choice);
+}
+
+#[test]
+fn eight_concurrent_identical_queries_run_one_search() {
+    let mem = tiny_mem_gib(0.5, 2);
+    let mut q = PlanQuery::batch(TINY, mem, 2);
+    q.threads = 1; // keep each (single) search serial and deterministic
+    let service = PlanService::in_memory();
+    let barrier = std::sync::Barrier::new(8);
+    let results: Vec<_> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let q = &q;
+                let service = &service;
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    barrier.wait();
+                    service.query(q).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let s = service.stats();
+    assert_eq!(s.planner_runs, 1,
+               "8 concurrent identical queries must run exactly one \
+                search (got {} runs; stats: {})",
+               s.planner_runs, s.describe());
+    assert_eq!(s.hits + s.coalesced, 7,
+               "everyone but the leader shares: {}", s.describe());
+    let led: Vec<_> = results
+        .iter()
+        .filter(|r| matches!(r.source, Source::Cold | Source::Warm))
+        .collect();
+    assert_eq!(led.len(), 1, "exactly one caller led the flight");
+    let Answer::Plan { plan: first, .. } = &results[0].answer else {
+        panic!()
+    };
+    for r in &results {
+        let Answer::Plan { plan, .. } = &r.answer else { panic!() };
+        assert_eq!(plan.choice, first.choice,
+                   "coalesced answers must be bit-identical");
+        assert_eq!(plan.cost.time.to_bits(), first.cost.time.to_bits());
+    }
+}
+
+#[test]
+fn sweep_matches_direct_scheduler_and_populates_batches() {
+    let mem = tiny_wall_gib(3); // walls after a few batch sizes
+    let q = PlanQuery::sweep(TINY, mem, 16);
+    let service = PlanService::in_memory();
+    let resp = service.query(&q).unwrap();
+    assert_eq!(resp.source, Source::Cold);
+    let Answer::Sweep { plans, best, stats } = &resp.answer else {
+        panic!("sweep query must answer a sweep");
+    };
+    assert!(stats.complete);
+    assert!(!plans.is_empty());
+
+    // ground truth: the scheduler run directly on an identically-built
+    // profiler
+    let cluster = q.cluster.resolve().unwrap();
+    let model = osdp::service::resolve_setting(TINY).unwrap();
+    let p = Profiler::new(&model, &cluster, &q.search);
+    let direct = Scheduler::new(&p, cluster.mem_limit, 16).run().unwrap();
+    assert_eq!(plans.len(), direct.candidates.len());
+    assert_eq!(*best, direct.best);
+    for (a, b) in plans.iter().zip(&direct.candidates) {
+        assert_eq!(a.choice, b.plan.choice);
+        assert_eq!(a.cost.time.to_bits(), b.plan.cost.time.to_bits());
+    }
+    let n = plans.len();
+    assert!(n < 16, "limit must wall the sweep for this test to bite");
+
+    // the sweep populated every per-batch entry plus the wall
+    let hits_before = service.stats().hits;
+    for b in 1..=n {
+        let resp = service.query(&PlanQuery::batch(TINY, mem, b)).unwrap();
+        assert_eq!(resp.source, Source::Cache, "b={b} must hit");
+        let Answer::Plan { plan, .. } = &resp.answer else { panic!() };
+        assert_eq!(plan.choice, direct.candidates[b - 1].plan.choice);
+    }
+    let wall = service.query(&PlanQuery::batch(TINY, mem, n + 1));
+    assert_eq!(wall.unwrap_err(),
+               PlanError::Infeasible { batch: Some(n + 1) });
+    let s = service.stats();
+    assert_eq!(s.hits, hits_before + n as u64 + 1,
+               "wall entry must be served from cache too: {}",
+               s.describe());
+
+    // the sweep itself hits on repeat
+    let again = service.query(&q).unwrap();
+    assert_eq!(again.source, Source::Cache);
+    let Answer::Sweep { plans: cached_plans, .. } = &again.answer else {
+        panic!()
+    };
+    for (a, b) in cached_plans.iter().zip(plans) {
+        assert_eq!(a.choice, b.choice);
+        assert_eq!(a.cost.time.to_bits(), b.cost.time.to_bits());
+    }
+}
+
+#[test]
+fn hostile_queries_return_structured_errors() {
+    let service = PlanService::in_memory();
+    let cases: Vec<(PlanQuery, &str)> = vec![
+        (PlanQuery::batch(TINY, 8.0, 0), "bad-request"),
+        (PlanQuery::sweep(TINY, 8.0, 0), "bad-request"),
+        (PlanQuery::batch("no-such-model", 8.0, 1), "unknown-setting"),
+        (PlanQuery::batch("gpt:1,2", 8.0, 1), "bad-request"),
+        (PlanQuery::batch(TINY, f64::NAN, 1), "bad-request"),
+        (PlanQuery::batch(TINY, -2.0, 1), "bad-request"),
+        (
+            {
+                let mut q = PlanQuery::batch(TINY, 8.0, 1);
+                q.cluster.preset = "warp-drive".into();
+                q
+            },
+            "invalid-cluster",
+        ),
+        (
+            {
+                let mut q = PlanQuery::batch(TINY, 8.0, 1);
+                q.cluster.preset = "two_server_a100".into();
+                q.cluster.devices = Some(8);
+                q
+            },
+            "invalid-cluster",
+        ),
+        (
+            {
+                let mut q = PlanQuery::batch(TINY, 8.0, 1);
+                q.cluster.devices = Some(0);
+                q
+            },
+            "invalid-cluster",
+        ),
+        (
+            {
+                let mut q = PlanQuery::batch(TINY, 8.0, 1);
+                q.search.granularities = vec![0, 1 << 30];
+                q
+            },
+            "bad-request",
+        ),
+        // unbounded batch/sweep requests must be capped, not served
+        (PlanQuery::batch(TINY, 8.0, usize::MAX), "bad-request"),
+        (PlanQuery::sweep(TINY, 8.0, 100_000_000), "bad-request"),
+        // memory wall at every option: structured infeasibility
+        (PlanQuery::batch(TINY, 1e-9, 1), "infeasible"),
+        (PlanQuery::sweep(TINY, 1e-9, 4), "infeasible"),
+    ];
+    for (q, kind) in cases {
+        match service.query(&q) {
+            Err(e) => assert_eq!(e.kind(), kind, "query {q:?} -> {e}"),
+            Ok(_) => panic!("query {q:?} must fail with {kind}"),
+        }
+    }
+    // infeasibility is cached: the repeat is a hit, still structured
+    let before = service.stats();
+    let again = service.query(&PlanQuery::batch(TINY, 1e-9, 1));
+    assert_eq!(again.unwrap_err(),
+               PlanError::Infeasible { batch: Some(1) });
+    let after = service.stats();
+    assert_eq!(after.hits, before.hits + 1);
+    assert_eq!(after.planner_runs, before.planner_runs);
+}
+
+#[test]
+fn serve_loop_scripts_cleanly() {
+    let mem = tiny_mem_gib(0.7, 1);
+    let service = PlanService::in_memory();
+    let script = format!(
+        "\n# a comment, then two identical queries, then assorted errors\n\
+         query setting={TINY} mem={mem} batch=1 threads=1\n\
+         query setting={TINY} mem={mem} batch=1 threads=1\n\
+         frobnicate the planner\n\
+         query setting=nope mem=4 batch=1\n\
+         query setting={TINY} mem=1e-9 batch=1\n\
+         sweep setting={TINY} mem={mem} batch-cap=2 threads=1\n\
+         stats\n\
+         quit\n\
+         query setting={TINY} mem={mem} batch=1\n"
+    );
+    let mut out = Vec::new();
+    server::serve_loop(&service, script.as_bytes(), &mut out).unwrap();
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<Json> = text
+        .lines()
+        .map(|l| Json::parse(l).expect("every response line is JSON"))
+        .collect();
+    assert_eq!(lines.len(), 8, "8 responses then quit stops the loop:\n{text}");
+    assert_eq!(lines[0].get("ok").as_bool(), Some(true));
+    assert_eq!(lines[0].get("source").as_str(), Some("cold"));
+    assert_eq!(lines[1].get("source").as_str(), Some("cache"));
+    // identical answers, down to the choice vector
+    assert_eq!(lines[0].get("choice"), lines[1].get("choice"));
+    assert_eq!(lines[0].get("time_s"), lines[1].get("time_s"));
+    assert_eq!(lines[2].get("error").as_str(), Some("bad-request"));
+    assert_eq!(lines[3].get("error").as_str(), Some("unknown-setting"));
+    assert_eq!(lines[4].get("error").as_str(), Some("infeasible"));
+    assert_eq!(lines[5].get("kind").as_str(), Some("sweep"));
+    assert!(lines[5].get("candidates").as_arr().is_some());
+    assert_eq!(lines[6].get("kind").as_str(), Some("stats"));
+    assert_eq!(lines[6].get("hits").as_usize(), Some(1));
+    // three planner runs: the first query, the infeasible probe, the sweep
+    assert_eq!(lines[6].get("planner_runs").as_usize(), Some(3));
+    assert_eq!(lines[7].get("kind").as_str(), Some("bye"));
+}
+
+#[test]
+fn disk_cache_survives_a_restart_and_rejects_foreign_epochs() {
+    let dir = std::env::temp_dir().join(format!(
+        "osdp-service-test-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = CacheConfig { capacity: 64, disk_dir: Some(dir.clone()) };
+    let mem = tiny_mem_gib(0.6, 2);
+    let q = PlanQuery::batch(TINY, mem, 2);
+
+    let first = PlanService::new(cfg.clone());
+    let cold = first.query(&q).unwrap();
+    assert_eq!(cold.source, Source::Cold);
+    assert_eq!(first.stats().persist_errors, 0);
+    drop(first);
+
+    let second = PlanService::new(cfg.clone());
+    let hit = second.query(&q).unwrap();
+    assert_eq!(hit.source, Source::Cache,
+               "restart must serve from the persisted cache");
+    let (Answer::Plan { plan: a, .. }, Answer::Plan { plan: b, .. }) =
+        (&cold.answer, &hit.answer)
+    else {
+        panic!()
+    };
+    assert_eq!(a.choice, b.choice);
+    assert_eq!(a.cost.time.to_bits(), b.cost.time.to_bits());
+    let s = second.stats();
+    assert_eq!((s.planner_runs, s.hits), (0, 1));
+    drop(second);
+
+    // a file from another cost-model epoch is rejected wholesale
+    let path = dir.join("plan_cache.json");
+    let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let mut obj = doc.as_obj().unwrap().clone();
+    obj.insert("epoch".into(), Json::Num(9999.0));
+    std::fs::write(&path, osdp::util::json::to_string(&Json::Obj(obj)))
+        .unwrap();
+    let third = PlanService::new(cfg);
+    assert!(third.stats().stale_rejected > 0);
+    let replan = third.query(&q).unwrap();
+    assert!(matches!(replan.source, Source::Cold | Source::Warm),
+            "stale cache must not serve hits");
+    let _ = std::fs::remove_dir_all(&dir);
+}
