@@ -5,9 +5,10 @@ CARGO ?= cargo
 PY ?= python3
 
 .PHONY: ci build examples test fmt clippy bench-smoke bench-search \
-        bench-service python-test artifacts
+        bench-service serve-drive serve-mirror python-test artifacts
 
-ci: build examples test fmt clippy bench-smoke python-test
+ci: build examples test fmt clippy bench-smoke serve-drive serve-mirror \
+    python-test
 
 build:
 	$(CARGO) build --release
@@ -26,18 +27,33 @@ fmt:
 clippy:
 	$(CARGO) clippy --all-targets -- -D warnings
 
-# Benches compile everywhere; running them is a local-only activity.
+# Benches compile everywhere; CI runs them with OSDP_BENCH_STRICT=1 so
+# the timing assertions block (see bench-search / bench-service).
 bench-smoke:
 	$(CARGO) bench --no-run
 
-# The perf-tracking benches CI runs and archives per commit
-# (BENCH_search.json / BENCH_service.json); OSDP_BENCH_STRICT=1 adds
-# timing assertions for toolchain-equipped local runs.
+# The perf-tracking benches CI runs, asserts on (OSDP_BENCH_STRICT=1),
+# and archives per commit (BENCH_search.json / BENCH_service.json).
 bench-search:
-	$(CARGO) bench --bench search_time
+	OSDP_BENCH_STRICT=1 $(CARGO) bench --bench search_time
 
 bench-service:
-	$(CARGO) bench --bench service_throughput
+	OSDP_BENCH_STRICT=1 $(CARGO) bench --bench service_throughput
+
+# End-to-end served-concurrency proof: start the release binary on an
+# ephemeral port, drive it with 8 parallel stdlib-python clients, and
+# assert through the protocol's own stats verb that 8 identical
+# concurrent queries ran exactly one planner search.
+serve-drive: build
+	$(PY) python/tests/drive_frontend.py --bin target/release/osdp \
+		--workers 8
+
+# Toolchain-free twin of the above: the pure-python mirror of the
+# bounded channel / framing / telemetry machinery, self-checked with
+# real threads and sockets. Runs in containers with no cargo.
+serve-mirror:
+	$(PY) python/mirror/frontend_mirror.py
+	$(PY) python/tests/drive_frontend.py --mirror
 
 # pytest exit 5 = nothing collected/selected (e.g. hypothesis missing):
 # not a failure for this gate.

@@ -30,12 +30,12 @@ fn main() {
             let profiler = Profiler::new(&entry.model, &cluster, &search);
             match Scheduler::new(&profiler, cluster.mem_limit,
                                  search.max_batch).run() {
-                None => {
+                Err(_) => {
                     t.row(vec![entry.setting.clone(), "-".into(), "-".into(),
                                "-".into(), "-".into(), "-".into(),
                                "OOM".into(), "0".into()]);
                 }
-                Some(res) => {
+                Ok(res) => {
                     let plan = res.best_plan();
                     let (dp, zdp, mixed) = plan.mode_counts();
                     t.row(vec![

@@ -1,0 +1,722 @@
+"""Python mirror of the socket front-end's concurrency machinery (PR 6,
+in the tradition of service_mirror.py — this container has no Rust
+toolchain, so the load-bearing concurrent-systems design is re-validated
+here with real threads and real sockets).
+
+Mirrors:
+
+* ``service/frontend.rs::Channel`` — the bounded MPMC handoff between
+  the acceptor and the worker pool: FIFO, blocking ``send`` at capacity,
+  ``close()`` lets receivers drain queued items then observe the end;
+* ``service/frontend.rs::read_request_line`` — newline framing with the
+  16 KiB line cap, idle-timeout accounting, and the
+  structured-error-then-hangup paths;
+* ``service/telemetry.rs`` — the fixed bucket bounds, the binning rule
+  (first bound the latency does not exceed), and the bucket-resolution
+  quantile estimate;
+* the service's single-flight coalescing contract, driven through TCP
+  this time: N identical concurrent queries -> exactly one planner
+  execution, everyone gets the bit-identical answer.
+
+The toy planner here is a deterministic pure function (a greedy
+downgrade over synthetic per-op tables, plus a deliberate sleep to
+widen race windows); what is being validated is the *machinery* around
+it, not the search arithmetic — service_mirror.py owns that.
+
+Checks:
+
+1. Channel: FIFO order, capacity blocking, close-then-drain, and that
+   close wakes blocked receivers.
+2. Histogram: binning and quantiles reproduce the reference vectors in
+   rust/src/service/telemetry.rs's unit tests.
+3. 8 identical concurrent socket queries run exactly one search, proven
+   through the wire via the ``stats`` verb; all 8 answers bit-identical.
+4. Concurrent distinct queries match a serial replay bit for bit.
+5. Telemetry consistency under concurrent, partly hostile load:
+   histogram counts == queries, hits + misses == queries - rejected.
+6. Framing: an oversized line gets a structured error and a closed
+   socket; an idle connection times out without wedging its worker.
+7. ``shutdown`` acks, drains, and the listener stops accepting.
+
+Run: ``python3 python/mirror/frontend_mirror.py`` (exits non-zero on
+any mismatch). ``--serve`` starts the mirror server on an ephemeral
+port and prints the same ``{"addr":...,"kind":"listening","ok":true}``
+line the Rust binary prints, so python/tests/drive_frontend.py can
+drive either implementation with the same assertions.
+"""
+
+import json
+import socket
+import sys
+import threading
+import time
+from collections import OrderedDict
+
+# --------------------------------------------------- telemetry mirror
+
+LATENCY_BUCKETS_S = [
+    1e-5, 3e-5, 1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1, 3e-1, 1.0,
+]
+N_BUCKETS = len(LATENCY_BUCKETS_S) + 1
+MAX_LINE = 16 * 1024
+
+COUNTERS = [
+    "connections", "conn_timeouts", "requests", "bad_requests",
+    "queries", "rejected", "infeasible", "warmup_replans",
+    "warmup_failures",
+]
+
+
+def bucket_of(seconds):
+    """telemetry.rs::Histogram::bucket_of — first bound not exceeded."""
+    for i, b in enumerate(LATENCY_BUCKETS_S):
+        if seconds <= b:
+            return i
+    return len(LATENCY_BUCKETS_S)
+
+
+class Histogram:
+    def __init__(self):
+        self.buckets = [0] * N_BUCKETS
+        self.count = 0
+        self.sum_s = 0.0
+        self._lock = threading.Lock()
+
+    def observe(self, seconds):
+        s = seconds if (seconds == seconds and 0.0 <= seconds
+                        != float("inf")) else 0.0
+        with self._lock:
+            self.buckets[bucket_of(s)] += 1
+            self.count += 1
+            self.sum_s += s
+
+    def quantile(self, q):
+        """telemetry.rs::Histogram::quantile — bucket upper bound of
+        rank ceil(q * count); the overflow bucket reports the last
+        finite bound."""
+        with self._lock:
+            total = self.count
+            snap = list(self.buckets)
+        if total == 0:
+            return None
+        rank = min(max(int(-(-min(max(q, 0.0), 1.0) * total // 1)), 1),
+                   total)
+        cum = 0
+        for i, c in enumerate(snap):
+            cum += c
+            if cum >= rank:
+                return LATENCY_BUCKETS_S[min(i,
+                                             len(LATENCY_BUCKETS_S) - 1)]
+        return LATENCY_BUCKETS_S[-1]
+
+
+class Telemetry:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.counters = {name: 0 for name in COUNTERS}
+        self.batch_latency = Histogram()
+        self.sweep_latency = Histogram()
+
+    def bump(self, name):
+        with self._lock:
+            self.counters[name] += 1
+
+    def get(self, name):
+        with self._lock:
+            return self.counters[name]
+
+    def observe_query(self, sweep, seconds, error_kind):
+        self.bump("queries")
+        (self.sweep_latency if sweep else self.batch_latency).observe(
+            seconds)
+        if error_kind == "infeasible":
+            self.bump("infeasible")
+        elif error_kind is not None:
+            self.bump("rejected")
+
+    def to_json(self):
+        with self._lock:
+            doc = dict(self.counters)
+        doc["latency"] = {
+            "batch": {"count": self.batch_latency.count},
+            "sweep": {"count": self.sweep_latency.count},
+        }
+        return doc
+
+
+# ----------------------------------------------------- channel mirror
+
+
+class Channel:
+    """frontend.rs::Channel — bounded MPMC queue on a mutex + two
+    condition variables, with close-then-drain semantics."""
+
+    def __init__(self, cap):
+        self.cap = max(cap, 1)
+        self.queue = []
+        self.closed = False
+        self._lock = threading.Lock()
+        self.not_empty = threading.Condition(self._lock)
+        self.not_full = threading.Condition(self._lock)
+
+    def send(self, item):
+        with self._lock:
+            while len(self.queue) >= self.cap and not self.closed:
+                self.not_full.wait()
+            if self.closed:
+                return False
+            self.queue.append(item)
+            self.not_empty.notify()
+            return True
+
+    def recv(self):
+        with self._lock:
+            while not self.queue and not self.closed:
+                self.not_empty.wait()
+            if self.queue:
+                item = self.queue.pop(0)
+                self.not_full.notify()
+                return item
+            return None  # closed and drained
+
+    def close(self):
+        with self._lock:
+            self.closed = True
+            self.not_empty.notify_all()
+            self.not_full.notify_all()
+
+
+# ------------------------------------------- toy service (single-flight)
+
+
+def toy_tables(setting, n_ops=12, n_opts=4):
+    """Deterministic synthetic per-op (time, mem) tables derived from
+    the setting string — a pure function, so every process and thread
+    agrees on the optimum."""
+    h = 2166136261
+    for ch in setting.encode():
+        h = ((h ^ ch) * 16777619) & 0xFFFFFFFF
+    tables = []
+    for i in range(n_ops):
+        opts = []
+        for c in range(n_opts):
+            h = (h * 1103515245 + 12345) & 0x7FFFFFFF
+            t = 1.0 + (h % 997) / 997.0 + 2.0 * c
+            m = 100.0 / (1 + c) + (h % 89)
+            opts.append((t, m))
+        tables.append(opts)
+    return tables
+
+
+def toy_plan(setting, mem, batch):
+    """The toy planner: greedy downgrade until the plan fits, else
+    infeasible. Deterministic; sleeps to widen the coalescing window."""
+    time.sleep(0.02)
+    tables = toy_tables(setting)
+    choice = [0] * len(tables)
+    peak = lambda ch: batch * sum(t[c][1] for t, c in zip(tables, ch))
+    while peak(choice) > mem * 1024.0:
+        moves = [i for i, c in enumerate(choice)
+                 if c + 1 < len(tables[i])]
+        if not moves:
+            return None
+        # largest memory saving first, index as the deterministic tie-break
+        i = max(moves, key=lambda i: (
+            tables[i][choice[i]][1] - tables[i][choice[i] + 1][1], -i))
+        choice[i] += 1
+    t = batch * sum(t[c][0] for t, c in zip(tables, choice))
+    return {"choice": choice, "time_s": round(t, 9),
+            "peak": peak(choice)}
+
+
+class ToyService:
+    """The service core contract: LRU cache + single-flight coalescing.
+    Mirrors PlanService's stats transitions (hits, misses, coalesced,
+    planner_runs) so the stats-verb assertions carry over."""
+
+    def __init__(self, capacity=256):
+        self._lock = threading.Lock()
+        self.cache = OrderedDict()
+        self.flights = {}
+        self.stats = {"hits": 0, "misses": 0, "coalesced": 0,
+                      "planner_runs": 0}
+
+    def query(self, setting, mem, batch):
+        key = (setting, round(float(mem), 9), int(batch))
+        with self._lock:
+            if key in self.cache:
+                self.cache.move_to_end(key)
+                self.stats["hits"] += 1
+                return dict(self.cache[key], source="cache")
+            self.stats["misses"] += 1
+            flight = self.flights.get(key)
+            if flight is None:
+                flight = {"done": threading.Event(), "value": None}
+                self.flights[key] = flight
+                leader = True
+            else:
+                leader = False
+                self.stats["coalesced"] += 1
+        if not leader:
+            flight["done"].wait()
+            value = flight["value"]
+            return None if value is None else dict(value,
+                                                   source="coalesced")
+        with self._lock:
+            self.stats["planner_runs"] += 1
+        value = toy_plan(setting, mem, batch)
+        with self._lock:
+            if value is not None:
+                self.cache[key] = value
+                while len(self.cache) > 256:
+                    self.cache.popitem(last=False)
+            flight["value"] = value
+            del self.flights[key]
+        flight["done"].set()
+        return None if value is None else dict(value, source="cold")
+
+
+# --------------------------------------------------- front-end mirror
+
+
+def handle_line(service, telemetry, line):
+    """server.rs::handle_line_full for the mirror grammar subset:
+    query / stats / quit / shutdown."""
+    parts = line.split()
+    verb, kv = parts[0], {}
+    for p in parts[1:]:
+        if "=" not in p:
+            telemetry.bump("bad_requests")
+            return (json.dumps({"ok": False, "error": "bad-request",
+                                "detail": f"malformed token {p!r}"}),
+                    "continue")
+        k, v = p.split("=", 1)
+        kv[k] = v
+    if verb == "quit":
+        return json.dumps({"kind": "bye", "ok": True}), "quit"
+    if verb == "shutdown":
+        return json.dumps({"kind": "shutdown", "ok": True}), "shutdown"
+    if verb == "stats":
+        with service._lock:
+            doc = dict(service.stats)
+        doc.update(ok=True, kind="stats", telemetry=telemetry.to_json())
+        return json.dumps(doc), "continue"
+    if verb != "query":
+        telemetry.bump("bad_requests")
+        return (json.dumps({"ok": False, "error": "bad-request",
+                            "detail": f"unknown verb {verb!r}"}),
+                "continue")
+    try:
+        setting = kv["setting"]
+        mem = float(kv["mem"])
+        batch = int(kv["batch"])
+        if batch < 1 or mem != mem or mem <= 0:
+            raise ValueError(batch)
+    except (KeyError, ValueError):
+        telemetry.bump("bad_requests")
+        return (json.dumps({"ok": False, "error": "bad-request",
+                            "detail": "query needs setting= mem= batch="}),
+                "continue")
+    t0 = time.monotonic()
+    if setting.startswith("nope"):
+        telemetry.observe_query(False, time.monotonic() - t0,
+                                "unknown-setting")
+        return (json.dumps({"ok": False, "error": "unknown-setting",
+                            "detail": setting}), "continue")
+    resp = service.query(setting, mem, batch)
+    if resp is None:
+        telemetry.observe_query(False, time.monotonic() - t0,
+                                "infeasible")
+        return (json.dumps({"ok": False, "error": "infeasible",
+                            "detail": f"nothing fits at b={batch}"}),
+                "continue")
+    telemetry.observe_query(False, time.monotonic() - t0, None)
+    resp = dict(resp, ok=True, kind="plan", batch=batch)
+    return json.dumps(resp, sort_keys=True), "continue"
+
+
+class Frontend:
+    """frontend.rs::Frontend — acceptor + bounded worker pool."""
+
+    POLL_TICK = 0.05
+
+    def __init__(self, service, telemetry, workers=4, idle_timeout=30.0,
+                 queue_cap=64):
+        self.service = service
+        self.telemetry = telemetry
+        self.idle_timeout = idle_timeout
+        self.shutdown_flag = threading.Event()
+        self.listener = socket.create_server(("127.0.0.1", 0))
+        self.addr = self.listener.getsockname()
+        self.conns = Channel(queue_cap)
+        self.acceptor = threading.Thread(target=self._accept,
+                                         daemon=True)
+        self.acceptor.start()
+        self.workers = [
+            threading.Thread(target=self._work, daemon=True)
+            for _ in range(max(workers, 1))
+        ]
+        for w in self.workers:
+            w.start()
+
+    def _accept(self):
+        try:
+            while True:
+                conn, _ = self.listener.accept()
+                if self.shutdown_flag.is_set():
+                    conn.close()
+                    break
+                self.telemetry.bump("connections")
+                if not self.conns.send(conn):
+                    conn.close()
+                    break
+        except OSError:
+            pass
+        finally:
+            self.listener.close()
+            self.conns.close()  # workers drain the queue, then exit
+
+    def _work(self):
+        while True:
+            conn = self.conns.recv()
+            if conn is None:
+                return
+            try:
+                self._serve(conn)
+            finally:
+                conn.close()
+
+    def _read_line(self, conn, buf):
+        """read_request_line: assemble one line, cap at MAX_LINE,
+        charge wait time against the idle budget, poll the shutdown
+        flag."""
+        started = time.monotonic()
+        while True:
+            if self.shutdown_flag.is_set():
+                return "shutdown", None, buf
+            nl = buf.find(b"\n")
+            if nl >= 0:
+                line, buf = buf[:nl], buf[nl + 1:]
+                if len(line) > MAX_LINE:
+                    return "toolong", None, buf
+                return "line", line.decode("utf-8", "replace"), buf
+            if len(buf) > MAX_LINE:
+                return "toolong", None, b""
+            try:
+                chunk = conn.recv(4096)
+            except socket.timeout:
+                if time.monotonic() - started >= self.idle_timeout:
+                    return "idle", None, buf
+                continue
+            except OSError:
+                return "error", None, buf
+            if not chunk:
+                return "eof", None, buf
+            buf += chunk
+
+    def _serve(self, conn):
+        conn.settimeout(self.POLL_TICK)
+        buf = b""
+        while True:
+            kind, line, buf = self._read_line(conn, buf)
+            if kind in ("eof", "error", "shutdown"):
+                return
+            if kind == "idle":
+                self.telemetry.bump("conn_timeouts")
+                self._send(conn, json.dumps(
+                    {"ok": False, "error": "timeout",
+                     "detail": "idle connection closed"}))
+                return
+            if kind == "toolong":
+                self.telemetry.bump("requests")
+                self.telemetry.bump("bad_requests")
+                self._send(conn, json.dumps(
+                    {"ok": False, "error": "bad-request",
+                     "detail": f"request line exceeds {MAX_LINE} bytes"}))
+                # drain so close() is a FIN, not an RST (frontend.rs
+                # does the same before hanging up)
+                drained = 0
+                while drained < (1 << 20):
+                    try:
+                        chunk = conn.recv(4096)
+                    except OSError:
+                        break
+                    if not chunk:
+                        break
+                    drained += len(chunk)
+                return
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            self.telemetry.bump("requests")
+            resp, outcome = handle_line(self.service, self.telemetry,
+                                        line)
+            if not self._send(conn, resp):
+                return
+            if outcome == "quit":
+                return
+            if outcome == "shutdown":
+                self.shutdown()
+                return
+
+    @staticmethod
+    def _send(conn, line):
+        try:
+            conn.sendall(line.encode() + b"\n")
+            return True
+        except OSError:
+            return False
+
+    def shutdown(self):
+        if self.shutdown_flag.is_set():
+            return
+        self.shutdown_flag.set()
+        try:  # wake the blocked accept() exactly like Frontend::shutdown
+            socket.create_connection(self.addr, timeout=1).close()
+        except OSError:
+            pass
+
+    def join(self):
+        self.acceptor.join()
+        for w in self.workers:
+            w.join()
+
+
+# ---------------------------------------------------------------- checks
+
+
+def check(cond, msg, ctx=""):
+    if not cond:
+        print("FAIL:", msg)
+        if ctx:
+            print("  ctx:", ctx)
+        sys.exit(1)
+
+
+def client(addr, lines, timeout=30.0):
+    """One connection, one response line per request line."""
+    out = []
+    with socket.create_connection(addr, timeout=timeout) as s:
+        f = s.makefile("rwb")
+        for line in lines:
+            f.write(line.encode() + b"\n")
+            f.flush()
+            resp = f.readline()
+            check(resp.endswith(b"\n"), "response not newline-framed",
+                  resp)
+            out.append(json.loads(resp))
+    return out
+
+
+def check_channel():
+    ch = Channel(2)
+    check(ch.send(1) and ch.send(2), "sends under capacity succeed")
+    got = []
+    t = threading.Thread(target=lambda: got.append(ch.send(3)))
+    t.start()
+    time.sleep(0.05)
+    check(t.is_alive(), "send must block at capacity")
+    check(ch.recv() == 1, "FIFO order")
+    t.join(timeout=5)
+    check(got == [True], "blocked send completes after recv")
+    check(ch.recv() == 2 and ch.recv() == 3, "FIFO order after unblock")
+    ch.send(4)
+    ch.close()
+    check(ch.recv() == 4, "close drains queued items first")
+    check(ch.recv() is None, "then reports the end")
+    ch2 = Channel(1)
+    res = []
+    t2 = threading.Thread(target=lambda: res.append(ch2.recv()))
+    t2.start()
+    time.sleep(0.05)
+    ch2.close()
+    t2.join(timeout=5)
+    check(res == [None], "close wakes blocked receivers")
+    print("channel mirror OK")
+
+
+def check_histogram():
+    # the reference vectors from telemetry.rs::buckets_bin_and_quantile
+    check(bucket_of(0.0) == 0 and bucket_of(1e-5) == 0, "bucket 0 edge")
+    check(bucket_of(1.1e-5) == 1 and bucket_of(0.5) == 10, "binning")
+    check(bucket_of(2.0) == 11, "overflow bucket")
+    h = Histogram()
+    check(h.quantile(0.5) is None, "empty histogram")
+    for _ in range(98):
+        h.observe(2e-5)
+    h.observe(0.02)
+    h.observe(5.0)
+    check(h.count == 100, "count")
+    check(h.buckets[1] == 98 and h.buckets[7] == 1
+          and h.buckets[-1] == 1, "bucket placement", h.buckets)
+    check(h.quantile(0.5) == 3e-5, "p50", h.quantile(0.5))
+    check(h.quantile(0.99) == 3e-2, "p99", h.quantile(0.99))
+    check(h.quantile(1.0) == 1.0, "overflow quotes last finite bound")
+    print("histogram mirror OK")
+
+
+def check_coalescing(frontend):
+    addr = frontend.addr
+    line = "query setting=deep24 mem=2.0 batch=2"
+    barrier = threading.Barrier(8)
+    results = [None] * 8
+
+    def one(i):
+        barrier.wait()
+        results[i] = client(addr, [line])[0]
+
+    threads = [threading.Thread(target=one, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    for r in results:
+        check(r is not None and r["ok"], "coalesced query failed", r)
+        check(r["choice"] == results[0]["choice"]
+              and r["time_s"] == results[0]["time_s"],
+              "coalesced answers must be bit-identical", r)
+    stats = client(addr, ["stats"])[0]
+    check(stats["planner_runs"] == 1,
+          "8 identical concurrent queries must run exactly one search",
+          stats)
+    check(stats["hits"] + stats["coalesced"] == 7,
+          "everyone but the leader shares", stats)
+    check(stats["telemetry"]["queries"] == 8, "telemetry rides along",
+          stats)
+    print("socket coalescing OK: 8 queries -> 1 planner run")
+
+
+def check_distinct_vs_serial(frontend):
+    addr = frontend.addr
+    lines = [f"query setting=model{i} mem={1.0 + 0.5 * i} batch={1 + i % 3}"
+             for i in range(6)]
+    serial = [toy_plan(f"model{i}", 1.0 + 0.5 * i, 1 + i % 3)
+              for i in range(6)]
+    barrier = threading.Barrier(6)
+    results = [None] * 6
+
+    def one(i):
+        barrier.wait()
+        results[i] = client(addr, [lines[i]])[0]
+
+    threads = [threading.Thread(target=one, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    for got, want in zip(results, serial):
+        check(got["ok"] and got["choice"] == want["choice"]
+              and got["time_s"] == want["time_s"],
+              "concurrent distinct != serial", (got, want))
+    print("distinct-vs-serial bit-identity OK")
+
+
+def check_telemetry_consistency():
+    service, telemetry = ToyService(), Telemetry()
+    frontend = Frontend(service, telemetry, workers=4)
+    addr = frontend.addr
+    script = ["query setting=tele mem=3.0 batch=1",
+              "frobnicate the planner",
+              "query setting=nope mem=4 batch=1"]
+    barrier = threading.Barrier(6)
+
+    def one():
+        barrier.wait()
+        r = client(addr, script)
+        check(r[0]["ok"], "good query failed", r[0])
+        check(r[1]["error"] == "bad-request", "junk not rejected", r[1])
+        check(r[2]["error"] == "unknown-setting", "bad setting", r[2])
+
+    threads = [threading.Thread(target=one) for _ in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    frontend.shutdown()
+    frontend.join()
+    check(telemetry.get("requests") == 18, "3 lines x 6 conns",
+          telemetry.to_json())
+    check(telemetry.get("queries") == 12, "parsed queries",
+          telemetry.to_json())
+    check(telemetry.get("bad_requests") == 6, "junk lines",
+          telemetry.to_json())
+    check(telemetry.get("rejected") == 6, "unknown settings",
+          telemetry.to_json())
+    check(telemetry.batch_latency.count == telemetry.get("queries"),
+          "histogram count == queries", telemetry.to_json())
+    check(service.stats["hits"] + service.stats["misses"]
+          == telemetry.get("queries") - telemetry.get("rejected"),
+          "hits + misses == validated queries",
+          (service.stats, telemetry.to_json()))
+    check(service.stats["planner_runs"] == 1,
+          "6 identical good queries -> one run", service.stats)
+    print("telemetry consistency OK")
+
+
+def check_framing():
+    service, telemetry = ToyService(), Telemetry()
+    frontend = Frontend(service, telemetry, workers=1, idle_timeout=0.2)
+    addr = frontend.addr
+    # oversized line: structured error, then hangup
+    with socket.create_connection(addr, timeout=30) as s:
+        s.sendall(b"x" * (64 * 1024))
+        f = s.makefile("rb")
+        doc = json.loads(f.readline())
+        check(doc["error"] == "bad-request", "oversized line", doc)
+        check(f.read() == b"", "socket closes after oversized line")
+    # idle connection: timeout error, worker survives
+    with socket.create_connection(addr, timeout=30) as s:
+        f = s.makefile("rb")
+        doc = json.loads(f.readline())
+        check(doc["error"] == "timeout", "idle timeout", doc)
+        check(f.read() == b"", "socket closes after idle timeout")
+    check(telemetry.get("conn_timeouts") == 1, "timeout counted")
+    stats = client(addr, ["stats"])[0]
+    check(stats["kind"] == "stats", "the 1-worker pool is not wedged")
+    frontend.shutdown()
+    frontend.join()
+    print("framing (oversized + idle timeout) OK")
+
+
+def check_shutdown():
+    service, telemetry = ToyService(), Telemetry()
+    frontend = Frontend(service, telemetry, workers=2)
+    addr = frontend.addr
+    r = client(addr, ["query setting=bye mem=2.0 batch=1", "shutdown"])
+    check(r[0]["ok"], "in-flight work completes before the ack", r[0])
+    check(r[1] == {"kind": "shutdown", "ok": True}, "shutdown ack", r[1])
+    frontend.join()
+    try:
+        with socket.create_connection(addr, timeout=2) as s:
+            s.settimeout(2)
+            check(s.makefile("rb").readline() == b"",
+                  "no worker serves after shutdown")
+    except OSError:
+        pass  # refused outright: equally fine
+    print("graceful shutdown OK")
+
+
+def main():
+    if "--serve" in sys.argv[1:]:
+        frontend = Frontend(ToyService(), Telemetry(), workers=8)
+        print(json.dumps({"addr": "%s:%d" % frontend.addr,
+                          "kind": "listening", "ok": True}),
+              flush=True)
+        frontend.join()
+        return
+    check_channel()
+    check_histogram()
+    service, telemetry = ToyService(), Telemetry()
+    frontend = Frontend(service, telemetry, workers=8)
+    check_coalescing(frontend)
+    check_distinct_vs_serial(frontend)
+    frontend.shutdown()
+    frontend.join()
+    check_telemetry_consistency()
+    check_framing()
+    check_shutdown()
+    print("OK: all frontend-mirror checks passed")
+
+
+if __name__ == "__main__":
+    main()

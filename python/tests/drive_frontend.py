@@ -1,0 +1,198 @@
+#!/usr/bin/env python3
+"""End-to-end driver for the osdp plan-service socket front-end.
+
+CI's `serve-concurrency` job runs this against the **release binary**
+(`--bin target/release/osdp`): it starts `osdp serve --listen
+127.0.0.1:0 --workers 8 --metrics`, discovers the ephemeral port from
+the first stdout line, and then proves the served-concurrency contract
+through the wire:
+
+1. 8 parallel clients sending the **identical** query observe exactly
+   one planner execution (asserted via the `stats` verb, not by peeking
+   at internals) and receive bit-identical answers;
+2. concurrent **distinct** queries match their serial re-ask bit for bit
+   (and the re-asks are cache hits);
+3. malformed lines come back as structured `bad-request` errors;
+4. telemetry is consistent: histogram counts == queries, and
+   `hits + misses == queries - rejected`;
+5. `shutdown` acks, drains, and the server process exits 0.
+
+The same assertions run against the pure-python mirror
+(`--mirror`, python/mirror/frontend_mirror.py --serve) in containers
+without a Rust toolchain, or against an already-running server
+(`--addr host:port` — skips the process-lifecycle checks).
+
+Stdlib only; exits non-zero on any mismatch.
+"""
+
+import argparse
+import json
+import os
+import socket
+import subprocess
+import sys
+import threading
+
+SETTING = "gpt:3000,64,6,192,4"
+IDENTICAL = f"query setting={SETTING} mem=4 batch=2 threads=1"
+DISTINCT = [
+    f"query setting={SETTING} mem={mem} batch={b} threads=1"
+    for mem, b in [(2, 1), (3, 1), (4, 1), (6, 2), (2.5, 2), (5, 3)]
+]
+
+
+def fail(msg, ctx=""):
+    print("FAIL:", msg)
+    if ctx != "":
+        print("  ctx:", ctx)
+    sys.exit(1)
+
+
+def check(cond, msg, ctx=""):
+    if not cond:
+        fail(msg, ctx)
+
+
+def client(addr, lines, timeout=300.0):
+    """One connection; one JSON response line per request line."""
+    out = []
+    with socket.create_connection(addr, timeout=timeout) as s:
+        f = s.makefile("rwb")
+        for line in lines:
+            f.write(line.encode() + b"\n")
+            f.flush()
+            resp = f.readline()
+            check(resp.endswith(b"\n"),
+                  "response not newline-framed", resp)
+            out.append(json.loads(resp))
+    return out
+
+
+def concurrent(addr, lines):
+    """One thread + connection per line, released together."""
+    barrier = threading.Barrier(len(lines))
+    results = [None] * len(lines)
+
+    def one(i):
+        barrier.wait()
+        results[i] = client(addr, [lines[i]])[0]
+
+    threads = [threading.Thread(target=one, args=(i,))
+               for i in range(len(lines))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=600)
+        check(not t.is_alive(), "client thread hung")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bin", help="osdp binary to start and drive")
+    ap.add_argument("--addr", help="host:port of a running server")
+    ap.add_argument("--mirror", action="store_true",
+                    help="drive python/mirror/frontend_mirror.py")
+    ap.add_argument("--workers", type=int, default=8)
+    args = ap.parse_args()
+
+    proc = None
+    if args.addr:
+        host, port = args.addr.rsplit(":", 1)
+        addr = (host, int(port))
+    else:
+        if args.mirror:
+            mirror = os.path.join(os.path.dirname(__file__), os.pardir,
+                                  "mirror", "frontend_mirror.py")
+            cmd = [sys.executable, mirror, "--serve"]
+        elif args.bin:
+            cmd = [args.bin, "serve", "--listen", "127.0.0.1:0",
+                   "--workers", str(args.workers), "--metrics"]
+        else:
+            ap.error("one of --bin, --addr, --mirror is required")
+        proc = subprocess.Popen(cmd, stdout=subprocess.PIPE, text=True)
+        banner = proc.stdout.readline()
+        try:
+            doc = json.loads(banner)
+        except ValueError:
+            fail("first stdout line is not JSON", banner)
+        check(doc.get("kind") == "listening" and doc.get("ok") is True,
+              "expected the listening banner", doc)
+        host, port = doc["addr"].rsplit(":", 1)
+        addr = (host, int(port))
+        print(f"server listening on {doc['addr']}")
+
+    # ---- phase 1: 8 identical concurrent queries -> 1 planner run
+    results = concurrent(addr, [IDENTICAL] * 8)
+    for r in results:
+        check(r.get("ok") is True, "identical query failed", r)
+        check(r["choice"] == results[0]["choice"]
+              and r["time_s"] == results[0]["time_s"],
+              "concurrent identical answers must be bit-identical",
+              (r, results[0]))
+    stats = client(addr, ["stats"])[0]
+    check(stats.get("planner_runs") == 1,
+          "8 identical concurrent queries must run exactly ONE search",
+          stats)
+    check(stats.get("hits", 0) + stats.get("coalesced", 0) == 7,
+          "everyone but the leader shares the flight", stats)
+    print("phase 1 OK: 8 identical concurrent queries -> 1 planner run")
+
+    # ---- phase 2: distinct concurrent queries vs serial re-asks
+    conc = concurrent(addr, DISTINCT)
+    serial = [client(addr, [line])[0] for line in DISTINCT]
+    for got, want in zip(conc, serial):
+        check(got.get("ok") is True, "distinct query failed", got)
+        check(want.get("source") == "cache",
+              "serial re-ask must be a cache hit", want)
+        check(got["choice"] == want["choice"]
+              and got["time_s"] == want["time_s"],
+              "concurrent distinct != serial re-ask", (got, want))
+    print(f"phase 2 OK: {len(DISTINCT)} distinct concurrent queries "
+          "bit-identical to serial")
+
+    # ---- phase 3: hostile lines are structured errors, not hangups
+    hostile = client(addr, [
+        "frobnicate the planner",
+        "query setting=nope mem=4 batch=1",
+    ])
+    check(hostile[0].get("error") == "bad-request",
+          "junk must be a structured bad-request", hostile[0])
+    check(hostile[1].get("error") in ("unknown-setting", "bad-request"),
+          "bad setting must be structurally rejected", hostile[1])
+    print("phase 3 OK: hostile lines answered structurally")
+
+    # ---- phase 4: telemetry consistency through the stats verb
+    stats = client(addr, ["stats"])[0]
+    tele = stats.get("telemetry")
+    check(isinstance(tele, dict), "stats must carry telemetry", stats)
+    queries = tele["queries"]
+    expected = 8 + 2 * len(DISTINCT) + 1  # identical + conc/serial + bad
+    check(queries == expected, "every dispatched query counted",
+          (queries, expected, tele))
+    lat = tele["latency"]
+    check(lat["batch"]["count"] + lat["sweep"]["count"] == queries,
+          "histogram counts == queries", tele)
+    check(stats["hits"] + stats["misses"]
+          == queries - tele["rejected"],
+          "hits + misses == queries - rejected", stats)
+    check(stats["planner_runs"] == 1 + len(DISTINCT),
+          "one run per distinct cacheable query", stats)
+    print("phase 4 OK: telemetry consistent "
+          f"({queries} queries, {stats['planner_runs']} planner runs)")
+
+    # ---- phase 5: graceful shutdown drains and exits cleanly
+    final = client(addr, [IDENTICAL, "shutdown"])
+    check(final[0].get("ok") is True and final[0]["source"] == "cache",
+          "in-flight work served before the ack", final[0])
+    check(final[1] == {"kind": "shutdown", "ok": True},
+          "shutdown ack", final[1])
+    if proc is not None:
+        rc = proc.wait(timeout=120)
+        check(rc == 0, "server must exit 0 after shutdown", rc)
+    print("phase 5 OK: graceful shutdown")
+    print("OK: served-concurrency contract holds end to end")
+
+
+if __name__ == "__main__":
+    main()

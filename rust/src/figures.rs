@@ -248,7 +248,7 @@ pub fn search_times(mem_gib: f64, q: Quality) -> Table {
                                  search.max_batch).run();
         let secs = t0.elapsed().as_secs_f64();
         match res {
-            Some(r) => t.row(vec![
+            Ok(r) => t.row(vec![
                 entry.family.label().to_string(),
                 entry.setting.clone(),
                 profiler.n_ops().to_string(),
@@ -256,7 +256,7 @@ pub fn search_times(mem_gib: f64, q: Quality) -> Table {
                 r.total_nodes.to_string(),
                 format!("{secs:.2}"),
             ]),
-            None => t.row(vec![
+            Err(_) => t.row(vec![
                 entry.family.label().to_string(),
                 entry.setting.clone(),
                 profiler.n_ops().to_string(),

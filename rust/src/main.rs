@@ -125,13 +125,25 @@ commands:
           [--no-fold]        plan per operator instead of per equivalence
                              class (identical result, exponentially more
                              search nodes on symmetric models)
-  serve   [--cache-dir D] [--cache-cap 256]
-          line-oriented plan service on stdin/stdout: one request per
-          line in ('query setting=48L/1024H mem=8 batch=4', 'sweep ...',
-          'stats', 'quit'), one JSON document per line out. Identical
+  serve   [--cache-dir D] [--cache-cap 256] [--listen ADDR]
+          [--workers N] [--warmup 8] [--idle-timeout-ms 30000]
+          [--queue-cap 64] [--metrics]
+          line-oriented plan service: one request per line in ('query
+          setting=48L/1024H mem=8 batch=4', 'sweep ...', 'stats',
+          'quit', 'shutdown'), one JSON document per line out. Identical
           queries are answered from the plan cache, concurrent identical
           queries coalesce into one search, and cache misses warm-start
           from neighboring entries (provably bit-identical results).
+          Default transport is stdin/stdout; --listen ADDR serves the
+          same grammar over TCP with a bounded worker pool (--workers,
+          0 = one per core), per-connection idle timeouts, and a
+          graceful 'shutdown' verb that drains in-flight plans. The
+          first stdout line is {"addr":...,"kind":"listening","ok":true}
+          so drivers can resolve ':0' ephemeral ports. On a cost-model
+          epoch bump the hottest --warmup entries of the stale disk
+          cache are replanned (warm-started from their old choice
+          vectors) before the listener accepts traffic. --metrics dumps
+          counters + latency histograms as JSON on exit.
   query   --setting S (--batch B | [--batch-cap 64])
           [--mem 8] [--devices 8] [--cluster C] [--g 0,4] [--ckpt]
           [--fine] [--no-scopes] [--engine E] [--threads N] [--no-warm]
@@ -305,9 +317,11 @@ fn plan(args: &Args) {
         .with_engine(engine)
         .run()
     {
-        None => println!("NO FEASIBLE PLAN (even all-ZDP at b=1 exceeds the \
-                          limit)"),
-        Some(res) => {
+        Err(inf) => println!(
+            "NO FEASIBLE PLAN (even all-ZDP at b=1 exceeds the limit){}",
+            if inf.complete() { "" } else { " [node budget expired]" }
+        ),
+        Ok(res) => {
             let c = &res.candidates[res.best];
             println!(
                 "sweep on {} threads: {}, {:.2}s",
@@ -375,17 +389,80 @@ fn plan_query_from_args(args: &Args) -> PlanQuery {
 }
 
 fn serve(args: &Args) {
-    let service = PlanService::new(cache_config(args));
-    eprintln!("osdp serve: ready (one request per line; 'query \
-               setting=48L/1024H mem=8 batch=4', 'sweep ...', 'stats', \
-               'quit')");
-    let stdin = std::io::stdin();
-    let mut stdout = std::io::stdout();
-    if let Err(e) = server::serve_loop(&service, stdin.lock(), &mut stdout) {
-        eprintln!("serve: io error: {e}");
-        std::process::exit(1);
+    use osdp::service::{Frontend, FrontendConfig, Telemetry,
+                        render_metrics};
+    use std::io::Write as _;
+    use std::sync::Arc;
+
+    let (service, stale) = PlanService::open(cache_config(args));
+    let service = Arc::new(service);
+    let telemetry = Arc::new(Telemetry::new());
+
+    // Epoch-bump warm-up, strictly before any traffic: when the disk
+    // cache was rejected for a cost-model epoch change, replay its
+    // hottest K queries (seeded with their old choice vectors) so the
+    // first real callers hit a warm cache, not a cold one.
+    let warmup_k = args.usize_or("warmup", 8);
+    if !stale.is_empty() && warmup_k > 0 {
+        let report = service.warm_up(&stale, warmup_k, Some(&telemetry));
+        eprintln!(
+            "osdp serve: epoch warm-up replanned {}/{} stale entries\
+             {}",
+            report.replanned,
+            report.candidates,
+            if report.failed > 0 {
+                format!(" ({} failed)", report.failed)
+            } else {
+                String::new()
+            }
+        );
+    }
+
+    if let Some(addr) = args.get("listen") {
+        let cfg = FrontendConfig {
+            addr: addr.to_string(),
+            workers: args.usize_or("workers", 0),
+            idle_timeout: std::time::Duration::from_millis(
+                args.usize_or("idle-timeout-ms", 30_000) as u64,
+            ),
+            queue_cap: args.usize_or("queue-cap", 64),
+        };
+        let frontend = match Frontend::start(Arc::clone(&service),
+                                             Arc::clone(&telemetry), cfg)
+        {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("serve: cannot bind {addr}: {e}");
+                std::process::exit(1);
+            }
+        };
+        // first stdout line announces the bound address so drivers can
+        // resolve a ':0' ephemeral port without racing the log output
+        println!(
+            "{{\"addr\":\"{}\",\"kind\":\"listening\",\"ok\":true}}",
+            frontend.local_addr()
+        );
+        let _ = std::io::stdout().flush();
+        // blocks until a client sends 'shutdown' (graceful drain)
+        frontend.join();
+    } else {
+        eprintln!("osdp serve: ready (one request per line; 'query \
+                   setting=48L/1024H mem=8 batch=4', 'sweep ...', \
+                   'stats', 'quit', 'shutdown')");
+        let stdin = std::io::stdin();
+        let mut stdout = std::io::stdout();
+        if let Err(e) = server::serve_loop_with(&service, Some(&telemetry),
+                                                stdin.lock(), &mut stdout)
+        {
+            eprintln!("serve: io error: {e}");
+            std::process::exit(1);
+        }
     }
     eprintln!("osdp serve: done — {}", service.stats().describe());
+    if args.flag("metrics") {
+        eprintln!("{}", render_metrics(&service.stats(),
+                                       service.cache_len(), &telemetry));
+    }
 }
 
 fn service_query(args: &Args) {

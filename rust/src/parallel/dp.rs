@@ -83,8 +83,8 @@ fn osdp_estimate(name: &str, model: &ModelDesc, cluster: &Cluster,
     let profiler = Profiler::new(model, cluster, &cfg);
     match Scheduler::new(&profiler, cluster.mem_limit, search.max_batch).run()
     {
-        None => Estimate::infeasible(name, "OOM"),
-        Some(res) => {
+        Err(_) => Estimate::infeasible(name, "OOM"),
+        Ok(res) => {
             let c = &res.candidates[res.best];
             let (dp, zdp, mixed) = c.plan.mode_counts();
             Estimate {

@@ -59,7 +59,8 @@ pub use greedy::{search as greedy_search,
 pub use parallel::{ParallelConfig, search as parallel_search,
                    search_seeded as parallel_search_seeded,
                    search_with_stats as parallel_search_with_stats};
-pub use scheduler::{Candidate, Scheduler, SchedulerResult, SweepStats};
+pub use scheduler::{Candidate, Scheduler, SchedulerResult, SweepInfeasible,
+                    SweepStats};
 
 use crate::cost::{Decision, PlanCost, Profiler};
 

@@ -117,6 +117,28 @@ impl SchedulerResult {
     }
 }
 
+/// Algorithm 1's "nothing fits": even `b = 1` has no feasible plan
+/// under the memory limit. The structured verdict carries the failing
+/// search's own diagnostics, so callers read the completeness
+/// certificate directly instead of re-running a `b = 1` probe to
+/// establish it (the plan service caches the wall only when
+/// [`SweepInfeasible::complete`] holds — a budget expiry is a verdict,
+/// not a proof).
+#[derive(Debug, Clone, Default)]
+pub struct SweepInfeasible {
+    /// The `b = 1` search's diagnostics (zeroed and not-complete in the
+    /// degenerate `max_batch = 0` sweep, which searches nothing).
+    pub stats: DfsStats,
+}
+
+impl SweepInfeasible {
+    /// True iff the failing search ran to completion: infeasibility is
+    /// proven, not an artifact of the node budget.
+    pub fn complete(&self) -> bool {
+        self.stats.complete
+    }
+}
+
 /// Batch-size sweep driver.
 pub struct Scheduler<'a> {
     pub profiler: &'a Profiler,
@@ -179,8 +201,10 @@ impl<'a> Scheduler<'a> {
         self
     }
 
-    /// Run Algorithm 1. Returns `None` when no batch size fits at all.
-    pub fn run(&self) -> Option<SchedulerResult> {
+    /// Run Algorithm 1. `Err` when no batch size fits at all, carrying
+    /// the `b = 1` search's diagnostics (its completeness certificate
+    /// in particular).
+    pub fn run(&self) -> Result<SchedulerResult, SweepInfeasible> {
         let start = std::time::Instant::now();
         let n_dev = self.profiler.cluster.n_devices;
 
@@ -201,9 +225,9 @@ impl<'a> Scheduler<'a> {
         let wall = AtomicUsize::new(usize::MAX);
         type Row = (usize, Vec<usize>, PlanCost, DfsStats);
         let found: Mutex<Vec<Row>> = Mutex::new(Vec::new());
-        // per failed batch: did that search run to completion (proven
-        // infeasible) or merely exhaust its node budget?
-        let failed: Mutex<Vec<(usize, bool)>> = Mutex::new(Vec::new());
+        // per failed batch: that search's full diagnostics (its
+        // `complete` flag is the proven-vs-budget-expired distinction)
+        let failed: Mutex<Vec<(usize, DfsStats)>> = Mutex::new(Vec::new());
 
         // Known bounded overshoot: a worker already searching some b when
         // another worker lowers the wall below it runs that search to
@@ -234,9 +258,7 @@ impl<'a> Scheduler<'a> {
                             self.warm.as_deref(),
                         ) {
                             (None, stats) => {
-                                failed.lock()
-                                      .unwrap()
-                                      .push((b, stats.complete));
+                                failed.lock().unwrap().push((b, stats));
                                 wall.fetch_min(b, Ordering::Relaxed);
                                 break;
                             }
@@ -267,8 +289,17 @@ impl<'a> Scheduler<'a> {
             stats.absorb(&st);
             candidates.push(Candidate { plan, throughput, stats: st });
         }
+        let failed = failed.into_inner().unwrap();
         if candidates.is_empty() {
-            return None;
+            // the b = 1 search's diagnostics *are* the verdict; the
+            // degenerate max_batch = 0 sweep searched nothing and gets
+            // the default (not-complete) stats
+            let stats = failed
+                .iter()
+                .find(|(b, _)| *b == 1)
+                .map(|(_, st)| st.clone())
+                .unwrap_or_default();
+            return Err(SweepInfeasible { stats });
         }
         // The first gap is b = n+1; when it is below the cap some worker
         // searched exactly that batch and recorded its completeness (a
@@ -277,14 +308,12 @@ impl<'a> Scheduler<'a> {
         let n = candidates.len();
         let wall_complete = n >= self.max_batch
             || failed
-                .into_inner()
-                .unwrap()
                 .iter()
                 .find(|(b, _)| *b == n + 1)
-                .map(|&(_, complete)| complete)
+                .map(|(_, st)| st.complete)
                 .unwrap_or(false);
         let best = pick_best(&candidates);
-        Some(SchedulerResult {
+        Ok(SchedulerResult {
             best,
             total_nodes: stats.nodes,
             elapsed: start.elapsed(),
@@ -347,9 +376,17 @@ mod tests {
     }
 
     #[test]
-    fn none_when_nothing_fits() {
+    fn structured_infeasible_when_nothing_fits() {
         let p = profiler(8);
-        assert!(Scheduler::new(&p, 1.0, 16).run().is_none());
+        let err = Scheduler::new(&p, 1.0, 16).run().unwrap_err();
+        // this tiny instance dies on the memory bound long before the
+        // node budget: the verdict must be a *certificate*
+        assert!(err.complete(), "b=1 failure must be proven: {err:?}");
+        assert!(err.stats.nodes > 0, "the b=1 search really ran");
+        // the degenerate cap-zero sweep searches nothing and says so
+        let err = Scheduler::new(&p, 1.0, 0).run().unwrap_err();
+        assert!(!err.complete());
+        assert_eq!(err.stats.nodes, 0);
     }
 
     #[test]
@@ -369,7 +406,7 @@ mod tests {
         let base = p.evaluate(&p.index_of(|d| d.is_pure_zdp()), 1).peak_mem;
         let mut last = 0.0;
         for mult in [1.5, 2.5, 4.0, 8.0] {
-            if let Some(res) = Scheduler::new(&p, base * mult, 64).run() {
+            if let Ok(res) = Scheduler::new(&p, base * mult, 64).run() {
                 let tp = res.best_throughput();
                 assert!(tp >= last - 1e-9,
                         "throughput regressed with more memory");

@@ -80,6 +80,24 @@ impl CachedValue {
 struct Slot {
     value: CachedValue,
     last_used: u64,
+    /// Times this entry was served (popularity, not recency — the
+    /// epoch-bump warm-up replans the *hottest* entries first).
+    hits: u64,
+    /// The canonical protocol line that produced this entry
+    /// ([`super::server::request_line`]); lets a future epoch replay
+    /// the query even though the old choice vector is stale.
+    request: Option<String>,
+}
+
+/// A warm-up candidate harvested from an epoch-rejected disk file: the
+/// request to replay, the old epoch's choice vector (a warm-start seed
+/// — provably answer-preserving even across cost-model changes, since
+/// seeds only prune), and how hot the entry was.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StaleEntry {
+    pub request: String,
+    pub seed: Vec<usize>,
+    pub hits: u64,
 }
 
 /// LRU plan cache. All counters live in the owning service's
@@ -92,13 +110,17 @@ pub struct PlanCache {
 
 impl PlanCache {
     /// Open a cache: empty, or primed from `disk_dir`'s
-    /// `plan_cache.json` when one exists. Returns the cache and the
-    /// number of entries rejected as stale (wrong schema/epoch or
-    /// unparseable — always the whole file or nothing).
-    pub fn open(cfg: CacheConfig) -> (PlanCache, u64) {
+    /// `plan_cache.json` when one exists. Returns the cache, the number
+    /// of entries rejected as stale (wrong schema/epoch or unparseable —
+    /// always the whole file or nothing), and the warm-up candidates
+    /// harvested from an epoch-rejected file: the old entries cannot be
+    /// *served*, but the ones that recorded their request line can be
+    /// *re-planned* before the listener opens ([`super::PlanService::
+    /// warm_up`]).
+    pub fn open(cfg: CacheConfig) -> (PlanCache, u64, Vec<StaleEntry>) {
         let mut cache = PlanCache { cfg, map: HashMap::new(), tick: 0 };
-        let stale = cache.load_disk();
-        (cache, stale)
+        let (stale, harvest) = cache.load_disk();
+        (cache, stale, harvest)
     }
 
     pub fn len(&self) -> usize {
@@ -109,13 +131,14 @@ impl PlanCache {
         self.map.is_empty()
     }
 
-    /// Look up a key, refreshing its recency. The caller counts the
-    /// hit/miss.
+    /// Look up a key, refreshing its recency and popularity. The caller
+    /// counts the hit/miss.
     pub fn get(&mut self, key: &QueryKey) -> Option<&CachedValue> {
         self.tick += 1;
         let tick = self.tick;
         self.map.get_mut(key).map(|slot| {
             slot.last_used = tick;
+            slot.hits += 1;
             &slot.value
         })
     }
@@ -128,8 +151,25 @@ impl PlanCache {
     /// Insert (or replace) an entry; returns how many entries the LRU
     /// cap evicted to make room.
     pub fn insert(&mut self, key: QueryKey, value: CachedValue) -> u64 {
+        self.insert_requested(key, value, None)
+    }
+
+    /// [`PlanCache::insert`] carrying the canonical request line that
+    /// produced the entry. Replacing an existing entry keeps its
+    /// accumulated hit count (popularity describes the *key*, not one
+    /// epoch's value) and keeps its request line if the new insert has
+    /// none (sweep-derived per-batch entries inherit theirs).
+    pub fn insert_requested(&mut self, key: QueryKey, value: CachedValue,
+                            request: Option<String>) -> u64 {
         self.tick += 1;
-        self.map.insert(key, Slot { value, last_used: self.tick });
+        let (hits, request) = match self.map.remove(&key) {
+            Some(old) => (old.hits, request.or(old.request)),
+            None => (0, request),
+        };
+        self.map.insert(
+            key,
+            Slot { value, last_used: self.tick, hits, request },
+        );
         let mut evicted = 0;
         while self.map.len() > self.cfg.capacity.max(1) {
             // O(n) scan — the cap is a few hundred entries and eviction
@@ -198,7 +238,16 @@ impl PlanCache {
         let path = self.disk_path()?;
         let mut entries = BTreeMap::new();
         for (k, slot) in &self.map {
-            entries.insert(k.id(), value_to_json(&slot.value));
+            let mut v = value_to_json(&slot.value);
+            if let Json::Obj(o) = &mut v {
+                if slot.hits > 0 {
+                    o.insert("hits".into(), Json::Num(slot.hits as f64));
+                }
+                if let Some(req) = &slot.request {
+                    o.insert("req".into(), Json::Str(req.clone()));
+                }
+            }
+            entries.insert(k.id(), v);
         }
         let mut doc = BTreeMap::new();
         doc.insert("schema".to_string(),
@@ -219,31 +268,72 @@ impl PlanCache {
     }
 
     /// Load the disk file into the (empty) cache. Returns the stale
-    /// count: entries discarded because the file's schema or epoch does
-    /// not match, or the file/entries do not parse.
-    fn load_disk(&mut self) -> u64 {
-        let Some(path) = self.disk_path() else { return 0 };
-        let Ok(text) = std::fs::read_to_string(&path) else { return 0 };
-        let Ok(doc) = Json::parse(&text) else { return 1 };
+    /// count — entries discarded because the file's schema or epoch does
+    /// not match, or the file/entries do not parse — plus the warm-up
+    /// candidates harvested from an epoch-rejected file.
+    fn load_disk(&mut self) -> (u64, Vec<StaleEntry>) {
+        let Some(path) = self.disk_path() else { return (0, vec![]) };
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            return (0, vec![]);
+        };
+        let Ok(doc) = Json::parse(&text) else { return (1, vec![]) };
         let schema = doc.get("schema").as_usize();
         let epoch = doc.get("epoch").as_usize();
-        let Some(entries) = doc.get("entries").as_obj() else { return 1 };
+        let Some(entries) = doc.get("entries").as_obj() else {
+            return (1, vec![]);
+        };
         if schema != Some(CACHE_SCHEMA_VERSION as usize)
             || epoch != Some(COST_MODEL_EPOCH as usize)
         {
-            return entries.len() as u64;
+            let harvest = if schema == Some(CACHE_SCHEMA_VERSION as usize)
+            {
+                // same schema, different cost-model epoch: the values
+                // are stale but the *queries* are not — harvest every
+                // entry that knows how to replay itself
+                entries.values().filter_map(stale_entry_from_json)
+                       .collect()
+            } else {
+                vec![] // unknown schema: don't guess at field meanings
+            };
+            return (entries.len() as u64, harvest);
         }
         let mut stale = 0;
         for (id, v) in entries {
             match (QueryKey::from_id(id), value_from_json(v)) {
                 (Some(key), Some(value)) => {
-                    self.insert(key, value);
+                    let req =
+                        v.get("req").as_str().map(|s| s.to_string());
+                    self.insert_requested(key, value, req);
+                    // restore persisted popularity (insert zeroes it)
+                    if let Some(slot) = self.map.get_mut(&key) {
+                        slot.hits =
+                            v.get("hits").as_usize().unwrap_or(0) as u64;
+                    }
                 }
                 _ => stale += 1,
             }
         }
-        stale
+        (stale, vec![])
     }
+}
+
+/// Warm-up candidate from one epoch-rejected disk entry: needs a
+/// request line and a choice vector to seed with (the sweep's is its
+/// best batch; cached infeasibility has nothing to replay — the new
+/// epoch may well make it feasible, but there is no seed, and warm-up
+/// replays are meant to be cheap).
+fn stale_entry_from_json(v: &Json) -> Option<StaleEntry> {
+    let request = v.get("req").as_str()?.to_string();
+    let hits = v.get("hits").as_usize().unwrap_or(0) as u64;
+    let seed = match v.get("kind").as_str()? {
+        "plan" => choice_from_json(v.get("choice"))?,
+        "sweep" => {
+            let best = v.get("best").as_usize()?;
+            choice_from_json(v.get("choices").idx(best))?
+        }
+        _ => return None,
+    };
+    Some(StaleEntry { request, seed, hits })
 }
 
 /// Write a serialized cache image ([`PlanCache::serialize`]) to disk,
@@ -331,9 +421,10 @@ mod tests {
 
     #[test]
     fn lru_evicts_least_recently_used() {
-        let (mut cache, stale) =
+        let (mut cache, stale, harvest) =
             PlanCache::open(CacheConfig { capacity: 2, disk_dir: None });
         assert_eq!(stale, 0);
+        assert!(harvest.is_empty());
         assert!(cache.is_empty());
         assert_eq!(cache.insert(key(1, 8e9), plan(vec![0])), 0);
         assert_eq!(cache.insert(key(2, 8e9), plan(vec![1])), 0);
@@ -348,7 +439,7 @@ mod tests {
 
     #[test]
     fn neighbor_prefers_closest_batch_then_limit() {
-        let (mut cache, _) = PlanCache::open(CacheConfig::default());
+        let (mut cache, _, _) = PlanCache::open(CacheConfig::default());
         cache.insert(key(1, 8e9), plan(vec![10]));
         cache.insert(key(6, 8e9), plan(vec![60]));
         cache.insert(key(4, 9e9), plan(vec![49]));
@@ -384,25 +475,39 @@ mod tests {
         ));
         let _ = std::fs::remove_dir_all(&dir);
         let cfg = CacheConfig { capacity: 16, disk_dir: Some(dir.clone()) };
-        let (mut cache, stale) = PlanCache::open(cfg.clone());
+        let (mut cache, stale, _) = PlanCache::open(cfg.clone());
         assert_eq!(stale, 0);
-        cache.insert(key(4, 8e9), plan(vec![0, 2, 1]));
-        cache.insert(
+        cache.insert_requested(key(4, 8e9), plan(vec![0, 2, 1]),
+                               Some("query setting=t mem=8 batch=4 g=0"
+                                        .into()));
+        cache.insert_requested(
             key(1, 8e9).with_shape(QueryShape::Sweep { max_batch: 8 }),
             CachedValue::Sweep { choices: vec![vec![0], vec![1]], best: 1 },
+            Some("sweep setting=t mem=8 batch-cap=8 g=0".into()),
         );
         cache.insert(key(9, 8e9), CachedValue::Infeasible);
+        // popularity: hit the b=4 plan twice so it outranks the sweep
+        assert!(cache.get(&key(4, 8e9)).is_some());
+        assert!(cache.get(&key(4, 8e9)).is_some());
         cache.persist().unwrap();
 
-        let (mut reloaded, stale) = PlanCache::open(cfg.clone());
+        let (mut reloaded, stale, harvest) = PlanCache::open(cfg.clone());
         assert_eq!(stale, 0);
+        assert!(harvest.is_empty(), "same epoch: nothing to replay");
         assert_eq!(reloaded.len(), 3);
         assert_eq!(reloaded.get(&key(4, 8e9)),
                    Some(&plan(vec![0, 2, 1])));
         assert_eq!(reloaded.get(&key(9, 8e9)),
                    Some(&CachedValue::Infeasible));
+        // request lines and popularity survive the round trip (the two
+        // persisted hits plus the get() just above)
+        let slot = reloaded.map.get(&key(4, 8e9)).unwrap();
+        assert_eq!(slot.hits, 3);
+        assert_eq!(slot.request.as_deref(),
+                   Some("query setting=t mem=8 batch=4 g=0"));
 
-        // tamper with the epoch: the whole file must be rejected
+        // tamper with the epoch: the whole file must be rejected, but
+        // entries carrying their request line become warm-up fodder
         let path = dir.join("plan_cache.json");
         let text = std::fs::read_to_string(&path).unwrap();
         let doc = Json::parse(&text).unwrap();
@@ -410,13 +515,33 @@ mod tests {
         obj.insert("epoch".into(),
                    Json::Num((COST_MODEL_EPOCH + 1) as f64));
         std::fs::write(&path, json::to_string(&Json::Obj(obj))).unwrap();
-        let (stale_cache, stale) = PlanCache::open(cfg.clone());
+        let (stale_cache, stale, mut harvest) =
+            PlanCache::open(cfg.clone());
         assert!(stale_cache.is_empty(), "stale epoch must load nothing");
         assert_eq!(stale, 3);
+        // the infeasible entry has no request/seed; the plan and sweep do
+        harvest.sort_by(|a, b| b.hits.cmp(&a.hits));
+        assert_eq!(harvest.len(), 2);
+        assert_eq!(harvest[0].request,
+                   "query setting=t mem=8 batch=4 g=0");
+        assert_eq!(harvest[0].seed, vec![0, 2, 1]);
+        assert_eq!(harvest[0].hits, 2);
+        assert_eq!(harvest[1].request,
+                   "sweep setting=t mem=8 batch-cap=8 g=0");
+        assert_eq!(harvest[1].seed, vec![1], "sweep seeds its best batch");
+
+        // an unknown *schema* harvests nothing (field meanings unknown)
+        let mut obj2 = obj.clone();
+        obj2.insert("schema".into(),
+                    Json::Num((CACHE_SCHEMA_VERSION + 1) as f64));
+        std::fs::write(&path, json::to_string(&Json::Obj(obj2))).unwrap();
+        let (_, stale, harvest) = PlanCache::open(cfg.clone());
+        assert_eq!(stale, 3);
+        assert!(harvest.is_empty());
 
         // and a garbage file counts as one stale rejection
         std::fs::write(&path, "not json").unwrap();
-        let (garbage, stale) = PlanCache::open(cfg);
+        let (garbage, stale, _) = PlanCache::open(cfg);
         assert!(garbage.is_empty());
         assert_eq!(stale, 1);
         let _ = std::fs::remove_dir_all(&dir);

@@ -1,0 +1,496 @@
+//! The concurrent socket front-end: a TCP listener speaking the same
+//! newline-delimited protocol as `osdp serve` on stdin, dispatching
+//! into one shared [`PlanService`] from a bounded worker pool (the
+//! router-style front-end: acceptor thread → bounded queue → N
+//! workers, each owning one connection at a time).
+//!
+//! Everything downstream is already thread-safe and deterministic —
+//! the cache/coalescer core guarantees that N concurrent identical
+//! queries run **one** planner search and that every caller gets the
+//! bit-identical optimum — so the front-end's whole job is honest
+//! plumbing:
+//!
+//! * **Bounded queue.** Accepted connections park in a fixed-capacity
+//!   channel (a hand-rolled `Mutex<VecDeque>` + condvar pair — the
+//!   crossbeam shape, vendored because the build is offline). When all
+//!   workers are busy and the queue is full, the acceptor blocks, and
+//!   the kernel's listen backlog is the overflow — backpressure, not
+//!   unbounded thread spawn.
+//! * **Per-connection framing.** Requests are single lines, capped at
+//!   [`MAX_LINE`] bytes; an over-long or unparseable line answers a
+//!   structured `bad-request` JSON error. Reads poll with a short
+//!   timeout so an idle connection is dropped after
+//!   `FrontendConfig::idle_timeout` and a shutdown is noticed promptly.
+//! * **Graceful shutdown.** The `shutdown` verb (or
+//!   [`Frontend::shutdown`]) stops the acceptor, lets every in-flight
+//!   request finish and flush its response, drains already-accepted
+//!   connections, then joins. No plan in progress is abandoned.
+//!
+//! Concurrency properties are pinned end-to-end over real sockets in
+//! `rust/tests/service_frontend.rs` and re-driven against the release
+//! binary in CI's concurrency job.
+
+use super::server::{LineOutcome, handle_line_full};
+use super::telemetry::{Counter, Telemetry};
+use super::PlanService;
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+/// Request lines larger than this are rejected (and the connection
+/// closed) — nothing in the protocol grammar comes close.
+pub const MAX_LINE: usize = 16 * 1024;
+
+/// How often a blocked read wakes up to check the idle clock and the
+/// shutdown flag.
+const POLL_TICK: Duration = Duration::from_millis(50);
+
+// ---------------------------------------------------------------------
+// Bounded MPMC channel (vendored crossbeam-style stub)
+// ---------------------------------------------------------------------
+
+struct ChannelState<T> {
+    queue: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded multi-producer multi-consumer channel: `send` blocks when
+/// full, `recv` blocks when empty, `close` wakes everyone. After
+/// `close`, `recv` still drains queued items before returning `None` —
+/// that drain is what makes front-end shutdown graceful for
+/// connections accepted but not yet picked up.
+pub struct Channel<T> {
+    state: Mutex<ChannelState<T>>,
+    cap: usize,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl<T> Channel<T> {
+    pub fn bounded(cap: usize) -> Channel<T> {
+        Channel {
+            state: Mutex::new(ChannelState {
+                queue: VecDeque::new(),
+                closed: false,
+            }),
+            cap: cap.max(1),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    /// Blocks while the channel is full; `Err(item)` if it was closed.
+    pub fn send(&self, item: T) -> Result<(), T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(item);
+            }
+            if st.queue.len() < self.cap {
+                st.queue.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Blocks until an item arrives; `None` once closed **and** empty.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.queue.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------
+// Front-end proper
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct FrontendConfig {
+    /// Bind address (`127.0.0.1:0` picks an ephemeral port; read it
+    /// back from [`Frontend::local_addr`]).
+    pub addr: String,
+    /// Worker threads; `0` means the planner's hardware default.
+    pub workers: usize,
+    /// Idle connections are dropped after this long without a complete
+    /// request line.
+    pub idle_timeout: Duration,
+    /// Accepted-connection queue bound (backpressure depth).
+    pub queue_cap: usize,
+}
+
+impl Default for FrontendConfig {
+    fn default() -> Self {
+        FrontendConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 0,
+            idle_timeout: Duration::from_secs(30),
+            queue_cap: 64,
+        }
+    }
+}
+
+/// A running front-end: acceptor + workers, stoppable and joinable.
+pub struct Frontend {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Frontend {
+    /// Bind, spawn the pool, and start accepting. The service and
+    /// telemetry are shared — a caller keeps its own `Arc` clones to
+    /// inspect stats while the front-end runs.
+    pub fn start(
+        service: Arc<PlanService>,
+        telemetry: Arc<Telemetry>,
+        cfg: FrontendConfig,
+    ) -> std::io::Result<Frontend> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let workers = match cfg.workers {
+            0 => crate::planner::parallel::default_threads(),
+            w => w,
+        };
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Channel<TcpStream>> =
+            Arc::new(Channel::bounded(cfg.queue_cap));
+
+        let acceptor = {
+            let conns = Arc::clone(&conns);
+            let shutdown = Arc::clone(&shutdown);
+            let telemetry = Arc::clone(&telemetry);
+            thread::spawn(move || {
+                for stream in listener.incoming() {
+                    if shutdown.load(Ordering::SeqCst) {
+                        break; // the wake-up connection itself is dropped
+                    }
+                    let Ok(stream) = stream else { continue };
+                    telemetry.bump(Counter::Connections);
+                    if conns.send(stream).is_err() {
+                        break;
+                    }
+                }
+                // closing here (not in shutdown()) keeps the drain
+                // ordering: everything accepted before the shutdown was
+                // observed is already queued and will be served
+                conns.close();
+            })
+        };
+
+        let workers = (0..workers)
+            .map(|_| {
+                let conns = Arc::clone(&conns);
+                let service = Arc::clone(&service);
+                let telemetry = Arc::clone(&telemetry);
+                let shutdown = Arc::clone(&shutdown);
+                let idle = cfg.idle_timeout;
+                thread::spawn(move || {
+                    while let Some(stream) = conns.recv() {
+                        serve_connection(&service, &telemetry, &shutdown,
+                                         addr, stream, idle);
+                    }
+                })
+            })
+            .collect();
+
+        Ok(Frontend { addr, shutdown, acceptor: Some(acceptor), workers })
+    }
+
+    /// The bound address (resolves `:0` to the real ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Request a graceful stop: no new connections, in-flight requests
+    /// finish and flush. Idempotent; `join` to wait for the drain.
+    pub fn shutdown(&self) {
+        if self.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // the acceptor may be parked in accept(2); poke it awake
+        let _ = TcpStream::connect(self.addr);
+    }
+
+    /// Wait for the acceptor and every worker to finish (all accepted
+    /// connections served or dropped). Call [`Frontend::shutdown`]
+    /// first, or issue the protocol's `shutdown` verb.
+    pub fn join(mut self) {
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Why a connection's read loop stopped waiting for a line.
+enum ReadOutcome {
+    Line(String),
+    Eof,
+    IdleTimeout,
+    TooLong,
+    Shutdown,
+    Error,
+}
+
+/// Serve one connection to completion: lines in, JSON lines out.
+fn serve_connection(
+    service: &PlanService,
+    telemetry: &Telemetry,
+    shutdown: &AtomicBool,
+    addr: SocketAddr,
+    stream: TcpStream,
+    idle_timeout: Duration,
+) {
+    // short poll so the idle clock and shutdown flag are checked even
+    // while blocked on a silent peer
+    if stream.set_read_timeout(Some(POLL_TICK)).is_err() {
+        return;
+    }
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        match read_request_line(&mut reader, shutdown, idle_timeout) {
+            ReadOutcome::Eof | ReadOutcome::Error => return,
+            ReadOutcome::Shutdown => return,
+            ReadOutcome::IdleTimeout => {
+                telemetry.bump(Counter::ConnTimeouts);
+                let _ = writeln!(
+                    writer,
+                    "{{\"detail\":\"idle connection closed\",\
+                     \"error\":\"timeout\",\"ok\":false}}"
+                );
+                return;
+            }
+            ReadOutcome::TooLong => {
+                telemetry.bump(Counter::Requests);
+                telemetry.bump(Counter::BadRequests);
+                let _ = writeln!(
+                    writer,
+                    "{{\"detail\":\"request line exceeds {MAX_LINE} \
+                     bytes\",\"error\":\"bad-request\",\"ok\":false}}"
+                );
+                // framing is lost; drop the connection — but drain what
+                // the peer already sent first, so close() is a clean FIN
+                // and not an RST that could destroy the error response
+                // in flight (bounded: 1 MiB or one poll tick of silence)
+                let mut sink = [0u8; 4096];
+                let mut drained = 0usize;
+                while drained < (1 << 20) {
+                    match reader.get_mut().read(&mut sink) {
+                        Ok(0) | Err(_) => break,
+                        Ok(n) => drained += n,
+                    }
+                }
+                return;
+            }
+            ReadOutcome::Line(line) => {
+                let line = line.trim();
+                if line.is_empty() || line.starts_with('#') {
+                    continue;
+                }
+                telemetry.bump(Counter::Requests);
+                let (response, outcome) =
+                    handle_line_full(service, Some(telemetry), line);
+                if writeln!(writer, "{response}").is_err()
+                    || writer.flush().is_err()
+                {
+                    return;
+                }
+                match outcome {
+                    LineOutcome::Continue => {}
+                    LineOutcome::Quit => return,
+                    LineOutcome::Shutdown => {
+                        // flag first, then wake the acceptor exactly
+                        // like Frontend::shutdown — this worker then
+                        // drains the queue like any other
+                        if !shutdown.swap(true, Ordering::SeqCst) {
+                            let _ = TcpStream::connect(addr);
+                        }
+                        return;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Assemble one `\n`-terminated line from a polling reader, charging
+/// wait time against the idle budget and watching the shutdown flag.
+/// Time spent *receiving* a partial line still counts as idle — a
+/// trickling client cannot hold a worker forever.
+fn read_request_line<R: Read>(
+    reader: &mut BufReader<R>,
+    shutdown: &AtomicBool,
+    idle_timeout: Duration,
+) -> ReadOutcome {
+    let mut line: Vec<u8> = Vec::new();
+    let started = Instant::now();
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return ReadOutcome::Shutdown;
+        }
+        match reader.fill_buf() {
+            Ok([]) => return ReadOutcome::Eof,
+            Ok(buf) => {
+                let (chunk, newline) = match buf.iter().position(|&b| b == b'\n') {
+                    Some(i) => (&buf[..i], true),
+                    None => (buf, false),
+                };
+                if line.len() + chunk.len() > MAX_LINE {
+                    let used = chunk.len() + usize::from(newline);
+                    reader.consume(used);
+                    return ReadOutcome::TooLong;
+                }
+                line.extend_from_slice(chunk);
+                let used = chunk.len() + usize::from(newline);
+                reader.consume(used);
+                if newline {
+                    return match String::from_utf8(line) {
+                        Ok(s) => ReadOutcome::Line(s),
+                        Err(_) => ReadOutcome::TooLong,
+                    };
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if started.elapsed() >= idle_timeout {
+                    return ReadOutcome::IdleTimeout;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return ReadOutcome::Error,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_is_fifo_and_bounded() {
+        let ch: Channel<u32> = Channel::bounded(2);
+        ch.send(1).unwrap();
+        ch.send(2).unwrap();
+        assert_eq!(ch.len(), 2);
+        assert_eq!(ch.recv(), Some(1));
+        assert_eq!(ch.recv(), Some(2));
+        assert!(ch.is_empty());
+    }
+
+    #[test]
+    fn channel_send_blocks_at_capacity_until_recv() {
+        let ch: Arc<Channel<u32>> = Arc::new(Channel::bounded(1));
+        ch.send(1).unwrap();
+        let ch2 = Arc::clone(&ch);
+        let t = thread::spawn(move || ch2.send(2).is_ok());
+        thread::sleep(Duration::from_millis(30));
+        assert_eq!(ch.len(), 1, "second send must be parked");
+        assert_eq!(ch.recv(), Some(1));
+        assert!(t.join().unwrap(), "parked send completes after recv");
+        assert_eq!(ch.recv(), Some(2));
+    }
+
+    #[test]
+    fn channel_close_drains_then_ends() {
+        let ch: Channel<u32> = Channel::bounded(4);
+        ch.send(7).unwrap();
+        ch.close();
+        assert_eq!(ch.send(8), Err(8), "send after close refuses");
+        assert_eq!(ch.recv(), Some(7), "queued items drain after close");
+        assert_eq!(ch.recv(), None);
+    }
+
+    #[test]
+    fn channel_close_wakes_blocked_receivers() {
+        let ch: Arc<Channel<u32>> = Arc::new(Channel::bounded(1));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let ch = Arc::clone(&ch);
+                thread::spawn(move || ch.recv())
+            })
+            .collect();
+        thread::sleep(Duration::from_millis(30));
+        ch.close();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), None);
+        }
+    }
+
+    #[test]
+    fn read_line_assembles_across_small_buffers() {
+        let shutdown = AtomicBool::new(false);
+        let data: &[u8] = b"query setting=x batch=1\nstats\n";
+        let mut r = BufReader::with_capacity(4, data);
+        let ReadOutcome::Line(l) =
+            read_request_line(&mut r, &shutdown, Duration::from_secs(1))
+        else {
+            panic!("expected a line");
+        };
+        assert_eq!(l, "query setting=x batch=1");
+        let ReadOutcome::Line(l) =
+            read_request_line(&mut r, &shutdown, Duration::from_secs(1))
+        else {
+            panic!("expected a second line");
+        };
+        assert_eq!(l, "stats");
+        assert!(matches!(
+            read_request_line(&mut r, &shutdown, Duration::from_secs(1)),
+            ReadOutcome::Eof
+        ));
+    }
+
+    #[test]
+    fn read_line_rejects_oversized_and_shutdown() {
+        let shutdown = AtomicBool::new(false);
+        let big = vec![b'x'; MAX_LINE + 2];
+        let mut r = BufReader::new(&big[..]);
+        assert!(matches!(
+            read_request_line(&mut r, &shutdown, Duration::from_secs(1)),
+            ReadOutcome::TooLong
+        ));
+        shutdown.store(true, Ordering::SeqCst);
+        let mut r = BufReader::new(&b"pending"[..]);
+        assert!(matches!(
+            read_request_line(&mut r, &shutdown, Duration::from_secs(1)),
+            ReadOutcome::Shutdown
+        ));
+    }
+}

@@ -29,14 +29,19 @@
 
 pub mod cache;
 pub mod coalesce;
+pub mod frontend;
 pub mod key;
 pub mod server;
+pub mod telemetry;
 pub mod warm;
 
-pub use cache::{CacheConfig, CachedValue, PlanCache};
+pub use cache::{CacheConfig, CachedValue, PlanCache, StaleEntry};
 pub use coalesce::Coalescer;
+pub use frontend::{Frontend, FrontendConfig};
 pub use key::{COST_MODEL_EPOCH, QueryKey, QueryShape, StructKey};
-pub use server::{Request, handle_line, serve_loop};
+pub use server::{LineOutcome, Request, handle_line, handle_line_full,
+                 request_line, serve_loop, serve_loop_with};
+pub use telemetry::{Counter, Telemetry, render_metrics};
 
 use crate::config::{Cluster, SearchConfig};
 use crate::cost::Profiler;
@@ -148,9 +153,31 @@ pub struct ServiceStats {
     /// Failed cache persistence attempts (service degrades to
     /// memory-only).
     pub persist_errors: u64,
+    /// b=1 completeness re-probes the structured scheduler verdict made
+    /// unnecessary (each one used to be a full extra search).
+    pub infeasible_probes_saved: u64,
 }
 
 impl ServiceStats {
+    /// Every counter with its stable wire name (the `stats` verb and
+    /// the `--metrics` dump both render from this, so they cannot
+    /// drift).
+    pub fn fields(&self) -> [(&'static str, u64); 11] {
+        [
+            ("hits", self.hits),
+            ("misses", self.misses),
+            ("inserts", self.inserts),
+            ("evictions", self.evictions),
+            ("stale_rejected", self.stale_rejected),
+            ("coalesced", self.coalesced),
+            ("planner_runs", self.planner_runs),
+            ("warm_seeded", self.warm_seeded),
+            ("warm_infeasible", self.warm_infeasible),
+            ("persist_errors", self.persist_errors),
+            ("infeasible_probes_saved", self.infeasible_probes_saved),
+        ]
+    }
+
     /// One-line human summary for CLI/bench reports.
     pub fn describe(&self) -> String {
         format!(
@@ -397,6 +424,17 @@ impl Answer {
     }
 }
 
+/// What an epoch-bump warm-up accomplished ([`PlanService::warm_up`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WarmupReport {
+    /// Hottest-K candidates selected for replay.
+    pub candidates: usize,
+    /// Replays that produced a cacheable verdict (plan or proven wall).
+    pub replanned: usize,
+    /// Replays that failed (unparseable request, invalid parameters).
+    pub failed: usize,
+}
+
 /// A successful query: the answer, where it came from, and its key.
 #[derive(Debug, Clone)]
 pub struct QueryResponse {
@@ -430,8 +468,16 @@ pub struct PlanService {
 
 impl PlanService {
     pub fn new(cfg: CacheConfig) -> PlanService {
-        let (cache, stale) = PlanCache::open(cfg);
-        PlanService {
+        PlanService::open(cfg).0
+    }
+
+    /// Open a service and surface the warm-up candidates harvested from
+    /// an epoch-rejected disk cache (entries whose *values* are stale
+    /// but whose request lines can be replayed —
+    /// [`PlanService::warm_up`]). [`PlanService::new`] discards them.
+    pub fn open(cfg: CacheConfig) -> (PlanService, Vec<StaleEntry>) {
+        let (cache, stale, harvest) = PlanCache::open(cfg);
+        let service = PlanService {
             inner: Mutex::new(Inner {
                 cache,
                 stats: ServiceStats {
@@ -441,7 +487,8 @@ impl PlanService {
                 dirty: false,
             }),
             coalescer: Coalescer::new(),
-        }
+        };
+        (service, harvest)
     }
 
     /// Memory-only service with default sizing.
@@ -458,9 +505,63 @@ impl PlanService {
         self.inner.lock().unwrap().cache.len()
     }
 
+    /// Epoch-bump warm-up: replay the hottest `k` queries harvested
+    /// from an epoch-rejected disk cache ([`PlanService::open`]),
+    /// seeding each with its previous-epoch choice vector, so a
+    /// cost-model deploy re-fills the cache *before* the listener
+    /// accepts traffic (the router's warm-up-on-schema-reload move).
+    /// Ranking is hottest-first, ties broken by request line — fully
+    /// deterministic. An infeasible verdict counts as replanned: the
+    /// wall is cached knowledge too.
+    pub fn warm_up(&self, stale: &[StaleEntry], k: usize,
+                   telemetry: Option<&Telemetry>) -> WarmupReport {
+        let mut ranked: Vec<&StaleEntry> = stale.iter().collect();
+        ranked.sort_by(|a, b| {
+            b.hits.cmp(&a.hits).then_with(|| a.request.cmp(&b.request))
+        });
+        ranked.truncate(k);
+        let mut report = WarmupReport {
+            candidates: ranked.len(),
+            replanned: 0,
+            failed: 0,
+        };
+        for entry in ranked {
+            let replayed = match server::parse_request(&entry.request) {
+                Ok(Request::Query(q)) => matches!(
+                    self.query_seeded(&q, Some(&entry.seed)),
+                    Ok(_) | Err(PlanError::Infeasible { .. })
+                ),
+                _ => false,
+            };
+            if replayed {
+                report.replanned += 1;
+                if let Some(t) = telemetry {
+                    t.bump(Counter::WarmupReplans);
+                }
+            } else {
+                report.failed += 1;
+                if let Some(t) = telemetry {
+                    t.bump(Counter::WarmupFailures);
+                }
+            }
+        }
+        report
+    }
+
     /// Answer one query through the cache → coalescer → warm-start →
     /// planner pipeline.
     pub fn query(&self, q: &PlanQuery) -> Result<QueryResponse, PlanError> {
+        self.query_seeded(q, None)
+    }
+
+    /// [`PlanService::query`] with an explicit warm-start seed (the
+    /// epoch-bump warm-up replays old entries seeded with their
+    /// previous-epoch choice vectors). A seed only ever *prunes* — the
+    /// engines discard an incumbent the moment anything beats it — so
+    /// the answer is bit-identical to an unseeded query; an invalid or
+    /// infeasible seed is simply ignored.
+    pub fn query_seeded(&self, q: &PlanQuery, seed: Option<&[usize]>)
+                        -> Result<QueryResponse, PlanError> {
         q.validate()?;
         let cluster = q.cluster.resolve()?;
         let model = resolve_setting(&q.setting)?;
@@ -496,7 +597,7 @@ impl PlanService {
         ));
         let mut led_outcome: Option<(Answer, Source)> = None;
         let (value, led) = self.coalescer.run(&key.id(), poison, || {
-            match self.plan_miss(&profiler, q, &key) {
+            match self.plan_miss(&profiler, q, &key, seed) {
                 Ok((value, complete, answer, source)) => {
                     led_outcome = Some((answer, source));
                     Ok((value, complete))
@@ -526,10 +627,11 @@ impl PlanService {
         }
     }
 
-    /// The miss path: neighbor lookup → warm-or-cold search → cache
-    /// population (plans only when the search ran to completion —
+    /// The miss path: seed/neighbor lookup → warm-or-cold search →
+    /// cache population (plans only when the search ran to completion —
     /// budget-expired results are anytime, not canonical) → one persist.
-    fn plan_miss(&self, profiler: &Profiler, q: &PlanQuery, key: &QueryKey)
+    fn plan_miss(&self, profiler: &Profiler, q: &PlanQuery, key: &QueryKey,
+                 seed: Option<&[usize]>)
                  -> Result<(CachedValue, bool, Answer, Source), PlanError> {
         // Double-checked cache read: a caller that missed the cache but
         // lost the flight-timing race (its would-be leader finished and
@@ -556,7 +658,32 @@ impl PlanService {
                 }
             }
         }
-        let warm_choice = if q.warm {
+        // an explicit seed (warm-up replay) outranks the neighbor
+        // heuristic: it is the *same query's* old answer, so after the
+        // greedy repair it is the best incumbent on offer. Seeds from a
+        // previous epoch may index menus that no longer exist — validate
+        // before repairing, ignore on any mismatch.
+        let explicit_seed = seed
+            .filter(|s| {
+                q.warm
+                    && CachedValue::Plan { choice: s.to_vec() }
+                        .validates_against(profiler)
+            })
+            .and_then(|s| {
+                let b_gate = match key.shape {
+                    QueryShape::Batch(b) => b,
+                    QueryShape::Sweep { .. } => 1,
+                };
+                planner::greedy_search_from(profiler, key.mem_limit(),
+                                            b_gate, s)
+                    .map(|(repaired, _cost)| match key.shape {
+                        QueryShape::Batch(_) => repaired,
+                        QueryShape::Sweep { .. } => s.to_vec(),
+                    })
+            });
+        let warm_choice = if explicit_seed.is_some() {
+            explicit_seed
+        } else if q.warm {
             let neighbor =
                 self.inner.lock().unwrap().cache.neighbor(key);
             neighbor.and_then(|(choice, _nb)| {
@@ -604,6 +731,9 @@ impl PlanService {
             0 => planner::parallel::default_threads(),
             t => t.min(MAX_QUERY_THREADS),
         };
+        // canonical replay line stored beside the entry, so the *next*
+        // cost-model epoch can re-plan this traffic before serving
+        let req = server::request_line(q);
 
         let result = match key.shape {
             QueryShape::Batch(b) => {
@@ -626,7 +756,8 @@ impl PlanService {
                         // node budget expired first — an un-proven
                         // verdict must not poison future queries
                         if stats.complete {
-                            self.store(*key, CachedValue::Infeasible);
+                            self.store(*key, CachedValue::Infeasible,
+                                       req);
                         }
                         Err(PlanError::Infeasible { batch: Some(b) })
                     }
@@ -635,7 +766,7 @@ impl PlanService {
                             CachedValue::Plan { choice: choice.clone() };
                         let complete = stats.complete;
                         if complete {
-                            self.store(*key, value.clone());
+                            self.store(*key, value.clone(), req);
                         }
                         let plan = ExecutionPlan::from_choice(
                             profiler, choice, b);
@@ -653,30 +784,24 @@ impl PlanService {
                     sched = sched.with_warm(w);
                 }
                 match sched.run() {
-                    None => {
-                        // the scheduler proves nothing-fits via its b=1
-                        // search but does not surface that search's
-                        // completeness; probe b=1 once (rare path) so
-                        // only a *proven* verdict is cached
-                        let probe_cfg = ParallelConfig {
-                            threads,
-                            engine: q.engine,
-                            ..Default::default()
-                        };
-                        let (probe, probe_stats) =
-                            planner::parallel_search_with_stats(
-                                profiler,
-                                key.mem_limit(),
-                                1,
-                                &probe_cfg,
-                                None,
-                            );
-                        if probe.is_none() && probe_stats.complete {
-                            self.store(*key, CachedValue::Infeasible);
+                    Err(infeasible) => {
+                        // the scheduler's structured verdict carries the
+                        // b=1 search's own completeness certificate, so
+                        // the proven-wall check reads it directly — the
+                        // extra b=1 re-probe this path used to run is
+                        // gone (ROADMAP item 7); count the savings
+                        self.inner
+                            .lock()
+                            .unwrap()
+                            .stats
+                            .infeasible_probes_saved += 1;
+                        if infeasible.complete() {
+                            self.store(*key, CachedValue::Infeasible,
+                                       req);
                         }
                         Err(PlanError::Infeasible { batch: None })
                     }
-                    Some(res) => {
+                    Ok(res) => {
                         let choices: Vec<Vec<usize>> = res
                             .candidates
                             .iter()
@@ -687,15 +812,23 @@ impl PlanService {
                             best: res.best,
                         };
                         if res.stats.complete {
-                            self.store(*key, value.clone());
+                            self.store(*key, value.clone(), req);
                             // a sweep populates the per-batch entries
                             // (future single-batch queries hit, and
                             // neighbor lookups see every batch) plus the
-                            // memory wall it proved
+                            // memory wall it proved; each entry stores
+                            // its own shape's replay line
+                            let batch_req = |b: usize| {
+                                server::request_line(&PlanQuery {
+                                    shape: QueryShape::Batch(b),
+                                    ..q.clone()
+                                })
+                            };
                             for (i, ch) in choices.iter().enumerate() {
                                 self.store(
                                     key.with_shape(QueryShape::Batch(i + 1)),
                                     CachedValue::Plan { choice: ch.clone() },
+                                    batch_req(i + 1),
                                 );
                             }
                             // the wall entry needs its own certificate:
@@ -709,6 +842,7 @@ impl PlanService {
                                         choices.len() + 1,
                                     )),
                                     CachedValue::Infeasible,
+                                    batch_req(choices.len() + 1),
                                 );
                             }
                         }
@@ -731,11 +865,13 @@ impl PlanService {
         result
     }
 
-    fn store(&self, key: QueryKey, value: CachedValue) {
+    fn store(&self, key: QueryKey, value: CachedValue,
+             request: Option<String>) {
         let mut guard = self.inner.lock().unwrap();
         let inner = &mut *guard;
         inner.stats.inserts += 1;
-        inner.stats.evictions += inner.cache.insert(key, value);
+        inner.stats.evictions +=
+            inner.cache.insert_requested(key, value, request);
         inner.dirty = true;
     }
 

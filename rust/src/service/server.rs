@@ -11,7 +11,15 @@
 //! sweep setting=48L/1024H mem=8 [batch-cap=64] [...same knobs]
 //! stats
 //! quit
+//! shutdown
 //! ```
+//!
+//! `quit` ends one connection (or the stdin loop); `shutdown` asks the
+//! whole socket front-end ([`super::frontend`]) to stop accepting and
+//! drain — on the stdin loop the two are equivalent. The same grammar is
+//! also the cache's *warm-up* format: every cached plan stores its
+//! canonical request line ([`request_line`]), so an epoch bump can
+//! re-plan yesterday's hottest queries before serving today's traffic.
 //!
 //! Settings are zoo names (`48L/1024H`) or custom
 //! `gpt:vocab,seq,layers,hidden,heads` specs. Malformed requests answer
@@ -19,12 +27,14 @@
 //! never exits on bad input (error-path property tests in
 //! `rust/tests/plan_service.rs`).
 
+use super::telemetry::Telemetry;
 use super::{Answer, PlanError, PlanQuery, PlanService, QueryResponse,
             QueryShape};
 use crate::planner::Engine;
 use crate::util::json::{self, Json};
 use std::collections::BTreeMap;
 use std::io::{BufRead, Write};
+use std::time::Instant;
 
 /// One parsed protocol line.
 #[derive(Debug, Clone, PartialEq)]
@@ -32,6 +42,18 @@ pub enum Request {
     Query(PlanQuery),
     Stats,
     Quit,
+    Shutdown,
+}
+
+/// What the transport should do after answering a line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LineOutcome {
+    /// Keep reading from this connection.
+    Continue,
+    /// Close this connection; the service keeps running.
+    Quit,
+    /// Drain and stop the whole front-end.
+    Shutdown,
 }
 
 /// Parse a protocol line. Strict: unknown keys are rejected so typos
@@ -44,9 +66,11 @@ pub fn parse_request(line: &str) -> Result<Request, PlanError> {
     match verb {
         "stats" => Ok(Request::Stats),
         "quit" | "exit" => Ok(Request::Quit),
+        "shutdown" => Ok(Request::Shutdown),
         "query" | "sweep" => parse_query(verb, toks),
         other => Err(PlanError::BadRequest(format!(
-            "unknown verb '{other}' (query | sweep | stats | quit)"
+            "unknown verb '{other}' (query | sweep | stats | quit | \
+             shutdown)"
         ))),
     }
 }
@@ -117,6 +141,64 @@ fn parse_usize(key: &str, v: &str) -> Result<usize, PlanError> {
     v.parse().map_err(|_| {
         PlanError::BadRequest(format!("{key}: bad integer '{v}'"))
     })
+}
+
+/// Canonical protocol line for a query — the inverse of
+/// [`parse_request`]: any query the grammar can express round-trips,
+/// `parse_request(&request_line(q)?) == Ok(Request::Query(q))` (pinned
+/// in tests). Cache entries store this line so the epoch-bump warm-up
+/// can replay yesterday's traffic through the ordinary request path.
+///
+/// `None` when the query is not expressible on one whitespace-split
+/// line (a setting containing whitespace — impossible to create *via*
+/// the protocol, possible via the API). `Engine::UnfoldedBb` serializes
+/// as `bb`: engines are perf knobs outside the cache key, and every
+/// engine returns the bit-identical optimum, so the replay is
+/// answer-preserving.
+pub fn request_line(q: &PlanQuery) -> Option<String> {
+    if q.setting.is_empty() || q.setting.chars().any(|c| c.is_whitespace())
+    {
+        return None;
+    }
+    let mut s = String::new();
+    match q.shape {
+        QueryShape::Batch(b) => {
+            s.push_str(&format!("query setting={} mem={} batch={b}",
+                                q.setting, q.cluster.mem_gib));
+        }
+        QueryShape::Sweep { max_batch } => {
+            s.push_str(&format!("sweep setting={} mem={} batch-cap={}",
+                                q.setting, q.cluster.mem_gib, max_batch));
+        }
+    }
+    if let Some(d) = q.cluster.devices {
+        s.push_str(&format!(" devices={d}"));
+    }
+    if q.cluster.preset != "rtx_titan" {
+        s.push_str(&format!(" cluster={}", q.cluster.preset));
+    }
+    let g: Vec<String> =
+        q.search.granularities.iter().map(|g| g.to_string()).collect();
+    s.push_str(&format!(" g={}", g.join(",")));
+    if q.engine != Engine::Frontier {
+        s.push_str(" engine=bb");
+    }
+    if q.threads != 0 {
+        s.push_str(&format!(" threads={}", q.threads));
+    }
+    if q.search.checkpointing {
+        s.push_str(" ckpt");
+    }
+    if !q.search.paper_granularity {
+        s.push_str(" fine");
+    }
+    if !q.search.hybrid_scopes {
+        s.push_str(" no-scopes");
+    }
+    if !q.warm {
+        s.push_str(" no-warm");
+    }
+    Some(s)
 }
 
 /// Render a query outcome as the single-line JSON the protocol speaks.
@@ -198,62 +280,101 @@ pub fn render_response(outcome: &Result<QueryResponse, PlanError>)
     json::to_string(&Json::Obj(o))
 }
 
-fn render_stats(service: &PlanService) -> String {
+fn render_stats(service: &PlanService, telemetry: Option<&Telemetry>)
+                -> String {
     let s = service.stats();
     let mut o = BTreeMap::new();
     o.insert("ok".into(), Json::Bool(true));
     o.insert("kind".into(), Json::Str("stats".into()));
     o.insert("cache_entries".into(),
              Json::Num(service.cache_len() as f64));
-    for (name, v) in [
-        ("hits", s.hits),
-        ("misses", s.misses),
-        ("inserts", s.inserts),
-        ("evictions", s.evictions),
-        ("stale_rejected", s.stale_rejected),
-        ("coalesced", s.coalesced),
-        ("planner_runs", s.planner_runs),
-        ("warm_seeded", s.warm_seeded),
-        ("warm_infeasible", s.warm_infeasible),
-        ("persist_errors", s.persist_errors),
-    ] {
+    for (name, v) in s.fields() {
         o.insert(name.into(), Json::Num(v as f64));
+    }
+    if let Some(t) = telemetry {
+        o.insert("telemetry".into(), t.to_json());
     }
     json::to_string(&Json::Obj(o))
 }
 
 /// Handle one protocol line; always returns exactly one JSON line (the
-/// `quit` acknowledgement included — the caller decides to stop on
-/// [`Request::Quit`]).
-pub fn handle_line(service: &PlanService, line: &str) -> (String, bool) {
+/// `quit`/`shutdown` acknowledgements included — the transport acts on
+/// the returned [`LineOutcome`]). With a [`Telemetry`] attached, every
+/// dispatched query is timed into its shape's histogram and the verdict
+/// counters — exactly once, which is what makes the telemetry
+/// consistency invariants (`histogram counts == queries`) exact.
+pub fn handle_line_full(service: &PlanService,
+                        telemetry: Option<&Telemetry>, line: &str)
+                        -> (String, LineOutcome) {
     match parse_request(line) {
-        Err(e) => (render_response(&Err(e)), false),
-        Ok(Request::Stats) => (render_stats(service), false),
-        Ok(Request::Quit) => {
-            (r#"{"kind":"bye","ok":true}"#.to_string(), true)
+        Err(e) => {
+            if let Some(t) = telemetry {
+                t.bump(super::telemetry::Counter::BadRequests);
+            }
+            (render_response(&Err(e)), LineOutcome::Continue)
         }
+        Ok(Request::Stats) => {
+            (render_stats(service, telemetry), LineOutcome::Continue)
+        }
+        Ok(Request::Quit) => {
+            (r#"{"kind":"bye","ok":true}"#.to_string(), LineOutcome::Quit)
+        }
+        Ok(Request::Shutdown) => (
+            r#"{"kind":"shutdown","ok":true}"#.to_string(),
+            LineOutcome::Shutdown,
+        ),
         Ok(Request::Query(q)) => {
-            (render_response(&service.query(&q)), false)
+            let started = Instant::now();
+            let outcome = service.query(&q);
+            if let Some(t) = telemetry {
+                let sweep =
+                    matches!(q.shape, QueryShape::Sweep { .. });
+                t.observe_query(sweep, started.elapsed().as_secs_f64(),
+                                &outcome);
+            }
+            (render_response(&outcome), LineOutcome::Continue)
         }
     }
 }
 
+/// [`handle_line_full`] without telemetry, collapsed to the original
+/// "stop reading?" boolean (both `quit` and `shutdown` stop a
+/// single-connection loop).
+pub fn handle_line(service: &PlanService, line: &str) -> (String, bool) {
+    let (response, outcome) = handle_line_full(service, None, line);
+    (response, outcome != LineOutcome::Continue)
+}
+
 /// The serve loop: read requests line by line, answer each with one
-/// JSON line, stop at `quit` or EOF. Blank lines and `#` comments are
-/// ignored (scripts can be annotated).
+/// JSON line, stop at `quit`/`shutdown` or EOF. Blank lines and `#`
+/// comments are ignored (scripts can be annotated).
 pub fn serve_loop<R: BufRead, W: Write>(service: &PlanService, reader: R,
                                         writer: &mut W)
                                         -> std::io::Result<()> {
+    serve_loop_with(service, None, reader, writer)
+}
+
+/// [`serve_loop`] with wire telemetry attached (the `--listen`-less
+/// `osdp serve` still counts requests and latencies so `stats` tells
+/// the same story on stdin as over a socket).
+pub fn serve_loop_with<R: BufRead, W: Write>(
+    service: &PlanService, telemetry: Option<&Telemetry>, reader: R,
+    writer: &mut W,
+) -> std::io::Result<()> {
     for line in reader.lines() {
         let line = line?;
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
-        let (response, quit) = handle_line(service, line);
+        if let Some(t) = telemetry {
+            t.bump(super::telemetry::Counter::Requests);
+        }
+        let (response, outcome) =
+            handle_line_full(service, telemetry, line);
         writeln!(writer, "{response}")?;
         writer.flush()?;
-        if quit {
+        if outcome != LineOutcome::Continue {
             break;
         }
     }
@@ -319,6 +440,57 @@ mod tests {
                 "'{bad}' must be rejected"
             );
         }
+    }
+
+    #[test]
+    fn shutdown_verb_parses_and_acknowledges() {
+        assert_eq!(parse_request("shutdown").unwrap(), Request::Shutdown);
+        let service = super::super::PlanService::in_memory();
+        let (resp, outcome) = handle_line_full(&service, None, "shutdown");
+        assert_eq!(outcome, LineOutcome::Shutdown);
+        let v = Json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(true));
+        assert_eq!(v.get("kind").as_str(), Some("shutdown"));
+        // the boolean compat surface stops on shutdown too
+        assert!(handle_line(&service, "shutdown").1);
+        assert!(handle_line(&service, "quit").1);
+        assert!(!handle_line(&service, "stats").1);
+    }
+
+    #[test]
+    fn request_lines_round_trip_through_the_parser() {
+        for line in [
+            "query setting=gpt:1000,64,2,128,4 mem=4 batch=2 g=0,2 \
+             threads=2 engine=bb ckpt no-warm",
+            "query setting=48L/1024H mem=8 batch=1 g=0,4",
+            "query setting=x mem=8.5 batch=3 devices=4 g=0 fine",
+            "sweep setting=x mem=8 batch-cap=16 cluster=two_server_a100 \
+             g=0,4 no-scopes",
+            "sweep setting=x mem=8 batch-cap=64 g=0,4",
+        ] {
+            let Request::Query(q) = parse_request(line).unwrap() else {
+                panic!("not a query: {line}");
+            };
+            let canon = request_line(&q).expect("expressible");
+            let Request::Query(q2) = parse_request(&canon).unwrap() else {
+                panic!("canonical line failed to parse: {canon}");
+            };
+            assert_eq!(q, q2, "round trip diverged for '{line}'");
+        }
+        // inexpressible settings refuse rather than emit a corrupt line
+        let mut q = PlanQuery::batch("two words", 8.0, 1);
+        assert_eq!(request_line(&q), None);
+        q.setting = String::new();
+        assert_eq!(request_line(&q), None);
+        // the unfolded engine degrades to its folded ground-truth twin
+        let mut q = PlanQuery::batch("x", 8.0, 1);
+        q.engine = Engine::UnfoldedBb;
+        let Request::Query(q2) =
+            parse_request(&request_line(&q).unwrap()).unwrap()
+        else {
+            panic!("not a query");
+        };
+        assert_eq!(q2.engine, Engine::FoldedBb);
     }
 
     #[test]

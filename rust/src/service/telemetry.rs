@@ -1,0 +1,374 @@
+//! Service telemetry: lock-free monotonic counters and fixed-bucket
+//! latency histograms for the served planner (the router-telemetry
+//! pattern — per-request counters plus a latency histogram per query
+//! shape — sized for a hot path: every record is a handful of relaxed
+//! atomic increments, no locks, no allocation).
+//!
+//! The split of responsibilities with [`super::ServiceStats`]:
+//!
+//! * `ServiceStats` counts what the **service core** did (cache hits and
+//!   misses, coalesced followers, planner runs, warm-start accepts and
+//!   rejects, saved infeasibility probes). It lives under the service's
+//!   mutex because its transitions must be atomic with the cache
+//!   operations they describe.
+//! * [`Telemetry`] counts what the **wire surface** saw (connections,
+//!   requests, malformed lines, query verdicts) and how long each query
+//!   took, shape by shape. It is updated outside any lock, from
+//!   whichever worker thread handled the request.
+//!
+//! Both surface through the protocol's `stats` verb and the `--metrics`
+//! dump ([`render_metrics`] — one JSON document, stable field names, the
+//! bucket bounds spelled out so downstream scrapers need no side
+//! channel).
+//!
+//! Invariant the tests pin (telemetry-consistency, see
+//! `rust/tests/service_frontend.rs`): every dispatched query is recorded
+//! exactly once, so `histogram count == queries` per shape, and — since
+//! the service counts one hit or one miss per query that reaches the
+//! cache — `hits + misses == queries − rejected` (rejected = requests
+//! that failed validation before the cache: unknown setting, invalid
+//! cluster, bad parameters).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Histogram bucket upper bounds, in seconds. Fixed at compile time so
+/// two deployments (or two CI runs) always bin identically; the final
+/// implicit bucket catches everything above the last bound. Spacing is
+/// roughly 1-3-10: cache hits land in the microsecond buckets, warm and
+/// cold searches in the millisecond-to-second decades.
+pub const LATENCY_BUCKETS_S: [f64; 11] = [
+    1e-5, 3e-5, 1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1, 3e-1, 1.0,
+];
+
+/// Bucket count including the overflow bucket.
+pub const N_BUCKETS: usize = LATENCY_BUCKETS_S.len() + 1;
+
+/// One fixed-bucket latency histogram (cumulative counts are derived at
+/// render time; storage is per-bucket).
+pub struct Histogram {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    /// Sum in nanoseconds: saturating, monotonic, and exact far beyond
+    /// any plausible service lifetime (2^64 ns ≈ 584 years).
+    sum_ns: AtomicU64,
+}
+
+impl Histogram {
+    fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Index of the bucket a latency falls in (the first bound it does
+    /// not exceed; the overflow bucket otherwise).
+    pub fn bucket_of(seconds: f64) -> usize {
+        LATENCY_BUCKETS_S
+            .iter()
+            .position(|&b| seconds <= b)
+            .unwrap_or(LATENCY_BUCKETS_S.len())
+    }
+
+    pub fn observe(&self, seconds: f64) {
+        let s = if seconds.is_finite() && seconds >= 0.0 {
+            seconds
+        } else {
+            0.0
+        };
+        self.buckets[Histogram::bucket_of(s)]
+            .fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns
+            .fetch_add((s * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Per-bucket counts (same order as [`LATENCY_BUCKETS_S`], overflow
+    /// last).
+    pub fn snapshot(&self) -> [u64; N_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Bucket-resolution quantile estimate: the upper bound of the first
+    /// bucket whose cumulative count reaches `q * count` (the overflow
+    /// bucket reports the last finite bound). `None` on an empty
+    /// histogram.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        let total = self.count();
+        if total == 0 {
+            return None;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64)
+            .clamp(1, total);
+        let mut cum = 0u64;
+        for (i, c) in self.snapshot().iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Some(
+                    *LATENCY_BUCKETS_S
+                        .get(i)
+                        .unwrap_or(LATENCY_BUCKETS_S.last().unwrap()),
+                );
+            }
+        }
+        Some(*LATENCY_BUCKETS_S.last().unwrap())
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert(
+            "bounds_s".into(),
+            Json::Arr(LATENCY_BUCKETS_S.iter().map(|&b| Json::Num(b))
+                          .collect()),
+        );
+        o.insert(
+            "counts".into(),
+            Json::Arr(self.snapshot().iter().map(|&c| Json::Num(c as f64))
+                          .collect()),
+        );
+        o.insert("count".into(), Json::Num(self.count() as f64));
+        o.insert(
+            "sum_s".into(),
+            Json::Num(self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9),
+        );
+        for (name, q) in [("p50_s", 0.5), ("p99_s", 0.99)] {
+            if let Some(v) = self.quantile(q) {
+                o.insert(name.into(), Json::Num(v));
+            }
+        }
+        Json::Obj(o)
+    }
+}
+
+/// The wire-surface counters. Names are the stable metric names the
+/// `stats` verb and `--metrics` dump expose (README documents them).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// TCP connections accepted by the front-end.
+    Connections,
+    /// Connections dropped for exceeding the idle read timeout.
+    ConnTimeouts,
+    /// Protocol lines received (every verb, well-formed or not).
+    Requests,
+    /// Lines that failed to parse (unknown verb, bad parameter).
+    BadRequests,
+    /// `query`/`sweep` requests dispatched to the service.
+    Queries,
+    /// Queries rejected before planning (unknown setting, invalid
+    /// cluster, out-of-bounds parameters) — these never reach the cache.
+    Rejected,
+    /// Queries answered with a (possibly cached) infeasibility verdict.
+    Infeasible,
+    /// Epoch-bump warm-up replans that completed.
+    WarmupReplans,
+    /// Warm-up candidates that failed to re-plan (unparseable request or
+    /// planning error).
+    WarmupFailures,
+}
+
+const N_COUNTERS: usize = 9;
+
+impl Counter {
+    const ALL: [Counter; N_COUNTERS] = [
+        Counter::Connections,
+        Counter::ConnTimeouts,
+        Counter::Requests,
+        Counter::BadRequests,
+        Counter::Queries,
+        Counter::Rejected,
+        Counter::Infeasible,
+        Counter::WarmupReplans,
+        Counter::WarmupFailures,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Counter::Connections => "connections",
+            Counter::ConnTimeouts => "conn_timeouts",
+            Counter::Requests => "requests",
+            Counter::BadRequests => "bad_requests",
+            Counter::Queries => "queries",
+            Counter::Rejected => "rejected",
+            Counter::Infeasible => "infeasible",
+            Counter::WarmupReplans => "warmup_replans",
+            Counter::WarmupFailures => "warmup_failures",
+        }
+    }
+}
+
+/// Wire-surface telemetry: one instance per serving process, shared by
+/// every worker thread (all methods take `&self`; everything inside is
+/// atomic).
+pub struct Telemetry {
+    counters: [AtomicU64; N_COUNTERS],
+    /// Latency of single-batch (`query`) requests.
+    pub batch_latency: Histogram,
+    /// Latency of `sweep` requests.
+    pub sweep_latency: Histogram,
+}
+
+impl Telemetry {
+    pub fn new() -> Telemetry {
+        Telemetry {
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            batch_latency: Histogram::new(),
+            sweep_latency: Histogram::new(),
+        }
+    }
+
+    pub fn bump(&self, c: Counter) {
+        self.counters[c as usize].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn get(&self, c: Counter) -> u64 {
+        self.counters[c as usize].load(Ordering::Relaxed)
+    }
+
+    /// Record one dispatched query: shape-binned latency plus the
+    /// verdict counters. Exactly one call per `PlanService::query`
+    /// dispatch — the telemetry-consistency invariant depends on it.
+    pub fn observe_query(
+        &self,
+        sweep: bool,
+        seconds: f64,
+        outcome: &Result<super::QueryResponse, super::PlanError>,
+    ) {
+        self.bump(Counter::Queries);
+        if sweep {
+            self.sweep_latency.observe(seconds);
+        } else {
+            self.batch_latency.observe(seconds);
+        }
+        match outcome {
+            Ok(_) => {}
+            Err(super::PlanError::Infeasible { .. }) => {
+                self.bump(Counter::Infeasible);
+            }
+            Err(_) => self.bump(Counter::Rejected),
+        }
+    }
+
+    /// Total queries recorded (both shapes).
+    pub fn queries(&self) -> u64 {
+        self.get(Counter::Queries)
+    }
+
+    /// The telemetry section of the `stats` verb / `--metrics` document.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        for c in Counter::ALL {
+            o.insert(c.name().into(), Json::Num(self.get(c) as f64));
+        }
+        let mut lat = BTreeMap::new();
+        lat.insert("batch".into(), self.batch_latency.to_json());
+        lat.insert("sweep".into(), self.sweep_latency.to_json());
+        o.insert("latency".into(), Json::Obj(lat));
+        Json::Obj(o)
+    }
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Telemetry::new()
+    }
+}
+
+/// The full metrics document: service-core counters + wire telemetry in
+/// one JSON object (`osdp serve --metrics` prints it on shutdown; the
+/// front-end bench records its frontend section next to it).
+pub fn render_metrics(
+    stats: &super::ServiceStats,
+    cache_entries: usize,
+    telemetry: &Telemetry,
+) -> String {
+    let mut o = BTreeMap::new();
+    o.insert("kind".into(), Json::Str("metrics".into()));
+    o.insert("cache_entries".into(), Json::Num(cache_entries as f64));
+    let mut svc = BTreeMap::new();
+    for (name, v) in stats.fields() {
+        svc.insert(name.into(), Json::Num(v as f64));
+    }
+    o.insert("service".into(), Json::Obj(svc));
+    o.insert("telemetry".into(), telemetry.to_json());
+    crate::util::json::to_string(&Json::Obj(o))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_bin_and_quantile_estimates() {
+        assert_eq!(Histogram::bucket_of(0.0), 0);
+        assert_eq!(Histogram::bucket_of(1e-5), 0);
+        assert_eq!(Histogram::bucket_of(1.1e-5), 1);
+        assert_eq!(Histogram::bucket_of(0.5), 10);
+        assert_eq!(Histogram::bucket_of(2.0), 11, "overflow bucket");
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), None, "empty histogram");
+        for _ in 0..98 {
+            h.observe(2e-5); // bucket 1 (<= 3e-5)
+        }
+        h.observe(0.02); // bucket 7 (<= 3e-2)
+        h.observe(5.0); // overflow
+        assert_eq!(h.count(), 100);
+        let snap = h.snapshot();
+        assert_eq!(snap[1], 98);
+        assert_eq!(snap[7], 1);
+        assert_eq!(snap[N_BUCKETS - 1], 1);
+        assert_eq!(h.quantile(0.5), Some(3e-5));
+        assert_eq!(h.quantile(0.99), Some(3e-2));
+        // the overflow bucket quotes the last finite bound
+        assert_eq!(h.quantile(1.0), Some(1.0));
+    }
+
+    #[test]
+    fn observe_is_total_on_hostile_inputs() {
+        let h = Histogram::new();
+        h.observe(f64::NAN);
+        h.observe(-1.0);
+        h.observe(f64::INFINITY);
+        assert_eq!(h.count(), 3, "every observation lands somewhere");
+    }
+
+    #[test]
+    fn counters_round_trip_names() {
+        let t = Telemetry::new();
+        t.bump(Counter::Requests);
+        t.bump(Counter::Requests);
+        t.bump(Counter::BadRequests);
+        assert_eq!(t.get(Counter::Requests), 2);
+        assert_eq!(t.get(Counter::BadRequests), 1);
+        let doc = t.to_json();
+        assert_eq!(doc.get("requests").as_usize(), Some(2));
+        assert_eq!(doc.get("bad_requests").as_usize(), Some(1));
+        assert_eq!(doc.get("queries").as_usize(), Some(0));
+        assert!(doc.get("latency").get("batch").get("counts").as_arr()
+                   .is_some());
+    }
+
+    #[test]
+    fn observe_query_feeds_shape_histograms_and_verdicts() {
+        let t = Telemetry::new();
+        t.observe_query(false, 1e-4,
+                        &Err(super::super::PlanError::Infeasible {
+                            batch: Some(1),
+                        }));
+        t.observe_query(true, 2.0,
+                        &Err(super::super::PlanError::UnknownSetting(
+                            "x".into(),
+                        )));
+        assert_eq!(t.queries(), 2);
+        assert_eq!(t.batch_latency.count(), 1);
+        assert_eq!(t.sweep_latency.count(), 1);
+        assert_eq!(t.get(Counter::Infeasible), 1);
+        assert_eq!(t.get(Counter::Rejected), 1);
+    }
+}

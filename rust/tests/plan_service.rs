@@ -19,8 +19,9 @@ use osdp::cost::Profiler;
 use osdp::model::{GptDims, build_gpt};
 use osdp::planner::{self, Engine, Scheduler};
 use osdp::service::key::fingerprint;
-use osdp::service::{Answer, CacheConfig, PlanError, PlanQuery, PlanService,
-                    QueryKey, QueryShape, Source, server};
+use osdp::service::{Answer, CacheConfig, Counter, PlanError, PlanQuery,
+                    PlanService, QueryKey, QueryShape, Source, StaleEntry,
+                    Telemetry, WarmupReport, server};
 use osdp::util::json::Json;
 
 fn tiny_profiler(layers: usize, hidden: usize, grans: Vec<usize>)
@@ -225,7 +226,7 @@ fn warm_start_reduces_nodes_on_the_24l_sweep() {
     let mut strict_seen = false;
     for frac in [0.3, 0.35, 0.425, 0.5, 0.575, 0.65, 0.725, 0.8] {
         let limit = dp * frac;
-        let Some(cold) =
+        let Ok(cold) =
             Scheduler::new(&p, limit, 8).with_threads(1).run()
         else {
             continue;
@@ -619,4 +620,124 @@ fn disk_cache_survives_a_restart_and_rejects_foreign_epochs() {
     assert!(matches!(replan.source, Source::Cold | Source::Warm),
             "stale cache must not serve hits");
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// epoch-bump warm-up: stale entries are harvested and replayed
+// ---------------------------------------------------------------------
+
+/// Rewrite the persisted cache file's epoch field in place.
+fn tamper_epoch(dir: &std::path::Path, epoch: f64) {
+    let path = dir.join("plan_cache.json");
+    let doc =
+        Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let mut obj = doc.as_obj().unwrap().clone();
+    obj.insert("epoch".into(), Json::Num(epoch));
+    std::fs::write(&path, osdp::util::json::to_string(&Json::Obj(obj)))
+        .unwrap();
+}
+
+#[test]
+fn epoch_bump_warm_up_replays_hottest_stale_entries() {
+    let dir = std::env::temp_dir().join(format!(
+        "osdp-warmup-test-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = CacheConfig { capacity: 64, disk_dir: Some(dir.clone()) };
+    let q_hot = PlanQuery::batch(TINY, tiny_mem_gib(0.6, 2), 2);
+    let q_cool = PlanQuery::batch(TINY, tiny_mem_gib(0.8, 1), 1);
+
+    // session one: the hot query is served three times, the cool one once
+    let first = PlanService::new(cfg.clone());
+    let hot_cold = first.query(&q_hot).unwrap();
+    first.query(&q_hot).unwrap();
+    first.query(&q_hot).unwrap();
+    first.query(&q_cool).unwrap();
+    drop(first);
+
+    // a cost-model deploy bumps the epoch: values are garbage now, but
+    // the request lines (and old choice vectors, as seeds) are not
+    tamper_epoch(&dir, 9999.0);
+    let (second, stale) = PlanService::open(cfg.clone());
+    assert_eq!(second.cache_len(), 0, "stale values must not be served");
+    assert_eq!(second.stats().stale_rejected, 2);
+    assert_eq!(stale.len(), 2, "both entries harvested for replay");
+
+    // K=1 replays only the hottest entry, seeded with its old choice
+    let report = second.warm_up(&stale, 1, None);
+    assert_eq!(report,
+               WarmupReport { candidates: 1, replanned: 1, failed: 0 });
+    let s = second.stats();
+    assert_eq!(s.planner_runs, 1);
+    assert_eq!(s.warm_seeded, 1,
+               "the replay must be seeded with the previous-epoch choice");
+    let hot = second.query(&q_hot).unwrap();
+    assert_eq!(hot.source, Source::Cache,
+               "warm-up pre-filled the hot entry before traffic");
+    let (Answer::Plan { plan: a, .. }, Answer::Plan { plan: b, .. }) =
+        (&hot_cold.answer, &hot.answer)
+    else {
+        panic!()
+    };
+    assert_eq!(a.choice, b.choice,
+               "the cost model did not actually change here, so the \
+                replayed plan is bit-identical");
+    assert_eq!(a.cost.time.to_bits(), b.cost.time.to_bits());
+    let cool = second.query(&q_cool).unwrap();
+    assert!(matches!(cool.source, Source::Cold | Source::Warm),
+            "the cool entry was beyond K and must re-plan");
+    drop(second);
+
+    // a second bump, replayed with telemetry attached and K large
+    // enough for everything
+    tamper_epoch(&dir, 4242.0);
+    let (third, stale) = PlanService::open(cfg);
+    let telemetry = Telemetry::new();
+    let report = third.warm_up(&stale, 8, Some(&telemetry));
+    assert_eq!(report.candidates, stale.len());
+    assert_eq!(report.replanned, stale.len());
+    assert_eq!(report.failed, 0);
+    assert_eq!(telemetry.get(Counter::WarmupReplans), stale.len() as u64);
+    assert_eq!(telemetry.get(Counter::WarmupFailures), 0);
+    assert_eq!(third.query(&q_hot).unwrap().source, Source::Cache);
+    assert_eq!(third.query(&q_cool).unwrap().source, Source::Cache);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn warm_up_is_total_on_hostile_harvests() {
+    let service = PlanService::in_memory();
+    let mem = tiny_mem_gib(0.7, 1);
+    let stale = vec![
+        // unparseable request line: counted failed, never dispatched
+        StaleEntry { request: "frobnicate the planner".into(),
+                     seed: vec![0], hits: 9 },
+        // stats is a valid verb but not a replayable query
+        StaleEntry { request: "stats".into(), seed: vec![], hits: 8 },
+        // replayable, with a garbage seed the engines must shrug off
+        StaleEntry {
+            request: format!(
+                "query setting={TINY} mem={mem} batch=1 threads=1"
+            ),
+            seed: vec![usize::MAX; 3],
+            hits: 7,
+        },
+        // replayable and provably infeasible: the wall is cached
+        // knowledge, so it counts as replanned
+        StaleEntry {
+            request: format!("query setting={TINY} mem=1e-9 batch=1"),
+            seed: vec![],
+            hits: 6,
+        },
+    ];
+    let report = service.warm_up(&stale, 8, None);
+    assert_eq!(report,
+               WarmupReport { candidates: 4, replanned: 2, failed: 2 });
+    // the replayed entries serve from cache now
+    let q = PlanQuery::batch(TINY, mem, 1);
+    assert_eq!(service.query(&q).unwrap().source, Source::Cache);
+    assert_eq!(service.query(&PlanQuery::batch(TINY, 1e-9, 1)).unwrap_err(),
+               PlanError::Infeasible { batch: Some(1) });
+    assert_eq!(service.stats().hits, 2);
 }

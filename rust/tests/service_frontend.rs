@@ -1,0 +1,385 @@
+//! Socket front-end acceptance tests (ISSUE 6):
+//!
+//! * 8 concurrent **identical** socket queries observe exactly one
+//!   planner execution — proven through the wire via the `stats` verb,
+//!   not by peeking at internals;
+//! * N concurrent **distinct** socket queries are bit-identical (full
+//!   choice vectors) to the same queries answered serially by a plain
+//!   in-process [`PlanService`];
+//! * telemetry consistency under concurrent load: every histogram
+//!   observation corresponds to exactly one dispatched query, and
+//!   `hits + misses == queries − rejected`;
+//! * framing hardening: oversized lines and idle connections get a
+//!   structured error and a closed socket, never a hung worker;
+//! * `shutdown` drains in-flight work, acks, and closes the listener.
+
+use osdp::config::GIB;
+use osdp::cost::Profiler;
+use osdp::service::{Counter, Frontend, FrontendConfig, PlanQuery,
+                    PlanService, Telemetry, server};
+use osdp::util::json::Json;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+const TINY: &str = "gpt:3000,64,6,192,4";
+
+fn tiny_service_profiler() -> Profiler {
+    let q = PlanQuery::batch(TINY, 8.0, 1);
+    let cluster = q.cluster.resolve().unwrap();
+    let model = osdp::service::resolve_setting(TINY).unwrap();
+    Profiler::new(&model, &cluster, &q.search)
+}
+
+/// A limit (in GiB) around `frac` of the tiny model's all-DP peak at
+/// `b` — same construction as the plan_service tests, so limits land in
+/// the interesting (mixed-plan) region.
+fn tiny_mem_gib(frac: f64, b: usize) -> f64 {
+    let p = tiny_service_profiler();
+    p.evaluate(&p.index_of(|d| d.is_pure_dp()), b).peak_mem * frac / GIB
+}
+
+fn start_frontend(workers: usize, idle: Duration)
+                  -> (Frontend, Arc<PlanService>, Arc<Telemetry>) {
+    let service = Arc::new(PlanService::in_memory());
+    let telemetry = Arc::new(Telemetry::new());
+    let frontend = Frontend::start(
+        Arc::clone(&service),
+        Arc::clone(&telemetry),
+        FrontendConfig {
+            addr: "127.0.0.1:0".into(),
+            workers,
+            idle_timeout: idle,
+            queue_cap: 64,
+        },
+    )
+    .expect("bind an ephemeral loopback port");
+    (frontend, service, telemetry)
+}
+
+/// Send `lines` on one connection and read one JSON response per line.
+fn roundtrip(addr: std::net::SocketAddr, lines: &[&str]) -> Vec<Json> {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut out = Vec::with_capacity(lines.len());
+    for line in lines {
+        writeln!(writer, "{line}").unwrap();
+        writer.flush().unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).expect("read response line");
+        assert!(resp.ends_with('\n'), "responses are newline-framed");
+        out.push(Json::parse(resp.trim_end())
+                     .expect("every response line is JSON"));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// the concurrency guarantee, proven through the wire
+// ---------------------------------------------------------------------
+
+#[test]
+fn eight_identical_socket_queries_run_one_search() {
+    let (frontend, _service, _telemetry) =
+        start_frontend(8, Duration::from_secs(60));
+    let addr = frontend.local_addr();
+    let mem = tiny_mem_gib(0.5, 2);
+    let line =
+        format!("query setting={TINY} mem={mem} batch=2 threads=1");
+
+    let barrier = Barrier::new(8);
+    let responses: Vec<Json> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let line = line.as_str();
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    barrier.wait();
+                    roundtrip(addr, &[line]).pop().unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for r in &responses {
+        assert_eq!(r.get("ok").as_bool(), Some(true), "{r:?}");
+        assert_eq!(r.get("choice"), responses[0].get("choice"),
+                   "coalesced answers must be bit-identical");
+        assert_eq!(r.get("time_s"), responses[0].get("time_s"));
+    }
+
+    // the proof goes through the protocol: the `stats` verb on a fresh
+    // connection must report exactly one planner execution
+    let stats = roundtrip(addr, &["stats"]).pop().unwrap();
+    assert_eq!(stats.get("planner_runs").as_usize(), Some(1),
+               "8 identical concurrent socket queries must run exactly \
+                one search: {stats:?}");
+    assert_eq!(
+        stats.get("hits").as_usize().unwrap()
+            + stats.get("coalesced").as_usize().unwrap(),
+        7,
+        "everyone but the leader shares: {stats:?}"
+    );
+    assert_eq!(stats.get("telemetry").get("queries").as_usize(), Some(8),
+               "telemetry rides along on the stats verb: {stats:?}");
+
+    let ack = roundtrip(addr, &["shutdown"]).pop().unwrap();
+    assert_eq!(ack.get("kind").as_str(), Some("shutdown"));
+    frontend.join();
+}
+
+// ---------------------------------------------------------------------
+// concurrent distinct queries == serial in-process queries, bit for bit
+// ---------------------------------------------------------------------
+
+#[test]
+fn concurrent_distinct_socket_queries_match_serial_service() {
+    // distinct (mem, batch) points, including a sweep: limits span loose
+    // to tight so plans differ across the set
+    let mut lines: Vec<String> = Vec::new();
+    for (frac, b) in [(0.45, 1), (0.55, 1), (0.65, 2), (0.8, 2),
+                      (0.9, 3)]
+    {
+        let mem = tiny_mem_gib(frac, b);
+        lines.push(format!(
+            "query setting={TINY} mem={mem} batch={b} threads=1"
+        ));
+    }
+    let sweep_mem = tiny_mem_gib(0.7, 1);
+    lines.push(format!(
+        "sweep setting={TINY} mem={sweep_mem} batch-cap=3 threads=1"
+    ));
+
+    // serial ground truth: the same protocol lines against a plain
+    // in-process service, one at a time, on this thread
+    let serial = PlanService::in_memory();
+    let reference: Vec<Json> = lines
+        .iter()
+        .map(|l| {
+            let (resp, _) = server::handle_line(&serial, l);
+            Json::parse(&resp).unwrap()
+        })
+        .collect();
+
+    let (frontend, _service, _telemetry) =
+        start_frontend(4, Duration::from_secs(60));
+    let addr = frontend.local_addr();
+    let barrier = Barrier::new(lines.len());
+    let concurrent: Vec<Json> = std::thread::scope(|scope| {
+        let handles: Vec<_> = lines
+            .iter()
+            .map(|line| {
+                let line = line.as_str();
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    barrier.wait();
+                    roundtrip(addr, &[line]).pop().unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for (got, want) in concurrent.iter().zip(&reference) {
+        assert_eq!(want.get("ok").as_bool(), Some(true), "{want:?}");
+        assert_eq!(got.get("ok").as_bool(), Some(true), "{got:?}");
+        // sources may differ (warm-start opportunities depend on arrival
+        // order) but the answers must not: full choice vectors and
+        // bit-exact times
+        assert_eq!(got.get("choice"), want.get("choice"));
+        assert_eq!(got.get("time_s"), want.get("time_s"));
+        assert_eq!(got.get("throughput"), want.get("throughput"));
+        assert_eq!(got.get("candidates"), want.get("candidates"));
+        assert_eq!(got.get("best_batch"), want.get("best_batch"));
+    }
+
+    frontend.shutdown();
+    frontend.join();
+}
+
+// ---------------------------------------------------------------------
+// telemetry consistency under concurrent, partly hostile load
+// ---------------------------------------------------------------------
+
+#[test]
+fn telemetry_is_consistent_under_concurrent_load() {
+    let (frontend, service, telemetry) =
+        start_frontend(4, Duration::from_secs(60));
+    let addr = frontend.local_addr();
+    let mem = tiny_mem_gib(0.6, 1);
+    let good = format!("query setting={TINY} mem={mem} batch=1 threads=1");
+    // a *different* limit for the sweep, so its per-batch cache fills
+    // never collide with the batch query's key (that would make
+    // planner_runs depend on arrival order)
+    let sweep_mem = tiny_mem_gib(0.75, 1);
+    let sweep = format!(
+        "sweep setting={TINY} mem={sweep_mem} batch-cap=2 threads=1"
+    );
+
+    // 6 connections, 3 lines each: a good query, junk, and a rejected
+    // query (unknown setting) — interleaved across the worker pool
+    let scripts: Vec<Vec<String>> = (0..6)
+        .map(|i| {
+            vec![
+                if i % 2 == 0 { good.clone() } else { sweep.clone() },
+                "frobnicate the planner".into(),
+                "query setting=nope mem=4 batch=1".into(),
+            ]
+        })
+        .collect();
+    let barrier = Barrier::new(scripts.len());
+    std::thread::scope(|scope| {
+        for script in &scripts {
+            let barrier = &barrier;
+            scope.spawn(move || {
+                barrier.wait();
+                let lines: Vec<&str> =
+                    script.iter().map(|s| s.as_str()).collect();
+                let responses = roundtrip(addr, &lines);
+                assert_eq!(responses[0].get("ok").as_bool(), Some(true));
+                assert_eq!(responses[1].get("error").as_str(),
+                           Some("bad-request"));
+                assert_eq!(responses[2].get("error").as_str(),
+                           Some("unknown-setting"));
+            });
+        }
+    });
+    frontend.shutdown();
+    frontend.join();
+
+    // every protocol line was counted: 3 per connection
+    assert_eq!(telemetry.get(Counter::Requests), 18);
+    assert_eq!(telemetry.get(Counter::Connections), 6);
+    // queries = the parsed query/sweep lines (junk never dispatches)
+    assert_eq!(telemetry.queries(), 12);
+    assert_eq!(telemetry.get(Counter::BadRequests), 6);
+    assert_eq!(telemetry.get(Counter::Rejected), 6,
+               "the unknown-setting queries are rejected pre-cache");
+    // exactly one histogram observation per dispatched query, binned by
+    // shape
+    assert_eq!(telemetry.batch_latency.count(), 9,
+               "3 good batch queries + 6 rejected (batch-shaped)");
+    assert_eq!(telemetry.sweep_latency.count(), 3);
+    assert_eq!(
+        telemetry.batch_latency.count() + telemetry.sweep_latency.count(),
+        telemetry.queries()
+    );
+    // the service core saw every query that passed validation
+    let s = service.stats();
+    assert_eq!(
+        s.hits + s.misses,
+        telemetry.queries() - telemetry.get(Counter::Rejected),
+        "hits + misses must equal dispatched-and-validated queries: {}",
+        s.describe()
+    );
+    // 2 distinct cacheable queries -> exactly 2 planner runs, however
+    // the 6 copies interleaved
+    assert_eq!(s.planner_runs, 2, "{}", s.describe());
+}
+
+// ---------------------------------------------------------------------
+// framing hardening: oversized lines, idle timeouts
+// ---------------------------------------------------------------------
+
+#[test]
+fn oversized_lines_get_a_structured_error_and_a_closed_socket() {
+    let (frontend, _service, telemetry) =
+        start_frontend(2, Duration::from_secs(60));
+    let addr = frontend.local_addr();
+
+    let stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    // 64 KiB of garbage, no newline: framing is unrecoverable, so the
+    // server must answer once and hang up
+    writer.write_all(&[b'x'; 64 * 1024]).unwrap();
+    writer.flush().unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let doc = Json::parse(resp.trim_end()).expect("structured error");
+    assert_eq!(doc.get("ok").as_bool(), Some(false));
+    assert_eq!(doc.get("error").as_str(), Some("bad-request"));
+    let mut rest = String::new();
+    reader.read_to_string(&mut rest).unwrap();
+    assert!(rest.is_empty(), "socket closes after an oversized line");
+    assert!(telemetry.get(Counter::BadRequests) >= 1);
+
+    // the pool survives: a well-behaved connection still gets served
+    let stats = roundtrip(addr, &["stats"]).pop().unwrap();
+    assert_eq!(stats.get("kind").as_str(), Some("stats"));
+
+    frontend.shutdown();
+    frontend.join();
+}
+
+#[test]
+fn idle_connections_time_out_without_wedging_a_worker() {
+    // a 1-worker pool: if the idle connection wedged its worker, the
+    // follow-up request could never be served
+    let (frontend, _service, telemetry) =
+        start_frontend(1, Duration::from_millis(200));
+    let addr = frontend.local_addr();
+
+    let stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let doc = Json::parse(resp.trim_end()).expect("structured timeout");
+    assert_eq!(doc.get("error").as_str(), Some("timeout"));
+    let mut rest = String::new();
+    reader.read_to_string(&mut rest).unwrap();
+    assert!(rest.is_empty(), "idle socket is closed after the timeout");
+    assert_eq!(telemetry.get(Counter::ConnTimeouts), 1);
+
+    let stats = roundtrip(addr, &["stats"]).pop().unwrap();
+    assert_eq!(stats.get("kind").as_str(), Some("stats"),
+               "the worker must be free again after the timeout");
+
+    frontend.shutdown();
+    frontend.join();
+}
+
+// ---------------------------------------------------------------------
+// graceful shutdown
+// ---------------------------------------------------------------------
+
+#[test]
+fn shutdown_acks_drains_and_closes_the_listener() {
+    let (frontend, service, _telemetry) =
+        start_frontend(2, Duration::from_secs(60));
+    let addr = frontend.local_addr();
+    let mem = tiny_mem_gib(0.55, 1);
+
+    // in-flight work on the same connection completes before the ack
+    let query = format!("query setting={TINY} mem={mem} batch=1 threads=1");
+    let responses = roundtrip(addr, &[query.as_str(), "shutdown"]);
+    assert_eq!(responses[0].get("ok").as_bool(), Some(true));
+    assert_eq!(responses[1].get("kind").as_str(), Some("shutdown"));
+    assert_eq!(responses[1].get("ok").as_bool(), Some(true));
+
+    // join returns (drain), and the port stops accepting new work: a
+    // late connect either fails outright or sees immediate EOF
+    frontend.join();
+    assert_eq!(service.stats().planner_runs, 1);
+    if let Ok(stream) = TcpStream::connect(addr) {
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).unwrap_or(0);
+        assert_eq!(n, 0, "no worker serves after shutdown: {line:?}");
+    }
+}
