@@ -5,10 +5,11 @@ CARGO ?= cargo
 PY ?= python3
 
 .PHONY: ci build examples test fmt clippy bench-smoke bench-search \
-        bench-service serve-drive serve-mirror python-test artifacts
+        bench-service serve-drive serve-mirror chaos chaos-mirror \
+        python-test artifacts
 
 ci: build examples test fmt clippy bench-smoke serve-drive serve-mirror \
-    python-test
+    chaos chaos-mirror python-test
 
 build:
 	$(CARGO) build --release
@@ -54,6 +55,22 @@ serve-drive: build
 serve-mirror:
 	$(PY) python/mirror/frontend_mirror.py
 	$(PY) python/tests/drive_frontend.py --mirror
+
+# CI's fault-injection job: chaos-drive the release binary under three
+# fixed OSDP_FAULTS seeds — the server must stay responsive, resurrect
+# panicked workers, keep the telemetry invariants exact, and exit 0.
+chaos: build
+	for seed in 1117 7 4242; do \
+		$(PY) python/tests/drive_frontend.py --bin target/release/osdp \
+			--workers 4 --chaos --fault-seed $$seed || exit 1; \
+	done
+
+# The same chaos contract against the pure-python mirror (no cargo).
+chaos-mirror:
+	for seed in 1117 7 4242; do \
+		$(PY) python/tests/drive_frontend.py --mirror \
+			--chaos --fault-seed $$seed || exit 1; \
+	done
 
 # pytest exit 5 = nothing collected/selected (e.g. hypothesis missing):
 # not a failure for this gate.

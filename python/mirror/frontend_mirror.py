@@ -38,14 +38,25 @@ Checks:
    socket; an idle connection times out without wedging its worker.
 7. ``shutdown`` acks, drains, and the listener stops accepting.
 
+PR 7 adds the fault-injection mirror: ``OSDP_FAULTS`` is parsed with
+the same grammar and the same splitmix64 ``(seed, site, call)`` mix as
+``rust/src/util/faults.rs``, injected at the same boundaries — a
+panicking dispatch (before any accounting, so the telemetry
+invariants stay exact), a slow dispatch, and a mid-line socket reset
+— and the worker pool self-heals exactly like ``frontend.rs``: the
+panic unwinds the served request, bumps ``worker_restarts``, and the
+thread re-enters its dispatch loop.
+
 Run: ``python3 python/mirror/frontend_mirror.py`` (exits non-zero on
 any mismatch). ``--serve`` starts the mirror server on an ephemeral
 port and prints the same ``{"addr":...,"kind":"listening","ok":true}``
 line the Rust binary prints, so python/tests/drive_frontend.py can
-drive either implementation with the same assertions.
+drive either implementation with the same assertions (chaos mode
+included).
 """
 
 import json
+import os
 import socket
 import sys
 import threading
@@ -63,8 +74,105 @@ MAX_LINE = 16 * 1024
 COUNTERS = [
     "connections", "conn_timeouts", "requests", "bad_requests",
     "queries", "rejected", "infeasible", "warmup_replans",
-    "warmup_failures",
+    "warmup_failures", "worker_restarts",
 ]
+
+
+# ------------------------------------------------ fault-plan mirror
+#
+# util/faults.rs: a deterministic fault schedule parsed once from
+# OSDP_FAULTS. Whether call n of a site fires is a pure function of
+# (seed, site, n) — the same splitmix64-style mix as the Rust side —
+# so a given seed produces the same fault counts in both
+# implementations. The cache-io site is parsed but never consulted
+# here (the toy service has no disk cache); the other three drive the
+# same boundaries the Rust front-end hardens.
+
+MASK64 = (1 << 64) - 1
+SITE_SEARCH_PANIC, SITE_SEARCH_SLOW, SITE_CACHE_IO, SITE_SOCK_RESET = \
+    range(4)
+_FAULT_KEYS = ("seed", "panic", "slow", "slow-ms", "cache-io",
+               "sock-reset")
+
+
+class InjectedFault(Exception):
+    """faults.rs::on_query_dispatch's panic, as an exception."""
+
+
+def fault_mix(seed, site, n):
+    """faults.rs::mix — splitmix64 finalizer over (seed, site, call)."""
+    z = (seed * 0x9E3779B97F4A7C15 + site * 0xBF58476D1CE4E5B9
+         + ((n + 0x94D049BB133111EB) & MASK64)) & MASK64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return z ^ (z >> 31)
+
+
+class FaultState:
+    def __init__(self, spec):
+        plan = {k: 0 for k in _FAULT_KEYS}
+        for tok in spec.split(","):
+            tok = tok.strip()
+            if not tok:
+                continue
+            if ":" not in tok:
+                raise ValueError(f"fault token {tok!r} is not key:value")
+            key, value = tok.split(":", 1)
+            key = key.strip()
+            if key not in plan:
+                raise ValueError(f"unknown fault key {key!r}")
+            if not value.strip().isdigit():
+                raise ValueError(
+                    f"fault value {value!r} is not an unsigned integer")
+            plan[key] = int(value)
+        for k in ("panic", "slow", "cache-io", "sock-reset"):
+            if plan[k] > 1_000_000:
+                raise ValueError(f"fault rate {plan[k]} exceeds 1000000")
+        self.seed = plan["seed"]
+        self.slow_ms = plan["slow-ms"]
+        self.rates = [plan["panic"], plan["slow"], plan["cache-io"],
+                      plan["sock-reset"]]
+        self.calls = [0] * 4
+        self._lock = threading.Lock()
+
+    def fires(self, site):
+        rate = self.rates[site]
+        if rate == 0:
+            return False
+        with self._lock:
+            n = self.calls[site]
+            self.calls[site] += 1
+        return fault_mix(self.seed, site, n) % 1_000_000 < rate
+
+
+_FAULTS = None
+_FAULTS_LOCK = threading.Lock()
+
+
+def faults():
+    """Process-wide fault state from OSDP_FAULTS; a malformed spec
+    exits 2 (a chaos run that silently injects nothing proves
+    nothing), exactly like faults.rs::global."""
+    global _FAULTS
+    with _FAULTS_LOCK:
+        if _FAULTS is None:
+            try:
+                _FAULTS = FaultState(os.environ.get("OSDP_FAULTS", ""))
+            except ValueError as e:
+                print(f"mirror: bad OSDP_FAULTS spec: {e}",
+                      file=sys.stderr)
+                sys.exit(2)
+        return _FAULTS
+
+
+def on_query_dispatch():
+    """faults.rs::on_query_dispatch — maybe sleep, maybe raise, before
+    any telemetry or cache accounting."""
+    st = faults()
+    if st.fires(SITE_SEARCH_SLOW):
+        time.sleep(max(st.slow_ms, 1) / 1000.0)
+    if st.fires(SITE_SEARCH_PANIC):
+        raise InjectedFault("injected fault: search panicked")
 
 
 def bucket_of(seconds):
@@ -317,6 +425,11 @@ def handle_line(service, telemetry, line):
         return (json.dumps({"ok": False, "error": "bad-request",
                             "detail": "query needs setting= mem= batch="}),
                 "continue")
+    # dispatch boundary: an injected panic fires BEFORE any query
+    # accounting, so a killed query counts nowhere and the telemetry
+    # invariants stay exact under chaos (mod.rs places the Rust hook
+    # at the top of query_seeded for the same reason)
+    on_query_dispatch()
     t0 = time.monotonic()
     if setting.startswith("nope"):
         telemetry.observe_query(False, time.monotonic() - t0,
@@ -377,14 +490,23 @@ class Frontend:
             self.conns.close()  # workers drain the queue, then exit
 
     def _work(self):
+        # frontend.rs worker loop: a panic anywhere in a served
+        # request unwinds out (the peer sees its connection drop,
+        # nothing more), is counted as a worker restart, and the same
+        # thread re-enters the dispatch loop — the pool can never
+        # shrink from panics
         while True:
-            conn = self.conns.recv()
-            if conn is None:
-                return
             try:
-                self._serve(conn)
-            finally:
-                conn.close()
+                while True:
+                    conn = self.conns.recv()
+                    if conn is None:
+                        return
+                    try:
+                        self._serve(conn)
+                    finally:
+                        conn.close()
+            except Exception:
+                self.telemetry.bump("worker_restarts")
 
     def _read_line(self, conn, buf):
         """read_request_line: assemble one line, cap at MAX_LINE,
@@ -451,6 +573,19 @@ class Frontend:
             self.telemetry.bump("requests")
             resp, outcome = handle_line(self.service, self.telemetry,
                                         line)
+            if faults().fires(SITE_SOCK_RESET):
+                # frontend.rs sock-reset: tear the response mid-line
+                # and slam the connection — after handle_line, so all
+                # accounting already happened; a torn `shutdown` ack
+                # must still shut down or chaos makes us immortal
+                raw = resp.encode()
+                try:
+                    conn.sendall(raw[:len(raw) // 2])
+                except OSError:
+                    pass
+                if outcome == "shutdown":
+                    self.shutdown()
+                return
             if not self._send(conn, resp):
                 return
             if outcome == "quit":

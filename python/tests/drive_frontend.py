@@ -22,6 +22,20 @@ The same assertions run against the pure-python mirror
 without a Rust toolchain, or against an already-running server
 (`--addr host:port` — skips the process-lifecycle checks).
 
+`--chaos [--fault-seed N]` starts the server under a deterministic
+`OSDP_FAULTS` plan (panicking searches, slow searches, cache I/O
+errors, mid-line socket resets) and replaces the exact-count phases
+with the survival contract CI's `fault-injection` job pins:
+
+1. the server stays responsive through the whole run (every request
+   eventually succeeds on retry — individual deaths are the point);
+2. `worker_restarts` goes positive: injected panics really crossed
+   the pool and the pool really resurrected;
+3. the telemetry invariants hold *exactly* under chaos — histogram
+   counts == queries, hits + misses == queries − rejected;
+4. `shutdown` is acknowledged (or a torn ack still shuts down) and
+   the process exits 0.
+
 Stdlib only; exits non-zero on any mismatch.
 """
 
@@ -32,6 +46,7 @@ import socket
 import subprocess
 import sys
 import threading
+import time
 
 SETTING = "gpt:3000,64,6,192,4"
 IDENTICAL = f"query setting={SETTING} mem=4 batch=2 threads=1"
@@ -68,6 +83,97 @@ def client(addr, lines, timeout=300.0):
     return out
 
 
+def try_request(addr, line, timeout=30.0):
+    """One chaos-tolerant request: None on connect failure, EOF,
+    truncation (a torn, non-newline-terminated fragment is exactly
+    what an injected sock-reset produces), or unparsable JSON."""
+    try:
+        with socket.create_connection(addr, timeout=timeout) as s:
+            f = s.makefile("rwb")
+            f.write(line.encode() + b"\n")
+            f.flush()
+            resp = f.readline()
+    except OSError:
+        return None
+    if not resp.endswith(b"\n"):
+        return None
+    try:
+        return json.loads(resp)
+    except ValueError:
+        return None
+
+
+def chaos(addr, proc, deadline_s=120.0):
+    """The fault-injected survival contract (driver side of the Rust
+    integration test rust/tests/fault_injection.rs)."""
+    deadline = time.monotonic() + deadline_s
+    lines = [
+        f"query setting={SETTING} mem={2.0 + 0.5 * (i % 4)} "
+        f"batch={1 + i % 2} threads=1"
+        for i in range(12)
+    ]
+
+    def ask(line):
+        while True:
+            doc = try_request(addr, line)
+            if doc is not None:
+                return doc
+            check(time.monotonic() < deadline,
+                  f"{line!r} never survived the fault plan")
+            time.sleep(0.02)
+
+    restarts, rounds = 0, 0
+    while True:
+        # a concurrent burst; individual requests may die to injected
+        # faults — the server as a whole must keep answering
+        threads = [threading.Thread(target=try_request, args=(addr, l))
+                   for l in lines]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        stats = ask("stats")
+        check(stats.get("kind") == "stats", "stats verb under chaos",
+              stats)
+        tele = stats["telemetry"]
+        check(stats["hits"] + stats["misses"]
+              == tele["queries"] - tele["rejected"],
+              "hits + misses == queries - rejected must survive chaos",
+              stats)
+        lat = tele["latency"]
+        check(lat["batch"]["count"] + lat["sweep"]["count"]
+              == tele["queries"],
+              "every query observed exactly once under chaos", stats)
+        restarts = tele.get("worker_restarts", 0)
+        rounds += 1
+        if restarts > 0 and rounds >= 2:
+            break
+        check(time.monotonic() < deadline,
+              f"no worker restart after {rounds} rounds "
+              "(injected panics are not reaching the pool)", stats)
+    print(f"chaos OK: {rounds} rounds, {restarts} worker restarts, "
+          "telemetry invariants exact")
+
+    # graceful shutdown despite resets: a torn ack still flips the
+    # server-side flag, so on transport failure probe the listener
+    while True:
+        ack = try_request(addr, "shutdown")
+        if ack is not None:
+            check(ack == {"kind": "shutdown", "ok": True},
+                  "shutdown ack under chaos", ack)
+            break
+        try:
+            socket.create_connection(addr, timeout=2).close()
+        except OSError:
+            break  # already draining
+        check(time.monotonic() < deadline, "shutdown never acknowledged")
+        time.sleep(0.02)
+    if proc is not None:
+        rc = proc.wait(timeout=120)
+        check(rc == 0, "server must exit 0 after chaos shutdown", rc)
+    print("OK: fault-injected serve path held end to end")
+
+
 def concurrent(addr, lines):
     """One thread + connection per line, released together."""
     barrier = threading.Barrier(len(lines))
@@ -94,7 +200,21 @@ def main():
     ap.add_argument("--mirror", action="store_true",
                     help="drive python/mirror/frontend_mirror.py")
     ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--chaos", action="store_true",
+                    help="run under a deterministic OSDP_FAULTS plan "
+                         "and assert the survival contract instead of "
+                         "the exact-count phases")
+    ap.add_argument("--fault-seed", type=int, default=1117,
+                    help="seed for the --chaos fault plan")
     args = ap.parse_args()
+
+    env = dict(os.environ)
+    if args.chaos:
+        env["OSDP_FAULTS"] = (
+            f"seed:{args.fault_seed},panic:60000,slow:40000,slow-ms:1,"
+            "cache-io:150000,sock-reset:40000"
+        )
+        print(f"chaos plan: {env['OSDP_FAULTS']}")
 
     proc = None
     if args.addr:
@@ -108,9 +228,16 @@ def main():
         elif args.bin:
             cmd = [args.bin, "serve", "--listen", "127.0.0.1:0",
                    "--workers", str(args.workers), "--metrics"]
+            if args.chaos:
+                # a disk cache so the injected cache-io faults actually
+                # exercise the bounded-retry persistence path
+                import tempfile
+                cmd += ["--cache-dir",
+                        tempfile.mkdtemp(prefix="osdp-chaos-")]
         else:
             ap.error("one of --bin, --addr, --mirror is required")
-        proc = subprocess.Popen(cmd, stdout=subprocess.PIPE, text=True)
+        proc = subprocess.Popen(cmd, stdout=subprocess.PIPE, text=True,
+                                env=env)
         banner = proc.stdout.readline()
         try:
             doc = json.loads(banner)
@@ -121,6 +248,10 @@ def main():
         host, port = doc["addr"].rsplit(":", 1)
         addr = (host, int(port))
         print(f"server listening on {doc['addr']}")
+
+    if args.chaos:
+        chaos(addr, proc)
+        return
 
     # ---- phase 1: 8 identical concurrent queries -> 1 planner run
     results = concurrent(addr, [IDENTICAL] * 8)

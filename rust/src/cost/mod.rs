@@ -115,6 +115,21 @@ impl Decision {
         Decision { scope, ..self }
     }
 
+    /// Project this decision onto another cluster's device hierarchy
+    /// (the elastic-replan primitive: an old plan's decisions become
+    /// projection targets on the new hardware). Two degradations:
+    /// pure DP shards nothing, so its scope canonicalizes to
+    /// [`Scope::Global`]; and a node-scoped decision on a cluster with
+    /// no multi-node structure has lost its group — it degrades to the
+    /// global scope, which on a single node is the same device set.
+    pub fn project(&self, cluster: &crate::config::Cluster) -> Decision {
+        if self.zdp_slices == 0 || !cluster.crosses_nodes() {
+            self.with_scope(Scope::Global)
+        } else {
+            *self
+        }
+    }
+
     /// Whether any state is sharded over the intra-node group only.
     pub fn is_node_scoped(&self) -> bool {
         self.scope == Scope::Node && self.zdp_slices > 0
@@ -175,6 +190,22 @@ mod tests {
         // pure DP shards nothing: the scope never shows in its label
         assert_eq!(Decision::DP.with_scope(Scope::Node).label(), "DP");
         assert!(!Decision::DP.with_scope(Scope::Node).is_node_scoped());
+    }
+
+    #[test]
+    fn projection_degrades_scope_with_the_hierarchy() {
+        let two_node = crate::config::Cluster::two_server_a100(16.0);
+        let one_node = crate::config::Cluster::rtx_titan(8, 8.0);
+        // node scope survives where nodes exist, degrades where not
+        assert_eq!(Decision::ZDP_NODE.project(&two_node),
+                   Decision::ZDP_NODE);
+        assert_eq!(Decision::ZDP_NODE.project(&one_node), Decision::ZDP);
+        // global decisions project to themselves everywhere
+        assert_eq!(Decision::zdp_at(4).project(&one_node),
+                   Decision::zdp_at(4));
+        // pure DP canonicalizes its (meaningless) scope
+        assert_eq!(Decision::DP.with_scope(Scope::Node).project(&two_node),
+                   Decision::DP);
     }
 
     #[test]

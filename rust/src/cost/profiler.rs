@@ -94,6 +94,32 @@ impl OpCostTable {
     pub fn min_time_fixed(&self) -> f64 {
         self.fastest().time_fixed()
     }
+
+    /// Menu index whose decision is nearest to `d` — exact when the
+    /// menu still offers it (distance zero is only achievable by
+    /// equality), else the deterministic nearest by a lexicographic
+    /// rank of (scope mismatch, |ZDP-fraction gap| as bits,
+    /// granularity gap, slice gap, index). The elastic-replan
+    /// projection maps each old-plan decision through this to seed
+    /// the new cluster's search; any choice is merely a seed, so
+    /// "nearest" only needs to be deterministic, not clever.
+    pub fn closest_option(&self, d: &Decision) -> usize {
+        self.options
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, o)| {
+                let od = &o.decision;
+                (
+                    od.scope != d.scope,
+                    (od.zdp_fraction() - d.zdp_fraction()).abs().to_bits(),
+                    od.granularity.abs_diff(d.granularity),
+                    od.zdp_slices.abs_diff(d.zdp_slices),
+                    *i,
+                )
+            })
+            .map(|(i, _)| i)
+            .expect("menus are never empty")
+    }
 }
 
 /// Evaluated cost of a full execution plan at a batch size.
@@ -402,6 +428,29 @@ mod tests {
         }
         assert!(p.menu_reduction().removed() > 0,
                 "the {{0,4}} menus must contain dominated entries");
+    }
+
+    #[test]
+    fn closest_option_is_exact_then_deterministic_nearest() {
+        let p = profiler(vec![0, 4]);
+        for t in &p.tables {
+            // every decision the menu offers maps back to itself
+            for (i, o) in t.options.iter().enumerate() {
+                assert_eq!(t.closest_option(&o.decision), i,
+                           "exact match must win in {}", t.name);
+            }
+            // a decision the menu cannot offer (finer than any
+            // granularity present) lands on the fraction-nearest one:
+            // 7/8 sharded is closer to ZDP (1.0) than to 3/4
+            let alien = Decision { granularity: 8, zdp_slices: 7,
+                                   scope: Scope::Global };
+            let near = &t.options[t.closest_option(&alien)].decision;
+            let gap = (near.zdp_fraction() - alien.zdp_fraction()).abs();
+            for o in &t.options {
+                assert!(gap <= (o.decision.zdp_fraction()
+                                - alien.zdp_fraction()).abs() + 1e-12);
+            }
+        }
     }
 
     #[test]

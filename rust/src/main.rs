@@ -21,8 +21,8 @@ use osdp::figures::{self, Quality};
 use osdp::metrics::{speedup, speedup_vs_best};
 use osdp::model::zoo;
 use osdp::planner::{Engine, ParallelConfig, Scheduler, parallel};
-use osdp::service::{Answer, CacheConfig, PlanError, PlanQuery, PlanService,
-                    QueryShape, server};
+use osdp::service::{Answer, CacheConfig, ClusterSpec, PlanError, PlanQuery,
+                    PlanService, QueryResponse, QueryShape, server};
 use osdp::train::{ShardMode, TrainConfig, train};
 
 fn main() {
@@ -88,6 +88,7 @@ fn main() {
         "plan" => plan(&args),
         "serve" => serve(&args),
         "query" => service_query(&args),
+        "replan" => service_replan(&args),
         "train" => run_train(&args),
         "calibrate" => calibrate(&args),
         "" | "help" | "--help" => usage(),
@@ -129,8 +130,9 @@ commands:
           [--workers N] [--warmup 8] [--idle-timeout-ms 30000]
           [--queue-cap 64] [--metrics]
           line-oriented plan service: one request per line in ('query
-          setting=48L/1024H mem=8 batch=4', 'sweep ...', 'stats',
-          'quit', 'shutdown'), one JSON document per line out. Identical
+          setting=48L/1024H mem=8 batch=4', 'sweep ...', 'replan ...
+          new-devices=4', 'stats', 'quit', 'shutdown'), one JSON
+          document per line out. Identical
           queries are answered from the plan cache, concurrent identical
           queries coalesce into one search, and cache misses warm-start
           from neighboring entries (provably bit-identical results).
@@ -150,6 +152,15 @@ commands:
           [--cache-dir D] [--json]
           one-shot request through the same plan service (a --cache-dir
           makes the cache persistent across invocations)
+  replan  --setting S (--batch B | [--batch-cap 64]) [query knobs...]
+          (--new-devices M | --new-cluster C | --new-mem G |
+           --sweep-clusters) [--cache-dir D] [--json]
+          elastic re-plan: the cached plan for the old cluster is
+          projected onto the changed hardware and warm-seeds a full
+          search there (bit-identical to a cold search, fewer nodes).
+          --sweep-clusters instead walks the rtx_titan device ladder
+          (N, N/2, ..., 1) re-planning each rung from the last feasible
+          one, and reports the smallest cluster the model still fits on
   fig5    [--mem 8] [--full] [--csv out.csv]
   fig6    [--mem 16] [--full] [--csv out.csv]
   fig6-scopes [--mem 16] [--full]    hybrid- vs global-scope planning on
@@ -448,7 +459,8 @@ fn serve(args: &Args) {
     } else {
         eprintln!("osdp serve: ready (one request per line; 'query \
                    setting=48L/1024H mem=8 batch=4', 'sweep ...', \
-                   'stats', 'quit', 'shutdown')");
+                   'replan ... new-devices=4', 'stats', 'quit', \
+                   'shutdown')");
         let stdin = std::io::stdin();
         let mut stdout = std::io::stdout();
         if let Err(e) = server::serve_loop_with(&service, Some(&telemetry),
@@ -469,6 +481,109 @@ fn service_query(args: &Args) {
     let q = plan_query_from_args(args);
     let service = PlanService::new(cache_config(args));
     let outcome = service.query(&q);
+    report_query_outcome(args, &service, outcome);
+}
+
+/// The changed cluster for `osdp replan`: the query's own cluster with
+/// the `--new-*` overrides applied. A preset change drops the old
+/// device count (it may not apply to the new topology); restate it via
+/// `--new-devices`.
+fn new_cluster_from_args(args: &Args, q: &PlanQuery) -> ClusterSpec {
+    let new_devices = args.usize_opt("new-devices");
+    let new_preset = args.get("new-cluster").map(str::to_string);
+    let new_mem = args.get("new-mem").map(|v| {
+        v.parse::<f64>().unwrap_or_else(|_| {
+            eprintln!("--new-mem: bad number '{v}'");
+            std::process::exit(2);
+        })
+    });
+    if new_devices.is_none() && new_preset.is_none() && new_mem.is_none()
+        && !args.flag("sweep-clusters")
+    {
+        eprintln!("replan needs at least one of --new-devices / \
+                   --new-cluster / --new-mem / --sweep-clusters");
+        std::process::exit(2);
+    }
+    ClusterSpec {
+        preset: new_preset
+            .clone()
+            .unwrap_or_else(|| q.cluster.preset.clone()),
+        devices: match (new_devices, &new_preset) {
+            (Some(d), _) => Some(d),
+            (None, Some(_)) => None,
+            (None, None) => q.cluster.devices,
+        },
+        mem_gib: new_mem.unwrap_or(q.cluster.mem_gib),
+    }
+}
+
+fn service_replan(args: &Args) {
+    let q = plan_query_from_args(args);
+    let new_cluster = new_cluster_from_args(args, &q);
+    let service = PlanService::new(cache_config(args));
+    if args.flag("sweep-clusters") {
+        let rungs = service.replan_sweep_clusters(&q, &new_cluster, None);
+        if args.flag("json") {
+            println!("{}", server::render_capacity(&rungs));
+            if rungs.is_err() {
+                std::process::exit(1);
+            }
+            return;
+        }
+        match rungs {
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+            Ok(rungs) => {
+                println!("capacity sweep ({} rungs):", rungs.len());
+                for r in &rungs {
+                    match &r.outcome {
+                        Ok(resp) => {
+                            let plan = match &resp.answer {
+                                Answer::Plan { plan, .. } => plan,
+                                Answer::Sweep { plans, best, .. } => {
+                                    &plans[*best]
+                                }
+                            };
+                            println!(
+                                "  N={:<4} b={:<3} -> {:>8.1} samples/s \
+                                 (peak {}, {})",
+                                r.devices,
+                                plan.batch,
+                                plan.throughput(resp.n_devices),
+                                osdp::util::fmt_bytes(plan.cost.peak_mem),
+                                resp.source.label(),
+                            );
+                        }
+                        Err(e) => println!("  N={:<4} -> {}", r.devices,
+                                           e.kind()),
+                    }
+                }
+                match rungs
+                    .iter()
+                    .filter(|r| r.outcome.is_ok())
+                    .map(|r| r.devices)
+                    .min()
+                {
+                    Some(min) => {
+                        println!("fits down to {min} devices");
+                    }
+                    None => {
+                        println!("no probed cluster fits this model");
+                        std::process::exit(1);
+                    }
+                }
+            }
+        }
+        return;
+    }
+    let outcome = service.replan(&q, &new_cluster);
+    report_query_outcome(args, &service, outcome);
+}
+
+fn report_query_outcome(args: &Args, service: &PlanService,
+                        outcome: Result<QueryResponse, PlanError>) {
     if args.flag("json") {
         println!("{}", server::render_response(&outcome));
         if outcome.is_err() {

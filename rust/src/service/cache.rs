@@ -100,6 +100,17 @@ pub struct StaleEntry {
     pub hits: u64,
 }
 
+/// What loading the disk file produced, beyond live entries: how many
+/// payloads were discarded as stale (wrong schema or epoch, or
+/// individually unparseable) and how many corrupt payloads were
+/// quarantined aside to `plan_cache.json.bad` for post-mortem instead
+/// of being silently dropped.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DiskLoad {
+    pub stale: u64,
+    pub quarantined: u64,
+}
+
 /// LRU plan cache. All counters live in the owning service's
 /// `ServiceStats`; this type only reports what happened per call.
 pub struct PlanCache {
@@ -110,17 +121,17 @@ pub struct PlanCache {
 
 impl PlanCache {
     /// Open a cache: empty, or primed from `disk_dir`'s
-    /// `plan_cache.json` when one exists. Returns the cache, the number
-    /// of entries rejected as stale (wrong schema/epoch or unparseable —
-    /// always the whole file or nothing), and the warm-up candidates
+    /// `plan_cache.json` when one exists. Returns the cache, a
+    /// [`DiskLoad`] report (stale rejections + quarantined corruption —
+    /// a hostile file never aborts startup), and the warm-up candidates
     /// harvested from an epoch-rejected file: the old entries cannot be
     /// *served*, but the ones that recorded their request line can be
     /// *re-planned* before the listener opens ([`super::PlanService::
     /// warm_up`]).
-    pub fn open(cfg: CacheConfig) -> (PlanCache, u64, Vec<StaleEntry>) {
+    pub fn open(cfg: CacheConfig) -> (PlanCache, DiskLoad, Vec<StaleEntry>) {
         let mut cache = PlanCache { cfg, map: HashMap::new(), tick: 0 };
-        let (stale, harvest) = cache.load_disk();
-        (cache, stale, harvest)
+        let (load, harvest) = cache.load_disk();
+        (cache, load, harvest)
     }
 
     pub fn len(&self) -> usize {
@@ -141,6 +152,13 @@ impl PlanCache {
             slot.hits += 1;
             &slot.value
         })
+    }
+
+    /// Look up a key **without** touching recency or popularity — the
+    /// replan path reads the old plan as projection material, which is
+    /// not a serve and must not perturb LRU order or warm-up ranking.
+    pub fn peek(&self, key: &QueryKey) -> Option<&CachedValue> {
+        self.map.get(key).map(|slot| &slot.value)
     }
 
     /// Drop an entry (a hit that failed validation).
@@ -267,21 +285,33 @@ impl PlanCache {
         }
     }
 
-    /// Load the disk file into the (empty) cache. Returns the stale
-    /// count — entries discarded because the file's schema or epoch does
-    /// not match, or the file/entries do not parse — plus the warm-up
-    /// candidates harvested from an epoch-rejected file.
-    fn load_disk(&mut self) -> (u64, Vec<StaleEntry>) {
-        let Some(path) = self.disk_path() else { return (0, vec![]) };
+    /// Load the disk file into the (empty) cache. Returns a
+    /// [`DiskLoad`] report — stale entries discarded because the file's
+    /// schema or epoch does not match or individual payloads do not
+    /// parse, plus how much corruption was quarantined to
+    /// `plan_cache.json.bad` — and the warm-up candidates harvested
+    /// from an epoch-rejected file. Never errors: a hostile file
+    /// demotes to an empty cache, never a failed startup.
+    fn load_disk(&mut self) -> (DiskLoad, Vec<StaleEntry>) {
+        let none = DiskLoad::default();
+        let Some(path) = self.disk_path() else { return (none, vec![]) };
         let Ok(text) = std::fs::read_to_string(&path) else {
-            return (0, vec![]);
+            return (none, vec![]);
         };
-        let Ok(doc) = Json::parse(&text) else { return (1, vec![]) };
+        // An unparseable or structurally wrong file (zero-length,
+        // torn by a pre-crash-safety writer, hand-edited) is moved
+        // aside whole: the evidence survives for post-mortem and the
+        // next persist cannot be shadowed by the corpse.
+        let doc = match Json::parse(&text) {
+            Ok(doc) if doc.get("entries").as_obj().is_some() => doc,
+            _ => {
+                quarantine_file(&path);
+                return (DiskLoad { stale: 1, quarantined: 1 }, vec![]);
+            }
+        };
         let schema = doc.get("schema").as_usize();
         let epoch = doc.get("epoch").as_usize();
-        let Some(entries) = doc.get("entries").as_obj() else {
-            return (1, vec![]);
-        };
+        let entries = doc.get("entries").as_obj().unwrap();
         if schema != Some(CACHE_SCHEMA_VERSION as usize)
             || epoch != Some(COST_MODEL_EPOCH as usize)
         {
@@ -295,9 +325,12 @@ impl PlanCache {
             } else {
                 vec![] // unknown schema: don't guess at field meanings
             };
-            return (entries.len() as u64, harvest);
+            let load = DiskLoad { stale: entries.len() as u64,
+                                  quarantined: 0 };
+            return (load, harvest);
         }
-        let mut stale = 0;
+        let mut load = none;
+        let mut bad = BTreeMap::new();
         for (id, v) in entries {
             match (QueryKey::from_id(id), value_from_json(v)) {
                 (Some(key), Some(value)) => {
@@ -310,11 +343,47 @@ impl PlanCache {
                             v.get("hits").as_usize().unwrap_or(0) as u64;
                     }
                 }
-                _ => stale += 1,
+                _ => {
+                    // a right-epoch file with an entry that does not
+                    // decode is real corruption, not staleness —
+                    // quarantine the payload instead of erasing it
+                    load.stale += 1;
+                    load.quarantined += 1;
+                    bad.insert(id.clone(), v.clone());
+                }
             }
         }
-        (stale, vec![])
+        if !bad.is_empty() {
+            quarantine_entries(&path, bad);
+        }
+        (load, vec![])
     }
+}
+
+/// Where corrupt cache material is parked (`plan_cache.json.bad`).
+fn quarantine_path(path: &std::path::Path) -> PathBuf {
+    path.with_extension("json.bad")
+}
+
+/// Move a wholly corrupt cache file aside. Best-effort: if even the
+/// rename fails (read-only dir), fall back to deleting so the corpse
+/// cannot shadow future persists; if that fails too, the per-entry
+/// validation at hit time still protects the query path.
+fn quarantine_file(path: &std::path::Path) {
+    if std::fs::rename(path, quarantine_path(path)).is_err() {
+        let _ = std::fs::remove_file(path);
+    }
+}
+
+/// Park individually corrupt entries (from an otherwise healthy file)
+/// in the quarantine file as their own JSON document. Best-effort.
+fn quarantine_entries(path: &std::path::Path, bad: BTreeMap<String, Json>) {
+    let mut doc = BTreeMap::new();
+    doc.insert("schema".to_string(), Json::Num(CACHE_SCHEMA_VERSION as f64));
+    doc.insert("epoch".to_string(), Json::Num(COST_MODEL_EPOCH as f64));
+    doc.insert("entries".to_string(), Json::Obj(bad));
+    let _ = std::fs::write(quarantine_path(path),
+                           json::to_string(&Json::Obj(doc)));
 }
 
 /// Warm-up candidate from one epoch-rejected disk entry: needs a
@@ -338,13 +407,27 @@ fn stale_entry_from_json(v: &Json) -> Option<StaleEntry> {
 
 /// Write a serialized cache image ([`PlanCache::serialize`]) to disk,
 /// creating the parent directory as needed.
+///
+/// Crash-safe: the document is written to a temp file **in the same
+/// directory** and renamed over the target, so the live file is only
+/// ever replaced by a complete image — a crash mid-write leaves at
+/// worst a truncated `.tmp` next to an intact cache, and the loader
+/// never reads `.tmp` files. Two racing persists both write full
+/// images, so last-rename-wins is sound (a loser whose temp was
+/// renamed out from under it reports an error and the caller retries).
 pub fn write_cache_file(path: &std::path::Path, doc: &str)
                         -> Result<(), String> {
+    if crate::util::faults::cache_write_fails() {
+        return Err(format!("writing {path:?}: injected cache-io fault"));
+    }
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)
             .map_err(|e| format!("creating {dir:?}: {e}"))?;
     }
-    std::fs::write(path, doc).map_err(|e| format!("writing {path:?}: {e}"))
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, doc).map_err(|e| format!("writing {tmp:?}: {e}"))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| format!("renaming {tmp:?} -> {path:?}: {e}"))
 }
 
 fn choice_to_json(choice: &[usize]) -> Json {
@@ -421,9 +504,9 @@ mod tests {
 
     #[test]
     fn lru_evicts_least_recently_used() {
-        let (mut cache, stale, harvest) =
+        let (mut cache, load, harvest) =
             PlanCache::open(CacheConfig { capacity: 2, disk_dir: None });
-        assert_eq!(stale, 0);
+        assert_eq!(load, DiskLoad::default());
         assert!(harvest.is_empty());
         assert!(cache.is_empty());
         assert_eq!(cache.insert(key(1, 8e9), plan(vec![0])), 0);
@@ -475,8 +558,8 @@ mod tests {
         ));
         let _ = std::fs::remove_dir_all(&dir);
         let cfg = CacheConfig { capacity: 16, disk_dir: Some(dir.clone()) };
-        let (mut cache, stale, _) = PlanCache::open(cfg.clone());
-        assert_eq!(stale, 0);
+        let (mut cache, load, _) = PlanCache::open(cfg.clone());
+        assert_eq!(load.stale, 0);
         cache.insert_requested(key(4, 8e9), plan(vec![0, 2, 1]),
                                Some("query setting=t mem=8 batch=4 g=0"
                                         .into()));
@@ -491,8 +574,8 @@ mod tests {
         assert!(cache.get(&key(4, 8e9)).is_some());
         cache.persist().unwrap();
 
-        let (mut reloaded, stale, harvest) = PlanCache::open(cfg.clone());
-        assert_eq!(stale, 0);
+        let (mut reloaded, load, harvest) = PlanCache::open(cfg.clone());
+        assert_eq!(load, DiskLoad::default());
         assert!(harvest.is_empty(), "same epoch: nothing to replay");
         assert_eq!(reloaded.len(), 3);
         assert_eq!(reloaded.get(&key(4, 8e9)),
@@ -515,10 +598,11 @@ mod tests {
         obj.insert("epoch".into(),
                    Json::Num((COST_MODEL_EPOCH + 1) as f64));
         std::fs::write(&path, json::to_string(&Json::Obj(obj))).unwrap();
-        let (stale_cache, stale, mut harvest) =
+        let (stale_cache, load, mut harvest) =
             PlanCache::open(cfg.clone());
         assert!(stale_cache.is_empty(), "stale epoch must load nothing");
-        assert_eq!(stale, 3);
+        assert_eq!(load.stale, 3);
+        assert_eq!(load.quarantined, 0, "stale is not corrupt");
         // the infeasible entry has no request/seed; the plan and sweep do
         harvest.sort_by(|a, b| b.hits.cmp(&a.hits));
         assert_eq!(harvest.len(), 2);
@@ -535,15 +619,122 @@ mod tests {
         obj2.insert("schema".into(),
                     Json::Num((CACHE_SCHEMA_VERSION + 1) as f64));
         std::fs::write(&path, json::to_string(&Json::Obj(obj2))).unwrap();
-        let (_, stale, harvest) = PlanCache::open(cfg.clone());
-        assert_eq!(stale, 3);
+        let (_, load, harvest) = PlanCache::open(cfg.clone());
+        assert_eq!(load.stale, 3);
         assert!(harvest.is_empty());
 
-        // and a garbage file counts as one stale rejection
+        // a garbage file counts as one stale rejection AND is
+        // quarantined aside so it cannot shadow the next persist
         std::fs::write(&path, "not json").unwrap();
-        let (garbage, stale, _) = PlanCache::open(cfg);
+        let (garbage, load, _) = PlanCache::open(cfg.clone());
         assert!(garbage.is_empty());
-        assert_eq!(stale, 1);
+        assert_eq!(load, DiskLoad { stale: 1, quarantined: 1 });
+        assert!(!path.exists(), "the corpse must not shadow persists");
+        assert_eq!(
+            std::fs::read_to_string(quarantine_path(&path)).unwrap(),
+            "not json",
+            "quarantine keeps the evidence"
+        );
+        // with the corpse gone, a fresh open is clean
+        let (_, load, _) = PlanCache::open(cfg);
+        assert_eq!(load, DiskLoad::default());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn zero_length_file_is_quarantined_not_fatal() {
+        let dir = std::env::temp_dir().join(format!(
+            "osdp-cache-test-{}-zero",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan_cache.json");
+        std::fs::write(&path, "").unwrap();
+        let cfg = CacheConfig { capacity: 4, disk_dir: Some(dir.clone()) };
+        let (cache, load, harvest) = PlanCache::open(cfg);
+        assert!(cache.is_empty());
+        assert_eq!(load, DiskLoad { stale: 1, quarantined: 1 });
+        assert!(harvest.is_empty());
+        assert!(!path.exists());
+        assert!(quarantine_path(&path).exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_entry_in_healthy_file_quarantines_just_the_payload() {
+        let dir = std::env::temp_dir().join(format!(
+            "osdp-cache-test-{}-entry",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = CacheConfig { capacity: 16, disk_dir: Some(dir.clone()) };
+        let (mut cache, _, _) = PlanCache::open(cfg.clone());
+        cache.insert(key(4, 8e9), plan(vec![0, 2, 1]));
+        cache.insert(key(2, 8e9), plan(vec![1, 1, 1]));
+        cache.persist().unwrap();
+        // rot one entry: kind becomes nonsense, the other must survive
+        let path = dir.join("plan_cache.json");
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap())
+            .unwrap();
+        let mut obj = doc.as_obj().unwrap().clone();
+        let entries = obj.get_mut("entries").unwrap();
+        let Json::Obj(e) = entries else { panic!() };
+        let rot_id = key(2, 8e9).id();
+        let mut rotted = BTreeMap::new();
+        rotted.insert("kind".to_string(), Json::Str("eldritch".into()));
+        e.insert(rot_id.clone(), Json::Obj(rotted));
+        std::fs::write(&path, json::to_string(&Json::Obj(obj))).unwrap();
+
+        let (mut reloaded, load, _) = PlanCache::open(cfg);
+        assert_eq!(load, DiskLoad { stale: 1, quarantined: 1 });
+        assert_eq!(reloaded.len(), 1, "healthy sibling survives");
+        assert!(reloaded.get(&key(4, 8e9)).is_some());
+        // the quarantine file carries exactly the rotted payload
+        let bad = Json::parse(
+            &std::fs::read_to_string(quarantine_path(&path)).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(
+            bad.get("entries").get(&rot_id).get("kind").as_str(),
+            Some("eldritch")
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn leftover_truncated_temp_never_shadows_the_live_file() {
+        let dir = std::env::temp_dir().join(format!(
+            "osdp-cache-test-{}-tmp",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = CacheConfig { capacity: 16, disk_dir: Some(dir.clone()) };
+        let (mut cache, _, _) = PlanCache::open(cfg.clone());
+        cache.insert(key(4, 8e9), plan(vec![0, 2, 1]));
+        cache.persist().unwrap();
+        let path = dir.join("plan_cache.json");
+        assert!(path.exists());
+        assert!(!path.with_extension("json.tmp").exists(),
+                "a successful write leaves no temp behind");
+
+        // simulate a crash mid-write: a torn temp next to a live file
+        let torn = &std::fs::read_to_string(&path).unwrap()[..10];
+        std::fs::write(path.with_extension("json.tmp"), torn).unwrap();
+        let (mut reloaded, load, _) = PlanCache::open(cfg.clone());
+        assert_eq!(load, DiskLoad::default(),
+                   "the loader never looks at temp files");
+        assert_eq!(reloaded.get(&key(4, 8e9)), Some(&plan(vec![0, 2, 1])));
+
+        // the next persist replaces the torn temp and the live file
+        // with complete images
+        reloaded.insert(key(2, 8e9), plan(vec![1, 1, 1]));
+        reloaded.persist().unwrap();
+        assert!(!path.with_extension("json.tmp").exists());
+        let (mut again, load, _) = PlanCache::open(cfg);
+        assert_eq!(load, DiskLoad::default());
+        assert_eq!(again.len(), 2);
+        assert!(again.get(&key(2, 8e9)).is_some());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

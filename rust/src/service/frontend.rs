@@ -33,6 +33,7 @@
 use super::server::{LineOutcome, handle_line_full};
 use super::telemetry::{Counter, Telemetry};
 use super::PlanService;
+use crate::util::sync::{lock_recover, wait_recover};
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -84,8 +85,17 @@ impl<T> Channel<T> {
     }
 
     /// Blocks while the channel is full; `Err(item)` if it was closed.
+    ///
+    /// All four channel entry points take the state lock through
+    /// [`lock_recover`]/[`wait_recover`]: a worker that panics while
+    /// holding it (resurrected panics are a designed-for event under
+    /// fault injection) poisons the mutex, and a bare `unwrap` here
+    /// would then wedge the acceptor and every surviving worker. The
+    /// queue itself is always structurally valid — each critical
+    /// section completes its `VecDeque` mutation before any code that
+    /// can unwind.
     pub fn send(&self, item: T) -> Result<(), T> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         loop {
             if st.closed {
                 return Err(item);
@@ -95,13 +105,13 @@ impl<T> Channel<T> {
                 self.not_empty.notify_one();
                 return Ok(());
             }
-            st = self.not_full.wait(st).unwrap();
+            st = wait_recover(&self.not_full, st);
         }
     }
 
     /// Blocks until an item arrives; `None` once closed **and** empty.
     pub fn recv(&self) -> Option<T> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         loop {
             if let Some(item) = st.queue.pop_front() {
                 self.not_full.notify_one();
@@ -110,18 +120,18 @@ impl<T> Channel<T> {
             if st.closed {
                 return None;
             }
-            st = self.not_empty.wait(st).unwrap();
+            st = wait_recover(&self.not_empty, st);
         }
     }
 
     pub fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        lock_recover(&self.state).closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
 
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().queue.len()
+        lock_recover(&self.state).queue.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -215,9 +225,31 @@ impl Frontend {
                 let shutdown = Arc::clone(&shutdown);
                 let idle = cfg.idle_timeout;
                 thread::spawn(move || {
-                    while let Some(stream) = conns.recv() {
-                        serve_connection(&service, &telemetry, &shutdown,
-                                         addr, stream, idle);
+                    // Self-healing dispatch: a panic anywhere in a
+                    // served request (a planner bug, an injected
+                    // fault) unwinds out of serve_connection — the
+                    // peer sees its connection drop, nothing more —
+                    // and the same OS thread re-enters the dispatch
+                    // loop. The pool can NEVER shrink from panics: the
+                    // existing PoisonGuard covers the coalesced
+                    // flight, this loop covers the thread.
+                    loop {
+                        let run = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| {
+                                while let Some(stream) = conns.recv() {
+                                    serve_connection(&service, &telemetry,
+                                                     &shutdown, addr,
+                                                     stream, idle);
+                                }
+                            }),
+                        );
+                        match run {
+                            // channel closed and drained: a clean exit
+                            Ok(()) => break,
+                            Err(_) => {
+                                telemetry.bump(Counter::WorkerRestarts);
+                            }
+                        }
                     }
                 })
             })
@@ -326,6 +358,26 @@ fn serve_connection(
                 telemetry.bump(Counter::Requests);
                 let (response, outcome) =
                     handle_line_full(service, Some(telemetry), line);
+                // Fault-injection boundary (`OSDP_FAULTS` sock-reset):
+                // tear the response mid-line and slam the connection —
+                // the client sees a truncated, non-newline-terminated
+                // fragment. Injected *after* handle_line_full so all
+                // accounting for the request is already done, exactly
+                // like a real reset between serve and flush.
+                if crate::util::faults::sock_reset_fires() {
+                    let torn = &response.as_bytes()[..response.len() / 2];
+                    let _ = writer.write_all(torn);
+                    let _ = writer.flush();
+                    // the verb's server-side effects already happened;
+                    // a torn `shutdown` ack must still shut down or
+                    // chaos could make the server immortal
+                    if matches!(outcome, LineOutcome::Shutdown)
+                        && !shutdown.swap(true, Ordering::SeqCst)
+                    {
+                        let _ = TcpStream::connect(addr);
+                    }
+                    return;
+                }
                 if writeln!(writer, "{response}").is_err()
                     || writer.flush().is_err()
                 {
@@ -452,6 +504,32 @@ mod tests {
         for h in handles {
             assert_eq!(h.join().unwrap(), None);
         }
+    }
+
+    #[test]
+    fn channel_survives_a_panic_while_holding_the_queue_lock() {
+        let ch: Arc<Channel<u32>> = Arc::new(Channel::bounded(4));
+        ch.send(1).unwrap();
+        // poison the state mutex the way a panicking worker would:
+        // die while holding it
+        let ch2 = Arc::clone(&ch);
+        let _ = thread::spawn(move || {
+            let _guard = ch2.state.lock().unwrap();
+            panic!("worker died holding the queue lock");
+        })
+        .join();
+        assert!(ch.state.lock().is_err(), "the mutex really is poisoned");
+        // every entry point must keep working: send, len, recv, and a
+        // blocked recv woken by close
+        ch.send(2).unwrap();
+        assert_eq!(ch.len(), 2);
+        assert_eq!(ch.recv(), Some(1));
+        assert_eq!(ch.recv(), Some(2));
+        let ch3 = Arc::clone(&ch);
+        let blocked = thread::spawn(move || ch3.recv());
+        thread::sleep(Duration::from_millis(30));
+        ch.close();
+        assert_eq!(blocked.join().unwrap(), None);
     }
 
     #[test]

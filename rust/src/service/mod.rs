@@ -31,14 +31,16 @@ pub mod cache;
 pub mod coalesce;
 pub mod frontend;
 pub mod key;
+pub mod replan;
 pub mod server;
 pub mod telemetry;
 pub mod warm;
 
-pub use cache::{CacheConfig, CachedValue, PlanCache, StaleEntry};
+pub use cache::{CacheConfig, CachedValue, DiskLoad, PlanCache, StaleEntry};
 pub use coalesce::Coalescer;
 pub use frontend::{Frontend, FrontendConfig};
 pub use key::{COST_MODEL_EPOCH, QueryKey, QueryShape, StructKey};
+pub use replan::CapacityCandidate;
 pub use server::{LineOutcome, Request, handle_line, handle_line_full,
                  request_line, serve_loop, serve_loop_with};
 pub use telemetry::{Counter, Telemetry, render_metrics};
@@ -49,6 +51,7 @@ use crate::model::ModelDesc;
 use crate::planner::scheduler::SweepStats;
 use crate::planner::{self, DfsStats, Engine, ExecutionPlan, ParallelConfig,
                      Scheduler};
+use crate::util::sync::lock_recover;
 use std::fmt;
 use std::sync::Mutex;
 
@@ -66,6 +69,12 @@ pub enum PlanError {
     InvalidCluster(String),
     /// Malformed or out-of-bounds request parameters.
     BadRequest(String),
+    /// A fault inside the service itself (a panicked flight leader, a
+    /// poisoned coalescer slot). Distinct from [`PlanError::BadRequest`]
+    /// because the *request* was fine: telemetry must not count it as a
+    /// rejection (the query already counted its cache miss, and
+    /// `hits + misses == queries − rejected` is a pinned invariant).
+    Internal(String),
 }
 
 impl PlanError {
@@ -76,6 +85,7 @@ impl PlanError {
             PlanError::UnknownSetting(_) => "unknown-setting",
             PlanError::InvalidCluster(_) => "invalid-cluster",
             PlanError::BadRequest(_) => "bad-request",
+            PlanError::Internal(_) => "internal",
         }
     }
 }
@@ -95,6 +105,7 @@ impl fmt::Display for PlanError {
             }
             PlanError::InvalidCluster(m) => write!(f, "invalid cluster: {m}"),
             PlanError::BadRequest(m) => write!(f, "bad request: {m}"),
+            PlanError::Internal(m) => write!(f, "internal error: {m}"),
         }
     }
 }
@@ -156,13 +167,26 @@ pub struct ServiceStats {
     /// b=1 completeness re-probes the structured scheduler verdict made
     /// unnecessary (each one used to be a full extra search).
     pub infeasible_probes_saved: u64,
+    /// Elastic replans served ([`PlanService::replan`]): an old plan
+    /// projected onto a changed cluster and re-searched.
+    pub replans: u64,
+    /// Replans whose projected seed needed greedy repair (or was
+    /// unrepairable) on the new cluster — the old plan did not fit
+    /// as-is.
+    pub replan_repairs: u64,
+    /// Transient cache-write failures absorbed by the bounded retry
+    /// loop (each retry that had to happen counts once).
+    pub cache_write_retries: u64,
+    /// Corrupt disk-cache payloads moved aside to `plan_cache.json.bad`
+    /// at startup instead of being served or silently dropped.
+    pub quarantined_entries: u64,
 }
 
 impl ServiceStats {
     /// Every counter with its stable wire name (the `stats` verb and
     /// the `--metrics` dump both render from this, so they cannot
     /// drift).
-    pub fn fields(&self) -> [(&'static str, u64); 11] {
+    pub fn fields(&self) -> [(&'static str, u64); 15] {
         [
             ("hits", self.hits),
             ("misses", self.misses),
@@ -175,6 +199,10 @@ impl ServiceStats {
             ("warm_infeasible", self.warm_infeasible),
             ("persist_errors", self.persist_errors),
             ("infeasible_probes_saved", self.infeasible_probes_saved),
+            ("replans", self.replans),
+            ("replan_repairs", self.replan_repairs),
+            ("cache_write_retries", self.cache_write_retries),
+            ("quarantined_entries", self.quarantined_entries),
         ]
     }
 
@@ -476,12 +504,13 @@ impl PlanService {
     /// but whose request lines can be replayed —
     /// [`PlanService::warm_up`]). [`PlanService::new`] discards them.
     pub fn open(cfg: CacheConfig) -> (PlanService, Vec<StaleEntry>) {
-        let (cache, stale, harvest) = PlanCache::open(cfg);
+        let (cache, load, harvest) = PlanCache::open(cfg);
         let service = PlanService {
             inner: Mutex::new(Inner {
                 cache,
                 stats: ServiceStats {
-                    stale_rejected: stale,
+                    stale_rejected: load.stale,
+                    quarantined_entries: load.quarantined,
                     ..Default::default()
                 },
                 dirty: false,
@@ -497,12 +526,12 @@ impl PlanService {
     }
 
     pub fn stats(&self) -> ServiceStats {
-        self.inner.lock().unwrap().stats
+        lock_recover(&self.inner).stats
     }
 
     /// Cached entry count (observability; the `stats` protocol verb).
     pub fn cache_len(&self) -> usize {
-        self.inner.lock().unwrap().cache.len()
+        lock_recover(&self.inner).cache.len()
     }
 
     /// Epoch-bump warm-up: replay the hottest `k` queries harvested
@@ -526,11 +555,21 @@ impl PlanService {
             failed: 0,
         };
         for entry in ranked {
+            // Each replay is unwind-contained: warm-up runs *before*
+            // the listener opens, on the main thread, where a panicked
+            // search (e.g. an injected fault) would otherwise abort
+            // the whole `osdp serve` startup. A crashed replay is just
+            // a failed warm-up candidate.
             let replayed = match server::parse_request(&entry.request) {
-                Ok(Request::Query(q)) => matches!(
-                    self.query_seeded(&q, Some(&entry.seed)),
-                    Ok(_) | Err(PlanError::Infeasible { .. })
-                ),
+                Ok(Request::Query(q)) => std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| {
+                        matches!(
+                            self.query_seeded(&q, Some(&entry.seed)),
+                            Ok(_) | Err(PlanError::Infeasible { .. })
+                        )
+                    }),
+                )
+                .unwrap_or(false),
                 _ => false,
             };
             if replayed {
@@ -562,6 +601,12 @@ impl PlanService {
     /// infeasible seed is simply ignored.
     pub fn query_seeded(&self, q: &PlanQuery, seed: Option<&[usize]>)
                         -> Result<QueryResponse, PlanError> {
+        // Fault-injection boundary (`OSDP_FAULTS`): may sleep, may
+        // panic. Deliberately *before* any accounting — an injected
+        // crash must leave every counter exactly as if the query had
+        // never arrived, so the telemetry invariants survive chaos
+        // runs bit-for-bit. A no-op branch when faults are disabled.
+        crate::util::faults::on_query_dispatch();
         q.validate()?;
         let cluster = q.cluster.resolve()?;
         let model = resolve_setting(&q.setting)?;
@@ -570,7 +615,7 @@ impl PlanService {
 
         // ---- cache fast path
         {
-            let mut guard = self.inner.lock().unwrap();
+            let mut guard = lock_recover(&self.inner);
             // reborrow so cache/stats borrows stay field-disjoint
             let inner = &mut *guard;
             if let Some(v) = inner.cache.get(&key) {
@@ -592,9 +637,8 @@ impl PlanService {
         // ---- single-flight the planner run; a leader that unwinds
         // resolves its flight with the poison error so waiters never
         // hang (coalesce.rs)
-        let poison: FlightValue = Err(PlanError::BadRequest(
-            "internal error: the planning leader panicked".into(),
-        ));
+        let poison: FlightValue =
+            Err(PlanError::Internal("the planning leader panicked".into()));
         let mut led_outcome: Option<(Answer, Source)> = None;
         let (value, led) = self.coalescer.run(&key.id(), poison, || {
             match self.plan_miss(&profiler, q, &key, seed) {
@@ -620,7 +664,7 @@ impl PlanService {
                                                Source::Cold, complete),
             }
         } else {
-            self.inner.lock().unwrap().stats.coalesced += 1;
+            lock_recover(&self.inner).stats.coalesced += 1;
             let (value, complete) = value?;
             self.answer_from_value(&profiler, key, value,
                                    Source::Coalesced, complete)
@@ -641,7 +685,7 @@ impl PlanService {
         // concurrent identical queries -> exactly one planner
         // execution" a guarantee rather than a likelihood.
         {
-            let mut guard = self.inner.lock().unwrap();
+            let mut guard = lock_recover(&self.inner);
             let inner = &mut *guard;
             if let Some(v) = inner.cache.get(key) {
                 if v.validates_against(profiler) {
@@ -685,7 +729,7 @@ impl PlanService {
             explicit_seed
         } else if q.warm {
             let neighbor =
-                self.inner.lock().unwrap().cache.neighbor(key);
+                lock_recover(&self.inner).cache.neighbor(key);
             neighbor.and_then(|(choice, _nb)| {
                 // Repair the neighbor once here (greedy downgrades until
                 // it fits — `greedy::search_from`). Single-batch queries
@@ -706,7 +750,7 @@ impl PlanService {
                         QueryShape::Sweep { .. } => choice,
                     }),
                     None => {
-                        self.inner.lock().unwrap().stats.warm_infeasible +=
+                        lock_recover(&self.inner).stats.warm_infeasible +=
                             1;
                         None
                     }
@@ -721,7 +765,7 @@ impl PlanService {
             Source::Cold
         };
         {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = lock_recover(&self.inner);
             inner.stats.planner_runs += 1;
             if warm_choice.is_some() {
                 inner.stats.warm_seeded += 1;
@@ -867,7 +911,7 @@ impl PlanService {
 
     fn store(&self, key: QueryKey, value: CachedValue,
              request: Option<String>) {
-        let mut guard = self.inner.lock().unwrap();
+        let mut guard = lock_recover(&self.inner);
         let inner = &mut *guard;
         inner.stats.inserts += 1;
         inner.stats.evictions +=
@@ -883,9 +927,15 @@ impl PlanService {
     /// is cleared optimistically and restored on a failed write (and a
     /// store racing the write re-sets it, so its data is re-persisted
     /// next time).
+    ///
+    /// Transient write failures (a flaky disk, a racing persist whose
+    /// rename stole the temp file, an injected `cache-io` fault) get a
+    /// bounded retry with short backoff — `cache_write_retries` counts
+    /// each one — before the service gives up, restores the dirty flag,
+    /// and degrades to memory-only until the next store tries again.
     fn persist(&self) {
         let snapshot = {
-            let mut guard = self.inner.lock().unwrap();
+            let mut guard = lock_recover(&self.inner);
             let inner = &mut *guard;
             if !inner.dirty {
                 return;
@@ -894,11 +944,21 @@ impl PlanService {
             inner.cache.serialize()
         };
         let Some((path, doc)) = snapshot else { return };
-        if cache::write_cache_file(&path, &doc).is_err() {
-            let mut guard = self.inner.lock().unwrap();
-            guard.dirty = true;
-            guard.stats.persist_errors += 1;
+        const ATTEMPTS: u32 = 3;
+        for attempt in 0..ATTEMPTS {
+            if cache::write_cache_file(&path, &doc).is_ok() {
+                return;
+            }
+            if attempt + 1 < ATTEMPTS {
+                lock_recover(&self.inner).stats.cache_write_retries += 1;
+                std::thread::sleep(std::time::Duration::from_millis(
+                    1 << attempt,
+                ));
+            }
         }
+        let mut guard = lock_recover(&self.inner);
+        guard.dirty = true;
+        guard.stats.persist_errors += 1;
     }
 
     /// Rebuild a served answer from a cached or flight-shared value
@@ -977,6 +1037,7 @@ mod tests {
             (PlanError::UnknownSetting("x".into()), "unknown-setting"),
             (PlanError::InvalidCluster("y".into()), "invalid-cluster"),
             (PlanError::BadRequest("z".into()), "bad-request"),
+            (PlanError::Internal("w".into()), "internal"),
         ] {
             assert_eq!(e.kind(), kind);
             assert!(!e.to_string().is_empty());

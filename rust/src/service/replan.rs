@@ -1,0 +1,280 @@
+//! Elastic re-planning: answer "the cluster just changed under this
+//! plan" as a service primitive (ROADMAP item 5).
+//!
+//! The failover planner was already built — it just wasn't exposed.
+//! The warm-start machinery ([`super::warm`], `greedy::search_from`,
+//! `offer_warm`) accepts *any* choice vector, repairs it to
+//! feasibility by greedy downgrades, and installs it as the initial
+//! incumbent of a **full** search, provably without changing the
+//! answer. So device loss, device join, a node dropping out of a
+//! [`crate::cost::Scope::Node`] group, or whole-node loss all reduce
+//! to the same move:
+//!
+//! 1. look up the old cluster's cached choice vector (the exact key,
+//!    or its nearest structural neighbor),
+//! 2. **project** each decision onto the new cluster
+//!    ([`crate::cost::Decision::project`] degrades scopes the new
+//!    hierarchy cannot express, then
+//!    [`crate::cost::OpCostTable::closest_option`] maps it into the
+//!    new profiler's menu — exact when offered, deterministic-nearest
+//!    otherwise),
+//! 3. hand the projected vector to [`super::PlanService::query_seeded`]
+//!    as a warm seed, which greedy-repairs it at the gate batch and
+//!    runs the full search on the new cluster.
+//!
+//! Because a seed only ever *prunes* (the engines discard an incumbent
+//! the moment anything beats it — the [`super::warm`] proof), the
+//! replanned answer is **bit-identical to a cold search on the new
+//! cluster**; the old plan only buys visited-node savings. That
+//! property is pinned in `rust/tests/replan_service.rs` at 1 and 8
+//! threads.
+//!
+//! The capacity sweep ([`PlanService::replan_sweep_clusters`]) runs the
+//! inverse query — "what hardware does this model still fit on?" — by
+//! walking a device-count ladder downward, re-planning each rung from
+//! the last feasible one so the seeds cascade.
+
+use super::{CachedValue, ClusterSpec, PlanError, PlanQuery, PlanService,
+            QueryKey, QueryResponse, QueryShape, Telemetry, resolve_setting};
+use crate::cost::Profiler;
+use crate::planner;
+use crate::util::sync::lock_recover;
+
+/// One rung of a capacity sweep: the device count probed and what
+/// re-planning onto it produced (`Err(Infeasible)` rungs are the
+/// point — they locate the hardware floor).
+#[derive(Debug)]
+pub struct CapacityCandidate {
+    pub devices: usize,
+    pub outcome: Result<QueryResponse, PlanError>,
+}
+
+/// Project an old profiler's choice vector onto a new profiler's
+/// menus, decision by decision. `None` when the vectors cannot
+/// correspond (different op counts — a different model or search
+/// config, not a cluster change — or an out-of-menu index).
+pub fn project_choice(old: &Profiler, choice: &[usize],
+                      new: &Profiler) -> Option<Vec<usize>> {
+    if old.n_ops() != new.n_ops() || choice.len() != old.n_ops() {
+        return None;
+    }
+    let mut out = Vec::with_capacity(choice.len());
+    for ((&c, ot), nt) in choice.iter().zip(&old.tables).zip(&new.tables) {
+        let d = ot.options.get(c)?.decision;
+        out.push(nt.closest_option(&d.project(&new.cluster)));
+    }
+    Some(out)
+}
+
+impl PlanService {
+    /// Re-plan `old` onto `new_cluster`: the old cluster's cached
+    /// answer (or nearest neighbor) is projected onto the new
+    /// hardware and warm-seeds a full search there. Returns exactly
+    /// what a cold [`PlanService::query`] on the new cluster would —
+    /// bit-identical plan, same cache/coalescing behavior — typically
+    /// for fewer visited nodes. Counts `replans` (and
+    /// `replan_repairs` when the projected plan needed greedy repair
+    /// to fit the new hardware).
+    pub fn replan(&self, old: &PlanQuery, new_cluster: &ClusterSpec)
+                  -> Result<QueryResponse, PlanError> {
+        old.validate()?;
+        let old_resolved = old.cluster.resolve()?;
+        let new_resolved = new_cluster.resolve()?;
+        let new_q = PlanQuery { cluster: new_cluster.clone(), ..old.clone() };
+        if old_resolved == new_resolved {
+            // same hardware under a different spelling: nothing to
+            // project, but it is still a (degenerate) replan
+            lock_recover(&self.inner).stats.replans += 1;
+            return self.query(&new_q);
+        }
+        let model = resolve_setting(&old.setting)?;
+        let old_profiler = Profiler::new(&model, &old_resolved, &old.search);
+        let old_key = QueryKey::for_query(&old_profiler,
+                                          old_resolved.mem_limit, old.shape);
+        // the old plan: exact entry first (peek — reading projection
+        // material is not a serve and must not touch LRU order), else
+        // the nearest structural neighbor on the old cluster
+        let old_choice: Option<Vec<usize>> = {
+            let guard = lock_recover(&self.inner);
+            match guard.cache.peek(&old_key) {
+                Some(CachedValue::Plan { choice }) => Some(choice.clone()),
+                Some(CachedValue::Sweep { choices, best }) => {
+                    choices.get(*best).cloned()
+                }
+                // cached infeasibility has no plan to carry over; a
+                // cold miss falls back to the neighbor heuristic
+                _ => guard.cache.neighbor(&old_key).map(|(c, _)| c),
+            }
+        };
+        let old_choice = old_choice.filter(|c| {
+            CachedValue::Plan { choice: c.clone() }
+                .validates_against(&old_profiler)
+        });
+        let new_profiler = Profiler::new(&model, &new_resolved, &old.search);
+        let seed = old_choice.as_ref().and_then(|c| {
+            project_choice(&old_profiler, c, &new_profiler)
+        });
+        // did the old plan survive the move as-is? Repair the
+        // projected vector at the gate batch exactly the way the
+        // seeded search will; a changed (or unrepairable) vector
+        // means the new hardware could not hold the old plan.
+        let repaired = seed.as_ref().map(|s| {
+            let b_gate = match old.shape {
+                QueryShape::Batch(b) => b,
+                QueryShape::Sweep { .. } => 1,
+            };
+            match planner::greedy_search_from(&new_profiler,
+                                              new_resolved.mem_limit,
+                                              b_gate, s)
+            {
+                Some((r, _)) => r != *s,
+                None => true,
+            }
+        });
+        {
+            let mut guard = lock_recover(&self.inner);
+            guard.stats.replans += 1;
+            if repaired == Some(true) {
+                guard.stats.replan_repairs += 1;
+            }
+        }
+        self.query_seeded(&new_q, seed.as_deref())
+    }
+
+    /// Capacity sweep (the inverse query): starting from `start`'s
+    /// device count, halve the cluster rung by rung down to one
+    /// device, re-planning onto each rung **from the last feasible
+    /// one** so warm seeds cascade down the ladder. Every rung's
+    /// verdict is returned — the feasible rungs say what the model
+    /// still fits on, the infeasible ones where the wall is. Only the
+    /// size-parametric `rtx_titan` preset can sweep (the two-server
+    /// topology is fixed hardware).
+    ///
+    /// Each rung is one real query; when `telemetry` is given it is
+    /// observed per rung, so the pinned invariants (histogram counts
+    /// == queries; hits + misses == queries − rejected) hold through
+    /// a sweep exactly as through individual queries.
+    pub fn replan_sweep_clusters(
+        &self,
+        old: &PlanQuery,
+        start: &ClusterSpec,
+        telemetry: Option<&Telemetry>,
+    ) -> Result<Vec<CapacityCandidate>, PlanError> {
+        if start.preset != "rtx_titan" {
+            return Err(PlanError::BadRequest(format!(
+                "sweep-clusters needs the size-parametric rtx_titan \
+                 preset (got '{}')",
+                start.preset
+            )));
+        }
+        old.validate()?;
+        start.resolve()?;
+        let mut q = old.clone();
+        let mut devices = start.devices.unwrap_or(8);
+        let mut rungs = Vec::new();
+        loop {
+            let spec = ClusterSpec {
+                preset: "rtx_titan".into(),
+                devices: Some(devices),
+                mem_gib: start.mem_gib,
+            };
+            let started = std::time::Instant::now();
+            let outcome = self.replan(&q, &spec);
+            if let Some(t) = telemetry {
+                t.observe_query(
+                    matches!(q.shape, QueryShape::Sweep { .. }),
+                    started.elapsed().as_secs_f64(),
+                    &outcome,
+                );
+            }
+            let feasible = outcome.is_ok();
+            rungs.push(CapacityCandidate { devices, outcome });
+            if feasible {
+                q.cluster = spec;
+            }
+            if devices == 1 {
+                return Ok(rungs);
+            }
+            devices /= 2;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Cluster, SearchConfig};
+    use crate::model::{GptDims, build_gpt};
+
+    fn profiler_for(cluster: &Cluster, grans: Vec<usize>) -> Profiler {
+        let m = build_gpt(&GptDims::uniform("t", 1000, 64, 2, 128, 4));
+        let s = SearchConfig { granularities: grans,
+                               ..Default::default() };
+        Profiler::new(&m, cluster, &s)
+    }
+
+    #[test]
+    fn projection_round_trips_between_cluster_sizes() {
+        // g=[0] menus hold exactly one pure-DP and one pure-ZDP entry,
+        // so the extremes are unambiguous on both clusters
+        let eight = profiler_for(&Cluster::rtx_titan(8, 8.0), vec![0]);
+        let four = profiler_for(&Cluster::rtx_titan(4, 8.0), vec![0]);
+        let dp = eight.index_of(|d| d.is_pure_dp());
+        let zdp = eight.index_of(|d| d.is_pure_zdp());
+        assert_eq!(project_choice(&eight, &dp, &four).unwrap(),
+                   four.index_of(|d| d.is_pure_dp()));
+        assert_eq!(project_choice(&eight, &zdp, &four).unwrap(),
+                   four.index_of(|d| d.is_pure_zdp()));
+        // projecting onto the same cluster is the identity, menus of
+        // any granularity
+        let rich = profiler_for(&Cluster::rtx_titan(8, 8.0), vec![0, 2]);
+        let z = rich.index_of(|d| d.is_pure_zdp());
+        assert_eq!(project_choice(&rich, &z, &rich).unwrap(), z);
+    }
+
+    #[test]
+    fn projection_degrades_node_scope_to_single_node_hardware() {
+        let two_node =
+            profiler_for(&Cluster::two_server_a100(16.0), vec![0]);
+        let one_node = profiler_for(&Cluster::rtx_titan(8, 8.0), vec![0]);
+        let node_scoped =
+            two_node.index_of(|d| d.is_pure_zdp() && d.is_node_scoped());
+        let projected =
+            project_choice(&two_node, &node_scoped, &one_node).unwrap();
+        let mut scoped_ops = 0;
+        for i in 0..one_node.n_ops() {
+            // index_of falls back to option 0 where a menu offers no
+            // node-scoped ZDP; only ops that really started node-scoped
+            // exercise the degradation
+            let src = two_node.tables[i].options[node_scoped[i]].decision;
+            if !src.is_node_scoped() {
+                continue;
+            }
+            scoped_ops += 1;
+            let d = one_node.tables[i].options[projected[i]].decision;
+            assert!(!d.is_node_scoped(),
+                    "no node scope exists on one node");
+            assert!(d.is_pure_zdp(), "sharding fraction preserved");
+        }
+        assert!(scoped_ops > 0,
+                "two-server menus must offer node-scoped ZDP somewhere");
+    }
+
+    #[test]
+    fn projection_rejects_mismatched_op_counts() {
+        let p8 = profiler_for(&Cluster::rtx_titan(8, 8.0), vec![0, 2]);
+        let other_model =
+            build_gpt(&GptDims::uniform("u", 1000, 64, 4, 128, 4));
+        let s = SearchConfig { granularities: vec![0, 2],
+                               ..Default::default() };
+        let po = Profiler::new(&other_model, &Cluster::rtx_titan(4, 8.0),
+                               &s);
+        let dp = p8.index_of(|d| d.is_pure_dp());
+        assert!(project_choice(&p8, &dp, &po).is_none());
+        assert!(project_choice(&p8, &dp[..1], &p8).is_none(),
+                "wrong-length vectors cannot correspond");
+        let wild = vec![usize::MAX; p8.n_ops()];
+        assert!(project_choice(&p8, &wild, &p8).is_none(),
+                "out-of-menu indices cannot project");
+    }
+}

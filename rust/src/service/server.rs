@@ -9,6 +9,9 @@
 //!       [g=0,4] [engine=frontier|bb] [threads=N] [ckpt] [fine]
 //!       [no-scopes] [no-warm]
 //! sweep setting=48L/1024H mem=8 [batch-cap=64] [...same knobs]
+//! replan setting=... mem=... {batch=N | batch-cap=N} [...same knobs]
+//!        [new-devices=M] [new-cluster=PRESET] [new-mem=G]
+//!        [sweep-clusters]
 //! stats
 //! quit
 //! shutdown
@@ -40,6 +43,14 @@ use std::time::Instant;
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     Query(PlanQuery),
+    /// Elastic replan: the old query (whose cluster just changed) plus
+    /// the cluster it changed *to*; `sweep_clusters` swaps the single
+    /// replan for a capacity sweep down the device-count ladder.
+    Replan {
+        query: PlanQuery,
+        new_cluster: super::ClusterSpec,
+        sweep_clusters: bool,
+    },
     Stats,
     Quit,
     Shutdown,
@@ -67,10 +78,10 @@ pub fn parse_request(line: &str) -> Result<Request, PlanError> {
         "stats" => Ok(Request::Stats),
         "quit" | "exit" => Ok(Request::Quit),
         "shutdown" => Ok(Request::Shutdown),
-        "query" | "sweep" => parse_query(verb, toks),
+        "query" | "sweep" | "replan" => parse_query(verb, toks),
         other => Err(PlanError::BadRequest(format!(
-            "unknown verb '{other}' (query | sweep | stats | quit | \
-             shutdown)"
+            "unknown verb '{other}' (query | sweep | replan | stats | \
+             quit | shutdown)"
         ))),
     }
 }
@@ -81,7 +92,12 @@ fn parse_query<'a>(verb: &str, toks: impl Iterator<Item = &'a str>)
     let mut q = PlanQuery::batch("", 8.0, 1);
     let mut setting = None;
     let mut batch = None;
-    let mut batch_cap = 64usize;
+    let mut batch_cap = None;
+    // replan-only: the cluster the hardware changed to
+    let mut new_devices = None;
+    let mut new_mem = None;
+    let mut new_preset: Option<String> = None;
+    let mut sweep_clusters = false;
     for tok in toks {
         match tok.split_once('=') {
             Some(("setting", v)) => setting = Some(v.to_string()),
@@ -107,16 +123,30 @@ fn parse_query<'a>(verb: &str, toks: impl Iterator<Item = &'a str>)
                 })?;
             }
             Some(("threads", v)) => q.threads = parse_usize("threads", v)?,
-            Some(("batch", v)) if verb == "query" => {
+            Some(("batch", v)) if verb != "sweep" => {
                 batch = Some(parse_usize("batch", v)?);
             }
-            Some(("batch-cap", v)) if verb == "sweep" => {
-                batch_cap = parse_usize("batch-cap", v)?;
+            Some(("batch-cap", v)) if verb != "query" => {
+                batch_cap = Some(parse_usize("batch-cap", v)?);
+            }
+            Some(("new-devices", v)) if verb == "replan" => {
+                new_devices = Some(parse_usize("new-devices", v)?);
+            }
+            Some(("new-mem", v)) if verb == "replan" => {
+                new_mem = Some(v.parse::<f64>().map_err(|_| {
+                    bad(format!("new-mem: bad number '{v}'"))
+                })?);
+            }
+            Some(("new-cluster", v)) if verb == "replan" => {
+                new_preset = Some(v.to_string());
             }
             None if tok == "ckpt" => q.search.checkpointing = true,
             None if tok == "fine" => q.search.paper_granularity = false,
             None if tok == "no-scopes" => q.search.hybrid_scopes = false,
             None if tok == "no-warm" => q.warm = false,
+            None if tok == "sweep-clusters" && verb == "replan" => {
+                sweep_clusters = true;
+            }
             _ => {
                 return Err(bad(format!(
                     "unexpected parameter '{tok}' for '{verb}'"
@@ -132,9 +162,47 @@ fn parse_query<'a>(verb: &str, toks: impl Iterator<Item = &'a str>)
         "query" => QueryShape::Batch(
             batch.ok_or_else(|| bad("query needs batch=N".to_string()))?,
         ),
-        _ => QueryShape::Sweep { max_batch: batch_cap },
+        "replan" => match (batch, batch_cap) {
+            (Some(b), None) => QueryShape::Batch(b),
+            (None, Some(cap)) => QueryShape::Sweep { max_batch: cap },
+            (Some(_), Some(_)) => {
+                return Err(bad("replan takes batch=N or batch-cap=N, \
+                                not both"
+                    .to_string()));
+            }
+            (None, None) => {
+                return Err(bad(
+                    "replan needs batch=N or batch-cap=N".to_string()
+                ));
+            }
+        },
+        _ => QueryShape::Sweep { max_batch: batch_cap.unwrap_or(64) },
     };
-    Ok(Request::Query(q))
+    if verb != "replan" {
+        return Ok(Request::Query(q));
+    }
+    if new_devices.is_none() && new_mem.is_none() && new_preset.is_none()
+        && !sweep_clusters
+    {
+        return Err(bad("replan needs at least one of new-devices= / \
+                        new-cluster= / new-mem= / sweep-clusters"
+            .to_string()));
+    }
+    let new_cluster = super::ClusterSpec {
+        preset: new_preset
+            .clone()
+            .unwrap_or_else(|| q.cluster.preset.clone()),
+        devices: match (new_devices, &new_preset) {
+            (Some(d), _) => Some(d),
+            // a preset change invalidates the old device count (the
+            // new preset may not be size-parametric); it must be
+            // restated explicitly via new-devices
+            (None, Some(_)) => None,
+            (None, None) => q.cluster.devices,
+        },
+        mem_gib: new_mem.unwrap_or(q.cluster.mem_gib),
+    };
+    Ok(Request::Replan { query: q, new_cluster, sweep_clusters })
 }
 
 fn parse_usize(key: &str, v: &str) -> Result<usize, PlanError> {
@@ -280,6 +348,84 @@ pub fn render_response(outcome: &Result<QueryResponse, PlanError>)
     json::to_string(&Json::Obj(o))
 }
 
+/// Render a capacity sweep: one compact candidate object per rung of
+/// the device ladder, plus `fits_min_devices` — the smallest cluster
+/// that still held a feasible plan (`null` when nothing fit).
+pub fn render_capacity(
+    rungs: &Result<Vec<super::CapacityCandidate>, PlanError>,
+) -> String {
+    let mut o = BTreeMap::new();
+    match rungs {
+        Err(e) => {
+            o.insert("ok".into(), Json::Bool(false));
+            o.insert("error".into(), Json::Str(e.kind().into()));
+            o.insert("detail".into(), Json::Str(e.to_string()));
+        }
+        Ok(rungs) => {
+            o.insert("ok".into(), Json::Bool(true));
+            o.insert("kind".into(), Json::Str("capacity".into()));
+            o.insert(
+                "fits_min_devices".into(),
+                rungs
+                    .iter()
+                    .filter(|r| r.outcome.is_ok())
+                    .map(|r| r.devices)
+                    .min()
+                    .map_or(Json::Null, |d| Json::Num(d as f64)),
+            );
+            o.insert(
+                "candidates".into(),
+                Json::Arr(
+                    rungs
+                        .iter()
+                        .map(|r| {
+                            let mut c = BTreeMap::new();
+                            c.insert("devices".into(),
+                                     Json::Num(r.devices as f64));
+                            match &r.outcome {
+                                Ok(resp) => {
+                                    let plan = match &resp.answer {
+                                        Answer::Plan { plan, .. } => plan,
+                                        Answer::Sweep {
+                                            plans, best, ..
+                                        } => &plans[*best],
+                                    };
+                                    c.insert("ok".into(),
+                                             Json::Bool(true));
+                                    c.insert(
+                                        "batch".into(),
+                                        Json::Num(plan.batch as f64),
+                                    );
+                                    c.insert(
+                                        "throughput".into(),
+                                        Json::Num(plan.throughput(
+                                            resp.n_devices)),
+                                    );
+                                    c.insert(
+                                        "source".into(),
+                                        Json::Str(resp.source.label()
+                                                      .into()),
+                                    );
+                                }
+                                Err(e) => {
+                                    c.insert("ok".into(),
+                                             Json::Bool(false));
+                                    c.insert(
+                                        "error".into(),
+                                        Json::Str(e.kind().into()),
+                                    );
+                                }
+                            }
+                            Json::Obj(c)
+                        })
+                        .collect(),
+                ),
+            );
+        }
+    }
+    json::to_string(&Json::Obj(o))
+}
+
 fn render_stats(service: &PlanService, telemetry: Option<&Telemetry>)
                 -> String {
     let s = service.stats();
@@ -334,6 +480,27 @@ pub fn handle_line_full(service: &PlanService,
             }
             (render_response(&outcome), LineOutcome::Continue)
         }
+        Ok(Request::Replan { query, new_cluster, sweep_clusters }) => {
+            if sweep_clusters {
+                // every rung is its own query; the sweep observes each
+                // one itself so the telemetry invariants hold per rung
+                // (a ladder-level observe here would double-count)
+                let rungs = service.replan_sweep_clusters(
+                    &query, &new_cluster, telemetry);
+                (render_capacity(&rungs), LineOutcome::Continue)
+            } else {
+                let started = Instant::now();
+                let outcome = service.replan(&query, &new_cluster);
+                if let Some(t) = telemetry {
+                    let sweep =
+                        matches!(query.shape, QueryShape::Sweep { .. });
+                    t.observe_query(sweep,
+                                    started.elapsed().as_secs_f64(),
+                                    &outcome);
+                }
+                (render_response(&outcome), LineOutcome::Continue)
+            }
+        }
     }
 }
 
@@ -370,8 +537,26 @@ pub fn serve_loop_with<R: BufRead, W: Write>(
         if let Some(t) = telemetry {
             t.bump(super::telemetry::Counter::Requests);
         }
-        let (response, outcome) =
-            handle_line_full(service, telemetry, line);
+        // The stdin loop has no supervisor: a panicking request (e.g.
+        // an injected search fault) would kill the whole process. The
+        // socket front-end deliberately lets the panic fly — its pool
+        // resurrects the worker — but here the only safe answer is to
+        // contain it and answer an internal error. Invariants hold: the
+        // injection fires before any accounting, so the dead query was
+        // never counted anywhere.
+        let (response, outcome) = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                handle_line_full(service, telemetry, line)
+            }),
+        )
+        .unwrap_or_else(|_| {
+            (
+                render_response(&Err(PlanError::Internal(
+                    "request handler panicked".into(),
+                ))),
+                LineOutcome::Continue,
+            )
+        });
         writeln!(writer, "{response}")?;
         writer.flush()?;
         if outcome != LineOutcome::Continue {
@@ -420,6 +605,53 @@ mod tests {
     }
 
     #[test]
+    fn parses_replan_lines() {
+        let r = parse_request(
+            "replan setting=x mem=8 batch=2 devices=8 g=0 new-devices=4",
+        )
+        .unwrap();
+        let Request::Replan { query, new_cluster, sweep_clusters } = r
+        else {
+            panic!("not a replan");
+        };
+        assert_eq!(query.shape, QueryShape::Batch(2));
+        assert_eq!(query.cluster.devices, Some(8));
+        assert_eq!(new_cluster.preset, "rtx_titan");
+        assert_eq!(new_cluster.devices, Some(4));
+        assert_eq!(new_cluster.mem_gib, 8.0, "mem carries over");
+        assert!(!sweep_clusters);
+
+        // sweep-shaped replan; a preset change drops the old device
+        // count (it may not apply to the new topology)
+        let r = parse_request(
+            "replan setting=x mem=8 batch-cap=4 devices=4 g=0 \
+             new-cluster=two_server_a100 new-mem=16",
+        )
+        .unwrap();
+        let Request::Replan { query, new_cluster, sweep_clusters } = r
+        else {
+            panic!("not a replan");
+        };
+        assert_eq!(query.shape, QueryShape::Sweep { max_batch: 4 });
+        assert_eq!(new_cluster.preset, "two_server_a100");
+        assert_eq!(new_cluster.devices, None);
+        assert_eq!(new_cluster.mem_gib, 16.0);
+        assert!(!sweep_clusters);
+
+        // sweep-clusters alone is a valid "what do I still fit on?"
+        let r = parse_request(
+            "replan setting=x mem=8 batch=1 g=0 sweep-clusters",
+        )
+        .unwrap();
+        let Request::Replan { new_cluster, sweep_clusters, .. } = r
+        else {
+            panic!("not a replan");
+        };
+        assert!(sweep_clusters);
+        assert_eq!(new_cluster.preset, "rtx_titan");
+    }
+
+    #[test]
     fn rejects_malformed_lines() {
         for bad in [
             "",
@@ -433,6 +665,13 @@ mod tests {
             "sweep setting=x batch=4",             // query-only key
             "query setting=x batch=1 engine=warp",
             "query setting=x batch=1 g=1,x",
+            "replan setting=x g=0 new-devices=4",  // no batch/batch-cap
+            "replan setting=x batch=1 batch-cap=4 new-devices=2", // both
+            "replan setting=x batch=1 g=0",        // nothing changes
+            "replan setting=x batch=1 new-devices=zero",
+            "query setting=x batch=1 new-devices=2", // replan-only key
+            "query setting=x batch=1 sweep-clusters",
+            "sweep setting=x new-mem=4",
         ] {
             assert!(
                 matches!(parse_request(bad),
@@ -491,6 +730,68 @@ mod tests {
             panic!("not a query");
         };
         assert_eq!(q2.engine, Engine::FoldedBb);
+    }
+
+    const TINY: &str = "gpt:1000,64,2,128,4";
+
+    #[test]
+    fn replan_verb_answers_like_a_cold_query_on_the_new_cluster() {
+        let service = super::super::PlanService::in_memory();
+        let (warm, _) = handle_line_full(
+            &service,
+            None,
+            &format!("query setting={TINY} mem=8 batch=2 devices=8 g=0"),
+        );
+        assert_eq!(Json::parse(&warm).unwrap().get("ok").as_bool(),
+                   Some(true));
+        let (resp, outcome) = handle_line_full(
+            &service,
+            None,
+            &format!("replan setting={TINY} mem=8 batch=2 devices=8 \
+                      g=0 new-devices=4"),
+        );
+        assert_eq!(outcome, LineOutcome::Continue);
+        let v = Json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(true));
+        assert_eq!(v.get("kind").as_str(), Some("plan"));
+        assert_eq!(service.stats().replans, 1);
+
+        // bit-identical to a cold query on the new cluster
+        let cold = super::super::PlanService::in_memory();
+        let (cresp, _) = handle_line_full(
+            &cold,
+            None,
+            &format!("query setting={TINY} mem=8 batch=2 devices=4 g=0"),
+        );
+        let cv = Json::parse(&cresp).unwrap();
+        assert_eq!(v.get("choice"), cv.get("choice"));
+        assert_eq!(v.get("time_s").as_f64().map(f64::to_bits),
+                   cv.get("time_s").as_f64().map(f64::to_bits));
+        assert_eq!(v.get("key"), cv.get("key"));
+    }
+
+    #[test]
+    fn capacity_sweep_renders_every_rung_of_the_ladder() {
+        let service = super::super::PlanService::in_memory();
+        let (resp, outcome) = handle_line_full(
+            &service,
+            None,
+            &format!("replan setting={TINY} mem=8 batch=1 devices=8 \
+                      g=0 sweep-clusters"),
+        );
+        assert_eq!(outcome, LineOutcome::Continue);
+        let v = Json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(true));
+        assert_eq!(v.get("kind").as_str(), Some("capacity"));
+        let rungs = v.get("candidates").as_arr().unwrap();
+        assert_eq!(rungs.len(), 4, "8 → 4 → 2 → 1");
+        for (rung, want) in rungs.iter().zip([8usize, 4, 2, 1]) {
+            assert_eq!(rung.get("devices").as_usize(), Some(want));
+            assert_eq!(rung.get("ok").as_bool(), Some(true),
+                       "the tiny model fits everywhere at 8 GiB");
+        }
+        assert_eq!(v.get("fits_min_devices").as_usize(), Some(1));
+        assert_eq!(service.stats().replans, 4);
     }
 
     #[test]

@@ -171,9 +171,13 @@ pub enum Counter {
     /// Warm-up candidates that failed to re-plan (unparseable request or
     /// planning error).
     WarmupFailures,
+    /// Worker threads resurrected after a panic unwound their dispatch
+    /// loop (the pool never shrinks; each restart is one panic
+    /// survived).
+    WorkerRestarts,
 }
 
-const N_COUNTERS: usize = 9;
+const N_COUNTERS: usize = 10;
 
 impl Counter {
     const ALL: [Counter; N_COUNTERS] = [
@@ -186,6 +190,7 @@ impl Counter {
         Counter::Infeasible,
         Counter::WarmupReplans,
         Counter::WarmupFailures,
+        Counter::WorkerRestarts,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -199,6 +204,7 @@ impl Counter {
             Counter::Infeasible => "infeasible",
             Counter::WarmupReplans => "warmup_replans",
             Counter::WarmupFailures => "warmup_failures",
+            Counter::WorkerRestarts => "worker_restarts",
         }
     }
 }
@@ -251,6 +257,12 @@ impl Telemetry {
             Err(super::PlanError::Infeasible { .. }) => {
                 self.bump(Counter::Infeasible);
             }
+            // Internal faults (a panicked flight leader, a poisoned
+            // coalescer slot) are neither a client rejection nor a
+            // verdict: the query already counted its cache miss, so
+            // bumping `Rejected` here would break the pinned
+            // `hits + misses == queries − rejected` invariant.
+            Err(super::PlanError::Internal(_)) => {}
             Err(_) => self.bump(Counter::Rejected),
         }
     }
@@ -370,5 +382,19 @@ mod tests {
         assert_eq!(t.sweep_latency.count(), 1);
         assert_eq!(t.get(Counter::Infeasible), 1);
         assert_eq!(t.get(Counter::Rejected), 1);
+    }
+
+    #[test]
+    fn internal_errors_count_as_queries_but_not_verdicts() {
+        let t = Telemetry::new();
+        t.observe_query(
+            false,
+            1e-4,
+            &Err(super::super::PlanError::Internal("leader panicked".into())),
+        );
+        assert_eq!(t.queries(), 1);
+        assert_eq!(t.batch_latency.count(), 1);
+        assert_eq!(t.get(Counter::Rejected), 0, "miss already counted");
+        assert_eq!(t.get(Counter::Infeasible), 0);
     }
 }

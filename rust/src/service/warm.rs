@@ -46,6 +46,21 @@
 //! `evaluate()`'s unsnapped compute term, so exact ties against the
 //! incumbent survive the strict `lb > bound` prune.
 //!
+//! # The proof extends to elastic replans
+//!
+//! [`super::replan`] feeds this same machinery a seed from a *different
+//! cluster*: the old hardware's optimum, per-decision projected onto the
+//! new profiler's menus ([`crate::cost::Decision::project`] +
+//! [`crate::cost::OpCostTable::closest_option`]). Nothing in the
+//! argument above cares where the seed came from — only that whatever
+//! reaches `offer_warm` is a feasible full assignment *of the new
+//! cluster's search space*, which the repair stage (and its
+//! reject-don't-panic validation) guarantees exactly as it does for
+//! neighbor seeds. A projected seed therefore also only prunes: the
+//! replanned answer is bit-identical to a cold search on the new
+//! cluster, and the old plan's only contribution is visited-node
+//! savings. Property-tested in `rust/tests/replan_service.rs`.
+//!
 //! There is deliberately no code here: the repair lives with the greedy
 //! planner (`crate::planner::greedy::search_from`, whose move loop it
 //! reuses verbatim) and the install lives with the bound machinery

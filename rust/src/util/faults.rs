@@ -1,0 +1,281 @@
+//! Deterministic, seed-driven fault injection for the serve path.
+//!
+//! A fault plan is parsed once from the `OSDP_FAULTS` environment
+//! variable and consulted at four hardened boundaries:
+//!
+//! - `panic` — the query dispatch panics before any accounting runs
+//!   (models a worker crashing mid-search; the front-end pool must
+//!   resurrect the thread),
+//! - `slow`  — the dispatch sleeps `slow-ms` milliseconds first
+//!   (models a pathological search hogging a worker),
+//! - `cache-io` — `write_cache_file` fails with an I/O error
+//!   (models a full or flaky disk; persistence must retry),
+//! - `sock-reset` — the front-end writes a torn prefix of a response
+//!   and slams the connection (models a mid-line TCP reset).
+//!
+//! Grammar (comma-separated `key:value`, all values unsigned ints):
+//!
+//! ```text
+//! OSDP_FAULTS=seed:7,panic:20000,slow:50000,slow-ms:40,cache-io:100000,sock-reset:30000
+//! ```
+//!
+//! Rates are **parts per million** per call site invocation. Whether
+//! invocation `n` of a site fires is a pure function of
+//! `(seed, site, n)` — a splitmix64-style mix compared against the
+//! rate — so the *number* of faults over N calls is reproducible for
+//! a given seed regardless of thread interleaving. With `OSDP_FAULTS`
+//! unset (or all rates zero) every hook is a branch-on-zero no-op.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// The hardened boundaries a fault plan can target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Site {
+    /// Panic at query dispatch, before any telemetry accounting.
+    SearchPanic,
+    /// Sleep at query dispatch.
+    SearchSlow,
+    /// Fail a cache-file write with an I/O error.
+    CacheIo,
+    /// Tear a front-end response mid-line and drop the connection.
+    SockReset,
+}
+
+/// Number of distinct fault sites (per-site call counters).
+pub const N_SITES: usize = 4;
+
+/// A parsed `OSDP_FAULTS` specification. All rates in parts per
+/// million per call; the default plan injects nothing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub panic_ppm: u64,
+    pub slow_ppm: u64,
+    pub slow_ms: u64,
+    pub cache_io_ppm: u64,
+    pub sock_reset_ppm: u64,
+}
+
+impl FaultPlan {
+    /// Parse the `OSDP_FAULTS` grammar. Unknown keys and malformed
+    /// tokens are errors so a typo'd chaos run fails loudly instead
+    /// of silently testing nothing.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for tok in spec.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            let (key, value) = tok
+                .split_once(':')
+                .ok_or_else(|| format!("fault token `{tok}` is not key:value"))?;
+            let n: u64 = value
+                .trim()
+                .parse()
+                .map_err(|_| format!("fault value `{value}` is not an unsigned integer"))?;
+            match key.trim() {
+                "seed" => plan.seed = n,
+                "panic" => plan.panic_ppm = n,
+                "slow" => plan.slow_ppm = n,
+                "slow-ms" => plan.slow_ms = n,
+                "cache-io" => plan.cache_io_ppm = n,
+                "sock-reset" => plan.sock_reset_ppm = n,
+                other => return Err(format!("unknown fault key `{other}`")),
+            }
+        }
+        for rate in [
+            plan.panic_ppm,
+            plan.slow_ppm,
+            plan.cache_io_ppm,
+            plan.sock_reset_ppm,
+        ] {
+            if rate > 1_000_000 {
+                return Err(format!("fault rate {rate} exceeds 1000000 ppm"));
+            }
+        }
+        Ok(plan)
+    }
+
+    /// True when any site can ever fire.
+    pub fn enabled(&self) -> bool {
+        self.panic_ppm + self.slow_ppm + self.cache_io_ppm + self.sock_reset_ppm > 0
+    }
+
+    fn rate_ppm(&self, site: Site) -> u64 {
+        match site {
+            Site::SearchPanic => self.panic_ppm,
+            Site::SearchSlow => self.slow_ppm,
+            Site::CacheIo => self.cache_io_ppm,
+            Site::SockReset => self.sock_reset_ppm,
+        }
+    }
+}
+
+/// A fault plan plus per-site call counters. The decision for call
+/// `n` of a site depends only on `(seed, site, n)`, never on timing.
+pub struct FaultState {
+    plan: FaultPlan,
+    calls: [AtomicU64; N_SITES],
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan) -> FaultState {
+        FaultState {
+            plan,
+            calls: [const { AtomicU64::new(0) }; N_SITES],
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Record one invocation of `site` and decide whether it faults.
+    pub fn fires(&self, site: Site) -> bool {
+        let rate = self.plan.rate_ppm(site);
+        if rate == 0 {
+            return false;
+        }
+        let n = self.calls[site as usize].fetch_add(1, Ordering::Relaxed);
+        mix(self.plan.seed, site as u64, n) % 1_000_000 < rate
+    }
+}
+
+/// splitmix64 finalizer over a combined (seed, site, call) word:
+/// cheap, stateless, and well-distributed in the low bits.
+fn mix(seed: u64, site: u64, n: u64) -> u64 {
+    let mut z = seed
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        .wrapping_add(site.wrapping_mul(0xbf58_476d_1ce4_e5b9))
+        .wrapping_add(n.wrapping_add(0x94d0_49bb_1331_11eb));
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+static GLOBAL: OnceLock<FaultState> = OnceLock::new();
+
+/// The process-wide fault state, parsed from `OSDP_FAULTS` on first
+/// use. A malformed spec aborts: a chaos run that silently injects
+/// nothing would pass CI while proving nothing.
+pub fn global() -> &'static FaultState {
+    GLOBAL.get_or_init(|| {
+        let plan = match std::env::var("OSDP_FAULTS") {
+            Ok(spec) => match FaultPlan::parse(&spec) {
+                Ok(plan) => plan,
+                Err(e) => {
+                    eprintln!("osdp: bad OSDP_FAULTS spec: {e}");
+                    std::process::exit(2);
+                }
+            },
+            Err(_) => FaultPlan::default(),
+        };
+        FaultState::new(plan)
+    })
+}
+
+/// Dispatch-boundary hook: maybe sleep, maybe panic. Called before
+/// any telemetry or cache accounting so an injected crash leaves the
+/// counters exactly as if the query had never arrived.
+pub fn on_query_dispatch() {
+    let state = global();
+    if state.fires(Site::SearchSlow) {
+        std::thread::sleep(std::time::Duration::from_millis(state.plan.slow_ms.max(1)));
+    }
+    if state.fires(Site::SearchPanic) {
+        panic!("injected fault: search panicked");
+    }
+}
+
+/// Cache-write hook: true when this write should fail.
+pub fn cache_write_fails() -> bool {
+    global().fires(Site::CacheIo)
+}
+
+/// Front-end response hook: true when this response should be torn
+/// mid-line and the connection dropped.
+pub fn sock_reset_fires() -> bool {
+    global().fires(Site::SockReset)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let plan = FaultPlan::parse(
+            "seed:7,panic:20000,slow:50000,slow-ms:40,cache-io:100000,sock-reset:30000",
+        )
+        .unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.panic_ppm, 20_000);
+        assert_eq!(plan.slow_ppm, 50_000);
+        assert_eq!(plan.slow_ms, 40);
+        assert_eq!(plan.cache_io_ppm, 100_000);
+        assert_eq!(plan.sock_reset_ppm, 30_000);
+        assert!(plan.enabled());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("seed").is_err());
+        assert!(FaultPlan::parse("seed:x").is_err());
+        assert!(FaultPlan::parse("warp:9").is_err());
+        assert!(FaultPlan::parse("panic:2000000").is_err());
+    }
+
+    #[test]
+    fn empty_spec_is_disabled() {
+        let plan = FaultPlan::parse("").unwrap();
+        assert_eq!(plan, FaultPlan::default());
+        assert!(!plan.enabled());
+        assert!(!FaultState::new(plan).fires(Site::SearchPanic));
+    }
+
+    #[test]
+    fn fire_count_is_a_function_of_seed_only() {
+        let plan = FaultPlan::parse("seed:11,panic:100000").unwrap();
+        let count = |state: &FaultState| {
+            (0..10_000)
+                .filter(|_| state.fires(Site::SearchPanic))
+                .count()
+        };
+        let a = count(&FaultState::new(plan));
+        let b = count(&FaultState::new(plan));
+        assert_eq!(a, b, "same seed, same fault schedule");
+        // ~10% rate over 10k draws: comfortably inside [500, 2000].
+        assert!((500..2000).contains(&a), "rate wildly off: {a}");
+
+        let other = FaultPlan::parse("seed:12,panic:100000").unwrap();
+        let c = count(&FaultState::new(other));
+        assert!(a != c || {
+            // Equal counts are possible across seeds; the schedules
+            // themselves must still differ somewhere.
+            let s1 = FaultState::new(plan);
+            let s2 = FaultState::new(other);
+            (0..10_000).any(|_| s1.fires(Site::SearchPanic) != s2.fires(Site::SearchPanic))
+        });
+    }
+
+    #[test]
+    fn sites_draw_independent_schedules() {
+        let plan = FaultPlan::parse("seed:3,panic:500000,sock-reset:500000").unwrap();
+        let state = FaultState::new(plan);
+        let panics: Vec<bool> = (0..256).map(|_| state.fires(Site::SearchPanic)).collect();
+        let resets: Vec<bool> = (0..256).map(|_| state.fires(Site::SockReset)).collect();
+        assert_ne!(panics, resets, "sites must not share one schedule");
+    }
+
+    #[test]
+    fn zero_rate_site_never_counts_or_fires() {
+        let plan = FaultPlan::parse("seed:5,panic:1000000").unwrap();
+        let state = FaultState::new(plan);
+        for _ in 0..100 {
+            assert!(state.fires(Site::SearchPanic), "ppm=1000000 always fires");
+            assert!(!state.fires(Site::CacheIo));
+        }
+    }
+}

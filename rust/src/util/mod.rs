@@ -5,10 +5,12 @@
 //! printer, and property-testing helpers live here instead of coming from
 //! serde / rand / criterion / proptest.
 
+pub mod faults;
 pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod table;
 
 /// Format a byte count human-readably (GiB/MiB/KiB).

@@ -1,0 +1,42 @@
+//! Poison-recovering synchronization helpers.
+//!
+//! The serve path deliberately lets injected panics unwind worker
+//! threads (the pool resurrects them), which means any mutex such a
+//! thread held at the moment of the panic is poisoned. For the plain
+//! data these locks guard — queue state, counters, cache maps — the
+//! data is still structurally valid: every critical section either
+//! completes its writes or panics before touching the guarded value.
+//! Recovering the guard is therefore safe, and strictly better than
+//! letting one dead thread wedge every subsequent `lock()` forever.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Block on `cv`, recovering the reacquired guard from poison.
+pub fn wait_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_recover_survives_a_panicked_holder() {
+        let m = Arc::new(Mutex::new(41));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.lock().is_err(), "the mutex really is poisoned");
+        *lock_recover(&m) += 1;
+        assert_eq!(*lock_recover(&m), 42);
+    }
+}

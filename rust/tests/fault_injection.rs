@@ -1,0 +1,207 @@
+//! Fault-injected serve path (ISSUE 7): a release `osdp serve` under a
+//! deterministic `OSDP_FAULTS` plan — panicking searches, slow
+//! searches, cache I/O errors, mid-line socket resets — must keep
+//! serving, resurrect panicked workers (`worker_restarts > 0`), keep
+//! the pinned telemetry invariants exact, never corrupt the disk
+//! cache, and still shut down cleanly with exit status 0.
+//!
+//! The same chaos drive runs in CI against three fixed seeds via
+//! `python/tests/drive_frontend.py --chaos`; this test is the
+//! in-process-toolchain version against the built binary
+//! (`CARGO_BIN_EXE_osdp`).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use osdp::util::json::Json;
+
+const TINY: &str = "gpt:3000,64,6,192,4";
+const FAULTS: &str =
+    "seed:1117,panic:60000,slow:40000,slow-ms:1,cache-io:150000,\
+     sock-reset:40000";
+
+fn spawn_serve(cache_dir: &std::path::Path) -> (Child, std::net::SocketAddr) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_osdp"))
+        .args([
+            "serve",
+            "--listen",
+            "127.0.0.1:0",
+            "--workers",
+            "2",
+            "--cache-dir",
+        ])
+        .arg(cache_dir)
+        .env("OSDP_FAULTS", FAULTS)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn osdp serve");
+    // first stdout line announces the bound ephemeral port
+    let mut line = String::new();
+    BufReader::new(child.stdout.take().expect("piped stdout"))
+        .read_line(&mut line)
+        .expect("read the listening line");
+    let doc = Json::parse(line.trim()).expect("listening line is JSON");
+    assert_eq!(doc.get("kind").as_str(), Some("listening"), "{line:?}");
+    let addr = doc
+        .get("addr")
+        .as_str()
+        .expect("listening line carries the address")
+        .parse()
+        .expect("parse bound address");
+    (child, addr)
+}
+
+/// One chaos-tolerant request: connect, send, read one line. `None` on
+/// any transport failure (reset sockets and mid-response worker deaths
+/// are exactly what the fault plan injects).
+fn try_request(addr: std::net::SocketAddr, line: &str) -> Option<Json> {
+    let stream = TcpStream::connect(addr).ok()?;
+    stream.set_read_timeout(Some(Duration::from_secs(30))).ok()?;
+    let mut writer = stream.try_clone().ok()?;
+    let mut reader = BufReader::new(stream);
+    writeln!(writer, "{line}").ok()?;
+    writer.flush().ok()?;
+    let mut resp = String::new();
+    reader.read_line(&mut resp).ok()?;
+    if !resp.ends_with('\n') {
+        return None; // torn mid-line by an injected reset
+    }
+    Json::parse(resp.trim_end()).ok()
+}
+
+/// Retry a request until it survives the chaos (bounded by `deadline`).
+fn request(addr: std::net::SocketAddr, line: &str,
+           deadline: Instant) -> Json {
+    loop {
+        if let Some(doc) = try_request(addr, line) {
+            return doc;
+        }
+        assert!(Instant::now() < deadline,
+                "'{line}' never survived the fault plan");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn check_invariants(stats: &Json) {
+    let n = |k: &str| stats.get(k).as_f64().unwrap_or(-1.0);
+    let t = |k: &str| stats.get("telemetry").get(k).as_f64().unwrap_or(-1.0);
+    assert_eq!(
+        n("hits") + n("misses"),
+        t("queries") - t("rejected"),
+        "hits + misses == queries − rejected must survive chaos: {stats:?}"
+    );
+    let lat = stats.get("telemetry").get("latency");
+    assert_eq!(
+        lat.get("batch").get("count").as_f64().unwrap_or(-1.0)
+            + lat.get("sweep").get("count").as_f64().unwrap_or(-1.0),
+        t("queries"),
+        "every query is observed exactly once: {stats:?}"
+    );
+}
+
+#[test]
+fn chaos_serve_survives_restarts_workers_and_exits_cleanly() {
+    let dir = std::env::temp_dir().join(format!(
+        "osdp-chaos-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let (mut child, addr) = spawn_serve(&dir);
+    let deadline = Instant::now() + Duration::from_secs(120);
+
+    // distinct limits so misses (and thus persists, under cache-io
+    // faults) keep happening; repeats so hits happen too
+    let mut lines = Vec::new();
+    for i in 0..12 {
+        let mem = 2.0 + 0.5 * (i % 4) as f64;
+        lines.push(format!(
+            "query setting={TINY} mem={mem} batch={} threads=1",
+            1 + i % 2
+        ));
+    }
+
+    let mut restarts = 0.0;
+    for round in 0.. {
+        for line in &lines {
+            // individual requests may die to injected faults — that is
+            // the point; the server as a whole must keep answering
+            let _ = try_request(addr, line);
+        }
+        let stats = request(addr, "stats", deadline);
+        assert_eq!(stats.get("kind").as_str(), Some("stats"));
+        check_invariants(&stats);
+        restarts = stats
+            .get("telemetry")
+            .get("worker_restarts")
+            .as_f64()
+            .unwrap_or(0.0);
+        if restarts > 0.0 && round >= 1 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "no worker restart observed before the deadline \
+             (injected panics are not reaching the pool): {stats:?}"
+        );
+    }
+    assert!(restarts > 0.0);
+
+    // the disk cache never corrupts: whatever survived the injected
+    // write failures parses, and no temp file shadows it
+    let cache = dir.join("plan_cache.json");
+    if cache.exists() {
+        let text = std::fs::read_to_string(&cache).unwrap();
+        Json::parse(&text).expect("cache file stays valid JSON");
+    }
+
+    // graceful shutdown despite resets: keep asking until the ack
+    // lands or the listener disappears (a torn ack still flips the
+    // shutdown flag server-side)
+    loop {
+        match try_request(addr, "shutdown") {
+            Some(ack) => {
+                assert_eq!(ack.get("kind").as_str(), Some("shutdown"));
+                break;
+            }
+            None => {
+                if TcpStream::connect(addr).is_err() {
+                    break; // already draining
+                }
+                assert!(Instant::now() < deadline,
+                        "shutdown never acknowledged");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+    let status = loop {
+        match child.try_wait().expect("poll child") {
+            Some(status) => break status,
+            None => {
+                assert!(Instant::now() < deadline,
+                        "serve did not exit after shutdown");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    };
+    assert!(status.success(),
+            "chaos serve must exit cleanly, got {status:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn bad_fault_specs_refuse_loudly() {
+    // a typo in OSDP_FAULTS must abort startup with exit 2, not
+    // silently run without faults
+    let out = Command::new(env!("CARGO_BIN_EXE_osdp"))
+        .args(["query", "--setting", TINY, "--batch", "1"])
+        .env("OSDP_FAULTS", "seed:1,panik:5")
+        .output()
+        .expect("run osdp query");
+    assert_eq!(out.status.code(), Some(2),
+               "bad fault grammar must exit 2: {out:?}");
+}

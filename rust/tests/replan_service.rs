@@ -1,0 +1,274 @@
+//! Elastic-replan acceptance (ISSUE 7):
+//!
+//! * re-planning onto a changed cluster is **bit-identical** to a cold
+//!   search on that cluster (full choice vector + time bits), serial
+//!   and 8-threaded, across shrink / grow / topology-change events —
+//!   including a whole-node loss that removes the node-scope dimension
+//!   from the search space;
+//! * on the 24L model, a replan seeded from the old cluster's optimum
+//!   visits strictly fewer nodes than a cold search somewhere on the
+//!   limit scan (and never more);
+//! * `replans` / `replan_repairs` count what actually happened, the
+//!   degenerate same-hardware replan included;
+//! * the capacity sweep walks the device ladder, locates the hardware
+//!   floor, and keeps the telemetry invariants exact per rung.
+
+use osdp::config::GIB;
+use osdp::cost::Profiler;
+use osdp::service::{Answer, ClusterSpec, Counter, PlanError, PlanQuery,
+                    PlanService, QueryShape, Source, Telemetry,
+                    resolve_setting};
+
+const TINY: &str = "gpt:3000,64,6,192,4";
+const DEEP: &str = "gpt:5000,128,24,256,4";
+
+fn spec(preset: &str, devices: Option<usize>, mem_gib: f64) -> ClusterSpec {
+    ClusterSpec { preset: preset.into(), devices, mem_gib }
+}
+
+fn profiler_for(q: &PlanQuery) -> Profiler {
+    let cluster = q.cluster.resolve().unwrap();
+    let model = resolve_setting(&q.setting).unwrap();
+    Profiler::new(&model, &cluster, &q.search)
+}
+
+/// All-DP peak (GiB) at `b` — device-count independent (DP replicates
+/// every state), so one number prices a limit for both clusters of a
+/// replan event.
+fn dp_peak_gib(q: &PlanQuery, b: usize) -> f64 {
+    let p = profiler_for(q);
+    p.evaluate(&p.index_of(|d| d.is_pure_dp()), b).peak_mem / GIB
+}
+
+fn zdp_peak_gib(q: &PlanQuery, b: usize) -> f64 {
+    let p = profiler_for(q);
+    p.evaluate(&p.index_of(|d| d.is_pure_zdp()), b).peak_mem / GIB
+}
+
+// ---------------------------------------------------------------------
+// bit-identity across cluster-change events
+// ---------------------------------------------------------------------
+
+#[test]
+fn replan_is_bit_identical_to_a_cold_search_on_the_new_cluster() {
+    // (old preset, old devices, new preset, new devices)
+    let events: &[(&str, Option<usize>, &str, Option<usize>)] = &[
+        ("rtx_titan", Some(8), "rtx_titan", Some(4)), // lose half
+        ("rtx_titan", Some(4), "rtx_titan", Some(8)), // devices rejoin
+        ("rtx_titan", Some(8), "rtx_titan", Some(6)), // partial loss
+        // whole-node loss: the @node scope dimension disappears from
+        // the new search space and projected decisions must degrade
+        ("two_server_a100", None, "rtx_titan", Some(8)),
+        // scale out across nodes: the scope dimension appears
+        ("rtx_titan", Some(8), "two_server_a100", None),
+    ];
+    for &(old_preset, old_dev, new_preset, new_dev) in events {
+        for threads in [1usize, 8] {
+            for frac in [0.45, 0.7] {
+                let mut old_q = PlanQuery::batch(TINY, 8.0, 2);
+                old_q.cluster = spec(old_preset, old_dev, 8.0);
+                old_q.search.granularities = vec![0, 2];
+                old_q.threads = threads;
+                let mem = dp_peak_gib(&old_q, 2) * frac;
+                old_q.cluster.mem_gib = mem;
+                let new_spec = spec(new_preset, new_dev, mem);
+
+                let service = PlanService::in_memory();
+                // old-cluster answer lands in the cache (when feasible)
+                // and becomes the projection source
+                let _ = service.query(&old_q);
+                let replanned = service.replan(&old_q, &new_spec);
+
+                let mut new_q = old_q.clone();
+                new_q.cluster = new_spec.clone();
+                let cold_service = PlanService::in_memory();
+                let cold = cold_service.query(&new_q);
+
+                let ctx = format!(
+                    "{old_preset}:{old_dev:?} -> {new_preset}:{new_dev:?} \
+                     threads={threads} frac={frac}"
+                );
+                match (&replanned, &cold) {
+                    (Ok(r), Ok(c)) => {
+                        assert_eq!(r.key, c.key, "{ctx}");
+                        let (Answer::Plan { plan: rp, stats: rs },
+                             Answer::Plan { plan: cp, stats: cs }) =
+                            (&r.answer, &c.answer)
+                        else {
+                            panic!("batch queries answer plans ({ctx})");
+                        };
+                        assert_eq!(rp.choice, cp.choice,
+                                   "choice diverged: {ctx}");
+                        assert_eq!(rp.cost.time.to_bits(),
+                                   cp.cost.time.to_bits(), "{ctx}");
+                        assert_eq!(rp.cost.peak_mem.to_bits(),
+                                   cp.cost.peak_mem.to_bits(), "{ctx}");
+                        if threads == 1 {
+                            assert!(rs.nodes <= cs.nodes,
+                                    "replan explored more: {} > {} ({ctx})",
+                                    rs.nodes, cs.nodes);
+                        }
+                    }
+                    (Err(PlanError::Infeasible { batch: a }),
+                     Err(PlanError::Infeasible { batch: b })) => {
+                        assert_eq!(a, b, "{ctx}");
+                    }
+                    _ => panic!("feasibility changed by replan ({ctx}): \
+                                 {replanned:?} vs {cold:?}"),
+                }
+                assert_eq!(service.stats().replans, 1, "{ctx}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sweep_shaped_replans_are_bit_identical_too() {
+    let mut old_q = PlanQuery::batch(TINY, 8.0, 1);
+    old_q.shape = QueryShape::Sweep { max_batch: 4 };
+    old_q.cluster.devices = Some(8);
+    old_q.search.granularities = vec![0];
+    old_q.threads = 1;
+    let mem = dp_peak_gib(&old_q, 1) * 0.6;
+    old_q.cluster.mem_gib = mem;
+    let new_spec = spec("rtx_titan", Some(4), mem);
+
+    let service = PlanService::in_memory();
+    service.query(&old_q).unwrap();
+    let replanned = service.replan(&old_q, &new_spec).unwrap();
+
+    let mut new_q = old_q.clone();
+    new_q.cluster = new_spec;
+    let cold = PlanService::in_memory().query(&new_q).unwrap();
+
+    let (Answer::Sweep { plans: rp, best: rb, .. },
+         Answer::Sweep { plans: cp, best: cb, .. }) =
+        (&replanned.answer, &cold.answer)
+    else {
+        panic!("sweep queries answer sweeps");
+    };
+    assert_eq!(rb, cb);
+    assert_eq!(rp.len(), cp.len());
+    for (a, b) in rp.iter().zip(cp) {
+        assert_eq!(a.choice, b.choice);
+        assert_eq!(a.cost.time.to_bits(), b.cost.time.to_bits());
+    }
+}
+
+// ---------------------------------------------------------------------
+// the 24L model: projected seeds actually prune
+// ---------------------------------------------------------------------
+
+#[test]
+fn replanning_the_24l_model_prunes_against_cold_search() {
+    let mut strict_seen = false;
+    for frac in [0.35, 0.45, 0.55, 0.65, 0.75] {
+        let mut old_q = PlanQuery::batch(DEEP, 8.0, 2);
+        old_q.cluster.devices = Some(8);
+        old_q.search.granularities = vec![0];
+        old_q.threads = 1;
+        let mem = dp_peak_gib(&old_q, 2) * frac;
+        old_q.cluster.mem_gib = mem;
+        let new_spec = spec("rtx_titan", Some(4), mem);
+
+        let service = PlanService::in_memory();
+        if service.query(&old_q).is_err() {
+            continue; // nothing cached to project from
+        }
+        let Ok(replanned) = service.replan(&old_q, &new_spec) else {
+            continue; // half the hardware no longer fits this limit
+        };
+        let mut new_q = old_q.clone();
+        new_q.cluster = new_spec;
+        let cold = PlanService::in_memory().query(&new_q).unwrap();
+        let (Answer::Plan { plan: rp, stats: rs },
+             Answer::Plan { plan: cp, stats: cs }) =
+            (&replanned.answer, &cold.answer)
+        else {
+            panic!("batch queries answer plans");
+        };
+        assert_eq!(rp.choice, cp.choice, "frac={frac}");
+        assert_eq!(rp.cost.time.to_bits(), cp.cost.time.to_bits());
+        assert!(rs.nodes <= cs.nodes,
+                "replan explored more at frac={frac}: {} > {}",
+                rs.nodes, cs.nodes);
+        if rs.nodes < cs.nodes {
+            strict_seen = true;
+        }
+    }
+    assert!(
+        strict_seen,
+        "no 24L replan strictly reduced visited nodes — the projected \
+         seed is not actually pruning"
+    );
+}
+
+// ---------------------------------------------------------------------
+// counters + capacity sweep
+// ---------------------------------------------------------------------
+
+#[test]
+fn replan_counters_track_repairs_and_degenerate_replans() {
+    // a limit only all-ZDP@8 satisfies: feasible on 8 devices, nothing
+    // fits on 4 (halving the group doubles every sharded state)
+    let mut old_q = PlanQuery::batch(TINY, 8.0, 2);
+    old_q.cluster.devices = Some(8);
+    old_q.search.granularities = vec![0];
+    old_q.threads = 1;
+    old_q.cluster.mem_gib = zdp_peak_gib(&old_q, 2) * 1.02;
+
+    let service = PlanService::in_memory();
+    service.query(&old_q).unwrap();
+    let r = service.replan(
+        &old_q, &spec("rtx_titan", Some(4), old_q.cluster.mem_gib));
+    assert!(matches!(r, Err(PlanError::Infeasible { .. })));
+    let s = service.stats();
+    assert_eq!(s.replans, 1);
+    assert_eq!(s.replan_repairs, 1,
+               "an unrepairable projection counts as a repair");
+
+    // degenerate replan: the same hardware respelled — counted, served
+    // from cache, and no repair
+    let again = service.replan(&old_q, &old_q.cluster.clone()).unwrap();
+    assert_eq!(again.source, Source::Cache);
+    let s = service.stats();
+    assert_eq!(s.replans, 2);
+    assert_eq!(s.replan_repairs, 1);
+}
+
+#[test]
+fn capacity_sweep_walks_the_ladder_and_finds_the_floor() {
+    let mut old_q = PlanQuery::batch(TINY, 8.0, 2);
+    old_q.cluster.devices = Some(8);
+    old_q.search.granularities = vec![0];
+    old_q.threads = 1;
+    // only the full 8-device cluster holds this limit
+    old_q.cluster.mem_gib = zdp_peak_gib(&old_q, 2) * 1.02;
+
+    let service = PlanService::in_memory();
+    let telemetry = Telemetry::new();
+    let rungs = service
+        .replan_sweep_clusters(&old_q, &old_q.cluster, Some(&telemetry))
+        .unwrap();
+    assert_eq!(rungs.iter().map(|r| r.devices).collect::<Vec<_>>(),
+               vec![8, 4, 2, 1]);
+    assert!(rungs[0].outcome.is_ok(), "the full cluster still fits");
+    for r in &rungs[1..] {
+        assert!(matches!(r.outcome, Err(PlanError::Infeasible { .. })),
+                "N={} cannot fit an all-ZDP@8-sized limit", r.devices);
+    }
+
+    // every rung is one observed query and the pinned invariant holds
+    let s = service.stats();
+    assert_eq!(telemetry.queries(), 4);
+    assert_eq!(s.hits + s.misses,
+               telemetry.queries() - telemetry.get(Counter::Rejected));
+    assert_eq!(s.replans, 4);
+
+    // the fixed two-server topology has no ladder to walk
+    let err = service
+        .replan_sweep_clusters(&old_q, &spec("two_server_a100", None, 8.0),
+                               None)
+        .unwrap_err();
+    assert!(matches!(err, PlanError::BadRequest(_)));
+}

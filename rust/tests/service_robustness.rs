@@ -1,0 +1,128 @@
+//! Hostile-environment robustness (ISSUE 7 satellites): the plan
+//! service must degrade, never die, when the disk under it misbehaves.
+//!
+//! * a corrupt / zero-length / wrong-epoch cache file never aborts
+//!   startup — it quarantines (or harvests) and the service serves
+//!   misses with the right counters;
+//! * an unwritable cache directory costs bounded retries and a
+//!   `persist_errors` tick per miss, never an error surfaced to the
+//!   querying client;
+//! * crash-safe persistence: a leftover truncated temp file neither
+//!   corrupts nor shadows the live cache across a service restart.
+
+use osdp::service::{CacheConfig, PlanQuery, PlanService};
+use osdp::util::json::Json;
+
+const TINY: &str = "gpt:3000,64,6,192,4";
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "osdp-robust-{tag}-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn cfg(dir: &std::path::Path) -> CacheConfig {
+    CacheConfig { capacity: 16, disk_dir: Some(dir.to_path_buf()) }
+}
+
+#[test]
+fn corrupt_cache_files_never_abort_startup() {
+    for (tag, payload) in [("garbage", "}{ not json at all"),
+                           ("empty", "")]
+    {
+        let dir = tmp_dir(tag);
+        let path = dir.join("plan_cache.json");
+        std::fs::write(&path, payload).unwrap();
+
+        let (service, stale) = PlanService::open(cfg(&dir));
+        assert!(stale.is_empty(), "nothing to harvest from {tag}");
+        let s = service.stats();
+        assert_eq!(s.stale_rejected, 1, "{tag}");
+        assert_eq!(s.quarantined_entries, 1, "{tag}");
+        assert!(!path.exists(),
+                "the corpse moves aside so it cannot shadow ({tag})");
+        assert!(path.with_extension("json.bad").exists(),
+                "evidence is preserved, not deleted ({tag})");
+
+        // and the service actually serves: a query is a plain miss
+        let resp =
+            service.query(&PlanQuery::batch(TINY, 8.0, 1)).unwrap();
+        assert!(matches!(resp.answer,
+                         osdp::service::Answer::Plan { .. }));
+        let s = service.stats();
+        assert_eq!((s.hits, s.misses), (0, 1), "{tag}");
+        assert_eq!(s.persist_errors, 0,
+                   "a quarantined predecessor must not break persistence");
+        // the fresh persist produced a healthy file
+        Json::parse(&std::fs::read_to_string(&path).unwrap())
+            .expect("rewritten cache file is valid JSON");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn unwritable_cache_dir_degrades_to_memory_only_with_counters() {
+    // the configured "directory" is a regular file: every persist
+    // attempt must fail, burn its bounded retries, and leave the
+    // serve path entirely unharmed
+    let dir = tmp_dir("unwritable");
+    let blocker = dir.join("blocker");
+    std::fs::write(&blocker, "i am a file, not a directory").unwrap();
+
+    let service = PlanService::new(cfg(&blocker));
+    let resp = service.query(&PlanQuery::batch(TINY, 8.0, 1)).unwrap();
+    assert!(matches!(resp.answer, osdp::service::Answer::Plan { .. }));
+    let s = service.stats();
+    assert_eq!(s.misses, 1);
+    assert_eq!(s.persist_errors, 1,
+               "the failed persist is counted once");
+    assert_eq!(s.cache_write_retries, 2,
+               "3 attempts = 2 retries before giving up");
+
+    // the cache still works in memory: same query is now a hit — and
+    // the restored dirty flag means the service keeps *trying* to
+    // persist (and keeps failing, and keeps serving)
+    let again = service.query(&PlanQuery::batch(TINY, 8.0, 1)).unwrap();
+    assert_eq!(again.source, osdp::service::Source::Cache);
+    let s = service.stats();
+    assert_eq!((s.hits, s.persist_errors, s.cache_write_retries),
+               (1, 2, 4),
+               "unpersisted data is retried on the next query, not dropped");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_temp_from_a_crashed_writer_is_harmless() {
+    let dir = tmp_dir("torn-temp");
+    let service = PlanService::new(cfg(&dir));
+    service.query(&PlanQuery::batch(TINY, 8.0, 1)).unwrap();
+    drop(service);
+
+    let path = dir.join("plan_cache.json");
+    assert!(path.exists());
+    assert!(!path.with_extension("json.tmp").exists(),
+            "a successful persist leaves no temp behind");
+
+    // simulate a crash mid-write next to the live file
+    let live = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(path.with_extension("json.tmp"), &live[..12]).unwrap();
+
+    let (service, stale) = PlanService::open(cfg(&dir));
+    assert!(stale.is_empty());
+    let s = service.stats();
+    assert_eq!((s.stale_rejected, s.quarantined_entries), (0, 0),
+               "the loader never reads temp files");
+    let hit = service.query(&PlanQuery::batch(TINY, 8.0, 1)).unwrap();
+    assert_eq!(hit.source, osdp::service::Source::Cache,
+               "the live file was not shadowed by the torn temp");
+
+    // the next persist clears the corpse
+    service.query(&PlanQuery::batch(TINY, 8.0, 2)).unwrap();
+    assert!(!path.with_extension("json.tmp").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
