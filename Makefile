@@ -6,10 +6,10 @@ PY ?= python3
 
 .PHONY: ci build examples test fmt clippy bench-smoke bench-search \
         bench-service serve-drive serve-mirror chaos chaos-mirror \
-        python-test artifacts
+        tier-drive tier-mirror python-test artifacts
 
 ci: build examples test fmt clippy bench-smoke serve-drive serve-mirror \
-    chaos chaos-mirror python-test
+    chaos chaos-mirror tier-drive tier-mirror python-test
 
 build:
 	$(CARGO) build --release
@@ -70,6 +70,26 @@ chaos-mirror:
 	for seed in 1117 7 4242; do \
 		$(PY) python/tests/drive_frontend.py --mirror \
 			--chaos --fault-seed $$seed || exit 1; \
+	done
+
+# CI's cache-tier job: one `osdp cache-serve` plus two plan services
+# attached via --remote. Proves cross-instance sharing (B answers A's
+# queries bit-identically, zero planner runs), then re-runs the chaos
+# contract with the remote fault sites firing.
+tier-drive: build
+	$(PY) python/tests/drive_frontend.py --bin target/release/osdp \
+		--workers 4 --tier
+	for seed in 1117 7 4242; do \
+		$(PY) python/tests/drive_frontend.py --bin target/release/osdp \
+			--workers 4 --tier --chaos --fault-seed $$seed || exit 1; \
+	done
+
+# The same topology against the pure-python mirror (no cargo).
+tier-mirror:
+	$(PY) python/tests/drive_frontend.py --mirror --tier
+	for seed in 1117 7 4242; do \
+		$(PY) python/tests/drive_frontend.py --mirror \
+			--tier --chaos --fault-seed $$seed || exit 1; \
 	done
 
 # pytest exit 5 = nothing collected/selected (e.g. hypothesis missing):

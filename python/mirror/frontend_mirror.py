@@ -47,6 +47,19 @@ invariants stay exact), a slow dispatch, and a mid-line socket reset
 panic unwinds the served request, bumps ``worker_restarts``, and the
 thread re-enters its dispatch loop.
 
+PR 8 adds the second cache tier: ``--cache-serve`` runs a standalone
+cache server (``service/remote.rs::CacheServerHandler``) on the same
+front-end machinery, speaking ``get``/``put``/``stats``/``quit``;
+``--serve --remote HOST:PORT`` attaches a ``RemoteTier`` mirror —
+read-through on an L1 miss, write-behind puts on a bounded queue, a
+hard per-operation deadline budget, and a closed/open/half-open
+circuit breaker — with three more fault sites (``remote-slow``,
+``remote-io``, ``remote-garbage``) at the same indices as faults.rs.
+Every remote failure demotes to a local miss; garbage and
+version-skewed payloads quarantine instead of changing an answer; the
+stats invariant becomes
+``hits + remote_hits + misses == queries - rejected``.
+
 Run: ``python3 python/mirror/frontend_mirror.py`` (exits non-zero on
 any mismatch). ``--serve`` starts the mirror server on an ephemeral
 port and prints the same ``{"addr":...,"kind":"listening","ok":true}``
@@ -89,10 +102,14 @@ COUNTERS = [
 # same boundaries the Rust front-end hardens.
 
 MASK64 = (1 << 64) - 1
-SITE_SEARCH_PANIC, SITE_SEARCH_SLOW, SITE_CACHE_IO, SITE_SOCK_RESET = \
-    range(4)
+(SITE_SEARCH_PANIC, SITE_SEARCH_SLOW, SITE_CACHE_IO, SITE_SOCK_RESET,
+ SITE_REMOTE_SLOW, SITE_REMOTE_IO, SITE_REMOTE_GARBAGE) = range(7)
+N_SITES = 7
 _FAULT_KEYS = ("seed", "panic", "slow", "slow-ms", "cache-io",
-               "sock-reset")
+               "sock-reset", "remote-slow", "remote-io",
+               "remote-garbage")
+_RATE_KEYS = ("panic", "slow", "cache-io", "sock-reset", "remote-slow",
+              "remote-io", "remote-garbage")
 
 
 class InjectedFault(Exception):
@@ -125,14 +142,13 @@ class FaultState:
                 raise ValueError(
                     f"fault value {value!r} is not an unsigned integer")
             plan[key] = int(value)
-        for k in ("panic", "slow", "cache-io", "sock-reset"):
+        for k in _RATE_KEYS:
             if plan[k] > 1_000_000:
                 raise ValueError(f"fault rate {plan[k]} exceeds 1000000")
         self.seed = plan["seed"]
         self.slow_ms = plan["slow-ms"]
-        self.rates = [plan["panic"], plan["slow"], plan["cache-io"],
-                      plan["sock-reset"]]
-        self.calls = [0] * 4
+        self.rates = [plan[k] for k in _RATE_KEYS]
+        self.calls = [0] * N_SITES
         self._lock = threading.Lock()
 
     def fires(self, site):
@@ -277,6 +293,17 @@ class Channel:
             self.not_empty.notify()
             return True
 
+    def try_send(self, item):
+        """frontend.rs::Channel::try_send — non-blocking; False when
+        full or closed (the write-behind tier sheds instead of
+        stalling a query)."""
+        with self._lock:
+            if self.closed or len(self.queue) >= self.cap:
+                return False
+            self.queue.append(item)
+            self.not_empty.notify()
+            return True
+
     def recv(self):
         with self._lock:
             while not self.queue and not self.closed:
@@ -337,17 +364,332 @@ def toy_plan(setting, mem, batch):
             "peak": peak(choice)}
 
 
-class ToyService:
-    """The service core contract: LRU cache + single-flight coalescing.
-    Mirrors PlanService's stats transitions (hits, misses, coalesced,
-    planner_runs) so the stats-verb assertions carry over."""
+# ------------------------------------------------ cache-tier mirror
+#
+# service/remote.rs: a standalone cache server (the same front-end
+# machinery with a different line handler) and a RemoteTier client —
+# read-through on an L1 miss, write-behind puts on a bounded queue, a
+# hard per-operation deadline budget, and a closed/open/half-open
+# circuit breaker. Entries carry a schema version; anything that does
+# not parse, validate, or match its key quarantines instead of ever
+# becoming an answer.
 
-    def __init__(self, capacity=256):
+ENTRY_SCHEMA = 1
+
+
+def canonical_req(setting, mem_r, batch):
+    """The canonical request line both instances derive from parsed
+    values — the cross-instance cache key (server.rs::request_line)."""
+    return f"query setting={setting} mem={mem_r!r} batch={batch}"
+
+
+def entry_of(req, value):
+    return {"schema": ENTRY_SCHEMA, "req": req,
+            "choice": value["choice"], "time_s": value["time_s"],
+            "peak": value["peak"]}
+
+
+def validate_entry(entry, setting, mem_r, batch, req):
+    """remote.rs::entry_from_json + CachedValue::validates_against:
+    schema, key equality, shape, and a full re-derivation of the costs
+    from the pure tables — a lying cache can never change a plan."""
+    if not isinstance(entry, dict) or entry.get("schema") != ENTRY_SCHEMA:
+        return None
+    if entry.get("req") != req:
+        return None
+    choice = entry.get("choice")
+    tables = toy_tables(setting)
+    if (not isinstance(choice, list) or len(choice) != len(tables)
+            or not all(isinstance(c, int) and 0 <= c < len(t)
+                       for c, t in zip(choice, tables))):
+        return None
+    peak = batch * sum(t[c][1] for t, c in zip(tables, choice))
+    t = batch * sum(t[c][0] for t, c in zip(tables, choice))
+    if peak > mem_r * 1024.0:
+        return None
+    value = {"choice": choice, "time_s": round(t, 9), "peak": peak}
+    if (value["time_s"] != entry.get("time_s")
+            or value["peak"] != entry.get("peak")):
+        return None
+    return value
+
+
+def bad_request(detail):
+    return json.dumps({"ok": False, "error": "bad-request",
+                       "detail": detail})
+
+
+class CacheHandler:
+    """remote.rs::CacheServerHandler — the second-tier store behind
+    the shared front-end: ``get <req>`` / ``put <entry-json>`` /
+    ``stats`` / ``quit`` / ``shutdown``. Puts are validated wholesale;
+    a bad put is refused, never stored."""
+
+    def __init__(self, capacity=4096):
+        self.capacity = max(capacity, 1)
+        self._lock = threading.Lock()
+        self.store = OrderedDict()
+        self.counters = {"gets": 0, "hits": 0, "puts": 0, "bad_puts": 0}
+
+    def handle(self, line):
+        verb, _, rest = line.partition(" ")
+        rest = rest.strip()
+        if verb == "quit":
+            return json.dumps({"kind": "bye", "ok": True}), "quit"
+        if verb == "shutdown":
+            return (json.dumps({"kind": "shutdown", "ok": True}),
+                    "shutdown")
+        if verb == "stats":
+            with self._lock:
+                doc = dict(self.counters, entries=len(self.store))
+            doc.update(ok=True, kind="stats")
+            return json.dumps(doc, sort_keys=True), "continue"
+        if verb == "get":
+            if not rest:
+                return bad_request("get needs a request-line key"), \
+                    "continue"
+            with self._lock:
+                self.counters["gets"] += 1
+                entry = self.store.get(rest)
+                if entry is not None:
+                    self.store.move_to_end(rest)
+                    self.counters["hits"] += 1
+            doc = {"ok": True, "kind": "get", "hit": entry is not None}
+            if entry is not None:
+                doc["entry"] = entry
+            return json.dumps(doc, sort_keys=True), "continue"
+        if verb == "put":
+            try:
+                entry = json.loads(rest)
+            except ValueError:
+                entry = None
+            ok = (isinstance(entry, dict)
+                  and entry.get("schema") == ENTRY_SCHEMA
+                  and isinstance(entry.get("req"), str) and entry["req"]
+                  and isinstance(entry.get("choice"), list)
+                  and all(isinstance(c, int) for c in entry["choice"]))
+            with self._lock:
+                if ok:
+                    self.counters["puts"] += 1
+                    self.store[entry["req"]] = entry
+                    self.store.move_to_end(entry["req"])
+                    while len(self.store) > self.capacity:
+                        self.store.popitem(last=False)
+                else:
+                    self.counters["bad_puts"] += 1
+            if not ok:
+                return bad_request("unparseable or version-skewed " \
+                                   "entry"), "continue"
+            return (json.dumps({"ok": True, "kind": "put",
+                                "stored": True}, sort_keys=True),
+                    "continue")
+        return bad_request(f"unknown verb {verb!r}"), "continue"
+
+
+class RemoteTier:
+    """remote.rs::RemoteTier — the L2 client. Reads are single-shot
+    under a hard deadline budget; puts are write-behind on a bounded
+    queue with a dedicated writer; consecutive failures trip a
+    closed -> open -> half-open circuit breaker. Every failure mode
+    demotes to 'the tier does not exist': skipped, never fatal."""
+
+    def __init__(self, addr, deadline_s=0.005, threshold=3,
+                 cooldown_s=0.25, queue_cap=64):
+        host, _, port = addr.rpartition(":")
+        self.addr = (host or "127.0.0.1", int(port))
+        self.deadline_s = max(deadline_s, 0.001)
+        self.threshold = max(threshold, 1)
+        self.cooldown_s = cooldown_s
+        self._lock = threading.Lock()
+        self.state = ("closed", 0)
+        self.counters = {"remote_errors": 0, "remote_timeouts": 0,
+                         "breaker_open": 0}
+        self.pending = 0
+        self.queue = Channel(queue_cap)
+        self.writer = threading.Thread(target=self._write_behind,
+                                       daemon=True)
+        self.writer.start()
+
+    # breaker -----------------------------------------------------
+
+    def admit(self):
+        with self._lock:
+            kind = self.state[0]
+            if kind == "closed":
+                return True
+            if kind == "half-open":
+                return False  # one probe at a time
+            if time.monotonic() - self.state[1] >= self.cooldown_s:
+                self.state = ("half-open",)
+                return True
+            return False
+
+    def _on_ok(self):
+        with self._lock:
+            self.state = ("closed", 0)
+
+    def _on_fail(self):
+        with self._lock:
+            kind = self.state[0]
+            if kind == "closed":
+                fails = self.state[1] + 1
+                if fails >= self.threshold:
+                    self.state = ("open", time.monotonic())
+                    self.counters["breaker_open"] += 1
+                else:
+                    self.state = ("closed", fails)
+            elif kind == "half-open":
+                self.state = ("open", time.monotonic())
+                self.counters["breaker_open"] += 1
+
+    def breaker_state(self):
+        with self._lock:
+            return self.state[0]
+
+    def get_counter(self, name):
+        with self._lock:
+            return self.counters[name]
+
+    # wire --------------------------------------------------------
+
+    def _roundtrip(self, line):
+        """One request line, one response line, all under the deadline
+        budget — connect, write, and every read pass re-arm the socket
+        timeout with the remaining budget, so a slow-loris server
+        costs at most the deadline. Fault hooks fire before any I/O,
+        exactly like remote.rs."""
+        st = faults()
+        if st.fires(SITE_REMOTE_IO):
+            return "error", None
+        deadline = time.monotonic() + self.deadline_s
+        if st.fires(SITE_REMOTE_SLOW):
+            time.sleep(max(deadline - time.monotonic(), 0.0))
+            return "timeout", None
+        try:
+            s = socket.create_connection(
+                self.addr, timeout=max(deadline - time.monotonic(),
+                                       1e-4))
+        except socket.timeout:
+            return "timeout", None
+        except OSError:
+            return "error", None
+        with s:
+            try:
+                s.settimeout(max(deadline - time.monotonic(), 1e-4))
+                s.sendall(line.encode() + b"\n")
+                buf = b""
+                while b"\n" not in buf:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return "timeout", None
+                    s.settimeout(remaining)
+                    chunk = s.recv(4096)
+                    if not chunk:
+                        return "error", None
+                    buf += chunk
+                    if len(buf) > MAX_LINE:
+                        return "error", None
+            except socket.timeout:
+                return "timeout", None
+            except OSError:
+                return "error", None
+        return "ok", buf.split(b"\n", 1)[0].decode("utf-8", "replace")
+
+    def _fail(self, kind):
+        with self._lock:
+            self.counters["remote_timeouts" if kind == "timeout"
+                          else "remote_errors"] += 1
+        self._on_fail()
+
+    def get(self, req):
+        """Read-through: ('hit', entry) / 'miss' / 'timeout' / 'error'
+        / 'garbage' / 'skipped'. No retries — the deadline IS the
+        budget a query is willing to burn on the tier."""
+        if not self.admit():
+            return "skipped", None
+        kind, resp = self._roundtrip("get " + req)
+        if kind != "ok":
+            self._fail(kind)
+            return kind, None
+        self._on_ok()  # the transport worked; payload is separate
+        if faults().fires(SITE_REMOTE_GARBAGE):
+            resp = "\x01garbage " + resp[:len(resp) // 2]
+        try:
+            doc = json.loads(resp)
+        except ValueError:
+            return "garbage", None
+        if not isinstance(doc, dict) or doc.get("ok") is not True:
+            return "garbage", None
+        if not doc.get("hit"):
+            return "miss", None
+        entry = doc.get("entry")
+        if not isinstance(entry, dict) or entry.get("req") != req:
+            return "garbage", None
+        return "hit", entry
+
+    def put(self, entry):
+        """Write-behind: enqueue and return; a full queue sheds."""
+        line = "put " + json.dumps(entry, sort_keys=True)
+        with self._lock:
+            self.pending += 1
+        if not self.queue.try_send(line):
+            with self._lock:
+                self.pending -= 1
+
+    def _write_behind(self):
+        while True:
+            line = self.queue.recv()
+            if line is None:
+                return
+            if self.admit():
+                kind = "error"
+                for _ in range(3):  # util/backoff.rs: bounded retries
+                    kind, _resp = self._roundtrip(line)
+                    if kind == "ok":
+                        break
+                    time.sleep(0.002)
+                if kind == "ok":
+                    self._on_ok()
+                else:
+                    self._fail(kind)
+            with self._lock:
+                self.pending -= 1
+
+    def flush(self, timeout=5.0):
+        started = time.monotonic()
+        while time.monotonic() - started < timeout:
+            with self._lock:
+                if self.pending == 0:
+                    return True
+            time.sleep(0.001)
+        return False
+
+
+class ToyService:
+    """The service core contract: LRU cache + single-flight coalescing,
+    plus (PR 8) an optional remote second tier consulted between the
+    L1 miss and the planner. Mirrors PlanService's stats transitions
+    (hits, misses, coalesced, planner_runs, remote_*) so the
+    stats-verb assertions carry over."""
+
+    def __init__(self, capacity=256, tier=None):
         self._lock = threading.Lock()
         self.cache = OrderedDict()
         self.flights = {}
+        self.tier = tier
         self.stats = {"hits": 0, "misses": 0, "coalesced": 0,
-                      "planner_runs": 0}
+                      "planner_runs": 0, "remote_hits": 0,
+                      "remote_misses": 0, "remote_quarantined": 0}
+
+    def _finish(self, key, flight, value):
+        with self._lock:
+            if value is not None:
+                self.cache[key] = value
+                while len(self.cache) > 256:
+                    self.cache.popitem(last=False)
+            flight["value"] = value
+            del self.flights[key]
+        flight["done"].set()
 
     def query(self, setting, mem, batch):
         key = (setting, round(float(mem), 9), int(batch))
@@ -370,17 +712,37 @@ class ToyService:
             value = flight["value"]
             return None if value is None else dict(value,
                                                    source="coalesced")
+        if self.tier is not None:
+            # L2 read-through on the L1 miss, before the planner. A
+            # hit reclassifies the provisional miss so the invariant
+            # hits + remote_hits + misses == queries - rejected stays
+            # exact; everything else demotes to a plain local miss.
+            req = canonical_req(setting, key[1], key[2])
+            kind, entry = self.tier.get(req)
+            if kind == "hit":
+                value = validate_entry(entry, setting, key[1], key[2],
+                                       req)
+                if value is not None:
+                    with self._lock:
+                        self.stats["misses"] -= 1
+                        self.stats["remote_hits"] += 1
+                    self._finish(key, flight, value)
+                    return dict(value, source="remote")
+                kind = "garbage"  # validated against the tables: lies
+            if kind == "garbage":
+                with self._lock:
+                    self.stats["remote_quarantined"] += 1
+            elif kind == "miss":
+                with self._lock:
+                    self.stats["remote_misses"] += 1
+            # timeout / error / skipped: counted in the tier itself
         with self._lock:
             self.stats["planner_runs"] += 1
         value = toy_plan(setting, mem, batch)
-        with self._lock:
-            if value is not None:
-                self.cache[key] = value
-                while len(self.cache) > 256:
-                    self.cache.popitem(last=False)
-            flight["value"] = value
-            del self.flights[key]
-        flight["done"].set()
+        if value is not None and self.tier is not None:
+            self.tier.put(entry_of(canonical_req(setting, key[1],
+                                                 key[2]), value))
+        self._finish(key, flight, value)
         return None if value is None else dict(value, source="cold")
 
 
@@ -407,6 +769,16 @@ def handle_line(service, telemetry, line):
     if verb == "stats":
         with service._lock:
             doc = dict(service.stats)
+        if service.tier is not None:
+            # merge the tier-owned counters, exactly like
+            # PlanService::stats()
+            for name in ("remote_errors", "remote_timeouts",
+                         "breaker_open"):
+                doc[name] = service.tier.get_counter(name)
+            doc["breaker"] = service.tier.breaker_state()
+        else:
+            doc.update(remote_errors=0, remote_timeouts=0,
+                       breaker_open=0, breaker="none")
         doc.update(ok=True, kind="stats", telemetry=telemetry.to_json())
         return json.dumps(doc), "continue"
     if verb != "query":
@@ -449,14 +821,19 @@ def handle_line(service, telemetry, line):
 
 
 class Frontend:
-    """frontend.rs::Frontend — acceptor + bounded worker pool."""
+    """frontend.rs::Frontend — acceptor + bounded worker pool. The
+    line handler is pluggable (frontend.rs::LineHandler): the plan
+    service and the cache server share everything above it."""
 
     POLL_TICK = 0.05
 
     def __init__(self, service, telemetry, workers=4, idle_timeout=30.0,
-                 queue_cap=64):
+                 queue_cap=64, handler=None):
         self.service = service
         self.telemetry = telemetry
+        self.handler = handler or (
+            lambda line: handle_line(self.service, self.telemetry,
+                                     line))
         self.idle_timeout = idle_timeout
         self.shutdown_flag = threading.Event()
         self.listener = socket.create_server(("127.0.0.1", 0))
@@ -571,8 +948,7 @@ class Frontend:
             if not line or line.startswith("#"):
                 continue
             self.telemetry.bump("requests")
-            resp, outcome = handle_line(self.service, self.telemetry,
-                                        line)
+            resp, outcome = self.handler(line)
             if faults().fires(SITE_SOCK_RESET):
                 # frontend.rs sock-reset: tear the response mid-line
                 # and slam the connection — after handle_line, so all
@@ -779,9 +1155,10 @@ def check_telemetry_consistency():
           telemetry.to_json())
     check(telemetry.batch_latency.count == telemetry.get("queries"),
           "histogram count == queries", telemetry.to_json())
-    check(service.stats["hits"] + service.stats["misses"]
+    check(service.stats["hits"] + service.stats["remote_hits"]
+          + service.stats["misses"]
           == telemetry.get("queries") - telemetry.get("rejected"),
-          "hits + misses == validated queries",
+          "hits + remote_hits + misses == validated queries",
           (service.stats, telemetry.to_json()))
     check(service.stats["planner_runs"] == 1,
           "6 identical good queries -> one run", service.stats)
@@ -831,9 +1208,111 @@ def check_shutdown():
     print("graceful shutdown OK")
 
 
+def check_cache_tier():
+    # cross-instance sharing through the second tier
+    ch = CacheHandler(capacity=64)
+    cache_fe = Frontend(None, Telemetry(), workers=2, handler=ch.handle)
+    addr = "%s:%d" % cache_fe.addr
+    a = ToyService(tier=RemoteTier(addr, deadline_s=0.25))
+    qs = [(f"share{i}", 2.0 + i, 1 + i % 3) for i in range(4)]
+    base = [toy_plan(s, m, b) for s, m, b in qs]
+    for (s, m, b), want in zip(qs, base):
+        got = a.query(s, m, b)
+        check(got["choice"] == want["choice"]
+              and got["time_s"] == want["time_s"],
+              "instance A must match the remote-less planner",
+              (got, want))
+    check(a.tier.flush(5.0), "write-behind must drain")
+    entries = json.loads(ch.handle("stats")[0])["entries"]
+    check(entries == 4, "every plan landed in the tier", entries)
+    b_svc = ToyService(tier=RemoteTier(addr, deadline_s=0.25))
+    for (s, m, b), want in zip(qs, base):
+        got = b_svc.query(s, m, b)
+        check(got["source"] == "remote"
+              and got["choice"] == want["choice"]
+              and got["time_s"] == want["time_s"],
+              "instance B must be served bit-identically from the tier",
+              (got, want))
+    check(b_svc.stats["planner_runs"] == 0, "B never planned",
+          b_svc.stats)
+    check(b_svc.stats["remote_hits"] == 4
+          and b_svc.stats["misses"] == 0,
+          "a remote hit reclassifies the provisional miss", b_svc.stats)
+    # a lying entry under a real key quarantines, never answers
+    req = canonical_req("poison", round(2.0, 9), 1)
+    ch.handle("put " + json.dumps(
+        {"schema": ENTRY_SCHEMA, "req": req, "choice": [0] * 12,
+         "time_s": 1.0, "peak": 1.0}))
+    want = toy_plan("poison", 2.0, 1)
+    got = b_svc.query("poison", 2.0, 1)
+    check(got["choice"] == want["choice"]
+          and got["time_s"] == want["time_s"],
+          "a lying cache entry must never change a plan", got)
+    check(b_svc.stats["remote_quarantined"] == 1,
+          "and it must quarantine", b_svc.stats)
+    # a dead remote is invisible: same answers, failures counted,
+    # breaker trips and then skips for free
+    dead = socket.create_server(("127.0.0.1", 0))
+    dead_addr = "%s:%d" % dead.getsockname()
+    dead.close()
+    tier_d = RemoteTier(dead_addr, deadline_s=0.05, threshold=2,
+                        cooldown_s=30.0)
+    d = ToyService(tier=tier_d)
+    for (s, m, b), want in zip(qs, base):
+        got = d.query(s, m, b)
+        check(got["choice"] == want["choice"]
+              and got["time_s"] == want["time_s"],
+              "a dead tier must be invisible to answers", (got, want))
+    check(d.stats["planner_runs"] == 4, "every query planned locally",
+          d.stats)
+    check(tier_d.get_counter("remote_errors")
+          + tier_d.get_counter("remote_timeouts") >= 2,
+          "failures must be counted", tier_d.counters)
+    check(tier_d.get_counter("breaker_open") == 1
+          and tier_d.breaker_state() == "open", "breaker must trip",
+          tier_d.counters)
+    t0 = time.monotonic()
+    for _ in range(50):
+        check(tier_d.get("anything")[0] == "skipped",
+              "an open breaker skips")
+    check(time.monotonic() - t0 < 0.5,
+          "an open breaker must cost ~nothing per query")
+    cache_fe.shutdown()
+    cache_fe.join()
+    print("cache tier mirror OK: shared, quarantined, "
+          "dead-remote-proof")
+
+
+def arg_value(argv, flag, default=None):
+    if flag in argv:
+        i = argv.index(flag)
+        if i + 1 < len(argv):
+            return argv[i + 1]
+    return default
+
+
 def main():
-    if "--serve" in sys.argv[1:]:
-        frontend = Frontend(ToyService(), Telemetry(), workers=8)
+    argv = sys.argv[1:]
+    if "--cache-serve" in argv:
+        handler = CacheHandler(int(arg_value(argv, "--cache-cap",
+                                             4096)))
+        frontend = Frontend(None, Telemetry(), workers=4,
+                            handler=handler.handle)
+        print(json.dumps({"addr": "%s:%d" % frontend.addr,
+                          "kind": "listening", "ok": True}),
+              flush=True)
+        frontend.join()
+        return
+    if "--serve" in argv:
+        tier = None
+        remote = arg_value(argv, "--remote")
+        if remote:
+            deadline_ms = int(arg_value(argv, "--remote-deadline-ms",
+                                        5))
+            tier = RemoteTier(remote,
+                              deadline_s=max(deadline_ms, 1) / 1000.0)
+        frontend = Frontend(ToyService(tier=tier), Telemetry(),
+                            workers=8)
         print(json.dumps({"addr": "%s:%d" % frontend.addr,
                           "kind": "listening", "ok": True}),
               flush=True)
@@ -850,6 +1329,7 @@ def main():
     check_telemetry_consistency()
     check_framing()
     check_shutdown()
+    check_cache_tier()
     print("OK: all frontend-mirror checks passed")
 
 

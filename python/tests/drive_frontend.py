@@ -24,17 +24,30 @@ without a Rust toolchain, or against an already-running server
 
 `--chaos [--fault-seed N]` starts the server under a deterministic
 `OSDP_FAULTS` plan (panicking searches, slow searches, cache I/O
-errors, mid-line socket resets) and replaces the exact-count phases
-with the survival contract CI's `fault-injection` job pins:
+errors, mid-line socket resets, and the remote-tier fault sites) and
+replaces the exact-count phases with the survival contract CI's
+`fault-injection` job pins:
 
 1. the server stays responsive through the whole run (every request
    eventually succeeds on retry — individual deaths are the point);
 2. `worker_restarts` goes positive: injected panics really crossed
    the pool and the pool really resurrected;
 3. the telemetry invariants hold *exactly* under chaos — histogram
-   counts == queries, hits + misses == queries − rejected;
+   counts == queries, hits + remote_hits + misses == queries −
+   rejected;
 4. `shutdown` is acknowledged (or a torn ack still shuts down) and
    the process exits 0.
+
+`--tier` starts a standalone cache server (`osdp cache-serve`, or the
+mirror's `--cache-serve`) plus **two** plan-service instances attached
+to it via `--remote`, and proves the second-tier contract through the
+wire: instance A plans cold and write-behind-publishes; once the tier
+holds every entry, instance B answers the same queries bit-identically
+with **zero** planner runs, all `source:"remote"`, and the invariant
+`hits + remote_hits + misses == queries - rejected` holds on both.
+`--tier --chaos` runs the survival contract on both instances with the
+remote fault sites firing — remote faults must demote to local misses,
+never change an answer, and never wedge a shutdown.
 
 Stdlib only; exits non-zero on any mismatch.
 """
@@ -136,10 +149,11 @@ def chaos(addr, proc, deadline_s=120.0):
         check(stats.get("kind") == "stats", "stats verb under chaos",
               stats)
         tele = stats["telemetry"]
-        check(stats["hits"] + stats["misses"]
+        check(stats["hits"] + stats.get("remote_hits", 0)
+              + stats["misses"]
               == tele["queries"] - tele["rejected"],
-              "hits + misses == queries - rejected must survive chaos",
-              stats)
+              "hits + remote_hits + misses == queries - rejected "
+              "must survive chaos", stats)
         lat = tele["latency"]
         check(lat["batch"]["count"] + lat["sweep"]["count"]
               == tele["queries"],
@@ -174,6 +188,130 @@ def chaos(addr, proc, deadline_s=120.0):
     print("OK: fault-injected serve path held end to end")
 
 
+def launch(args, env, extra=(), cache=False):
+    """Start one server process (binary or mirror, plan service or
+    cache server) and parse its listening banner. Returns
+    (proc, (host, port), "host:port")."""
+    if args.mirror:
+        mirror = os.path.join(os.path.dirname(__file__), os.pardir,
+                              "mirror", "frontend_mirror.py")
+        mode = "--cache-serve" if cache else "--serve"
+        cmd = [sys.executable, mirror, mode, *extra]
+    elif cache:
+        cmd = [args.bin, "cache-serve", "--listen", "127.0.0.1:0",
+               *extra]
+    else:
+        cmd = [args.bin, "serve", "--listen", "127.0.0.1:0",
+               "--workers", str(args.workers), "--metrics", *extra]
+    proc = subprocess.Popen(cmd, stdout=subprocess.PIPE, text=True,
+                            env=env)
+    banner = proc.stdout.readline()
+    try:
+        doc = json.loads(banner)
+    except ValueError:
+        fail("first stdout line is not JSON", banner)
+    check(doc.get("kind") == "listening" and doc.get("ok") is True,
+          "expected the listening banner", doc)
+    host, port = doc["addr"].rsplit(":", 1)
+    return proc, (host, int(port)), doc["addr"]
+
+
+def shutdown_server(addr, proc, deadline_s=60.0):
+    """Ask a server to shut down, tolerating torn acks (an injected
+    sock-reset can tear the ack line; the flag still flips)."""
+    deadline = time.monotonic() + deadline_s
+    while True:
+        ack = try_request(addr, "shutdown")
+        if ack is not None:
+            check(ack == {"kind": "shutdown", "ok": True},
+                  "shutdown ack", ack)
+            break
+        try:
+            socket.create_connection(addr, timeout=2).close()
+        except OSError:
+            break  # already draining
+        check(time.monotonic() < deadline, "shutdown never acknowledged")
+        time.sleep(0.02)
+    if proc is not None:
+        rc = proc.wait(timeout=120)
+        check(rc == 0, "server must exit 0 after shutdown", rc)
+
+
+def tier_run(args, env):
+    """The second-tier contract: one cache server, two plan services
+    sharing it."""
+    cache_proc, cache_addr, cache_str = launch(args, env, cache=True)
+    print(f"cache server listening on {cache_str}")
+    extra = ["--remote", cache_str, "--remote-deadline-ms", "250"]
+    a_proc, a_addr, a_str = launch(args, env, extra=extra)
+    b_proc, b_addr, b_str = launch(args, env, extra=extra)
+    print(f"plan services listening on {a_str} and {b_str}")
+
+    if args.chaos:
+        # survival contract on both instances, remote fault sites
+        # firing against a real shared tier; then everything must
+        # still shut down cleanly
+        chaos(a_addr, a_proc)
+        chaos(b_addr, b_proc)
+        shutdown_server(cache_addr, cache_proc)
+        print("OK: fault-injected two-tier serve path held end to end")
+        return
+
+    # ---- phase A: instance A plans cold and publishes write-behind
+    cold = [client(a_addr, [line])[0] for line in DISTINCT]
+    for r in cold:
+        check(r.get("ok") is True, "cold query on A failed", r)
+    a_stats = client(a_addr, ["stats"])[0]
+    check(a_stats["planner_runs"] == len(DISTINCT),
+          "A must have planned every distinct query", a_stats)
+    check(a_stats.get("remote_hits") == 0
+          and a_stats.get("remote_misses") == len(DISTINCT),
+          "a fresh tier must miss for every A query", a_stats)
+    deadline = time.monotonic() + 60.0
+    while True:
+        doc = try_request(cache_addr, "stats")
+        if doc is not None and doc.get("entries") == len(DISTINCT):
+            break
+        check(time.monotonic() < deadline,
+              "write-behind puts never landed in the tier", doc)
+        time.sleep(0.02)
+    print(f"phase A OK: {len(DISTINCT)} plans published to the tier")
+
+    # ---- phase B: instance B answers from the tier, zero planning
+    shared = [client(b_addr, [line])[0] for line in DISTINCT]
+    for got, want in zip(shared, cold):
+        check(got.get("ok") is True, "shared query on B failed", got)
+        check(got.get("source") == "remote",
+              "B must be served from the remote tier", got)
+        check(got["choice"] == want["choice"]
+              and got["time_s"] == want["time_s"],
+              "cross-instance answers must be bit-identical",
+              (got, want))
+    b_stats = client(b_addr, ["stats"])[0]
+    check(b_stats["planner_runs"] == 0,
+          "B must never have run the planner", b_stats)
+    check(b_stats.get("remote_hits") == len(DISTINCT)
+          and b_stats["misses"] == 0,
+          "every B query must reclassify as a remote hit", b_stats)
+    check(b_stats.get("breaker") == "closed",
+          "a healthy tier keeps the breaker closed", b_stats)
+    for name, stats in (("A", a_stats), ("B", b_stats)):
+        tele = stats["telemetry"]
+        check(stats["hits"] + stats.get("remote_hits", 0)
+              + stats["misses"]
+              == tele["queries"] - tele["rejected"],
+              f"hits + remote_hits + misses invariant on {name}",
+              stats)
+    print(f"phase B OK: {len(DISTINCT)} queries served from the tier, "
+          "0 planner runs on B")
+
+    # ---- teardown: all three processes exit 0
+    shutdown_server(b_addr, b_proc)
+    shutdown_server(a_addr, a_proc)
+    shutdown_server(cache_addr, cache_proc)
+    print("OK: second-tier sharing contract holds end to end")
+
+
 def concurrent(addr, lines):
     """One thread + connection per line, released together."""
     barrier = threading.Barrier(len(lines))
@@ -206,48 +344,48 @@ def main():
                          "the exact-count phases")
     ap.add_argument("--fault-seed", type=int, default=1117,
                     help="seed for the --chaos fault plan")
+    ap.add_argument("--tier", action="store_true",
+                    help="start a cache server plus two plan services "
+                         "sharing it and assert the second-tier "
+                         "contract")
     args = ap.parse_args()
 
     env = dict(os.environ)
     if args.chaos:
-        env["OSDP_FAULTS"] = (
+        spec = (
             f"seed:{args.fault_seed},panic:60000,slow:40000,slow-ms:1,"
             "cache-io:150000,sock-reset:40000"
         )
+        if args.tier:
+            spec += ",remote-slow:60000,remote-io:120000," \
+                    "remote-garbage:60000"
+        env["OSDP_FAULTS"] = spec
         print(f"chaos plan: {env['OSDP_FAULTS']}")
+
+    if args.tier:
+        if args.addr:
+            ap.error("--tier starts its own servers; drop --addr")
+        if not (args.bin or args.mirror):
+            ap.error("one of --bin, --mirror is required")
+        tier_run(args, env)
+        return
 
     proc = None
     if args.addr:
         host, port = args.addr.rsplit(":", 1)
         addr = (host, int(port))
     else:
-        if args.mirror:
-            mirror = os.path.join(os.path.dirname(__file__), os.pardir,
-                                  "mirror", "frontend_mirror.py")
-            cmd = [sys.executable, mirror, "--serve"]
-        elif args.bin:
-            cmd = [args.bin, "serve", "--listen", "127.0.0.1:0",
-                   "--workers", str(args.workers), "--metrics"]
-            if args.chaos:
-                # a disk cache so the injected cache-io faults actually
-                # exercise the bounded-retry persistence path
-                import tempfile
-                cmd += ["--cache-dir",
-                        tempfile.mkdtemp(prefix="osdp-chaos-")]
-        else:
+        if not (args.bin or args.mirror):
             ap.error("one of --bin, --addr, --mirror is required")
-        proc = subprocess.Popen(cmd, stdout=subprocess.PIPE, text=True,
-                                env=env)
-        banner = proc.stdout.readline()
-        try:
-            doc = json.loads(banner)
-        except ValueError:
-            fail("first stdout line is not JSON", banner)
-        check(doc.get("kind") == "listening" and doc.get("ok") is True,
-              "expected the listening banner", doc)
-        host, port = doc["addr"].rsplit(":", 1)
-        addr = (host, int(port))
-        print(f"server listening on {doc['addr']}")
+        extra = []
+        if args.chaos and args.bin:
+            # a disk cache so the injected cache-io faults actually
+            # exercise the bounded-retry persistence path
+            import tempfile
+            extra = ["--cache-dir",
+                     tempfile.mkdtemp(prefix="osdp-chaos-")]
+        proc, addr, addr_str = launch(args, env, extra=extra)
+        print(f"server listening on {addr_str}")
 
     if args.chaos:
         chaos(addr, proc)

@@ -5,6 +5,7 @@
 //! osdp gantt                            Figure 1 (DP vs ZDP op gantt)
 //! osdp plan --setting 48L/1024H ...     search an execution plan
 //! osdp serve                            cached/coalescing plan service
+//! osdp cache-serve --listen ADDR        shared second cache tier
 //! osdp query --setting ... --batch 4    one-shot through the plan cache
 //! osdp fig5|fig6|fig8|fig9 [--mem 8]    regenerate a figure
 //! osdp fig7                             splitting sweep table
@@ -87,6 +88,7 @@ fn main() {
         "headline" => headline(&args, quality),
         "plan" => plan(&args),
         "serve" => serve(&args),
+        "cache-serve" => cache_serve(&args),
         "query" => service_query(&args),
         "replan" => service_replan(&args),
         "train" => run_train(&args),
@@ -129,6 +131,7 @@ commands:
   serve   [--cache-dir D] [--cache-cap 256] [--listen ADDR]
           [--workers N] [--warmup 8] [--idle-timeout-ms 30000]
           [--queue-cap 64] [--metrics]
+          [--remote ADDR] [--remote-deadline-ms 5]
           line-oriented plan service: one request per line in ('query
           setting=48L/1024H mem=8 batch=4', 'sweep ...', 'replan ...
           new-devices=4', 'stats', 'quit', 'shutdown'), one JSON
@@ -146,10 +149,25 @@ commands:
           cache are replanned (warm-started from their old choice
           vectors) before the listener accepts traffic. --metrics dumps
           counters + latency histograms as JSON on exit.
+          --remote ADDR wires a second cache tier (an osdp cache-serve
+          instance) under the local cache: read-through on misses,
+          write-behind on stores, every operation under a hard
+          --remote-deadline-ms budget, consecutive failures tripping a
+          circuit breaker to local-only mode. A dead, slow, or lying
+          remote degrades service to local-only — it never changes an
+          answer and never fails a query.
+  cache-serve [--listen ADDR] [--cache-cap 4096] [--workers 2]
+          [--idle-timeout-ms 30000] [--queue-cap 64]
+          standalone shared cache tier speaking newline-delimited
+          'get <request-line>', 'put <entry-json>', 'near <hex> <k>',
+          'stats', 'quit', 'shutdown' — entries are the same versioned
+          choice-vector format the disk cache persists, so any number
+          of serve instances share plans through one tier
   query   --setting S (--batch B | [--batch-cap 64])
           [--mem 8] [--devices 8] [--cluster C] [--g 0,4] [--ckpt]
           [--fine] [--no-scopes] [--engine E] [--threads N] [--no-warm]
           [--cache-dir D] [--json]
+          [--remote ADDR] [--remote-deadline-ms 5]
           one-shot request through the same plan service (a --cache-dir
           makes the cache persistent across invocations)
   replan  --setting S (--batch B | [--batch-cap 64]) [query knobs...]
@@ -405,7 +423,8 @@ fn serve(args: &Args) {
     use std::io::Write as _;
     use std::sync::Arc;
 
-    let (service, stale) = PlanService::open(cache_config(args));
+    let (mut service, stale) = PlanService::open(cache_config(args));
+    attach_remote_from_args(args, &mut service);
     let service = Arc::new(service);
     let telemetry = Arc::new(Telemetry::new());
 
@@ -473,13 +492,67 @@ fn serve(args: &Args) {
     eprintln!("osdp serve: done — {}", service.stats().describe());
     if args.flag("metrics") {
         eprintln!("{}", render_metrics(&service.stats(),
-                                       service.cache_len(), &telemetry));
+                                       service.cache_len(), &telemetry,
+                                       service.breaker_state()));
+    }
+}
+
+/// Standalone second cache tier: the cache-store protocol handler behind
+/// the same TCP front-end (bounded pool, framing, fault injection,
+/// graceful shutdown) the plan service uses.
+fn cache_serve(args: &Args) {
+    use osdp::service::{CacheServerHandler, Frontend, FrontendConfig,
+                        Telemetry};
+    use std::io::Write as _;
+    use std::sync::Arc;
+
+    let addr = args.get_or("listen", "127.0.0.1:0").to_string();
+    let handler =
+        Arc::new(CacheServerHandler::new(args.usize_or("cache-cap", 4096)));
+    let telemetry = Arc::new(Telemetry::new());
+    let cfg = FrontendConfig {
+        addr,
+        workers: args.usize_or("workers", 2),
+        idle_timeout: std::time::Duration::from_millis(
+            args.usize_or("idle-timeout-ms", 30_000) as u64,
+        ),
+        queue_cap: args.usize_or("queue-cap", 64),
+    };
+    let frontend = match Frontend::start_with(handler,
+                                              Arc::clone(&telemetry), cfg) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("cache-serve: cannot bind: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "{{\"addr\":\"{}\",\"kind\":\"listening\",\"ok\":true}}",
+        frontend.local_addr()
+    );
+    let _ = std::io::stdout().flush();
+    frontend.join();
+    eprintln!("osdp cache-serve: done");
+}
+
+/// Wire `--remote ADDR` (and `--remote-deadline-ms`) under a service:
+/// read-through / write-behind L2 with a deadline budget and a circuit
+/// breaker. No remote flag means no tier — zero overhead.
+fn attach_remote_from_args(args: &Args, service: &mut PlanService) {
+    use osdp::service::{RemoteConfig, RemoteTier};
+    if let Some(addr) = args.get("remote") {
+        let mut cfg = RemoteConfig::new(addr);
+        cfg.deadline = std::time::Duration::from_millis(
+            args.usize_or("remote-deadline-ms", 5).max(1) as u64,
+        );
+        service.attach_remote(RemoteTier::start(cfg));
     }
 }
 
 fn service_query(args: &Args) {
     let q = plan_query_from_args(args);
-    let service = PlanService::new(cache_config(args));
+    let mut service = PlanService::new(cache_config(args));
+    attach_remote_from_args(args, &mut service);
     let outcome = service.query(&q);
     report_query_outcome(args, &service, outcome);
 }
@@ -520,7 +593,8 @@ fn new_cluster_from_args(args: &Args, q: &PlanQuery) -> ClusterSpec {
 fn service_replan(args: &Args) {
     let q = plan_query_from_args(args);
     let new_cluster = new_cluster_from_args(args, &q);
-    let service = PlanService::new(cache_config(args));
+    let mut service = PlanService::new(cache_config(args));
+    attach_remote_from_args(args, &mut service);
     if args.flag("sweep-clusters") {
         let rungs = service.replan_sweep_clusters(&q, &new_cluster, None);
         if args.flag("json") {

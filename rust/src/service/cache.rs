@@ -216,29 +216,46 @@ impl PlanCache {
     /// order cannot leak through.
     pub fn neighbor(&self, key: &QueryKey)
                     -> Option<(Vec<usize>, usize)> {
+        self.neighbors(key, 1).into_iter().next()
+    }
+
+    /// The `k` nearest warm-start neighbors of `key`, closest first,
+    /// under the same deterministic rank as [`PlanCache::neighbor`].
+    /// The richer warm-start path repairs each candidate seed and
+    /// offers the search the best repaired one — never worse than the
+    /// single-neighbor seed, because that seed is always among the
+    /// candidates considered.
+    pub fn neighbors(&self, key: &QueryKey, k: usize)
+                     -> Vec<(Vec<usize>, usize)> {
         let target_b = match key.shape {
             QueryShape::Batch(b) => b,
             QueryShape::Sweep { .. } => 1,
         };
         let mem_q = key.mem_limit();
-        self.map
+        let mut ranked: Vec<_> = self
+            .map
             .iter()
-            .filter(|(k, _)| k.structure == key.structure && **k != *key)
-            .filter_map(|(k, slot)| {
-                let QueryShape::Batch(nb) = k.shape else { return None };
+            .filter(|(kk, _)| kk.structure == key.structure && **kk != *key)
+            .filter_map(|(kk, slot)| {
+                let QueryShape::Batch(nb) = kk.shape else { return None };
                 let CachedValue::Plan { choice } = &slot.value else {
                     return None;
                 };
-                let mem_dist = (k.mem_limit() - mem_q).abs();
+                let mem_dist = (kk.mem_limit() - mem_q).abs();
                 Some((
                     (nb.abs_diff(target_b), mem_dist.to_bits(), nb,
-                     k.mem_limit_bits),
+                     kk.mem_limit_bits),
                     choice,
                     nb,
                 ))
             })
-            .min_by_key(|(rank, _, _)| *rank)
+            .collect();
+        ranked.sort_by_key(|(rank, _, _)| *rank);
+        ranked
+            .into_iter()
+            .take(k)
             .map(|(_, choice, nb)| (choice.clone(), nb))
+            .collect()
     }
 
     // ----- persistence -----
@@ -430,15 +447,15 @@ pub fn write_cache_file(path: &std::path::Path, doc: &str)
         .map_err(|e| format!("renaming {tmp:?} -> {path:?}: {e}"))
 }
 
-fn choice_to_json(choice: &[usize]) -> Json {
+pub(crate) fn choice_to_json(choice: &[usize]) -> Json {
     Json::Arr(choice.iter().map(|&c| Json::Num(c as f64)).collect())
 }
 
-fn choice_from_json(v: &Json) -> Option<Vec<usize>> {
+pub(crate) fn choice_from_json(v: &Json) -> Option<Vec<usize>> {
     v.as_arr()?.iter().map(Json::as_usize).collect()
 }
 
-fn value_to_json(v: &CachedValue) -> Json {
+pub(crate) fn value_to_json(v: &CachedValue) -> Json {
     let mut o = BTreeMap::new();
     match v {
         CachedValue::Plan { choice } => {
@@ -461,7 +478,7 @@ fn value_to_json(v: &CachedValue) -> Json {
     Json::Obj(o)
 }
 
-fn value_from_json(v: &Json) -> Option<CachedValue> {
+pub(crate) fn value_from_json(v: &Json) -> Option<CachedValue> {
     match v.get("kind").as_str()? {
         "plan" => Some(CachedValue::Plan {
             choice: choice_from_json(v.get("choice"))?,
@@ -547,6 +564,24 @@ mod tests {
         // no structural sibling -> no neighbor
         let other = QueryKey { structure: StructKey([9, 9]), ..key(4, 8e9) };
         assert!(cache.neighbor(&other).is_none());
+    }
+
+    #[test]
+    fn neighbors_rank_deterministically_and_contain_the_neighbor() {
+        let (mut cache, _, _) = PlanCache::open(CacheConfig::default());
+        cache.insert(key(1, 8e9), plan(vec![10]));
+        cache.insert(key(6, 8e9), plan(vec![60]));
+        cache.insert(key(4, 9e9), plan(vec![49]));
+        cache.insert(key(4, 7e9), plan(vec![47]));
+        cache.insert(key(5, 8e9), CachedValue::Infeasible);
+        cache.insert(key(4, 8e9), plan(vec![48]));
+        let near = cache.neighbors(&key(4, 8e9), 3);
+        // the single nearest neighbor always leads the K-nearest list
+        assert_eq!(near[0], cache.neighbor(&key(4, 8e9)).unwrap());
+        assert_eq!(near, vec![(vec![47], 4), (vec![49], 4), (vec![60], 6)]);
+        // asking for more than exist returns everything, still ranked
+        assert_eq!(cache.neighbors(&key(4, 8e9), 99).len(), 4);
+        assert!(cache.neighbors(&key(4, 8e9), 0).is_empty());
     }
 
     #[test]

@@ -109,6 +109,19 @@ impl<T> Channel<T> {
         }
     }
 
+    /// Non-blocking send: `Err(item)` when the channel is full or
+    /// closed. The remote tier's write-behind path uses this — a slow
+    /// or dead remote must shed puts, never stall a planner thread.
+    pub fn try_send(&self, item: T) -> Result<(), T> {
+        let mut st = lock_recover(&self.state);
+        if st.closed || st.queue.len() >= self.cap {
+            return Err(item);
+        }
+        st.queue.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
     /// Blocks until an item arrives; `None` once closed **and** empty.
     pub fn recv(&self) -> Option<T> {
         let mut st = lock_recover(&self.state);
@@ -142,6 +155,29 @@ impl<T> Channel<T> {
 // ---------------------------------------------------------------------
 // Front-end proper
 // ---------------------------------------------------------------------
+
+/// What a front-end serves: one request line in, one response line and
+/// a connection verdict out. The plan service and the cache-tier server
+/// both sit behind the same acceptor/worker/framing machinery through
+/// this trait — the transport owns connections, timeouts, and panics;
+/// the handler owns the protocol grammar.
+pub trait LineHandler: Send + Sync + 'static {
+    fn handle(&self, line: &str) -> (String, LineOutcome);
+}
+
+/// The plan service behind the standard grammar, with its telemetry
+/// attached (the handler bumps `BadRequests` and observes query
+/// latency; the transport bumps the connection-level counters).
+struct ServiceHandler {
+    service: Arc<PlanService>,
+    telemetry: Arc<Telemetry>,
+}
+
+impl LineHandler for ServiceHandler {
+    fn handle(&self, line: &str) -> (String, LineOutcome) {
+        handle_line_full(&self.service, Some(&self.telemetry), line)
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct FrontendConfig {
@@ -185,6 +221,20 @@ impl Frontend {
         telemetry: Arc<Telemetry>,
         cfg: FrontendConfig,
     ) -> std::io::Result<Frontend> {
+        let handler = Arc::new(ServiceHandler {
+            service,
+            telemetry: Arc::clone(&telemetry),
+        });
+        Frontend::start_with(handler, telemetry, cfg)
+    }
+
+    /// The generic core: any [`LineHandler`] behind the same bounded
+    /// pool, framing, fault-injection, and graceful-shutdown plumbing.
+    pub fn start_with<H: LineHandler>(
+        handler: Arc<H>,
+        telemetry: Arc<Telemetry>,
+        cfg: FrontendConfig,
+    ) -> std::io::Result<Frontend> {
         let listener = TcpListener::bind(&cfg.addr)?;
         let addr = listener.local_addr()?;
         let workers = match cfg.workers {
@@ -220,7 +270,7 @@ impl Frontend {
         let workers = (0..workers)
             .map(|_| {
                 let conns = Arc::clone(&conns);
-                let service = Arc::clone(&service);
+                let handler = Arc::clone(&handler);
                 let telemetry = Arc::clone(&telemetry);
                 let shutdown = Arc::clone(&shutdown);
                 let idle = cfg.idle_timeout;
@@ -237,7 +287,7 @@ impl Frontend {
                         let run = std::panic::catch_unwind(
                             std::panic::AssertUnwindSafe(|| {
                                 while let Some(stream) = conns.recv() {
-                                    serve_connection(&service, &telemetry,
+                                    serve_connection(&*handler, &telemetry,
                                                      &shutdown, addr,
                                                      stream, idle);
                                 }
@@ -297,8 +347,8 @@ enum ReadOutcome {
 }
 
 /// Serve one connection to completion: lines in, JSON lines out.
-fn serve_connection(
-    service: &PlanService,
+fn serve_connection<H: LineHandler>(
+    handler: &H,
     telemetry: &Telemetry,
     shutdown: &AtomicBool,
     addr: SocketAddr,
@@ -356,8 +406,7 @@ fn serve_connection(
                     continue;
                 }
                 telemetry.bump(Counter::Requests);
-                let (response, outcome) =
-                    handle_line_full(service, Some(telemetry), line);
+                let (response, outcome) = handler.handle(line);
                 // Fault-injection boundary (`OSDP_FAULTS` sock-reset):
                 // tear the response mid-line and slam the connection —
                 // the client sees a truncated, non-newline-terminated
@@ -478,6 +527,16 @@ mod tests {
         assert_eq!(ch.recv(), Some(1));
         assert!(t.join().unwrap(), "parked send completes after recv");
         assert_eq!(ch.recv(), Some(2));
+    }
+
+    #[test]
+    fn channel_try_send_sheds_when_full_or_closed() {
+        let ch: Channel<u32> = Channel::bounded(1);
+        assert_eq!(ch.try_send(1), Ok(()));
+        assert_eq!(ch.try_send(2), Err(2), "full channel sheds, no block");
+        assert_eq!(ch.recv(), Some(1));
+        ch.close();
+        assert_eq!(ch.try_send(3), Err(3), "closed channel refuses");
     }
 
     #[test]

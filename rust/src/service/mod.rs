@@ -23,6 +23,11 @@
 //!   structure, different batch/limit), provably result-preserving.
 //! * [`server`] — the line-oriented request protocol behind `osdp serve`
 //!   and `osdp query`.
+//! * [`remote`] — an optional second cache tier (`osdp cache-serve` +
+//!   the `--remote` client): read-through / write-behind under the L1,
+//!   deadline-budgeted, circuit-broken, and quarantine-validated so a
+//!   dead or lying remote degrades to local-only instead of failing or
+//!   corrupting anything.
 //!
 //! Counters for all of it surface as [`ServiceStats`], alongside the
 //! planner's own `DfsStats`/`SweepStats`/`FrontierStats`.
@@ -31,6 +36,7 @@ pub mod cache;
 pub mod coalesce;
 pub mod frontend;
 pub mod key;
+pub mod remote;
 pub mod replan;
 pub mod server;
 pub mod telemetry;
@@ -38,8 +44,9 @@ pub mod warm;
 
 pub use cache::{CacheConfig, CachedValue, DiskLoad, PlanCache, StaleEntry};
 pub use coalesce::Coalescer;
-pub use frontend::{Frontend, FrontendConfig};
+pub use frontend::{Frontend, FrontendConfig, LineHandler};
 pub use key::{COST_MODEL_EPOCH, QueryKey, QueryShape, StructKey};
+pub use remote::{CacheServerHandler, RemoteConfig, RemoteOutcome, RemoteTier};
 pub use replan::CapacityCandidate;
 pub use server::{LineOutcome, Request, handle_line, handle_line_full,
                  request_line, serve_loop, serve_loop_with};
@@ -119,6 +126,8 @@ pub enum Source {
     Cache,
     /// This caller joined another caller's in-flight search.
     Coalesced,
+    /// L1 miss served from the remote cache tier: no planner ran.
+    Remote,
     /// Cache miss planned with a warm-start incumbent from a neighbor
     /// entry.
     Warm,
@@ -131,6 +140,7 @@ impl Source {
         match self {
             Source::Cache => "cache",
             Source::Coalesced => "coalesced",
+            Source::Remote => "remote",
             Source::Warm => "warm",
             Source::Cold => "cold",
         }
@@ -180,13 +190,27 @@ pub struct ServiceStats {
     /// Corrupt disk-cache payloads moved aside to `plan_cache.json.bad`
     /// at startup instead of being served or silently dropped.
     pub quarantined_entries: u64,
+    /// L1 misses answered by the remote cache tier (no planner ran).
+    pub remote_hits: u64,
+    /// Remote lookups the tier answered with "not cached".
+    pub remote_misses: u64,
+    /// Remote payloads that failed validation (garbage bytes, version
+    /// skew, wrong key, menu mismatch) and were demoted to misses.
+    pub remote_quarantined: u64,
+    /// Remote operations that failed with an I/O error (merged from the
+    /// tier's own atomics by [`PlanService::stats`]).
+    pub remote_errors: u64,
+    /// Remote operations cut off by the deadline budget.
+    pub remote_timeouts: u64,
+    /// Times the remote circuit breaker tripped open.
+    pub breaker_open: u64,
 }
 
 impl ServiceStats {
     /// Every counter with its stable wire name (the `stats` verb and
     /// the `--metrics` dump both render from this, so they cannot
     /// drift).
-    pub fn fields(&self) -> [(&'static str, u64); 15] {
+    pub fn fields(&self) -> [(&'static str, u64); 21] {
         [
             ("hits", self.hits),
             ("misses", self.misses),
@@ -203,6 +227,12 @@ impl ServiceStats {
             ("replan_repairs", self.replan_repairs),
             ("cache_write_retries", self.cache_write_retries),
             ("quarantined_entries", self.quarantined_entries),
+            ("remote_hits", self.remote_hits),
+            ("remote_misses", self.remote_misses),
+            ("remote_quarantined", self.remote_quarantined),
+            ("remote_errors", self.remote_errors),
+            ("remote_timeouts", self.remote_timeouts),
+            ("breaker_open", self.breaker_open),
         ]
     }
 
@@ -287,6 +317,11 @@ pub const MAX_QUERY_THREADS: usize = 1024;
 /// request wedge the service (and every caller coalesced onto it).
 pub const MAX_QUERY_BATCH: usize = 4096;
 const MAX_CUSTOM_LAYERS: usize = 512;
+/// Warm-start candidates considered per miss (explicit seed + local
+/// neighbors, falling back to remote `near` candidates). Best-of-K by
+/// repaired `(time, lex)` — small, because each candidate costs one
+/// greedy repair.
+const WARM_K: usize = 3;
 const MAX_CUSTOM_DIM: usize = 1 << 20;
 
 /// One planning request, shape included. Engine and thread count are
@@ -492,6 +527,10 @@ type FlightValue = Result<(CachedValue, bool), PlanError>;
 pub struct PlanService {
     inner: Mutex<Inner>,
     coalescer: Coalescer<FlightValue>,
+    /// Optional second cache tier (read-through / write-behind). All
+    /// remote failures degrade to the local-only path — attaching a
+    /// dead or lying remote can never change an answer or fail a query.
+    remote: Option<RemoteTier>,
 }
 
 impl PlanService {
@@ -516,6 +555,7 @@ impl PlanService {
                 dirty: false,
             }),
             coalescer: Coalescer::new(),
+            remote: None,
         };
         (service, harvest)
     }
@@ -525,8 +565,34 @@ impl PlanService {
         PlanService::new(CacheConfig::default())
     }
 
+    /// Wire a second cache tier underneath the L1 (`--remote`). Must be
+    /// called before the service starts answering queries.
+    pub fn attach_remote(&mut self, tier: RemoteTier) {
+        self.remote = Some(tier);
+    }
+
+    /// The attached remote tier, if any (tests and shutdown draining).
+    pub fn remote(&self) -> Option<&RemoteTier> {
+        self.remote.as_ref()
+    }
+
+    /// Remote circuit-breaker state: `closed`/`open`/`half-open`, or
+    /// `none` when no remote tier is attached.
+    pub fn breaker_state(&self) -> &'static str {
+        self.remote.as_ref().map_or("none", |r| r.breaker_state())
+    }
+
     pub fn stats(&self) -> ServiceStats {
-        lock_recover(&self.inner).stats
+        let mut s = lock_recover(&self.inner).stats;
+        // the transport-failure counters live in the tier's atomics
+        // (they are bumped off the inner lock's hot path); merge them
+        // here so every stats surface sees one consistent struct
+        if let Some(r) = &self.remote {
+            s.remote_errors = r.errors();
+            s.remote_timeouts = r.timeouts();
+            s.breaker_open = r.breaker_open_count();
+        }
+        s
     }
 
     /// Cached entry count (observability; the `stats` protocol verb).
@@ -702,59 +768,126 @@ impl PlanService {
                 }
             }
         }
-        // an explicit seed (warm-up replay) outranks the neighbor
-        // heuristic: it is the *same query's* old answer, so after the
-        // greedy repair it is the best incumbent on offer. Seeds from a
-        // previous epoch may index menus that no longer exist — validate
-        // before repairing, ignore on any mismatch.
-        let explicit_seed = seed
-            .filter(|s| {
-                q.warm
-                    && CachedValue::Plan { choice: s.to_vec() }
-                        .validates_against(profiler)
-            })
-            .and_then(|s| {
-                let b_gate = match key.shape {
-                    QueryShape::Batch(b) => b,
-                    QueryShape::Sweep { .. } => 1,
-                };
-                planner::greedy_search_from(profiler, key.mem_limit(),
-                                            b_gate, s)
-                    .map(|(repaired, _cost)| match key.shape {
-                        QueryShape::Batch(_) => repaired,
-                        QueryShape::Sweep { .. } => s.to_vec(),
-                    })
-            });
-        let warm_choice = if explicit_seed.is_some() {
-            explicit_seed
-        } else if q.warm {
-            let neighbor =
-                lock_recover(&self.inner).cache.neighbor(key);
-            neighbor.and_then(|(choice, _nb)| {
-                // Repair the neighbor once here (greedy downgrades until
-                // it fits — `greedy::search_from`). Single-batch queries
-                // hand the engine the already-repaired seed (its own
-                // repair then exits after one feasibility check); sweeps
-                // keep the raw neighbor because every batch of the sweep
-                // re-repairs it at its own size.
-                let b_gate = match key.shape {
-                    QueryShape::Batch(b) => b,
-                    QueryShape::Sweep { .. } => 1,
-                };
-                match planner::greedy_search_from(profiler,
-                                                  key.mem_limit(), b_gate,
-                                                  &choice)
-                {
-                    Some((repaired, _cost)) => Some(match key.shape {
-                        QueryShape::Batch(_) => repaired,
-                        QueryShape::Sweep { .. } => choice,
-                    }),
-                    None => {
-                        lock_recover(&self.inner).stats.warm_infeasible +=
-                            1;
-                        None
+        // ---- L2 read-through: before paying for a planner run, ask
+        // the remote tier (when one is attached) for the exact entry,
+        // addressed by the canonical request line. A validated hit is
+        // a choice vector whose costs re-derive locally, so serving it
+        // is bit-identical to the search that populated it; anything
+        // less than a validated hit — miss, timeout, I/O error, open
+        // breaker, garbage — demotes to the local miss path below.
+        if let Some(tier) = &self.remote {
+            if let Some(req) = server::request_line(q) {
+                match tier.get(key, &req) {
+                    RemoteOutcome::Hit(v)
+                        if v.validates_against(profiler) =>
+                    {
+                        {
+                            let mut guard = lock_recover(&self.inner);
+                            let inner = &mut *guard;
+                            // reclassify: counted as a miss on the
+                            // outer check, served by the second tier —
+                            // hits + remote_hits + misses == queries
+                            inner.stats.misses -= 1;
+                            inner.stats.remote_hits += 1;
+                            inner.stats.inserts += 1;
+                            inner.stats.evictions +=
+                                inner.cache.insert_requested(
+                                    *key, v.clone(), Some(req));
+                            inner.dirty = true;
+                        }
+                        self.persist();
+                        let answer =
+                            self.answer_of(profiler, key, v.clone(), true)?;
+                        return Ok((v, true, answer, Source::Remote));
+                    }
+                    RemoteOutcome::Hit(_) | RemoteOutcome::Garbage => {
+                        // the tier answered, but with an entry this
+                        // build cannot trust: never served, only counted
+                        lock_recover(&self.inner)
+                            .stats
+                            .remote_quarantined += 1;
+                    }
+                    RemoteOutcome::Miss => {
+                        lock_recover(&self.inner).stats.remote_misses += 1;
+                    }
+                    RemoteOutcome::Timeout
+                    | RemoteOutcome::Error
+                    | RemoteOutcome::Skipped => {}
+                }
+            }
+        }
+        // Warm-start candidates, best-of-K: the explicit seed (a
+        // warm-up replay is the *same query's* old answer), the K
+        // nearest local neighbors, and — only when the local cache has
+        // nothing to offer — the remote tier's `near` candidates. Each
+        // candidate is greedy-repaired at the queried limit and the
+        // *best repaired incumbent* by `(time, lex)` is offered to the
+        // engine. A seed only ever prunes, and best-of-K is at least
+        // as tight as any single neighbor, so visited nodes can only
+        // shrink relative to the old single-neighbor policy while the
+        // answer stays bit-identical.
+        let warm_choice = if q.warm {
+            let mut candidates: Vec<Vec<usize>> = Vec::new();
+            if let Some(s) = seed.filter(|s| {
+                CachedValue::Plan { choice: s.to_vec() }
+                    .validates_against(profiler)
+            }) {
+                candidates.push(s.to_vec());
+            }
+            let local =
+                lock_recover(&self.inner).cache.neighbors(key, WARM_K);
+            for (choice, _nb) in local {
+                if !candidates.contains(&choice) {
+                    candidates.push(choice);
+                }
+            }
+            if candidates.is_empty() {
+                if let Some(tier) = &self.remote {
+                    for (choice, _nb) in tier.near(key, WARM_K) {
+                        let valid = CachedValue::Plan {
+                            choice: choice.clone(),
+                        }
+                        .validates_against(profiler);
+                        if valid && !candidates.contains(&choice) {
+                            candidates.push(choice);
+                        }
                     }
                 }
+            }
+            let b_gate = match key.shape {
+                QueryShape::Batch(b) => b,
+                QueryShape::Sweep { .. } => 1,
+            };
+            let had_candidates = !candidates.is_empty();
+            // (time bits, repaired lex) ranks repaired incumbents the
+            // same way the engines rank plans, so "best" is exact
+            let mut best: Option<((u64, Vec<usize>), Vec<usize>)> = None;
+            for raw in candidates {
+                let Some((repaired, cost)) = planner::greedy_search_from(
+                    profiler,
+                    key.mem_limit(),
+                    b_gate,
+                    &raw,
+                ) else {
+                    continue;
+                };
+                let rank = (cost.time.to_bits(), repaired);
+                if best.as_ref().map_or(true, |(r, _)| rank < *r) {
+                    best = Some((rank, raw));
+                }
+            }
+            if best.is_none() && had_candidates {
+                // every candidate was rejected as infeasible at this
+                // batch/limit; the search runs cold
+                lock_recover(&self.inner).stats.warm_infeasible += 1;
+            }
+            // Single-batch queries hand the engine the already-repaired
+            // seed (its own repair then exits after one feasibility
+            // check); sweeps keep the raw winner because every batch of
+            // the sweep re-repairs it at its own size.
+            best.map(|((_bits, repaired), raw)| match key.shape {
+                QueryShape::Batch(_) => repaired,
+                QueryShape::Sweep { .. } => raw,
             })
         } else {
             None
@@ -911,12 +1044,20 @@ impl PlanService {
 
     fn store(&self, key: QueryKey, value: CachedValue,
              request: Option<String>) {
-        let mut guard = lock_recover(&self.inner);
-        let inner = &mut *guard;
-        inner.stats.inserts += 1;
-        inner.stats.evictions +=
-            inner.cache.insert_requested(key, value, request);
-        inner.dirty = true;
+        {
+            let mut guard = lock_recover(&self.inner);
+            let inner = &mut *guard;
+            inner.stats.inserts += 1;
+            inner.stats.evictions +=
+                inner.cache.insert_requested(key, value.clone(),
+                                             request.clone());
+            inner.dirty = true;
+        }
+        // write-behind to the second tier: serialize and enqueue off
+        // the lock; a full queue or open breaker sheds the put
+        if let (Some(tier), Some(req)) = (&self.remote, request) {
+            tier.put(&key, &value, &req);
+        }
     }
 
     /// Write-behind: rewrite the disk file only when something was
@@ -944,21 +1085,21 @@ impl PlanService {
             inner.cache.serialize()
         };
         let Some((path, doc)) = snapshot else { return };
-        const ATTEMPTS: u32 = 3;
-        for attempt in 0..ATTEMPTS {
-            if cache::write_cache_file(&path, &doc).is_ok() {
-                return;
-            }
-            if attempt + 1 < ATTEMPTS {
+        // fixed seed: the persist path replays an identical jittered
+        // schedule every run, so fault-injected counter tests stay exact
+        let policy =
+            crate::util::backoff::BackoffPolicy::new(3, 2, 8, 0x9e75);
+        let wrote = policy.retry(
+            |_| cache::write_cache_file(&path, &doc),
+            |_| {
                 lock_recover(&self.inner).stats.cache_write_retries += 1;
-                std::thread::sleep(std::time::Duration::from_millis(
-                    1 << attempt,
-                ));
-            }
+            },
+        );
+        if wrote.is_err() {
+            let mut guard = lock_recover(&self.inner);
+            guard.dirty = true;
+            guard.stats.persist_errors += 1;
         }
-        let mut guard = lock_recover(&self.inner);
-        guard.dirty = true;
-        guard.stats.persist_errors += 1;
     }
 
     /// Rebuild a served answer from a cached or flight-shared value

@@ -1,0 +1,983 @@
+//! The second cache tier: a standalone plan-cache server and the
+//! hardened client that wires it underneath [`super::PlanService`].
+//!
+//! ## Server
+//!
+//! [`CacheServerHandler`] implements [`LineHandler`], so `osdp
+//! cache-serve` reuses the front-end acceptor/worker/framing machinery
+//! verbatim (bounded queues, idle timeouts, torn-write fault injection,
+//! graceful shutdown). The grammar is newline-delimited, one JSON line
+//! back per request:
+//!
+//! ```text
+//! get <canonical request line>      -> {"hit":true,"entry":{...}} | {"hit":false}
+//! put {"key":...,"req":...,...}     -> {"kind":"stored"} | {"error":"bad-request"}
+//! near <struct-hex> <k>             -> {"entries":[{...},...]}
+//! stats                             -> {"kind":"stats","entries":N,...}
+//! quit | shutdown                   -> acknowledged, then acted on
+//! ```
+//!
+//! Entries are exactly the versioned choice-vector-only format the L1
+//! disk cache persists — `schema` + `epoch` + the [`cache::value_to_json`]
+//! payload — keyed by the canonical [`super::server::request_line`]. The
+//! server validates every `put` wholesale (wrong epoch, wrong schema,
+//! unparseable vectors are rejected, never stored), so a healthy server
+//! can only ever serve entries that were valid *when stored*; the client
+//! still re-validates on fetch because the server may be lying.
+//!
+//! ## Client
+//!
+//! [`RemoteTier`] is read-through / write-behind under the service's L1:
+//!
+//! - every remote operation runs under a hard **deadline budget**
+//!   (connect + write + read all share it; a slow-loris server that
+//!   trickles bytes is cut off when the budget runs out),
+//! - reads are single-shot (the deadline *is* the budget — retrying a
+//!   read would multiply worst-case query latency); the **write-behind**
+//!   path retries through [`BackoffPolicy`] since it burns no caller's
+//!   clock,
+//! - consecutive failures trip a **circuit breaker**
+//!   (closed → open → half-open): while open, every operation is
+//!   `Skipped` at zero cost, so a dead remote bounds added per-query
+//!   latency at `threshold × deadline` over the whole outage,
+//! - puts ride a bounded [`Channel`] drained by one writer thread;
+//!   a full queue sheds the put (`try_send`) rather than block a query,
+//! - a fetched entry is **quarantined** (demoted to a miss) unless its
+//!   schema and epoch match, its key equals the requested key, and its
+//!   value kind matches the key shape. Garbage never propagates.
+//!
+//! None of this can change an answer: a remote hit stores a choice
+//! vector whose costs re-derive through `Profiler::evaluate`, and a
+//! remote *candidate* (the `near` verb) is only ever offered as a
+//! warm-start seed, which provably prunes without changing the
+//! `(time, lex)` optimum. Any failure demotes to the local-only path.
+
+use super::cache::{self, CachedValue};
+use super::frontend::{Channel, LineHandler};
+use super::key::{CACHE_SCHEMA_VERSION, COST_MODEL_EPOCH, QueryKey, QueryShape};
+use super::server::LineOutcome;
+use crate::util::backoff::BackoffPolicy;
+use crate::util::json::{self, Json};
+use crate::util::sync::lock_recover;
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Longest request or response line either side will process.
+const MAX_LINE: usize = super::frontend::MAX_LINE;
+
+/// Cap on `near` fan-out, whatever the client asks for.
+const NEAR_CAP: usize = 16;
+
+// ---------------------------------------------------------------------------
+// Wire format: one entry object, shared by put/get/near.
+// ---------------------------------------------------------------------------
+
+/// Serialize one cache entry for the wire: the L1 value payload plus
+/// the identifying and versioning fields.
+pub fn entry_to_json(key: &QueryKey, value: &CachedValue, req: &str) -> Json {
+    let mut o = match cache::value_to_json(value) {
+        Json::Obj(o) => o,
+        _ => BTreeMap::new(),
+    };
+    o.insert("key".into(), Json::Str(key.id()));
+    o.insert("req".into(), Json::Str(req.into()));
+    o.insert("schema".into(), Json::Num(CACHE_SCHEMA_VERSION as f64));
+    o.insert("epoch".into(), Json::Num(COST_MODEL_EPOCH as f64));
+    Json::Obj(o)
+}
+
+/// Parse and validate one wire entry: schema and epoch must match this
+/// build, the key id must parse, and the value kind must be consistent
+/// with the key shape (a `plan` for a batch key, a `sweep` for a sweep
+/// key). Anything else is `None` — the caller quarantines it.
+pub fn entry_from_json(v: &Json) -> Option<(QueryKey, String, CachedValue)> {
+    if v.get("schema").as_usize()? != CACHE_SCHEMA_VERSION as usize
+        || v.get("epoch").as_usize()? != COST_MODEL_EPOCH as usize
+    {
+        return None;
+    }
+    let key = QueryKey::from_id(v.get("key").as_str()?)?;
+    let req = v.get("req").as_str()?.to_string();
+    if req.is_empty() {
+        return None;
+    }
+    let value = cache::value_from_json(v)?;
+    let consistent = match (&key.shape, &value) {
+        (QueryShape::Batch(_), CachedValue::Plan { .. }) => true,
+        (QueryShape::Sweep { .. }, CachedValue::Sweep { .. }) => true,
+        (_, CachedValue::Infeasible) => true,
+        _ => false,
+    };
+    consistent.then_some((key, req, value))
+}
+
+// ---------------------------------------------------------------------------
+// Server side.
+// ---------------------------------------------------------------------------
+
+struct StoreSlot {
+    key_id: String,
+    entry: Json,
+    last_used: u64,
+}
+
+/// The server's LRU entry store, keyed by the canonical request line.
+struct CacheStore {
+    cap: usize,
+    map: HashMap<String, StoreSlot>,
+    tick: u64,
+}
+
+impl CacheStore {
+    fn new(cap: usize) -> CacheStore {
+        CacheStore { cap: cap.max(1), map: HashMap::new(), tick: 0 }
+    }
+
+    fn get(&mut self, req: &str) -> Option<&Json> {
+        self.tick += 1;
+        let tick = self.tick;
+        let slot = self.map.get_mut(req)?;
+        slot.last_used = tick;
+        Some(&slot.entry)
+    }
+
+    fn put(&mut self, key_id: String, req: String, entry: Json) {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.insert(req, StoreSlot { key_id, entry, last_used: tick });
+        while self.map.len() > self.cap {
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(r, s)| (s.last_used, r.clone()))
+                .map(|(r, _)| r.clone());
+            match victim {
+                Some(r) => {
+                    self.map.remove(&r);
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Entries whose key shares `struct_hex` and holds a plain `plan`
+    /// payload, ordered by key id for determinism. The *client* ranks
+    /// them properly (it knows the target batch and memory limit); the
+    /// server only narrows the candidate set.
+    fn near(&self, struct_hex: &str, k: usize) -> Vec<&Json> {
+        let prefix = format!("{struct_hex}-");
+        let mut hits: Vec<(&String, &StoreSlot)> = self
+            .map
+            .values()
+            .filter(|s| {
+                s.key_id.starts_with(&prefix)
+                    && s.entry.get("kind").as_str() == Some("plan")
+            })
+            .map(|s| (&s.key_id, s))
+            .collect();
+        hits.sort_by_key(|(id, _)| (*id).clone());
+        hits.into_iter().take(k.min(NEAR_CAP)).map(|(_, s)| &s.entry).collect()
+    }
+}
+
+/// The cache server's protocol handler: plugs into
+/// [`super::Frontend::start_with`] behind the standard transport.
+pub struct CacheServerHandler {
+    store: Mutex<CacheStore>,
+    gets: AtomicU64,
+    hits: AtomicU64,
+    puts: AtomicU64,
+    bad_puts: AtomicU64,
+    nears: AtomicU64,
+}
+
+impl CacheServerHandler {
+    pub fn new(capacity: usize) -> CacheServerHandler {
+        CacheServerHandler {
+            store: Mutex::new(CacheStore::new(capacity)),
+            gets: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            puts: AtomicU64::new(0),
+            bad_puts: AtomicU64::new(0),
+            nears: AtomicU64::new(0),
+        }
+    }
+
+    pub fn entries(&self) -> usize {
+        lock_recover(&self.store).map.len()
+    }
+
+    fn render_stats(&self) -> String {
+        let mut o = BTreeMap::new();
+        o.insert("ok".into(), Json::Bool(true));
+        o.insert("kind".into(), Json::Str("stats".into()));
+        o.insert("entries".into(), Json::Num(self.entries() as f64));
+        o.insert("gets".into(),
+                 Json::Num(self.gets.load(Ordering::Relaxed) as f64));
+        o.insert("hits".into(),
+                 Json::Num(self.hits.load(Ordering::Relaxed) as f64));
+        o.insert("puts".into(),
+                 Json::Num(self.puts.load(Ordering::Relaxed) as f64));
+        o.insert("bad_puts".into(),
+                 Json::Num(self.bad_puts.load(Ordering::Relaxed) as f64));
+        o.insert("nears".into(),
+                 Json::Num(self.nears.load(Ordering::Relaxed) as f64));
+        json::to_string(&Json::Obj(o))
+    }
+}
+
+fn bad_request(detail: &str) -> String {
+    let mut o = BTreeMap::new();
+    o.insert("ok".into(), Json::Bool(false));
+    o.insert("error".into(), Json::Str("bad-request".into()));
+    o.insert("detail".into(), Json::Str(detail.into()));
+    json::to_string(&Json::Obj(o))
+}
+
+impl LineHandler for CacheServerHandler {
+    fn handle(&self, line: &str) -> (String, LineOutcome) {
+        let line = line.trim();
+        let (verb, rest) = match line.split_once(char::is_whitespace) {
+            Some((v, r)) => (v, r.trim()),
+            None => (line, ""),
+        };
+        match verb {
+            "get" => {
+                self.gets.fetch_add(1, Ordering::Relaxed);
+                let mut o = BTreeMap::new();
+                o.insert("ok".into(), Json::Bool(true));
+                o.insert("kind".into(), Json::Str("entry".into()));
+                match lock_recover(&self.store).get(rest) {
+                    Some(entry) if !rest.is_empty() => {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        o.insert("hit".into(), Json::Bool(true));
+                        o.insert("entry".into(), entry.clone());
+                    }
+                    _ => {
+                        o.insert("hit".into(), Json::Bool(false));
+                    }
+                }
+                (json::to_string(&Json::Obj(o)), LineOutcome::Continue)
+            }
+            "put" => {
+                self.puts.fetch_add(1, Ordering::Relaxed);
+                let parsed = Json::parse(rest)
+                    .ok()
+                    .and_then(|doc| {
+                        entry_from_json(&doc).map(|(k, r, _)| (k, r, doc))
+                    });
+                match parsed {
+                    Some((key, req, doc)) => {
+                        lock_recover(&self.store).put(key.id(), req, doc);
+                        (
+                            r#"{"kind":"stored","ok":true}"#.to_string(),
+                            LineOutcome::Continue,
+                        )
+                    }
+                    None => {
+                        self.bad_puts.fetch_add(1, Ordering::Relaxed);
+                        (
+                            bad_request("put: not a valid cache entry"),
+                            LineOutcome::Continue,
+                        )
+                    }
+                }
+            }
+            "near" => {
+                self.nears.fetch_add(1, Ordering::Relaxed);
+                let mut parts = rest.split_whitespace();
+                let (hex, k) = match (parts.next(), parts.next()) {
+                    (Some(h), Some(k)) => match k.parse::<usize>() {
+                        Ok(k) => (h, k),
+                        Err(_) => {
+                            return (
+                                bad_request("near: k is not a number"),
+                                LineOutcome::Continue,
+                            )
+                        }
+                    },
+                    _ => {
+                        return (
+                            bad_request("near: want <struct-hex> <k>"),
+                            LineOutcome::Continue,
+                        )
+                    }
+                };
+                let store = lock_recover(&self.store);
+                let entries: Vec<Json> =
+                    store.near(hex, k).into_iter().cloned().collect();
+                let mut o = BTreeMap::new();
+                o.insert("ok".into(), Json::Bool(true));
+                o.insert("kind".into(), Json::Str("near".into()));
+                o.insert("entries".into(), Json::Arr(entries));
+                (json::to_string(&Json::Obj(o)), LineOutcome::Continue)
+            }
+            "stats" => (self.render_stats(), LineOutcome::Continue),
+            "quit" | "exit" => (
+                r#"{"kind":"bye","ok":true}"#.to_string(),
+                LineOutcome::Quit,
+            ),
+            "shutdown" => (
+                r#"{"kind":"shutdown","ok":true}"#.to_string(),
+                LineOutcome::Shutdown,
+            ),
+            "" => (bad_request("empty request"), LineOutcome::Continue),
+            other => (
+                bad_request(&format!("unknown verb `{other}`")),
+                LineOutcome::Continue,
+            ),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client side.
+// ---------------------------------------------------------------------------
+
+/// Remote-tier knobs. Defaults keep a healthy remote cheap (single-digit
+/// millisecond budget) and a dead one cheaper (breaker trips after a
+/// handful of consecutive failures, probes once per cooldown).
+#[derive(Debug, Clone)]
+pub struct RemoteConfig {
+    /// `host:port` of the cache server.
+    pub addr: String,
+    /// Hard budget per remote operation: connect + write + read.
+    pub deadline: Duration,
+    /// Consecutive failures before the breaker opens.
+    pub breaker_threshold: u32,
+    /// How long the breaker stays open before admitting one probe.
+    pub cooldown: Duration,
+    /// Write-behind queue bound; a full queue sheds puts.
+    pub queue_cap: usize,
+    /// Retry schedule for write-behind puts (reads never retry).
+    pub backoff: BackoffPolicy,
+}
+
+impl RemoteConfig {
+    pub fn new(addr: &str) -> RemoteConfig {
+        RemoteConfig {
+            addr: addr.to_string(),
+            deadline: Duration::from_millis(5),
+            breaker_threshold: 3,
+            cooldown: Duration::from_millis(250),
+            queue_cap: 64,
+            backoff: BackoffPolicy::new(3, 2, 16, 0x0d5e_c0de),
+        }
+    }
+}
+
+/// What one remote read produced. Everything except `Hit` demotes to an
+/// L1 miss; nothing here is ever an error to the caller.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RemoteOutcome {
+    /// A validated entry for exactly the requested key.
+    Hit(CachedValue),
+    /// The server answered: it does not have the entry.
+    Miss,
+    /// The deadline budget ran out (connect, write, read, or slow-loris).
+    Timeout,
+    /// Connect/IO failure, EOF mid-response, or oversized response.
+    Error,
+    /// The server answered with bytes that failed validation.
+    Garbage,
+    /// The breaker is open (or the address never resolved): no I/O done.
+    Skipped,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RemoteErr {
+    Timeout,
+    Io,
+}
+
+/// Circuit breaker: closed (counting consecutive failures) → open
+/// (shedding at zero cost) → half-open (one probe after the cooldown).
+enum BreakerState {
+    Closed { fails: u32 },
+    Open { since: Instant },
+    HalfOpen,
+}
+
+struct Shared {
+    cfg: RemoteConfig,
+    addr: Option<SocketAddr>,
+    breaker: Mutex<BreakerState>,
+    errors: AtomicU64,
+    timeouts: AtomicU64,
+    breaker_open: AtomicU64,
+}
+
+impl Shared {
+    /// May this operation touch the wire? Open→half-open transition
+    /// happens here: after the cooldown exactly one caller is admitted
+    /// as the probe; everyone else keeps shedding until it reports.
+    fn admit(&self) -> bool {
+        let mut st = lock_recover(&self.breaker);
+        match &*st {
+            BreakerState::Closed { .. } => true,
+            BreakerState::Open { since } => {
+                if since.elapsed() >= self.cfg.cooldown {
+                    *st = BreakerState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+            BreakerState::HalfOpen => false,
+        }
+    }
+
+    fn on_ok(&self) {
+        *lock_recover(&self.breaker) = BreakerState::Closed { fails: 0 };
+    }
+
+    fn on_fail(&self) {
+        let mut st = lock_recover(&self.breaker);
+        let open = match &mut *st {
+            BreakerState::Closed { fails } => {
+                *fails += 1;
+                *fails >= self.cfg.breaker_threshold
+            }
+            BreakerState::HalfOpen => true,
+            BreakerState::Open { .. } => return,
+        };
+        if open {
+            *st = BreakerState::Open { since: Instant::now() };
+            self.breaker_open.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn state_label(&self) -> &'static str {
+        match &*lock_recover(&self.breaker) {
+            BreakerState::Closed { .. } => "closed",
+            BreakerState::Open { .. } => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+
+    /// One request/response exchange under the deadline budget. The
+    /// fault hooks fire *before* any I/O so chaos runs cost exactly
+    /// what the fault models (a slow server burns the remaining budget,
+    /// an I/O fault is instant).
+    fn roundtrip(&self, line: &str) -> Result<String, RemoteErr> {
+        let Some(addr) = self.addr else { return Err(RemoteErr::Io) };
+        let started = Instant::now();
+        let deadline = self.cfg.deadline;
+        let remaining = |started: Instant| {
+            deadline
+                .checked_sub(started.elapsed())
+                .filter(|d| !d.is_zero())
+        };
+        if crate::util::faults::remote_io_fails() {
+            return Err(RemoteErr::Io);
+        }
+        if crate::util::faults::remote_slow_fires() {
+            // a slow server costs exactly the remaining budget, no more
+            if let Some(left) = remaining(started) {
+                std::thread::sleep(left);
+            }
+            return Err(RemoteErr::Timeout);
+        }
+        let map_io = |e: std::io::Error| match e.kind() {
+            std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock => {
+                RemoteErr::Timeout
+            }
+            _ => RemoteErr::Io,
+        };
+        let Some(budget) = remaining(started) else {
+            return Err(RemoteErr::Timeout);
+        };
+        let stream = TcpStream::connect_timeout(&addr, budget).map_err(map_io)?;
+        let _ = stream.set_nodelay(true);
+        let Some(budget) = remaining(started) else {
+            return Err(RemoteErr::Timeout);
+        };
+        let _ = stream.set_write_timeout(Some(budget));
+        (&stream).write_all(line.as_bytes()).map_err(map_io)?;
+        (&stream).write_all(b"\n").map_err(map_io)?;
+        // read one line, re-arming the socket timeout with whatever
+        // budget is left each pass: a slow-loris peer that trickles a
+        // byte per recv cannot stretch the call past the deadline
+        let mut reader = BufReader::new(&stream);
+        let mut buf: Vec<u8> = Vec::new();
+        loop {
+            let Some(budget) = remaining(started) else {
+                return Err(RemoteErr::Timeout);
+            };
+            let _ = stream.set_read_timeout(Some(budget));
+            match reader.fill_buf() {
+                Ok([]) => return Err(RemoteErr::Io), // EOF before newline
+                Ok(chunk) => {
+                    if let Some(i) = chunk.iter().position(|&b| b == b'\n') {
+                        buf.extend_from_slice(&chunk[..i]);
+                        reader.consume(i + 1);
+                        break;
+                    }
+                    buf.extend_from_slice(chunk);
+                    let n = chunk.len();
+                    reader.consume(n);
+                    if buf.len() > MAX_LINE {
+                        return Err(RemoteErr::Io);
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(map_io(e)),
+            }
+        }
+        String::from_utf8(buf).map_err(|_| RemoteErr::Io)
+    }
+}
+
+/// The L2 client owned by a [`super::PlanService`]. All methods are
+/// non-blocking beyond the deadline budget and never return errors —
+/// a [`RemoteOutcome`] says what happened and the caller's counters
+/// record it.
+pub struct RemoteTier {
+    shared: Arc<Shared>,
+    queue: Arc<Channel<String>>,
+    /// Puts accepted but not yet fully processed by the writer thread
+    /// (queued + in-flight) — what [`RemoteTier::flush`] waits on.
+    pending: Arc<AtomicU64>,
+    writer: Option<JoinHandle<()>>,
+}
+
+impl RemoteTier {
+    /// Resolve the address once and start the write-behind thread. A
+    /// hostname that never resolves yields a tier that `Skip`s
+    /// everything — degraded, not fatal, exactly like a dead server.
+    pub fn start(cfg: RemoteConfig) -> RemoteTier {
+        let addr = cfg
+            .addr
+            .to_socket_addrs()
+            .ok()
+            .and_then(|mut it| it.next());
+        let queue = Arc::new(Channel::bounded(cfg.queue_cap.max(1)));
+        let shared = Arc::new(Shared {
+            cfg,
+            addr,
+            breaker: Mutex::new(BreakerState::Closed { fails: 0 }),
+            errors: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
+            breaker_open: AtomicU64::new(0),
+        });
+        let pending = Arc::new(AtomicU64::new(0));
+        let writer = {
+            let shared = Arc::clone(&shared);
+            let queue = Arc::clone(&queue);
+            let pending = Arc::clone(&pending);
+            std::thread::spawn(move || {
+                while let Some(line) = queue.recv() {
+                    if shared.admit() {
+                        let out = shared.cfg.backoff.retry(
+                            |_| shared.roundtrip(&line).map(drop),
+                            |_| {},
+                        );
+                        match out {
+                            Ok(()) => shared.on_ok(),
+                            Err(RemoteErr::Timeout) => {
+                                shared
+                                    .timeouts
+                                    .fetch_add(1, Ordering::Relaxed);
+                                shared.on_fail();
+                            }
+                            Err(RemoteErr::Io) => {
+                                shared.errors.fetch_add(1, Ordering::Relaxed);
+                                shared.on_fail();
+                            }
+                        }
+                    } // else: breaker open, shed the put
+                    pending.fetch_sub(1, Ordering::Release);
+                }
+            })
+        };
+        RemoteTier { shared, queue, pending, writer: Some(writer) }
+    }
+
+    /// Read-through lookup for exactly `key`, addressed by its
+    /// canonical request line.
+    pub fn get(&self, key: &QueryKey, req_line: &str) -> RemoteOutcome {
+        let shared = &self.shared;
+        if shared.addr.is_none() || !shared.admit() {
+            return RemoteOutcome::Skipped;
+        }
+        match shared.roundtrip(&format!("get {req_line}")) {
+            Err(RemoteErr::Timeout) => {
+                shared.timeouts.fetch_add(1, Ordering::Relaxed);
+                shared.on_fail();
+                RemoteOutcome::Timeout
+            }
+            Err(RemoteErr::Io) => {
+                shared.errors.fetch_add(1, Ordering::Relaxed);
+                shared.on_fail();
+                RemoteOutcome::Error
+            }
+            Ok(resp) => {
+                // the transport worked: the breaker tracks availability,
+                // so even a garbage payload counts as the server being up
+                shared.on_ok();
+                let resp = if crate::util::faults::remote_garbage_fires() {
+                    mangle(&resp)
+                } else {
+                    resp
+                };
+                parse_get_response(&resp, key)
+            }
+        }
+    }
+
+    /// Warm-start candidates near `key`: `plan` entries sharing its
+    /// structural fingerprint, re-validated and re-ranked locally by
+    /// batch distance then memory distance (the same order the L1
+    /// neighbor scan uses). Failures return no candidates — a warm
+    /// start is an optimization, never worth an error.
+    pub fn near(&self, key: &QueryKey, k: usize) -> Vec<(Vec<usize>, usize)> {
+        let shared = &self.shared;
+        if k == 0 || shared.addr.is_none() || !shared.admit() {
+            return Vec::new();
+        }
+        let line = format!("near {} {}", key.structure.hex(), k.min(NEAR_CAP));
+        let resp = match shared.roundtrip(&line) {
+            Err(RemoteErr::Timeout) => {
+                shared.timeouts.fetch_add(1, Ordering::Relaxed);
+                shared.on_fail();
+                return Vec::new();
+            }
+            Err(RemoteErr::Io) => {
+                shared.errors.fetch_add(1, Ordering::Relaxed);
+                shared.on_fail();
+                return Vec::new();
+            }
+            Ok(resp) => {
+                shared.on_ok();
+                if crate::util::faults::remote_garbage_fires() {
+                    mangle(&resp)
+                } else {
+                    resp
+                }
+            }
+        };
+        let Ok(doc) = Json::parse(&resp) else { return Vec::new() };
+        if doc.get("ok").as_bool() != Some(true) {
+            return Vec::new();
+        }
+        let Some(arr) = doc.get("entries").as_arr() else {
+            return Vec::new();
+        };
+        let target_b = match key.shape {
+            QueryShape::Batch(b) => b,
+            QueryShape::Sweep { max_batch } => max_batch,
+        };
+        let target_mem = key.mem_limit();
+        let mut ranked: Vec<((usize, u64, usize, u64), Vec<usize>)> = Vec::new();
+        for e in arr {
+            let Some((ekey, _req, value)) = entry_from_json(e) else {
+                continue;
+            };
+            if ekey.structure != key.structure || ekey == *key {
+                continue;
+            }
+            let (QueryShape::Batch(nb), CachedValue::Plan { choice }) =
+                (ekey.shape, value)
+            else {
+                continue;
+            };
+            // rank mirrors PlanCache::neighbors: batch distance, then
+            // memory distance, then the deterministic tiebreaks
+            let mem_dist = (ekey.mem_limit() - target_mem).abs().to_bits();
+            ranked.push((
+                (nb.abs_diff(target_b), mem_dist, nb, ekey.mem_limit_bits),
+                choice,
+            ));
+        }
+        ranked.sort_by(|a, b| a.0.cmp(&b.0));
+        ranked
+            .into_iter()
+            .take(k)
+            .map(|((_, _, nb, _), choice)| (choice, nb))
+            .collect()
+    }
+
+    /// Write-behind store: serialize now, enqueue, return immediately.
+    /// A full queue sheds the entry — the remote tier is best-effort
+    /// and must never block or slow a query.
+    pub fn put(&self, key: &QueryKey, value: &CachedValue, req: &str) {
+        if self.shared.addr.is_none() {
+            return;
+        }
+        let line =
+            format!("put {}", json::to_string(&entry_to_json(key, value, req)));
+        self.pending.fetch_add(1, Ordering::Acquire);
+        if self.queue.try_send(line).is_err() {
+            self.pending.fetch_sub(1, Ordering::Release);
+        }
+    }
+
+    /// Block until every accepted put has been fully processed —
+    /// queued *and* in-flight (tests and CI cross-instance sharing;
+    /// bounded by `timeout`).
+    pub fn flush(&self, timeout: Duration) {
+        let started = Instant::now();
+        while self.pending.load(Ordering::Acquire) > 0
+            && started.elapsed() < timeout
+        {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    pub fn errors(&self) -> u64 {
+        self.shared.errors.load(Ordering::Relaxed)
+    }
+
+    pub fn timeouts(&self) -> u64 {
+        self.shared.timeouts.load(Ordering::Relaxed)
+    }
+
+    pub fn breaker_open_count(&self) -> u64 {
+        self.shared.breaker_open.load(Ordering::Relaxed)
+    }
+
+    pub fn breaker_state(&self) -> &'static str {
+        self.shared.state_label()
+    }
+}
+
+impl Drop for RemoteTier {
+    fn drop(&mut self) {
+        // drain what's queued (recv keeps yielding after close), then
+        // reap the writer so a one-shot CLI's puts land before exit
+        self.queue.close();
+        if let Some(w) = self.writer.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Corrupt a fetched payload deterministically: a control byte up
+/// front guarantees the JSON parse fails, the truncated tail models a
+/// torn response.
+fn mangle(resp: &str) -> String {
+    format!("\u{1}garbage {}", &resp[..resp.len() / 2])
+}
+
+fn parse_get_response(resp: &str, key: &QueryKey) -> RemoteOutcome {
+    let Ok(doc) = Json::parse(resp) else { return RemoteOutcome::Garbage };
+    if doc.get("ok").as_bool() != Some(true) {
+        return RemoteOutcome::Garbage;
+    }
+    match doc.get("hit").as_bool() {
+        Some(false) => RemoteOutcome::Miss,
+        Some(true) => match entry_from_json(doc.get("entry")) {
+            Some((ekey, _req, value)) if ekey == *key => {
+                RemoteOutcome::Hit(value)
+            }
+            _ => RemoteOutcome::Garbage,
+        },
+        None => RemoteOutcome::Garbage,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::key::StructKey;
+
+    fn key(b: usize) -> QueryKey {
+        QueryKey {
+            structure: StructKey([3, 4]),
+            mem_limit_bits: 8e9f64.to_bits(),
+            shape: QueryShape::Batch(b),
+        }
+    }
+
+    fn entry_line(k: &QueryKey, v: &CachedValue, req: &str) -> String {
+        json::to_string(&entry_to_json(k, v, req))
+    }
+
+    #[test]
+    fn entry_roundtrips_and_rejects_wrong_versions() {
+        let k = key(4);
+        let v = CachedValue::Plan { choice: vec![0, 1] };
+        let doc = entry_to_json(&k, &v, "plan mem:8000000000 batch:4");
+        let (k2, req, v2) = entry_from_json(&doc).expect("roundtrip");
+        assert_eq!(k2, k);
+        assert_eq!(req, "plan mem:8000000000 batch:4");
+        assert_eq!(v2, v);
+
+        let mut o = match doc.clone() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        o.insert("epoch".into(), Json::Num(999.0));
+        assert!(entry_from_json(&Json::Obj(o.clone())).is_none());
+        o.insert("epoch".into(), Json::Num(COST_MODEL_EPOCH as f64));
+        o.insert("schema".into(), Json::Num(999.0));
+        assert!(entry_from_json(&Json::Obj(o)).is_none());
+    }
+
+    #[test]
+    fn entry_rejects_shape_kind_mismatch() {
+        // a sweep payload under a batch key is structural garbage
+        let sweep = CachedValue::Sweep { choices: vec![vec![0]], best: 0 };
+        let mut doc = entry_to_json(&key(4), &sweep, "r");
+        if let Json::Obj(o) = &mut doc {
+            o.insert("key".into(), Json::Str(key(4).id()));
+        }
+        assert!(entry_from_json(&doc).is_none());
+        // infeasible is fine under any shape
+        let doc = entry_to_json(&key(4), &CachedValue::Infeasible, "r");
+        assert!(entry_from_json(&doc).is_some());
+    }
+
+    #[test]
+    fn handler_speaks_the_grammar() {
+        let h = CacheServerHandler::new(8);
+        let k = key(4);
+        let v = CachedValue::Plan { choice: vec![1, 2] };
+        let req = "plan mem:8000000000 batch:4";
+
+        let (resp, out) = h.handle(&format!("get {req}"));
+        assert_eq!(out, LineOutcome::Continue);
+        let doc = Json::parse(&resp).unwrap();
+        assert_eq!(doc.get("hit").as_bool(), Some(false));
+
+        let (resp, _) = h.handle(&format!("put {}", entry_line(&k, &v, req)));
+        assert!(resp.contains("stored"), "{resp}");
+        assert_eq!(h.entries(), 1);
+
+        let (resp, _) = h.handle(&format!("get {req}"));
+        let doc = Json::parse(&resp).unwrap();
+        assert_eq!(doc.get("hit").as_bool(), Some(true));
+        let (k2, _, v2) = entry_from_json(doc.get("entry")).unwrap();
+        assert_eq!((k2, v2), (k, v.clone()));
+
+        // malformed and version-skewed puts are rejected, never stored
+        let (resp, _) = h.handle("put {not json");
+        assert!(resp.contains("bad-request"));
+        let skew = entry_line(&k, &v, req).replace(
+            &format!("\"epoch\":{COST_MODEL_EPOCH}"),
+            "\"epoch\":999",
+        );
+        let (resp, _) = h.handle(&format!("put {skew}"));
+        assert!(resp.contains("bad-request"));
+        assert_eq!(h.entries(), 1);
+
+        let (resp, _) = h.handle("stats");
+        let doc = Json::parse(&resp).unwrap();
+        assert_eq!(doc.get("entries").as_usize(), Some(1));
+        assert_eq!(doc.get("puts").as_usize(), Some(3));
+        assert_eq!(doc.get("bad_puts").as_usize(), Some(2));
+
+        let (_, out) = h.handle("quit");
+        assert_eq!(out, LineOutcome::Quit);
+        let (_, out) = h.handle("shutdown");
+        assert_eq!(out, LineOutcome::Shutdown);
+        let (resp, _) = h.handle("warp 9");
+        assert!(resp.contains("bad-request"));
+    }
+
+    #[test]
+    fn handler_near_filters_by_structure_and_kind() {
+        let h = CacheServerHandler::new(8);
+        for (b, choice) in [(2, vec![0, 0]), (8, vec![1, 1])] {
+            let k = key(b);
+            let line = entry_line(
+                &k,
+                &CachedValue::Plan { choice },
+                &format!("plan mem:8000000000 batch:{b}"),
+            );
+            let (resp, _) = h.handle(&format!("put {line}"));
+            assert!(resp.contains("stored"));
+        }
+        // an infeasible entry and a foreign structure must not surface
+        let (resp, _) = h.handle(&format!(
+            "put {}",
+            entry_line(&key(3), &CachedValue::Infeasible, "r3")
+        ));
+        assert!(resp.contains("stored"));
+        let hex = key(2).structure.hex();
+        let (resp, _) = h.handle(&format!("near {hex} 8"));
+        let doc = Json::parse(&resp).unwrap();
+        let entries = doc.get("entries").as_arr().unwrap();
+        assert_eq!(entries.len(), 2, "{resp}");
+        let (resp, _) = h.handle("near deadbeef 4");
+        let doc = Json::parse(&resp).unwrap();
+        assert_eq!(doc.get("entries").as_arr().unwrap().len(), 0);
+        let (resp, _) = h.handle("near");
+        assert!(resp.contains("bad-request"));
+    }
+
+    #[test]
+    fn store_evicts_least_recently_used() {
+        let mut s = CacheStore::new(2);
+        s.put("k1".into(), "r1".into(), Json::Null);
+        s.put("k2".into(), "r2".into(), Json::Null);
+        assert!(s.get("r1").is_some()); // refresh r1
+        s.put("k3".into(), "r3".into(), Json::Null);
+        assert!(s.get("r1").is_some());
+        assert!(s.get("r2").is_none(), "LRU victim");
+        assert!(s.get("r3").is_some());
+    }
+
+    #[test]
+    fn breaker_walks_closed_open_halfopen_closed() {
+        let mut cfg = RemoteConfig::new("127.0.0.1:1");
+        cfg.breaker_threshold = 2;
+        cfg.cooldown = Duration::from_millis(5);
+        let shared = Shared {
+            cfg,
+            addr: None,
+            breaker: Mutex::new(BreakerState::Closed { fails: 0 }),
+            errors: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
+            breaker_open: AtomicU64::new(0),
+        };
+        assert_eq!(shared.state_label(), "closed");
+        shared.on_fail();
+        assert_eq!(shared.state_label(), "closed");
+        assert!(shared.admit());
+        shared.on_fail();
+        assert_eq!(shared.state_label(), "open");
+        assert_eq!(shared.breaker_open.load(Ordering::Relaxed), 1);
+        assert!(!shared.admit(), "open sheds before the cooldown");
+        std::thread::sleep(Duration::from_millis(6));
+        assert!(shared.admit(), "cooldown admits one probe");
+        assert_eq!(shared.state_label(), "half-open");
+        assert!(!shared.admit(), "only one probe at a time");
+        shared.on_ok();
+        assert_eq!(shared.state_label(), "closed");
+        // a failed probe re-opens and counts another transition
+        shared.on_fail();
+        shared.on_fail();
+        std::thread::sleep(Duration::from_millis(6));
+        assert!(shared.admit());
+        shared.on_fail();
+        assert_eq!(shared.state_label(), "open");
+        assert_eq!(shared.breaker_open.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn unresolvable_tier_skips_everything() {
+        let tier = RemoteTier::start(RemoteConfig::new("not a host"));
+        let k = key(4);
+        assert_eq!(tier.get(&k, "plan"), RemoteOutcome::Skipped);
+        assert!(tier.near(&k, 4).is_empty());
+        tier.put(&k, &CachedValue::Infeasible, "plan");
+        tier.flush(Duration::from_millis(50));
+        assert_eq!(tier.errors(), 0, "no I/O ever attempted");
+    }
+
+    #[test]
+    fn mangled_payload_never_parses() {
+        let resp = r#"{"hit":false,"kind":"entry","ok":true}"#;
+        assert_eq!(
+            parse_get_response(&mangle(resp), &key(4)),
+            RemoteOutcome::Garbage
+        );
+    }
+}

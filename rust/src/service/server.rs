@@ -434,6 +434,8 @@ fn render_stats(service: &PlanService, telemetry: Option<&Telemetry>)
     o.insert("kind".into(), Json::Str("stats".into()));
     o.insert("cache_entries".into(),
              Json::Num(service.cache_len() as f64));
+    o.insert("breaker".into(),
+             Json::Str(service.breaker_state().into()));
     for (name, v) in s.fields() {
         o.insert(name.into(), Json::Num(v as f64));
     }

@@ -299,10 +299,12 @@ pub fn render_metrics(
     stats: &super::ServiceStats,
     cache_entries: usize,
     telemetry: &Telemetry,
+    breaker: &str,
 ) -> String {
     let mut o = BTreeMap::new();
     o.insert("kind".into(), Json::Str("metrics".into()));
     o.insert("cache_entries".into(), Json::Num(cache_entries as f64));
+    o.insert("breaker".into(), Json::Str(breaker.into()));
     let mut svc = BTreeMap::new();
     for (name, v) in stats.fields() {
         svc.insert(name.into(), Json::Num(v as f64));

@@ -1,0 +1,163 @@
+//! Bounded, jittered exponential backoff — deterministic under a seed.
+//!
+//! Both retry loops in the tree (crash-safe cache persistence and the
+//! remote-tier write path) need the same shape: a handful of attempts,
+//! exponentially growing pauses, a hard cap on any single pause, and
+//! jitter so a fleet of instances retrying the same dead dependency
+//! does not synchronize into a thundering herd. The jitter stream is
+//! drawn from the deterministic [`crate::util::rng::Rng`], seeded
+//! explicitly, so fault-injection tests replay bit-identical retry
+//! schedules: the *n*-th delay for a given `(seed, base, cap)` is a
+//! pure function of those inputs and nothing else.
+//!
+//! The policy uses "equal jitter": the *k*-th delay is
+//! `exp/2 + uniform[0, exp/2)` where `exp = min(base << k, cap)`.
+//! Every delay therefore lands in `[exp/2, exp)` — bounded below (the
+//! pause is never degenerate) and bounded above (never exceeds the
+//! cap), while still decorrelating independent retriers.
+
+use crate::util::rng::Rng;
+use std::time::Duration;
+
+/// A bounded retry schedule. `attempts` counts *total* tries, so
+/// `attempts = 3` means one initial try plus up to two retries with
+/// two pauses between them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BackoffPolicy {
+    pub attempts: u32,
+    pub base_ms: u64,
+    pub cap_ms: u64,
+    pub seed: u64,
+}
+
+impl BackoffPolicy {
+    pub fn new(attempts: u32, base_ms: u64, cap_ms: u64, seed: u64) -> BackoffPolicy {
+        BackoffPolicy {
+            attempts: attempts.max(1),
+            base_ms: base_ms.max(1),
+            cap_ms: cap_ms.max(base_ms.max(1)),
+            seed,
+        }
+    }
+
+    /// The deterministic pause schedule: exactly `attempts - 1`
+    /// durations, the pause taken after each failed non-final try.
+    pub fn delays(&self) -> Vec<Duration> {
+        let mut rng = Rng::new(self.seed);
+        (0..self.attempts.saturating_sub(1))
+            .map(|k| {
+                let exp = self
+                    .base_ms
+                    .checked_shl(k)
+                    .unwrap_or(self.cap_ms)
+                    .min(self.cap_ms)
+                    .max(1);
+                let half = (exp / 2).max(1);
+                Duration::from_millis(half + rng.below(half.max(1)))
+            })
+            .collect()
+    }
+
+    /// Run `op` up to `attempts` times. After each failed non-final
+    /// try, `on_retry` observes the 0-based attempt index (so callers
+    /// can count retries in their own telemetry) and the loop sleeps
+    /// the corresponding jittered delay. The final error is returned
+    /// unchanged; intermediate errors are discarded.
+    pub fn retry<T, E>(
+        &self,
+        mut op: impl FnMut(u32) -> Result<T, E>,
+        mut on_retry: impl FnMut(u32),
+    ) -> Result<T, E> {
+        let delays = self.delays();
+        let mut attempt = 0;
+        loop {
+            match op(attempt) {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    if attempt + 1 >= self.attempts {
+                        return Err(e);
+                    }
+                    on_retry(attempt);
+                    std::thread::sleep(delays[attempt as usize]);
+                    attempt += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic_per_seed() {
+        let p = BackoffPolicy::new(6, 1, 16, 42);
+        assert_eq!(p.delays(), p.delays());
+        let q = BackoffPolicy::new(6, 1, 16, 43);
+        assert_ne!(p.delays(), q.delays(), "different seeds must decorrelate");
+    }
+
+    #[test]
+    fn delays_are_bounded_by_cap_and_grow_from_base() {
+        let p = BackoffPolicy::new(10, 2, 20, 7);
+        let ds = p.delays();
+        assert_eq!(ds.len(), 9);
+        for (k, d) in ds.iter().enumerate() {
+            let exp = (2u64 << k).min(20);
+            let ms = d.as_millis() as u64;
+            assert!(ms >= (exp / 2).max(1), "delay {k} below half-exp: {ms}");
+            assert!(ms < exp.max(2), "delay {k} above exp: {ms}");
+            assert!(ms <= 20, "delay {k} exceeds cap: {ms}");
+        }
+    }
+
+    #[test]
+    fn retry_stops_on_first_success() {
+        let p = BackoffPolicy::new(5, 1, 4, 0);
+        let mut calls = 0;
+        let out: Result<u32, ()> = p.retry(
+            |attempt| {
+                calls += 1;
+                if attempt >= 2 { Ok(attempt) } else { Err(()) }
+            },
+            |_| {},
+        );
+        assert_eq!(out, Ok(2));
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn retry_exhausts_and_counts_retries() {
+        let p = BackoffPolicy::new(3, 1, 2, 0);
+        let mut retries = Vec::new();
+        let out: Result<(), u32> = p.retry(|attempt| Err(attempt), |k| retries.push(k));
+        assert_eq!(out, Err(2), "final attempt's error is returned");
+        assert_eq!(retries, vec![0, 1], "one on_retry per non-final failure");
+    }
+
+    #[test]
+    fn single_attempt_never_sleeps_or_retries() {
+        let p = BackoffPolicy::new(1, 1, 1, 0);
+        assert!(p.delays().is_empty());
+        let mut retried = false;
+        let out: Result<(), ()> = p.retry(|_| Err(()), |_| retried = true);
+        assert_eq!(out, Err(()));
+        assert!(!retried);
+    }
+
+    #[test]
+    fn zero_attempts_clamps_to_one() {
+        let p = BackoffPolicy::new(0, 0, 0, 0);
+        assert_eq!(p.attempts, 1);
+        let mut calls = 0;
+        let _: Result<(), ()> = p.retry(
+            |_| {
+                calls += 1;
+                Err(())
+            },
+            |_| {},
+        );
+        assert_eq!(calls, 1);
+    }
+}

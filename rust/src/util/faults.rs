@@ -11,12 +11,21 @@
 //! - `cache-io` — `write_cache_file` fails with an I/O error
 //!   (models a full or flaky disk; persistence must retry),
 //! - `sock-reset` — the front-end writes a torn prefix of a response
-//!   and slams the connection (models a mid-line TCP reset).
+//!   and slams the connection (models a mid-line TCP reset),
+//! - `remote-slow` — a remote-tier operation stalls until its deadline
+//!   budget is exhausted, then times out (models a slow or partitioned
+//!   cache server; the client must never wait past its budget),
+//! - `remote-io` — a remote-tier operation fails with an I/O error
+//!   (models a dead or resetting cache server),
+//! - `remote-garbage` — the payload fetched from the remote tier is
+//!   replaced with garbage bytes (models a lying or corrupted cache
+//!   server; the entry must quarantine, never change a plan).
 //!
 //! Grammar (comma-separated `key:value`, all values unsigned ints):
 //!
 //! ```text
-//! OSDP_FAULTS=seed:7,panic:20000,slow:50000,slow-ms:40,cache-io:100000,sock-reset:30000
+//! OSDP_FAULTS=seed:7,panic:20000,slow:50000,slow-ms:40,cache-io:100000,sock-reset:30000,\
+//!             remote-slow:50000,remote-io:100000,remote-garbage:30000
 //! ```
 //!
 //! Rates are **parts per million** per call site invocation. Whether
@@ -40,10 +49,16 @@ pub enum Site {
     CacheIo,
     /// Tear a front-end response mid-line and drop the connection.
     SockReset,
+    /// Stall a remote-tier operation past its deadline budget.
+    RemoteSlow,
+    /// Fail a remote-tier operation with an I/O error.
+    RemoteIo,
+    /// Corrupt the payload fetched from the remote tier.
+    RemoteGarbage,
 }
 
 /// Number of distinct fault sites (per-site call counters).
-pub const N_SITES: usize = 4;
+pub const N_SITES: usize = 7;
 
 /// A parsed `OSDP_FAULTS` specification. All rates in parts per
 /// million per call; the default plan injects nothing.
@@ -55,6 +70,9 @@ pub struct FaultPlan {
     pub slow_ms: u64,
     pub cache_io_ppm: u64,
     pub sock_reset_ppm: u64,
+    pub remote_slow_ppm: u64,
+    pub remote_io_ppm: u64,
+    pub remote_garbage_ppm: u64,
 }
 
 impl FaultPlan {
@@ -82,6 +100,9 @@ impl FaultPlan {
                 "slow-ms" => plan.slow_ms = n,
                 "cache-io" => plan.cache_io_ppm = n,
                 "sock-reset" => plan.sock_reset_ppm = n,
+                "remote-slow" => plan.remote_slow_ppm = n,
+                "remote-io" => plan.remote_io_ppm = n,
+                "remote-garbage" => plan.remote_garbage_ppm = n,
                 other => return Err(format!("unknown fault key `{other}`")),
             }
         }
@@ -90,6 +111,9 @@ impl FaultPlan {
             plan.slow_ppm,
             plan.cache_io_ppm,
             plan.sock_reset_ppm,
+            plan.remote_slow_ppm,
+            plan.remote_io_ppm,
+            plan.remote_garbage_ppm,
         ] {
             if rate > 1_000_000 {
                 return Err(format!("fault rate {rate} exceeds 1000000 ppm"));
@@ -100,7 +124,14 @@ impl FaultPlan {
 
     /// True when any site can ever fire.
     pub fn enabled(&self) -> bool {
-        self.panic_ppm + self.slow_ppm + self.cache_io_ppm + self.sock_reset_ppm > 0
+        self.panic_ppm
+            + self.slow_ppm
+            + self.cache_io_ppm
+            + self.sock_reset_ppm
+            + self.remote_slow_ppm
+            + self.remote_io_ppm
+            + self.remote_garbage_ppm
+            > 0
     }
 
     fn rate_ppm(&self, site: Site) -> u64 {
@@ -109,6 +140,9 @@ impl FaultPlan {
             Site::SearchSlow => self.slow_ppm,
             Site::CacheIo => self.cache_io_ppm,
             Site::SockReset => self.sock_reset_ppm,
+            Site::RemoteSlow => self.remote_slow_ppm,
+            Site::RemoteIo => self.remote_io_ppm,
+            Site::RemoteGarbage => self.remote_garbage_ppm,
         }
     }
 }
@@ -200,6 +234,25 @@ pub fn sock_reset_fires() -> bool {
     global().fires(Site::SockReset)
 }
 
+/// Remote-tier hook: true when this remote operation should stall
+/// past its deadline budget (the client sleeps at most its remaining
+/// budget, then reports a timeout — exactly what a slow server costs).
+pub fn remote_slow_fires() -> bool {
+    global().fires(Site::RemoteSlow)
+}
+
+/// Remote-tier hook: true when this remote operation should fail with
+/// an I/O error.
+pub fn remote_io_fails() -> bool {
+    global().fires(Site::RemoteIo)
+}
+
+/// Remote-tier hook: true when the payload fetched from the remote
+/// tier should be replaced with garbage bytes.
+pub fn remote_garbage_fires() -> bool {
+    global().fires(Site::RemoteGarbage)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,7 +260,8 @@ mod tests {
     #[test]
     fn parse_full_grammar() {
         let plan = FaultPlan::parse(
-            "seed:7,panic:20000,slow:50000,slow-ms:40,cache-io:100000,sock-reset:30000",
+            "seed:7,panic:20000,slow:50000,slow-ms:40,cache-io:100000,sock-reset:30000,\
+             remote-slow:60000,remote-io:70000,remote-garbage:80000",
         )
         .unwrap();
         assert_eq!(plan.seed, 7);
@@ -216,6 +270,9 @@ mod tests {
         assert_eq!(plan.slow_ms, 40);
         assert_eq!(plan.cache_io_ppm, 100_000);
         assert_eq!(plan.sock_reset_ppm, 30_000);
+        assert_eq!(plan.remote_slow_ppm, 60_000);
+        assert_eq!(plan.remote_io_ppm, 70_000);
+        assert_eq!(plan.remote_garbage_ppm, 80_000);
         assert!(plan.enabled());
     }
 
@@ -225,6 +282,7 @@ mod tests {
         assert!(FaultPlan::parse("seed:x").is_err());
         assert!(FaultPlan::parse("warp:9").is_err());
         assert!(FaultPlan::parse("panic:2000000").is_err());
+        assert!(FaultPlan::parse("remote-io:2000000").is_err());
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! printer, and property-testing helpers live here instead of coming from
 //! serde / rand / criterion / proptest.
 
+pub mod backoff;
 pub mod faults;
 pub mod json;
 pub mod prop;

@@ -1,0 +1,488 @@
+//! Second-cache-tier acceptance tests (ISSUE 8):
+//!
+//! * a healthy shared tier serves **cross-instance** hits: instance A
+//!   plans, instance B answers the same query from the tier without
+//!   running a planner — bit-identical to A's answer;
+//! * every hostile remote — dead address, mid-response socket reset,
+//!   garbage payloads, version-skewed entries, a slow-loris server —
+//!   yields plans **bit-identical** to a remote-less service, with the
+//!   failure counted in exactly one of `remote_errors` /
+//!   `remote_timeouts` / `remote_quarantined`;
+//! * consecutive failures trip the circuit breaker
+//!   (closed → open → half-open → closed), and a tripped breaker bounds
+//!   the added per-query latency to (nearly) nothing;
+//! * the stats invariant extends across tiers:
+//!   `hits + remote_hits + misses == queries − rejected`;
+//! * best-of-K warm starts never visit more nodes than the old
+//!   single-neighbor policy, and never change the answer.
+
+use osdp::config::GIB;
+use osdp::cost::Profiler;
+use osdp::service::{Answer, CacheServerHandler, Frontend, FrontendConfig,
+                    PlanQuery, PlanService, RemoteConfig, RemoteOutcome,
+                    RemoteTier, Source, Telemetry, handle_line_full};
+use osdp::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+const TINY: &str = "gpt:3000,64,6,192,4";
+
+fn tiny_service_profiler() -> Profiler {
+    let q = PlanQuery::batch(TINY, 8.0, 1);
+    let cluster = q.cluster.resolve().unwrap();
+    let model = osdp::service::resolve_setting(TINY).unwrap();
+    Profiler::new(&model, &cluster, &q.search)
+}
+
+/// A limit (in GiB) around `frac` of the tiny model's all-DP peak at
+/// `b` — the same construction the service tests use, so limits land
+/// in the interesting (mixed-plan) region.
+fn tiny_mem_gib(frac: f64, b: usize) -> f64 {
+    let p = tiny_service_profiler();
+    p.evaluate(&p.index_of(|d| d.is_pure_dp()), b).peak_mem * frac / GIB
+}
+
+fn choice_of(resp: &osdp::service::QueryResponse) -> Vec<usize> {
+    match &resp.answer {
+        Answer::Plan { plan, .. } => plan.choice.clone(),
+        Answer::Sweep { plans, best, .. } => plans[*best].choice.clone(),
+    }
+}
+
+fn nodes_of(resp: &osdp::service::QueryResponse) -> u64 {
+    match &resp.answer {
+        Answer::Plan { stats, .. } => stats.nodes,
+        Answer::Sweep { stats, .. } => stats.nodes,
+    }
+}
+
+/// A remote-tier client with test-friendly knobs: generous deadline for
+/// healthy-server tests, short cooldown so breaker recovery is testable.
+fn test_remote(addr: &str) -> RemoteConfig {
+    let mut cfg = RemoteConfig::new(addr);
+    cfg.deadline = Duration::from_millis(250);
+    cfg.cooldown = Duration::from_millis(50);
+    cfg
+}
+
+/// Serve `handler_fn` on an ephemeral loopback port: each accepted
+/// connection is handed to the closure (hostile servers misbehave per
+/// connection). The acceptor stops after `max_conns` connections.
+fn hostile_server(
+    max_conns: usize,
+    handler_fn: impl Fn(TcpStream) + Send + 'static,
+) -> SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    thread::spawn(move || {
+        for stream in listener.incoming().take(max_conns) {
+            let Ok(stream) = stream else { continue };
+            handler_fn(stream);
+        }
+    });
+    addr
+}
+
+/// An address that is bound, then immediately released: connecting to
+/// it fails fast and deterministically (no listener, no firewall hang).
+fn dead_addr() -> SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    listener.local_addr().unwrap()
+}
+
+fn read_request_line(stream: &mut TcpStream) {
+    let mut one = [0u8; 1];
+    while let Ok(1) = stream.read(&mut one) {
+        if one[0] == b'\n' {
+            break;
+        }
+    }
+}
+
+/// The baseline answers for a batch of queries on a remote-less service.
+fn baseline(queries: &[PlanQuery]) -> Vec<Vec<usize>> {
+    let service = PlanService::in_memory();
+    queries
+        .iter()
+        .map(|q| choice_of(&service.query(q).unwrap()))
+        .collect()
+}
+
+fn queries() -> Vec<PlanQuery> {
+    let mem = tiny_mem_gib(0.6, 2);
+    let mut out = Vec::new();
+    for b in [1usize, 2, 3] {
+        let mut q = PlanQuery::batch(TINY, mem, b);
+        q.threads = 1;
+        out.push(q);
+    }
+    out
+}
+
+/// Run `queries` on a service wired to `remote_addr` and assert every
+/// answer is bit-identical to the remote-less baseline. Returns the
+/// service for counter assertions.
+fn assert_identical_under(remote_addr: &str) -> PlanService {
+    let qs = queries();
+    let want = baseline(&qs);
+    let mut service = PlanService::in_memory();
+    service.attach_remote(RemoteTier::start(test_remote(remote_addr)));
+    for (q, want) in qs.iter().zip(&want) {
+        let got = service.query(q).unwrap();
+        assert_eq!(
+            &choice_of(&got),
+            want,
+            "a hostile remote must never change an answer"
+        );
+    }
+    service
+}
+
+// ---------------------------------------------------------------------
+// healthy tier: cross-instance sharing
+// ---------------------------------------------------------------------
+
+#[test]
+fn two_instances_share_plans_through_the_tier() {
+    let telemetry = Arc::new(Telemetry::new());
+    let tier_frontend = Frontend::start_with(
+        Arc::new(CacheServerHandler::new(1024)),
+        Arc::clone(&telemetry),
+        FrontendConfig { workers: 2, ..Default::default() },
+    )
+    .expect("bind the cache tier");
+    let tier_addr = tier_frontend.local_addr().to_string();
+
+    let qs = queries();
+    let want = baseline(&qs);
+
+    // instance A plans everything and writes behind to the tier
+    let mut a = PlanService::in_memory();
+    a.attach_remote(RemoteTier::start(test_remote(&tier_addr)));
+    for q in &qs {
+        a.query(q).unwrap();
+    }
+    a.remote().unwrap().flush(Duration::from_secs(5));
+    let sa = a.stats();
+    assert_eq!(sa.planner_runs as usize, qs.len());
+    assert_eq!(sa.remote_hits, 0, "a fresh tier cannot hit");
+    assert_eq!(sa.remote_misses as usize, qs.len(),
+               "every A-side miss asked the tier first: {sa:?}");
+
+    // instance B answers the same traffic from the tier: zero planner
+    // runs, source=remote, bit-identical choices
+    let mut b = PlanService::in_memory();
+    b.attach_remote(RemoteTier::start(test_remote(&tier_addr)));
+    for (q, want) in qs.iter().zip(&want) {
+        let got = b.query(q).unwrap();
+        assert_eq!(got.source, Source::Remote, "B must hit the tier");
+        assert_eq!(got.source.label(), "remote");
+        assert_eq!(&choice_of(&got), want,
+                   "a tier hit must be bit-identical to A's plan");
+    }
+    let sb = b.stats();
+    assert_eq!(sb.planner_runs, 0, "B never plans: {sb:?}");
+    assert_eq!(sb.remote_hits as usize, qs.len());
+    assert_eq!(sb.misses, 0,
+               "remote hits reclassify the provisional miss: {sb:?}");
+    // a second pass on B is now a pure L1 hit (the read-through
+    // populated the local cache)
+    let again = b.query(&qs[0]).unwrap();
+    assert_eq!(again.source, Source::Cache);
+
+    assert_eq!(b.breaker_state(), "closed");
+    tier_frontend.shutdown();
+    tier_frontend.join();
+}
+
+// ---------------------------------------------------------------------
+// hostile remotes: bit-identity + exact failure accounting
+// ---------------------------------------------------------------------
+
+#[test]
+fn dead_remote_is_invisible_and_counts_errors() {
+    let addr = dead_addr();
+    let service = assert_identical_under(&addr.to_string());
+    let s = service.stats();
+    assert!(s.remote_errors > 0, "dead-address connects must count: {s:?}");
+    assert_eq!(s.remote_hits + s.remote_misses, 0);
+    assert_eq!(service.stats().planner_runs as usize, queries().len());
+}
+
+#[test]
+fn mid_response_reset_is_an_error_not_a_wrong_answer() {
+    let addr = hostile_server(64, |mut stream| {
+        read_request_line(&mut stream);
+        // half a JSON object, then a hard close
+        let _ = stream.write_all(br#"{"ok":tru"#);
+        drop(stream);
+    });
+    let service = assert_identical_under(&addr.to_string());
+    let s = service.stats();
+    assert!(s.remote_errors > 0,
+            "a torn response is an I/O error: {s:?}");
+    assert_eq!(s.remote_quarantined, 0,
+               "a torn response never parses far enough to quarantine");
+}
+
+#[test]
+fn garbage_payloads_quarantine_and_never_propagate() {
+    let addr = hostile_server(64, |mut stream| {
+        read_request_line(&mut stream);
+        let _ = stream.write_all(b"!!not json at all!!\n");
+    });
+    let service = assert_identical_under(&addr.to_string());
+    let s = service.stats();
+    assert!(s.remote_quarantined > 0,
+            "garbage bytes must quarantine: {s:?}");
+    assert_eq!(s.remote_errors + s.remote_timeouts, 0,
+               "the transport worked; only the payload was rotten: {s:?}");
+    assert_eq!(service.breaker_state(), "closed",
+               "the breaker tracks availability, not payload quality");
+}
+
+#[test]
+fn version_skewed_entries_quarantine() {
+    // a "hit" whose entry comes from another cost-model epoch: the
+    // entry must be rejected wholesale, exactly like the disk cache
+    let addr = hostile_server(64, |mut stream| {
+        read_request_line(&mut stream);
+        let entry = r#"{"choice":[0,0],"epoch":999,"key":"x","kind":"plan","req":"r","schema":1}"#;
+        let resp = format!(
+            "{{\"entry\":{entry},\"hit\":true,\"kind\":\"entry\",\"ok\":true}}\n"
+        );
+        let _ = stream.write_all(resp.as_bytes());
+    });
+    let service = assert_identical_under(&addr.to_string());
+    let s = service.stats();
+    assert!(s.remote_quarantined > 0,
+            "epoch-skewed entries must quarantine: {s:?}");
+    assert_eq!(s.remote_hits, 0, "never served: {s:?}");
+}
+
+#[test]
+fn slow_loris_times_out_within_the_deadline_budget() {
+    let addr = hostile_server(64, |mut stream| {
+        read_request_line(&mut stream);
+        // trickle one byte at a time, far slower than any budget
+        for _ in 0..200 {
+            if stream.write_all(b"x").is_err() {
+                return; // client gave up (that's the point)
+            }
+            thread::sleep(Duration::from_millis(10));
+        }
+    });
+    let qs = queries();
+    let want = baseline(&qs);
+    let mut service = PlanService::in_memory();
+    let mut cfg = test_remote(&addr.to_string());
+    cfg.deadline = Duration::from_millis(40);
+    cfg.breaker_threshold = u32::MAX; // keep probing; we time every get
+    service.attach_remote(RemoteTier::start(cfg));
+    for (q, want) in qs.iter().zip(&want) {
+        let started = Instant::now();
+        let got = service.query(q).unwrap();
+        let elapsed = started.elapsed();
+        assert_eq!(&choice_of(&got), want);
+        // generous slack for CI schedulers: the point is that a 2s
+        // trickle cannot hold a 40ms budget hostage
+        assert!(
+            elapsed < Duration::from_secs(1),
+            "slow-loris remote held a query for {elapsed:?}"
+        );
+    }
+    let s = service.stats();
+    assert!(s.remote_timeouts > 0,
+            "budget exhaustion must count as a timeout: {s:?}");
+}
+
+// ---------------------------------------------------------------------
+// the circuit breaker: transitions and the latency cap
+// ---------------------------------------------------------------------
+
+#[test]
+fn breaker_trips_open_then_recovers_through_half_open() {
+    // phase 1: a dead remote trips the breaker after exactly
+    // `threshold` consecutive failures
+    let dead = dead_addr();
+    let mut cfg = test_remote(&dead.to_string());
+    cfg.breaker_threshold = 3;
+    cfg.cooldown = Duration::from_millis(40);
+    let tier = RemoteTier::start(cfg.clone());
+    let k = osdp::service::QueryKey::for_query(
+        &tiny_service_profiler(),
+        8.0 * GIB,
+        osdp::service::QueryShape::Batch(2),
+    );
+    assert_eq!(tier.breaker_state(), "closed");
+    for _ in 0..3 {
+        let out = tier.get(&k, "plan setting=x mem=8 batch=2");
+        assert!(matches!(out, RemoteOutcome::Error | RemoteOutcome::Timeout),
+                "dead remote: {out:?}");
+    }
+    assert_eq!(tier.breaker_state(), "open",
+               "3 consecutive failures must trip the breaker");
+    assert_eq!(tier.breaker_open_count(), 1);
+
+    // phase 2: while open, operations are Skipped at (near) zero cost —
+    // the tripped breaker caps added latency per query
+    let started = Instant::now();
+    for _ in 0..100 {
+        assert_eq!(tier.get(&k, "plan x"), RemoteOutcome::Skipped);
+    }
+    assert!(
+        started.elapsed() < Duration::from_millis(100),
+        "100 open-breaker lookups must cost ~nothing, took {:?}",
+        started.elapsed()
+    );
+
+    // phase 3: stand a healthy server on a *new* tier's address and
+    // watch open → half-open (probe) → closed
+    let telemetry = Arc::new(Telemetry::new());
+    let frontend = Frontend::start_with(
+        Arc::new(CacheServerHandler::new(64)),
+        telemetry,
+        FrontendConfig { workers: 1, ..Default::default() },
+    )
+    .unwrap();
+    let mut cfg2 = test_remote(&frontend.local_addr().to_string());
+    cfg2.breaker_threshold = 1;
+    cfg2.cooldown = Duration::from_millis(30);
+    let healing = RemoteTier::start(cfg2);
+    // healthy server: a miss is a *successful* operation, breaker stays
+    // closed
+    assert_eq!(healing.get(&k, "plan x"), RemoteOutcome::Miss);
+    assert_eq!(healing.breaker_state(), "closed");
+    frontend.shutdown();
+    frontend.join();
+    // the server is gone now: the next failure trips (threshold 1),
+    // and after the cooldown the tier probes (half-open) and re-opens
+    // on the failed probe — the full open → half-open → open walk
+    let out = healing.get(&k, "plan x");
+    assert!(matches!(out, RemoteOutcome::Error | RemoteOutcome::Timeout));
+    assert_eq!(healing.breaker_state(), "open");
+    let opens_before = healing.breaker_open_count();
+    thread::sleep(Duration::from_millis(35));
+    let out = healing.get(&k, "plan x");
+    assert!(matches!(out, RemoteOutcome::Error | RemoteOutcome::Timeout),
+            "the cooldown admits exactly one probe: {out:?}");
+    assert_eq!(healing.breaker_state(), "open",
+               "a failed probe re-opens");
+    assert!(healing.breaker_open_count() > opens_before);
+}
+
+// ---------------------------------------------------------------------
+// the cross-tier stats invariant, measured through the protocol layer
+// ---------------------------------------------------------------------
+
+#[test]
+fn stats_invariant_holds_across_tiers() {
+    let telemetry = Arc::new(Telemetry::new());
+    let tier_frontend = Frontend::start_with(
+        Arc::new(CacheServerHandler::new(1024)),
+        Arc::clone(&telemetry),
+        FrontendConfig { workers: 1, ..Default::default() },
+    )
+    .unwrap();
+    let tier_addr = tier_frontend.local_addr().to_string();
+
+    // warm the tier from instance A
+    let mut a = PlanService::in_memory();
+    a.attach_remote(RemoteTier::start(test_remote(&tier_addr)));
+    let mem = tiny_mem_gib(0.6, 2);
+    for line in [
+        format!("query setting={TINY} mem={mem} batch=2 threads=1"),
+        format!("query setting={TINY} mem={mem} batch=3 threads=1"),
+    ] {
+        let t = Telemetry::new();
+        handle_line_full(&a, Some(&t), &line);
+    }
+    a.remote().unwrap().flush(Duration::from_secs(5));
+
+    // instance B sees a mix: remote hits, L1 hits, real misses,
+    // rejected junk — the invariant must hold exactly
+    let mut b = PlanService::in_memory();
+    b.attach_remote(RemoteTier::start(test_remote(&tier_addr)));
+    let t = Telemetry::new();
+    let lines = [
+        format!("query setting={TINY} mem={mem} batch=2 threads=1"), // remote hit
+        format!("query setting={TINY} mem={mem} batch=2 threads=1"), // L1 hit
+        format!("query setting={TINY} mem={mem} batch=4 threads=1"), // miss
+        format!("query setting=nope mem={mem} batch=2"),             // rejected
+        format!("query setting={TINY} mem={mem} batch=3 threads=1"), // remote hit
+    ];
+    for line in &lines {
+        handle_line_full(&b, Some(&t), line);
+    }
+    let s = b.stats();
+    assert_eq!(s.remote_hits, 2, "{s:?}");
+    assert_eq!(s.hits, 1, "{s:?}");
+    assert_eq!(s.misses, 1, "{s:?}");
+    assert_eq!(s.planner_runs, 1, "{s:?}");
+    let rejected = t.get(osdp::service::Counter::Rejected);
+    assert_eq!(
+        s.hits + s.remote_hits + s.misses,
+        t.queries() - rejected,
+        "hits + remote_hits + misses == queries - rejected: {s:?}"
+    );
+    // the stats verb surfaces the new counters and the breaker state
+    let (resp, _) = handle_line_full(&b, Some(&t), "stats");
+    let doc = Json::parse(&resp).unwrap();
+    assert_eq!(doc.get("remote_hits").as_usize(), Some(2), "{resp}");
+    assert_eq!(doc.get("breaker").as_str(), Some("closed"), "{resp}");
+    tier_frontend.shutdown();
+    tier_frontend.join();
+}
+
+// ---------------------------------------------------------------------
+// best-of-K warm starts: node-count non-regression, answers unchanged
+// ---------------------------------------------------------------------
+
+#[test]
+fn best_of_k_warm_start_never_visits_more_nodes_than_single_neighbor() {
+    let mem_lo = tiny_mem_gib(0.45, 4);
+    let mem_hi = tiny_mem_gib(0.9, 4);
+    let mk = |b: usize, mem: f64| {
+        let mut q = PlanQuery::batch(TINY, mem, b);
+        q.threads = 1;
+        q
+    };
+    let target = mk(4, mem_hi);
+
+    // cold truth
+    let cold_service = PlanService::in_memory();
+    let cold = cold_service.query(&target).unwrap();
+
+    // single-neighbor policy ≈ a cache holding only the nearest
+    // neighbor (batch 3 at the same limit)
+    let single = PlanService::in_memory();
+    single.query(&mk(3, mem_hi)).unwrap();
+    let single_resp = single.query(&target).unwrap();
+
+    // K-nearest sees strictly more candidates: batches 2, 3 and a
+    // tighter-limit batch 4 entry
+    let multi = PlanService::in_memory();
+    multi.query(&mk(2, mem_hi)).unwrap();
+    multi.query(&mk(3, mem_hi)).unwrap();
+    multi.query(&mk(4, mem_lo)).unwrap();
+    let warm_seeded_before = multi.stats().warm_seeded;
+    let multi_resp = multi.query(&target).unwrap();
+
+    assert_eq!(choice_of(&multi_resp), choice_of(&cold),
+               "warm starts must never change the answer");
+    assert_eq!(choice_of(&single_resp), choice_of(&cold));
+    assert!(
+        nodes_of(&multi_resp) <= nodes_of(&single_resp),
+        "best-of-K ({}) must prune at least as hard as the single \
+         neighbor ({})",
+        nodes_of(&multi_resp),
+        nodes_of(&single_resp),
+    );
+    assert!(nodes_of(&multi_resp) <= nodes_of(&cold));
+    assert_eq!(multi.stats().warm_seeded, warm_seeded_before + 1,
+               "the target query must have been warm-seeded: {:?}",
+               multi.stats());
+}

@@ -270,12 +270,14 @@ fn telemetry_is_consistent_under_concurrent_load() {
         telemetry.batch_latency.count() + telemetry.sweep_latency.count(),
         telemetry.queries()
     );
-    // the service core saw every query that passed validation
+    // the service core saw every query that passed validation (no
+    // remote tier here, so remote_hits is 0 — included to pin the
+    // three-way form of the invariant)
     let s = service.stats();
     assert_eq!(
-        s.hits + s.misses,
+        s.hits + s.remote_hits + s.misses,
         telemetry.queries() - telemetry.get(Counter::Rejected),
-        "hits + misses must equal dispatched-and-validated queries: {}",
+        "hits + remote_hits + misses must equal dispatched-and-validated queries: {}",
         s.describe()
     );
     // 2 distinct cacheable queries -> exactly 2 planner runs, however
