@@ -151,12 +151,15 @@ fn main() {
     out.insert("search_parallel8_s".into(), num(m8.per_iter()));
     out.insert("parallel_speedup_8t".into(), num(speedup));
 
-    // frontier stats on the 96L menus (wide classes fall back — recorded
-    // so the build behavior is tracked across PRs too)
+    // frontier stats on the 96L menus (every class prebuilds now that the
+    // incremental Minkowski-sum build has no width ceiling — recorded so
+    // the build behavior is tracked across PRs too)
     let f96 = osdp::planner::frontier_report(&profiler);
     println!("\n96L frontiers: {}", f96.describe());
     out.insert("frontier_points_96l".into(), num(f96.points as f64));
     out.insert("frontier_too_wide_96l".into(), num(f96.too_wide as f64));
+    out.insert("frontier_max_level_width_96l".into(),
+               num(f96.max_level_width as f64));
 
     // frontier engine vs folded B&B on the scheduler's hot path: the
     // 24-layer uniform GPT sweep (the tentpole's target instance — one
@@ -227,6 +230,118 @@ fn main() {
         Json::Arr(f24.per_class.iter().map(|s| num(s.raw as f64)).collect()),
     );
 
+    // incremental-frontier ladder: deep uniform stacks with wide menus.
+    // The Minkowski-sum build retired the 2^18 composition ceiling, so the
+    // 96L class (and the 1000L one, whose composition count saturates any
+    // one-shot enumeration) prebuilds like any other; record build widths
+    // and sweep node rows so the trajectory is tracked across PRs.
+    println!("\n== incremental-frontier ladder (wide menus, 96L / 1000L) ==");
+    let mut sweep_rows: Vec<(usize, u64, Option<u64>, bool)> = Vec::new();
+    // 96L keeps the zoo's full {0,2,4,8} menu (the shape that used to
+    // overflow the one-shot ceiling); 1000L uses a 4-option {0,2} menu so
+    // the ladder probes depth rather than menu width. The 1000L frontier
+    // product space is ~2*2*(3m+1)^2 ≈ 36M prefixes, so its sweep gets a
+    // raised node budget to keep the completeness certificate (budgets
+    // never change a completed search's result).
+    for &(layers, max_b, run_folded, ref grans, budget) in &[
+        (96usize, 8usize, true, vec![0usize, 2, 4, 8], 2_000_000u64),
+        (1000, 4, false, vec![0, 2], 64_000_000),
+    ] {
+        let tag = format!("sweep{layers}");
+        let model = build_gpt(
+            &GptDims::uniform("ladder", 5000, 128, layers, 256, 4));
+        let sl = SearchConfig {
+            granularities: grans.clone(),
+            paper_granularity: true,
+            ..Default::default()
+        };
+        let pl = Profiler::new(&model, &cluster, &sl);
+        let mut bb = Bencher::new(1, 3, 1);
+        let mb = bb.bench(&format!("frontier/{layers}L_build"), || {
+            osdp::planner::frontier_report(&pl)
+        });
+        let fl = osdp::planner::frontier_report(&pl);
+        println!("{layers}L frontiers ({} build): {}",
+                 osdp::util::fmt_time(mb.per_iter()), fl.describe());
+        println!("{layers}L level-wise max frontier width: {}",
+                 fl.max_level_width);
+        out.insert(format!("{tag}_build_s"), num(mb.per_iter()));
+        out.insert(format!("{tag}_frontier_points"), num(fl.points as f64));
+        out.insert(format!("{tag}_frontier_too_wide"),
+                   num(fl.too_wide as f64));
+        out.insert(format!("{tag}_max_level_width"),
+                   num(fl.max_level_width as f64));
+        out.insert(
+            format!("{tag}_points_per_class"),
+            Json::Arr(fl.per_class.iter()
+                          .map(|s| num(s.kept as f64)).collect()),
+        );
+        assert_eq!(fl.too_wide, 0,
+                   "{layers}L: every class must prebuild");
+        for c in &fl.per_class {
+            assert!(c.kept <= c.raw && c.kept <= 50_000,
+                    "{layers}L: unbounded frontier class ({} points)",
+                    c.kept);
+        }
+
+        // a limit between the ZDP and DP extremes so the sweep has to
+        // shard without being trivially feasible
+        let dp1 = pl.evaluate(&pl.index_of(|d| d.is_pure_dp()), 1).peak_mem;
+        let zdp1 =
+            pl.evaluate(&pl.index_of(|d| d.is_pure_zdp()), 1).peak_mem;
+        let limit = zdp1 * max_b as f64 * 0.2 + dp1 * 0.55;
+        let mut bfs = Bencher::new(1, 3, 1);
+        let mfs = bfs.bench(&format!("scheduler/{layers}L_frontier_sweep"),
+                            || {
+                                Scheduler::new(&pl, limit, max_b)
+                                    .with_budget(budget)
+                                    .run()
+                            });
+        let frs = Scheduler::new(&pl, limit, max_b)
+            .with_budget(budget)
+            .run()
+            .unwrap_or_else(|_| panic!("{layers}L sweep infeasible"));
+        let complete = frs.candidates.iter().all(|c| c.stats.complete);
+        println!(
+            "{layers}L frontier sweep: {} | {} candidates | {} nodes{}",
+            osdp::util::fmt_time(mfs.per_iter()),
+            frs.candidates.len(),
+            frs.total_nodes,
+            if complete { "" } else { " [budget expired]" },
+        );
+        out.insert(format!("{tag}_frontier_sweep_s"), num(mfs.per_iter()));
+        out.insert(format!("{tag}_nodes_frontier"),
+                   num(frs.total_nodes as f64));
+
+        let mut folded_nodes = None;
+        if run_folded {
+            let fos = Scheduler::new(&pl, limit, max_b)
+                .with_engine(Engine::FoldedBb)
+                .run()
+                .unwrap_or_else(|_| panic!("{layers}L folded infeasible"));
+            folded_nodes = Some(fos.total_nodes);
+            println!("{layers}L folded sweep: {} nodes; frontier visits \
+                      {:.1}% of that",
+                     fos.total_nodes,
+                     100.0 * frs.total_nodes as f64
+                         / fos.total_nodes.max(1) as f64);
+            out.insert(format!("{tag}_nodes_folded"),
+                       num(fos.total_nodes as f64));
+            // bit-identity whenever both engines finished within budget
+            if complete && fos.candidates.iter().all(|c| c.stats.complete) {
+                assert_eq!(frs.candidates.len(), fos.candidates.len());
+                for (a, b) in frs.candidates.iter().zip(&fos.candidates) {
+                    assert_eq!(a.plan.choice, b.plan.choice,
+                               "{layers}L sweep diverged at b={}",
+                               a.plan.batch);
+                    assert_eq!(a.plan.cost.time.to_bits(),
+                               b.plan.cost.time.to_bits());
+                }
+            }
+        }
+        sweep_rows.push((layers, frs.total_nodes, folded_nodes, complete));
+    }
+
     // machine-readable perf record, tracked across PRs
     let path = std::env::var("OSDP_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_search.json".to_string());
@@ -258,5 +373,20 @@ fn main() {
             osdp::util::fmt_time(mfr.per_iter()),
             osdp::util::fmt_time(mfo.per_iter()),
         );
+        // unbounded-width ladder floors: both deep sweeps must finish
+        // within the per-batch node budget (the frontier's point merges
+        // are tiny next to in-place block enumeration), and the 96L
+        // frontier sweep must visit no more nodes than the folded engine
+        assert_eq!(f96.too_wide + f24.too_wide, 0,
+                   "no class may skip the prebuild");
+        for &(layers, fr_nodes, folded_nodes, complete) in &sweep_rows {
+            assert!(complete,
+                    "{layers}L frontier sweep must finish within budget");
+            if let Some(fo_nodes) = folded_nodes {
+                assert!(fr_nodes <= fo_nodes,
+                        "{layers}L frontier sweep visited more nodes than \
+                         the folded engine: {fr_nodes} > {fo_nodes}");
+            }
+        }
     }
 }

@@ -1,13 +1,13 @@
-"""Python mirror of the Rust planner's frontier engine (PR 3 validation).
+"""Python mirror of the Rust planner's frontier engine (PR 3 + PR 9).
 
 Mirrors, operation-for-operation in IEEE-754 doubles:
 
 * ``planner/bound.rs``  — Prefold order, suffix bounds, the folded
   branch-and-bound Walker (greedy seed pricing, strict/tie time pruning,
   memory pruning, fast completion);
-* ``planner/frontier.rs`` — the per-class composition-frontier build
-  ((time, lex) processing + 2-D staircase prune) and the frontier descent,
-  including the too-wide fallback;
+* ``planner/frontier.rs`` — the per-class **incremental Minkowski-sum**
+  frontier build (level-by-level (time, lex-block) processing + 2-D
+  staircase prune, no width ceiling) and the frontier descent;
 * ``planner/exhaustive.rs`` — the folded (time, lex) ground-truth
   enumerator.
 
@@ -17,16 +17,25 @@ Checks, on hundreds of random instances x batch sizes x memory limits:
    (total time bits AND full choice vector — the canonical (total, lex)
    objective);
 2. frontier    == folded B&B, bit-for-bit, with node count <= folded's;
-3. frontier with a forced too-wide class == folded B&B (fallback path);
+3. the incremental build == the retired one-shot enumeration, point for
+   point and bit for bit (aggregates AND blocks), on every class of
+   every instance — the strongest oracle: the per-level prune must keep
+   exactly the one-shot kept set, in the same (tf, lex) order;
 4. folded exhaustive == brute force, bit-for-bit;
 5. one shared frontier build serves a whole batch sweep (batch
    invariance): per-batch results equal fresh builds at every b;
 6. the parallel split over the leading classes' frontier points
    (``enumerate_tasks_frontier`` + the deterministic (time, lex) merge)
-   equals the serial frontier engine at every split depth.
+   equals the serial frontier engine at every split depth;
+7. wide classes **above the old 2^18 one-shot ceiling** (o=4, m=96 and
+   m=116): incremental == one-shot oracle == folded B&B ==
+   exhaustive-folded, full choice vectors, serial and split;
+8. the 96L/1000L-style bench ladder builds with bounded per-level
+   widths (printed, to calibrate OSDP_BENCH_STRICT floors) and the 96L
+   frontier sweep visits no more nodes than the folded engine.
 
 Run: ``python3 python/mirror/frontier_mirror.py`` (exits non-zero on any
-mismatch; prints node-count evidence for the 24-layer-style instance).
+mismatch; prints node-count and width evidence for the ladder).
 """
 
 import random
@@ -39,6 +48,10 @@ TIME_GRID = 1.0 / (1 << 30)
 def snap(t):
     # exact for grid multiples; synthetic menus only use grid multiples
     return round(t * (1 << 30)) * TIME_GRID
+
+
+def grid(v):
+    return v * TIME_GRID * 1000
 
 
 # ----------------------------------------------------------------- model
@@ -319,38 +332,22 @@ class Walker:
         if self.fast_completion(i, tf, st, tm):
             return
         cls = self.fr[k]
-        if cls is not None:
-            bws = self.sp.class_bws[k]
-            for ptf, pst, pg, block in cls:
-                for j, c in enumerate(block):
-                    self.prefix[i + j] = c
-                self.descend_frontier(k + 1, tf + ptf, st + pst,
-                                      max(tm, pg + bws))
-        else:  # too-wide fallback: enumerate blocks in place
-            end = self.sp.pre.class_start[k + 1]
-            o = len(self.sp.flat[i])
-            block = [0] * (end - i)
-            while True:
-                btf, bst, btm = tf, st, tm
-                for j, c in enumerate(block):
-                    opt = self.sp.flat[i + j][c]
-                    btf += opt[0]
-                    bst += opt[1]
-                    btm = max(btm, opt[2])
-                    self.prefix[i + j] = c
-                self.descend_frontier(k + 1, btf, bst, btm)
-                if not next_monotone_block(block, o):
-                    break
+        bws = self.sp.class_bws[k]
+        for ptf, pst, pg, block in cls:
+            for j, c in enumerate(block):
+                self.prefix[i + j] = c
+            self.descend_frontier(k + 1, tf + ptf, st + pst,
+                                  max(tm, pg + bws))
 
 
-def run_split_frontier(tables, limit, b, depth):
+def run_split_frontier(tables, limit, b, depth, fr=None):
     """Mirror of parallel.rs: tasks = combinations of the first `depth`
     classes' frontier points, each walker run from its prefix, merged by
     (time, lex). Shared-bound pruning omitted (it never decides a tie)."""
     pre = Prefold(tables)
-    fr = build_frontiers(pre, tables)
-    depth = min(depth, next((k for k, c in enumerate(fr) if c is None),
-                            pre.n_classes()))
+    if fr is None:
+        fr = build_frontiers(pre, tables)
+    depth = min(depth, pre.n_classes())
     space = Space(pre, tables, limit, b)
     # enumerate tasks: odometer over per-class point indices
     tasks = []
@@ -415,66 +412,129 @@ def run_engine(tables, limit, b, engine, frontiers=None, pre=None):
 # -------------------------------------------------------------- frontier
 
 
-def build_frontiers(pre, tables, cap=1 << 18, force_too_wide=()):
+class Stair:
+    """(states, gather) staircase: states ascending, gather strictly
+    descending (stair_dominates / stair_insert in frontier.rs)."""
+
+    def __init__(self):
+        self.s = []
+
+    def dominated(self, st, g):
+        lo, hi = 0, len(self.s)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if self.s[mid][0] <= st:
+                lo = mid + 1
+            else:
+                hi = mid
+        return lo > 0 and self.s[lo - 1][1] <= g
+
+    def insert(self, st, g):
+        lo, hi = 0, len(self.s)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if self.s[mid][0] < st:
+                lo = mid + 1
+            else:
+                hi = mid
+        j = lo
+        while j < len(self.s) and self.s[j][1] >= g:
+            j += 1
+        self.s[lo:j] = [(st, g)]
+
+
+def build_class(t, m):
+    """Incremental Minkowski-sum build, mirroring ``build_class`` in
+    ``frontier.rs``: the level-``l`` frontier is the staircase-pruned sum
+    of the level-``l-1`` frontier with the class menu. Candidates are
+    processed in (tf, lex-block) order; blocks are tracked as option
+    counts, and counts compare *descending* because putting more members
+    on a smaller option is the lex-smaller block. Returns
+    ``(kept points with materialized blocks, peak level width)``."""
+    o = len(t.tf)
+    pts = [(0.0, 0.0, 0.0, (0,) * o)]  # level 0: the empty block
+    peak = 1
+    for _level in range(m):
+        cand = []
+        for tf, st, g, counts in pts:
+            for c in range(o):
+                nc = list(counts)
+                nc[c] += 1
+                cand.append((tf + t.tf[c], st + t.st[c],
+                             max(g, t.g[c]), tuple(nc)))
+        cand.sort(key=lambda e: (e[0], tuple(-x for x in e[3])))
+        stair = Stair()
+        kept = []
+        for tf, st, g, counts in cand:
+            if stair.dominated(st, g):
+                continue
+            stair.insert(st, g)
+            kept.append((tf, st, g, counts))
+        pts = kept
+        peak = max(peak, len(pts))
+    out = []
+    for tf, st, g, counts in pts:
+        block = []
+        for c, n in enumerate(counts):
+            block.extend([c] * n)
+        out.append((tf, st, g, block))
+    return out, peak
+
+
+def build_class_oneshot(t, m):
+    """The retired one-shot enumeration (PR 3 — kept as the oracle):
+    every monotone block, (time, lex) stable sort, staircase prune."""
+    o = len(t.tf)
+    cand = []
+    block = [0] * m
+    while True:
+        tf = 0.0
+        st = 0.0
+        g = 0.0
+        for c in block:
+            tf += t.tf[c]
+            st += t.st[c]
+            g = max(g, t.g[c])
+        cand.append((tf, st, g, list(block)))
+        if not next_monotone_block(block, o):
+            break
+    idx = sorted(range(len(cand)), key=lambda p: cand[p][0])
+    stair = Stair()
+    kept = []
+    for p in idx:
+        tf, st, g, block_ = cand[p]
+        if stair.dominated(st, g):
+            continue
+        stair.insert(st, g)
+        kept.append((tf, st, g, block_))
+    return kept
+
+
+def build_frontiers(pre, tables):
     out = []
     for k in range(pre.n_classes()):
         t = tables[pre.order[pre.class_start[k]]]
-        m = pre.mult(k)
-        o = len(t.tf)
-        if k in force_too_wide:
-            out.append(None)
-            continue
-        cand = []
-        block = [0] * m
-        while True:
-            tf = 0.0
-            st = 0.0
-            g = 0.0
-            for c in block:
-                tf += t.tf[c]
-                st += t.st[c]
-                g = max(g, t.g[c])
-            cand.append((tf, st, g, list(block)))
-            if not next_monotone_block(block, o):
-                break
-        if len(cand) > cap:
-            out.append(None)
-            continue
-        idx = sorted(range(len(cand)), key=lambda p: cand[p][0])
-        stair = []  # (st, g) staircase
-
-        def dominated(st_, g_):
-            lo, hi = 0, len(stair)
-            while lo < hi:
-                mid = (lo + hi) // 2
-                if stair[mid][0] <= st_:
-                    lo = mid + 1
-                else:
-                    hi = mid
-            return lo > 0 and stair[lo - 1][1] <= g_
-
-        def insert(st_, g_):
-            lo, hi = 0, len(stair)
-            while lo < hi:
-                mid = (lo + hi) // 2
-                if stair[mid][0] < st_:
-                    lo = mid + 1
-                else:
-                    hi = mid
-            j = lo
-            while j < len(stair) and stair[j][1] >= g_:
-                j += 1
-            stair[lo:j] = [(st_, g_)]
-
-        kept = []
-        for p in idx:
-            tf, st, g, block_ = cand[p]
-            if dominated(st, g):
-                continue
-            insert(st, g)
-            kept.append((tf, st, g, block_))
+        kept, _peak = build_class(t, pre.mult(k))
         out.append(kept)
     return out
+
+
+def check_build_matches_oneshot(pre, tables, ctx):
+    """Oracle: the incremental kept set equals the one-shot kept set —
+    same points, same (tf, lex) order, same bits."""
+    for k in range(pre.n_classes()):
+        t = tables[pre.order[pre.class_start[k]]]
+        inc, _ = build_class(t, pre.mult(k))
+        one = build_class_oneshot(t, pre.mult(k))
+        check(len(inc) == len(one),
+              f"class {k}: incremental {len(inc)} pts != "
+              f"one-shot {len(one)}", ctx)
+        for a, b in zip(inc, one):
+            check(a[3] == b[3]
+                  and all(x.hex() == y.hex()
+                          for x, y in zip(a[:3], b[:3])),
+                  f"class {k}: incremental point != one-shot: "
+                  f"{a} vs {b}", ctx)
 
 
 # ------------------------------------------------------------ exhaustive
@@ -591,13 +651,8 @@ def main():
         check(exf is not None and exf[0] == bt and exf[1] == bc,
               f"exhaustive_folded != brute: {exf} vs {brute}", ctx)
 
-        # forced too-wide fallback on a random class
-        pre = Prefold(tables)
-        wide = rng.randrange(pre.n_classes())
-        fr = build_frontiers(pre, tables, force_too_wide={wide})
-        fb = run_engine(tables, limit, b, "frontier", frontiers=fr, pre=pre)
-        check(fb is not None and fb[0] == bt and fb[1] == bc,
-              f"fallback engine != brute: {fb} vs {brute}", ctx)
+        # incremental build == one-shot oracle, bit for bit, every class
+        check_build_matches_oneshot(Prefold(tables), tables, ctx)
 
         # parallel split over frontier points, at several depths
         for depth in (0, 1, 2, 5):
@@ -634,7 +689,6 @@ def main():
 
     # 24-layer-style instance: 2 big classes (m=24, o=2) + 2 singletons,
     # mirroring the paper-granularity deep uniform GPT
-    grid = lambda v: v * TIME_GRID * 1000
     big_a = (
         [grid(10), grid(35)], [4000.0, 500.0], [0.0, 3500.0], 64, 16, 2e-5)
     big_b = (
@@ -665,6 +719,192 @@ def main():
         check(front[2] <= folded[2], "24L frontier explored more", b)
         rows.append((b, folded[2], front[2]))
     print("24L-style per-batch nodes (b, folded, frontier):", rows)
+
+    # wide classes above the old 2^18 one-shot ceiling ------------------
+    # A production-shaped 4-option menu (granularities {0,2,4,8}: states
+    # shrink as fixed time grows; gather is non-monotone), grid-snapped.
+    import math
+    import time as clock
+
+    wide = ([grid(10), grid(22), grid(33), grid(47)],
+            [4000.0, 2600.0, 1100.0, 400.0],
+            [0.0, 1500.0, 900.0, 2100.0], 64, 16, 2e-5)
+    for m, limit_fracs, exhaustive_fracs in ((96, (0.45, 0.8), (0.45,)),
+                                             (116, (0.45,), (0.45,))):
+        tables = [Table(*wide) for _ in range(m)]
+        pre = Prefold(tables)
+        comp = math.comb(m + 3, 3)
+        t0 = clock.monotonic()
+        inc, peak = build_class(tables[pre.order[0]], m)
+        dt = clock.monotonic() - t0
+        above = "above" if comp > (1 << 18) else "below"
+        print(f"wide class o=4 m={m}: {comp} compositions ({above} the "
+              f"old 2^18 ceiling) -> {len(inc)} points, peak level "
+              f"width {peak}, incremental build {dt:.2f}s python")
+        one = build_class_oneshot(tables[pre.order[0]], m)
+        check(len(inc) == len(one)
+              and all(a[3] == ob[3]
+                      and all(x.hex() == y.hex()
+                              for x, y in zip(a[:3], ob[:3]))
+                      for a, ob in zip(inc, one)),
+              "wide incremental build != one-shot oracle", f"m={m}")
+        fr = [inc]
+        dp_peak = evaluate(tables, [0] * m, 2)[1]
+        for frac in limit_fracs:
+            limit = dp_peak * frac
+            ctx = f"wide m={m} frac={frac}"
+            front = run_engine(tables, limit, 2, "frontier",
+                               frontiers=fr, pre=pre)
+            folded = run_engine(tables, limit, 2, "folded")
+            check(front is not None and folded is not None
+                  and front[:2] == folded[:2],
+                  f"wide frontier != folded: {front and front[:2]} vs "
+                  f"{folded and folded[:2]}", ctx)
+            check(front[2] <= folded[2],
+                  f"wide frontier nodes {front[2]} > folded {folded[2]}",
+                  ctx)
+            # the split merge is the 8-thread analog: a genuinely
+            # different traversal order over the same frontier
+            ps = run_split_frontier(tables, limit, 2, 1, fr=fr)
+            check(ps is not None and ps[:2] == front[:2],
+                  "wide split != serial", ctx)
+            if frac in exhaustive_fracs:
+                exf = exhaustive_folded(tables, limit, 2)
+                check(exf is not None and exf[0] == front[0]
+                      and exf[1] == front[1],
+                      f"wide exhaustive != frontier: {exf} vs "
+                      f"{front[:2]}", ctx)
+    print("wide classes: incremental == one-shot oracle == folded "
+          "== exhaustive-folded, serial and split")
+
+    # bench-ladder analogs: 96L / 1000L uniform stacks, wide menus ------
+    def ladder_tables(layers):
+        la = wide
+        lb = ([grid(8), grid(19), grid(29), grid(41)],
+              [3000.0, 1900.0, 800.0, 300.0],
+              [0.0, 1100.0, 700.0, 1600.0], 48, 12, 1.5e-5)
+        emb = ([grid(4), grid(18)], [9000.0, 1200.0], [0.0, 7800.0],
+               8, 4, 1e-5)
+        head = ([grid(5), grid(20)], [9000.0, 1150.0], [0.0, 7900.0],
+                8, 4, 1e-5)
+        return ([Table(*la) for _ in range(layers)]
+                + [Table(*lb) for _ in range(layers)]
+                + [Table(*emb), Table(*head)])
+
+    def counts_of(block, o):
+        return tuple(block.count(c) for c in range(o))
+
+    def check_frontier_invariants(kept, m, ctx):
+        """Cheap structural checks on a built class frontier: leads with
+        the all-fastest block, (tf, lex)-sorted, mutually undominated in
+        (states, gather) — so no point could ever shadow another."""
+        check(kept[0][3] == [0] * m, "frontier does not lead with the "
+              "pure block", ctx)
+        check(all(kept[i][0] <= kept[i + 1][0]
+                  for i in range(len(kept) - 1)),
+              "frontier not sorted by time_fixed", ctx)
+        for i in range(len(kept)):
+            sti, gi = kept[i][1], kept[i][2]
+            for j in range(i + 1, len(kept)):
+                check(not (sti <= kept[j][1] and gi <= kept[j][2]),
+                      f"kept point {i} dominates kept point {j}", ctx)
+
+    def check_half_split(t, m, kept, ctx):
+        """Independent deep-m oracle: the frontier at multiplicity m
+        equals the staircase-pruned Minkowski sum of the frontiers at
+        m-64 and 64. The module-docs exactness lemma (dominance and
+        (tf, lex) precedence survive `⊕ c`) holds for *aggregate* c, not
+        just single options — this exercises it where the one-shot
+        enumeration (C(m+3, 3) compositions) is unreachable."""
+        o = len(t.tf)
+        fa, _ = build_class(t, m - 64)
+        fb, _ = build_class(t, 64)
+        ca = [(tf, st, g, counts_of(blk, o)) for tf, st, g, blk in fa]
+        cb = [(tf, st, g, counts_of(blk, o)) for tf, st, g, blk in fb]
+        cand = [(tfa + tfb, sta + stb, max(ga, gb),
+                 tuple(x + y for x, y in zip(na, nb)))
+                for tfa, sta, ga, na in ca
+                for tfb, stb, gb, nb in cb]
+        cand.sort(key=lambda e: (e[0], tuple(-x for x in e[3])))
+        stair = Stair()
+        merged = []
+        for tf, st, g, counts in cand:
+            if stair.dominated(st, g):
+                continue
+            stair.insert(st, g)
+            merged.append((tf, st, g, counts))
+        check(len(merged) == len(kept),
+              f"half-split {len(merged)} pts != direct {len(kept)}", ctx)
+        for p, q in zip(kept, merged):
+            check(counts_of(p[3], o) == q[3]
+                  and all(x.hex() == y.hex()
+                          for x, y in zip(p[:3], q[:3])),
+                  f"half-split point != direct: {q} vs {p[:3]}", ctx)
+
+    # folded has no node budget here, so it only runs on the 12L rung
+    # (two wide classes of C(15,3)=455 compositions — tractable); the
+    # 96L rung relies on the single-wide-class folded/exhaustive
+    # identities proven above and checks frontier vs split only. The
+    # 1000L rung runs no Python searches at all — the unbudgeted walker's
+    # per-node cost scales with the ~3000-point class width here (the
+    # Rust bench runs the actual 1000L sweep, whose DFS is hard-capped by
+    # the ~36M distinct prefixes) — and instead validates the deep build
+    # itself: structural invariants plus the half-split identity.
+    for layers, batches, folded_bs in ((12, (1, 2, 4, 8), (1, 4)),
+                                       (96, (1, 2, 4, 8), ()),
+                                       (1000, (), ())):
+        tables = ladder_tables(layers)
+        pre = Prefold(tables)
+        fr = []
+        peaks = []
+        t0 = clock.monotonic()
+        for k in range(pre.n_classes()):
+            t = tables[pre.order[pre.class_start[k]]]
+            kp, pk = build_class(t, pre.mult(k))
+            fr.append(kp)
+            peaks.append(pk)
+        dt = clock.monotonic() - t0
+        print(f"{layers}L-style: per-class points {[len(c) for c in fr]}"
+              f", peak level widths {peaks}, build {dt:.2f}s python")
+        if not batches:
+            t0 = clock.monotonic()
+            for k in range(pre.n_classes()):
+                m = pre.mult(k)
+                ctx = f"{layers}L class {k} (m={m})"
+                check_frontier_invariants(fr[k], m, ctx)
+                if m > 64:
+                    t = tables[pre.order[pre.class_start[k]]]
+                    check_half_split(t, m, fr[k], ctx)
+            print(f"{layers}L-style: invariants + half-split identity "
+                  f"(frontier(m) == pruned frontier(m-64) ⊕ frontier(64))"
+                  f" on every class, {clock.monotonic() - t0:.1f}s")
+            continue
+        dp_peak = evaluate(tables, [0] * len(tables), 1)[1]
+        zdp_peak = evaluate(tables, [len(t.tf) - 1 for t in tables],
+                            1)[1]
+        rows = []
+        for b in batches:
+            limit = zdp_peak * b * 0.2 + dp_peak * 0.55
+            ctx = f"{layers}L b={b}"
+            front = run_engine(tables, limit, b, "frontier",
+                               frontiers=fr, pre=pre)
+            check(front is not None, "ladder sweep infeasible", ctx)
+            nodes_folded = None
+            if b in folded_bs:
+                folded = run_engine(tables, limit, b, "folded")
+                check(folded is not None and front[:2] == folded[:2],
+                      "ladder frontier != folded", ctx)
+                check(front[2] <= folded[2],
+                      f"ladder frontier nodes {front[2]} > folded "
+                      f"{folded[2]}", ctx)
+                nodes_folded = folded[2]
+            ps = run_split_frontier(tables, limit, b, 1, fr=fr)
+            check(ps is not None and ps[:2] == front[:2],
+                  "ladder split != serial", ctx)
+            rows.append((b, front[2], nodes_folded))
+        print(f"{layers}L-style per-batch (b, frontier nodes, folded "
+              f"nodes or None): {rows}")
+
     print("OK: all mirror checks passed")
 
 

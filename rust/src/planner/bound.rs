@@ -475,7 +475,10 @@ pub(crate) struct Walker<'a> {
     pub(crate) prefix: Vec<usize>,
     /// Per-class monotone-block scratch, preallocated so the folded
     /// descent's hot loop never touches the heap (taken/restored around
-    /// the recursion with `mem::take`).
+    /// the recursion with `mem::take`). Only `descend_folded` uses it:
+    /// the frontier descent branches over prebuilt points — since the
+    /// incremental Minkowski-sum build, every class prebuilds and the
+    /// frontier walker has no in-place enumeration branch at all.
     pub(crate) blocks: Vec<Vec<usize>>,
 }
 

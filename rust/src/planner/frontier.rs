@@ -69,26 +69,53 @@
 //! therefore the same f64, and the engine returns the bit-identical
 //! `(time, lex)` optimum as the folded and per-operator engines.
 //!
-//! # Degradation, never wrongness
+//! # The incremental Minkowski-sum build (no width ceiling)
 //!
-//! A class whose composition count exceeds [`MAX_CLASS_COMPOSITIONS`] is
-//! not enumerated; its frontier is marked too-wide and the walker falls
-//! back to enumerating that class's monotone blocks in place (exactly
-//! `descend_folded`'s loop). Exactness is unaffected — the frontier prune
-//! is sound per class independently — only the one-time-build saving is
-//! forgone for that class.
+//! Enumerating all `C(m+o-1, o-1)` compositions at once is exponential in
+//! the menu width `o`; it used to be capped at `2^18` per class, with
+//! wider classes (wide menus × high multiplicity — precisely the
+//! production shapes) falling back to in-place enumeration. Instead,
+//! [`build_class`] now grows the frontier **level by level**: the
+//! level-`l` candidate set is the Minkowski sum of the level-`l-1`
+//! frontier with the `o` single-member option points
+//! (`tf + tf[c]`, `st + st[c]`, `max(gmax, g[c])`), pruned by the same
+//! `(time, lex-block)` staircase rule after every level. Work becomes
+//! `O(m · |frontier| · o · log)` — independent of the composition count.
+//!
+//! Level-wise exactness: every level-`l` block is a level-`l-1` block
+//! plus one member, and the pruning rule survives the extension `⊕ c`:
+//!
+//! * **dominance** is preserved because the aggregates are exact — grid
+//!   times and whole bytes add without rounding, so
+//!   `tf(A) ≤ tf(B) ⇒ tf(A)+tf[c] ≤ tf(B)+tf[c]` bit-for-bit (same for
+//!   states; `gather_max` extends through `max`, which is monotone);
+//! * **`(tf, lex)` precedence** is preserved because inserting the same
+//!   option `c` into two sorted blocks keeps their lex order, and exact
+//!   tf ties stay exact ties.
+//!
+//! So if `A` dominates-and-precedes `B` at level `l-1`, then `A ⊕ c`
+//! dominates-and-precedes `B ⊕ c` at level `l`; with transitivity, every
+//! composition pruned at any level stays covered by a kept one, and
+//! conversely nothing the one-shot rule would keep can be lost. The
+//! incremental kept set therefore **equals** the one-shot kept set,
+//! point for point and in the same `(tf, lex)` order — asserted bit
+//! for bit by `incremental_build_equals_one_shot_oracle` below and
+//! mirrored in `python/mirror/frontier_mirror.py`. One subtlety: the
+//! full sum (every kept point ⊕ every option) is required — extending
+//! only monotonically (`c ≥` the block's last option) would be unsound,
+//! because a pruned block's dominator may end in a larger option. The
+//! sum can reach the same block from several parents; duplicates carry
+//! identical bits and the weak staircase keeps exactly the first.
+//!
+//! Since the incremental build has no width ceiling, `too_wide` classes
+//! no longer exist: every class prebuilds, the walker always branches
+//! over frontier points, and [`FrontierStats::too_wide`] is structurally
+//! zero (the field is retained, deprecated, for report compatibility).
 
-use super::bound::{FlatOpt, Prefold, Walker, composition_count,
-                   next_monotone_block};
+use super::bound::{Prefold, Walker, composition_count};
 use super::dfs::{self, DfsStats};
 use crate::cost::menu::MenuStats;
 use crate::cost::{PlanCost, Profiler};
-
-/// Composition-count ceiling for the one-time frontier build of a single
-/// class. Classes wider than this (enormous menus at high multiplicity)
-/// fall back to in-place block enumeration; everything the sweep targets
-/// (deep uniform stacks with paper-scale menus) sits far below it.
-pub const MAX_CLASS_COMPOSITIONS: usize = 1 << 18;
 
 /// One frontier point: the batch-independent aggregates of a monotone
 /// option block (its canonical count composition).
@@ -138,12 +165,15 @@ pub(crate) struct ClassFrontier {
     pub m: usize,
     /// Menu size.
     pub o: usize,
-    /// Total monotone blocks `C(m+o-1, o-1)` (saturating).
+    /// Total monotone blocks `C(m+o-1, o-1)` (saturating) — reporting
+    /// only; the incremental build never enumerates them.
     pub compositions: usize,
-    /// Dominance-pruned points, or `None` when the class is too wide to
-    /// enumerate once ([`MAX_CLASS_COMPOSITIONS`]); the walker then
-    /// enumerates this class's blocks in place, exactness unchanged.
-    pub points: Option<PointSet>,
+    /// Peak kept-frontier width across the build levels `0..=m` — the
+    /// build's working-set high-water mark, surfaced by the strict bench
+    /// so width regressions are visible.
+    pub peak_width: usize,
+    /// Dominance-pruned points in `(time_fixed, lex-block)` order.
+    pub points: PointSet,
 }
 
 /// Per-class composition frontiers over a [`Prefold`]'s classes —
@@ -165,31 +195,28 @@ impl Frontiers {
                     t.options.iter().map(|o| o.states).collect();
                 let g: Vec<f64> =
                     t.options.iter().map(|o| o.gather).collect();
-                build_class(&tf, &st, &g, pre.multiplicity(k),
-                            MAX_CLASS_COMPOSITIONS)
+                build_class(&tf, &st, &g, pre.multiplicity(k))
             })
             .collect();
         Frontiers { classes }
     }
 
     /// Aggregate + per-class build statistics (the per-class entries
-    /// reuse [`MenuStats`]: `raw` = compositions, `kept` = points).
+    /// reuse [`MenuStats`]: `raw` = compositions, `kept` = points kept).
+    /// `per_class` is preallocated once — thousand-class prefolds pay no
+    /// reallocation churn.
     pub fn stats(&self) -> FrontierStats {
-        let mut s = FrontierStats::default();
+        let mut s = FrontierStats {
+            per_class: Vec::with_capacity(self.classes.len()),
+            ..FrontierStats::default()
+        };
         for c in &self.classes {
             s.classes += 1;
             s.compositions = s.compositions.saturating_add(c.compositions);
-            let kept = match &c.points {
-                Some(p) => {
-                    s.points += p.len();
-                    p.len()
-                }
-                None => {
-                    s.too_wide += 1;
-                    c.compositions
-                }
-            };
-            s.per_class.push(MenuStats { raw: c.compositions, kept });
+            s.points += c.points.len();
+            s.max_level_width = s.max_level_width.max(c.peak_width);
+            s.per_class
+                .push(MenuStats { raw: c.compositions, kept: c.points.len() });
         }
         s
     }
@@ -205,99 +232,143 @@ pub struct FrontierStats {
     pub classes: usize,
     /// Count compositions across all classes (saturating).
     pub compositions: usize,
-    /// Frontier points kept across the classes that were built.
+    /// Frontier points kept across all classes.
     pub points: usize,
-    /// Classes that exceeded [`MAX_CLASS_COMPOSITIONS`] and fall back to
-    /// in-place block enumeration.
+    /// Deprecated: always `0` since the incremental Minkowski-sum build
+    /// removed the width ceiling — every class prebuilds. Retained (not
+    /// `#[deprecated]`, our own reports still serialize it) so recorded
+    /// `BENCH_search.json` trajectories keep their schema.
     pub too_wide: usize,
+    /// Largest kept-frontier width any class reached at any build level
+    /// (the incremental build's working-set high-water mark).
+    pub max_level_width: usize,
     /// Per-class reduction in fold-class order: `raw` = compositions,
-    /// `kept` = frontier points (`kept == raw` for too-wide classes).
+    /// `kept` = frontier points kept.
     pub per_class: Vec<MenuStats>,
 }
 
 impl FrontierStats {
-    /// One-line human summary for CLI/bench reports.
+    /// One-line human summary for CLI/bench reports. The reduction
+    /// factor is always reported (it used to vanish behind the
+    /// "too wide to prebuild" suffix; `too_wide` is structurally zero
+    /// now, but stay defensive about stale deserialized stats).
     pub fn describe(&self) -> String {
-        let suffix = if self.too_wide > 0 {
-            format!(" ({} too wide to prebuild)", self.too_wide)
-        } else {
-            let agg =
-                MenuStats { raw: self.compositions, kept: self.points };
-            format!(" ({:.1}x fewer branches)", agg.reduction_factor())
-        };
-        format!(
-            "{} compositions -> {} frontier points over {} classes{}",
-            self.compositions, self.points, self.classes, suffix,
-        )
+        let agg = MenuStats { raw: self.compositions, kept: self.points };
+        let mut out = format!(
+            "{} compositions -> {} frontier points over {} classes \
+             ({:.1}x fewer branches, peak level width {})",
+            self.compositions,
+            self.points,
+            self.classes,
+            agg.reduction_factor(),
+            self.max_level_width,
+        );
+        if self.too_wide > 0 {
+            out.push_str(&format!(" [{} too wide]", self.too_wide));
+        }
+        out
     }
 }
 
-/// Build one class's frontier (or mark it too wide). `menu_*` are the
-/// class menu's per-option `time_fixed`/`states`/`gather` in menu order;
-/// `m` is the multiplicity.
-fn build_class(menu_tf: &[f64], menu_st: &[f64], menu_g: &[f64], m: usize,
-               cap: usize) -> ClassFrontier {
+/// Build one class's frontier by the incremental Minkowski-sum scheme
+/// (module docs). `menu_*` are the class menu's per-option
+/// `time_fixed`/`states`/`gather` in menu order; `m` is the multiplicity.
+/// Work is `O(m · |frontier| · o)` candidates — no width ceiling.
+fn build_class(menu_tf: &[f64], menu_st: &[f64], menu_g: &[f64], m: usize)
+               -> ClassFrontier {
     let o = menu_tf.len();
     let compositions = composition_count(m, o);
-    if compositions > cap {
-        return ClassFrontier { m, o, compositions, points: None };
-    }
 
-    // Enumerate every monotone block once, in lex order, aggregating
-    // left-to-right (exact sums, so the grouping cannot change a bit).
-    let mut block = vec![0usize; m];
-    let mut cand: Vec<FrontierPoint> = Vec::with_capacity(compositions);
-    let mut cand_counts: Vec<u32> = Vec::with_capacity(compositions * o);
+    // Level 0: the empty block (all aggregates zero, all counts zero).
+    let mut agg = vec![FrontierPoint { time_fixed: 0.0, states: 0.0,
+                                       gather_max: 0.0 }];
     let mut counts = vec![0u32; o];
-    loop {
-        let mut tf = 0.0;
-        let mut st = 0.0;
-        let mut g = 0.0f64;
-        counts.fill(0);
-        for &c in &block {
-            tf += menu_tf[c];
-            st += menu_st[c];
-            g = g.max(menu_g[c]);
-            counts[c] += 1;
-        }
-        cand.push(FrontierPoint { time_fixed: tf, states: st,
-                                  gather_max: g });
-        cand_counts.extend_from_slice(&counts);
-        if !next_monotone_block(&mut block, o) {
-            break;
-        }
-    }
+    let mut peak_width = 1;
 
-    // (time, lex) processing order: stable sort by time keeps the lex
-    // enumeration order on exact ties, so every point processed earlier
-    // strictly precedes the current one in (time, lex) — which is exactly
-    // the tie-break the pruning rule requires (module docs).
-    let mut idx: Vec<usize> = (0..cand.len()).collect();
-    idx.sort_by(|&a, &b| {
-        cand[a].time_fixed.partial_cmp(&cand[b].time_fixed).unwrap()
-    });
-
-    // 2-D staircase over (states, gather_max): a point is pruned iff an
-    // earlier-kept point weakly dominates it there (time dominance is
-    // implied by the processing order).
+    // Scratch buffers reused across levels.
+    let mut cand: Vec<FrontierPoint> = Vec::new();
+    let mut cand_counts: Vec<u32> = Vec::new();
+    let mut idx: Vec<usize> = Vec::new();
     let mut stair: Vec<(f64, f64)> = Vec::new();
-    let mut agg = Vec::new();
-    let mut kept_counts = Vec::new();
-    for &p in &idx {
-        let pt = cand[p];
-        if stair_dominates(&stair, pt.states, pt.gather_max) {
-            continue;
+    for _level in 1..=m {
+        // Minkowski sum: every kept point ⊕ every menu option. The FULL
+        // sum is required for soundness — a pruned block's dominator may
+        // end in a larger option, so monotone-only extension would lose
+        // it (module docs). Exact sums make each candidate's aggregates
+        // independent of the order its members were added, hence equal
+        // to the one-shot block aggregates bit for bit.
+        cand.clear();
+        cand_counts.clear();
+        cand.reserve(agg.len() * o);
+        cand_counts.reserve(agg.len() * o * o);
+        for (p, &base) in agg.iter().enumerate() {
+            let pc = &counts[p * o..(p + 1) * o];
+            for c in 0..o {
+                cand.push(FrontierPoint {
+                    time_fixed: base.time_fixed + menu_tf[c],
+                    states: base.states + menu_st[c],
+                    gather_max: base.gather_max.max(menu_g[c]),
+                });
+                let at = cand_counts.len();
+                cand_counts.extend_from_slice(pc);
+                cand_counts[at + c] += 1;
+            }
         }
-        stair_insert(&mut stair, pt.states, pt.gather_max);
-        agg.push(pt);
-        kept_counts.extend_from_slice(&cand_counts[p * o..(p + 1) * o]);
+
+        // (time, lex-block) processing order. Unlike the one-shot
+        // enumeration, candidates do not arrive in lex order (several
+        // parents can reach the same block), so the lex tie-break is
+        // explicit: count vectors compare DESCENDING — more members on
+        // a smaller option is the lex-smaller block. Exact duplicates
+        // compare equal; the weak staircase keeps only the first.
+        idx.clear();
+        idx.extend(0..cand.len());
+        idx.sort_by(|&a, &b| {
+            cand[a]
+                .time_fixed
+                .partial_cmp(&cand[b].time_fixed)
+                .unwrap()
+                .then_with(|| {
+                    counts_lex_cmp(&cand_counts[a * o..(a + 1) * o],
+                                   &cand_counts[b * o..(b + 1) * o])
+                })
+        });
+
+        // 2-D staircase over (states, gather_max): a point is pruned iff
+        // an earlier-kept point weakly dominates it there (time dominance
+        // is implied by the processing order).
+        stair.clear();
+        let mut next_agg = Vec::with_capacity(agg.len() + o);
+        let mut next_counts = Vec::with_capacity(counts.len() + o * o);
+        for &p in &idx {
+            let pt = cand[p];
+            if stair_dominates(&stair, pt.states, pt.gather_max) {
+                continue;
+            }
+            stair_insert(&mut stair, pt.states, pt.gather_max);
+            next_agg.push(pt);
+            next_counts
+                .extend_from_slice(&cand_counts[p * o..(p + 1) * o]);
+        }
+        agg = next_agg;
+        counts = next_counts;
+        peak_width = peak_width.max(agg.len());
     }
-    ClassFrontier {
-        m,
-        o,
-        compositions,
-        points: Some(PointSet { agg, counts: kept_counts, o }),
+    ClassFrontier { m, o, compositions, peak_width,
+                    points: PointSet { agg, counts, o } }
+}
+
+/// Lexicographic order on canonical monotone blocks, compared through
+/// their option-count vectors: at the first option where the counts
+/// differ, the block with MORE members there is lex-smaller (its next
+/// position carries the smaller option index).
+fn counts_lex_cmp(a: &[u32], b: &[u32]) -> std::cmp::Ordering {
+    for (x, y) in a.iter().zip(b) {
+        if x != y {
+            return y.cmp(x);
+        }
     }
+    std::cmp::Ordering::Equal
 }
 
 /// Staircase invariant: entries sorted by `states` ascending with
@@ -346,8 +417,9 @@ impl<'a> Walker<'a> {
     /// precomputed frontier points (every other composition is dominated
     /// at every batch size — see module docs), accumulated through the
     /// same exact arithmetic as [`Walker::descend_folded`], so all bound
-    /// expressions and accepted totals are bit-identical. Too-wide
-    /// classes fall back to in-place block enumeration.
+    /// expressions and accepted totals are bit-identical. Every class
+    /// prebuilds (the incremental build has no width ceiling), so this
+    /// is the only branch shape.
     fn descend_frontier(&mut self, k: usize, time_fixed: f64, states: f64,
                         trans_max: f64) {
         if self.stats.nodes >= self.budget {
@@ -368,51 +440,19 @@ impl<'a> Walker<'a> {
         let fr: &'a Frontiers =
             self.frontier.expect("frontier descent without frontiers");
         let cls = &fr.classes[k];
-        match &cls.points {
-            Some(set) => {
-                let bws = self.space.class_bws[k];
-                for p in 0..set.len() {
-                    let pt = set.agg[p];
-                    set.write_block(p,
-                                    &mut self.prefix[i..i + cls.m]);
-                    self.descend_frontier(
-                        k + 1,
-                        time_fixed + pt.time_fixed,
-                        states + pt.states,
-                        trans_max.max(pt.gather_max + bws),
-                    );
-                    if self.stats.nodes >= self.budget {
-                        break;
-                    }
-                }
-            }
-            None => {
-                // Too wide to prebuild: enumerate this class's monotone
-                // blocks in place (descend_folded's loop verbatim).
-                let end = self.space.pre.class_start[k + 1];
-                let o = self.space.flat[i].len();
-                let mut block = std::mem::take(&mut self.blocks[k]);
-                block.clear();
-                block.resize(end - i, 0);
-                loop {
-                    let mut tf = time_fixed;
-                    let mut st = states;
-                    let mut tm = trans_max;
-                    for (j, &c) in block.iter().enumerate() {
-                        let opt: FlatOpt = self.space.flat[i + j][c];
-                        tf += opt.time_fixed;
-                        st += opt.states;
-                        tm = tm.max(opt.transient);
-                        self.prefix[i + j] = c;
-                    }
-                    self.descend_frontier(k + 1, tf, st, tm);
-                    if self.stats.nodes >= self.budget
-                        || !next_monotone_block(&mut block, o)
-                    {
-                        break;
-                    }
-                }
-                self.blocks[k] = block;
+        let set = &cls.points;
+        let bws = self.space.class_bws[k];
+        for p in 0..set.len() {
+            let pt = set.agg[p];
+            set.write_block(p, &mut self.prefix[i..i + cls.m]);
+            self.descend_frontier(
+                k + 1,
+                time_fixed + pt.time_fixed,
+                states + pt.states,
+                trans_max.max(pt.gather_max + bws),
+            );
+            if self.stats.nodes >= self.budget {
+                break;
             }
         }
     }
@@ -456,7 +496,7 @@ mod tests {
     use super::*;
     use crate::config::{Cluster, SearchConfig};
     use crate::model::{GptDims, build_gpt};
-    use crate::planner::bound::lex_less;
+    use crate::planner::bound::{lex_less, next_monotone_block};
 
     /// A handcrafted menu with genuine 3-way trade-offs (times snapped to
     /// the grid, memory in whole bytes, like the Profiler emits).
@@ -466,6 +506,68 @@ mod tests {
         let st = vec![100.0, 60.0, 30.0, 10.0];
         let g = vec![0.0, 40.0, 20.0, 50.0];
         (tf, st, g)
+    }
+
+    /// The retired one-shot build (PR 3), kept verbatim as the oracle:
+    /// enumerate every monotone block in lex order, stable-sort by time
+    /// (ties keep lex order), staircase-prune. The incremental build
+    /// must reproduce its kept set bit for bit, in the same order.
+    fn build_class_oneshot(menu_tf: &[f64], menu_st: &[f64],
+                           menu_g: &[f64], m: usize) -> PointSet {
+        let o = menu_tf.len();
+        let mut block = vec![0usize; m];
+        let mut cand: Vec<FrontierPoint> = Vec::new();
+        let mut cand_counts: Vec<u32> = Vec::new();
+        let mut counts = vec![0u32; o];
+        loop {
+            let mut tf = 0.0;
+            let mut st = 0.0;
+            let mut g = 0.0f64;
+            counts.fill(0);
+            for &c in &block {
+                tf += menu_tf[c];
+                st += menu_st[c];
+                g = g.max(menu_g[c]);
+                counts[c] += 1;
+            }
+            cand.push(FrontierPoint { time_fixed: tf, states: st,
+                                      gather_max: g });
+            cand_counts.extend_from_slice(&counts);
+            if !next_monotone_block(&mut block, o) {
+                break;
+            }
+        }
+        let mut idx: Vec<usize> = (0..cand.len()).collect();
+        idx.sort_by(|&a, &b| {
+            cand[a].time_fixed.partial_cmp(&cand[b].time_fixed).unwrap()
+        });
+        let mut stair: Vec<(f64, f64)> = Vec::new();
+        let mut agg = Vec::new();
+        let mut kept_counts = Vec::new();
+        for &p in &idx {
+            let pt = cand[p];
+            if stair_dominates(&stair, pt.states, pt.gather_max) {
+                continue;
+            }
+            stair_insert(&mut stair, pt.states, pt.gather_max);
+            agg.push(pt);
+            kept_counts
+                .extend_from_slice(&cand_counts[p * o..(p + 1) * o]);
+        }
+        PointSet { agg, counts: kept_counts, o }
+    }
+
+    fn assert_sets_bit_identical(a: &PointSet, b: &PointSet, ctx: &str) {
+        assert_eq!(a.len(), b.len(), "{ctx}: width mismatch");
+        for p in 0..a.len() {
+            assert_eq!(a.agg[p].time_fixed.to_bits(),
+                       b.agg[p].time_fixed.to_bits(), "{ctx}: tf[{p}]");
+            assert_eq!(a.agg[p].states.to_bits(),
+                       b.agg[p].states.to_bits(), "{ctx}: st[{p}]");
+            assert_eq!(a.agg[p].gather_max.to_bits(),
+                       b.agg[p].gather_max.to_bits(), "{ctx}: g[{p}]");
+        }
+        assert_eq!(a.counts, b.counts, "{ctx}: blocks differ");
     }
 
     fn blocks_of(m: usize, o: usize) -> Vec<Vec<usize>> {
@@ -492,9 +594,10 @@ mod tests {
     #[test]
     fn frontier_points_are_sorted_mutually_undominated_and_lead_with_zero() {
         let (tf, st, g) = menu();
-        let cf = build_class(&tf, &st, &g, 5, MAX_CLASS_COMPOSITIONS);
-        let set = cf.points.as_ref().unwrap();
+        let cf = build_class(&tf, &st, &g, 5);
+        let set = &cf.points;
         assert_eq!(cf.compositions, composition_count(5, 4));
+        assert!(cf.peak_width >= set.len());
         assert!(set.len() <= cf.compositions);
         assert!(set.len() >= 1);
         // point 0 is the all-zeros (all-fastest, lex-least) block
@@ -536,18 +639,19 @@ mod tests {
         }
     }
 
-    /// The load-bearing batch-invariance property from the module docs:
-    /// every pruned composition is dominated by a kept one — same or less
-    /// time, states, and *transient* — at every batch size, with the
-    /// dominator strictly earlier in (time, lex). So dropping it can
-    /// never change the (time, lex) optimum of any per-batch search.
+    /// The load-bearing batch-invariance property from the module docs,
+    /// now exercised against the **incremental** build: every pruned
+    /// composition is dominated by a kept one — same or less time,
+    /// states, and *transient* — at every batch in `1..=64`, with the
+    /// dominator strictly earlier in (time, lex). So per-level pruning
+    /// can never change the (time, lex) optimum of any per-batch search.
     #[test]
     fn pruned_blocks_are_dominated_at_every_batch() {
         let (tf, st, g) = menu();
         let workspace = 8.0; // class-constant bytes/sample, like a table's
         let m = 5;
-        let cf = build_class(&tf, &st, &g, m, MAX_CLASS_COMPOSITIONS);
-        let set = cf.points.as_ref().unwrap();
+        let cf = build_class(&tf, &st, &g, m);
+        let set = &cf.points;
         let kept: Vec<Vec<usize>> = (0..set.len())
             .map(|p| {
                 let mut b = vec![0usize; m];
@@ -564,7 +668,7 @@ mod tests {
             let pb = aggregates(&block, &tf, &st, &g);
             // transient computed per position, NOT via the gmax algebra,
             // so this test independently checks the factorization claim
-            for b in [1usize, 2, 3, 5, 8, 64] {
+            for b in 1usize..=64 {
                 let bws = b as f64 * workspace;
                 let trans_b: f64 = block
                     .iter()
@@ -589,53 +693,68 @@ mod tests {
         assert!(pruned > 0, "menu must actually exercise the pruning");
     }
 
+    /// The strong exactness statement from the module docs: the
+    /// incremental kept set EQUALS the one-shot kept set — same points,
+    /// same (tf, lex) order, same bits — across multiplicities.
     #[test]
-    fn too_wide_classes_fall_back() {
+    fn incremental_build_equals_one_shot_oracle() {
         let (tf, st, g) = menu();
-        // C(5+4-1, 3) = 56 compositions; a cap of 10 forces the fallback
-        let cf = build_class(&tf, &st, &g, 5, 10);
-        assert!(cf.points.is_none());
-        assert_eq!(cf.compositions, 56);
-        // and the stats mark it
-        let fr = Frontiers { classes: vec![cf] };
-        let s = fr.stats();
-        assert_eq!(s.too_wide, 1);
-        assert_eq!(s.per_class[0], MenuStats { raw: 56, kept: 56 });
-        assert!(s.describe().contains("too wide"));
+        for m in [0usize, 1, 2, 3, 5, 8, 13, 24, 40] {
+            let inc = build_class(&tf, &st, &g, m);
+            let one = build_class_oneshot(&tf, &st, &g, m);
+            assert_sets_bit_identical(&inc.points, &one, &format!("m={m}"));
+        }
+        // and on a 2-option paper-style menu (the 24L sweep shape)
+        let snap = crate::cost::time::snap_time;
+        let (tf2, st2, g2) =
+            (vec![snap(1e-3), snap(3.5e-3)], vec![4000.0, 500.0],
+             vec![0.0, 3500.0]);
+        for m in [1usize, 7, 24, 96] {
+            let inc = build_class(&tf2, &st2, &g2, m);
+            let one = build_class_oneshot(&tf2, &st2, &g2, m);
+            assert_sets_bit_identical(&inc.points, &one,
+                                      &format!("o=2 m={m}"));
+        }
     }
 
-    /// A forced too-wide class must leave the engine exact: overwrite one
-    /// class's frontier with the fallback marker and compare against the
-    /// folded engine across memory limits.
+    /// A class above the old `2^18` one-shot ceiling prebuilds — no
+    /// fallback exists any more — and still matches the oracle bit for
+    /// bit (the oracle has no ceiling in test builds, only cost).
     #[test]
-    fn fallback_classes_keep_the_engine_exact() {
-        let m = build_gpt(&GptDims::uniform("t", 3000, 64, 4, 256, 4));
-        let c = Cluster::rtx_titan(8, 8.0);
-        let s = SearchConfig { granularities: vec![0, 2],
-                               ..Default::default() };
-        let p = Profiler::new(&m, &c, &s);
-        let pre = Prefold::new(&p);
-        let mut fr = Frontiers::new(&pre, &p);
-        let widest = (0..fr.classes.len())
-            .max_by_key(|&k| fr.classes[k].compositions)
-            .unwrap();
-        fr.classes[widest].points = None;
-        let dp = p.evaluate(&p.index_of(|d| d.is_pure_dp()), 2).peak_mem;
-        for frac in [0.4, 0.7, 1.1] {
-            let limit = dp * frac;
-            let (with_fallback, _) = dfs::search_prefolded(
-                &p, &pre, Some(&fr), limit, 2, u64::MAX,
-                crate::planner::Engine::Frontier, None);
-            let folded = dfs::search_with_budget(&p, limit, 2, u64::MAX);
-            match (with_fallback, folded) {
-                (None, None) => {}
-                (Some((fc, fcost)), Some((gc, gcost, _))) => {
-                    assert_eq!(fc, gc, "choice differs at frac {frac}");
-                    assert_eq!(fcost.time.to_bits(), gcost.time.to_bits());
-                }
-                _ => panic!("feasibility disagreement at frac {frac}"),
-            }
-        }
+    fn above_old_ceiling_class_prebuilds_and_matches_oracle() {
+        let (tf, st, g) = menu();
+        let m = 120; // C(123, 3) = 302_621 > 2^18 = 262_144
+        let cf = build_class(&tf, &st, &g, m);
+        assert!(cf.compositions > 1 << 18,
+                "fixture must exceed the old ceiling: {}", cf.compositions);
+        assert!(cf.points.len() >= 1);
+        assert!(cf.peak_width < 4096,
+                "frontier width stays tiny: {}", cf.peak_width);
+        let one = build_class_oneshot(&tf, &st, &g, m);
+        assert_sets_bit_identical(&cf.points, &one, "m=120");
+        // stats: every class reports its real kept count, none too wide
+        let fr = Frontiers { classes: vec![cf] };
+        let s = fr.stats();
+        assert_eq!(s.too_wide, 0);
+        assert_eq!(s.per_class[0],
+                   MenuStats { raw: 302_621, kept: s.points });
+        assert!(s.max_level_width >= s.points);
+        assert!(s.describe().contains("fewer branches"),
+                "reduction factor must always be reported: {}",
+                s.describe());
+    }
+
+    /// `describe` keeps reporting the reduction factor even on stale
+    /// deserialized stats that claim too-wide classes (satellite fix).
+    #[test]
+    fn describe_reports_reduction_even_with_stale_too_wide() {
+        let s = FrontierStats { classes: 3, compositions: 1000,
+                                points: 50, too_wide: 1,
+                                max_level_width: 40,
+                                per_class: Vec::new() };
+        let d = s.describe();
+        assert!(d.contains("fewer branches"), "{d}");
+        assert!(d.contains("[1 too wide]"), "{d}");
     }
 
     #[test]

@@ -146,20 +146,12 @@ pub fn search_with_stats(profiler: &Profiler, mem_limit: f64, b: usize,
     // Shrink the split depth until (a) the task count is bounded and
     // (b) dividing the node budget across tasks leaves each at least the
     // per-task floor — so the budget stays a real global cap instead of
-    // being silently multiplied by the task count. Frontier tasks are
-    // materialized from prebuilt points, so that split region also stops
-    // at the first too-wide class (its blocks are only enumerated inside
-    // the walkers).
+    // being silently multiplied by the task count. Every frontier class
+    // prebuilds (the incremental build has no width ceiling), so the
+    // frontier split region is the whole class sequence.
     let max_depth = match cfg.engine {
         Engine::UnfoldedBb => space.n(),
-        Engine::FoldedBb => prefold.n_classes(),
-        Engine::Frontier => frontiers
-            .as_ref()
-            .unwrap()
-            .classes
-            .iter()
-            .position(|c| c.points.is_none())
-            .unwrap_or(prefold.n_classes()),
+        Engine::FoldedBb | Engine::Frontier => prefold.n_classes(),
     };
     let mut depth = cfg.split_depth.min(max_depth);
     while depth > 0 && {
@@ -255,9 +247,7 @@ fn task_count(space: &SearchSpace, frontiers: Option<&Frontiers>,
         Engine::Frontier => {
             let fr = frontiers.expect("frontier engine without frontiers");
             (0..depth).fold(1usize, |acc, k| {
-                // the split region never crosses a too-wide class
-                let pts = fr.classes[k].points.as_ref().unwrap().len();
-                acc.saturating_mul(pts)
+                acc.saturating_mul(fr.classes[k].points.len())
             })
         }
         Engine::FoldedBb => (0..depth).fold(1usize, |acc, k| {
@@ -333,8 +323,8 @@ fn enumerate_tasks_folded(space: &SearchSpace, class_depth: usize)
 /// All frontier prefixes over the first `class_depth` classes — one task
 /// per combination of frontier points, each materialized as its canonical
 /// monotone position prefix — in point order, with their left-to-right
-/// partial sums. The caller guarantees every class in the split region
-/// has prebuilt points.
+/// partial sums. Every class has prebuilt points, so any depth up to
+/// `n_classes` is a valid split region.
 fn enumerate_tasks_frontier(space: &SearchSpace, fr: &Frontiers,
                             class_depth: usize) -> Vec<Task> {
     let pre = space.pre;
@@ -350,11 +340,7 @@ fn enumerate_tasks_frontier(space: &SearchSpace, fr: &Frontiers,
     loop {
         for k in 0..class_depth {
             let (s, e) = (pre.class_start[k], pre.class_start[k + 1]);
-            fr.classes[k]
-                .points
-                .as_ref()
-                .unwrap()
-                .write_block(pidx[k], &mut prefix[s..e]);
+            fr.classes[k].points.write_block(pidx[k], &mut prefix[s..e]);
         }
         tasks.push(make_task(space, &prefix));
         // odometer over classes, rightmost class fastest; each class
@@ -366,7 +352,7 @@ fn enumerate_tasks_frontier(space: &SearchSpace, fr: &Frontiers,
             }
             k -= 1;
             pidx[k] += 1;
-            if pidx[k] < fr.classes[k].points.as_ref().unwrap().len() {
+            if pidx[k] < fr.classes[k].points.len() {
                 break;
             }
             pidx[k] = 0;

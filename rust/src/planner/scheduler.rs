@@ -157,6 +157,12 @@ pub struct Scheduler<'a> {
     /// is bit-identical with or without it (see
     /// `crate::planner::dfs::search_warm`).
     pub warm: Option<Vec<usize>>,
+    /// Per-batch node budget ([`dfs::DEFAULT_NODE_BUDGET`] by default).
+    /// A search that exhausts it returns its best-so-far with
+    /// `complete == false`; deep ladders (1000-layer stacks whose wide
+    /// classes keep ~3m frontier points) raise it to keep the sweep's
+    /// completeness certificate.
+    pub node_budget: u64,
 }
 
 impl<'a> Scheduler<'a> {
@@ -169,7 +175,16 @@ impl<'a> Scheduler<'a> {
             threads: super::parallel::default_threads(),
             engine: Engine::Frontier,
             warm: None,
+            node_budget: dfs::DEFAULT_NODE_BUDGET,
         }
+    }
+
+    /// Raise (or shrink) the per-batch node budget. Budgets never change
+    /// a completed search's result — only whether `complete` certifies
+    /// it — so any value is safe; deep-ladder benches raise it.
+    pub fn with_budget(mut self, node_budget: u64) -> Self {
+        self.node_budget = node_budget.max(1);
+        self
     }
 
     /// Override the sweep's worker count (the CLI's `--threads`).
@@ -253,7 +268,7 @@ impl<'a> Scheduler<'a> {
                             frontiers.as_ref(),
                             self.mem_limit,
                             b,
-                            dfs::DEFAULT_NODE_BUDGET,
+                            self.node_budget,
                             self.engine,
                             self.warm.as_deref(),
                         ) {
@@ -390,6 +405,39 @@ mod tests {
     }
 
     #[test]
+    fn node_budget_only_changes_the_certificate() {
+        let p = profiler(8);
+        let dp1 = p.evaluate(&p.index_of(|d| d.is_pure_dp()), 1);
+        let limit = dp1.peak_mem * 3.0;
+        let base = Scheduler::new(&p, limit, 8).run().unwrap();
+        // a raised budget is invisible on an instance the default
+        // budget already completes
+        let high = Scheduler::new(&p, limit, 8)
+            .with_budget(u64::MAX)
+            .run()
+            .unwrap();
+        assert_eq!(base.candidates.len(), high.candidates.len());
+        for (a, b) in base.candidates.iter().zip(&high.candidates) {
+            assert_eq!(a.plan.choice, b.plan.choice);
+            assert_eq!(a.plan.cost.time.to_bits(),
+                       b.plan.cost.time.to_bits());
+        }
+        // a starved budget may cost candidates or certificates, but a
+        // batch it *does* complete must carry the identical plan
+        match Scheduler::new(&p, limit, 8).with_budget(1).run() {
+            Err(err) => assert!(!err.complete(),
+                                "starved b=1 must not certify"),
+            Ok(res) => {
+                for (a, b) in res.candidates.iter().zip(&base.candidates) {
+                    if a.stats.complete {
+                        assert_eq!(a.plan.choice, b.plan.choice);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn best_candidate_maximizes_throughput() {
         let p = profiler(8);
         let dp1 = p.evaluate(&p.index_of(|d| d.is_pure_dp()), 1);
@@ -467,6 +515,11 @@ mod tests {
         let stats = fr.frontier.as_ref().expect("default engine is frontier");
         assert!(stats.points > 0);
         assert_eq!(stats.per_class.len(), stats.classes);
+        // structural since the incremental build: no class is ever too
+        // wide to prebuild, and the build tracks its widest level
+        assert_eq!(stats.too_wide, 0, "every class prebuilds");
+        assert!(stats.max_level_width >= 1);
+        assert!(stats.per_class.iter().all(|c| c.kept <= c.raw));
         let folded = Scheduler::new(&p, limit, 24)
             .with_engine(Engine::FoldedBb)
             .run()

@@ -299,6 +299,83 @@ fn frontier_sweep_is_bit_identical_across_all_batches() {
     }
 }
 
+/// Handcrafted cost table with a fully controlled menu: one option per
+/// `(tf_ms, states, gather)` triple, grid-snapped like the real profiler.
+/// The search engines read nothing but the cost fields, so the decision
+/// metadata can be a placeholder.
+fn wide_table(name: &str, tf_ms: &[f64], st: &[f64], g: &[f64], act: f64,
+              ws: f64, gamma: f64) -> osdp::cost::OpCostTable {
+    use osdp::cost::time::snap_time;
+    use osdp::cost::{Decision, DecisionCost, OpCostTable};
+    let options = tf_ms
+        .iter()
+        .zip(st)
+        .zip(g)
+        .map(|((&t, &s), &gather)| DecisionCost {
+            decision: Decision::DP,
+            comm: snap_time(t * 1e-3),
+            launch: 0.0,
+            states: s,
+            gather,
+        })
+        .collect();
+    OpCostTable::new(name.into(), options, act, ws, gamma)
+}
+
+/// The acceptance shapes for the incremental Minkowski-sum build: wide
+/// `o = 4` menus at multiplicity 96 (the issue's headline class) and 120
+/// (`C(123, 3) = 302 621 > 2^18`, strictly above the retired one-shot
+/// composition ceiling, where the old build forfeited the prebuild).
+/// Every class must prebuild (`too_wide == 0` structurally), and the
+/// planned full choice vector must be bit-identical to the folded
+/// engine's, serially and at 1 and 8 threads.
+#[test]
+fn wide_classes_prebuild_and_plan_bit_identically() {
+    use osdp::cost::MenuStats;
+    for (m, fracs) in [(96usize, &[0.45, 0.8][..]), (120, &[0.45][..])] {
+        let layer = wide_table("layer", &[1.0, 2.2, 3.3, 4.7],
+                               &[4000.0, 2600.0, 1100.0, 400.0],
+                               &[0.0, 1500.0, 900.0, 2100.0],
+                               64.0, 16.0, 2e-5);
+        let emb = wide_table("emb", &[0.4, 1.8], &[9000.0, 1200.0],
+                             &[0.0, 7800.0], 8.0, 4.0, 1e-5);
+        let head = wide_table("head", &[0.5, 2.0], &[9000.0, 1150.0],
+                              &[0.0, 7900.0], 8.0, 4.0, 1e-5);
+        let mut tables = vec![emb];
+        tables.extend(std::iter::repeat_with(|| layer.clone()).take(m));
+        tables.push(head);
+        let n = tables.len();
+        let p = Profiler {
+            cluster: Cluster::rtx_titan(8, 16.0),
+            checkpointing: false,
+            menu_stats: vec![MenuStats { raw: 4, kept: 4 }; n],
+            tables,
+        };
+
+        let r = frontier::report(&p);
+        assert_eq!(r.too_wide, 0, "every class prebuilds at m={m}");
+        assert_eq!(r.classes, 3, "96+ layers fold into one class at m={m}");
+        let widest = r.per_class.iter().map(|c| c.raw).max().unwrap();
+        if m == 120 {
+            assert!(widest > 1 << 18,
+                    "m=120 must exceed the old one-shot ceiling: {widest}");
+        }
+        assert!(r.max_level_width >= 1 && r.points >= r.max_level_width);
+        // the kept frontier is tiny relative to the composition count
+        assert!(r.points <= 8 * (m + 2),
+                "frontier kept {} points at m={m}", r.points);
+
+        let dp = p.evaluate(&vec![0usize; n], 2).peak_mem;
+        let mut compared = 0;
+        for &frac in fracs {
+            if assert_frontier_exact(&p, dp * frac, 2).unwrap() {
+                compared += 1;
+            }
+        }
+        assert!(compared >= 1, "no full comparison ran at m={m}");
+    }
+}
+
 /// The headline amortization claim on the deep uniform stack the fold
 /// test targets: after the one-time frontier build, every per-batch
 /// search of the sweep stays within a small node bound (the merge over

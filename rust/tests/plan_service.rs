@@ -367,6 +367,78 @@ fn service_sources_cache_then_warm_are_bit_identical() {
     assert_eq!(nw_plan.choice, cold_plan.choice);
 }
 
+/// ISSUE 9: cache hits and warm starts stay bit-identical on a
+/// *wide-class* instance — deep uniform stack x granularities
+/// {0, 2, 4, 8}, the production-scale shape whose composition count
+/// exceeds the retired one-shot ceiling (2^18) and used to forfeit the
+/// frontier prebuild. Every class prebuilds incrementally now, and the
+/// served answers must not move a bit.
+#[test]
+fn wide_class_queries_cache_and_warm_bit_identically() {
+    const WIDE: &str = "gpt:3000,64,192,192,4";
+    let wide_query = |mem_gib: f64| {
+        let mut q = PlanQuery::batch(WIDE, mem_gib, 2);
+        q.search.granularities = vec![0, 2, 4, 8];
+        q
+    };
+    // the profiler exactly as the service will build it: the shape must
+    // genuinely be wide, and every class must still prebuild
+    let probe = wide_query(8.0);
+    let cluster = probe.cluster.resolve().unwrap();
+    let model = osdp::service::resolve_setting(WIDE).unwrap();
+    let p = Profiler::new(&model, &cluster, &probe.search);
+    let fr = planner::frontier_report(&p);
+    assert_eq!(fr.too_wide, 0, "every class must prebuild");
+    assert!(fr.per_class.iter().any(|c| c.raw > 1 << 18),
+            "instance must exceed the old one-shot ceiling (widest: {})",
+            fr.per_class.iter().map(|c| c.raw).max().unwrap_or(0));
+    let mem_a = dp_peak(&p, 2) * 0.55 / GIB;
+    let mem_b = dp_peak(&p, 2) * 0.75 / GIB;
+
+    // cold then cache
+    let service = PlanService::in_memory();
+    let cold = service.query(&wide_query(mem_b)).unwrap();
+    assert_eq!(cold.source, Source::Cold);
+    let hit = service.query(&wide_query(mem_b)).unwrap();
+    assert_eq!(hit.source, Source::Cache);
+    let (Answer::Plan { plan: cold_plan, .. },
+         Answer::Plan { plan: hit_plan, .. }) = (&cold.answer, &hit.answer)
+    else {
+        panic!("batch query must answer a plan");
+    };
+    assert_eq!(cold_plan.choice, hit_plan.choice);
+    assert_eq!(cold_plan.cost.time.to_bits(),
+               hit_plan.cost.time.to_bits());
+
+    // warm from the tighter-limit neighbor (feasible at the looser limit
+    // by construction, so the source is deterministically Warm)
+    let warm_service = PlanService::in_memory();
+    warm_service.query(&wide_query(mem_a)).unwrap();
+    let warm = warm_service.query(&wide_query(mem_b)).unwrap();
+    assert_eq!(warm.source, Source::Warm);
+    let Answer::Plan { plan: warm_plan, .. } = &warm.answer else {
+        panic!("batch query must answer a plan");
+    };
+    assert_eq!(warm_plan.choice, cold_plan.choice,
+               "warm answer must equal cold on the wide instance");
+    assert_eq!(warm_plan.cost.time.to_bits(),
+               cold_plan.cost.time.to_bits());
+
+    // the folded ground-truth engine serves the same bits
+    let mut q_bb = wide_query(mem_b);
+    q_bb.engine = Engine::FoldedBb;
+    let bb = PlanService::in_memory().query(&q_bb).unwrap();
+    let Answer::Plan { plan: bb_plan, stats: bb_stats } = &bb.answer else {
+        panic!("batch query must answer a plan");
+    };
+    if bb_stats.complete {
+        assert_eq!(bb_plan.choice, cold_plan.choice,
+                   "folded engine must agree on the wide instance");
+        assert_eq!(bb_plan.cost.time.to_bits(),
+                   cold_plan.cost.time.to_bits());
+    }
+}
+
 #[test]
 fn eight_concurrent_identical_queries_run_one_search() {
     let mem = tiny_mem_gib(0.5, 2);
