@@ -6,10 +6,10 @@ PY ?= python3
 
 .PHONY: ci build examples test fmt clippy bench-smoke bench-search \
         bench-service serve-drive serve-mirror chaos chaos-mirror \
-        tier-drive tier-mirror python-test artifacts
+        tier-drive tier-mirror observability python-test artifacts
 
 ci: build examples test fmt clippy bench-smoke serve-drive serve-mirror \
-    chaos chaos-mirror tier-drive tier-mirror python-test
+    chaos chaos-mirror tier-drive tier-mirror observability python-test
 
 build:
 	$(CARGO) build --release
@@ -91,6 +91,24 @@ tier-mirror:
 		$(PY) python/tests/drive_frontend.py --mirror \
 			--tier --chaos --fault-seed $$seed || exit 1; \
 	done
+
+# CI's observability job: trace span trees + Prometheus-equals-stats in
+# process, the no_trace compile-out gate with the inertness property,
+# then the release binary driven end to end with --trace (trace verb,
+# metrics verb, and the --metrics-listen HTTP scrape).
+observability: build
+	$(CARGO) test --release --test plan_service trace
+	$(CARGO) test --release --test plan_service prometheus
+	$(CARGO) test --release --test service_frontend metrics
+	$(CARGO) test --release --test planner_properties \
+		tracing_is_provably_inert
+	$(PY) python/tests/drive_frontend.py --bin target/release/osdp \
+		--workers 4 --trace
+	# last: this build replaces target/release/osdp with the traceless
+	# binary, so the --trace drive above must already have run
+	$(CARGO) build --release --features no_trace
+	$(CARGO) test --release --features no_trace \
+		--test planner_properties tracing_is_provably_inert
 
 # pytest exit 5 = nothing collected/selected (e.g. hypothesis missing):
 # not a failure for this gate.

@@ -342,6 +342,10 @@ fn main() {
         sweep_rows.push((layers, frs.total_nodes, folded_nodes, complete));
     }
 
+    // schema 2: adds the version field itself (PR 10); consumers should
+    // skip records whose version they do not know
+    out.insert("schema".into(), num(2.0));
+
     // machine-readable perf record, tracked across PRs
     let path = std::env::var("OSDP_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_search.json".to_string());

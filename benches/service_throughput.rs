@@ -314,6 +314,40 @@ fn main() {
     fe.insert("p99_bound_s".into(), num(fe_p99));
     out.insert("frontend".into(), Json::Obj(fe));
 
+    // per-phase span rollups from the cold->cached service's tracer:
+    // where serve time actually goes, stage by stage (empty under
+    // --features no_trace — the record says so instead of lying with
+    // zeros)
+    let mut spans = BTreeMap::new();
+    let mut span_rows: Vec<(String, u64, f64)> = Vec::new();
+    for (name, h) in service.tracer().span_histograms() {
+        if h.count() == 0 {
+            continue;
+        }
+        let mut s = BTreeMap::new();
+        s.insert("count".into(), num(h.count() as f64));
+        s.insert("sum_s".into(), num(h.sum_s()));
+        spans.insert((*name).to_string(), Json::Obj(s));
+        span_rows.push(((*name).to_string(), h.count(), h.sum_s()));
+    }
+    if !span_rows.is_empty() {
+        println!("span rollups (cold + cached serve):");
+        for (name, count, sum_s) in &span_rows {
+            println!("  {name}: {count} calls, {} total",
+                     osdp::util::fmt_time(*sum_s));
+        }
+    }
+    out.insert(
+        "trace_enabled".into(),
+        Json::Bool(osdp::service::trace::Tracer::enabled()),
+    );
+    out.insert("spans".into(), Json::Obj(spans));
+
+    // schema 2: adds `schema`, `trace_enabled`, and the `spans` rollup
+    // section (PR 10); consumers should skip records whose version they
+    // do not know
+    out.insert("schema".into(), num(2.0));
+
     // machine-readable record, tracked across PRs next to BENCH_search
     let path = std::env::var("OSDP_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_service.json".to_string());

@@ -60,6 +60,15 @@ version-skewed payloads quarantine instead of changing an answer; the
 stats invariant becomes
 ``hits + remote_hits + misses == queries - rejected``.
 
+PR 10's observability surface (the ``metrics`` / ``trace`` verbs, the
+request tracer, the ``--metrics-listen`` scrape endpoint) is
+binary-only: the mirror answers those verbs ``bad-request``, which the
+driver's chaos mode treats as the mirror signature and skips the
+cross-checks. The ``replan`` latency lane *is* mirrored (always 0 —
+the mirror grammar has no replan verb) so the three-lane sum invariant
+``batch + sweep + replan == queries`` has the same shape on both
+implementations.
+
 Run: ``python3 python/mirror/frontend_mirror.py`` (exits non-zero on
 any mismatch). ``--serve`` starts the mirror server on an ephemeral
 port and prints the same ``{"addr":...,"kind":"listening","ok":true}``
@@ -240,6 +249,11 @@ class Telemetry:
         self.counters = {name: 0 for name in COUNTERS}
         self.batch_latency = Histogram()
         self.sweep_latency = Histogram()
+        # PR 10: the replan lane exists so the mirrored lane-sum
+        # invariant (batch + sweep + replan == queries) has the same
+        # shape as telemetry.rs; the mirror grammar has no replan verb,
+        # so the lane only ever reads 0 here
+        self.replan_latency = Histogram()
 
     def bump(self, name):
         with self._lock:
@@ -264,6 +278,7 @@ class Telemetry:
         doc["latency"] = {
             "batch": {"count": self.batch_latency.count},
             "sweep": {"count": self.sweep_latency.count},
+            "replan": {"count": self.replan_latency.count},
         }
         return doc
 
@@ -1153,8 +1168,10 @@ def check_telemetry_consistency():
           telemetry.to_json())
     check(telemetry.get("rejected") == 6, "unknown settings",
           telemetry.to_json())
-    check(telemetry.batch_latency.count == telemetry.get("queries"),
-          "histogram count == queries", telemetry.to_json())
+    check(telemetry.batch_latency.count + telemetry.sweep_latency.count
+          + telemetry.replan_latency.count == telemetry.get("queries"),
+          "histogram counts (all three lanes) == queries",
+          telemetry.to_json())
     check(service.stats["hits"] + service.stats["remote_hits"]
           + service.stats["misses"]
           == telemetry.get("queries") - telemetry.get("rejected"),

@@ -33,10 +33,21 @@ replaces the exact-count phases with the survival contract CI's
 2. `worker_restarts` goes positive: injected panics really crossed
    the pool and the pool really resurrected;
 3. the telemetry invariants hold *exactly* under chaos — histogram
-   counts == queries, hits + remote_hits + misses == queries −
-   rejected;
-4. `shutdown` is acknowledged (or a torn ack still shuts down) and
+   counts (batch + sweep + replan) == queries, hits + remote_hits +
+   misses == queries − rejected;
+4. the observability surface holds under the same chaos (binary only):
+   the `metrics` page parses and agrees with the `stats` verb, and
+   every trace in the ring is a closed tree;
+5. `shutdown` is acknowledged (or a torn ack still shuts down) and
    the process exits 0.
+
+`--trace` (binary only) adds the observability phase: the server gets a
+`--metrics-listen` scrape endpoint; every query answer must carry a
+`trace_id` that resolves through the `trace` verb to a complete span
+tree (root `query` span, parents preceding children, hex `time_bits`
+convergence events), the `metrics` verb's Prometheus page must agree
+with the `stats` verb counter for counter, and an HTTP `GET` scrape of
+the endpoint must return the same page without perturbing anything.
 
 `--tier` starts a standalone cache server (`osdp cache-serve`, or the
 mirror's `--cache-serve`) plus **two** plan-service instances attached
@@ -116,6 +127,89 @@ def try_request(addr, line, timeout=30.0):
         return None
 
 
+# Counters compared between the `stats` verb and the Prometheus page.
+# Net counters like `requests` are deliberately excluded: serving the
+# two verbs itself moves them between the snapshots; everything listed
+# here only moves when a query is dispatched.
+SERVICE_FIELDS = [
+    "hits", "misses", "inserts", "evictions", "coalesced",
+    "planner_runs", "warm_seeded", "persist_errors", "replans",
+    "replan_repairs", "cache_write_retries", "remote_hits",
+    "remote_errors", "breaker_open",
+]
+NET_FIELDS = ["queries", "rejected", "infeasible", "bad_requests"]
+LANES = ["batch", "sweep", "replan"]
+
+
+def parse_prometheus(page):
+    """`name{labels}` -> value; fails on anything that is not a
+    comment, a blank line, or `series value` (the "exposition parses"
+    invariant)."""
+    out = {}
+    for line in page.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        series, sep, value = line.rpartition(" ")
+        check(sep == " ", "metric lines are 'series value'", line)
+        try:
+            v = float(value)
+        except ValueError:
+            fail("unparseable metric value", line)
+        check(series not in out, "duplicate series", series)
+        out[series] = v
+    return out
+
+
+def lane_count(tele, shape):
+    return tele["latency"].get(shape, {"count": 0})["count"]
+
+
+def stats_subset(stats):
+    """The fields `check_metrics_match_stats` compares, extracted from
+    a `stats` document — used to detect whether anything moved between
+    two snapshots (straggler chaos threads)."""
+    tele = stats["telemetry"]
+    sub = {f: stats.get(f, 0) for f in SERVICE_FIELDS}
+    sub.update({f"net:{c}": tele[c] for c in NET_FIELDS})
+    sub.update({f"lane:{s}": lane_count(tele, s) for s in LANES})
+    sub["cache_entries"] = stats.get("cache_entries")
+    sub["breaker"] = stats.get("breaker")
+    return sub
+
+
+def check_metrics_match_stats(stats, page):
+    """The Prometheus page must tell the same story as the `stats`
+    verb, counter for counter."""
+    m = parse_prometheus(page)
+    tele = stats["telemetry"]
+    for f in SERVICE_FIELDS:
+        check(m.get(f"osdp_service_{f}_total") == stats.get(f, 0),
+              f"stats/metrics disagree on {f!r}", stats)
+    for c in NET_FIELDS:
+        check(m.get(f"osdp_net_{c}_total") == tele[c],
+              f"stats/metrics disagree on net {c!r}", stats)
+    for s in LANES:
+        series = f'osdp_latency_seconds_count{{shape="{s}"}}'
+        check(m.get(series) == lane_count(tele, s),
+              f"stats/metrics disagree on the {s} lane", stats)
+    check(m.get("osdp_cache_entries") == stats.get("cache_entries"),
+          "stats/metrics disagree on cache_entries", stats)
+    breaker = stats.get("breaker")
+    check(m.get(f'osdp_breaker_state{{state="{breaker}"}}') == 1,
+          "the breaker gauge must be one-hot on the stats verb's state",
+          stats)
+
+
+def check_traces_closed(traces):
+    """Every trace the ring kept must be a closed tree — chaos that
+    kills a request mid-flight drops its trace entirely, it never
+    reaches the ring half-built."""
+    check(traces.get("kind") == "traces", "trace listing", traces)
+    for t in traces.get("traces", []):
+        check(t.get("complete") is True,
+              "an incomplete trace escaped into the ring", t)
+
+
 def chaos(addr, proc, deadline_s=120.0):
     """The fault-injected survival contract (driver side of the Rust
     integration test rust/tests/fault_injection.rs)."""
@@ -125,6 +219,12 @@ def chaos(addr, proc, deadline_s=120.0):
         f"batch={1 + i % 2} threads=1"
         for i in range(12)
     ]
+    # a replan rides along so the replan latency lane is exercised under
+    # the same fault plan (the mirror answers bad-request — also fine)
+    lines.append(
+        f"replan setting={SETTING} mem=2 batch=1 devices=8 threads=1 "
+        "new-devices=4"
+    )
 
     def ask(line):
         while True:
@@ -135,7 +235,7 @@ def chaos(addr, proc, deadline_s=120.0):
                   f"{line!r} never survived the fault plan")
             time.sleep(0.02)
 
-    restarts, rounds = 0, 0
+    restarts, rounds, metrics_checked = 0, 0, 0
     while True:
         # a concurrent burst; individual requests may die to injected
         # faults — the server as a whole must keep answering
@@ -154,10 +254,24 @@ def chaos(addr, proc, deadline_s=120.0):
               == tele["queries"] - tele["rejected"],
               "hits + remote_hits + misses == queries - rejected "
               "must survive chaos", stats)
-        lat = tele["latency"]
-        check(lat["batch"]["count"] + lat["sweep"]["count"]
+        check(sum(lane_count(tele, s) for s in LANES)
               == tele["queries"],
-              "every query observed exactly once under chaos", stats)
+              "every query observed exactly once, in exactly one lane, "
+              "under chaos", stats)
+        # the observability surface holds under the same chaos (binary
+        # only — the mirror answers these verbs with bad-request). A
+        # straggler burst thread could move a counter between the two
+        # snapshots, so the cross-check only fires when a stats re-ask
+        # confirms the window was quiet.
+        metrics = ask("metrics")
+        if metrics.get("kind") == "metrics":
+            stats2 = ask("stats")
+            if stats_subset(stats) == stats_subset(stats2):
+                check_metrics_match_stats(stats2, metrics["text"])
+                metrics_checked += 1
+            traces = ask("trace")
+            if traces.get("kind") == "traces":
+                check_traces_closed(traces)
         restarts = tele.get("worker_restarts", 0)
         rounds += 1
         if restarts > 0 and rounds >= 2:
@@ -166,7 +280,8 @@ def chaos(addr, proc, deadline_s=120.0):
               f"no worker restart after {rounds} rounds "
               "(injected panics are not reaching the pool)", stats)
     print(f"chaos OK: {rounds} rounds, {restarts} worker restarts, "
-          "telemetry invariants exact")
+          "telemetry invariants exact, "
+          f"{metrics_checked} stats/metrics cross-checks")
 
     # graceful shutdown despite resets: a torn ack still flips the
     # server-side flag, so on transport failure probe the listener
@@ -331,6 +446,78 @@ def concurrent(addr, lines):
     return results
 
 
+def observability(addr, metrics_addr):
+    """The --trace phase: trace ids resolve to complete span trees, the
+    `metrics` verb agrees with `stats`, and the HTTP scrape endpoint
+    serves the same page."""
+    listing = client(addr, ["trace"])[0]
+    check(listing.get("kind") == "traces", "trace listing", listing)
+    if listing.get("enabled") is False:
+        print("trace phase SKIP: tracing compiled out (no_trace build)")
+        return
+
+    # the cache-hit answer still carries a fresh trace id
+    r = client(addr, [IDENTICAL])[0]
+    tid = r.get("trace_id")
+    check(isinstance(tid, str) and tid,
+          "query answers must carry a trace id", r)
+    doc = client(addr, [f"trace {tid}"])[0]
+    check(doc.get("ok") is True, "trace id must resolve", doc)
+    trace = doc["trace"]
+    check(trace["id"] == tid and trace["complete"] is True,
+          "a served query's trace must be a closed tree", trace)
+    spans = trace["spans"]
+    check(spans and spans[0]["name"] == "query"
+          and spans[0]["parent"] is None,
+          "the root span is the query itself", spans)
+    for i, s in enumerate(spans):
+        if i > 0:
+            check(isinstance(s["parent"], (int, float))
+                  and 0 <= s["parent"] < i,
+                  "parents precede children in open order", spans)
+        check(s["dur_s"] >= 0, "span durations are non-negative", s)
+    names = [s["name"] for s in spans]
+    check("cache" in names, "a served query touched the cache", names)
+    for e in trace["timeline"]:
+        check(e["source"] in ("greedy", "warm", "descent"),
+              "timeline sources are the three incumbent origins", e)
+        bits = e["time_bits"]
+        check(isinstance(bits, str) and bits.startswith("0x")
+              and len(bits) == 18, "time_bits are full-width hex", e)
+        int(bits, 16)  # parses
+    nf = client(addr, ["trace t999999-nope"])[0]
+    check(nf.get("ok") is False and nf.get("error") == "not-found",
+          "unknown trace ids miss structurally", nf)
+
+    # one connection, so nothing moves between the two snapshots
+    stats, metrics = client(addr, ["stats", "metrics"])
+    check(metrics.get("kind") == "metrics", "metrics verb", metrics)
+    check_metrics_match_stats(stats, metrics["text"])
+
+    if metrics_addr is not None:
+        with socket.create_connection(metrics_addr, timeout=30) as s:
+            s.sendall(b"GET /metrics HTTP/1.0\r\n\r\n")
+            data = b""
+            while True:
+                chunk = s.recv(65536)
+                if not chunk:
+                    break
+                data += chunk
+        text = data.decode()
+        check(text.startswith("HTTP/1.0 200 OK\r\n"),
+              "the scrape endpoint speaks HTTP", text[:80])
+        check("text/plain; version=0.0.4" in text,
+              "exposition content type", text[:200])
+        body = text.split("\r\n\r\n", 1)[1]
+        # the extra verbs above moved no query-driven counter, so the
+        # stats snapshot still prices the scrape exactly
+        check_metrics_match_stats(stats, body)
+        print("trace phase OK: trace tree complete, metrics == stats "
+              "(verb and HTTP scrape)")
+    else:
+        print("trace phase OK: trace tree complete, metrics == stats")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--bin", help="osdp binary to start and drive")
@@ -348,7 +535,16 @@ def main():
                     help="start a cache server plus two plan services "
                          "sharing it and assert the second-tier "
                          "contract")
+    ap.add_argument("--trace", action="store_true",
+                    help="add the observability phase: span trees via "
+                         "the trace verb, metrics == stats, and the "
+                         "--metrics-listen HTTP scrape endpoint")
     args = ap.parse_args()
+    if args.trace and args.mirror:
+        ap.error("--trace drives binary-only verbs; drop --mirror")
+    if args.trace and (args.chaos or args.tier):
+        ap.error("--trace extends the plain contract run; "
+                 "drop --chaos/--tier")
 
     env = dict(os.environ)
     if args.chaos:
@@ -371,6 +567,7 @@ def main():
         return
 
     proc = None
+    metrics_addr = None
     if args.addr:
         host, port = args.addr.rsplit(":", 1)
         addr = (host, int(port))
@@ -384,8 +581,23 @@ def main():
             import tempfile
             extra = ["--cache-dir",
                      tempfile.mkdtemp(prefix="osdp-chaos-")]
+        if args.trace:
+            extra += ["--metrics-listen", "127.0.0.1:0"]
         proc, addr, addr_str = launch(args, env, extra=extra)
         print(f"server listening on {addr_str}")
+        if args.trace:
+            # the scrape endpoint's banner follows the listening line
+            banner = proc.stdout.readline()
+            try:
+                doc = json.loads(banner)
+            except ValueError:
+                fail("second stdout line is not JSON", banner)
+            check(doc.get("kind") == "metrics-listening"
+                  and doc.get("ok") is True,
+                  "expected the metrics-listening banner", doc)
+            mhost, mport = doc["addr"].rsplit(":", 1)
+            metrics_addr = (mhost, int(mport))
+            print(f"metrics endpoint listening on {doc['addr']}")
 
     if args.chaos:
         chaos(addr, proc)
@@ -439,8 +651,7 @@ def main():
     expected = 8 + 2 * len(DISTINCT) + 1  # identical + conc/serial + bad
     check(queries == expected, "every dispatched query counted",
           (queries, expected, tele))
-    lat = tele["latency"]
-    check(lat["batch"]["count"] + lat["sweep"]["count"] == queries,
+    check(sum(lane_count(tele, s) for s in LANES) == queries,
           "histogram counts == queries", tele)
     check(stats["hits"] + stats["misses"]
           == queries - tele["rejected"],
@@ -449,6 +660,10 @@ def main():
           "one run per distinct cacheable query", stats)
     print("phase 4 OK: telemetry consistent "
           f"({queries} queries, {stats['planner_runs']} planner runs)")
+
+    # ---- trace phase (--trace): span trees, metrics == stats, scrape
+    if args.trace:
+        observability(addr, metrics_addr)
 
     # ---- phase 5: graceful shutdown drains and exits cleanly
     final = client(addr, [IDENTICAL, "shutdown"])

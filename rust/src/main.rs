@@ -130,12 +130,12 @@ commands:
                              search nodes on symmetric models)
   serve   [--cache-dir D] [--cache-cap 256] [--listen ADDR]
           [--workers N] [--warmup 8] [--idle-timeout-ms 30000]
-          [--queue-cap 64] [--metrics]
+          [--queue-cap 64] [--metrics] [--metrics-listen ADDR]
           [--remote ADDR] [--remote-deadline-ms 5]
           line-oriented plan service: one request per line in ('query
           setting=48L/1024H mem=8 batch=4', 'sweep ...', 'replan ...
-          new-devices=4', 'stats', 'quit', 'shutdown'), one JSON
-          document per line out. Identical
+          new-devices=4', 'stats', 'metrics', 'trace [ID]', 'quit',
+          'shutdown'), one JSON document per line out. Identical
           queries are answered from the plan cache, concurrent identical
           queries coalesce into one search, and cache misses warm-start
           from neighboring entries (provably bit-identical results).
@@ -148,7 +148,13 @@ commands:
           epoch bump the hottest --warmup entries of the stale disk
           cache are replanned (warm-started from their old choice
           vectors) before the listener accepts traffic. --metrics dumps
-          counters + latency histograms as JSON on exit.
+          counters + latency histograms as JSON on exit (also when the
+          listener dies of consecutive accept errors).
+          --metrics-listen ADDR binds a separate Prometheus scrape
+          endpoint: any line (or HTTP GET) answers the text exposition
+          — the same numbers the 'metrics' verb wraps in JSON. The
+          'trace' verb lists the last 64 request traces; 'trace ID'
+          returns one span tree + search convergence timeline.
           --remote ADDR wires a second cache tier (an osdp cache-serve
           instance) under the local cache: read-through on misses,
           write-behind on stores, every operation under a hard
@@ -166,10 +172,12 @@ commands:
   query   --setting S (--batch B | [--batch-cap 64])
           [--mem 8] [--devices 8] [--cluster C] [--g 0,4] [--ckpt]
           [--fine] [--no-scopes] [--engine E] [--threads N] [--no-warm]
-          [--cache-dir D] [--json]
+          [--cache-dir D] [--json] [--trace]
           [--remote ADDR] [--remote-deadline-ms 5]
           one-shot request through the same plan service (a --cache-dir
-          makes the cache persistent across invocations)
+          makes the cache persistent across invocations); --trace
+          prints the request's span tree and the search's incumbent
+          timeline on stderr
   replan  --setting S (--batch B | [--batch-cap 64]) [query knobs...]
           (--new-devices M | --new-cluster C | --new-mem G |
            --sweep-clusters) [--cache-dir D] [--json]
@@ -418,8 +426,8 @@ fn plan_query_from_args(args: &Args) -> PlanQuery {
 }
 
 fn serve(args: &Args) {
-    use osdp::service::{Frontend, FrontendConfig, Telemetry,
-                        render_metrics};
+    use osdp::service::{Frontend, FrontendConfig, MetricsHandler,
+                        TeardownHook, Telemetry, render_metrics};
     use std::io::Write as _;
     use std::sync::Arc;
 
@@ -448,6 +456,35 @@ fn serve(args: &Args) {
         );
     }
 
+    // --metrics-listen: a separate scrape endpoint with its own tiny
+    // pool and its own (throwaway) wire telemetry — scrapes must not
+    // perturb the counters they report. Started before the main
+    // listener so the page is available the moment traffic is.
+    let metrics_frontend = match args.get("metrics-listen") {
+        None => None,
+        Some(maddr) => {
+            let handler = Arc::new(MetricsHandler {
+                service: Arc::clone(&service),
+                telemetry: Arc::clone(&telemetry),
+            });
+            let mcfg = FrontendConfig {
+                addr: maddr.to_string(),
+                workers: 1,
+                idle_timeout: std::time::Duration::from_millis(5_000),
+                queue_cap: 16,
+            };
+            match Frontend::start_with(handler, Arc::new(Telemetry::new()),
+                                       mcfg)
+            {
+                Ok(f) => Some(f),
+                Err(e) => {
+                    eprintln!("serve: cannot bind metrics {maddr}: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+    };
+
     if let Some(addr) = args.get("listen") {
         let cfg = FrontendConfig {
             addr: addr.to_string(),
@@ -457,8 +494,25 @@ fn serve(args: &Args) {
             ),
             queue_cap: args.usize_or("queue-cap", 64),
         };
-        let frontend = match Frontend::start(Arc::clone(&service),
-                                             Arc::clone(&telemetry), cfg)
+        // a listener dying of consecutive accept errors still dumps its
+        // final counters (--metrics) instead of vanishing silently
+        let teardown: Option<TeardownHook> = if args.flag("metrics") {
+            let service = Arc::clone(&service);
+            let telemetry = Arc::clone(&telemetry);
+            Some(Box::new(move || {
+                eprintln!("osdp serve: listener giving up after \
+                           consecutive accept errors");
+                eprintln!("{}", render_metrics(&service.stats(),
+                                               service.cache_len(),
+                                               &telemetry,
+                                               service.breaker_state()));
+            }))
+        } else {
+            None
+        };
+        let frontend = match Frontend::start_hooked(Arc::clone(&service),
+                                                    Arc::clone(&telemetry),
+                                                    cfg, teardown)
         {
             Ok(f) => f,
             Err(e) => {
@@ -472,10 +526,23 @@ fn serve(args: &Args) {
             "{{\"addr\":\"{}\",\"kind\":\"listening\",\"ok\":true}}",
             frontend.local_addr()
         );
+        // the scrape endpoint's address rides on a second stdout line
+        // (drivers that don't scrape just ignore it)
+        if let Some(mf) = &metrics_frontend {
+            println!(
+                "{{\"addr\":\"{}\",\"kind\":\"metrics-listening\",\
+                 \"ok\":true}}",
+                mf.local_addr()
+            );
+        }
         let _ = std::io::stdout().flush();
         // blocks until a client sends 'shutdown' (graceful drain)
         frontend.join();
     } else {
+        if let Some(mf) = &metrics_frontend {
+            // stdout is the response stream here; announce on stderr
+            eprintln!("osdp serve: metrics on {}", mf.local_addr());
+        }
         eprintln!("osdp serve: ready (one request per line; 'query \
                    setting=48L/1024H mem=8 batch=4', 'sweep ...', \
                    'replan ... new-devices=4', 'stats', 'quit', \
@@ -488,6 +555,10 @@ fn serve(args: &Args) {
             eprintln!("serve: io error: {e}");
             std::process::exit(1);
         }
+    }
+    if let Some(mf) = metrics_frontend {
+        mf.shutdown();
+        mf.join();
     }
     eprintln!("osdp serve: done — {}", service.stats().describe());
     if args.flag("metrics") {
@@ -554,6 +625,15 @@ fn service_query(args: &Args) {
     let mut service = PlanService::new(cache_config(args));
     attach_remote_from_args(args, &mut service);
     let outcome = service.query(&q);
+    // --trace: the request-scoped span tree and convergence timeline,
+    // on stderr so --json stdout stays a single parseable line
+    if args.flag("trace") {
+        if let Some(t) = service.tracer().last() {
+            eprintln!("{}", t.render_text());
+        } else {
+            eprintln!("(tracing compiled out — no trace recorded)");
+        }
+    }
     report_query_outcome(args, &service, outcome);
 }
 

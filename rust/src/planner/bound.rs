@@ -473,6 +473,12 @@ pub(crate) struct Walker<'a> {
     pub stats: DfsStats,
     pub(crate) budget: u64,
     pub(crate) prefix: Vec<usize>,
+    /// Convergence-timeline log (`progress::Recorder`), off unless a
+    /// traced entry point armed it. Write-only from the search's point
+    /// of view: `try_accept` appends on an accepted improvement and
+    /// nothing reads it back, so arming cannot change any decision
+    /// (pinned traced == untraced in `planner_properties.rs`).
+    pub(crate) recorder: super::progress::Recorder,
     /// Per-class monotone-block scratch, preallocated so the folded
     /// descent's hot loop never touches the heap (taken/restored around
     /// the recursion with `mem::take`). Only `descend_folded` uses it:
@@ -502,6 +508,7 @@ impl<'a> Walker<'a> {
             stats: DfsStats::default(),
             budget,
             prefix: vec![0usize; space.n()],
+            recorder: super::progress::Recorder::off(),
             blocks,
         }
     }
@@ -699,6 +706,8 @@ impl<'a> Walker<'a> {
         if better {
             self.best_time = total;
             self.best_choice = Some(self.prefix.clone());
+            self.recorder.record(self.stats.nodes, total.to_bits(),
+                                 super::progress::ImprovementSource::Descent);
             if let Some(s) = self.shared {
                 s.publish(total);
             }

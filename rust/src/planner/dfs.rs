@@ -30,6 +30,7 @@
 use super::Engine;
 use super::bound::{Prefold, SearchSpace, Walker};
 use super::frontier::Frontiers;
+use super::progress;
 use crate::cost::{PlanCost, Profiler};
 
 /// Search diagnostics.
@@ -139,7 +140,26 @@ pub(crate) fn search_prefolded(profiler: &Profiler, prefold: &Prefold,
                                b: usize, budget: u64, engine: Engine,
                                warm: Option<&[usize]>)
                                -> (Option<(Vec<usize>, PlanCost)>, DfsStats) {
+    search_prefolded_traced(profiler, prefold, frontiers, mem_limit, b,
+                            budget, engine, warm, None)
+}
+
+/// [`search_prefolded`] with an optional convergence-timeline
+/// observation ([`progress::SearchTrace::timeline`] only — the caller
+/// owns the build/descent phase clocks). Tracing is inert: the recorder
+/// is write-only from the walker's point of view, so the returned plan
+/// and stats are bit-identical to the untraced call (pinned in
+/// `planner_properties.rs`).
+#[allow(clippy::too_many_arguments)] // crate-internal plumbing entry
+pub(crate) fn search_prefolded_traced(
+    profiler: &Profiler, prefold: &Prefold, frontiers: Option<&Frontiers>,
+    mem_limit: f64, b: usize, budget: u64, engine: Engine,
+    warm: Option<&[usize]>, trace: Option<&mut progress::SearchTrace>)
+    -> (Option<(Vec<usize>, PlanCost)>, DfsStats) {
     let mut space = SearchSpace::for_batch(prefold, profiler, mem_limit, b);
+    // observation only: remember the greedy seed so the timeline can
+    // label whether the warm offer displaced it
+    let greedy_seed = if trace.is_some() { space.seed.clone() } else { None };
     if let Some(w) = warm {
         // Repair the seed first (greedy downgrades from the neighbor
         // plan until it fits this batch/limit): a neighbor that no
@@ -154,10 +174,27 @@ pub(crate) fn search_prefolded(profiler: &Profiler, prefold: &Prefold,
     }
     let space = space;
     let mut walker = Walker::new(&space, frontiers, None, budget);
+    if trace.is_some() {
+        walker.recorder = progress::Recorder::armed();
+    }
     match engine {
         Engine::Frontier => walker.run_root_frontier(),
         Engine::FoldedBb => walker.run_root_folded(),
         Engine::UnfoldedBb => walker.run_root(),
+    }
+
+    if let Some(t) = trace {
+        let seed = space.seed.as_ref().map(|(st, _)| progress::Improvement {
+            nodes: 0,
+            time_bits: st.to_bits(),
+            source: if space.seed == greedy_seed {
+                progress::ImprovementSource::Greedy
+            } else {
+                progress::ImprovementSource::Warm
+            },
+        });
+        t.timeline = progress::merge_task_timelines(
+            seed, &[(walker.stats.nodes, walker.recorder.take())]);
     }
 
     let result = walker.best_choice.map(|choice_ordered| {

@@ -46,6 +46,7 @@ pub mod exhaustive;
 pub mod frontier;
 pub mod greedy;
 pub mod parallel;
+pub mod progress;
 pub mod scheduler;
 
 pub use dfs::{DfsStats, search as dfs_search,
@@ -58,7 +59,9 @@ pub use greedy::{search as greedy_search,
                  search_from as greedy_search_from};
 pub use parallel::{ParallelConfig, search as parallel_search,
                    search_seeded as parallel_search_seeded,
-                   search_with_stats as parallel_search_with_stats};
+                   search_with_stats as parallel_search_with_stats,
+                   search_traced as parallel_search_traced};
+pub use progress::{Improvement, ImprovementSource, Recorder, SearchTrace};
 pub use scheduler::{Candidate, Scheduler, SchedulerResult, SweepInfeasible,
                     SweepStats};
 

@@ -26,6 +26,7 @@ use super::bound::{Prefold, SearchSpace, SharedBound, Walker,
                    composition_count, lex_less, next_monotone_block};
 use super::dfs::{DEFAULT_NODE_BUDGET, DfsStats};
 use super::frontier::Frontiers;
+use super::progress;
 use crate::cost::{PlanCost, Profiler};
 use std::sync::Mutex;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -125,12 +126,33 @@ pub fn search_seeded(profiler: &Profiler, mem_limit: f64, b: usize,
 pub fn search_with_stats(profiler: &Profiler, mem_limit: f64, b: usize,
                          cfg: &ParallelConfig, warm: Option<&[usize]>)
                          -> (Option<(Vec<usize>, PlanCost)>, DfsStats) {
+    search_traced(profiler, mem_limit, b, cfg, warm, None)
+}
+
+/// [`search_with_stats`] with an optional search-trace observation:
+/// build vs descent wall-seconds, the frontier-build shape, and the
+/// convergence timeline (per-task walker logs concatenated in task
+/// order with cumulative node offsets — see
+/// [`progress::merge_task_timelines`] for the determinism envelope).
+/// Tracing is inert: recorders are write-only, nothing in the search
+/// reads them, and the returned plan + stats are bit-identical to the
+/// untraced call at any thread count (pinned in
+/// `planner_properties.rs`).
+pub fn search_traced(profiler: &Profiler, mem_limit: f64, b: usize,
+                     cfg: &ParallelConfig, warm: Option<&[usize]>,
+                     trace: Option<&mut progress::SearchTrace>)
+                     -> (Option<(Vec<usize>, PlanCost)>, DfsStats) {
+    let traced = trace.is_some();
+    let build_started = traced.then(std::time::Instant::now);
     let prefold = Prefold::new(profiler);
     let frontiers = match cfg.engine {
         Engine::Frontier => Some(Frontiers::new(&prefold, profiler)),
         _ => None,
     };
     let mut space = SearchSpace::for_batch(&prefold, profiler, mem_limit, b);
+    // observation only: remember the greedy seed so the timeline can
+    // label whether the warm offer displaced it
+    let greedy_seed = if traced { space.seed.clone() } else { None };
     if let Some(w) = warm {
         // Same warm-seed repair as the serial engine (see
         // `super::dfs::search_prefolded`): greedy-downgrade the
@@ -171,13 +193,16 @@ pub fn search_with_stats(profiler: &Profiler, mem_limit: f64, b: usize,
         Engine::UnfoldedBb => enumerate_tasks(&space, depth),
     };
     let budget = per_task_budget(cfg.node_budget, tasks.len());
+    let build_s = build_started.map_or(0.0, |t| t.elapsed().as_secs_f64());
+    let descent_started = traced.then(std::time::Instant::now);
 
     let shared = SharedBound::new(
         space.seed.as_ref().map(|(t, _)| *t).unwrap_or(f64::INFINITY),
     );
     let threads = cfg.threads.max(1).min(tasks.len().max(1));
     let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<Option<(f64, Option<Vec<usize>>, DfsStats)>>> =
+    type Slot = (f64, Option<Vec<usize>>, DfsStats, Vec<progress::Improvement>);
+    let results: Mutex<Vec<Option<Slot>>> =
         Mutex::new((0..tasks.len()).map(|_| None).collect());
 
     std::thread::scope(|scope| {
@@ -191,6 +216,9 @@ pub fn search_with_stats(profiler: &Profiler, mem_limit: f64, b: usize,
                     let t = &tasks[idx];
                     let mut w = Walker::new(&space, frontiers.as_ref(),
                                             Some(&shared), budget);
+                    if traced {
+                        w.recorder = progress::Recorder::armed();
+                    }
                     match cfg.engine {
                         Engine::Frontier => {
                             w.run_frontier(depth, &t.prefix, t.time_fixed,
@@ -205,8 +233,9 @@ pub fn search_with_stats(profiler: &Profiler, mem_limit: f64, b: usize,
                                   t.trans_max);
                         }
                     }
+                    let events = w.recorder.take();
                     results.lock().unwrap()[idx] =
-                        Some((w.best_time, w.best_choice, w.stats));
+                        Some((w.best_time, w.best_choice, w.stats, events));
                 }
             });
         }
@@ -217,9 +246,14 @@ pub fn search_with_stats(profiler: &Profiler, mem_limit: f64, b: usize,
     // which worker ran which task, or when.
     let mut agg = DfsStats { complete: true, ..DfsStats::default() };
     let mut best: Option<(f64, Vec<usize>)> = space.seed.clone();
+    let mut task_timelines: Vec<(u64, Vec<progress::Improvement>)> =
+        Vec::new();
     for slot in results.into_inner().unwrap() {
-        let (time, choice, stats) = slot.expect("worker pool drained");
+        let (time, choice, stats, events) = slot.expect("worker pool drained");
         agg.absorb(&stats);
+        if traced {
+            task_timelines.push((stats.nodes, events));
+        }
         let Some(choice) = choice else { continue };
         let improves = match &best {
             None => true,
@@ -230,6 +264,23 @@ pub fn search_with_stats(profiler: &Profiler, mem_limit: f64, b: usize,
         if improves {
             best = Some((time, choice));
         }
+    }
+
+    if let Some(t) = trace {
+        let seed = space.seed.as_ref().map(|(st, _)| progress::Improvement {
+            nodes: 0,
+            time_bits: st.to_bits(),
+            source: if space.seed == greedy_seed {
+                progress::ImprovementSource::Greedy
+            } else {
+                progress::ImprovementSource::Warm
+            },
+        });
+        t.build_s = build_s;
+        t.descent_s =
+            descent_started.map_or(0.0, |s| s.elapsed().as_secs_f64());
+        t.timeline = progress::merge_task_timelines(seed, &task_timelines);
+        t.frontier = frontiers.as_ref().map(|f| f.stats());
     }
 
     let result = best.map(|(_, choice_ordered)| {

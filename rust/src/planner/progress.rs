@@ -1,0 +1,218 @@
+//! Search convergence timelines: every incumbent improvement, keyed by
+//! visited-node count.
+//!
+//! The engines already funnel every incumbent change through one site —
+//! `bound::Walker::try_accept` — so observing convergence costs exactly
+//! one branch on the (rare) accept path and nothing anywhere else. Each
+//! accepted improvement is logged as `(nodes_visited, time_bits,
+//! source)`: node counts, not timestamps, are the x-axis, so two runs of
+//! the same deterministic search produce **bit-identical** timelines and
+//! warm-start value is directly visible (the seed event's time vs the
+//! first descent improvement) instead of inferred from aggregate node
+//! counts.
+//!
+//! ## Determinism envelope
+//!
+//! * serial searches (one [`bound::Walker`]) — bit-identical timelines
+//!   at any thread count, because there is only one walker. This covers
+//!   every per-batch search inside a sweep (the scheduler's workers
+//!   parallelize over batch sizes, each batch is one serial walker).
+//! * parallel batch searches — per-task timelines are concatenated in
+//!   **task order** (not completion order) with cumulative node offsets
+//!   and filtered to the strictly-improving `time_bits` subsequence.
+//!   The surviving *plan* is bit-identical at any thread count (the
+//!   engines' core property), and the timeline is bit-reproducible at
+//!   `threads = 1`; at higher thread counts the shared incumbent makes
+//!   per-task node counts timing-dependent, so the timeline is faithful
+//!   but not reproducible bit-for-bit. Pinned in
+//!   `rust/tests/planner_properties.rs`.
+//!
+//! ## Inertness
+//!
+//! Recording **observes and never branches**: a [`Recorder`] is either
+//! armed (it pushes events) or off (it does nothing), and nothing in the
+//! search reads it back. Compiling with `--features no_trace` turns
+//! [`Recorder::armed`] into [`Recorder::off`], so the uninstrumented
+//! cost is a single never-taken branch per accepted incumbent.
+
+/// Where an incumbent came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ImprovementSource {
+    /// The greedy heuristic's seed, installed before the descent.
+    Greedy,
+    /// A warm-start seed (repaired neighbor / replan projection) that
+    /// beat the greedy seed.
+    Warm,
+    /// Found by the branch-and-bound descent itself.
+    Descent,
+}
+
+impl ImprovementSource {
+    /// Wire/JSON label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ImprovementSource::Greedy => "greedy",
+            ImprovementSource::Warm => "warm",
+            ImprovementSource::Descent => "descent",
+        }
+    }
+}
+
+/// One accepted incumbent improvement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Improvement {
+    /// Nodes visited when the incumbent was accepted (0 for seeds).
+    pub nodes: u64,
+    /// `f64::to_bits` of the incumbent's search-arithmetic total time.
+    /// Bits, not the float, so timelines compare exactly and serialize
+    /// losslessly (as hex strings — u64 exceeds f64-exact JSON range).
+    pub time_bits: u64,
+    /// Where the incumbent came from.
+    pub source: ImprovementSource,
+}
+
+/// An append-only improvement log handed to a [`bound::Walker`]. Off by
+/// default (no allocation, nothing recorded); the traced entry points
+/// arm it. The search never reads it — see the module docs for the
+/// inertness argument.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    events: Option<Vec<Improvement>>,
+}
+
+impl Recorder {
+    /// A disabled recorder: `record` is a no-op.
+    pub fn off() -> Recorder {
+        Recorder { events: None }
+    }
+
+    /// An armed recorder (disabled under `--features no_trace`).
+    pub fn armed() -> Recorder {
+        #[cfg(feature = "no_trace")]
+        {
+            Recorder::off()
+        }
+        #[cfg(not(feature = "no_trace"))]
+        {
+            Recorder { events: Some(Vec::new()) }
+        }
+    }
+
+    /// Log one accepted improvement (no-op when off).
+    #[inline]
+    pub fn record(&mut self, nodes: u64, time_bits: u64,
+                  source: ImprovementSource) {
+        if let Some(v) = &mut self.events {
+            v.push(Improvement { nodes, time_bits, source });
+        }
+    }
+
+    /// Drain the log (empty when off).
+    pub fn take(&mut self) -> Vec<Improvement> {
+        self.events.take().unwrap_or_default()
+    }
+}
+
+/// What a traced search observed, returned out-of-band next to the
+/// (bit-identical) plan: phase wall-times, the convergence timeline,
+/// and the frontier-build shape. Purely an observation — nothing in
+/// the search reads it.
+#[derive(Debug, Clone, Default)]
+pub struct SearchTrace {
+    /// Seconds spent building the prefold + class frontiers.
+    pub build_s: f64,
+    /// Seconds spent in the descent (task enumeration + walkers).
+    pub descent_s: f64,
+    /// The convergence timeline (see module docs for determinism).
+    pub timeline: Vec<Improvement>,
+    /// Frontier-build shape (classes, points, per-class level widths),
+    /// when the frontier engine ran.
+    pub frontier: Option<super::FrontierStats>,
+}
+
+/// Merge per-task timelines from a parallel search into one query-level
+/// timeline: `seed` first (at `nodes = 0`), then each task's events in
+/// task order with node counts offset by the cumulative visited-node
+/// total of every earlier task, filtered to the strictly-improving
+/// `time_bits` subsequence (equal-time lex improvements from later
+/// tasks are dropped — the merged x-axis must be monotone).
+pub fn merge_task_timelines(
+    seed: Option<Improvement>,
+    tasks: &[(u64, Vec<Improvement>)],
+) -> Vec<Improvement> {
+    let mut out: Vec<Improvement> = Vec::new();
+    let mut best_bits: Option<u64> = None;
+    let mut push = |e: Improvement, out: &mut Vec<Improvement>| {
+        let improves = match best_bits {
+            None => true,
+            Some(b) => f64::from_bits(e.time_bits) < f64::from_bits(b),
+        };
+        if improves {
+            best_bits = Some(e.time_bits);
+            out.push(e);
+        }
+    };
+    if let Some(s) = seed {
+        push(s, &mut out);
+    }
+    let mut offset = 0u64;
+    for (task_nodes, events) in tasks {
+        for e in events {
+            push(Improvement { nodes: e.nodes.saturating_add(offset), ..*e },
+                 &mut out);
+        }
+        offset = offset.saturating_add(*task_nodes);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(nodes: u64, t: f64, source: ImprovementSource) -> Improvement {
+        Improvement { nodes, time_bits: t.to_bits(), source }
+    }
+
+    #[test]
+    fn recorder_off_is_silent_and_armed_logs() {
+        let mut off = Recorder::off();
+        off.record(3, 1.0f64.to_bits(), ImprovementSource::Descent);
+        assert!(off.take().is_empty());
+        let mut on = Recorder::armed();
+        on.record(3, 1.0f64.to_bits(), ImprovementSource::Descent);
+        #[cfg(not(feature = "no_trace"))]
+        assert_eq!(on.take().len(), 1);
+    }
+
+    #[test]
+    fn merge_offsets_by_task_nodes_and_keeps_strict_improvements() {
+        let seed = Some(ev(0, 10.0, ImprovementSource::Warm));
+        let tasks = vec![
+            // task 0: improves at local node 5, then an equal-time lex
+            // improvement at node 7 (dropped by the merge)
+            (100, vec![ev(5, 8.0, ImprovementSource::Descent),
+                       ev(7, 8.0, ImprovementSource::Descent)]),
+            // task 1: a stale "improvement" vs its own local seed that
+            // does not beat the global best (dropped), then a real one
+            (50, vec![ev(2, 9.0, ImprovementSource::Descent),
+                      ev(40, 6.0, ImprovementSource::Descent)]),
+        ];
+        let merged = merge_task_timelines(seed, &tasks);
+        assert_eq!(merged, vec![ev(0, 10.0, ImprovementSource::Warm),
+                                ev(5, 8.0, ImprovementSource::Descent),
+                                ev(140, 6.0, ImprovementSource::Descent)]);
+        // monotone in nodes, strictly improving in time
+        for w in merged.windows(2) {
+            assert!(w[0].nodes <= w[1].nodes);
+            assert!(f64::from_bits(w[1].time_bits)
+                    < f64::from_bits(w[0].time_bits));
+        }
+    }
+
+    #[test]
+    fn merge_with_no_seed_and_empty_tasks_is_empty() {
+        assert!(merge_task_timelines(None, &[]).is_empty());
+        assert!(merge_task_timelines(None, &[(10, vec![])]).is_empty());
+    }
+}

@@ -30,6 +30,7 @@
 use super::bound::Prefold;
 use super::dfs::{self, DfsStats};
 use super::frontier::{FrontierStats, Frontiers};
+use super::progress;
 use super::{Engine, ExecutionPlan};
 use crate::cost::{PlanCost, Profiler};
 use std::sync::Mutex;
@@ -220,7 +221,19 @@ impl<'a> Scheduler<'a> {
     /// the `b = 1` search's diagnostics (its completeness certificate
     /// in particular).
     pub fn run(&self) -> Result<SchedulerResult, SweepInfeasible> {
+        self.run_traced(None)
+    }
+
+    /// [`Scheduler::run`] with an optional search-trace observation:
+    /// build vs descent wall-seconds, the frontier-build shape, and the
+    /// *winning candidate's* convergence timeline. Each per-batch search
+    /// is one serial walker, so sweep timelines are bit-reproducible at
+    /// any thread count; tracing is inert and the result is bit-identical
+    /// to the untraced run.
+    pub fn run_traced(&self, trace: Option<&mut progress::SearchTrace>)
+                      -> Result<SchedulerResult, SweepInfeasible> {
         let start = std::time::Instant::now();
+        let traced = trace.is_some();
         let n_dev = self.profiler.cluster.n_devices;
 
         // Fold + batch-independent suffix structures — and, for the
@@ -234,11 +247,13 @@ impl<'a> Scheduler<'a> {
             _ => None,
         };
 
+        let build_s = start.elapsed().as_secs_f64();
         let threads = self.threads.max(1).min(self.max_batch.max(1));
         let next = AtomicUsize::new(1);
         // lowest batch size known to be infeasible (the "memory wall")
         let wall = AtomicUsize::new(usize::MAX);
-        type Row = (usize, Vec<usize>, PlanCost, DfsStats);
+        type Row =
+            (usize, Vec<usize>, PlanCost, DfsStats, Vec<progress::Improvement>);
         let found: Mutex<Vec<Row>> = Mutex::new(Vec::new());
         // per failed batch: that search's full diagnostics (its
         // `complete` flag is the proven-vs-budget-expired distinction)
@@ -262,7 +277,12 @@ impl<'a> Scheduler<'a> {
                         {
                             break;
                         }
-                        match dfs::search_prefolded(
+                        let mut tl = if traced {
+                            Some(progress::SearchTrace::default())
+                        } else {
+                            None
+                        };
+                        match dfs::search_prefolded_traced(
                             self.profiler,
                             &prefold,
                             frontiers.as_ref(),
@@ -271,6 +291,7 @@ impl<'a> Scheduler<'a> {
                             self.node_budget,
                             self.engine,
                             self.warm.as_deref(),
+                            tl.as_mut(),
                         ) {
                             (None, stats) => {
                                 failed.lock().unwrap().push((b, stats));
@@ -278,9 +299,10 @@ impl<'a> Scheduler<'a> {
                                 break;
                             }
                             (Some((choice, cost)), stats) => {
-                                found.lock()
-                                     .unwrap()
-                                     .push((b, choice, cost, stats));
+                                let timeline =
+                                    tl.map(|t| t.timeline).unwrap_or_default();
+                                found.lock().unwrap().push(
+                                    (b, choice, cost, stats, timeline));
                             }
                         }
                     }
@@ -294,8 +316,9 @@ impl<'a> Scheduler<'a> {
         // serial sweep's stop-at-first-failure semantics, kept explicit so
         // even a non-monotone cost model could not change the result.
         let mut candidates = Vec::new();
+        let mut timelines: Vec<Vec<progress::Improvement>> = Vec::new();
         let mut stats = SweepStats { complete: true, ..Default::default() };
-        for (i, (b, choice, _cost, st)) in rows.into_iter().enumerate() {
+        for (i, (b, choice, _cost, st, tl)) in rows.into_iter().enumerate() {
             if b != i + 1 {
                 break;
             }
@@ -303,6 +326,7 @@ impl<'a> Scheduler<'a> {
             let throughput = plan.throughput(n_dev);
             stats.absorb(&st);
             candidates.push(Candidate { plan, throughput, stats: st });
+            timelines.push(tl);
         }
         let failed = failed.into_inner().unwrap();
         if candidates.is_empty() {
@@ -328,13 +352,20 @@ impl<'a> Scheduler<'a> {
                 .map(|(_, st)| st.complete)
                 .unwrap_or(false);
         let best = pick_best(&candidates);
+        let frontier_stats = frontiers.map(|f| f.stats());
+        if let Some(t) = trace {
+            t.build_s = build_s;
+            t.descent_s = start.elapsed().as_secs_f64() - build_s;
+            t.timeline = timelines.swap_remove(best);
+            t.frontier = frontier_stats.clone();
+        }
         Ok(SchedulerResult {
             best,
             total_nodes: stats.nodes,
             elapsed: start.elapsed(),
             stats,
             candidates,
-            frontier: frontiers.map(|f| f.stats()),
+            frontier: frontier_stats,
             wall_complete,
         })
     }

@@ -50,6 +50,20 @@ pub const MAX_LINE: usize = 16 * 1024;
 /// shutdown flag.
 const POLL_TICK: Duration = Duration::from_millis(50);
 
+/// After this many *consecutive* `accept(2)` failures the acceptor
+/// gives up: the front-end tears down exactly as if `shutdown` had
+/// been requested (in-flight requests still drain), and the teardown
+/// hook — if one was installed via [`Frontend::start_with_hooks`] —
+/// runs first. `osdp serve --metrics` wires that hook to the stderr
+/// metrics dump, so a listener dying of fd exhaustion still reports
+/// its final counters instead of vanishing silently. Each failure
+/// also ticks [`Counter::AcceptErrors`]; any successful accept resets
+/// the run.
+pub const FATAL_ACCEPT_ERRORS: u32 = 32;
+
+/// Runs once if the acceptor dies of consecutive accept failures.
+pub type TeardownHook = Box<dyn Fn() + Send + 'static>;
+
 // ---------------------------------------------------------------------
 // Bounded MPMC channel (vendored crossbeam-style stub)
 // ---------------------------------------------------------------------
@@ -179,6 +193,40 @@ impl LineHandler for ServiceHandler {
     }
 }
 
+/// The `--metrics-listen` scrape endpoint: any request line is answered
+/// with the full Prometheus text exposition, then the connection
+/// closes. A line that looks like an HTTP request (`GET ...`) gets
+/// minimal HTTP/1.0 framing first, so a real Prometheus scraper (or
+/// `curl`) reads the same page `nc` gets raw. The endpoint runs behind
+/// its own [`Frontend`] with its own [`Telemetry`] — scrapes are not
+/// service traffic and must not perturb the counters they report.
+pub struct MetricsHandler {
+    pub service: Arc<PlanService>,
+    /// The *service's* telemetry — the numbers being scraped.
+    pub telemetry: Arc<Telemetry>,
+}
+
+impl LineHandler for MetricsHandler {
+    fn handle(&self, line: &str) -> (String, LineOutcome) {
+        let page = super::telemetry::render_prometheus(
+            &self.service.stats(),
+            self.service.cache_len(),
+            &self.telemetry,
+            self.service.breaker_state(),
+            self.service.tracer().span_histograms(),
+        );
+        let response = if line.starts_with("GET ") {
+            format!(
+                "HTTP/1.0 200 OK\r\nContent-Type: text/plain; \
+                 version=0.0.4\r\nConnection: close\r\n\r\n{page}"
+            )
+        } else {
+            page
+        };
+        (response, LineOutcome::Quit)
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct FrontendConfig {
     /// Bind address (`127.0.0.1:0` picks an ephemeral port; read it
@@ -228,12 +276,40 @@ impl Frontend {
         Frontend::start_with(handler, telemetry, cfg)
     }
 
+    /// [`Frontend::start`] with a fatal-accept-error teardown hook
+    /// (see [`FATAL_ACCEPT_ERRORS`]).
+    pub fn start_hooked(
+        service: Arc<PlanService>,
+        telemetry: Arc<Telemetry>,
+        cfg: FrontendConfig,
+        teardown: Option<TeardownHook>,
+    ) -> std::io::Result<Frontend> {
+        let handler = Arc::new(ServiceHandler {
+            service,
+            telemetry: Arc::clone(&telemetry),
+        });
+        Frontend::start_with_hooks(handler, telemetry, cfg, teardown)
+    }
+
     /// The generic core: any [`LineHandler`] behind the same bounded
     /// pool, framing, fault-injection, and graceful-shutdown plumbing.
     pub fn start_with<H: LineHandler>(
         handler: Arc<H>,
         telemetry: Arc<Telemetry>,
         cfg: FrontendConfig,
+    ) -> std::io::Result<Frontend> {
+        Frontend::start_with_hooks(handler, telemetry, cfg, None)
+    }
+
+    /// [`Frontend::start_with`] plus an optional teardown hook that
+    /// fires if the acceptor dies of [`FATAL_ACCEPT_ERRORS`]
+    /// consecutive accept failures (the hook does *not* fire on a
+    /// requested shutdown — the caller is present for those).
+    pub fn start_with_hooks<H: LineHandler>(
+        handler: Arc<H>,
+        telemetry: Arc<Telemetry>,
+        cfg: FrontendConfig,
+        teardown: Option<TeardownHook>,
     ) -> std::io::Result<Frontend> {
         let listener = TcpListener::bind(&cfg.addr)?;
         let addr = listener.local_addr()?;
@@ -250,11 +326,34 @@ impl Frontend {
             let shutdown = Arc::clone(&shutdown);
             let telemetry = Arc::clone(&telemetry);
             thread::spawn(move || {
+                let mut failures = 0u32;
                 for stream in listener.incoming() {
                     if shutdown.load(Ordering::SeqCst) {
                         break; // the wake-up connection itself is dropped
                     }
-                    let Ok(stream) = stream else { continue };
+                    let stream = match stream {
+                        Ok(s) => {
+                            failures = 0;
+                            s
+                        }
+                        Err(_) => {
+                            // transient (aborted handshake, fd
+                            // pressure): count it and keep listening.
+                            // A long unbroken run means the listener
+                            // itself is wedged — tear down gracefully
+                            // rather than spin on a dead socket.
+                            telemetry.bump(Counter::AcceptErrors);
+                            failures += 1;
+                            if failures >= FATAL_ACCEPT_ERRORS {
+                                shutdown.store(true, Ordering::SeqCst);
+                                if let Some(hook) = &teardown {
+                                    hook();
+                                }
+                                break;
+                            }
+                            continue;
+                        }
+                    };
                     telemetry.bump(Counter::Connections);
                     if conns.send(stream).is_err() {
                         break;
@@ -434,7 +533,30 @@ fn serve_connection<H: LineHandler>(
                 }
                 match outcome {
                     LineOutcome::Continue => {}
-                    LineOutcome::Quit => return,
+                    LineOutcome::Quit => {
+                        // An HTTP-framed answer (the metrics endpoint)
+                        // closes after one response, but the client's
+                        // remaining header lines are still unread — a
+                        // bare close would RST and could destroy the
+                        // page in flight. Drain briefly so the close
+                        // is a clean FIN (bounded: 1 MiB or ~5 ms of
+                        // silence).
+                        if response.starts_with("HTTP/") {
+                            let s = reader.get_mut();
+                            let _ = s.set_read_timeout(Some(
+                                Duration::from_millis(5),
+                            ));
+                            let mut sink = [0u8; 4096];
+                            let mut drained = 0usize;
+                            while drained < (1 << 20) {
+                                match s.read(&mut sink) {
+                                    Ok(0) | Err(_) => break,
+                                    Ok(n) => drained += n,
+                                }
+                            }
+                        }
+                        return;
+                    }
                     LineOutcome::Shutdown => {
                         // flag first, then wake the acceptor exactly
                         // like Frontend::shutdown — this worker then

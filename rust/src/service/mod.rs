@@ -40,17 +40,21 @@ pub mod remote;
 pub mod replan;
 pub mod server;
 pub mod telemetry;
+pub mod trace;
 pub mod warm;
 
 pub use cache::{CacheConfig, CachedValue, DiskLoad, PlanCache, StaleEntry};
 pub use coalesce::Coalescer;
-pub use frontend::{Frontend, FrontendConfig, LineHandler};
+pub use frontend::{FATAL_ACCEPT_ERRORS, Frontend, FrontendConfig,
+                   LineHandler, MetricsHandler, TeardownHook};
 pub use key::{COST_MODEL_EPOCH, QueryKey, QueryShape, StructKey};
 pub use remote::{CacheServerHandler, RemoteConfig, RemoteOutcome, RemoteTier};
 pub use replan::CapacityCandidate;
 pub use server::{LineOutcome, Request, handle_line, handle_line_full,
                  request_line, serve_loop, serve_loop_with};
-pub use telemetry::{Counter, Telemetry, render_metrics};
+pub use telemetry::{Counter, ObservedShape, Telemetry, render_metrics,
+                    render_prometheus};
+pub use trace::{Trace, TraceCtx, Tracer};
 
 use crate::config::{Cluster, SearchConfig};
 use crate::cost::Profiler;
@@ -58,6 +62,7 @@ use crate::model::ModelDesc;
 use crate::planner::scheduler::SweepStats;
 use crate::planner::{self, DfsStats, Engine, ExecutionPlan, ParallelConfig,
                      Scheduler};
+use crate::util::json::Json;
 use crate::util::sync::lock_recover;
 use std::fmt;
 use std::sync::Mutex;
@@ -506,6 +511,9 @@ pub struct QueryResponse {
     pub key: QueryKey,
     /// Devices the throughput figures are quoted over.
     pub n_devices: usize,
+    /// Id of this query's trace in the service's ring (`trace <id>`
+    /// fetches it); `None` under `--features no_trace`.
+    pub trace_id: Option<String>,
 }
 
 struct Inner {
@@ -531,6 +539,10 @@ pub struct PlanService {
     /// remote failures degrade to the local-only path — attaching a
     /// dead or lying remote can never change an answer or fail a query.
     remote: Option<RemoteTier>,
+    /// Request-scoped tracing: the completed-trace ring + per-span
+    /// duration histograms. Observational only — nothing in the serve
+    /// path reads a trace back (see [`trace`]).
+    tracer: Tracer,
 }
 
 impl PlanService {
@@ -556,6 +568,7 @@ impl PlanService {
             }),
             coalescer: Coalescer::new(),
             remote: None,
+            tracer: Tracer::new(),
         };
         (service, harvest)
     }
@@ -598,6 +611,12 @@ impl PlanService {
     /// Cached entry count (observability; the `stats` protocol verb).
     pub fn cache_len(&self) -> usize {
         lock_recover(&self.inner).cache.len()
+    }
+
+    /// The trace registry (`trace` verbs, `osdp query --trace`, and the
+    /// Prometheus span histograms).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
     }
 
     /// Epoch-bump warm-up: replay the hottest `k` queries harvested
@@ -673,14 +692,43 @@ impl PlanService {
         // never arrived, so the telemetry invariants survive chaos
         // runs bit-for-bit. A no-op branch when faults are disabled.
         crate::util::faults::on_query_dispatch();
+        // Tracing wraps the whole serve. It observes and never decides:
+        // the traced path differs from the untraced one only in span
+        // bookkeeping (pinned bit-identical in planner_properties.rs),
+        // and the root guard closes on every exit — error returns
+        // included — so finished traces always have closed trees.
+        let ctx = self.tracer.begin();
+        let root = ctx.as_ref().map(|c| c.span("query"));
+        let mut result = self.query_inner(q, seed, ctx.as_ref());
+        drop(root);
+        if let Some(ctx) = ctx {
+            if let Ok(r) = &mut result {
+                r.trace_id = Some(ctx.id());
+            }
+            self.tracer.finish(ctx);
+        }
+        result
+    }
+
+    fn query_inner(&self, q: &PlanQuery, seed: Option<&[usize]>,
+                   ctx: Option<&TraceCtx>)
+                   -> Result<QueryResponse, PlanError> {
+        let canon = ctx.map(|c| c.span("canonicalize"));
         q.validate()?;
         let cluster = q.cluster.resolve()?;
         let model = resolve_setting(&q.setting)?;
         let profiler = Profiler::new(&model, &cluster, &q.search);
         let key = QueryKey::for_query(&profiler, cluster.mem_limit, q.shape);
+        if let Some(c) = ctx {
+            // the trace id becomes deterministic here: key fingerprint
+            // prefix + the per-process sequence number
+            c.set_request(&key.id());
+        }
+        drop(canon);
 
         // ---- cache fast path
         {
+            let l1 = ctx.map(|c| c.span("cache"));
             let mut guard = lock_recover(&self.inner);
             // reborrow so cache/stats borrows stay field-disjoint
             let inner = &mut *guard;
@@ -689,6 +737,10 @@ impl PlanService {
                     let v = v.clone();
                     inner.stats.hits += 1;
                     drop(guard);
+                    if let Some(s) = &l1 {
+                        s.meta("outcome", Json::Str("hit".into()));
+                    }
+                    drop(l1);
                     return self.answer_from_value(&profiler, key, v,
                                                   Source::Cache, true);
                 }
@@ -696,6 +748,11 @@ impl PlanService {
                 // demote to a miss rather than serve garbage
                 inner.cache.remove(&key);
                 inner.stats.stale_rejected += 1;
+                if let Some(s) = &l1 {
+                    s.meta("outcome", Json::Str("stale".into()));
+                }
+            } else if let Some(s) = &l1 {
+                s.meta("outcome", Json::Str("miss".into()));
             }
             inner.stats.misses += 1;
         }
@@ -707,7 +764,7 @@ impl PlanService {
             Err(PlanError::Internal("the planning leader panicked".into()));
         let mut led_outcome: Option<(Answer, Source)> = None;
         let (value, led) = self.coalescer.run(&key.id(), poison, || {
-            match self.plan_miss(&profiler, q, &key, seed) {
+            match self.plan_miss(&profiler, q, &key, seed, ctx) {
                 Ok((value, complete, answer, source)) => {
                     led_outcome = Some((answer, source));
                     Ok((value, complete))
@@ -723,6 +780,7 @@ impl PlanService {
                     source,
                     key,
                     n_devices: cluster.n_devices,
+                    trace_id: None,
                 }),
                 // unreachable by construction (Ok value implies an
                 // outcome); rebuild from the value rather than panic
@@ -741,7 +799,7 @@ impl PlanService {
     /// cache population (plans only when the search ran to completion —
     /// budget-expired results are anytime, not canonical) → one persist.
     fn plan_miss(&self, profiler: &Profiler, q: &PlanQuery, key: &QueryKey,
-                 seed: Option<&[usize]>)
+                 seed: Option<&[usize]>, ctx: Option<&TraceCtx>)
                  -> Result<(CachedValue, bool, Answer, Source), PlanError> {
         // Double-checked cache read: a caller that missed the cache but
         // lost the flight-timing race (its would-be leader finished and
@@ -751,6 +809,11 @@ impl PlanService {
         // concurrent identical queries -> exactly one planner
         // execution" a guarantee rather than a likelihood.
         {
+            let recheck = ctx.map(|c| {
+                let s = c.span("cache");
+                s.meta("recheck", Json::Bool(true));
+                s
+            });
             let mut guard = lock_recover(&self.inner);
             let inner = &mut *guard;
             if let Some(v) = inner.cache.get(key) {
@@ -762,6 +825,10 @@ impl PlanService {
                     inner.stats.misses -= 1;
                     inner.stats.hits += 1;
                     drop(guard);
+                    if let Some(s) = &recheck {
+                        s.meta("outcome", Json::Str("hit".into()));
+                    }
+                    drop(recheck);
                     let answer =
                         self.answer_of(profiler, key, v.clone(), true)?;
                     return Ok((v, true, answer, Source::Cache));
@@ -777,10 +844,25 @@ impl PlanService {
         // breaker, garbage — demotes to the local miss path below.
         if let Some(tier) = &self.remote {
             if let Some(req) = server::request_line(q) {
+                let rspan = ctx.map(|c| {
+                    let s = c.span("remote");
+                    // breaker state *going in* is the decision that
+                    // gates the call (`Skipped` = the breaker ate it);
+                    // the span's own duration is the deadline spend
+                    s.meta("breaker",
+                           Json::Str(tier.breaker_state().into()));
+                    s
+                });
+                let note = |label: &str| {
+                    if let Some(s) = &rspan {
+                        s.meta("outcome", Json::Str(label.into()));
+                    }
+                };
                 match tier.get(key, &req) {
                     RemoteOutcome::Hit(v)
                         if v.validates_against(profiler) =>
                     {
+                        note("hit");
                         {
                             let mut guard = lock_recover(&self.inner);
                             let inner = &mut *guard;
@@ -795,12 +877,17 @@ impl PlanService {
                                     *key, v.clone(), Some(req));
                             inner.dirty = true;
                         }
-                        self.persist();
+                        drop(rspan);
+                        {
+                            let _p = ctx.map(|c| c.span("persist"));
+                            self.persist();
+                        }
                         let answer =
                             self.answer_of(profiler, key, v.clone(), true)?;
                         return Ok((v, true, answer, Source::Remote));
                     }
                     RemoteOutcome::Hit(_) | RemoteOutcome::Garbage => {
+                        note("quarantined");
                         // the tier answered, but with an entry this
                         // build cannot trust: never served, only counted
                         lock_recover(&self.inner)
@@ -808,11 +895,12 @@ impl PlanService {
                             .remote_quarantined += 1;
                     }
                     RemoteOutcome::Miss => {
+                        note("miss");
                         lock_recover(&self.inner).stats.remote_misses += 1;
                     }
-                    RemoteOutcome::Timeout
-                    | RemoteOutcome::Error
-                    | RemoteOutcome::Skipped => {}
+                    RemoteOutcome::Timeout => note("timeout"),
+                    RemoteOutcome::Error => note("error"),
+                    RemoteOutcome::Skipped => note("skipped"),
                 }
             }
         }
@@ -826,6 +914,7 @@ impl PlanService {
         // as tight as any single neighbor, so visited nodes can only
         // shrink relative to the old single-neighbor policy while the
         // answer stays bit-identical.
+        let wspan = ctx.map(|c| c.span("warm"));
         let warm_choice = if q.warm {
             let mut candidates: Vec<Vec<usize>> = Vec::new();
             if let Some(s) = seed.filter(|s| {
@@ -859,18 +948,30 @@ impl PlanService {
                 QueryShape::Sweep { .. } => 1,
             };
             let had_candidates = !candidates.is_empty();
+            if let Some(s) = &wspan {
+                s.meta("candidates", Json::Num(candidates.len() as f64));
+            }
             // (time bits, repaired lex) ranks repaired incumbents the
             // same way the engines rank plans, so "best" is exact
             let mut best: Option<((u64, Vec<usize>), Vec<usize>)> = None;
             for raw in candidates {
+                let repair = ctx.map(|c| c.span("repair"));
                 let Some((repaired, cost)) = planner::greedy_search_from(
                     profiler,
                     key.mem_limit(),
                     b_gate,
                     &raw,
                 ) else {
+                    if let Some(s) = &repair {
+                        s.meta("feasible", Json::Bool(false));
+                    }
                     continue;
                 };
+                if let Some(s) = &repair {
+                    s.meta("feasible", Json::Bool(true));
+                    s.meta("moved", Json::Bool(repaired != raw));
+                }
+                drop(repair);
                 let rank = (cost.time.to_bits(), repaired);
                 if best.as_ref().map_or(true, |(r, _)| rank < *r) {
                     best = Some((rank, raw));
@@ -892,6 +993,10 @@ impl PlanService {
         } else {
             None
         };
+        if let Some(s) = &wspan {
+            s.meta("seeded", Json::Bool(warm_choice.is_some()));
+        }
+        drop(wspan);
         let source = if warm_choice.is_some() {
             Source::Warm
         } else {
@@ -912,6 +1017,11 @@ impl PlanService {
         // cost-model epoch can re-plan this traffic before serving
         let req = server::request_line(q);
 
+        // the planner clocks its own phases (prefold/frontier build vs
+        // descent) and logs the convergence timeline; both surface as
+        // closed spans + the trace's timeline below
+        let mut search_trace =
+            ctx.map(|_| planner::SearchTrace::default());
         let result = match key.shape {
             QueryShape::Batch(b) => {
                 let cfg = ParallelConfig {
@@ -919,13 +1029,16 @@ impl PlanService {
                     engine: q.engine,
                     ..Default::default()
                 };
-                let (outcome, stats) = planner::parallel_search_with_stats(
+                let (outcome, stats) = planner::parallel_search_traced(
                     profiler,
                     key.mem_limit(),
                     b,
                     &cfg,
                     warm_choice.as_deref(),
+                    search_trace.as_mut(),
                 );
+                self.record_search_spans(ctx, search_trace.take(), &stats,
+                                         q.engine);
                 match outcome {
                     None => {
                         // cache "nothing fits" only when it was proven
@@ -960,7 +1073,18 @@ impl PlanService {
                 if let Some(w) = warm_choice {
                     sched = sched.with_warm(w);
                 }
-                match sched.run() {
+                let sweep_outcome = sched.run_traced(search_trace.as_mut());
+                let sweep_stats = match &sweep_outcome {
+                    Ok(res) => DfsStats {
+                        nodes: res.total_nodes,
+                        complete: res.stats.complete,
+                        ..DfsStats::default()
+                    },
+                    Err(inf) => inf.stats.clone(),
+                };
+                self.record_search_spans(ctx, search_trace.take(),
+                                         &sweep_stats, q.engine);
+                match sweep_outcome {
                     Err(infeasible) => {
                         // the scheduler's structured verdict carries the
                         // b=1 search's own completeness certificate, so
@@ -1038,8 +1162,37 @@ impl PlanService {
                 }
             }
         };
-        self.persist();
+        {
+            let _p = ctx.map(|c| c.span("persist"));
+            self.persist();
+        }
         result
+    }
+
+    /// Surface a finished search's phase clocks and convergence
+    /// timeline on the trace: closed `build`/`descent` spans (children
+    /// of the root) with the frontier-build shape and node counts as
+    /// metadata. No-op untraced.
+    fn record_search_spans(&self, ctx: Option<&TraceCtx>,
+                           tl: Option<planner::SearchTrace>,
+                           stats: &DfsStats, engine: Engine) {
+        let (Some(c), Some(tl)) = (ctx, tl) else { return };
+        let mut build_meta = Vec::new();
+        if let Some(f) = &tl.frontier {
+            build_meta.push(("classes".to_string(),
+                             Json::Num(f.classes as f64)));
+            build_meta.push(("points".to_string(),
+                             Json::Num(f.points as f64)));
+            build_meta.push(("max_level_width".to_string(),
+                             Json::Num(f.max_level_width as f64)));
+        }
+        c.closed_span("build", tl.build_s, build_meta);
+        c.closed_span("descent", tl.descent_s, vec![
+            ("engine".to_string(), Json::Str(engine.label().into())),
+            ("nodes".to_string(), Json::Num(stats.nodes as f64)),
+            ("complete".to_string(), Json::Bool(stats.complete)),
+        ]);
+        c.set_timeline(tl.timeline);
     }
 
     fn store(&self, key: QueryKey, value: CachedValue,
@@ -1119,6 +1272,7 @@ impl PlanService {
             source,
             key,
             n_devices: profiler.cluster.n_devices,
+            trace_id: None,
         })
     }
 

@@ -34,6 +34,7 @@
 //! walking a device-count ladder downward, re-planning each rung from
 //! the last feasible one so the seeds cascade.
 
+use super::telemetry::ObservedShape;
 use super::{CachedValue, ClusterSpec, PlanError, PlanQuery, PlanService,
             QueryKey, QueryResponse, QueryShape, Telemetry, resolve_setting};
 use crate::cost::Profiler;
@@ -181,8 +182,11 @@ impl PlanService {
             let started = std::time::Instant::now();
             let outcome = self.replan(&q, &spec);
             if let Some(t) = telemetry {
+                // every rung is a replan, whatever shape the original
+                // query had — the replan lane is about the path taken
+                // (cache bypass + reseed), not the answer's shape
                 t.observe_query(
-                    matches!(q.shape, QueryShape::Sweep { .. }),
+                    ObservedShape::Replan,
                     started.elapsed().as_secs_f64(),
                     &outcome,
                 );

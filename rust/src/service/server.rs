@@ -13,6 +13,8 @@
 //!        [new-devices=M] [new-cluster=PRESET] [new-mem=G]
 //!        [sweep-clusters]
 //! stats
+//! metrics
+//! trace [ID]
 //! quit
 //! shutdown
 //! ```
@@ -30,7 +32,7 @@
 //! never exits on bad input (error-path property tests in
 //! `rust/tests/plan_service.rs`).
 
-use super::telemetry::Telemetry;
+use super::telemetry::{ObservedShape, Telemetry};
 use super::{Answer, PlanError, PlanQuery, PlanService, QueryResponse,
             QueryShape};
 use crate::planner::Engine;
@@ -52,6 +54,13 @@ pub enum Request {
         sweep_clusters: bool,
     },
     Stats,
+    /// Prometheus text-format snapshot of every counter, gauge, and
+    /// histogram the service keeps (the same numbers `stats` reports
+    /// as JSON — the exposition test pins that equality).
+    Metrics,
+    /// `trace` lists the completed-trace ring; `trace ID` returns one
+    /// trace's full span tree and convergence timeline.
+    Trace(Option<String>),
     Quit,
     Shutdown,
 }
@@ -76,12 +85,23 @@ pub fn parse_request(line: &str) -> Result<Request, PlanError> {
         .ok_or_else(|| PlanError::BadRequest("empty request".into()))?;
     match verb {
         "stats" => Ok(Request::Stats),
+        "metrics" => Ok(Request::Metrics),
+        "trace" => {
+            let id = toks.next().map(str::to_string);
+            if toks.next().is_some() {
+                return Err(PlanError::BadRequest(
+                    "trace takes at most one argument (a trace id)"
+                        .into(),
+                ));
+            }
+            Ok(Request::Trace(id))
+        }
         "quit" | "exit" => Ok(Request::Quit),
         "shutdown" => Ok(Request::Shutdown),
         "query" | "sweep" | "replan" => parse_query(verb, toks),
         other => Err(PlanError::BadRequest(format!(
             "unknown verb '{other}' (query | sweep | replan | stats | \
-             quit | shutdown)"
+             metrics | trace | quit | shutdown)"
         ))),
     }
 }
@@ -284,6 +304,9 @@ pub fn render_response(outcome: &Result<QueryResponse, PlanError>)
             o.insert("source".into(),
                      Json::Str(resp.source.label().into()));
             o.insert("key".into(), Json::Str(resp.key.id()));
+            if let Some(id) = &resp.trace_id {
+                o.insert("trace_id".into(), Json::Str(id.clone()));
+            }
             match &resp.answer {
                 Answer::Plan { plan, stats } => {
                     o.insert("kind".into(), Json::Str("plan".into()));
@@ -445,6 +468,65 @@ fn render_stats(service: &PlanService, telemetry: Option<&Telemetry>)
     json::to_string(&Json::Obj(o))
 }
 
+/// Render the `metrics` verb: the Prometheus text exposition wrapped in
+/// the protocol's one-JSON-line envelope (`text` carries the page; the
+/// `--metrics-listen` HTTP endpoint serves the same page raw). Without
+/// wire telemetry the latency lanes render as empty histograms rather
+/// than vanishing — scrapers see a stable metric set either way.
+fn render_metrics_line(service: &PlanService,
+                       telemetry: Option<&Telemetry>) -> String {
+    let fallback = Telemetry::new();
+    let text = super::telemetry::render_prometheus(
+        &service.stats(),
+        service.cache_len(),
+        telemetry.unwrap_or(&fallback),
+        service.breaker_state(),
+        service.tracer().span_histograms(),
+    );
+    let mut o = BTreeMap::new();
+    o.insert("ok".into(), Json::Bool(true));
+    o.insert("kind".into(), Json::Str("metrics".into()));
+    o.insert("text".into(), Json::Str(text));
+    json::to_string(&Json::Obj(o))
+}
+
+/// Render the `trace` verb: the completed-trace ring as one-line
+/// summaries, or (with an id) one trace's full span tree and
+/// convergence timeline.
+fn render_trace(service: &PlanService, id: Option<&str>) -> String {
+    let tracer = service.tracer();
+    let mut o = BTreeMap::new();
+    match id {
+        None => {
+            o.insert("ok".into(), Json::Bool(true));
+            o.insert("kind".into(), Json::Str("traces".into()));
+            o.insert("enabled".into(),
+                     Json::Bool(super::trace::Tracer::enabled()));
+            o.insert("traces".into(), Json::Arr(tracer.recent()));
+        }
+        Some(id) => match tracer.get(id) {
+            Some(t) => {
+                o.insert("ok".into(), Json::Bool(true));
+                o.insert("kind".into(), Json::Str("trace".into()));
+                o.insert("trace".into(), t.to_json());
+            }
+            None => {
+                o.insert("ok".into(), Json::Bool(false));
+                o.insert("error".into(), Json::Str("not-found".into()));
+                o.insert(
+                    "detail".into(),
+                    Json::Str(format!(
+                        "no trace '{id}' in the ring (the last {} \
+                         completed traces are kept)",
+                        super::trace::RING_CAP
+                    )),
+                );
+            }
+        },
+    }
+    json::to_string(&Json::Obj(o))
+}
+
 /// Handle one protocol line; always returns exactly one JSON line (the
 /// `quit`/`shutdown` acknowledgements included — the transport acts on
 /// the returned [`LineOutcome`]). With a [`Telemetry`] attached, every
@@ -464,6 +546,13 @@ pub fn handle_line_full(service: &PlanService,
         Ok(Request::Stats) => {
             (render_stats(service, telemetry), LineOutcome::Continue)
         }
+        Ok(Request::Metrics) => {
+            (render_metrics_line(service, telemetry),
+             LineOutcome::Continue)
+        }
+        Ok(Request::Trace(id)) => {
+            (render_trace(service, id.as_deref()), LineOutcome::Continue)
+        }
         Ok(Request::Quit) => {
             (r#"{"kind":"bye","ok":true}"#.to_string(), LineOutcome::Quit)
         }
@@ -475,9 +564,13 @@ pub fn handle_line_full(service: &PlanService,
             let started = Instant::now();
             let outcome = service.query(&q);
             if let Some(t) = telemetry {
-                let sweep =
-                    matches!(q.shape, QueryShape::Sweep { .. });
-                t.observe_query(sweep, started.elapsed().as_secs_f64(),
+                let shape =
+                    if matches!(q.shape, QueryShape::Sweep { .. }) {
+                        ObservedShape::Sweep
+                    } else {
+                        ObservedShape::Batch
+                    };
+                t.observe_query(shape, started.elapsed().as_secs_f64(),
                                 &outcome);
             }
             (render_response(&outcome), LineOutcome::Continue)
@@ -494,9 +587,10 @@ pub fn handle_line_full(service: &PlanService,
                 let started = Instant::now();
                 let outcome = service.replan(&query, &new_cluster);
                 if let Some(t) = telemetry {
-                    let sweep =
-                        matches!(query.shape, QueryShape::Sweep { .. });
-                    t.observe_query(sweep,
+                    // replans land in their own latency lane: a replan
+                    // pays cache-bypass costs a plain query never sees,
+                    // so folding it into batch/sweep would skew both
+                    t.observe_query(ObservedShape::Replan,
                                     started.elapsed().as_secs_f64(),
                                     &outcome);
                 }
@@ -794,6 +888,55 @@ mod tests {
         }
         assert_eq!(v.get("fits_min_devices").as_usize(), Some(1));
         assert_eq!(service.stats().replans, 4);
+    }
+
+    #[test]
+    fn trace_and_metrics_verbs_answer_json() {
+        let service = super::super::PlanService::in_memory();
+        // empty ring before any query is served
+        let (resp, outcome) = handle_line_full(&service, None, "trace");
+        assert_eq!(outcome, LineOutcome::Continue);
+        let v = Json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(true));
+        assert_eq!(v.get("kind").as_str(), Some("traces"));
+        assert_eq!(v.get("traces").as_arr(), Some(&[][..]));
+
+        // serve one query; its trace_id resolves to a complete tree
+        let (qresp, _) = handle_line_full(
+            &service,
+            None,
+            &format!("query setting={TINY} mem=8 batch=2 g=0"),
+        );
+        let qv = Json::parse(&qresp).unwrap();
+        let id =
+            qv.get("trace_id").as_str().expect("trace_id").to_string();
+        let (tresp, _) =
+            handle_line_full(&service, None, &format!("trace {id}"));
+        let tv = Json::parse(&tresp).unwrap();
+        assert_eq!(tv.get("ok").as_bool(), Some(true));
+        assert_eq!(tv.get("kind").as_str(), Some("trace"));
+        assert_eq!(tv.get("trace").get("id").as_str(),
+                   Some(id.as_str()));
+        assert_eq!(tv.get("trace").get("complete").as_bool(),
+                   Some(true));
+
+        // unknown ids answer not-found; extra tokens are rejected
+        let (miss, _) = handle_line_full(&service, None, "trace nope");
+        assert_eq!(Json::parse(&miss).unwrap().get("error").as_str(),
+                   Some("not-found"));
+        let (bad, _) = handle_line_full(&service, None, "trace a b");
+        assert_eq!(Json::parse(&bad).unwrap().get("ok").as_bool(),
+                   Some(false));
+
+        // metrics wraps the Prometheus page in the JSON envelope
+        let (mresp, _) = handle_line_full(&service, None, "metrics");
+        let mv = Json::parse(&mresp).unwrap();
+        assert_eq!(mv.get("ok").as_bool(), Some(true));
+        assert_eq!(mv.get("kind").as_str(), Some("metrics"));
+        let text = mv.get("text").as_str().unwrap();
+        assert!(text.contains("osdp_service_queries_total 1"),
+                "the served query must show up in the exposition");
+        assert!(text.contains("osdp_breaker_state{state=\"closed\"} 1"));
     }
 
     #[test]

@@ -56,7 +56,9 @@ pub struct Histogram {
 }
 
 impl Histogram {
-    fn new() -> Histogram {
+    /// A fresh all-zero histogram (pub: the tracer's per-span duration
+    /// histograms reuse the bucket ladder).
+    pub fn new() -> Histogram {
         Histogram {
             buckets: std::array::from_fn(|_| AtomicU64::new(0)),
             count: AtomicU64::new(0),
@@ -88,6 +90,11 @@ impl Histogram {
 
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of observed seconds (nanosecond-exact accumulation).
+    pub fn sum_s(&self) -> f64 {
+        self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9
     }
 
     /// Per-bucket counts (same order as [`LATENCY_BUCKETS_S`], overflow
@@ -175,9 +182,14 @@ pub enum Counter {
     /// loop (the pool never shrinks; each restart is one panic
     /// survived).
     WorkerRestarts,
+    /// `accept(2)` failures in the front-end's acceptor loop. Transient
+    /// ones (EMFILE pressure, aborted handshakes) just tick this;
+    /// [`super::frontend::FATAL_ACCEPT_ERRORS`] *consecutive* failures
+    /// end the listener and fire its teardown hook.
+    AcceptErrors,
 }
 
-const N_COUNTERS: usize = 10;
+const N_COUNTERS: usize = 11;
 
 impl Counter {
     const ALL: [Counter; N_COUNTERS] = [
@@ -191,6 +203,7 @@ impl Counter {
         Counter::WarmupReplans,
         Counter::WarmupFailures,
         Counter::WorkerRestarts,
+        Counter::AcceptErrors,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -205,8 +218,26 @@ impl Counter {
             Counter::WarmupReplans => "warmup_replans",
             Counter::WarmupFailures => "warmup_failures",
             Counter::WorkerRestarts => "worker_restarts",
+            Counter::AcceptErrors => "accept_errors",
         }
     }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+/// Which latency lane a dispatched request observes into. `Replan`
+/// covers the `replan` verb (single replan and every capacity-sweep
+/// rung) — before it existed replans folded into the batch/sweep lanes
+/// and elastic re-planning latency was invisible.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObservedShape {
+    Batch,
+    Sweep,
+    Replan,
 }
 
 /// Wire-surface telemetry: one instance per serving process, shared by
@@ -218,6 +249,9 @@ pub struct Telemetry {
     pub batch_latency: Histogram,
     /// Latency of `sweep` requests.
     pub sweep_latency: Histogram,
+    /// Latency of `replan` requests (each capacity-sweep rung counts
+    /// once, like any other dispatched query).
+    pub replan_latency: Histogram,
 }
 
 impl Telemetry {
@@ -226,6 +260,7 @@ impl Telemetry {
             counters: std::array::from_fn(|_| AtomicU64::new(0)),
             batch_latency: Histogram::new(),
             sweep_latency: Histogram::new(),
+            replan_latency: Histogram::new(),
         }
     }
 
@@ -239,18 +274,20 @@ impl Telemetry {
 
     /// Record one dispatched query: shape-binned latency plus the
     /// verdict counters. Exactly one call per `PlanService::query`
-    /// dispatch — the telemetry-consistency invariant depends on it.
+    /// dispatch — the telemetry-consistency invariant
+    /// (`batch + sweep + replan` histogram counts `== queries`) depends
+    /// on it.
     pub fn observe_query(
         &self,
-        sweep: bool,
+        shape: ObservedShape,
         seconds: f64,
         outcome: &Result<super::QueryResponse, super::PlanError>,
     ) {
         self.bump(Counter::Queries);
-        if sweep {
-            self.sweep_latency.observe(seconds);
-        } else {
-            self.batch_latency.observe(seconds);
+        match shape {
+            ObservedShape::Batch => self.batch_latency.observe(seconds),
+            ObservedShape::Sweep => self.sweep_latency.observe(seconds),
+            ObservedShape::Replan => self.replan_latency.observe(seconds),
         }
         match outcome {
             Ok(_) => {}
@@ -281,8 +318,16 @@ impl Telemetry {
         let mut lat = BTreeMap::new();
         lat.insert("batch".into(), self.batch_latency.to_json());
         lat.insert("sweep".into(), self.sweep_latency.to_json());
+        lat.insert("replan".into(), self.replan_latency.to_json());
         o.insert("latency".into(), Json::Obj(lat));
         Json::Obj(o)
+    }
+
+    /// The three latency lanes as (shape label, histogram).
+    pub fn latency_lanes(&self) -> [(&'static str, &Histogram); 3] {
+        [("batch", &self.batch_latency),
+         ("sweep", &self.sweep_latency),
+         ("replan", &self.replan_latency)]
     }
 }
 
@@ -312,6 +357,74 @@ pub fn render_metrics(
     o.insert("service".into(), Json::Obj(svc));
     o.insert("telemetry".into(), telemetry.to_json());
     crate::util::json::to_string(&Json::Obj(o))
+}
+
+fn prom_histogram(out: &mut String, metric: &str, label_key: &str,
+                  label_val: &str, h: &Histogram) {
+    let label = format!("{label_key}=\"{label_val}\"");
+    let mut cum = 0u64;
+    for (i, c) in h.snapshot().iter().enumerate() {
+        cum += c;
+        let le = match LATENCY_BUCKETS_S.get(i) {
+            Some(b) => format!("{b}"),
+            None => "+Inf".into(),
+        };
+        out.push_str(&format!(
+            "{metric}_bucket{{{label},le=\"{le}\"}} {cum}\n"));
+    }
+    out.push_str(&format!("{metric}_sum{{{label}}} {}\n", h.sum_s()));
+    out.push_str(&format!("{metric}_count{{{label}}} {}\n", h.count()));
+}
+
+/// Prometheus text exposition (version 0.0.4) of everything the `stats`
+/// verb reports, plus the tracer's per-span duration histograms. Metric
+/// names (README "Observability" documents them):
+///
+/// * `osdp_service_<field>_total` — every [`super::ServiceStats`]
+///   counter, including the PR-8 remote-tier counters (`remote_hits`,
+///   `remote_errors`, `breaker_open`, ...); values are **identical** to
+///   the `stats` verb's `service` section, pinned by the integration
+///   tests.
+/// * `osdp_net_<name>_total` — every wire [`Counter`], identical to the
+///   `stats` verb's `telemetry` section.
+/// * `osdp_cache_entries` (gauge), `osdp_breaker_state{state=...}`
+///   (one-hot gauge).
+/// * `osdp_latency_seconds{shape="batch"|"sweep"|"replan"}` and
+///   `osdp_span_seconds{span=<SPAN_NAMES>}` — histograms with
+///   cumulative `_bucket{le=...}` / `_sum` / `_count` series.
+pub fn render_prometheus(
+    stats: &super::ServiceStats,
+    cache_entries: usize,
+    telemetry: &Telemetry,
+    breaker: &str,
+    spans: &[(&'static str, Histogram)],
+) -> String {
+    let mut out = String::new();
+    out.push_str("# TYPE osdp_service counter\n");
+    for (name, v) in stats.fields() {
+        out.push_str(&format!("osdp_service_{name}_total {v}\n"));
+    }
+    out.push_str("# TYPE osdp_net counter\n");
+    for c in Counter::ALL {
+        out.push_str(&format!("osdp_net_{}_total {}\n", c.name(),
+                              telemetry.get(c)));
+    }
+    out.push_str("# TYPE osdp_cache_entries gauge\n");
+    out.push_str(&format!("osdp_cache_entries {cache_entries}\n"));
+    out.push_str("# TYPE osdp_breaker_state gauge\n");
+    for s in ["closed", "open", "half-open"] {
+        out.push_str(&format!("osdp_breaker_state{{state=\"{s}\"}} {}\n",
+                              u64::from(s == breaker)));
+    }
+    out.push_str("# TYPE osdp_latency_seconds histogram\n");
+    for (shape, h) in telemetry.latency_lanes() {
+        prom_histogram(&mut out, "osdp_latency_seconds", "shape", shape, h);
+    }
+    out.push_str("# TYPE osdp_span_seconds histogram\n");
+    for (span, h) in spans {
+        prom_histogram(&mut out, "osdp_span_seconds", "span", span, h);
+    }
+    out
 }
 
 #[cfg(test)]
@@ -371,26 +484,39 @@ mod tests {
     #[test]
     fn observe_query_feeds_shape_histograms_and_verdicts() {
         let t = Telemetry::new();
-        t.observe_query(false, 1e-4,
+        t.observe_query(ObservedShape::Batch, 1e-4,
                         &Err(super::super::PlanError::Infeasible {
                             batch: Some(1),
                         }));
-        t.observe_query(true, 2.0,
+        t.observe_query(ObservedShape::Sweep, 2.0,
                         &Err(super::super::PlanError::UnknownSetting(
                             "x".into(),
                         )));
-        assert_eq!(t.queries(), 2);
+        t.observe_query(ObservedShape::Replan, 3e-3,
+                        &Err(super::super::PlanError::InvalidCluster(
+                            "y".into(),
+                        )));
+        assert_eq!(t.queries(), 3);
         assert_eq!(t.batch_latency.count(), 1);
         assert_eq!(t.sweep_latency.count(), 1);
+        assert_eq!(t.replan_latency.count(), 1);
+        // the pinned invariant: every query lands in exactly one lane
+        assert_eq!(t.batch_latency.count() + t.sweep_latency.count()
+                       + t.replan_latency.count(),
+                   t.queries());
         assert_eq!(t.get(Counter::Infeasible), 1);
-        assert_eq!(t.get(Counter::Rejected), 1);
+        assert_eq!(t.get(Counter::Rejected), 2);
+        let lanes = t.to_json();
+        assert_eq!(lanes.get("latency").get("replan").get("count")
+                        .as_usize(),
+                   Some(1));
     }
 
     #[test]
     fn internal_errors_count_as_queries_but_not_verdicts() {
         let t = Telemetry::new();
         t.observe_query(
-            false,
+            ObservedShape::Batch,
             1e-4,
             &Err(super::super::PlanError::Internal("leader panicked".into())),
         );
@@ -398,5 +524,48 @@ mod tests {
         assert_eq!(t.batch_latency.count(), 1);
         assert_eq!(t.get(Counter::Rejected), 0, "miss already counted");
         assert_eq!(t.get(Counter::Infeasible), 0);
+    }
+
+    #[test]
+    fn prometheus_exposition_matches_the_json_document() {
+        let t = Telemetry::new();
+        t.bump(Counter::Requests);
+        t.bump(Counter::Requests);
+        t.observe_query(ObservedShape::Batch, 2e-5, &Err(
+            super::super::PlanError::Infeasible { batch: None }));
+        let stats = super::super::ServiceStats {
+            queries: 1,
+            misses: 1,
+            ..Default::default()
+        };
+        let spans = [("descent", Histogram::new())];
+        spans[0].1.observe(0.5);
+        let text = render_prometheus(&stats, 7, &t, "open", &spans);
+        let line = |needle: &str| {
+            text.lines().find(|l| l.starts_with(needle))
+                .unwrap_or_else(|| panic!("missing {needle}"))
+                .rsplit(' ').next().unwrap().to_string()
+        };
+        assert_eq!(line("osdp_service_queries_total "), "1");
+        assert_eq!(line("osdp_service_misses_total "), "1");
+        assert_eq!(line("osdp_net_requests_total "), "2");
+        assert_eq!(line("osdp_cache_entries "), "7");
+        assert_eq!(line("osdp_breaker_state{state=\"open\"}"), "1");
+        assert_eq!(line("osdp_breaker_state{state=\"closed\"}"), "0");
+        assert_eq!(
+            line("osdp_latency_seconds_count{shape=\"batch\"}"), "1");
+        // buckets are cumulative: the +Inf bucket equals the count
+        assert_eq!(
+            line("osdp_latency_seconds_bucket{shape=\"batch\",le=\"+Inf\"}"),
+            "1");
+        assert_eq!(line("osdp_span_seconds_count{span=\"descent\"}"), "1");
+        // every ServiceStats field and every wire counter is exposed
+        for (name, _) in stats.fields() {
+            assert!(text.contains(&format!("osdp_service_{name}_total ")),
+                    "missing service field {name}");
+        }
+        for c in Counter::ALL {
+            assert!(text.contains(&format!("osdp_net_{}_total ", c.name())));
+        }
     }
 }

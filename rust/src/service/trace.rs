@@ -1,0 +1,448 @@
+//! Request-scoped tracing: a span tree per query, a convergence
+//! timeline from the search, and a bounded ring of completed traces
+//! queryable over the wire.
+//!
+//! Every query the service answers gets a [`Trace`]: a tree of named
+//! [`Span`]s covering the pipeline stages (key canonicalization, L1
+//! lookup, remote-tier get, warm-candidate collection + per-candidate
+//! repair, prefold/frontier build, the search descent, cache persist)
+//! plus the planner's convergence timeline
+//! ([`crate::planner::progress`]). Trace ids are **deterministic**:
+//! derived from the query-key fingerprint plus a per-process sequence
+//! number — never wall-clock randomness — so the id of the Nth serve of
+//! a given query is reproducible run to run. Span *durations* are wall
+//! time (that is the point of attribution); everything else in a trace
+//! is deterministic, and the timeline's x-axis is visited-node counts,
+//! so two runs of the same deterministic search compare bit-for-bit.
+//!
+//! Tracing is observational by construction: the service decides
+//! nothing based on a trace, spans are closed by [`SpanGuard`] drops
+//! (so every exit path — including error returns — closes its tree),
+//! and the whole layer compiles out under `--features no_trace`
+//! ([`Tracer::begin`] then returns `None` and every instrumentation
+//! site threads an `Option`).
+//!
+//! Completed traces land in a bounded ring (newest [`RING_CAP`] kept,
+//! "lock-free-ish": one short mutex around a `VecDeque`, never held
+//! across planning) served by the `trace` / `trace <id>` wire verbs and
+//! `osdp query --trace`. Per-span duration histograms aggregate across
+//! all finished traces and feed the Prometheus exposition
+//! (`osdp_span_seconds{span=...}`, see
+//! [`super::telemetry::render_prometheus`]).
+
+use crate::planner::progress::Improvement;
+use crate::util::json::{self, Json};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use super::telemetry::Histogram;
+use crate::util::sync::lock_recover;
+
+/// Completed traces kept in the ring (oldest evicted first).
+pub const RING_CAP: usize = 64;
+
+/// Every span name the service emits, in canonical pipeline order.
+/// Fixed so the per-span duration histograms are preallocated and the
+/// README's span grammar is checkable against code.
+pub const SPAN_NAMES: [&str; 9] = [
+    "query",        // root: the whole serve
+    "canonicalize", // validate + resolve + profiler + QueryKey
+    "cache",        // L1 lookup (fast path and the in-flight recheck)
+    "remote",       // L2 get: outcome, breaker decision, deadline spend
+    "warm",         // candidate collection; "repair" children per seed
+    "repair",       // one greedy repair of one warm candidate
+    "build",        // prefold + per-class composition frontiers
+    "descent",      // the branch-and-bound walk itself
+    "persist",      // cache write-behind/persist
+];
+
+/// One node of a trace's span tree. No start timestamps — only the
+/// duration and the tree position, so traces of the same query differ
+/// only in measured wall time.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub name: &'static str,
+    /// Index of the parent span in [`Trace::spans`]; `None` for the root.
+    pub parent: Option<usize>,
+    /// Wall seconds between open and close.
+    pub dur_s: f64,
+    /// Stage-specific annotations (remote outcome, node counts, ...).
+    pub meta: BTreeMap<String, Json>,
+}
+
+/// A finished trace: the span tree, the convergence timeline, and the
+/// completeness verdict (`complete` ⇔ every opened span was closed).
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub id: String,
+    /// The canonical query key id (or a short label for pre-key failures).
+    pub request: String,
+    pub spans: Vec<Span>,
+    pub timeline: Vec<Improvement>,
+    pub complete: bool,
+}
+
+impl Trace {
+    /// Full JSON rendering (the `trace <id>` verb). `time_bits` are hex
+    /// strings: u64 exceeds the f64-exact integer range.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("id".into(), Json::Str(self.id.clone()));
+        o.insert("request".into(), Json::Str(self.request.clone()));
+        o.insert("complete".into(), Json::Bool(self.complete));
+        o.insert(
+            "spans".into(),
+            Json::Arr(self.spans.iter().map(|s| {
+                let mut so = BTreeMap::new();
+                so.insert("name".into(), Json::Str(s.name.into()));
+                so.insert("parent".into(), match s.parent {
+                    Some(p) => Json::Num(p as f64),
+                    None => Json::Null,
+                });
+                so.insert("dur_s".into(), Json::Num(s.dur_s));
+                if !s.meta.is_empty() {
+                    so.insert("meta".into(), Json::Obj(s.meta.clone()));
+                }
+                Json::Obj(so)
+            }).collect()),
+        );
+        o.insert(
+            "timeline".into(),
+            Json::Arr(self.timeline.iter().map(|e| {
+                let mut eo = BTreeMap::new();
+                eo.insert("nodes".into(), Json::Num(e.nodes as f64));
+                eo.insert("time_bits".into(),
+                          Json::Str(format!("0x{:016x}", e.time_bits)));
+                eo.insert("time_s".into(),
+                          Json::Num(f64::from_bits(e.time_bits)));
+                eo.insert("source".into(), Json::Str(e.source.label().into()));
+                Json::Obj(eo)
+            }).collect()),
+        );
+        Json::Obj(o)
+    }
+
+    /// One-line JSON summary (the bare `trace` verb's listing).
+    pub fn summary_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("id".into(), Json::Str(self.id.clone()));
+        o.insert("request".into(), Json::Str(self.request.clone()));
+        o.insert("complete".into(), Json::Bool(self.complete));
+        o.insert("spans".into(), Json::Num(self.spans.len() as f64));
+        o.insert("events".into(), Json::Num(self.timeline.len() as f64));
+        if let Some(root) = self.spans.first() {
+            o.insert("dur_s".into(), Json::Num(root.dur_s));
+        }
+        Json::Obj(o)
+    }
+
+    /// Human rendering for `osdp query --trace`: the span tree indented
+    /// by depth, then the convergence timeline.
+    pub fn render_text(&self) -> String {
+        let mut out = format!("trace {} ({})\n", self.id,
+                              if self.complete { "complete" }
+                              else { "INCOMPLETE" });
+        let mut depth = vec![0usize; self.spans.len()];
+        for (i, s) in self.spans.iter().enumerate() {
+            depth[i] = s.parent.map_or(0, |p| depth[p] + 1);
+            let meta = if s.meta.is_empty() {
+                String::new()
+            } else {
+                format!("  {}", json::to_string(&Json::Obj(s.meta.clone())))
+            };
+            out.push_str(&format!("{}{} {:.6}s{}\n", "  ".repeat(depth[i]),
+                                  s.name, s.dur_s, meta));
+        }
+        if !self.timeline.is_empty() {
+            out.push_str("convergence (nodes -> time_s, source):\n");
+            for e in &self.timeline {
+                out.push_str(&format!("  {:>10} -> {:.9} ({})\n", e.nodes,
+                                      f64::from_bits(e.time_bits),
+                                      e.source.label()));
+            }
+        }
+        out
+    }
+}
+
+struct CtxInner {
+    id: String,
+    request: String,
+    spans: Vec<Span>,
+    stack: Vec<usize>,
+    timeline: Vec<Improvement>,
+    /// Spans opened but never closed (a panic unwound past a guard that
+    /// could not re-lock, or a bug) — poisons `complete`.
+    leaked: bool,
+}
+
+/// The under-construction trace for one in-flight query. Interior
+/// mutability (one short-held mutex) so the service can thread a shared
+/// `&TraceCtx` through closures and the coalescer without borrow
+/// gymnastics.
+pub struct TraceCtx {
+    inner: Mutex<CtxInner>,
+}
+
+impl TraceCtx {
+    fn new(seq: u64) -> TraceCtx {
+        TraceCtx {
+            inner: Mutex::new(CtxInner {
+                // deterministic fallback for queries that fail before a
+                // key exists; `set_request` upgrades it
+                id: format!("t{seq:06}-invalid"),
+                request: String::new(),
+                spans: Vec::new(),
+                stack: Vec::new(),
+                timeline: Vec::new(),
+                leaked: false,
+            }),
+        }
+    }
+
+    /// Stamp the canonical request (the query-key id) and derive the
+    /// final trace id from its fingerprint prefix + the sequence
+    /// number already embedded at construction.
+    pub fn set_request(&self, key_id: &str) {
+        let mut g = lock_recover(&self.inner);
+        let seq_part = g.id.split('-').next().unwrap_or("t0").to_string();
+        let fp: String = key_id.chars().take(12).collect();
+        g.id = format!("{seq_part}-{fp}");
+        g.request = key_id.to_string();
+    }
+
+    /// The trace id as currently known.
+    pub fn id(&self) -> String {
+        lock_recover(&self.inner).id.clone()
+    }
+
+    /// Open a child of the currently-open span (or the root). Closed by
+    /// dropping the returned guard — every exit path closes its spans.
+    pub fn span(&self, name: &'static str) -> SpanGuard<'_> {
+        let mut g = lock_recover(&self.inner);
+        let parent = g.stack.last().copied();
+        let idx = g.spans.len();
+        g.spans.push(Span {
+            name,
+            parent,
+            dur_s: 0.0,
+            meta: BTreeMap::new(),
+        });
+        g.stack.push(idx);
+        SpanGuard { ctx: self, idx, started: Instant::now() }
+    }
+
+    /// Record an already-measured span as a child of the currently-open
+    /// span — for phases the planner clocks internally (prefold/frontier
+    /// build vs descent), where the duration arrives out-of-band.
+    pub fn closed_span(&self, name: &'static str, dur_s: f64,
+                       meta: Vec<(String, Json)>) {
+        let mut g = lock_recover(&self.inner);
+        let parent = g.stack.last().copied();
+        g.spans.push(Span {
+            name,
+            parent,
+            dur_s,
+            meta: meta.into_iter().collect(),
+        });
+    }
+
+    /// Install the search's convergence timeline.
+    pub fn set_timeline(&self, timeline: Vec<Improvement>) {
+        lock_recover(&self.inner).timeline = timeline;
+    }
+
+    fn finish(self) -> Trace {
+        let inner = self.inner.into_inner()
+            .unwrap_or_else(|p| p.into_inner());
+        Trace {
+            id: inner.id,
+            request: inner.request,
+            complete: inner.stack.is_empty() && !inner.leaked,
+            spans: inner.spans,
+            timeline: inner.timeline,
+        }
+    }
+}
+
+/// Closes its span on drop; carries span-scoped metadata.
+pub struct SpanGuard<'a> {
+    ctx: &'a TraceCtx,
+    idx: usize,
+    started: Instant,
+}
+
+impl SpanGuard<'_> {
+    /// Attach one metadata entry to this span.
+    pub fn meta(&self, key: &str, value: Json) {
+        let mut g = lock_recover(&self.ctx.inner);
+        let idx = self.idx;
+        g.spans[idx].meta.insert(key.to_string(), value);
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        let mut g = lock_recover(&self.ctx.inner);
+        let idx = self.idx;
+        g.spans[idx].dur_s = self.started.elapsed().as_secs_f64();
+        match g.stack.pop() {
+            Some(top) if top == idx => {}
+            // out-of-order close (should be unreachable — guards nest
+            // lexically): keep the tree but flag the trace
+            _ => g.leaked = true,
+        }
+    }
+}
+
+/// The service's trace registry: the per-process sequence counter, the
+/// completed-trace ring, and per-span duration histograms.
+pub struct Tracer {
+    seq: AtomicU64,
+    ring: Mutex<VecDeque<Trace>>,
+    span_hist: [(&'static str, Histogram); SPAN_NAMES.len()],
+}
+
+impl Default for Tracer {
+    fn default() -> Tracer {
+        Tracer::new()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Tracer {
+        Tracer {
+            seq: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::with_capacity(RING_CAP)),
+            span_hist: std::array::from_fn(|i| {
+                (SPAN_NAMES[i], Histogram::new())
+            }),
+        }
+    }
+
+    /// Whether tracing is compiled in.
+    pub fn enabled() -> bool {
+        !cfg!(feature = "no_trace")
+    }
+
+    /// Begin a trace for one query (`None` under `--features no_trace`
+    /// — the instrumentation sites all thread an `Option`, so compiling
+    /// the layer out leaves a single never-true branch per site).
+    pub fn begin(&self) -> Option<TraceCtx> {
+        if !Tracer::enabled() {
+            return None;
+        }
+        Some(TraceCtx::new(self.seq.fetch_add(1, Ordering::Relaxed)))
+    }
+
+    /// Finish a trace: feed the span-duration histograms and push it
+    /// into the ring (oldest evicted past [`RING_CAP`]).
+    pub fn finish(&self, ctx: TraceCtx) {
+        let trace = ctx.finish();
+        for s in &trace.spans {
+            if let Some((_, h)) =
+                self.span_hist.iter().find(|(n, _)| *n == s.name)
+            {
+                h.observe(s.dur_s);
+            }
+        }
+        let mut ring = lock_recover(&self.ring);
+        if ring.len() == RING_CAP {
+            ring.pop_front();
+        }
+        ring.push_back(trace);
+    }
+
+    /// Summaries of every ring entry, oldest first (the `trace` verb).
+    pub fn recent(&self) -> Vec<Json> {
+        lock_recover(&self.ring).iter().map(|t| t.summary_json()).collect()
+    }
+
+    /// Full trace by id (the `trace <id>` verb).
+    pub fn get(&self, id: &str) -> Option<Trace> {
+        lock_recover(&self.ring).iter().find(|t| t.id == id).cloned()
+    }
+
+    /// The most recently finished trace (`osdp query --trace`, benches).
+    pub fn last(&self) -> Option<Trace> {
+        lock_recover(&self.ring).back().cloned()
+    }
+
+    /// Per-span duration histograms (name, histogram) for the
+    /// Prometheus exposition.
+    pub fn span_histograms(&self)
+                           -> &[(&'static str, Histogram)] {
+        &self.span_hist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::progress::ImprovementSource;
+
+    #[test]
+    fn spans_nest_by_guard_scope_and_close_on_drop() {
+        let tracer = Tracer::new();
+        let Some(ctx) = tracer.begin() else { return }; // no_trace build
+        {
+            let root = ctx.span("query");
+            root.meta("k", Json::Str("v".into()));
+            {
+                let _c = ctx.span("canonicalize");
+            }
+            let _d = ctx.span("descent");
+        }
+        ctx.set_timeline(vec![Improvement {
+            nodes: 0,
+            time_bits: 1.5f64.to_bits(),
+            source: ImprovementSource::Greedy,
+        }]);
+        ctx.set_request("deadbeefdeadbeef-0-b4");
+        tracer.finish(ctx);
+        let t = tracer.last().unwrap();
+        assert!(t.complete);
+        assert_eq!(t.spans.len(), 3);
+        assert_eq!(t.spans[0].parent, None);
+        assert_eq!(t.spans[1].parent, Some(0));
+        assert_eq!(t.spans[2].parent, Some(0));
+        assert_eq!(t.spans[0].meta.get("k"), Some(&Json::Str("v".into())));
+        // id = sequence prefix + 12 chars of the key fingerprint
+        assert_eq!(t.id, "t000000-deadbeefdead");
+        assert_eq!(t.request, "deadbeefdeadbeef-0-b4");
+        // round-trips through the JSON writer/parser
+        let parsed = Json::parse(&json::to_string(&t.to_json())).unwrap();
+        assert_eq!(parsed.get("complete"), &Json::Bool(true));
+        assert_eq!(parsed.get("timeline").idx(0).get("time_bits"),
+                   &Json::Str(format!("0x{:016x}", 1.5f64.to_bits())));
+        assert!(tracer.get(&t.id).is_some());
+        assert!(tracer.get("t-nope").is_none());
+    }
+
+    #[test]
+    fn unclosed_spans_poison_completeness() {
+        let tracer = Tracer::new();
+        let Some(ctx) = tracer.begin() else { return };
+        let g = ctx.span("query");
+        std::mem::forget(g); // simulate a span left open
+        tracer.finish(ctx);
+        assert!(!tracer.last().unwrap().complete);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_ids_are_sequential() {
+        let tracer = Tracer::new();
+        for _ in 0..(RING_CAP + 5) {
+            let Some(ctx) = tracer.begin() else { return };
+            let _g = ctx.span("query");
+            drop(_g);
+            tracer.finish(ctx);
+        }
+        let recent = tracer.recent();
+        assert_eq!(recent.len(), RING_CAP);
+        // oldest 5 evicted: first surviving id carries sequence 5
+        assert_eq!(recent[0].get("id").as_str().unwrap(), "t000005-invalid");
+    }
+}

@@ -94,12 +94,103 @@ fn check_invariants(stats: &Json) {
         "hits + misses == queries − rejected must survive chaos: {stats:?}"
     );
     let lat = stats.get("telemetry").get("latency");
+    let lane = |s: &str| {
+        lat.get(s).get("count").as_f64().unwrap_or(-1.0)
+    };
     assert_eq!(
-        lat.get("batch").get("count").as_f64().unwrap_or(-1.0)
-            + lat.get("sweep").get("count").as_f64().unwrap_or(-1.0),
+        lane("batch") + lane("sweep") + lane("replan"),
         t("queries"),
-        "every query is observed exactly once: {stats:?}"
+        "every query is observed exactly once, in exactly one lane: \
+         {stats:?}"
     );
+}
+
+/// Parse a Prometheus text page into `name{labels}` → value. Panics on
+/// anything that is not a comment, a blank line, or `series value` —
+/// which is the "exposition parses" invariant.
+fn parse_prometheus(page: &str) -> std::collections::BTreeMap<String, f64> {
+    let mut out = std::collections::BTreeMap::new();
+    for line in page.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (series, value) =
+            line.rsplit_once(' ').expect("metric lines are 'series value'");
+        let v: f64 = value
+            .parse()
+            .unwrap_or_else(|_| panic!("unparseable value in '{line}'"));
+        assert!(
+            out.insert(series.to_string(), v).is_none(),
+            "duplicate series '{series}'"
+        );
+    }
+    out
+}
+
+/// The `metrics` verb must tell the same story as the `stats` verb:
+/// every service counter and every latency-lane count equal, to the
+/// unit. (Net counters like `requests` are excluded — serving the two
+/// verbs itself moves them between the snapshots; the service-level
+/// counters only move when a query runs, and the chaos drive is
+/// sequential.)
+fn check_metrics_match_stats(stats: &Json, page: &str) {
+    let m = parse_prometheus(page);
+    let metric = |k: &str| {
+        *m.get(k).unwrap_or_else(|| panic!("metric '{k}' missing"))
+    };
+    for field in [
+        "hits", "misses", "inserts", "evictions", "coalesced",
+        "planner_runs", "warm_seeded", "persist_errors", "replans",
+        "replan_repairs", "cache_write_retries", "remote_hits",
+        "remote_errors", "breaker_open",
+    ] {
+        assert_eq!(
+            metric(&format!("osdp_service_{field}_total")),
+            stats.get(field).as_f64().unwrap_or(-1.0),
+            "stats/metrics disagree on '{field}'"
+        );
+    }
+    let t = stats.get("telemetry");
+    for counter in ["queries", "rejected", "infeasible", "bad_requests"] {
+        assert_eq!(
+            metric(&format!("osdp_net_{counter}_total")),
+            t.get(counter).as_f64().unwrap_or(-1.0),
+            "stats/metrics disagree on net '{counter}'"
+        );
+    }
+    for shape in ["batch", "sweep", "replan"] {
+        assert_eq!(
+            metric(&format!(
+                "osdp_latency_seconds_count{{shape=\"{shape}\"}}"
+            )),
+            t.get("latency").get(shape).get("count").as_f64()
+                .unwrap_or(-1.0),
+            "stats/metrics disagree on the {shape} lane"
+        );
+    }
+    assert_eq!(metric("osdp_cache_entries"),
+               stats.get("cache_entries").as_f64().unwrap_or(-1.0));
+    let breaker = stats.get("breaker").as_str().expect("breaker state");
+    assert_eq!(
+        metric(&format!("osdp_breaker_state{{state=\"{breaker}\"}}")),
+        1.0,
+        "the breaker gauge must be one-hot on the stats verb's state"
+    );
+}
+
+/// Every trace the ring kept must be a closed tree: the request
+/// finished, every span guard dropped, root span present. Chaos that
+/// kills a request mid-flight drops its trace context entirely — it
+/// never reaches the ring half-built.
+fn check_traces_closed(traces: &Json) {
+    assert_eq!(traces.get("kind").as_str(), Some("traces"));
+    for t in traces.get("traces").as_arr().expect("trace summaries") {
+        assert_eq!(
+            t.get("complete").as_bool(),
+            Some(true),
+            "an incomplete trace escaped into the ring: {t:?}"
+        );
+    }
 }
 
 #[test]
@@ -124,6 +215,12 @@ fn chaos_serve_survives_restarts_workers_and_exits_cleanly() {
             1 + i % 2
         ));
     }
+    // replans ride along so the replan latency lane is exercised (and
+    // its lane-sum invariant checked) under the same fault plan
+    lines.push(format!(
+        "replan setting={TINY} mem=2 batch=1 devices=8 threads=1 \
+         new-devices=4"
+    ));
 
     let mut restarts = 0.0;
     for round in 0.. {
@@ -135,6 +232,17 @@ fn chaos_serve_survives_restarts_workers_and_exits_cleanly() {
         let stats = request(addr, "stats", deadline);
         assert_eq!(stats.get("kind").as_str(), Some("stats"));
         check_invariants(&stats);
+        // the observability surface holds under the same chaos: the
+        // Prometheus page parses and agrees with the stats verb (the
+        // drive is sequential, so nothing moves between the two), and
+        // every trace in the ring is a closed tree
+        let metrics = request(addr, "metrics", deadline);
+        assert_eq!(metrics.get("kind").as_str(), Some("metrics"));
+        check_metrics_match_stats(
+            &stats,
+            metrics.get("text").as_str().expect("exposition text"),
+        );
+        check_traces_closed(&request(addr, "trace", deadline));
         restarts = stats
             .get("telemetry")
             .get("worker_restarts")

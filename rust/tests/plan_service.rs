@@ -813,3 +813,247 @@ fn warm_up_is_total_on_hostile_harvests() {
                PlanError::Infeasible { batch: Some(1) });
     assert_eq!(service.stats().hits, 2);
 }
+
+// ---------------------------------------------------------------------
+// observability: the trace verb and the Prometheus exposition
+// ---------------------------------------------------------------------
+
+/// ISSUE 10 acceptance: the `trace` verb returns a complete span tree
+/// for a just-served query, the convergence timeline rides inside it,
+/// and a repeat of the same query traces as a pure cache hit.
+#[test]
+fn trace_verb_returns_a_complete_span_tree_for_a_just_served_query() {
+    if !osdp::service::trace::Tracer::enabled() {
+        return; // compiled out under --features no_trace
+    }
+    let service = PlanService::in_memory();
+    let mem = tiny_mem_gib(0.6, 1);
+    let line = format!("query setting={TINY} mem={mem} batch=1 threads=1");
+
+    // before any query the ring is empty but the verb still answers
+    let (resp, _) = server::handle_line_full(&service, None, "trace");
+    let doc = Json::parse(&resp).unwrap();
+    assert_eq!(doc.get("kind").as_str(), Some("traces"));
+    assert!(doc.get("traces").as_arr().expect("ring listing").is_empty());
+
+    // cold miss: the response carries the trace id of its own trace
+    let (resp, _) = server::handle_line_full(&service, None, &line);
+    let doc = Json::parse(&resp).unwrap();
+    assert_eq!(doc.get("ok").as_bool(), Some(true), "{resp}");
+    let id = doc
+        .get("trace_id")
+        .as_str()
+        .expect("query responses carry their trace id")
+        .to_string();
+
+    let (resp, _) =
+        server::handle_line_full(&service, None, &format!("trace {id}"));
+    let doc = Json::parse(&resp).unwrap();
+    assert_eq!(doc.get("ok").as_bool(), Some(true), "{resp}");
+    let trace = doc.get("trace");
+    assert_eq!(trace.get("id").as_str(), Some(id.as_str()));
+    assert_eq!(trace.get("complete").as_bool(), Some(true),
+               "a served query's trace must be a closed tree");
+
+    let spans = trace.get("spans").as_arr().expect("span tree");
+    // the root is the query span; every other span's parent precedes it
+    assert_eq!(spans[0].get("name").as_str(), Some("query"));
+    assert!(matches!(*spans[0].get("parent"), Json::Null));
+    for (i, s) in spans.iter().enumerate().skip(1) {
+        let p = s.get("parent").as_f64().expect("non-root spans have a \
+                                                 parent") as usize;
+        assert!(p < i, "parents precede children in open order");
+        assert!(s.get("dur_s").as_f64().unwrap() >= 0.0);
+    }
+    let names: Vec<&str> =
+        spans.iter().filter_map(|s| s.get("name").as_str()).collect();
+    for stage in ["canonicalize", "cache", "warm", "build", "descent",
+                  "persist"] {
+        assert!(names.contains(&stage),
+                "miss-path trace lacks the '{stage}' span: {names:?}");
+    }
+    assert!(!names.contains(&"remote"),
+            "no remote span without an attached remote tier");
+    let cache_span = spans
+        .iter()
+        .find(|s| s.get("name").as_str() == Some("cache"))
+        .unwrap();
+    assert_eq!(cache_span.get("meta").get("outcome").as_str(),
+               Some("miss"));
+
+    // the convergence timeline: nodes non-decreasing, times strictly
+    // improving, bits rendered as full-width hex
+    let timeline = trace.get("timeline").as_arr().expect("timeline");
+    assert!(!timeline.is_empty(), "a feasible search improves at least \
+                                   once");
+    let mut prev: Option<(f64, f64)> = None;
+    for e in timeline {
+        let nodes = e.get("nodes").as_f64().unwrap();
+        let bits = e.get("time_bits").as_str().expect("hex time bits");
+        assert!(bits.starts_with("0x") && bits.len() == 18, "{bits}");
+        let t = f64::from_bits(
+            u64::from_str_radix(&bits[2..], 16).expect("parse hex bits"),
+        );
+        assert_eq!(Some(t), e.get("time_s").as_f64(),
+                   "time_s mirrors time_bits");
+        let source = e.get("source").as_str().unwrap();
+        assert!(["greedy", "warm", "descent"].contains(&source));
+        if let Some((pn, pt)) = prev {
+            assert!(nodes >= pn, "nodes regressed in the timeline");
+            assert!(t < pt, "non-improving timeline event");
+        }
+        prev = Some((nodes, t));
+    }
+
+    // the repeat is a cache hit: its trace stops at the cache span
+    let (resp, _) = server::handle_line_full(&service, None, &line);
+    let hit_id = Json::parse(&resp).unwrap()
+        .get("trace_id").as_str().unwrap().to_string();
+    assert_ne!(hit_id, id, "every request gets a fresh trace id");
+    let (resp, _) = server::handle_line_full(
+        &service, None, &format!("trace {hit_id}"));
+    let trace = Json::parse(&resp).unwrap();
+    let trace = trace.get("trace");
+    assert_eq!(trace.get("complete").as_bool(), Some(true));
+    let names: Vec<String> = trace.get("spans").as_arr().unwrap().iter()
+        .filter_map(|s| s.get("name").as_str().map(str::to_string))
+        .collect();
+    assert!(names.contains(&"cache".to_string()));
+    for absent in ["build", "descent", "warm", "persist"] {
+        assert!(!names.contains(&absent.to_string()),
+                "a cache hit must not run '{absent}': {names:?}");
+    }
+    assert!(trace.get("timeline").as_arr().expect("timeline").is_empty(),
+            "a cache hit runs no search, so no timeline");
+
+    // both traces sit in the ring in finish order; unknown ids miss
+    let (resp, _) = server::handle_line_full(&service, None, "trace");
+    let doc = Json::parse(&resp).unwrap();
+    let ring = doc.get("traces").as_arr().unwrap();
+    assert_eq!(ring.len(), 2);
+    assert_eq!(ring[0].get("id").as_str(), Some(id.as_str()));
+    assert_eq!(ring[1].get("id").as_str(), Some(hit_id.as_str()));
+    let (resp, _) =
+        server::handle_line_full(&service, None, "trace t999999-nope");
+    let doc = Json::parse(&resp).unwrap();
+    assert_eq!(doc.get("ok").as_bool(), Some(false));
+    assert_eq!(doc.get("error").as_str(), Some("not-found"));
+}
+
+/// ISSUE 10 acceptance: under a mixed load (batch + sweep + replan +
+/// rejects), every counter on the Prometheus page equals the `stats`
+/// verb to the unit, the three latency lanes partition the queries,
+/// and the breaker gauge is one-hot.
+#[test]
+fn prometheus_counters_exactly_match_the_stats_verb() {
+    let service = PlanService::in_memory();
+    let telemetry = Telemetry::new();
+    let drive = |line: &str| {
+        server::handle_line_full(&service, Some(&telemetry), line).0
+    };
+
+    let mem = tiny_mem_gib(0.6, 1);
+    let wall = tiny_wall_gib(2);
+    let mut lines = vec![
+        format!("query setting={TINY} mem={mem} batch=1 threads=1"),
+        format!("query setting={TINY} mem={mem} batch=1 threads=1"), // hit
+        format!("sweep setting={TINY} mem={wall} batch-cap=4 threads=1"),
+        // degenerate same-hardware replan: counted, served, and — the
+        // point here — observed into the replan latency lane
+        format!("replan setting={TINY} mem={mem} batch=1 devices=8 \
+                 threads=1 new-devices=8"),
+        format!("query setting={TINY} mem=1e-9 batch=1"), // infeasible
+        "frobnicate the planner".into(),                  // bad request
+    ];
+    for line in lines.drain(..) {
+        let _ = drive(&line);
+    }
+
+    let stats = Json::parse(&drive("stats")).unwrap();
+    let metrics = Json::parse(&drive("metrics")).unwrap();
+    assert_eq!(metrics.get("kind").as_str(), Some("metrics"));
+    let page = metrics.get("text").as_str().expect("exposition text");
+
+    // parse the page: every non-comment line is `series value`, no
+    // series twice
+    let mut m = std::collections::BTreeMap::new();
+    for line in page.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (series, value) = line.rsplit_once(' ').unwrap();
+        let v: f64 = value.parse()
+            .unwrap_or_else(|_| panic!("unparseable value in '{line}'"));
+        assert!(m.insert(series.to_string(), v).is_none(),
+                "duplicate series '{series}'");
+    }
+    let metric = |k: &str| {
+        *m.get(k).unwrap_or_else(|| panic!("metric '{k}' missing"))
+    };
+
+    for field in [
+        "hits", "misses", "inserts", "evictions", "coalesced",
+        "planner_runs", "warm_seeded", "persist_errors", "replans",
+        "replan_repairs", "cache_write_retries", "remote_hits",
+        "remote_errors", "breaker_open",
+    ] {
+        assert_eq!(metric(&format!("osdp_service_{field}_total")),
+                   stats.get(field).as_f64().unwrap_or(-1.0),
+                   "stats/metrics disagree on '{field}'");
+    }
+    let t = stats.get("telemetry");
+    for counter in ["queries", "rejected", "infeasible", "bad_requests"] {
+        assert_eq!(metric(&format!("osdp_net_{counter}_total")),
+                   t.get(counter).as_f64().unwrap_or(-1.0),
+                   "stats/metrics disagree on net '{counter}'");
+    }
+    let mut lane_total = 0.0;
+    for shape in ["batch", "sweep", "replan"] {
+        let count = metric(&format!(
+            "osdp_latency_seconds_count{{shape=\"{shape}\"}}"
+        ));
+        assert_eq!(
+            count,
+            t.get("latency").get(shape).get("count").as_f64()
+                .unwrap_or(-1.0),
+            "stats/metrics disagree on the {shape} lane"
+        );
+        lane_total += count;
+    }
+    assert_eq!(lane_total, t.get("queries").as_f64().unwrap(),
+               "the three lanes partition the observed queries");
+    // this drive's exact shape: 3 batch-lane queries (2 feasible + the
+    // infeasible one), 1 sweep, 1 replan; the garbage line is a bad
+    // request, not a query
+    assert_eq!(metric("osdp_latency_seconds_count{shape=\"batch\"}"), 3.0);
+    assert_eq!(metric("osdp_latency_seconds_count{shape=\"sweep\"}"), 1.0);
+    assert_eq!(metric("osdp_latency_seconds_count{shape=\"replan\"}"),
+               1.0);
+    assert_eq!(metric("osdp_net_bad_requests_total"), 1.0);
+    assert_eq!(metric("osdp_net_infeasible_total"), 1.0);
+
+    assert_eq!(metric("osdp_cache_entries"),
+               stats.get("cache_entries").as_f64().unwrap_or(-1.0));
+    let breaker = stats.get("breaker").as_str().expect("breaker state");
+    assert_eq!(
+        metric(&format!("osdp_breaker_state{{state=\"{breaker}\"}}")), 1.0,
+        "the breaker gauge must be one-hot on the stats verb's state"
+    );
+    // histogram shape: every lane's buckets are cumulative and end at
+    // +Inf == count
+    for shape in ["batch", "sweep", "replan"] {
+        let count = metric(&format!(
+            "osdp_latency_seconds_count{{shape=\"{shape}\"}}"
+        ));
+        let infs: Vec<f64> = m.iter()
+            .filter(|(k, _)| {
+                k.starts_with("osdp_latency_seconds_bucket")
+                    && k.contains(&format!("shape=\"{shape}\""))
+                    && k.contains("le=\"+Inf\"")
+            })
+            .map(|(_, v)| *v)
+            .collect();
+        assert_eq!(infs, vec![count],
+                   "the +Inf bucket of the {shape} lane equals its count");
+    }
+}

@@ -262,6 +262,152 @@ fn prop_scoped_menus_keep_engines_bit_identical() {
     assert!(compared >= 5, "only {compared} full comparisons ran");
 }
 
+/// Tracing is provably inert (PR 10 tentpole): running a search with a
+/// [`SearchTrace`] attached returns the bit-identical plan — choice
+/// vector, time bits, node count, completeness — as the untraced call,
+/// at 1 and 8 threads. The convergence timeline itself is well-formed
+/// (node offsets non-decreasing, incumbent times strictly improving,
+/// a nodes=0 seed event only from greedy/warm), bit-reproducible
+/// across two traced runs at threads=1 for batch searches, and
+/// bit-reproducible at *any* thread count for the scheduler's sweep
+/// (each per-batch search runs serially inside its task, so thread
+/// count only changes which worker runs it, not what it logs).
+#[test]
+fn tracing_is_provably_inert() {
+    use osdp::planner::{Improvement, ImprovementSource, Scheduler,
+                        SearchTrace, parallel_search_traced,
+                        parallel_search_with_stats};
+
+    // under --features no_trace the recorder is compiled out and every
+    // timeline is legitimately empty; the bit-identity half of the
+    // property still runs in full
+    let recording = osdp::service::trace::Tracer::enabled();
+
+    fn well_formed(tl: &[Improvement], feasible: bool)
+                   -> Result<(), String> {
+        if feasible && tl.is_empty() {
+            return Err("feasible search with an empty timeline".into());
+        }
+        for e in tl {
+            if matches!(e.source,
+                        ImprovementSource::Greedy | ImprovementSource::Warm)
+                && e.nodes != 0
+            {
+                return Err(format!("seed event at nodes={}", e.nodes));
+            }
+        }
+        for w in tl.windows(2) {
+            if w[1].nodes < w[0].nodes {
+                return Err("node offsets must be non-decreasing".into());
+            }
+            if f64::from_bits(w[1].time_bits)
+                >= f64::from_bits(w[0].time_bits)
+            {
+                return Err("incumbents must strictly improve".into());
+            }
+        }
+        Ok(())
+    }
+
+    let mut sweeps_compared = 0;
+    prop::check(0x77ACE, 15, gen_instance, |inst| {
+        let (p, limit) = build(inst);
+        for threads in [1usize, 8] {
+            let cfg = ParallelConfig { threads, ..Default::default() };
+            let (plain, pstats) =
+                parallel_search_with_stats(&p, limit, inst.b, &cfg, None);
+            let mut t1 = SearchTrace::default();
+            let (traced, tstats) = parallel_search_traced(
+                &p, limit, inst.b, &cfg, None, Some(&mut t1));
+            match (&plain, &traced) {
+                (None, None) => {}
+                (Some((pc, pcost)), Some((tc, tcost))) => {
+                    if pc != tc
+                        || pcost.time.to_bits() != tcost.time.to_bits()
+                    {
+                        return Err(format!(
+                            "tracing changed the plan at {threads} \
+                             threads: {tc:?} vs {pc:?}"
+                        ));
+                    }
+                }
+                _ => {
+                    return Err(format!(
+                        "tracing changed feasibility at {threads} threads"
+                    ));
+                }
+            }
+            if pstats.nodes != tstats.nodes
+                || pstats.complete != tstats.complete
+            {
+                return Err(format!(
+                    "tracing changed the search shape at {threads} \
+                     threads: {} vs {} nodes",
+                    tstats.nodes, pstats.nodes
+                ));
+            }
+            well_formed(&t1.timeline, traced.is_some() && recording)?;
+            if threads == 1 {
+                // serial batch searches: the timeline itself is
+                // bit-reproducible, event for event
+                let mut t2 = SearchTrace::default();
+                parallel_search_traced(&p, limit, inst.b, &cfg, None,
+                                       Some(&mut t2));
+                if t1.timeline != t2.timeline {
+                    return Err(format!(
+                        "two traced serial runs diverged: {:?} vs {:?}",
+                        t1.timeline, t2.timeline
+                    ));
+                }
+            }
+        }
+
+        // the sweep's winner timeline is deterministic at any thread
+        // count, and run() == run_traced(None) == run_traced(Some)
+        let mut s1 = SearchTrace::default();
+        let mut s8 = SearchTrace::default();
+        let cap = 4;
+        let r1 = Scheduler::new(&p, limit, cap)
+            .with_threads(1)
+            .run_traced(Some(&mut s1));
+        let r8 = Scheduler::new(&p, limit, cap)
+            .with_threads(8)
+            .run_traced(Some(&mut s8));
+        let plain = Scheduler::new(&p, limit, cap).with_threads(8).run();
+        match (&r1, &r8, &plain) {
+            (Err(_), Err(_), Err(_)) => {}
+            (Ok(a), Ok(b), Ok(c)) => {
+                if !(a.stats.complete && b.stats.complete
+                     && c.stats.complete)
+                {
+                    return Ok(());
+                }
+                let best = |r: &osdp::planner::SchedulerResult| {
+                    let w = &r.candidates[r.best];
+                    (w.plan.choice.clone(), w.plan.cost.time.to_bits())
+                };
+                if best(a) != best(b) || best(b) != best(c) {
+                    return Err("sweep diverged across thread counts / \
+                                tracing".into());
+                }
+                well_formed(&s1.timeline, recording)?;
+                if s1.timeline != s8.timeline {
+                    return Err(format!(
+                        "sweep timelines diverged across thread counts: \
+                         {:?} vs {:?}",
+                        s1.timeline, s8.timeline
+                    ));
+                }
+                sweeps_compared += 1;
+            }
+            _ => return Err("sweep feasibility diverged".into()),
+        }
+        Ok(())
+    });
+    assert!(sweeps_compared >= 5,
+            "only {sweeps_compared} sweep comparisons ran");
+}
+
 /// Enlarging the decision menu (splitting granularities) never hurts.
 #[test]
 fn prop_bigger_menu_never_hurts() {

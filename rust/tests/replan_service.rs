@@ -264,6 +264,11 @@ fn capacity_sweep_walks_the_ladder_and_finds_the_floor() {
     assert_eq!(s.hits + s.misses,
                telemetry.queries() - telemetry.get(Counter::Rejected));
     assert_eq!(s.replans, 4);
+    // rungs land in the dedicated replan latency lane, not batch/sweep
+    assert_eq!(telemetry.replan_latency.count(), 4,
+               "capacity-sweep rungs observe into the replan lane");
+    assert_eq!(telemetry.batch_latency.count()
+                   + telemetry.sweep_latency.count(), 0);
 
     // the fixed two-server topology has no ladder to walk
     let err = service

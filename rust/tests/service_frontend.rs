@@ -15,8 +15,8 @@
 
 use osdp::config::GIB;
 use osdp::cost::Profiler;
-use osdp::service::{Counter, Frontend, FrontendConfig, PlanQuery,
-                    PlanService, Telemetry, server};
+use osdp::service::{Counter, Frontend, FrontendConfig, MetricsHandler,
+                    PlanQuery, PlanService, Telemetry, server};
 use osdp::util::json::Json;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
@@ -250,24 +250,37 @@ fn telemetry_is_consistent_under_concurrent_load() {
             });
         }
     });
+    // two sequential degenerate replans ride behind the storm (same
+    // hardware respelled — served from cache), so the replan latency
+    // lane is live when the lane-sum invariant is checked
+    let replan = format!(
+        "replan setting={TINY} mem={mem} batch=1 threads=1 new-devices=8"
+    );
+    for r in &roundtrip(addr, &[replan.as_str(), replan.as_str()]) {
+        assert_eq!(r.get("ok").as_bool(), Some(true), "{r:?}");
+    }
     frontend.shutdown();
     frontend.join();
 
-    // every protocol line was counted: 3 per connection
-    assert_eq!(telemetry.get(Counter::Requests), 18);
-    assert_eq!(telemetry.get(Counter::Connections), 6);
-    // queries = the parsed query/sweep lines (junk never dispatches)
-    assert_eq!(telemetry.queries(), 12);
+    // every protocol line was counted: 3 per storm connection + the
+    // replan connection
+    assert_eq!(telemetry.get(Counter::Requests), 20);
+    assert_eq!(telemetry.get(Counter::Connections), 7);
+    // queries = the parsed query/sweep/replan lines (junk never
+    // dispatches)
+    assert_eq!(telemetry.queries(), 14);
     assert_eq!(telemetry.get(Counter::BadRequests), 6);
     assert_eq!(telemetry.get(Counter::Rejected), 6,
                "the unknown-setting queries are rejected pre-cache");
     // exactly one histogram observation per dispatched query, binned by
-    // shape
+    // shape — replans in their own lane, not batch's
     assert_eq!(telemetry.batch_latency.count(), 9,
                "3 good batch queries + 6 rejected (batch-shaped)");
     assert_eq!(telemetry.sweep_latency.count(), 3);
+    assert_eq!(telemetry.replan_latency.count(), 2);
     assert_eq!(
-        telemetry.batch_latency.count() + telemetry.sweep_latency.count(),
+        telemetry.batch_latency.count() + telemetry.sweep_latency.count()
+            + telemetry.replan_latency.count(),
         telemetry.queries()
     );
     // the service core saw every query that passed validation (no
@@ -283,6 +296,89 @@ fn telemetry_is_consistent_under_concurrent_load() {
     // 2 distinct cacheable queries -> exactly 2 planner runs, however
     // the 6 copies interleaved
     assert_eq!(s.planner_runs, 2, "{}", s.describe());
+}
+
+// ---------------------------------------------------------------------
+// the scrape endpoint: Prometheus over a socket, perturbation-free
+// ---------------------------------------------------------------------
+
+/// The `--metrics-listen` wiring over real sockets: a second frontend
+/// wraps the same service + telemetry in a [`MetricsHandler`]; both an
+/// HTTP `GET` and a bare line get the full exposition back, and the
+/// scrapes themselves never move the counters they report (the scrape
+/// frontend carries its own throwaway transport telemetry).
+#[test]
+fn metrics_endpoint_scrapes_without_perturbing_the_counters() {
+    let (frontend, service, telemetry) =
+        start_frontend(2, Duration::from_secs(60));
+    let addr = frontend.local_addr();
+    let mem = tiny_mem_gib(0.6, 1);
+    let line = format!("query setting={TINY} mem={mem} batch=1 threads=1");
+    let responses = roundtrip(addr, &[line.as_str()]);
+    assert_eq!(responses[0].get("ok").as_bool(), Some(true));
+
+    let metrics = Frontend::start_with(
+        Arc::new(MetricsHandler {
+            service: Arc::clone(&service),
+            telemetry: Arc::clone(&telemetry),
+        }),
+        Arc::new(Telemetry::new()),
+        FrontendConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 1,
+            idle_timeout: Duration::from_secs(5),
+            queue_cap: 16,
+        },
+    )
+    .expect("bind the scrape endpoint");
+    let maddr = metrics.local_addr();
+
+    // one request, one response, then the endpoint closes — read to EOF
+    let scrape = |request: &str| -> String {
+        let mut stream = TcpStream::connect(maddr).expect("connect");
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .unwrap();
+        write!(stream, "{request}").unwrap();
+        stream.flush().unwrap();
+        let mut page = String::new();
+        BufReader::new(stream)
+            .read_to_string(&mut page)
+            .expect("read the scrape response to EOF");
+        page
+    };
+
+    // HTTP framing for real Prometheus scrapers
+    let http = scrape("GET /metrics HTTP/1.0\r\n\r\n");
+    assert!(http.starts_with("HTTP/1.0 200 OK\r\n"), "{http:?}");
+    assert!(http.contains("text/plain; version=0.0.4"));
+    let body = http.split_once("\r\n\r\n").expect("header/body split").1;
+    // bare-line framing for the wire protocol's `metrics` cousin
+    let plain = scrape("metrics\n");
+    for page in [body, plain.as_str()] {
+        assert!(page.contains("osdp_service_planner_runs_total 1"),
+                "one query ran one planner: {page:?}");
+        assert!(page.contains("osdp_net_queries_total 1"));
+        assert!(page.contains("osdp_breaker_state{state=\"closed\"} 1"));
+        assert!(page.contains(
+            "osdp_latency_seconds_count{shape=\"batch\"} 1"
+        ));
+    }
+    if osdp::service::trace::Tracer::enabled() {
+        assert!(plain.contains("osdp_span_seconds_count{span=\"query\"} 1"),
+                "the traced query rolls up into the span histograms");
+    }
+
+    // the scrapes moved nothing on the service's own telemetry: still
+    // one connection, one request, one query from the roundtrip above
+    assert_eq!(telemetry.get(Counter::Connections), 1);
+    assert_eq!(telemetry.get(Counter::Requests), 1);
+    assert_eq!(telemetry.queries(), 1);
+
+    metrics.shutdown();
+    metrics.join();
+    frontend.shutdown();
+    frontend.join();
 }
 
 // ---------------------------------------------------------------------
